@@ -1,0 +1,79 @@
+//! HTTP serving demo: brings up the completions server (simulated pair by
+//! default, `--pjrt` for the real artifacts), fires a closed-loop client
+//! load at it, and prints client-side + server-side metrics.
+//!
+//! ```bash
+//! cargo run --release --offline --example serve_http -- [--pjrt] \
+//!     [--requests 24] [--concurrency 6]
+//! ```
+
+use dsde::config::{CapMode, EngineConfig, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::model::pjrt_lm::PjrtModel;
+use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::model::traits::SpecModel;
+use dsde::runtime::artifacts::DraftKind;
+use dsde::server::{client, http};
+use dsde::sim::regime::DatasetProfile;
+use dsde::spec::adapter::DsdeConfig;
+use dsde::util::cli::Args;
+use dsde::util::stats::{mean, percentile};
+
+fn main() -> anyhow::Result<()> {
+    dsde::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("requests", 24);
+    let concurrency = args.usize_or("concurrency", 6);
+    let use_pjrt = args.flag("pjrt");
+
+    let mut cfg = EngineConfig {
+        max_batch: concurrency.max(2),
+        max_len: 4096,
+        policy: SlPolicyKind::Dsde(DsdeConfig::default()),
+        cap_mode: CapMode::Mean,
+        seed: 3,
+        ..Default::default()
+    };
+    let model: Box<dyn SpecModel> = if use_pjrt {
+        let m = PjrtModel::new(args.str_or("artifacts", "artifacts"), DraftKind::Good, 3)?;
+        cfg.max_len = m.max_len();
+        cfg.spec_k = 8;
+        Box::new(m)
+    } else {
+        Box::new(SimModel::new(
+            SimPairKind::LlamaLike,
+            DatasetProfile::sharegpt(),
+            3,
+        ))
+    };
+
+    let handle = http::serve(Engine::new(cfg, model), "127.0.0.1:0")?;
+    let addr = handle.addr.to_string();
+    println!("server up at http://{addr} (pjrt={use_pjrt})");
+
+    // closed-loop load
+    let prompts: Vec<String> = (0..n)
+        .map(|i| match i % 3 {
+            0 => format!("def compute_{i}(x):"),
+            1 => format!("User: question {i}?\nAgent: "),
+            _ => format!("Q: A box holds {i} items. A: "),
+        })
+        .collect();
+    let max_tokens = if use_pjrt { 48 } else { 96 };
+    let t0 = std::time::Instant::now();
+    let results = client::closed_loop(&addr, prompts, max_tokens, 0.0, concurrency);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let ok = results.iter().filter(|r| r.status == 200).count();
+    let walls: Vec<f64> = results.iter().map(|r| r.wall_s).collect();
+    println!("\n== client view ==");
+    println!("completed     : {ok}/{n}");
+    println!("wall time     : {wall:.2} s  ({:.1} req/s)", ok as f64 / wall);
+    println!("mean / p99    : {:.3} / {:.3} s", mean(&walls), percentile(&walls, 0.99));
+
+    let m = client::metrics(&addr)?;
+    println!("\n== server view ==");
+    println!("{m}");
+    handle.shutdown();
+    Ok(())
+}

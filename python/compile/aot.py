@@ -1,0 +1,164 @@
+"""AOT lowering: JAX serving graphs → HLO **text** artifacts + manifest.
+
+Run once by ``make artifacts``; Rust (the request path) only ever touches the
+emitted files.  Interchange format is HLO text, NOT a serialized
+HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the published `xla` 0.1.6 crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Outputs (under artifacts/):
+  manifest.json                         — shapes, buckets, model configs
+  target.wts / draft_good.wts / draft_weak.wts
+                                        — packed f32 weight vectors (DSDW1 fmt)
+  target_step_b{B}.hlo.txt              — AR-baseline / target step
+  target_verify_b{B}.hlo.txt            — ragged verify + fused KLD signals
+  draft_step_b{B}.hlo.txt               — draft step (weights are an input, so
+                                          one graph serves both draft models)
+for B in BUCKETS.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+WTS_MAGIC = b"DSDW1\0\0\0"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def write_weights(path: str, wvec: np.ndarray) -> None:
+    """DSDW1 format: 8-byte magic, u64 little-endian count, f32 LE data."""
+    wvec = np.asarray(wvec, dtype=np.float32).reshape(-1)
+    with open(path, "wb") as f:
+        f.write(WTS_MAGIC)
+        f.write(struct.pack("<Q", wvec.size))
+        f.write(wvec.tobytes())
+
+
+def lower_step(cfg: M.ModelConfig, batch: int, use_pallas: bool) -> str:
+    fn = functools.partial(M.step_fn, cfg, use_pallas=use_pallas)
+    w = jax.ShapeDtypeStruct((M.n_params(cfg),), jnp.float32)
+    toks = jax.ShapeDtypeStruct((batch, cfg.max_len), jnp.int32)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(w, toks, lens))
+
+
+def lower_verify(cfg: M.ModelConfig, batch: int, use_pallas: bool) -> str:
+    fn = functools.partial(M.verify_fn, cfg, use_pallas=use_pallas)
+    w = jax.ShapeDtypeStruct((M.n_params(cfg),), jnp.float32)
+    toks = jax.ShapeDtypeStruct((batch, cfg.max_len), jnp.int32)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    dlog = jax.ShapeDtypeStruct((batch, M.SPEC_K, cfg.vocab), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(w, toks, lens, lens, dlog))
+
+
+def build_manifest(buckets) -> dict:
+    return {
+        "format": "dsde-artifacts-v1",
+        "vocab": M.VOCAB,
+        "pad_id": M.PAD_ID,
+        "max_len": M.MAX_LEN,
+        "spec_k": M.SPEC_K,
+        "buckets": list(buckets),
+        "models": {
+            "target": {
+                "n_params": M.n_params(M.TARGET_CFG),
+                "n_layers": M.TARGET_CFG.n_layers,
+                "d_model": M.TARGET_CFG.d_model,
+                "weights": "target.wts",
+                "step": "target_step_b{B}.hlo.txt",
+                "verify": "target_verify_b{B}.hlo.txt",
+            },
+            "draft": {
+                "n_params": M.n_params(M.DRAFT_CFG),
+                "n_layers": M.DRAFT_CFG.n_layers,
+                "d_model": M.DRAFT_CFG.d_model,
+                "weights": {"good": "draft_good.wts", "weak": "draft_weak.wts"},
+                "step": "draft_step_b{B}.hlo.txt",
+            },
+        },
+        "step_io": {
+            "inputs": ["wvec[P] f32", "tokens[B,L] i32", "lens[B] i32"],
+            "outputs": ["logits[B,V] f32"],
+        },
+        "verify_io": {
+            "inputs": ["wvec[P] f32", "tokens[B,L] i32", "ctx_lens[B] i32",
+                       "att_lens[B] i32", "draft_logits[B,K,V] f32"],
+            "outputs": ["tlogits[B,K+1,V] f32", "kld[B,K] f32", "ent[B,K] f32"],
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land in its directory")
+    ap.add_argument("--buckets", default=",".join(map(str, BUCKETS)))
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with the ref attention instead of the Pallas "
+                         "kernels (perf A/B ablation)")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny training budget (CI / smoke builds)")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override target training steps")
+    args = ap.parse_args()
+
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    use_pallas = not args.no_pallas
+
+    # ---- train the pair (build-time only) -----------------------------------
+    from . import train as T
+    if args.fast:
+        st, sd, sw = 40, 30, 20
+    else:
+        st, sd, sw = 300, 250, 150
+    if args.steps:
+        st = args.steps
+        sd = max(args.steps * 5 // 6, 1)
+        sw = max(args.steps // 2, 1)
+    wt, wg, ww = T.train_all(steps_target=st, steps_draft=sd, steps_weak=sw)
+    write_weights(os.path.join(outdir, "target.wts"), np.asarray(wt))
+    write_weights(os.path.join(outdir, "draft_good.wts"), np.asarray(wg))
+    write_weights(os.path.join(outdir, "draft_weak.wts"), np.asarray(ww))
+
+    # ---- lower graphs --------------------------------------------------------
+    for b in buckets:
+        for name, text in (
+            (f"target_step_b{b}.hlo.txt", lower_step(M.TARGET_CFG, b, use_pallas)),
+            (f"target_verify_b{b}.hlo.txt", lower_verify(M.TARGET_CFG, b, use_pallas)),
+            (f"draft_step_b{b}.hlo.txt", lower_step(M.DRAFT_CFG, b, use_pallas)),
+        ):
+            path = os.path.join(outdir, name)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {name} ({len(text) / 1024:.0f} KiB)", flush=True)
+
+    manifest = build_manifest(buckets)
+    manifest["pallas"] = use_pallas
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

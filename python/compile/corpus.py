@@ -1,0 +1,175 @@
+"""Deterministic synthetic corpus generator.
+
+The paper's evaluation exercises *task heterogeneity*: code-like text (low
+entropy, highly predictable -> high draft acceptance) vs dialogue/prose (high
+entropy -> low acceptance).  We reproduce that axis with a generated corpus:
+
+- ``code``      : a tiny expression-language grammar with heavy repetition
+                  (keywords, indentation, common idioms).
+- ``prose``     : templated sentences with sampled content words.
+- ``dialogue``  : turn-taking prose with speaker tags.
+- ``math``      : GSM8K-like arithmetic word problems with worked solutions.
+
+Everything is seeded and byte-level (vocab = 256), so artifact builds are
+reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import random
+
+# ----------------------------------------------------------------------------
+# code grammar
+# ----------------------------------------------------------------------------
+
+_IDENTS = ["count", "total", "idx", "value", "result", "item", "size", "key",
+           "node", "left", "right", "sum", "acc", "buf", "data", "queue"]
+_FUNCS = ["compute", "process", "update", "merge", "split", "reduce",
+          "lookup", "insert", "remove", "scan"]
+_OPS = ["+", "-", "*", "%"]
+_CMPS = ["<", ">", "<=", ">=", "=="]
+
+
+def _gen_expr(rng: random.Random, depth: int = 0) -> str:
+    if depth > 1 or rng.random() < 0.55:
+        if rng.random() < 0.6:
+            return rng.choice(_IDENTS)
+        return str(rng.randint(0, 64))
+    a = _gen_expr(rng, depth + 1)
+    b = _gen_expr(rng, depth + 1)
+    return f"{a} {rng.choice(_OPS)} {b}"
+
+
+def _gen_stmt(rng: random.Random, indent: int) -> str:
+    pad = "    " * indent
+    r = rng.random()
+    if r < 0.35:
+        return f"{pad}{rng.choice(_IDENTS)} = {_gen_expr(rng)}\n"
+    if r < 0.55:
+        return (f"{pad}for {rng.choice(_IDENTS)} in range({rng.randint(1, 32)}):\n"
+                + _gen_stmt(rng, indent + 1))
+    if r < 0.75:
+        return (f"{pad}if {rng.choice(_IDENTS)} {rng.choice(_CMPS)} {_gen_expr(rng)}:\n"
+                + _gen_stmt(rng, indent + 1))
+    if r < 0.9:
+        return f"{pad}return {_gen_expr(rng)}\n"
+    return f"{pad}{rng.choice(_IDENTS)} = {rng.choice(_FUNCS)}({rng.choice(_IDENTS)})\n"
+
+
+def gen_code(rng: random.Random, n_funcs: int) -> str:
+    out = []
+    for _ in range(n_funcs):
+        name = rng.choice(_FUNCS)
+        arg = rng.choice(_IDENTS)
+        out.append(f"def {name}({arg}):\n")
+        for _ in range(rng.randint(2, 5)):
+            out.append(_gen_stmt(rng, 1))
+        out.append("\n")
+    return "".join(out)
+
+
+# ----------------------------------------------------------------------------
+# prose / dialogue templates
+# ----------------------------------------------------------------------------
+
+_SUBJECTS = ["the system", "a model", "the report", "our team", "the city",
+             "a study", "the market", "the network", "the device", "the plan"]
+_VERBS = ["shows", "describes", "improves", "reduces", "handles", "explains",
+          "predicts", "measures", "supports", "changes"]
+_OBJECTS = ["the results", "a new method", "the overall cost", "user demand",
+            "the main problem", "future growth", "the core design",
+            "daily traffic", "total output", "the final outcome"]
+_ADVS = ["quickly", "slowly", "clearly", "roughly", "notably", "barely",
+         "often", "rarely", "directly", "partly"]
+_SPEAKERS = ["User", "Agent"]
+
+
+def gen_prose(rng: random.Random, n_sents: int) -> str:
+    sents = []
+    for _ in range(n_sents):
+        s = (f"{rng.choice(_SUBJECTS)} {rng.choice(_VERBS)} "
+             f"{rng.choice(_OBJECTS)} {rng.choice(_ADVS)}")
+        sents.append(s[0].upper() + s[1:] + ". ")
+    return "".join(sents) + "\n"
+
+
+def gen_dialogue(rng: random.Random, n_turns: int) -> str:
+    out = []
+    for t in range(n_turns):
+        out.append(f"{_SPEAKERS[t % 2]}: {gen_prose(rng, rng.randint(1, 3))}")
+    return "".join(out)
+
+
+def gen_math(rng: random.Random, n_problems: int) -> str:
+    out = []
+    for _ in range(n_problems):
+        a, b, c = rng.randint(2, 40), rng.randint(2, 40), rng.randint(2, 12)
+        out.append(
+            f"Q: A box holds {a} items and another holds {b} items. "
+            f"Each item costs {c}. What is the total cost?\n"
+            f"A: {a} + {b} = {a + b}. {a + b} * {c} = {(a + b) * c}. "
+            f"The total cost is {(a + b) * c}.\n\n")
+    return "".join(out)
+
+
+# ----------------------------------------------------------------------------
+# public API
+# ----------------------------------------------------------------------------
+
+def build_corpus(seed: int = 0, target_bytes: int = 1 << 18) -> bytes:
+    """Mixed corpus: ~40% code, 25% prose, 20% dialogue, 15% math."""
+    rng = random.Random(seed)
+    chunks = []
+    size = 0
+    while size < target_bytes:
+        r = rng.random()
+        if r < 0.40:
+            c = gen_code(rng, rng.randint(2, 4))
+        elif r < 0.65:
+            c = gen_prose(rng, rng.randint(4, 10))
+        elif r < 0.85:
+            c = gen_dialogue(rng, rng.randint(2, 6))
+        else:
+            c = gen_math(rng, rng.randint(1, 3))
+        chunks.append(c)
+        size += len(c)
+    return "".join(chunks).encode("ascii", errors="replace")[:target_bytes]
+
+
+def build_shifted_corpus(seed: int = 1, target_bytes: int = 1 << 18) -> bytes:
+    """A distribution-shifted corpus (math+dialogue heavy, different seed) used
+    to train the *weak* draft — reproducing the paper's high-divergence
+    Gemma-27B/2B regime."""
+    rng = random.Random(seed)
+    chunks = []
+    size = 0
+    while size < target_bytes:
+        r = rng.random()
+        if r < 0.5:
+            c = gen_math(rng, rng.randint(2, 4))
+        else:
+            c = gen_dialogue(rng, rng.randint(3, 8))
+        chunks.append(c)
+        size += len(c)
+    return "".join(chunks).encode("ascii", errors="replace")[:target_bytes]
+
+
+def sample_prompt(kind: str, seed: int, n_bytes: int = 48) -> bytes:
+    """A prompt of the given task kind (used by tests and the e2e example)."""
+    rng = random.Random(seed)
+    if kind == "code":
+        text = gen_code(rng, 2)
+    elif kind == "dialogue":
+        text = gen_dialogue(rng, 3)
+    elif kind == "math":
+        text = gen_math(rng, 2)
+    else:
+        text = gen_prose(rng, 6)
+    b = text.encode("ascii", errors="replace")
+    return b[:n_bytes].ljust(n_bytes, b" ")
+
+
+if __name__ == "__main__":
+    c = build_corpus()
+    print(f"corpus bytes: {len(c)}")
+    print(c[:400].decode())

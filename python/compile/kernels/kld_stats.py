@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: fused post-verification signal computation.
+
+The DSDE SL-Adapter consumes, per verified position, the Kullback–Leibler
+divergence between the target and draft next-token distributions plus the
+draft entropy (the AdaEDL baseline's signal).  Computing these naively takes
+three softmax passes over [B, K, V] logits; this kernel fuses
+log-softmax(p), log-softmax(q), KL(p||q) and H(q) into a single VMEM-resident
+pass per batch row — it is the signal-path hot-spot that runs inside the
+target-verify HLO on every engine step.
+
+Lowered with interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kld_kernel(p_ref, q_ref, kld_ref, ent_ref):
+    """One batch row: p_ref/q_ref [K, V] logits → kld_ref/ent_ref [K]."""
+    p = p_ref[...].astype(jnp.float32)
+    q = q_ref[...].astype(jnp.float32)
+    pm = p.max(axis=-1, keepdims=True)
+    qm = q.max(axis=-1, keepdims=True)
+    ps = p - pm
+    qs = q - qm
+    logzp = jnp.log(jnp.exp(ps).sum(axis=-1, keepdims=True))
+    logzq = jnp.log(jnp.exp(qs).sum(axis=-1, keepdims=True))
+    logp = ps - logzp
+    logq = qs - logzq
+    pp = jnp.exp(logp)
+    qq = jnp.exp(logq)
+    kld_ref[...] = (pp * (logp - logq)).sum(axis=-1).astype(kld_ref.dtype)
+    ent_ref[...] = (-(qq * logq).sum(axis=-1)).astype(ent_ref.dtype)
+
+
+def kld_signal(target_logits, draft_logits, *, interpret: bool = True):
+    """Fused KL(p_target || q_draft) and H(q_draft) per position.
+
+    Args:
+      target_logits, draft_logits: ``[B, K, V]`` float arrays.
+
+    Returns:
+      ``(kld, entropy)`` each ``[B, K]`` float32.
+    """
+    B, K, V = target_logits.shape
+    spec = pl.BlockSpec((None, K, V), lambda b: (b, 0, 0))
+    ospec = pl.BlockSpec((None, K), lambda b: (b, 0))
+    return pl.pallas_call(
+        _kld_kernel,
+        grid=(B,),
+        in_specs=[spec, spec],
+        out_specs=[ospec, ospec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(target_logits, draft_logits)

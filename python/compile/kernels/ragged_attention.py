@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: ragged-Q causal flash attention.
+
+This is the TPU rethink of the FlashAttention-2 *varlen* CUDA kernel the paper
+integrates into vLLM's target worker (§3 "variable-length kernel of
+FlashAttention-2 ... allowing requests with heterogeneous speculative lengths
+to be processed efficiently within a single batch").
+
+GPU → TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * FA2 threadblock per (sequence, head)    → Pallas grid = (B, H)
+  * SRAM K/V tiles + online softmax         → VMEM K/V blocks streamed via a
+    fori_loop with running (m, l, acc) state — the HBM↔VMEM schedule is the
+    BlockSpec + in-kernel block loop
+  * cu_seqlens ragged packing               → padded [B, L] layout + per-seq
+    length mask (TPU wants the regular layout; raggedness is a mask)
+
+The kernel must be lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers the kernel to
+plain HLO that any backend runs.  Real-TPU perf is therefore *estimated*
+(DESIGN.md §6), not measured.
+
+Perf note (EXPERIMENTS.md §Perf): under interpret-mode CPU execution the
+block loop materializes as an HLO while-loop; block_k=16 measured fastest
+for L=160 at B=8 (74 ms vs 83 ms at block_k=32 for the whole verify graph).
+On a real TPU the tradeoff inverts toward larger VMEM tiles — block_k is a
+parameter precisely so the schedule can be retuned per backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                 seq_len: int, scale: float):
+    """One (batch, head) attention problem.
+
+    Refs (one grid step): q_ref/k_ref/v_ref: [L, Dh]; len_ref: [1] int32;
+    o_ref: [L, Dh].
+    """
+    seq_valid = len_ref[0]
+    q = q_ref[...].astype(jnp.float32) * scale          # [L, Dh]
+    L, Dh = q.shape
+    n_blocks = seq_len // block_k
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (L, block_k), 0)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        start = kb * block_k
+        kblk = k_ref[pl.dslice(start, block_k), :].astype(jnp.float32)
+        vblk = v_ref[pl.dslice(start, block_k), :].astype(jnp.float32)
+        s = q @ kblk.T                                   # [L, block_k]
+        col_ids = start + jax.lax.broadcasted_iota(jnp.int32, (L, block_k), 1)
+        mask = (col_ids <= row_ids) & (col_ids < seq_valid)
+        # key 0 always valid: keeps padded query rows finite (never read).
+        mask = mask | (col_ids == 0)
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))      # [L]
+        corr = jnp.exp(m_prev - m_cur)                   # [L]
+        p = jnp.exp(s - m_cur[:, None])                  # [L, block_k]
+        l_cur = l_prev * corr + p.sum(axis=-1)
+        acc = acc * corr[:, None] + p @ vblk
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((L,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((L,), jnp.float32)
+    acc0 = jnp.zeros((L, Dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def ragged_causal_attention(q, k, v, lens, *, scale=None, block_k: int = 16,
+                            interpret: bool = True):
+    """Pallas ragged-Q causal attention; same contract as the ref oracle.
+
+    Args:
+      q, k, v: ``[B, H, L, Dh]``; ``L`` must be a multiple of ``block_k``.
+      lens: ``[B]`` int32 valid lengths.
+    """
+    B, H, L, Dh = q.shape
+    if L % block_k != 0:
+        raise ValueError(f"L={L} must be a multiple of block_k={block_k}")
+    if scale is None:
+        scale = 1.0 / float(Dh) ** 0.5
+    kern = functools.partial(_attn_kernel, block_k=block_k, seq_len=L,
+                             scale=float(scale))
+    grid = (B, H)
+    bspec = pl.BlockSpec((None, None, L, Dh), lambda b, h: (b, h, 0, 0))
+    lspec = pl.BlockSpec((1,), lambda b, h: (b,))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[lspec, bspec, bspec, bspec],
+        out_specs=bspec,
+        out_shape=jax.ShapeDtypeStruct((B, H, L, Dh), q.dtype),
+        interpret=interpret,
+    )(lens, q, k, v)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: ``python/tests/`` asserts the Pallas
+implementations (interpret=True) match these within tolerance, and the L2
+training path uses them directly (training never pays the interpret-mode
+overhead; only the AOT serving graphs embed the Pallas kernels).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ragged_causal_attention(q, k, v, lens, *, scale=None):
+    """Causal multi-head attention over padded sequences.
+
+    Args:
+      q, k, v: ``[B, H, L, Dh]`` float arrays.
+      lens:    ``[B]`` int32 — valid length per sequence; keys at positions
+               ``>= lens[b]`` are padding and must not be attended.
+      scale:   optional softmax scale (defaults to ``1/sqrt(Dh)``).
+
+    Returns:
+      ``[B, H, L, Dh]`` attention output.  Rows at padded query positions are
+      normalized against key 0 only (they are never read downstream).
+    """
+    B, H, L, Dh = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    pos = jnp.arange(L)
+    causal = pos[None, :] <= pos[:, None]                 # [Lq, Lk]
+    keyok = pos[None, :] < lens[:, None]                  # [B, Lk]
+    mask = causal[None, None, :, :] & keyok[:, None, None, :]
+    # Guarantee at least one valid key per row (key 0) to avoid 0/0 on
+    # padded query rows; those rows are masked out by callers.
+    mask = mask.at[:, :, :, 0].set(True)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def _log_softmax(x):
+    m = x.max(axis=-1, keepdims=True)
+    s = x - m
+    return s - jnp.log(jnp.exp(s).sum(axis=-1, keepdims=True))
+
+
+def kld_signal(target_logits, draft_logits):
+    """Fused post-verification signal computation (oracle).
+
+    Args:
+      target_logits: ``[B, K, V]`` — target logits at the drafted positions.
+      draft_logits:  ``[B, K, V]`` — draft logits at the same positions.
+
+    Returns:
+      ``(kld, draft_entropy)`` each ``[B, K]`` where
+      ``kld[b, j]     = KL( P_target(.|ctx_j)  ||  Q_draft(.|ctx_j) )`` and
+      ``entropy[b, j] = H( Q_draft(.|ctx_j) )``.
+    """
+    logp = _log_softmax(target_logits)
+    logq = _log_softmax(draft_logits)
+    p = jnp.exp(logp)
+    q = jnp.exp(logq)
+    kld = (p * (logp - logq)).sum(axis=-1)
+    entropy = -(q * logq).sum(axis=-1)
+    return kld, entropy

@@ -1,0 +1,226 @@
+"""L2: byte-level transformer LM pair (target + draft) in functional JAX.
+
+Stand-in for the paper's LLaMA-3.1-70B / LLaMA-3.2-1B (and Gemma-27B/2B)
+pairs — see DESIGN.md §1 for the substitution argument.  The architecture is
+a standard pre-norm transformer (RMSNorm, learned positions, GELU MLP, tied
+embedding head) over a byte vocabulary (V=256).
+
+Two attention implementations share one contract:
+  * ``ref.ragged_causal_attention``   — pure jnp, used for training (fast)
+  * ``ragged_attention`` Pallas kernel — used in the AOT serving graphs
+The pytest suite asserts they agree, so the trained weights are valid for
+the Pallas-backed serving graphs.
+
+Serving entry points (lowered per batch bucket by aot.py; PJRT executables
+are pure functions, so the full padded context is re-forwarded each call —
+at L=160 this is cheaper than threading KV state through the artifact
+interface, and the Rust engine still owns *logical* paged KV accounting):
+
+  ``step(wvec, tokens[B,L], lens[B]) -> logits[B,V]``
+      next-token logits at position ``lens[b]-1`` (predicting token
+      ``lens[b]``).  Used by the draft worker (one call per drafted token)
+      and by the autoregressive baseline.
+
+  ``verify(wvec, tokens[B,L], ctx_lens[B], att_lens[B], draft_logits[B,K,V])
+        -> (tlogits[B,K+1,V], kld[B,K], ent[B,K])``
+      target logits at positions ``ctx_lens[b]-1+j`` for j in 0..K
+      (scoring the K drafted tokens + the bonus position), plus the fused
+      KLD/entropy signals from the Pallas kld_stats kernel.
+
+All weights travel as ONE flat f32 vector (``wvec``) so the Rust runtime
+passes a single opaque parameter buffer; (un)packing is defined here and
+mirrored by the manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.ragged_attention import ragged_causal_attention as pallas_attn
+from .kernels.kld_stats import kld_signal as pallas_kld
+
+VOCAB = 256
+PAD_ID = 0          # reserved padding token id (paper §3.2)
+MAX_LEN = 160       # padded context length (must be multiple of block_k=32)
+SPEC_K = 12         # static K of the verify graph (>= any runtime SL)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    max_len: int = MAX_LEN
+    vocab: int = VOCAB
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+TARGET_CFG = ModelConfig("tiny-target", n_layers=4, d_model=128, n_heads=4, d_ff=352)
+DRAFT_CFG = ModelConfig("tiny-draft", n_layers=2, d_model=64, n_heads=2, d_ff=176)
+
+
+# ----------------------------------------------------------------------------
+# parameter pytree <-> flat vector
+# ----------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the packing order contract."""
+    d, h, f = cfg.d_model, cfg.n_heads, cfg.d_ff
+    shapes: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, d)),
+        ("pos", (cfg.max_len, d)),
+    ]
+    for i in range(cfg.n_layers):
+        shapes += [
+            (f"l{i}.ln1", (d,)),
+            (f"l{i}.wq", (d, d)),
+            (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2", (d,)),
+            (f"l{i}.w1", (d, f)),
+            (f"l{i}.w2", (f, d)),
+        ]
+    shapes.append(("ln_f", (d,)))
+    return shapes
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(int(math.prod(s)) for _, s in param_shapes(cfg))
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    params: Dict[str, jax.Array] = {}
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "pos":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def pack_params(cfg: ModelConfig, params: Dict[str, jax.Array]) -> jax.Array:
+    return jnp.concatenate(
+        [params[n].reshape(-1) for n, _ in param_shapes(cfg)])
+
+
+def unpack_params(cfg: ModelConfig, wvec: jax.Array) -> Dict[str, jax.Array]:
+    params = {}
+    off = 0
+    for name, shape in param_shapes(cfg):
+        size = int(math.prod(shape))
+        params[name] = jax.lax.dynamic_slice(wvec, (off,), (size,)).reshape(shape)
+        off += size
+    return params
+
+
+# ----------------------------------------------------------------------------
+# forward pass
+# ----------------------------------------------------------------------------
+
+def _rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt((x * x).mean(-1, keepdims=True) + 1e-6)
+
+
+def forward(cfg: ModelConfig, params: Dict[str, jax.Array], tokens, lens,
+            *, use_pallas: bool) -> jax.Array:
+    """Per-position logits ``[B, L, V]`` over padded byte contexts."""
+    B, L = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :L, :]
+    attn_fn = pallas_attn if use_pallas else kref.ragged_causal_attention
+    for i in range(cfg.n_layers):
+        h = _rmsnorm(x, params[f"l{i}.ln1"])
+        q = (h @ params[f"l{i}.wq"]).reshape(B, L, cfg.n_heads, cfg.d_head)
+        k = (h @ params[f"l{i}.wk"]).reshape(B, L, cfg.n_heads, cfg.d_head)
+        v = (h @ params[f"l{i}.wv"]).reshape(B, L, cfg.n_heads, cfg.d_head)
+        q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))   # [B,H,L,Dh]
+        o = attn_fn(q, k, v, lens)
+        o = o.transpose(0, 2, 1, 3).reshape(B, L, cfg.d_model)
+        x = x + o @ params[f"l{i}.wo"]
+        h = _rmsnorm(x, params[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(h @ params[f"l{i}.w1"]) @ params[f"l{i}.w2"]
+    x = _rmsnorm(x, params["ln_f"])
+    return x @ params["embed"].T                                  # tied head
+
+
+# ----------------------------------------------------------------------------
+# serving entry points (the functions aot.py lowers)
+# ----------------------------------------------------------------------------
+
+def step_fn(cfg: ModelConfig, wvec, tokens, lens, *, use_pallas: bool = True):
+    """Next-token logits at position ``lens-1`` for each sequence: [B, V]."""
+    params = unpack_params(cfg, wvec)
+    logits = forward(cfg, params, tokens, lens, use_pallas=use_pallas)
+    idx = jnp.clip(lens - 1, 0, cfg.max_len - 1)
+    return jnp.take_along_axis(
+        logits, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0, :]
+
+
+def verify_fn(cfg: ModelConfig, wvec, tokens, ctx_lens, att_lens,
+              draft_logits, *, k: int = SPEC_K, use_pallas: bool = True):
+    """Target verification + fused signal computation.
+
+    ``tokens`` already contains the drafted tokens appended after the context
+    (padded with PAD_ID beyond each sequence's own k_i up to K).  Gathers
+    target logits at positions ``ctx_lens-1 .. ctx_lens-1+K`` — scoring the K
+    drafted slots plus the bonus position — and feeds the first K together
+    with the draft logits through the Pallas kld_stats kernel.
+    """
+    params = unpack_params(cfg, wvec)
+    logits = forward(cfg, params, tokens, att_lens, use_pallas=use_pallas)
+    base = jnp.clip(ctx_lens - 1, 0, cfg.max_len - 1)             # [B]
+    offs = jnp.arange(k + 1, dtype=jnp.int32)[None, :]            # [1, K+1]
+    idx = jnp.clip(base[:, None] + offs, 0, cfg.max_len - 1)      # [B, K+1]
+    tlogits = jnp.take_along_axis(logits, idx[:, :, None], axis=1)  # [B,K+1,V]
+    if use_pallas:
+        kld, ent = pallas_kld(tlogits[:, :k, :], draft_logits)
+    else:
+        kld, ent = kref.kld_signal(tlogits[:, :k, :], draft_logits)
+    return tlogits, kld, ent
+
+
+# ----------------------------------------------------------------------------
+# training loss helpers (used by train.py; ref attention only)
+# ----------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params, tokens):
+    """Causal LM cross-entropy over full windows ``[B, T]`` (no padding)."""
+    B, T = tokens.shape
+    lens = jnp.full((B,), T, jnp.int32)
+    logits = forward(cfg, params, tokens, lens, use_pallas=False)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=-1)[:, :, 0]
+    return nll.mean()
+
+
+def distill_loss(cfg_d: ModelConfig, params_d, cfg_t: ModelConfig, params_t,
+                 tokens, alpha: float = 0.5, temp: float = 1.0):
+    """CE + KL(target || draft) distillation loss for the *good* draft."""
+    B, T = tokens.shape
+    lens = jnp.full((B,), T, jnp.int32)
+    d_logits = forward(cfg_d, params_d, tokens, lens, use_pallas=False)
+    t_logits = forward(cfg_t, params_t, tokens, lens, use_pallas=False)
+    t_logits = jax.lax.stop_gradient(t_logits)
+    logq = jax.nn.log_softmax(d_logits[:, :-1, :] / temp, axis=-1)
+    logp = jax.nn.log_softmax(t_logits[:, :-1, :] / temp, axis=-1)
+    kl = (jnp.exp(logp) * (logp - logq)).sum(-1).mean()
+    tgt = tokens[:, 1:]
+    ce = -jnp.take_along_axis(logq, tgt[:, :, None], axis=-1).mean()
+    return alpha * ce + (1 - alpha) * kl

@@ -1,0 +1,134 @@
+"""Build-time training of the tiny model pair (runs once in `make artifacts`).
+
+Produces three weight vectors (saved under artifacts/):
+  * ``target``      — 4-layer target LM trained on the mixed corpus.
+  * ``draft_good``  — 2-layer draft distilled from the target on the same
+                      corpus (CE + KL to target logits). High-acceptance pair
+                      — the paper's LLaMA-70B/1B regime.
+  * ``draft_weak``  — 2-layer draft trained on a distribution-shifted corpus
+                      with no distillation. High-divergence pair — the
+                      paper's Gemma-27B/2B low-acceptance regime (§4.4).
+
+Optimizer is a hand-rolled Adam (optax is not available in this image).
+Everything is seeded; the artifact build is reproducible.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_mod
+from . import model as M
+
+TRAIN_LEN = 128
+BATCH = 24
+
+
+# ----------------------------------------------------------------------------
+# Adam
+# ----------------------------------------------------------------------------
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) /
+        (jnp.sqrt(v_ * vhat_scale) + eps), params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+# ----------------------------------------------------------------------------
+# data
+# ----------------------------------------------------------------------------
+
+def windows(data: bytes, rng: np.random.Generator, batch: int, length: int):
+    arr = np.frombuffer(data, dtype=np.uint8)
+    starts = rng.integers(0, len(arr) - length - 1, size=batch)
+    return jnp.asarray(
+        np.stack([arr[s:s + length] for s in starts]).astype(np.int32))
+
+
+# ----------------------------------------------------------------------------
+# training loops
+# ----------------------------------------------------------------------------
+
+def train_lm(cfg: M.ModelConfig, data: bytes, steps: int, lr: float,
+             seed: int, log_every: int = 50) -> Dict[str, jax.Array]:
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    train_len = min(TRAIN_LEN, cfg.max_len)
+
+    @jax.jit
+    def step(params, opt, tokens, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.lm_loss(cfg, p, tokens))(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(steps):
+        toks = windows(data, rng, BATCH, train_len)
+        cur_lr = lr * min(1.0, (i + 1) / 30) * (0.5 ** (i / max(steps, 1) * 2))
+        params, opt, loss = step(params, opt, toks, cur_lr)
+        if i % log_every == 0 or i == steps - 1:
+            print(f"[train {cfg.name}] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params
+
+
+def distill_draft(cfg_d: M.ModelConfig, cfg_t: M.ModelConfig, params_t,
+                  data: bytes, steps: int, lr: float, seed: int,
+                  log_every: int = 50) -> Dict[str, jax.Array]:
+    params = M.init_params(cfg_d, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    train_len = min(TRAIN_LEN, cfg_d.max_len, cfg_t.max_len)
+
+    @jax.jit
+    def step(params, opt, tokens, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.distill_loss(cfg_d, p, cfg_t, params_t, tokens))(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(steps):
+        toks = windows(data, rng, BATCH, train_len)
+        cur_lr = lr * min(1.0, (i + 1) / 30) * (0.5 ** (i / max(steps, 1) * 2))
+        params, opt, loss = step(params, opt, toks, cur_lr)
+        if i % log_every == 0 or i == steps - 1:
+            print(f"[distill {cfg_d.name}] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params
+
+
+def train_all(steps_target: int = 300, steps_draft: int = 250,
+              steps_weak: int = 150) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns packed weight vectors (target, draft_good, draft_weak)."""
+    mixed = corpus_mod.build_corpus(seed=0)
+    shifted = corpus_mod.build_shifted_corpus(seed=1)
+    params_t = train_lm(M.TARGET_CFG, mixed, steps_target, lr=2e-3, seed=7)
+    params_dg = distill_draft(M.DRAFT_CFG, M.TARGET_CFG, params_t, mixed,
+                              steps_draft, lr=3e-3, seed=11)
+    params_dw = train_lm(M.DRAFT_CFG, shifted, steps_weak, lr=3e-3, seed=13)
+    return (M.pack_params(M.TARGET_CFG, params_t),
+            M.pack_params(M.DRAFT_CFG, params_dg),
+            M.pack_params(M.DRAFT_CFG, params_dw))
+
+
+if __name__ == "__main__":
+    wt, wg, ww = train_all(steps_target=60, steps_draft=40, steps_weak=30)
+    print("target params:", wt.shape, "draft:", wg.shape)

@@ -1,0 +1,159 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+The hypothesis sweeps cover the shape/dtype/length space; the deterministic
+tests pin the edge cases the engine actually produces (len=1 prefix, full
+window, ragged batches).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.kld_stats import kld_signal as pal_kld
+from compile.kernels.ragged_attention import ragged_causal_attention as pal_attn
+
+
+def _mk_qkv(key, B, H, L, Dh, dtype):
+    ks = jax.random.split(key, 3)
+    mk = lambda k: jax.random.normal(k, (B, H, L, Dh), dtype)
+    return mk(ks[0]), mk(ks[1]), mk(ks[2])
+
+
+def _assert_valid_rows_close(o_pal, o_ref, lens, rtol, atol):
+    for b, n in enumerate(np.asarray(lens)):
+        np.testing.assert_allclose(
+            np.asarray(o_pal[b, :, :n]), np.asarray(o_ref[b, :, :n]),
+            rtol=rtol, atol=atol)
+
+
+class TestRaggedAttention:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        B=st.integers(1, 5),
+        H=st.sampled_from([1, 2, 4]),
+        nblk=st.integers(1, 4),
+        Dh=st.sampled_from([8, 16, 32]),
+        block_k=st.sampled_from([16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_random_lengths(self, B, H, nblk, Dh, block_k, seed):
+        L = nblk * block_k
+        key = jax.random.PRNGKey(seed)
+        q, k, v = _mk_qkv(key, B, H, L, Dh, jnp.float32)
+        lens = jax.random.randint(jax.random.fold_in(key, 1), (B,), 1, L + 1,
+                                  jnp.int32)
+        o_ref = ref.ragged_causal_attention(q, k, v, lens)
+        o_pal = pal_attn(q, k, v, lens, block_k=block_k)
+        _assert_valid_rows_close(o_pal, o_ref, lens, 2e-5, 2e-5)
+
+    def test_full_length(self):
+        key = jax.random.PRNGKey(0)
+        q, k, v = _mk_qkv(key, 2, 2, 64, 16, jnp.float32)
+        lens = jnp.array([64, 64], jnp.int32)
+        o_ref = ref.ragged_causal_attention(q, k, v, lens)
+        o_pal = pal_attn(q, k, v, lens)
+        _assert_valid_rows_close(o_pal, o_ref, lens, 2e-5, 2e-5)
+
+    def test_length_one(self):
+        key = jax.random.PRNGKey(1)
+        q, k, v = _mk_qkv(key, 3, 1, 32, 8, jnp.float32)
+        lens = jnp.array([1, 1, 1], jnp.int32)
+        o_pal = pal_attn(q, k, v, lens)
+        # with a single valid token, output row 0 == v row 0
+        np.testing.assert_allclose(np.asarray(o_pal[:, :, 0]),
+                                   np.asarray(v[:, :, 0]), rtol=1e-5, atol=1e-5)
+
+    def test_causality(self):
+        """Perturbing future tokens must not change earlier outputs."""
+        key = jax.random.PRNGKey(2)
+        q, k, v = _mk_qkv(key, 1, 2, 64, 16, jnp.float32)
+        lens = jnp.array([64], jnp.int32)
+        o1 = pal_attn(q, k, v, lens)
+        k2 = k.at[:, :, 40:].add(3.0)
+        v2 = v.at[:, :, 40:].add(-2.0)
+        o2 = pal_attn(q, k2, v2, lens)
+        np.testing.assert_allclose(np.asarray(o1[:, :, :40]),
+                                   np.asarray(o2[:, :, :40]), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_length_mask_blocks_padding(self):
+        """Tokens beyond lens must not affect valid rows."""
+        key = jax.random.PRNGKey(3)
+        q, k, v = _mk_qkv(key, 2, 1, 32, 8, jnp.float32)
+        lens = jnp.array([10, 20], jnp.int32)
+        o1 = pal_attn(q, k, v, lens)
+        k2 = k.at[0, :, 10:].set(99.0)
+        v2 = v.at[0, :, 10:].set(-99.0)
+        o2 = pal_attn(q, k2, v2, lens)
+        np.testing.assert_allclose(np.asarray(o1[0, :, :10]),
+                                   np.asarray(o2[0, :, :10]), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_rejects_non_multiple_block(self):
+        key = jax.random.PRNGKey(0)
+        q, k, v = _mk_qkv(key, 1, 1, 48, 8, jnp.float32)
+        with pytest.raises(ValueError):
+            pal_attn(q, k, v, jnp.array([48], jnp.int32), block_k=32)
+
+    def test_rows_are_finite_even_when_padded(self):
+        key = jax.random.PRNGKey(4)
+        q, k, v = _mk_qkv(key, 1, 1, 32, 8, jnp.float32)
+        o = pal_attn(q, k, v, jnp.array([3], jnp.int32))
+        assert np.isfinite(np.asarray(o)).all()
+
+
+class TestKldSignal:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        B=st.integers(1, 6),
+        K=st.integers(1, 13),
+        V=st.sampled_from([32, 128, 256]),
+        scale=st.floats(0.1, 5.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, B, K, V, scale, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        tl = scale * jax.random.normal(k1, (B, K, V), jnp.float32)
+        dl = scale * jax.random.normal(k2, (B, K, V), jnp.float32)
+        kld_r, ent_r = ref.kld_signal(tl, dl)
+        kld_p, ent_p = pal_kld(tl, dl)
+        np.testing.assert_allclose(np.asarray(kld_p), np.asarray(kld_r),
+                                   rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(ent_p), np.asarray(ent_r),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_identical_dists_zero_kld(self):
+        key = jax.random.PRNGKey(0)
+        tl = jax.random.normal(key, (2, 4, 256), jnp.float32)
+        kld, ent = pal_kld(tl, tl)
+        np.testing.assert_allclose(np.asarray(kld), 0.0, atol=1e-5)
+        assert (np.asarray(ent) > 0).all()
+
+    def test_kld_nonnegative(self):
+        key = jax.random.PRNGKey(5)
+        k1, k2 = jax.random.split(key)
+        tl = 3 * jax.random.normal(k1, (4, 8, 256), jnp.float32)
+        dl = 3 * jax.random.normal(k2, (4, 8, 256), jnp.float32)
+        kld, _ = pal_kld(tl, dl)
+        assert (np.asarray(kld) >= -1e-5).all()
+
+    def test_uniform_draft_entropy_is_logv(self):
+        V = 128
+        tl = jnp.zeros((1, 1, V), jnp.float32)
+        _, ent = pal_kld(tl, tl)
+        np.testing.assert_allclose(np.asarray(ent)[0, 0], np.log(V), rtol=1e-5)
+
+    def test_shift_invariance(self):
+        """Logits shifted by a constant give identical signals."""
+        key = jax.random.PRNGKey(6)
+        k1, k2 = jax.random.split(key)
+        tl = jax.random.normal(k1, (2, 3, 64), jnp.float32)
+        dl = jax.random.normal(k2, (2, 3, 64), jnp.float32)
+        a = pal_kld(tl, dl)
+        b = pal_kld(tl + 7.5, dl - 3.25)
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]),
+                                   rtol=1e-4, atol=1e-5)

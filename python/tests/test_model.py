@@ -1,0 +1,165 @@
+"""L2 model tests: shapes, packing contract, entry-point semantics, and
+Pallas-vs-ref agreement at the whole-graph level."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+SMALL = M.ModelConfig("unit-small", n_layers=2, d_model=32, n_heads=2,
+                      d_ff=64, max_len=64)
+
+
+@pytest.fixture(scope="module")
+def small_params():
+    return M.init_params(SMALL, jax.random.PRNGKey(0))
+
+
+class TestPacking:
+    def test_roundtrip(self, small_params):
+        vec = M.pack_params(SMALL, small_params)
+        assert vec.shape == (M.n_params(SMALL),)
+        back = M.unpack_params(SMALL, vec)
+        for name, _ in M.param_shapes(SMALL):
+            np.testing.assert_array_equal(np.asarray(back[name]),
+                                          np.asarray(small_params[name]))
+
+    def test_n_params_matches_shapes(self):
+        total = sum(int(np.prod(s)) for _, s in M.param_shapes(SMALL))
+        assert total == M.n_params(SMALL)
+
+    def test_configs_are_sane(self):
+        for cfg in (M.TARGET_CFG, M.DRAFT_CFG):
+            assert cfg.d_model % cfg.n_heads == 0
+            assert cfg.max_len % 32 == 0
+            assert M.n_params(cfg) > 0
+        assert M.n_params(M.TARGET_CFG) > 2 * M.n_params(M.DRAFT_CFG)
+
+
+class TestForward:
+    def test_logits_shape(self, small_params):
+        toks = jnp.zeros((3, SMALL.max_len), jnp.int32)
+        lens = jnp.array([5, 20, 64], jnp.int32)
+        out = M.forward(SMALL, small_params, toks, lens, use_pallas=False)
+        assert out.shape == (3, SMALL.max_len, SMALL.vocab)
+
+    def test_pallas_ref_agree(self, small_params):
+        key = jax.random.PRNGKey(1)
+        toks = jax.random.randint(key, (2, SMALL.max_len), 0, 256, jnp.int32)
+        lens = jnp.array([30, 64], jnp.int32)
+        a = M.forward(SMALL, small_params, toks, lens, use_pallas=False)
+        b = M.forward(SMALL, small_params, toks, lens, use_pallas=True)
+        for i, n in enumerate([30, 64]):
+            np.testing.assert_allclose(np.asarray(a[i, :n]),
+                                       np.asarray(b[i, :n]),
+                                       rtol=5e-4, atol=5e-4)
+
+    def test_causality_of_logits(self, small_params):
+        """Changing token t must not change logits before t."""
+        key = jax.random.PRNGKey(2)
+        toks = jax.random.randint(key, (1, SMALL.max_len), 1, 256, jnp.int32)
+        lens = jnp.array([50], jnp.int32)
+        a = M.forward(SMALL, small_params, toks, lens, use_pallas=False)
+        toks2 = toks.at[0, 30].set(7)
+        b = M.forward(SMALL, small_params, toks2, lens, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a[0, :30]), np.asarray(b[0, :30]),
+                                   rtol=1e-5, atol=1e-5)
+        assert not np.allclose(np.asarray(a[0, 30]), np.asarray(b[0, 30]))
+
+
+class TestStepFn:
+    def test_step_gathers_last_position(self, small_params):
+        vec = M.pack_params(SMALL, small_params)
+        key = jax.random.PRNGKey(3)
+        toks = jax.random.randint(key, (2, SMALL.max_len), 1, 256, jnp.int32)
+        lens = jnp.array([7, 33], jnp.int32)
+        out = M.step_fn(SMALL, vec, toks, lens, use_pallas=False)
+        full = M.forward(SMALL, small_params, toks, lens, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(full[0, 6]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(out[1]), np.asarray(full[1, 32]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_step_independent_of_padding(self, small_params):
+        """Bytes beyond lens must not change the step logits."""
+        vec = M.pack_params(SMALL, small_params)
+        key = jax.random.PRNGKey(4)
+        toks = jax.random.randint(key, (1, SMALL.max_len), 1, 256, jnp.int32)
+        lens = jnp.array([12], jnp.int32)
+        a = M.step_fn(SMALL, vec, toks, lens, use_pallas=False)
+        toks2 = toks.at[0, 12:].set(M.PAD_ID)
+        b = M.step_fn(SMALL, vec, toks2, lens, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)
+
+
+class TestVerifyFn:
+    def test_shapes_and_signal_consistency(self, small_params):
+        vec = M.pack_params(SMALL, small_params)
+        key = jax.random.PRNGKey(5)
+        B, K = 2, M.SPEC_K
+        toks = jax.random.randint(key, (B, SMALL.max_len), 1, 256, jnp.int32)
+        ctx = jnp.array([10, 20], jnp.int32)
+        att = ctx + 4
+        dlog = jax.random.normal(key, (B, K, SMALL.vocab), jnp.float32)
+        tl, kld, ent = M.verify_fn(SMALL, vec, toks, ctx, att, dlog,
+                                   use_pallas=False)
+        assert tl.shape == (B, K + 1, SMALL.vocab)
+        assert kld.shape == (B, K)
+        assert ent.shape == (B, K)
+        # kld of identical logits is 0
+        tl2, kld2, _ = M.verify_fn(SMALL, vec, toks, ctx, att,
+                                   tl[:, :K, :], use_pallas=False)
+        np.testing.assert_allclose(np.asarray(kld2), 0.0, atol=1e-4)
+
+    def test_verify_matches_step_chain(self, small_params):
+        """Verify logits at slot j must equal a step call at ctx+j.
+
+        This is the invariant the whole speculative pipeline rests on: one
+        batched verify pass scores the same distributions the target would
+        produce token-by-token.
+        """
+        vec = M.pack_params(SMALL, small_params)
+        key = jax.random.PRNGKey(6)
+        toks = jax.random.randint(key, (1, SMALL.max_len), 1, 256, jnp.int32)
+        ctx = jnp.array([9], jnp.int32)
+        k_drafted = 3
+        att = ctx + k_drafted
+        dlog = jnp.zeros((1, M.SPEC_K, SMALL.vocab), jnp.float32)
+        tl, _, _ = M.verify_fn(SMALL, vec, toks, ctx, att, dlog,
+                               use_pallas=False)
+        for j in range(k_drafted + 1):
+            step = M.step_fn(SMALL, vec, toks, ctx + j, use_pallas=False)
+            np.testing.assert_allclose(np.asarray(tl[0, j]),
+                                       np.asarray(step[0]),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_pallas_ref_agree_on_verify(self, small_params):
+        vec = M.pack_params(SMALL, small_params)
+        key = jax.random.PRNGKey(7)
+        toks = jax.random.randint(key, (2, SMALL.max_len), 1, 256, jnp.int32)
+        ctx = jnp.array([15, 8], jnp.int32)
+        att = ctx + 5
+        dlog = jax.random.normal(key, (2, M.SPEC_K, SMALL.vocab), jnp.float32)
+        a = M.verify_fn(SMALL, vec, toks, ctx, att, dlog, use_pallas=False)
+        b = M.verify_fn(SMALL, vec, toks, ctx, att, dlog, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestLosses:
+    def test_lm_loss_finite_and_decreases_on_repetition(self, small_params):
+        toks = jnp.tile(jnp.arange(32, dtype=jnp.int32), (2, 2))
+        loss = M.lm_loss(SMALL, small_params, toks)
+        assert np.isfinite(float(loss))
+
+    def test_distill_loss_zero_kl_for_self(self, small_params):
+        """Distilling a model onto itself: KL term vanishes."""
+        toks = jnp.tile(jnp.arange(32, dtype=jnp.int32), (1, 2))
+        full = M.distill_loss(SMALL, small_params, SMALL, small_params, toks,
+                              alpha=0.0)
+        np.testing.assert_allclose(float(full), 0.0, atol=1e-4)

@@ -1,0 +1,116 @@
+//! Ablation bench (DESIGN.md design-choice index): which part of the DSDE
+//! penalty does the work?
+//!
+//! Compares, on the llama-like and gemma-like pairs over CNN/DM + ShareGPT:
+//!   * full DSDE (SF·WVIR)            — the paper's Eq. 2
+//!   * SF-only (immediate KLD level)  — drop the stability history
+//!   * WVIR-only (stability history)  — drop the immediate level
+//!   * DSDE + entropy early-stop      — the paper's "optionally combined
+//!                                      with entropy" extension (§1)
+//!   * static-opt and AdaEDL          — reference points
+//!
+//! Also reports how far each sits from static-opt (robustness margin).
+
+use dsde::config::{CapMode, EngineConfig, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::repro::{static_opt, ExperimentSpec};
+use dsde::sim::regime::DatasetProfile;
+use dsde::spec::adapter::{
+    AdaEdl, AdaEdlConfig, DsdeAblated, DsdeConfig, DsdeEntropy, DsdeVariant, SlPolicy,
+};
+use dsde::util::bench::Table;
+use dsde::workload::{Dataset, WorkloadGen};
+
+fn run_policy(
+    policy: Box<dyn SlPolicy>,
+    dataset: &'static str,
+    pair: SimPairKind,
+    seed: u64,
+) -> f64 {
+    let cfg = EngineConfig {
+        max_batch: 8,
+        max_len: 4096,
+        policy: SlPolicyKind::Static(4), // placeholder; with_policy overrides
+        cap_mode: CapMode::Mean,
+        kv_blocks: 65536,
+        seed,
+        ..Default::default()
+    };
+    let model = SimModel::new(pair, DatasetProfile::by_name(dataset).unwrap(), seed);
+    let mut e = Engine::with_policy(cfg, Box::new(model), policy);
+    let mut gen = WorkloadGen::new(Dataset::by_name(dataset).unwrap(), seed)
+        .with_limits(96, 256);
+    for req in gen.batch(64) {
+        e.submit(req);
+    }
+    e.run_to_completion();
+    e.metrics.mean_latency()
+}
+
+fn main() {
+    println!("== Adapter ablation: mean latency (s) and gap vs static-opt ==\n");
+    for (pair, pair_name) in [
+        (SimPairKind::LlamaLike, "llama-like"),
+        (SimPairKind::GemmaLike, "gemma-like"),
+    ] {
+        println!("-- pair: {pair_name} --");
+        let mut table = Table::new(&["Policy", "cnndm", "sharegpt", "mean gap vs opt"]);
+        let mut rows: Vec<(&str, Box<dyn Fn() -> Box<dyn SlPolicy>>)> = Vec::new();
+        rows.push(("dsde (full)", Box::new(|| {
+            Box::new(DsdeAblated::new(DsdeConfig::default(), DsdeVariant::Full))
+        })));
+        rows.push(("dsde sf-only", Box::new(|| {
+            Box::new(DsdeAblated::new(DsdeConfig::default(), DsdeVariant::SfOnly))
+        })));
+        rows.push(("dsde wvir-only", Box::new(|| {
+            Box::new(DsdeAblated::new(DsdeConfig::default(), DsdeVariant::WvirOnly))
+        })));
+        rows.push(("dsde+entropy", Box::new(|| {
+            Box::new(DsdeEntropy::new(DsdeConfig::default(), 0.35, 0.6))
+        })));
+        rows.push(("adaedl (base=7)", Box::new(|| {
+            Box::new(AdaEdl::new(AdaEdlConfig::default()))
+        })));
+
+        // static-opt reference per dataset
+        let mut opts = Vec::new();
+        for ds in ["cnndm", "sharegpt"] {
+            let base = ExperimentSpec {
+                dataset: ds,
+                pair,
+                batch: 8,
+                requests: 64,
+                seed: 51,
+                ..Default::default()
+            };
+            let (_, m) = static_opt(&base, &[2, 4, 6, 8, 10]);
+            opts.push(m.mean_latency());
+        }
+
+        for (name, mk) in &rows {
+            let l_cnn = run_policy(mk(), "cnndm", pair, 51);
+            let l_sgpt = run_policy(mk(), "sharegpt", pair, 51);
+            let gap = 0.5 * (l_cnn / opts[0] + l_sgpt / opts[1]);
+            table.row(&[
+                name.to_string(),
+                format!("{l_cnn:.2}"),
+                format!("{l_sgpt:.2}"),
+                format!("{gap:.2}x"),
+            ]);
+        }
+        table.row(&[
+            "static-opt (profiled)".into(),
+            format!("{:.2}", opts[0]),
+            format!("{:.2}", opts[1]),
+            "1.00x".into(),
+        ]);
+        table.print();
+        println!();
+    }
+    println!(
+        "reading: SF carries most of the signal on the easy pair; the WVIR \
+         term adds robustness in the low-acceptance regime; the entropy \
+         early-stop combination covers the forward-looking failure mode."
+    );
+}

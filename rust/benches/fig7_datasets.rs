@@ -1,0 +1,66 @@
+//! Figure 7 — per-dataset mean latency at temperature 0.0: the WVIR-based
+//! algorithm vs AdaEDL vs the per-dataset Static-opt baseline across all
+//! eight datasets.  Paper's finding: DSDE consistently matches static-opt
+//! without the per-dataset profiling pass.
+
+use dsde::config::{CapMode, SlPolicyKind};
+use dsde::model::sim_lm::SimPairKind;
+use dsde::repro::{run, static_opt, ExperimentSpec};
+use dsde::spec::adapter::{AdaEdlConfig, DsdeConfig};
+use dsde::util::bench::Table;
+
+const DATASETS: [&str; 8] = [
+    "cnndm", "xsum", "gsm8k", "hotpotqa", "nq", "humaneval", "sharegpt", "wmt14",
+];
+const SWEEP: [usize; 5] = [2, 4, 6, 8, 10];
+
+fn main() {
+    println!("== Fig 7: per-dataset mean latency (temp 0.0, llama-like pair) ==\n");
+    let mut table = Table::new(&[
+        "Dataset",
+        "Static-opt (s)",
+        "k_opt",
+        "AdaEDL (s)",
+        "WVIR-based (s)",
+        "WVIR vs opt",
+    ]);
+    let mut worst_ratio = 0.0f64;
+    for ds in DATASETS {
+        let base = ExperimentSpec {
+            dataset: ds,
+            pair: SimPairKind::LlamaLike,
+            cap: CapMode::Mean,
+            batch: 8,
+            requests: 64,
+            temperature: 0.0,
+            seed: 31,
+            ..Default::default()
+        };
+        let (k_opt, m_opt) = static_opt(&base, &SWEEP);
+        let mut a = base.clone();
+        a.policy = SlPolicyKind::AdaEdl(AdaEdlConfig::default());
+        let m_ada = run(&a);
+        let mut d = base.clone();
+        d.policy = SlPolicyKind::Dsde(DsdeConfig::default());
+        let m_dsde = run(&d);
+        let ratio = m_dsde.mean_latency() / m_opt.mean_latency();
+        worst_ratio = worst_ratio.max(ratio);
+        table.row(&[
+            ds.to_string(),
+            format!("{:.2}", m_opt.mean_latency()),
+            format!("{k_opt}"),
+            format!("{:.2}", m_ada.mean_latency()),
+            format!("{:.2}", m_dsde.mean_latency()),
+            format!("{:.2}x", ratio),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nworst WVIR/static-opt ratio: {worst_ratio:.2}x \
+         (robustness: close to 1.0 on every dataset, no profiling needed)"
+    );
+    println!(
+        "shape check: k_opt varies by dataset (high for code, low for open \
+         dialogue); WVIR tracks static-opt within a small margin everywhere."
+    );
+}

@@ -1,0 +1,102 @@
+//! Open-loop serving under load (beyond the paper's closed-loop protocol —
+//! the "real-world serving" regime its title targets): Poisson request
+//! arrivals into the engine's continuous batch at increasing offered load,
+//! comparing DSDE+cap vs static SL on p50/p99 latency and goodput.
+//!
+//! The shape to expect: at low load everyone is fine; as the offered rate
+//! approaches saturation, the better block efficiency of the adaptive
+//! policy pushes the latency knee to a higher rate.
+
+use dsde::config::{CapMode, EngineConfig, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::sim::regime::DatasetProfile;
+use dsde::spec::adapter::DsdeConfig;
+use dsde::util::bench::Table;
+use dsde::util::stats::percentile;
+use dsde::workload::{Dataset, PoissonArrivals, WorkloadGen};
+
+/// Run an open-loop experiment: requests arrive at `rate_per_s` on the
+/// engine's virtual clock until `n_total` have been submitted; returns
+/// (p50, p99, goodput tok/s).
+fn open_loop(policy: SlPolicyKind, cap: CapMode, rate_per_s: f64, n_total: usize,
+             seed: u64) -> (f64, f64, f64) {
+    let cfg = EngineConfig {
+        max_batch: 16,
+        max_len: 4096,
+        policy,
+        cap_mode: cap,
+        kv_blocks: 65536,
+        seed,
+        ..Default::default()
+    };
+    let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::sharegpt(), seed);
+    let mut engine = Engine::new(cfg, Box::new(model));
+    let mut gen = WorkloadGen::new(Dataset::by_name("sharegpt").unwrap(), seed)
+        .with_limits(96, 192);
+    let mut arrivals = PoissonArrivals::new(rate_per_s, seed ^ 0xA221);
+    let mut submitted = 0usize;
+    loop {
+        // deliver every arrival that falls before the current virtual time
+        if submitted < n_total {
+            for _ in 0..arrivals.arrivals_until(engine.now()) {
+                if submitted >= n_total {
+                    break;
+                }
+                engine.submit(gen.next_request());
+                submitted += 1;
+            }
+            // idle engine: jump the clock to the next arrival via a dummy
+            // submission if nothing is pending
+            if engine.pending() == 0 {
+                engine.submit(gen.next_request());
+                submitted += 1;
+            }
+        }
+        if engine.pending() == 0 && submitted >= n_total {
+            break;
+        }
+        engine.step().unwrap();
+    }
+    let lats: Vec<f64> = engine.metrics.requests.iter().map(|r| r.latency).collect();
+    (
+        percentile(&lats, 0.5),
+        percentile(&lats, 0.99),
+        engine.metrics.goodput(),
+    )
+}
+
+fn main() {
+    println!("== open-loop serving: Poisson arrivals, ShareGPT profile, batch 16 ==\n");
+    let mut table = Table::new(&[
+        "offered req/s",
+        "static-4 p50/p99 (s)",
+        "dsde+cap p50/p99 (s)",
+        "static-4 goodput",
+        "dsde+cap goodput",
+    ]);
+    for rate in [0.2, 0.5, 1.0, 2.0] {
+        let (sp50, sp99, sgp) =
+            open_loop(SlPolicyKind::Static(4), CapMode::None, rate, 64, 7);
+        let (dp50, dp99, dgp) = open_loop(
+            SlPolicyKind::Dsde(DsdeConfig::default()),
+            CapMode::Mean,
+            rate,
+            64,
+            7,
+        );
+        table.row(&[
+            format!("{rate:.1}"),
+            format!("{sp50:.1} / {sp99:.1}"),
+            format!("{dp50:.1} / {dp99:.1}"),
+            format!("{sgp:.1}"),
+            format!("{dgp:.1}"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nshape check: p99 stays flat at low load and blows up past the \
+         saturation knee; the adaptive policy holds the knee at equal or \
+         higher offered rates."
+    );
+}

@@ -1,0 +1,74 @@
+//! Table 2 — Pearson correlation between candidate signals and token
+//! acceptance on CNN/DM at temperatures 0.0 and 1.0.
+//!
+//! Signals: forward-looking draft entropy, lagging mean KLD over the
+//! previous 10 steps, and the WVIR.  Paper's finding: ALL token-level
+//! correlations are weak (entropy strongest at r ≈ −0.34, KLD ≈ −0.16,
+//! WVIR ≈ 0.13 at T=0) and weaken further at T=1 — which is exactly why
+//! DSDE uses the *variance* of KLD as a regional diagnostic instead of a
+//! token-level predictor.
+
+use dsde::sim::regime::{DatasetProfile, RegimeProcess};
+use dsde::spec::history::SeqSignals;
+use dsde::util::bench::Table;
+use dsde::util::rng::Rng;
+use dsde::util::stats::pearson;
+
+fn collect(temp: f64, seed: u64, n: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut proc = RegimeProcess::new(DatasetProfile::cnndm(), seed);
+    let mut sig = SeqSignals::default();
+    let mut rng = Rng::new(seed ^ 0xACCE);
+    let (mut ents, mut klds, mut wvirs, mut accs) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let k = 4; // tokens per verification step
+    for _ in 0..n / k {
+        proc.step_regime();
+        let mut step_klds = Vec::new();
+        let mut step_ents = Vec::new();
+        let mut accepted = 0;
+        let mut rejected = false;
+        for _ in 0..k {
+            let d = proc.draw_token(temp);
+            // token-level rows: signal values available *at* this token
+            ents.push(d.entropy as f64);
+            klds.push(sig.last_step_mean_kld); // lagging mean KLD (prev steps)
+            wvirs.push(sig.wvir());
+            let acc = !rejected && rng.chance(d.accept_p);
+            accs.push(if acc { 1.0 } else { 0.0 });
+            if !acc {
+                rejected = true;
+            } else {
+                accepted += 1;
+            }
+            step_klds.push(d.kld);
+            step_ents.push(d.entropy);
+        }
+        sig.record_step(&step_klds, &step_ents, k, accepted);
+    }
+    (ents, klds, wvirs, accs)
+}
+
+fn main() {
+    println!("== Table 2: signal vs token-acceptance Pearson r (CNN/DM, sim) ==\n");
+    let n = 40_000;
+    let mut table = Table::new(&["Signal / Metric", "Correlation (Temp 0.0)", "Correlation (Temp 1.0)"]);
+    let (e0, k0, w0, a0) = collect(0.0, 11, n);
+    let (e1, k1, w1, a1) = collect(1.0, 13, n);
+    let r = |x: &[f64], y: &[f64]| -> String {
+        pearson(x, y)
+            .map(|v| format!("{v:.3}"))
+            .unwrap_or_else(|| "n/a".into())
+    };
+    table.row(&["Entropy (draft)".into(), r(&e0, &a0), r(&e1, &a1)]);
+    table.row(&["Mean KLD".into(), r(&k0, &a0), r(&k1, &a1)]);
+    table.row(&["WVIR".into(), r(&w0, &a0), r(&w1, &a1)]);
+    table.print();
+    println!(
+        "\npaper reference: entropy -0.339/-0.235, mean KLD -0.164/-0.069, \
+         WVIR 0.128/-0.031"
+    );
+    println!(
+        "shape check: |entropy r| strongest and negative; lagging signals \
+         near zero; all weaken at T=1."
+    );
+}

@@ -1,0 +1,104 @@
+//! Table 3 — Main latency results (LLaMA-3.1-70B target / LLaMA-3.2-1B
+//! draft analog): mean request latency + speedup vs autoregressive, for
+//! Autoregressive / Static-opt / Proposed Dynamic SL (DSDE) / AdaEDL, at
+//! temperature 0.0 (a) and 1.0 (b).
+//!
+//! Static-opt is found the way the paper did: a per-dataset profiling sweep
+//! over SL ∈ {2, 4, 6, 8, 10} (the expensive pass DSDE avoids) — its cost
+//! is reported too.
+
+use std::time::Instant;
+
+use dsde::config::{CapMode, SlPolicyKind};
+use dsde::model::sim_lm::SimPairKind;
+use dsde::repro::{run, static_opt, ExperimentSpec};
+use dsde::spec::adapter::{AdaEdlConfig, DsdeConfig};
+use dsde::util::bench::Table;
+use dsde::util::stats::mean;
+
+const DATASETS: [&str; 8] = [
+    "cnndm", "xsum", "gsm8k", "hotpotqa", "nq", "humaneval", "sharegpt", "wmt14",
+];
+const SWEEP: [usize; 5] = [2, 4, 6, 8, 10];
+
+fn spec(dataset: &'static str, temp: f64) -> ExperimentSpec {
+    ExperimentSpec {
+        dataset,
+        pair: SimPairKind::LlamaLike,
+        cap: CapMode::Mean,
+        batch: 8,
+        requests: 64,
+        temperature: temp,
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    for temp in [0.0, 1.0] {
+        println!(
+            "== Table 3{}: mean latency across {} datasets (temp {temp}) ==\n",
+            if temp == 0.0 { "a" } else { "b" },
+            DATASETS.len()
+        );
+        let mut lat_ar = Vec::new();
+        let mut lat_opt = Vec::new();
+        let mut lat_dsde = Vec::new();
+        let mut lat_ada = Vec::new();
+        let t0 = Instant::now();
+        let mut profile_cost = 0.0f64;
+        for ds in DATASETS {
+            let base = spec(ds, temp);
+            // autoregressive
+            let mut ar = base.clone();
+            ar.speculative = false;
+            lat_ar.push(run(&ar).mean_latency());
+            // static-opt: the profiling sweep the paper measures at 2.7 h/dataset
+            let sweep_t = Instant::now();
+            let (_k, m) = static_opt(&base, &SWEEP);
+            profile_cost += sweep_t.elapsed().as_secs_f64();
+            lat_opt.push(m.mean_latency());
+            // DSDE
+            let mut d = base.clone();
+            d.policy = SlPolicyKind::Dsde(DsdeConfig::default());
+            lat_dsde.push(run(&d).mean_latency());
+            // AdaEDL base=7
+            let mut a = base.clone();
+            a.policy = SlPolicyKind::AdaEdl(AdaEdlConfig::default());
+            lat_ada.push(run(&a).mean_latency());
+        }
+        let ar = mean(&lat_ar);
+        let mut table = Table::new(&["Method", "Mean Latency (s)", "Speedup"]);
+        for (name, lats) in [
+            ("Autoregressive", &lat_ar),
+            ("Static-opt", &lat_opt),
+            ("Proposed Dynamic SL", &lat_dsde),
+            ("AdaEDL (base=7)", &lat_ada),
+        ] {
+            let l = mean(lats);
+            table.row(&[
+                name.to_string(),
+                format!("{l:.2}"),
+                format!("{:.2}x", ar / l),
+            ]);
+        }
+        table.print();
+        println!(
+            "\n(static-opt profiling sweep cost on this harness: {profile_cost:.2}s \
+             wall — the paper's testbed needed ~22h for the same pass)"
+        );
+        println!("total bench wall: {:.1}s\n", t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "paper reference (T=0): AR 38.41 1.00x | static-opt 13.44 2.86x | \
+         DSDE 13.97 2.75x | AdaEDL 13.83 2.78x"
+    );
+    println!(
+        "paper reference (T=1): AR 38.47 1.00x | static-opt 18.02 2.13x | \
+         DSDE 19.19 2.00x | AdaEDL 17.64 2.17x"
+    );
+    println!(
+        "shape check: all dynamic methods within ~10% of static-opt at T=0; \
+         gap widens slightly at T=1; DSDE needs no profiling pass."
+    );
+}

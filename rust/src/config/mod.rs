@@ -1,0 +1,188 @@
+//! Engine / policy configuration with JSON round-trip.
+
+use crate::spec::adapter::{AdaEdlConfig, DsdeConfig};
+pub use crate::spec::cap::CapMode;
+use crate::util::json::Json;
+
+/// Which SL policy drives the engine.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SlPolicyKind {
+    /// Fixed k for all sequences/steps (the vLLM default; `k = 0` would be
+    /// autoregressive but that's expressed via [`EngineConfig::speculative`]).
+    Static(usize),
+    /// The paper's KLD-stability adapter.
+    Dsde(DsdeConfig),
+    /// Entropy early-stop baseline.
+    AdaEdl(AdaEdlConfig),
+}
+
+impl SlPolicyKind {
+    pub fn name(&self) -> String {
+        match self {
+            SlPolicyKind::Static(k) => format!("static-{k}"),
+            SlPolicyKind::Dsde(_) => "dsde".to_string(),
+            SlPolicyKind::AdaEdl(c) => format!("adaedl-base{}", c.base),
+        }
+    }
+
+    /// Parse CLI shorthand: `static:4`, `dsde`, `adaedl:7`, `autoregressive`
+    /// handled by the caller (speculative = false).
+    pub fn parse(s: &str) -> Option<SlPolicyKind> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "static" => Some(SlPolicyKind::Static(
+                arg.and_then(|a| a.parse().ok()).unwrap_or(4),
+            )),
+            "dsde" | "wvir" => Some(SlPolicyKind::Dsde(DsdeConfig::default())),
+            "adaedl" => {
+                let mut cfg = AdaEdlConfig::default();
+                if let Some(b) = arg.and_then(|a| a.parse().ok()) {
+                    cfg.base = b;
+                }
+                Some(SlPolicyKind::AdaEdl(cfg))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Top-level engine configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Maximum sequences scheduled per step (batch size).
+    pub max_batch: usize,
+    /// Padded context length (must match the artifacts' max_len on the
+    /// PJRT path).
+    pub max_len: usize,
+    /// Hard SL ceiling (the verify graph's static K on the PJRT path).
+    pub spec_k: usize,
+    /// Run speculative decoding (false = autoregressive baseline).
+    pub speculative: bool,
+    /// SL policy.
+    pub policy: SlPolicyKind,
+    /// Batch-wide cap mode (paper §3.3).
+    pub cap_mode: CapMode,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f64,
+    /// Paged-KV block size in tokens (vLLM-style).
+    pub kv_block_size: usize,
+    /// Total KV blocks available (capacity planning / preemption pressure).
+    pub kv_blocks: usize,
+    /// RNG seed for sampling.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 8,
+            max_len: 160,
+            spec_k: 12,
+            speculative: true,
+            policy: SlPolicyKind::Dsde(DsdeConfig::default()),
+            cap_mode: CapMode::Mean,
+            temperature: 0.0,
+            kv_block_size: 16,
+            kv_blocks: 4096,
+            seed: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Validate invariants; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        if self.max_batch == 0 {
+            errs.push("max_batch must be > 0".to_string());
+        }
+        if self.kv_block_size == 0 {
+            errs.push("kv_block_size must be > 0".to_string());
+        }
+        if self.spec_k == 0 && self.speculative {
+            errs.push("spec_k must be > 0 in speculative mode".to_string());
+        }
+        if let SlPolicyKind::Static(k) = &self.policy {
+            if *k > self.spec_k {
+                errs.push(format!("static k {k} exceeds spec_k {}", self.spec_k));
+            }
+        }
+        if self.temperature < 0.0 {
+            errs.push("temperature must be >= 0".to_string());
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// Serialize (for experiment records).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("max_batch", self.max_batch)
+            .set("max_len", self.max_len)
+            .set("spec_k", self.spec_k)
+            .set("speculative", self.speculative)
+            .set("policy", self.policy.name())
+            .set("cap_mode", self.cap_mode.name())
+            .set("temperature", self.temperature)
+            .set("kv_block_size", self.kv_block_size)
+            .set("kv_blocks", self.kv_blocks)
+            .set("seed", self.seed)
+    }
+}
+
+/// Re-export of the adapter config for convenience.
+pub type AdapterConfig = DsdeConfig;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(EngineConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut c = EngineConfig::default();
+        c.max_batch = 0;
+        c.temperature = -1.0;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("max_batch"));
+        assert!(err.contains("temperature"));
+    }
+
+    #[test]
+    fn static_k_bound_checked() {
+        let mut c = EngineConfig::default();
+        c.policy = SlPolicyKind::Static(99);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(SlPolicyKind::parse("static:6"), Some(SlPolicyKind::Static(6)));
+        assert!(matches!(
+            SlPolicyKind::parse("dsde"),
+            Some(SlPolicyKind::Dsde(_))
+        ));
+        match SlPolicyKind::parse("adaedl:5") {
+            Some(SlPolicyKind::AdaEdl(c)) => assert_eq!(c.base, 5),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(SlPolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn json_dump_contains_fields() {
+        let s = EngineConfig::default().to_json().to_string();
+        assert!(s.contains("\"policy\":\"dsde\""));
+        assert!(s.contains("\"cap_mode\":\"mean\""));
+    }
+}

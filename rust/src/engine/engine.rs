@@ -1,0 +1,477 @@
+//! The engine step loop — Fig. 4 of the paper:
+//!
+//! ```text
+//!   schedule -> draft worker (k_i each) -> target worker (ragged verify)
+//!     -> rejection sampler -> SL adapter (signals -> SL_i^{(t+1)})
+//!     -> look-ahead scheduler (KV pre-mapping for the next round)
+//! ```
+//!
+//! The engine is substrate-agnostic: the same loop runs over the PJRT model
+//! (real forwards, wall-clock time) and the simulator (regime process,
+//! virtual time).  Time is a single scalar clock: on the real path it
+//! follows `Instant::elapsed`, on the simulated path it advances by each
+//! round's modeled cost.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::kv_cache::KvCache;
+use super::metrics::{EngineMetrics, RequestMetrics};
+use super::request::{FinishReason, FinishedRequest, Request, SeqState};
+use super::scheduler::Scheduler;
+use crate::config::EngineConfig;
+use crate::model::traits::{SeqInput, SpecModel};
+use crate::spec::adapter::{make_policy, SlPolicy};
+use crate::spec::cap;
+
+/// The speculative-decoding serving engine.
+pub struct Engine {
+    pub cfg: EngineConfig,
+    model: Box<dyn SpecModel>,
+    policy: Box<dyn SlPolicy>,
+    scheduler: Scheduler,
+    kv: KvCache,
+    waiting: VecDeque<SeqState>,
+    running: Vec<SeqState>,
+    finished: Vec<FinishedRequest>,
+    pub metrics: EngineMetrics,
+    clock: f64,
+    real_t0: Instant,
+    uses_virtual_time: bool,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig, model: Box<dyn SpecModel>) -> Engine {
+        let policy = make_policy(&cfg.policy);
+        Engine::with_policy(cfg, model, policy)
+    }
+
+    /// Construct with an explicit policy object (ablation variants and
+    /// custom adapters that have no [`crate::config::SlPolicyKind`] tag).
+    pub fn with_policy(
+        cfg: EngineConfig,
+        model: Box<dyn SpecModel>,
+        policy: Box<dyn SlPolicy>,
+    ) -> Engine {
+        cfg.validate().expect("invalid engine config");
+        let scheduler = Scheduler::new(cfg.max_batch);
+        let kv = KvCache::new(cfg.kv_blocks, cfg.kv_block_size);
+        Engine {
+            scheduler,
+            kv,
+            policy,
+            model,
+            cfg,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+            metrics: EngineMetrics::default(),
+            clock: 0.0,
+            real_t0: Instant::now(),
+            uses_virtual_time: false,
+        }
+    }
+
+    /// Current engine time (virtual or wall).
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    /// Queue a request.
+    pub fn submit(&mut self, mut req: Request) {
+        req.arrival = self.clock;
+        self.waiting.push_back(SeqState::from_request(req));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    pub fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Drive until all submitted requests complete; returns them.
+    pub fn run_to_completion(&mut self) -> Vec<FinishedRequest> {
+        while self.pending() > 0 {
+            if !self.step().expect("engine step failed") {
+                break;
+            }
+        }
+        self.take_finished()
+    }
+
+    /// One engine step.  Returns false when there was nothing to do.
+    pub fn step(&mut self) -> Result<bool> {
+        self.metrics.steps += 1;
+        self.scheduler
+            .admit(&mut self.waiting, &mut self.running, &mut self.kv);
+        if self.running.is_empty() {
+            return Ok(false);
+        }
+
+        // ---- SL assignment (adapter -> budget clamps -> batch cap) ----------
+        let max_len = self.model.max_len().min(self.cfg.max_len);
+        let spec_k = self.model.spec_k().min(self.cfg.spec_k);
+        let mut sls: Vec<usize> = if self.cfg.speculative {
+            self.running
+                .iter()
+                .map(|s| {
+                    let want = self.policy.propose(&s.signals).clamp(1, spec_k);
+                    let ctx_room = max_len.saturating_sub(s.tokens.len() + 1);
+                    let budget = s.remaining().max(1);
+                    want.min(ctx_room.max(1)).min(budget)
+                })
+                .collect()
+        } else {
+            vec![0; self.running.len()]
+        };
+        let max_sl_pre_cap = sls.iter().copied().max().unwrap_or(0);
+        if self.cfg.speculative {
+            cap::apply_cap(self.cfg.cap_mode, &mut sls);
+        }
+
+        // ---- KV look-ahead pre-mapping (may preempt) -------------------------
+        let outcome = self.scheduler.reserve_lookahead(
+            &mut self.running,
+            &mut sls,
+            &mut self.kv,
+            &mut self.waiting,
+        );
+        debug_assert!(self.kv.check_invariants().is_ok());
+        if self.running.is_empty() {
+            return Ok(!self.waiting.is_empty());
+        }
+        let _ = outcome;
+
+        // ---- model round ------------------------------------------------------
+        let round = {
+            let running = &self.running;
+            let policy = &self.policy;
+            let inputs: Vec<SeqInput<'_>> = running
+                .iter()
+                .map(|s| SeqInput {
+                    id: s.id,
+                    tokens: &s.tokens,
+                    temperature: if s.params.temperature != 0.0 {
+                        s.params.temperature
+                    } else {
+                        self.cfg.temperature
+                    },
+                })
+                .collect();
+            let stop = |i: usize, j: usize, ent: f32, top_p: f32| -> bool {
+                policy.should_stop(&running[i].signals, j, ent, top_p)
+            };
+            if self.cfg.speculative {
+                self.model.spec_round(&inputs, &sls, &stop)?
+            } else {
+                self.model.ar_round(&inputs)?
+            }
+        };
+        debug_assert!(round.validate(self.running.len()).is_ok());
+
+        // ---- clock -----------------------------------------------------------
+        match round.sim_cost {
+            Some(c) => {
+                self.uses_virtual_time = true;
+                self.clock += c;
+                self.metrics.busy_time += c;
+            }
+            None => {
+                let t = self.real_t0.elapsed().as_secs_f64();
+                self.metrics.busy_time += t - self.clock;
+                self.clock = t;
+            }
+        }
+        self.metrics.now = self.clock;
+
+        // ---- apply outcome ----------------------------------------------------
+        if self.cfg.speculative {
+            self.metrics.verify_rounds += 1;
+        } else {
+            self.metrics.ar_rounds += 1;
+        }
+        let max_drafted = round.drafted.iter().copied().max().unwrap_or(0);
+        self.metrics.seq_rounds += self.running.len() as u64;
+        self.metrics.batch_hist.push(self.running.len() as f64);
+        self.metrics.sl_hist.push(max_drafted as f64);
+        let _ = max_sl_pre_cap;
+        let calib_steps = self.policy.calibration_steps();
+        for (i, seq) in self.running.iter_mut().enumerate() {
+            let new_tokens = &round.new_tokens[i];
+            if seq.first_token_at.is_none() && !new_tokens.is_empty() {
+                seq.first_token_at = Some(self.clock);
+            }
+            // budget clamp: never emit beyond max_tokens
+            let take = new_tokens.len().min(seq.remaining());
+            seq.tokens.extend_from_slice(&new_tokens[..take]);
+            seq.rounds += 1;
+            self.metrics.tokens_out += take as u64;
+            self.metrics.drafted += round.drafted[i] as u64;
+            self.metrics.accepted += round.accepted[i] as u64;
+            self.metrics.straggler_bubble +=
+                (max_drafted - round.drafted[i]) as u64;
+            // signals: calibration phase first (paper §3.1.1), then normal
+            let calibrating = self.policy.wants_calibration()
+                && seq.signals.calibrated_sl_max.is_none();
+            if calibrating {
+                seq.signals
+                    .record_calibration(&round.klds[i], round.accepted[i]);
+            }
+            seq.signals.record_step(
+                &round.klds[i],
+                &round.entropies[i],
+                round.drafted[i],
+                round.accepted[i],
+            );
+            if calibrating && seq.signals.steps >= calib_steps {
+                self.policy.finish_calibration(&mut seq.signals);
+            }
+            // reallocation: reclaim over-mapped look-ahead blocks
+            self.kv.trim(seq.id, seq.tokens.len());
+        }
+
+        // ---- retire finished sequences -----------------------------------------
+        let mut i = 0;
+        while i < self.running.len() {
+            if let Some(reason) = self.running[i].is_done(max_len) {
+                let seq = self.running.remove(i);
+                self.retire(seq, reason);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(true)
+    }
+
+    fn retire(&mut self, seq: SeqState, reason: FinishReason) {
+        self.kv.release(seq.id);
+        self.model.release(seq.id);
+        let fin = FinishedRequest {
+            id: seq.id,
+            output: seq.tokens[seq.prompt_len..].to_vec(),
+            reason,
+            arrival: seq.arrival,
+            finished_at: self.clock,
+            first_token_at: seq.first_token_at.unwrap_or(self.clock),
+            rounds: seq.rounds,
+            drafted: seq.signals.drafted_total,
+            accepted: seq.signals.accepted_total,
+            preemptions: seq.preemptions,
+        };
+        self.metrics.requests.push(RequestMetrics {
+            id: fin.id,
+            latency: fin.latency(),
+            ttft: fin.ttft(),
+            output_tokens: fin.output.len(),
+            rounds: fin.rounds,
+            drafted: fin.drafted,
+            accepted: fin.accepted,
+            preemptions: fin.preemptions,
+        });
+        self.finished.push(fin);
+    }
+
+    /// Abort all in-flight work (server shutdown).
+    pub fn abort_all(&mut self) {
+        let drained: Vec<SeqState> = self
+            .running
+            .drain(..)
+            .chain(self.waiting.drain(..))
+            .collect();
+        for seq in drained {
+            self.retire(seq, FinishReason::Aborted);
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn model_name(&self) -> String {
+        self.model.name()
+    }
+
+    pub fn kv_used_blocks(&self) -> usize {
+        self.kv.used_blocks()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SlPolicyKind;
+    use crate::model::sim_lm::{SimModel, SimPairKind};
+    use crate::sim::regime::DatasetProfile;
+
+    fn sim_engine(policy: SlPolicyKind, speculative: bool) -> Engine {
+        let cfg = EngineConfig {
+            max_batch: 4,
+            max_len: 512,
+            speculative,
+            policy,
+            seed: 7,
+            ..Default::default()
+        };
+        let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), 7)
+            .with_max_len(512);
+        Engine::new(cfg, Box::new(model))
+    }
+
+    fn submit_n(e: &mut Engine, n: usize, max_tokens: usize) {
+        for i in 0..n {
+            e.submit(Request::new(
+                i as u64,
+                vec![65; 32],
+                crate::engine::request::SamplingParams {
+                    max_tokens,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let mut e = sim_engine(SlPolicyKind::Static(4), true);
+        submit_n(&mut e, 6, 40);
+        let done = e.run_to_completion();
+        assert_eq!(done.len(), 6);
+        for r in &done {
+            assert_eq!(r.output.len(), 40);
+            assert_eq!(r.reason, FinishReason::MaxTokens);
+            assert!(r.latency() > 0.0);
+        }
+    }
+
+    #[test]
+    fn autoregressive_mode_works() {
+        let mut e = sim_engine(SlPolicyKind::Static(4), false);
+        submit_n(&mut e, 2, 16);
+        let done = e.run_to_completion();
+        assert_eq!(done.len(), 2);
+        assert_eq!(e.metrics.ar_rounds, 16); // one token per round per seq
+        assert_eq!(e.metrics.drafted, 0);
+    }
+
+    #[test]
+    fn speculative_beats_autoregressive_on_virtual_time() {
+        let mut ar = sim_engine(SlPolicyKind::Static(4), false);
+        submit_n(&mut ar, 4, 64);
+        ar.run_to_completion();
+        let mut sp = sim_engine(SlPolicyKind::Static(4), true);
+        submit_n(&mut sp, 4, 64);
+        sp.run_to_completion();
+        assert!(
+            sp.metrics.mean_latency() < 0.7 * ar.metrics.mean_latency(),
+            "spec {} vs ar {}",
+            sp.metrics.mean_latency(),
+            ar.metrics.mean_latency()
+        );
+    }
+
+    #[test]
+    fn dsde_policy_runs_and_calibrates() {
+        let mut e = sim_engine(
+            SlPolicyKind::Dsde(crate::spec::adapter::DsdeConfig::default()),
+            true,
+        );
+        submit_n(&mut e, 3, 48);
+        let done = e.run_to_completion();
+        assert_eq!(done.len(), 3);
+        assert!(e.metrics.block_efficiency() > 1.0);
+    }
+
+    #[test]
+    fn adaedl_policy_runs() {
+        let mut e = sim_engine(
+            SlPolicyKind::AdaEdl(crate::spec::adapter::AdaEdlConfig::default()),
+            true,
+        );
+        submit_n(&mut e, 3, 32);
+        assert_eq!(e.run_to_completion().len(), 3);
+    }
+
+    #[test]
+    fn block_efficiency_reasonable_for_high_acceptance() {
+        let mut e = sim_engine(SlPolicyKind::Static(8), true);
+        submit_n(&mut e, 4, 96);
+        e.run_to_completion();
+        let be = e.metrics.block_efficiency();
+        assert!(be > 2.0 && be < 7.0, "BE {be}");
+    }
+
+    #[test]
+    fn kv_pressure_causes_preemption_but_everything_finishes() {
+        let cfg = EngineConfig {
+            max_batch: 8,
+            max_len: 512,
+            kv_blocks: 24, // tight: 24*16 = 384 token slots for 8 seqs
+            speculative: true,
+            policy: SlPolicyKind::Static(6),
+            seed: 3,
+            ..Default::default()
+        };
+        let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), 3)
+            .with_max_len(512);
+        let mut e = Engine::new(cfg, Box::new(model));
+        submit_n(&mut e, 8, 48);
+        let done = e.run_to_completion();
+        assert_eq!(done.len(), 8);
+        let preempted: usize = done.iter().map(|r| r.preemptions).sum();
+        assert!(preempted > 0, "expected KV preemptions under pressure");
+    }
+
+    #[test]
+    fn max_tokens_never_exceeded() {
+        let mut e = sim_engine(SlPolicyKind::Static(8), true);
+        submit_n(&mut e, 5, 10);
+        let done = e.run_to_completion();
+        for r in &done {
+            assert!(r.output.len() <= 10);
+        }
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let mut e = sim_engine(SlPolicyKind::Static(4), true);
+        submit_n(&mut e, 1, 16);
+        e.run_to_completion();
+        assert!(e.now() > 0.0);
+        assert!(e.metrics.busy_time > 0.0);
+    }
+
+    #[test]
+    fn straggler_bubble_tracked_without_cap() {
+        let cfg = EngineConfig {
+            max_batch: 8,
+            max_len: 512,
+            speculative: true,
+            policy: SlPolicyKind::Dsde(Default::default()),
+            cap_mode: crate::config::CapMode::None,
+            seed: 11,
+            ..Default::default()
+        };
+        let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::sharegpt(), 11)
+            .with_max_len(512);
+        let mut e = Engine::new(cfg, Box::new(model));
+        submit_n(&mut e, 8, 64);
+        e.run_to_completion();
+        assert!(e.metrics.straggler_bubble > 0);
+    }
+
+    #[test]
+    fn abort_drains_everything() {
+        let mut e = sim_engine(SlPolicyKind::Static(4), true);
+        submit_n(&mut e, 4, 1000);
+        e.step().unwrap();
+        e.abort_all();
+        assert_eq!(e.pending(), 0);
+        let done = e.take_finished();
+        assert_eq!(done.len(), 4);
+        assert!(done.iter().any(|r| r.reason == FinishReason::Aborted));
+    }
+}

@@ -1,0 +1,224 @@
+//! Paged KV-block manager (vLLM's PagedAttention block tables, §3 of the
+//! paper: "the SL Adapter ... modifies the Look-ahead Scheduler to perform
+//! pre-mapping and reallocation of KV memory blocks").
+//!
+//! Blocks are fixed-size token pages.  The scheduler *pre-maps* look-ahead
+//! slots for the speculative tokens of the next round (`ctx + SL_i + 1`
+//! incl. the bonus slot) before launching it; rejected-token slots are
+//! reclaimed lazily when the sequence's real length is appended.  On
+//! allocation failure the engine preempts (frees a victim's blocks and
+//! requeues it).
+
+use std::collections::HashMap;
+
+/// Allocation failure: not enough free blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Oom {
+    pub requested: usize,
+    pub free: usize,
+}
+
+/// Paged KV manager.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    block_size: usize,
+    total_blocks: usize,
+    free: Vec<u32>,
+    /// seq id -> block table (ordered)
+    tables: HashMap<u64, Vec<u32>>,
+}
+
+impl KvCache {
+    pub fn new(total_blocks: usize, block_size: usize) -> KvCache {
+        assert!(block_size > 0 && total_blocks > 0);
+        KvCache {
+            block_size,
+            total_blocks,
+            free: (0..total_blocks as u32).rev().collect(),
+            tables: HashMap::new(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Current block table of a sequence (empty slice if unknown).
+    pub fn table(&self, id: u64) -> &[u32] {
+        self.tables.get(&id).map(|t| t.as_slice()).unwrap_or(&[])
+    }
+
+    /// Ensure the sequence can hold `tokens` tokens (pre-mapping).  Grows
+    /// the block table as needed; never shrinks (see [`KvCache::trim`]).
+    pub fn ensure(&mut self, id: u64, tokens: usize) -> Result<(), Oom> {
+        let need = self.blocks_for(tokens);
+        let have = self.tables.get(&id).map(|t| t.len()).unwrap_or(0);
+        if need <= have {
+            return Ok(());
+        }
+        let grow = need - have;
+        if grow > self.free.len() {
+            return Err(Oom {
+                requested: grow,
+                free: self.free.len(),
+            });
+        }
+        let table = self.tables.entry(id).or_default();
+        for _ in 0..grow {
+            table.push(self.free.pop().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Reallocation after verification: shrink the table to the sequence's
+    /// real token count, returning over-mapped look-ahead blocks (the
+    /// "ragged KV" reclaim — rejected speculative slots).
+    pub fn trim(&mut self, id: u64, tokens: usize) {
+        let need = self.blocks_for(tokens);
+        if let Some(table) = self.tables.get_mut(&id) {
+            while table.len() > need {
+                self.free.push(table.pop().unwrap());
+            }
+        }
+    }
+
+    /// Release all blocks of a sequence (finish / preemption).
+    pub fn release(&mut self, id: u64) {
+        if let Some(table) = self.tables.remove(&id) {
+            self.free.extend(table);
+        }
+    }
+
+    /// Internal invariant: every block is either free or in exactly one
+    /// table.  Exposed for tests/debug assertions.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.total_blocks];
+        for &b in &self.free {
+            let b = b as usize;
+            if b >= self.total_blocks {
+                return Err(format!("free block {b} out of range"));
+            }
+            if seen[b] {
+                return Err(format!("block {b} double-listed"));
+            }
+            seen[b] = true;
+        }
+        for (id, table) in &self.tables {
+            for &b in table {
+                let b = b as usize;
+                if b >= self.total_blocks {
+                    return Err(format!("seq {id} block {b} out of range"));
+                }
+                if seen[b] {
+                    return Err(format!("block {b} in seq {id} double-allocated"));
+                }
+                seen[b] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked block (neither free nor allocated)".to_string());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, forall};
+
+    #[test]
+    fn ensure_allocates_and_is_idempotent() {
+        let mut kv = KvCache::new(10, 16);
+        kv.ensure(1, 20).unwrap(); // 2 blocks
+        assert_eq!(kv.table(1).len(), 2);
+        assert_eq!(kv.free_blocks(), 8);
+        kv.ensure(1, 20).unwrap(); // no-op
+        assert_eq!(kv.free_blocks(), 8);
+        kv.ensure(1, 33).unwrap(); // 3 blocks
+        assert_eq!(kv.table(1).len(), 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oom_reported_and_state_unchanged() {
+        let mut kv = KvCache::new(2, 16);
+        kv.ensure(1, 32).unwrap();
+        let err = kv.ensure(2, 16).unwrap_err();
+        assert_eq!(err, Oom { requested: 1, free: 0 });
+        assert_eq!(kv.table(2).len(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn trim_reclaims_lookahead() {
+        let mut kv = KvCache::new(8, 4);
+        kv.ensure(7, 20).unwrap(); // 5 blocks pre-mapped (ctx+SL)
+        assert_eq!(kv.used_blocks(), 5);
+        kv.trim(7, 9); // only 9 tokens materialized -> 3 blocks
+        assert_eq!(kv.used_blocks(), 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_returns_everything() {
+        let mut kv = KvCache::new(4, 8);
+        kv.ensure(1, 30).unwrap();
+        kv.release(1);
+        assert_eq!(kv.free_blocks(), 4);
+        assert_eq!(kv.table(1).len(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let kv = KvCache::new(4, 16);
+        assert_eq!(kv.blocks_for(0), 0);
+        assert_eq!(kv.blocks_for(1), 1);
+        assert_eq!(kv.blocks_for(16), 1);
+        assert_eq!(kv.blocks_for(17), 2);
+    }
+
+    /// Property: under random ensure/trim/release traffic, no block ever
+    /// leaks or double-allocates, and capacity accounting stays exact.
+    #[test]
+    fn accounting_never_leaks_property() {
+        forall(
+            51,
+            60,
+            |r| {
+                // generate a random op trace
+                let ops: Vec<(u8, u64, usize)> = (0..r.range(5, 80))
+                    .map(|_| (r.range(0, 3) as u8, r.range(0, 6) as u64, r.range(0, 200)))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut kv = KvCache::new(32, 16);
+                for &(op, id, tokens) in ops {
+                    match op {
+                        0 => {
+                            let _ = kv.ensure(id, tokens);
+                        }
+                        1 => kv.trim(id, tokens),
+                        _ => kv.release(id),
+                    }
+                    kv.check_invariants()?;
+                }
+                check(true, "")
+            },
+        );
+    }
+}

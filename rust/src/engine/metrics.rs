@@ -1,0 +1,177 @@
+//! Engine + per-request metrics: end-to-end latency, block efficiency
+//! (tokens emitted per target invocation — the paper's BE), goodput,
+//! throughput, straggler accounting, and signal traces for the analysis
+//! benches.
+
+use crate::util::json::Json;
+use crate::util::stats::{mean, percentile, Welford};
+
+/// Summary of one finished request (denormalized for dump/analysis).
+#[derive(Clone, Debug)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub latency: f64,
+    pub ttft: f64,
+    pub output_tokens: usize,
+    pub rounds: usize,
+    pub drafted: u64,
+    pub accepted: u64,
+    pub preemptions: usize,
+}
+
+/// Rolling engine-level metrics.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    /// engine steps executed
+    pub steps: u64,
+    /// speculative rounds (target verify invocations)
+    pub verify_rounds: u64,
+    /// autoregressive rounds
+    pub ar_rounds: u64,
+    /// sum over rounds of scheduled batch size (per-sequence target
+    /// invocations — the BE denominator)
+    pub seq_rounds: u64,
+    /// tokens emitted across all sequences
+    pub tokens_out: u64,
+    /// draft tokens proposed / accepted
+    pub drafted: u64,
+    pub accepted: u64,
+    /// sum over rounds of (max SL in round - per-seq SL), the straggler
+    /// bubble: idle draft slots induced by batch synchronization
+    pub straggler_bubble: u64,
+    /// wall/virtual time spent in rounds
+    pub busy_time: f64,
+    /// current clock (set by the engine)
+    pub now: f64,
+    /// per-step scheduled batch size
+    pub batch_hist: Welford,
+    /// per-step granted max SL
+    pub sl_hist: Welford,
+    /// finished-request summaries
+    pub requests: Vec<RequestMetrics>,
+}
+
+impl EngineMetrics {
+    /// Block efficiency: mean tokens emitted per sequence per target
+    /// invocation — the paper's BE metric (Table 1).
+    pub fn block_efficiency(&self) -> f64 {
+        if self.seq_rounds == 0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.seq_rounds as f64
+        }
+    }
+
+    /// Draft-token acceptance rate.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Tokens per second over the busy window.
+    pub fn throughput(&self) -> f64 {
+        if self.busy_time <= 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.busy_time
+        }
+    }
+
+    /// Mean end-to-end request latency (the paper's primary metric).
+    pub fn mean_latency(&self) -> f64 {
+        mean(&self.requests.iter().map(|r| r.latency).collect::<Vec<_>>())
+    }
+
+    pub fn p99_latency(&self) -> f64 {
+        percentile(
+            &self.requests.iter().map(|r| r.latency).collect::<Vec<_>>(),
+            0.99,
+        )
+    }
+
+    /// Goodput: completed output tokens per second of busy time.
+    pub fn goodput(&self) -> f64 {
+        if self.busy_time <= 0.0 {
+            return 0.0;
+        }
+        let done: u64 = self.requests.iter().map(|r| r.output_tokens as u64).sum();
+        done as f64 / self.busy_time
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("steps", self.steps)
+            .set("verify_rounds", self.verify_rounds)
+            .set("ar_rounds", self.ar_rounds)
+            .set("tokens_out", self.tokens_out)
+            .set("drafted", self.drafted)
+            .set("accepted", self.accepted)
+            .set("acceptance_rate", self.acceptance_rate())
+            .set("block_efficiency", self.block_efficiency())
+            .set("throughput", self.throughput())
+            .set("goodput", self.goodput())
+            .set("mean_latency", self.mean_latency())
+            .set("p99_latency", self.p99_latency())
+            .set("straggler_bubble", self.straggler_bubble)
+            .set("busy_time", self.busy_time)
+            .set("requests", self.requests.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(lat: f64, toks: usize) -> RequestMetrics {
+        RequestMetrics {
+            id: 0,
+            latency: lat,
+            ttft: lat * 0.1,
+            output_tokens: toks,
+            rounds: 10,
+            drafted: 30,
+            accepted: 20,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn block_efficiency_math() {
+        let mut m = EngineMetrics::default();
+        m.verify_rounds = 10;
+        m.seq_rounds = 10;
+        m.tokens_out = 38;
+        assert!((m.block_efficiency() - 3.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_safe() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.block_efficiency(), 0.0);
+        assert_eq!(m.acceptance_rate(), 0.0);
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.mean_latency(), 0.0);
+        assert_eq!(m.goodput(), 0.0);
+    }
+
+    #[test]
+    fn latency_aggregation() {
+        let mut m = EngineMetrics::default();
+        m.requests.push(req(2.0, 10));
+        m.requests.push(req(4.0, 30));
+        assert!((m.mean_latency() - 3.0).abs() < 1e-12);
+        m.busy_time = 10.0;
+        assert!((m.goodput() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_contains_core_fields() {
+        let m = EngineMetrics::default();
+        let s = m.to_json().to_string();
+        assert!(s.contains("block_efficiency"));
+        assert!(s.contains("straggler_bubble"));
+    }
+}

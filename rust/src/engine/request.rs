@@ -1,0 +1,237 @@
+//! Requests, sampling parameters, and per-sequence engine state.
+
+use crate::model::vocab;
+use crate::spec::history::SeqSignals;
+
+/// Per-request sampling parameters (per-sequence, as the paper's future-work
+/// section motivates — each request can carry its own temperature).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    pub temperature: f64,
+    /// stop generation after this many new tokens
+    pub max_tokens: usize,
+    /// optional stop token (e.g. b'\0'); None = run to max_tokens
+    pub stop_token: Option<u32>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            max_tokens: 64,
+            stop_token: None,
+        }
+    }
+}
+
+/// An inference request submitted to the engine.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub params: SamplingParams,
+    /// submission time on the engine clock (set by the engine at submit)
+    pub arrival: f64,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, params: SamplingParams) -> Request {
+        Request {
+            id,
+            prompt,
+            params,
+            arrival: 0.0,
+        }
+    }
+
+    /// Convenience: byte-encode a text prompt.
+    pub fn text(id: u64, prompt: &str, max_tokens: usize) -> Request {
+        Request::new(
+            id,
+            vocab::encode(prompt),
+            SamplingParams {
+                max_tokens,
+                ..Default::default()
+            },
+        )
+    }
+
+    pub fn with_temperature(mut self, t: f64) -> Request {
+        self.params.temperature = t;
+        self
+    }
+}
+
+/// Why a sequence finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopToken,
+    ContextFull,
+    Aborted,
+}
+
+/// Live per-sequence engine state.
+#[derive(Clone, Debug)]
+pub struct SeqState {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// prompt + generated tokens
+    pub tokens: Vec<u32>,
+    pub params: SamplingParams,
+    pub signals: SeqSignals,
+    pub arrival: f64,
+    pub first_token_at: Option<f64>,
+    /// engine steps this sequence participated in
+    pub rounds: usize,
+    /// number of times preempted (KV pressure)
+    pub preemptions: usize,
+}
+
+impl SeqState {
+    pub fn from_request(req: Request) -> SeqState {
+        let prompt_len = req.prompt.len();
+        SeqState {
+            id: req.id,
+            prompt_len,
+            tokens: req.prompt,
+            params: req.params,
+            signals: SeqSignals::default(),
+            arrival: req.arrival,
+            first_token_at: None,
+            rounds: 0,
+            preemptions: 0,
+        }
+    }
+
+    pub fn generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    pub fn generated_tokens(&self) -> &[u32] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    pub fn output_text(&self) -> String {
+        vocab::decode(self.generated_tokens())
+    }
+
+    /// Remaining output budget.
+    pub fn remaining(&self) -> usize {
+        self.params.max_tokens.saturating_sub(self.generated())
+    }
+
+    pub fn is_done(&self, max_len: usize) -> Option<FinishReason> {
+        if self.generated() >= self.params.max_tokens {
+            return Some(FinishReason::MaxTokens);
+        }
+        if let Some(stop) = self.params.stop_token {
+            if self.generated_tokens().contains(&stop) {
+                return Some(FinishReason::StopToken);
+            }
+        }
+        if self.tokens.len() >= max_len.saturating_sub(1) {
+            return Some(FinishReason::ContextFull);
+        }
+        None
+    }
+}
+
+/// A finished request as returned to callers.
+#[derive(Clone, Debug)]
+pub struct FinishedRequest {
+    pub id: u64,
+    pub output: Vec<u32>,
+    pub reason: FinishReason,
+    pub arrival: f64,
+    pub finished_at: f64,
+    pub first_token_at: f64,
+    pub rounds: usize,
+    pub drafted: u64,
+    pub accepted: u64,
+    pub preemptions: usize,
+}
+
+impl FinishedRequest {
+    pub fn latency(&self) -> f64 {
+        self.finished_at - self.arrival
+    }
+
+    pub fn ttft(&self) -> f64 {
+        self.first_token_at - self.arrival
+    }
+
+    pub fn output_text(&self) -> String {
+        vocab::decode(&self.output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_request_encodes_prompt() {
+        let r = Request::text(1, "ab", 8);
+        assert_eq!(r.prompt, vec![97, 98]);
+        assert_eq!(r.params.max_tokens, 8);
+    }
+
+    #[test]
+    fn seqstate_counts_generated() {
+        let mut s = SeqState::from_request(Request::text(1, "abc", 4));
+        assert_eq!(s.generated(), 0);
+        s.tokens.push(120);
+        s.tokens.push(121);
+        assert_eq!(s.generated(), 2);
+        assert_eq!(s.output_text(), "xy");
+        assert_eq!(s.remaining(), 2);
+    }
+
+    #[test]
+    fn finish_on_max_tokens() {
+        let mut s = SeqState::from_request(Request::text(1, "a", 2));
+        assert!(s.is_done(100).is_none());
+        s.tokens.push(65);
+        s.tokens.push(66);
+        assert_eq!(s.is_done(100), Some(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn finish_on_stop_token() {
+        let mut req = Request::text(1, "a", 100);
+        req.params.stop_token = Some(10);
+        let mut s = SeqState::from_request(req);
+        s.tokens.push(65);
+        assert!(s.is_done(100).is_none());
+        s.tokens.push(10);
+        assert_eq!(s.is_done(100), Some(FinishReason::StopToken));
+    }
+
+    #[test]
+    fn finish_on_context_full() {
+        let mut s = SeqState::from_request(Request::text(1, "abcd", 100));
+        s.tokens.extend([65; 4]);
+        assert_eq!(s.is_done(9), Some(FinishReason::ContextFull));
+        assert!(s.is_done(100).is_none());
+    }
+
+    #[test]
+    fn finished_latency_math() {
+        let f = FinishedRequest {
+            id: 1,
+            output: vec![104, 105],
+            reason: FinishReason::MaxTokens,
+            arrival: 2.0,
+            finished_at: 5.5,
+            first_token_at: 2.5,
+            rounds: 3,
+            drafted: 10,
+            accepted: 7,
+            preemptions: 0,
+        };
+        assert!((f.latency() - 3.5).abs() < 1e-12);
+        assert!((f.ttft() - 0.5).abs() < 1e-12);
+        assert_eq!(f.output_text(), "hi");
+    }
+}

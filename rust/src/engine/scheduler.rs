@@ -1,0 +1,200 @@
+//! Continuous-batching scheduler with per-sequence look-ahead slots.
+//!
+//! Paper §3.2: "Scheduling uses a dedicated routine that computes lookahead
+//! slots directly from SL_i^{(t)} and is applied uniformly to prefill,
+//! decode, and chunked prefill."  Here that routine is
+//! [`Scheduler::lookahead_tokens`]: the number of KV slots a sequence needs
+//! for the next round is its current length + its granted SL + 1 (bonus).
+//! Admission is FCFS; on KV pressure the most-recently admitted running
+//! sequence is preempted (vLLM's recompute-preemption policy).
+
+use std::collections::VecDeque;
+
+use super::kv_cache::KvCache;
+use super::request::SeqState;
+
+/// Scheduling decision for one step.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleOutcome {
+    /// indices (into the running list) scheduled this step
+    pub scheduled: Vec<usize>,
+    /// sequences preempted back to the waiting queue this step (ids)
+    pub preempted: Vec<u64>,
+    /// number of admissions performed this step
+    pub admitted: usize,
+}
+
+/// FCFS continuous-batching scheduler.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    pub max_batch: usize,
+}
+
+impl Scheduler {
+    pub fn new(max_batch: usize) -> Scheduler {
+        Scheduler { max_batch }
+    }
+
+    /// KV slots a sequence needs for the next round under granted SL `sl`
+    /// (pre-mapping: context + speculative tokens + bonus).
+    pub fn lookahead_tokens(seq_len: usize, sl: usize) -> usize {
+        seq_len + sl + 1
+    }
+
+    /// Admit from `waiting` into `running` while the batch has room and the
+    /// KV manager can hold each prompt + one look-ahead slot.
+    pub fn admit(
+        &self,
+        waiting: &mut VecDeque<SeqState>,
+        running: &mut Vec<SeqState>,
+        kv: &mut KvCache,
+    ) -> usize {
+        let mut admitted = 0;
+        while running.len() < self.max_batch {
+            let Some(seq) = waiting.front() else { break };
+            let need = Self::lookahead_tokens(seq.tokens.len(), 1);
+            if kv.ensure(seq.id, need).is_err() {
+                break; // FCFS head-of-line: don't skip ahead
+            }
+            running.push(waiting.pop_front().unwrap());
+            admitted += 1;
+        }
+        admitted
+    }
+
+    /// Pre-map look-ahead slots for the granted SLs; preempts victims (from
+    /// the tail = most recently admitted) until the batch fits.  Returns the
+    /// outcome; `sls` is shortened in lock-step when sequences are dropped.
+    pub fn reserve_lookahead(
+        &self,
+        running: &mut Vec<SeqState>,
+        sls: &mut Vec<usize>,
+        kv: &mut KvCache,
+        waiting: &mut VecDeque<SeqState>,
+    ) -> ScheduleOutcome {
+        assert_eq!(running.len(), sls.len());
+        let mut out = ScheduleOutcome::default();
+        let mut i = 0;
+        while i < running.len() {
+            let need = Self::lookahead_tokens(running[i].tokens.len(), sls[i]);
+            match kv.ensure(running[i].id, need) {
+                Ok(()) => i += 1,
+                Err(_) => {
+                    // preempt the most recently admitted (tail) — unless the
+                    // tail is the victim-less case (single sequence): then
+                    // degrade its SL to the minimum and retry once.
+                    if running.len() == 1 {
+                        if sls[0] > 1 {
+                            sls[0] = 1;
+                            continue;
+                        }
+                        break; // cannot even hold one sequence: caller's OOM
+                    }
+                    let victim_idx = running.len() - 1;
+                    let mut victim = running.remove(victim_idx);
+                    sls.remove(victim_idx);
+                    kv.release(victim.id);
+                    victim.preemptions += 1;
+                    out.preempted.push(victim.id);
+                    waiting.push_front(victim);
+                    if victim_idx == i {
+                        continue;
+                    }
+                }
+            }
+        }
+        out.scheduled = (0..running.len()).collect();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::Request;
+
+    fn seq(id: u64, prompt_len: usize) -> SeqState {
+        SeqState::from_request(Request::new(
+            id,
+            vec![65; prompt_len],
+            Default::default(),
+        ))
+    }
+
+    #[test]
+    fn lookahead_includes_bonus() {
+        assert_eq!(Scheduler::lookahead_tokens(10, 4), 15);
+        assert_eq!(Scheduler::lookahead_tokens(0, 0), 1);
+    }
+
+    #[test]
+    fn admits_up_to_batch() {
+        let s = Scheduler::new(2);
+        let mut waiting: VecDeque<_> = (0..4).map(|i| seq(i, 8)).collect();
+        let mut running = Vec::new();
+        let mut kv = KvCache::new(64, 16);
+        let n = s.admit(&mut waiting, &mut running, &mut kv);
+        assert_eq!(n, 2);
+        assert_eq!(running.len(), 2);
+        assert_eq!(waiting.len(), 2);
+    }
+
+    #[test]
+    fn admission_blocked_by_kv() {
+        let s = Scheduler::new(8);
+        let mut waiting: VecDeque<_> = (0..4).map(|i| seq(i, 64)).collect();
+        let mut running = Vec::new();
+        let mut kv = KvCache::new(5, 16); // 5 blocks = 80 tokens capacity
+        s.admit(&mut waiting, &mut running, &mut kv);
+        assert_eq!(running.len(), 1); // 64+1 tokens -> 5 blocks, second won't fit
+        assert_eq!(waiting.len(), 3);
+    }
+
+    #[test]
+    fn reserve_grows_tables() {
+        let s = Scheduler::new(4);
+        let mut running = vec![seq(1, 10), seq(2, 10)];
+        let mut sls = vec![4usize, 8usize];
+        let mut kv = KvCache::new(64, 4);
+        let mut waiting = VecDeque::new();
+        let out = s.reserve_lookahead(&mut running, &mut sls, &mut kv, &mut waiting);
+        assert!(out.preempted.is_empty());
+        // seq 1 needs 10+4+1=15 tokens -> 4 blocks; seq 2 needs 19 -> 5
+        assert_eq!(kv.table(1).len(), 4);
+        assert_eq!(kv.table(2).len(), 5);
+    }
+
+    #[test]
+    fn preempts_tail_under_pressure() {
+        let s = Scheduler::new(4);
+        let mut running = vec![seq(1, 40), seq(2, 40), seq(3, 40)];
+        let mut sls = vec![4usize, 4, 4];
+        // block_size 8: ctx 40 -> 5 blocks each (15 total fits in 16);
+        // look-ahead 45 -> 6 blocks each (18 total does not)
+        let mut kv = KvCache::new(16, 8);
+        for sq in &running {
+            kv.ensure(sq.id, sq.tokens.len()).unwrap();
+        }
+        let mut waiting = VecDeque::new();
+        let out = s.reserve_lookahead(&mut running, &mut sls, &mut kv, &mut waiting);
+        assert_eq!(out.preempted, vec![3]);
+        assert_eq!(running.len(), 2);
+        assert_eq!(sls.len(), 2);
+        assert_eq!(waiting.front().unwrap().id, 3);
+        assert_eq!(waiting.front().unwrap().preemptions, 1);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn single_sequence_degrades_sl_instead_of_preempting() {
+        let s = Scheduler::new(4);
+        let mut running = vec![seq(1, 60)];
+        let mut sls = vec![12usize];
+        let mut kv = KvCache::new(4, 16); // 64 tokens: 60+12+1 won't fit
+        let mut waiting = VecDeque::new();
+        let out = s.reserve_lookahead(&mut running, &mut sls, &mut kv, &mut waiting);
+        assert!(out.preempted.is_empty());
+        assert_eq!(sls[0], 1); // degraded, 60+1+1=62 fits in 64
+        assert_eq!(running.len(), 1);
+    }
+}

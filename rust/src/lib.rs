@@ -1,0 +1,40 @@
+//! # DSDE — Dynamic Speculative Decoding with KLD Stability
+//!
+//! A from-scratch reproduction of *DSDE: Dynamic Speculative Decoding with
+//! KLD Stability for Real-World Serving* (Yang et al., 2025) as a
+//! three-layer Rust + JAX + Pallas serving stack.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * **L3 (this crate)** — a vLLM-like speculative-decoding engine:
+//!   continuous batching, paged KV management, draft/target workers, exact
+//!   rejection sampling, and the paper's contribution — the [`spec::adapter`]
+//!   SL-Adapter (KLD-variance / WVIR signal) plus the adaptive
+//!   [`spec::cap`] SL-cap for the straggler problem.
+//! * **L2/L1 (build-time python)** — a tiny transformer pair with Pallas
+//!   kernels, AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! binaries in this crate are self-contained.
+
+pub mod config;
+pub mod repro;
+pub mod engine;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod spec;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::config::{AdapterConfig, CapMode, EngineConfig, SlPolicyKind};
+    pub use crate::engine::engine::Engine;
+    pub use crate::engine::metrics::{EngineMetrics, RequestMetrics};
+    pub use crate::engine::request::{Request, SamplingParams};
+    pub use crate::model::sim_lm::{SimModel, SimPairKind};
+    pub use crate::model::traits::SpecModel;
+    pub use crate::sim::regime::DatasetProfile;
+    pub use crate::workload::{Dataset, WorkloadGen};
+}

@@ -1,0 +1,216 @@
+//! `dsde` — the leader binary.
+//!
+//! Subcommands:
+//! * `serve`      — HTTP completions server over the real PJRT model pair.
+//! * `serve-sim`  — same server over the calibrated simulator.
+//! * `run`        — run a dataset workload offline and print metrics.
+//! * `calibrate`  — measure real PJRT step costs (feeds the sim cost model).
+//! * `info`       — print artifact manifest + config summary.
+
+use anyhow::Result;
+
+use dsde::config::{CapMode, EngineConfig, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::model::pjrt_lm::PjrtModel;
+use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::model::traits::{SeqInput, SpecModel};
+use dsde::runtime::artifacts::{DraftKind, Manifest};
+use dsde::server::http::serve;
+use dsde::sim::regime::DatasetProfile;
+use dsde::util::cli::{usage, Args, FlagSpec};
+use dsde::util::json::Json;
+use dsde::workload::{Dataset, WorkloadGen};
+
+const FLAGS: &[FlagSpec] = &[
+    FlagSpec { name: "artifacts", help: "artifact directory", default: Some("artifacts") },
+    FlagSpec { name: "addr", help: "listen address (serve)", default: Some("127.0.0.1:8080") },
+    FlagSpec { name: "policy", help: "static:<k> | dsde | adaedl:<base>", default: Some("dsde") },
+    FlagSpec { name: "cap", help: "none | mean | median | p90", default: Some("mean") },
+    FlagSpec { name: "batch", help: "max batch size", default: Some("8") },
+    FlagSpec { name: "dataset", help: "cnndm|xsum|gsm8k|hotpotqa|nq|humaneval|sharegpt|wmt14", default: Some("cnndm") },
+    FlagSpec { name: "requests", help: "number of requests (run)", default: Some("32") },
+    FlagSpec { name: "temperature", help: "sampling temperature", default: Some("0.0") },
+    FlagSpec { name: "pair", help: "llama | gemma (sim pair)", default: Some("llama") },
+    FlagSpec { name: "draft", help: "good | weak (pjrt draft weights)", default: Some("good") },
+    FlagSpec { name: "seed", help: "rng seed", default: Some("0") },
+    FlagSpec { name: "ar", help: "autoregressive baseline (flag)", default: None },
+    FlagSpec { name: "json", help: "emit metrics as JSON (flag)", default: None },
+];
+
+fn main() {
+    dsde::util::logging::init();
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run_cmd(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let policy = SlPolicyKind::parse(&args.str_or("policy", "dsde"))
+        .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
+    let cap_mode = CapMode::parse(&args.str_or("cap", "mean"))
+        .ok_or_else(|| anyhow::anyhow!("unknown cap mode"))?;
+    Ok(EngineConfig {
+        max_batch: args.usize_or("batch", 8),
+        speculative: !args.flag("ar"),
+        policy,
+        cap_mode,
+        temperature: args.f64_or("temperature", 0.0),
+        seed: args.u64_or("seed", 0),
+        ..Default::default()
+    })
+}
+
+fn pjrt_model(args: &Args) -> Result<PjrtModel> {
+    let draft = match args.str_or("draft", "good").as_str() {
+        "weak" => DraftKind::Weak,
+        _ => DraftKind::Good,
+    };
+    PjrtModel::new(args.str_or("artifacts", "artifacts"), draft, args.u64_or("seed", 0))
+}
+
+fn sim_model(args: &Args) -> Result<SimModel> {
+    let pair = match args.str_or("pair", "llama").as_str() {
+        "gemma" => SimPairKind::GemmaLike,
+        _ => SimPairKind::LlamaLike,
+    };
+    let profile = DatasetProfile::by_name(&args.str_or("dataset", "cnndm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    Ok(SimModel::new(pair, profile, args.u64_or("seed", 0)))
+}
+
+fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "serve" => {
+            let model = pjrt_model(args)?;
+            let mut cfg = engine_config(args)?;
+            cfg.max_len = model.max_len();
+            cfg.spec_k = cfg.spec_k.min(model.spec_k());
+            let handle = serve(Engine::new(cfg, Box::new(model)), &args.str_or("addr", "127.0.0.1:8080"))?;
+            println!("dsde serving (pjrt) on http://{}", handle.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "serve-sim" => {
+            let model = sim_model(args)?;
+            let cfg = engine_config(args)?;
+            let handle = serve(Engine::new(cfg, Box::new(model)), &args.str_or("addr", "127.0.0.1:8080"))?;
+            println!("dsde serving (sim) on http://{}", handle.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "run" => {
+            let n = args.usize_or("requests", 32);
+            let temp = args.f64_or("temperature", 0.0);
+            let seed = args.u64_or("seed", 0);
+            let dataset = Dataset::by_name(&args.str_or("dataset", "cnndm"))
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+            let pjrt = args.flag("pjrt");
+            let mut cfg = engine_config(args)?;
+            let model: Box<dyn SpecModel> = if pjrt {
+                let m = pjrt_model(args)?;
+                cfg.max_len = m.max_len();
+                cfg.spec_k = cfg.spec_k.min(m.spec_k());
+                Box::new(m)
+            } else {
+                cfg.max_len = 4096;
+                Box::new(sim_model(args)?)
+            };
+            let mut gen = WorkloadGen::new(dataset, seed).with_temperature(temp);
+            if pjrt {
+                gen = gen.with_limits(64, 80);
+            }
+            let mut engine = Engine::new(cfg, model);
+            for req in gen.batch(n) {
+                engine.submit(req);
+            }
+            let done = engine.run_to_completion();
+            if args.flag("json") {
+                println!("{}", engine.metrics.to_json());
+            } else {
+                println!(
+                    "{} requests  policy={}  mean latency {:.3}s  BE {:.2}  \
+                     acceptance {:.3}  throughput {:.1} tok/s",
+                    done.len(),
+                    engine.policy_name(),
+                    engine.metrics.mean_latency(),
+                    engine.metrics.block_efficiency(),
+                    engine.metrics.acceptance_rate(),
+                    engine.metrics.throughput(),
+                );
+            }
+            Ok(())
+        }
+        "calibrate" => calibrate(args),
+        "info" => {
+            let m = Manifest::load(args.str_or("artifacts", "artifacts"))?;
+            println!(
+                "{}",
+                Json::obj()
+                    .set("vocab", m.vocab)
+                    .set("max_len", m.max_len)
+                    .set("spec_k", m.spec_k)
+                    .set("buckets", m.buckets.clone())
+                    .set("target_n_params", m.target_n_params)
+                    .set("draft_n_params", m.draft_n_params)
+            );
+            Ok(())
+        }
+        _ => {
+            println!(
+                "{}",
+                usage(
+                    "dsde",
+                    "DSDE dynamic speculative decoding engine\n\
+                     \nCommands: serve | serve-sim | run [--pjrt] | calibrate | info",
+                    FLAGS
+                )
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Measure real PJRT round costs (draft step / verify / AR) across buckets —
+/// the data the simulator's cost model can be re-fit against.
+fn calibrate(args: &Args) -> Result<()> {
+    let mut model = pjrt_model(args)?;
+    let max_len = model.max_len();
+    let reps = args.usize_or("requests", 5);
+    println!("bucket, draft_step_ms, verify_ms, ar_ms");
+    for &b in &[1usize, 4, 8, 16] {
+        let store: Vec<(u64, Vec<u32>)> = (0..b)
+            .map(|i| (i as u64, vec![100u32 + i as u32; 40.min(max_len - 20)]))
+            .collect();
+        let seqs: Vec<SeqInput<'_>> = store
+            .iter()
+            .map(|(id, t)| SeqInput { id: *id, tokens: t, temperature: 0.0 })
+            .collect();
+        let sls = vec![4usize; b];
+        // warmup (compile)
+        model.spec_round(&seqs, &sls, &|_, _, _, _| false)?;
+        model.ar_round(&seqs)?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            model.spec_round(&seqs, &sls, &|_, _, _, _| false)?;
+        }
+        let spec_ms = t0.elapsed().as_secs_f64() * 1000.0 / reps as f64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            model.ar_round(&seqs)?;
+        }
+        let ar_ms = t0.elapsed().as_secs_f64() * 1000.0 / reps as f64;
+        println!("{b}, {:.2}, {:.2}, {:.2}", spec_ms / 5.0, spec_ms, ar_ms);
+    }
+    let (pjrt_s, calls) = model.pjrt_stats();
+    println!("# total PJRT time {pjrt_s:.2}s over {calls} calls");
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Model abstraction: the engine speaks [`traits::SpecModel`]; two
+//! implementations exist —
+//! * [`pjrt_lm::PjrtModel`] — the real path: AOT-compiled HLO graphs
+//!   executed via PJRT (draft steps, batched ragged verify, exact
+//!   rejection sampling on real distributions);
+//! * [`sim_lm::SimModel`] — the calibrated discrete-event path used by the
+//!   paper-scale benchmark sweeps (acceptance-regime process + cost model).
+
+pub mod pjrt_lm;
+pub mod sim_lm;
+pub mod traits;
+pub mod vocab;

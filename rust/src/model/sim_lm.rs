@@ -1,0 +1,318 @@
+//! Simulated model path: drives the engine with the acceptance-regime
+//! process + latency cost model instead of real forwards.  Used by all
+//! paper-scale benchmark sweeps; the engine code above the
+//! [`SpecModel`] trait is byte-identical to the PJRT path.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::traits::{RoundOutcome, SeqInput, SpecModel, StopFn};
+use crate::sim::cost::CostModel;
+use crate::sim::regime::{DatasetProfile, RegimeProcess};
+use crate::util::rng::Rng;
+
+/// Which draft/target pair the simulator emulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimPairKind {
+    /// LLaMA-3.1-70B / LLaMA-3.2-1B — the paper's main (high-acceptance) pair.
+    LlamaLike,
+    /// Gemma-27B / Gemma-2B — the §4.4 high-divergence low-acceptance pair.
+    GemmaLike,
+}
+
+impl SimPairKind {
+    /// Acceptance scaling applied to the dataset profile's alphas.
+    pub fn alpha_scale(self) -> f64 {
+        match self {
+            SimPairKind::LlamaLike => 1.0,
+            // Gemma pair: k_opt collapses to ~2 on most datasets (§4.4)
+            SimPairKind::GemmaLike => 0.62,
+        }
+    }
+
+    /// Cost scaling: the Gemma target (27B) is cheaper per step than the
+    /// 70B LLaMA; latency ratios in Table 4 are normalized anyway, so we
+    /// keep the same cost model and let acceptance drive the divergence.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimPairKind::LlamaLike => "llama70b-1b",
+            SimPairKind::GemmaLike => "gemma27b-2b",
+        }
+    }
+}
+
+/// Simulated draft/target pair over a dataset profile.
+pub struct SimModel {
+    profile: DatasetProfile,
+    pair: SimPairKind,
+    cost: CostModel,
+    procs: HashMap<u64, RegimeProcess>,
+    rng: Rng,
+    max_len: usize,
+    spec_k: usize,
+    seed: u64,
+    /// accumulated virtual model time (for reporting)
+    pub virtual_seconds: f64,
+}
+
+impl SimModel {
+    pub fn new(pair: SimPairKind, profile: DatasetProfile, seed: u64) -> SimModel {
+        let profile = profile.with_divergence(pair.alpha_scale());
+        SimModel {
+            profile,
+            pair,
+            cost: CostModel::paper_a100(),
+            procs: HashMap::new(),
+            rng: Rng::new(seed ^ 0xD5DE),
+            max_len: 4096,
+            spec_k: 12,
+            seed,
+            virtual_seconds: 0.0,
+        }
+    }
+
+    pub fn with_cost(mut self, cost: CostModel) -> SimModel {
+        self.cost = cost;
+        self
+    }
+
+    pub fn with_max_len(mut self, max_len: usize) -> SimModel {
+        self.max_len = max_len;
+        self
+    }
+
+    pub fn with_spec_k(mut self, k: usize) -> SimModel {
+        self.spec_k = k;
+        self
+    }
+
+    pub fn profile(&self) -> &DatasetProfile {
+        &self.profile
+    }
+
+    fn proc_for(&mut self, id: u64) -> &mut RegimeProcess {
+        let profile = self.profile.clone();
+        let seed = self.seed;
+        self.procs
+            .entry(id)
+            .or_insert_with(|| RegimeProcess::new(profile, seed ^ id.wrapping_mul(0x9E37)))
+    }
+
+    /// Drop per-sequence state for finished requests (bounded memory).
+    pub fn forget(&mut self, id: u64) {
+        self.procs.remove(&id);
+    }
+
+    fn gen_token(rng: &mut Rng) -> u32 {
+        // printable ASCII filler — content is irrelevant to the simulator
+        32 + (rng.range(0, 95) as u32)
+    }
+}
+
+impl SpecModel for SimModel {
+    fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    fn spec_k(&self) -> usize {
+        self.spec_k
+    }
+
+    fn name(&self) -> String {
+        format!("sim:{}:{}", self.pair.name(), self.profile.name)
+    }
+
+    fn spec_round(
+        &mut self,
+        seqs: &[SeqInput<'_>],
+        sl: &[usize],
+        stop: &StopFn<'_>,
+    ) -> Result<RoundOutcome> {
+        let b = seqs.len();
+        let mut out = RoundOutcome::with_capacity(b);
+        let mut max_drafted = 0usize;
+        for (i, s) in seqs.iter().enumerate() {
+            let k_req = sl[i].min(self.spec_k);
+            let temperature = s.temperature;
+            let id = s.id;
+            self.proc_for(id).step_regime();
+            // draft k tokens (with early-stop), drawing signals per token
+            let mut klds = Vec::with_capacity(k_req);
+            let mut ents = Vec::with_capacity(k_req);
+            let mut accept_ps = Vec::with_capacity(k_req);
+            for j in 0..k_req {
+                let draw = self.proc_for(id).draw_token(temperature);
+                klds.push(draw.kld);
+                ents.push(draw.entropy);
+                accept_ps.push(draw.accept_p);
+                if stop(i, j, draw.entropy, draw.accept_p as f32) {
+                    break;
+                }
+            }
+            let k = accept_ps.len();
+            max_drafted = max_drafted.max(k);
+            // sequential acceptance
+            let mut accepted = 0usize;
+            for &a in &accept_ps {
+                if self.rng.chance(a) {
+                    accepted += 1;
+                } else {
+                    break;
+                }
+            }
+            let mut toks = Vec::with_capacity(accepted + 1);
+            for _ in 0..=accepted {
+                toks.push(Self::gen_token(&mut self.rng));
+            }
+            out.new_tokens.push(toks);
+            out.drafted.push(k);
+            out.accepted.push(accepted);
+            // post-hoc signals exist only for the verified (drafted) slots
+            klds.truncate(k);
+            ents.truncate(k);
+            out.klds.push(klds);
+            out.entropies.push(ents);
+        }
+        let cost = self.cost.spec_round(b, max_drafted);
+        self.virtual_seconds += cost;
+        out.sim_cost = Some(cost);
+        debug_assert!(out.validate(b).is_ok());
+        Ok(out)
+    }
+
+    fn ar_round(&mut self, seqs: &[SeqInput<'_>]) -> Result<RoundOutcome> {
+        let b = seqs.len();
+        let mut out = RoundOutcome::with_capacity(b);
+        for s in seqs {
+            self.proc_for(s.id).step_regime();
+            out.new_tokens.push(vec![Self::gen_token(&mut self.rng)]);
+            out.drafted.push(0);
+            out.accepted.push(0);
+            out.klds.push(Vec::new());
+            out.entropies.push(Vec::new());
+        }
+        let cost = self.cost.ar_round(b);
+        self.virtual_seconds += cost;
+        out.sim_cost = Some(cost);
+        Ok(out)
+    }
+
+    fn release(&mut self, id: u64) {
+        self.forget(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_inputs(n: usize) -> Vec<(u64, Vec<u32>)> {
+        (0..n).map(|i| (i as u64, vec![65u32; 10])).collect()
+    }
+
+    fn views(store: &[(u64, Vec<u32>)], temp: f64) -> Vec<SeqInput<'_>> {
+        store
+            .iter()
+            .map(|(id, t)| SeqInput {
+                id: *id,
+                tokens: t,
+                temperature: temp,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_outcome_is_valid() {
+        let mut m = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), 1);
+        let store = mk_inputs(4);
+        let seqs = views(&store, 0.0);
+        let out = m.spec_round(&seqs, &[4, 6, 2, 8], &|_, _, _, _| false).unwrap();
+        assert!(out.validate(4).is_ok());
+        assert!(out.sim_cost.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn acceptance_rate_reflects_pair() {
+        let trials = 300;
+        let run = |pair: SimPairKind| -> f64 {
+            let mut m = SimModel::new(pair, DatasetProfile::cnndm(), 2);
+            let store = mk_inputs(1);
+            let mut drafted = 0usize;
+            let mut accepted = 0usize;
+            for _ in 0..trials {
+                let seqs = views(&store, 0.0);
+                let out = m.spec_round(&seqs, &[6], &|_, _, _, _| false).unwrap();
+                drafted += out.drafted[0];
+                accepted += out.accepted[0];
+            }
+            accepted as f64 / drafted as f64
+        };
+        // note: the sequential accept-until-first-reject scheme makes the
+        // drafted-token acceptance *rate* lower than the per-token prob
+        let a_llama = run(SimPairKind::LlamaLike);
+        let a_gemma = run(SimPairKind::GemmaLike);
+        assert!(a_llama > 0.2, "llama-like acceptance {a_llama}");
+        assert!(a_gemma < a_llama - 0.08, "gemma {a_gemma} vs llama {a_llama}");
+    }
+
+    #[test]
+    fn early_stop_limits_draft() {
+        let mut m = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), 3);
+        let store = mk_inputs(1);
+        let seqs = views(&store, 0.0);
+        let out = m.spec_round(&seqs, &[10], &|_, j, _, _| j >= 2).unwrap();
+        assert_eq!(out.drafted[0], 3); // stopped after slot index 2
+    }
+
+    #[test]
+    fn ar_round_emits_one_token_each() {
+        let mut m = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::nq(), 4);
+        let store = mk_inputs(3);
+        let seqs = views(&store, 1.0);
+        let out = m.ar_round(&seqs).unwrap();
+        for t in &out.new_tokens {
+            assert_eq!(t.len(), 1);
+        }
+        assert!(out.sim_cost.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn cost_follows_max_k_straggler() {
+        let mut m = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), 5);
+        let store = mk_inputs(8);
+        let seqs = views(&store, 0.0);
+        let uniform = m.spec_round(&seqs, &[2; 8], &|_, _, _, _| false).unwrap();
+        let seqs = views(&store, 0.0);
+        let ragged = m
+            .spec_round(&seqs, &[2, 2, 2, 2, 2, 2, 2, 12], &|_, _, _, _| false)
+            .unwrap();
+        assert!(
+            ragged.sim_cost.unwrap() > uniform.sim_cost.unwrap(),
+            "one straggler must lengthen the round"
+        );
+    }
+
+    #[test]
+    fn forget_clears_state() {
+        let mut m = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), 6);
+        let store = mk_inputs(1);
+        let seqs = views(&store, 0.0);
+        m.spec_round(&seqs, &[2], &|_, _, _, _| false).unwrap();
+        assert_eq!(m.procs.len(), 1);
+        m.forget(0);
+        assert!(m.procs.is_empty());
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let run = || {
+            let mut m = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::gsm8k(), 9);
+            let store = mk_inputs(2);
+            let seqs = views(&store, 0.0);
+            let o = m.spec_round(&seqs, &[5, 5], &|_, _, _, _| false).unwrap();
+            (o.accepted.clone(), o.new_tokens.clone())
+        };
+        assert_eq!(run(), run());
+    }
+}

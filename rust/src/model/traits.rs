@@ -1,0 +1,173 @@
+//! The engine↔model contract.
+//!
+//! A `SpecModel` executes one *round* for a scheduled batch: either a
+//! speculative round (draft k_i tokens per sequence, verify in one ragged
+//! batched pass, rejection-sample) or an autoregressive round (one target
+//! token each).  Everything above this trait — scheduling, KV accounting,
+//! SL adaptation, capping, metrics — is identical between the real PJRT
+//! path and the calibrated simulator, which is what makes the benchmark
+//! results attributable to the algorithms rather than the substrate.
+
+use anyhow::Result;
+
+/// One scheduled sequence's view for a round.
+#[derive(Clone, Debug)]
+pub struct SeqInput<'a> {
+    /// Stable sequence id (simulator keys its per-sequence processes on it).
+    pub id: u64,
+    /// Current token buffer: prompt + generated so far.
+    pub tokens: &'a [u32],
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f64,
+}
+
+/// Result of one round for the whole scheduled batch (parallel arrays over
+/// the input order).
+#[derive(Clone, Debug, Default)]
+pub struct RoundOutcome {
+    /// Tokens to append per sequence (accepted prefix + correction/bonus —
+    /// always at least 1 token per sequence in a successful round).
+    pub new_tokens: Vec<Vec<u32>>,
+    /// Draft tokens actually proposed (k_i after any early stopping).
+    pub drafted: Vec<usize>,
+    /// Draft tokens accepted by verification.
+    pub accepted: Vec<usize>,
+    /// Per-slot KLD(target ‖ draft) signals for the drafted slots.
+    pub klds: Vec<Vec<f32>>,
+    /// Per-slot draft entropy for the drafted slots.
+    pub entropies: Vec<Vec<f32>>,
+    /// Virtual cost of this round in seconds — `Some` on the simulator
+    /// path, `None` on the real path (the engine uses wall-clock instead).
+    pub sim_cost: Option<f64>,
+}
+
+impl RoundOutcome {
+    pub fn with_capacity(n: usize) -> RoundOutcome {
+        RoundOutcome {
+            new_tokens: Vec::with_capacity(n),
+            drafted: Vec::with_capacity(n),
+            accepted: Vec::with_capacity(n),
+            klds: Vec::with_capacity(n),
+            entropies: Vec::with_capacity(n),
+            sim_cost: None,
+        }
+    }
+
+    /// Internal consistency checks (used by engine debug assertions and
+    /// property tests).
+    pub fn validate(&self, batch: usize) -> Result<(), String> {
+        if self.new_tokens.len() != batch
+            || self.drafted.len() != batch
+            || self.accepted.len() != batch
+            || self.klds.len() != batch
+            || self.entropies.len() != batch
+        {
+            return Err("outcome arity mismatch".to_string());
+        }
+        for i in 0..batch {
+            if self.accepted[i] > self.drafted[i] {
+                return Err(format!(
+                    "seq {i}: accepted {} > drafted {}",
+                    self.accepted[i], self.drafted[i]
+                ));
+            }
+            // emitted tokens = accepted + 1 (correction or bonus)
+            if self.new_tokens[i].len() != self.accepted[i] + 1 {
+                return Err(format!(
+                    "seq {i}: {} tokens != accepted {} + 1",
+                    self.new_tokens[i].len(),
+                    self.accepted[i]
+                ));
+            }
+            if self.klds[i].len() != self.drafted[i]
+                || self.entropies[i].len() != self.drafted[i]
+            {
+                return Err(format!("seq {i}: signal length != drafted"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Early-stop callback: `(batch_index, slot_j, draft_entropy, top_prob)`
+/// → stop drafting this sequence after slot j.
+pub type StopFn<'a> = dyn Fn(usize, usize, f32, f32) -> bool + 'a;
+
+/// The model behind the engine.  `Send` so the engine (and the model in
+/// it) can move into a dedicated serving thread.
+pub trait SpecModel: Send {
+    /// Padded context capacity.
+    fn max_len(&self) -> usize;
+
+    /// Hard ceiling on per-round speculation length.
+    fn spec_k(&self) -> usize;
+
+    /// Human-readable tag for logs/metrics.
+    fn name(&self) -> String;
+
+    /// One speculative round. `sl[i] >= 1` is the requested draft length for
+    /// `seqs[i]`; implementations may stop earlier when `stop` returns true.
+    fn spec_round(
+        &mut self,
+        seqs: &[SeqInput<'_>],
+        sl: &[usize],
+        stop: &StopFn<'_>,
+    ) -> Result<RoundOutcome>;
+
+    /// One autoregressive round (baseline): exactly one target token per
+    /// sequence; outcome has `drafted = accepted = 0`.
+    fn ar_round(&mut self, seqs: &[SeqInput<'_>]) -> Result<RoundOutcome>;
+
+    /// Drop any per-sequence state (called when a sequence retires).
+    fn release(&mut self, _id: u64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_consistent_outcome() {
+        let o = RoundOutcome {
+            new_tokens: vec![vec![1, 2, 3]],
+            drafted: vec![4],
+            accepted: vec![2],
+            klds: vec![vec![0.1; 4]],
+            entropies: vec![vec![0.2; 4]],
+            sim_cost: None,
+        };
+        assert!(o.validate(1).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_token_count() {
+        let o = RoundOutcome {
+            new_tokens: vec![vec![1]],
+            drafted: vec![4],
+            accepted: vec![2],
+            klds: vec![vec![0.0; 4]],
+            entropies: vec![vec![0.0; 4]],
+            sim_cost: None,
+        };
+        assert!(o.validate(1).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_accept_over_draft() {
+        let o = RoundOutcome {
+            new_tokens: vec![vec![1, 2, 3, 4, 5, 6]],
+            drafted: vec![4],
+            accepted: vec![5],
+            klds: vec![vec![0.0; 4]],
+            entropies: vec![vec![0.0; 4]],
+            sim_cost: None,
+        };
+        assert!(o.validate(1).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_arity_mismatch() {
+        let o = RoundOutcome::with_capacity(0);
+        assert!(o.validate(2).is_err());
+    }
+}

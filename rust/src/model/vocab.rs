@@ -1,0 +1,50 @@
+//! Byte-level vocabulary (V = 256): text ↔ token conversion + the reserved
+//! padding id (paper §3.2: "a reserved padding token ID prevents invalid
+//! token identifiers from propagating when SL_i decreases").
+
+/// Reserved padding token (byte 0 never occurs in the ASCII corpus).
+pub const PAD_ID: u32 = 0;
+
+/// Vocabulary size.
+pub const VOCAB: usize = 256;
+
+/// Encode text as byte tokens.
+pub fn encode(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| b as u32).collect()
+}
+
+/// Decode tokens back to text (lossy for non-UTF8 byte sequences).
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t != PAD_ID)
+        .map(|&t| (t & 0xFF) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "def compute(x):\n    return x + 1\n";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn pad_tokens_dropped_on_decode() {
+        let mut toks = encode("ab");
+        toks.push(PAD_ID);
+        toks.insert(0, PAD_ID);
+        assert_eq!(decode(&toks), "ab");
+    }
+
+    #[test]
+    fn tokens_are_bytes() {
+        let toks = encode("A");
+        assert_eq!(toks, vec![65]);
+        assert!(toks.iter().all(|&t| (t as usize) < VOCAB));
+    }
+}

@@ -1,0 +1,125 @@
+//! Reproduction harness: one-call experiment runner shared by the paper
+//! bench binaries (`rust/benches/*`) and scriptable from downstream code.
+
+use crate::config::{CapMode, EngineConfig, SlPolicyKind};
+use crate::engine::engine::Engine;
+use crate::engine::metrics::EngineMetrics;
+use crate::model::sim_lm::{SimModel, SimPairKind};
+use crate::sim::regime::DatasetProfile;
+use crate::workload::{Dataset, WorkloadGen};
+
+/// One experiment's specification.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub dataset: &'static str,
+    pub pair: SimPairKind,
+    pub policy: SlPolicyKind,
+    pub cap: CapMode,
+    pub speculative: bool,
+    pub batch: usize,
+    pub requests: usize,
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> Self {
+        ExperimentSpec {
+            dataset: "cnndm",
+            pair: SimPairKind::LlamaLike,
+            policy: SlPolicyKind::Static(4),
+            cap: CapMode::Mean,
+            speculative: true,
+            batch: 8,
+            requests: 128,
+            temperature: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Run one simulated experiment and return the engine metrics.
+pub fn run(spec: &ExperimentSpec) -> EngineMetrics {
+    let profile = DatasetProfile::by_name(spec.dataset).expect("dataset");
+    let cfg = EngineConfig {
+        max_batch: spec.batch,
+        max_len: 4096,
+        speculative: spec.speculative,
+        policy: spec.policy.clone(),
+        cap_mode: spec.cap,
+        kv_blocks: 65536,
+        temperature: spec.temperature,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    let model = SimModel::new(spec.pair, profile, spec.seed);
+    let mut engine = Engine::new(cfg, Box::new(model));
+    let mut gen = WorkloadGen::new(Dataset::by_name(spec.dataset).unwrap(), spec.seed)
+        .with_temperature(spec.temperature)
+        .with_limits(96, 256);
+    for req in gen.batch(spec.requests) {
+        engine.submit(req);
+    }
+    engine.run_to_completion();
+    engine.metrics.clone()
+}
+
+/// Sweep static SL values and return (k, metrics) — the paper's costly
+/// "static-opt" profiling pass (Fig. 6 / Table 3 baseline).
+pub fn static_sweep(
+    base: &ExperimentSpec,
+    ks: &[usize],
+) -> Vec<(usize, EngineMetrics)> {
+    ks.iter()
+        .map(|&k| {
+            let mut spec = base.clone();
+            spec.policy = SlPolicyKind::Static(k);
+            (k, run(&spec))
+        })
+        .collect()
+}
+
+/// The static-opt latency: best mean latency over the sweep.
+pub fn static_opt(base: &ExperimentSpec, ks: &[usize]) -> (usize, EngineMetrics) {
+    static_sweep(base, ks)
+        .into_iter()
+        .min_by(|a, b| {
+            a.1.mean_latency()
+                .partial_cmp(&b.1.mean_latency())
+                .unwrap()
+        })
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_returns_metrics() {
+        let spec = ExperimentSpec {
+            requests: 8,
+            ..Default::default()
+        };
+        let m = run(&spec);
+        assert_eq!(m.requests.len(), 8);
+        assert!(m.mean_latency() > 0.0);
+    }
+
+    #[test]
+    fn static_opt_picks_minimum() {
+        let spec = ExperimentSpec {
+            requests: 8,
+            ..Default::default()
+        };
+        let sweep = static_sweep(&spec, &[2, 6]);
+        let (k_opt, m_opt) = static_opt(&spec, &[2, 6]);
+        for (k, m) in &sweep {
+            if *k == k_opt {
+                assert!((m.mean_latency() - m_opt.mean_latency()).abs() < 1e-9);
+            } else {
+                assert!(m.mean_latency() >= m_opt.mean_latency());
+            }
+        }
+    }
+}

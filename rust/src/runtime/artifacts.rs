@@ -1,0 +1,282 @@
+//! Artifact manifest + weights-file loading.
+//!
+//! `manifest.json` is written by `python/compile/aot.py` and describes the
+//! model pair, the batch buckets the HLO graphs were lowered for, and the
+//! file-name templates.  `.wts` files are DSDW1: 8-byte magic, u64 LE count,
+//! f32 LE data — the packed parameter vector the step/verify graphs take as
+//! their first argument.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const WTS_MAGIC: &[u8; 8] = b"DSDW1\0\0\0";
+
+/// Which draft weights to load — the paper's two regimes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DraftKind {
+    /// Distilled draft — high-acceptance (LLaMA-70B/1B-like) pair.
+    Good,
+    /// Shifted-corpus draft — low-acceptance (Gemma-27B/2B-like) pair (§4.4).
+    Weak,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub pad_id: u32,
+    pub max_len: usize,
+    pub spec_k: usize,
+    pub buckets: Vec<usize>,
+    pub target_n_params: usize,
+    pub draft_n_params: usize,
+    pub target_step_tpl: String,
+    pub target_verify_tpl: String,
+    pub draft_step_tpl: String,
+    pub target_weights: String,
+    pub draft_good_weights: String,
+    pub draft_weak_weights: String,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let need = |p: &[&str]| -> Result<&Json> {
+            j.at(p).ok_or_else(|| anyhow!("manifest missing {}", p.join(".")))
+        };
+        let fmt = need(&["format"])?.as_str().unwrap_or_default();
+        if fmt != "dsde-artifacts-v1" {
+            bail!("unsupported artifact format {fmt:?}");
+        }
+        let buckets = need(&["buckets"])?
+            .as_arr()
+            .ok_or_else(|| anyhow!("buckets not an array"))?
+            .iter()
+            .filter_map(|b| b.as_usize())
+            .collect::<Vec<_>>();
+        if buckets.is_empty() {
+            bail!("manifest has no batch buckets");
+        }
+        let draft_w = need(&["models", "draft", "weights"])?;
+        Ok(Manifest {
+            vocab: need(&["vocab"])?.as_usize().unwrap_or(256),
+            pad_id: need(&["pad_id"])?.as_usize().unwrap_or(0) as u32,
+            max_len: need(&["max_len"])?.as_usize().unwrap_or(160),
+            spec_k: need(&["spec_k"])?.as_usize().unwrap_or(12),
+            buckets,
+            target_n_params: need(&["models", "target", "n_params"])?
+                .as_usize()
+                .unwrap_or(0),
+            draft_n_params: need(&["models", "draft", "n_params"])?
+                .as_usize()
+                .unwrap_or(0),
+            target_step_tpl: need(&["models", "target", "step"])?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            target_verify_tpl: need(&["models", "target", "verify"])?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            draft_step_tpl: need(&["models", "draft", "step"])?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            target_weights: need(&["models", "target", "weights"])?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            draft_good_weights: draft_w
+                .get("good")
+                .and_then(|x| x.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            draft_weak_weights: draft_w
+                .get("weak")
+                .and_then(|x| x.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            dir,
+        })
+    }
+
+    /// Smallest lowered bucket that fits `batch`, or the largest available.
+    pub fn bucket_for(&self, batch: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= batch)
+            .min()
+            .unwrap_or_else(|| *self.buckets.iter().max().unwrap())
+    }
+
+    pub fn target_step_path(&self, bucket: usize) -> PathBuf {
+        self.dir.join(self.target_step_tpl.replace("{B}", &bucket.to_string()))
+    }
+
+    pub fn target_verify_path(&self, bucket: usize) -> PathBuf {
+        self.dir
+            .join(self.target_verify_tpl.replace("{B}", &bucket.to_string()))
+    }
+
+    pub fn draft_step_path(&self, bucket: usize) -> PathBuf {
+        self.dir.join(self.draft_step_tpl.replace("{B}", &bucket.to_string()))
+    }
+
+    pub fn weights_path(&self, which: &str) -> PathBuf {
+        let name = match which {
+            "target" => &self.target_weights,
+            "draft_good" => &self.draft_good_weights,
+            "draft_weak" => &self.draft_weak_weights,
+            other => panic!("unknown weights {other:?}"),
+        };
+        self.dir.join(name)
+    }
+}
+
+/// A loaded DSDW1 weights file.
+#[derive(Clone, Debug)]
+pub struct WeightsFile {
+    pub data: Vec<f32>,
+}
+
+impl WeightsFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<WeightsFile> {
+        let path = path.as_ref();
+        let blob = fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if blob.len() < 16 || &blob[..8] != WTS_MAGIC {
+            bail!("{path:?}: not a DSDW1 weights file");
+        }
+        let n = u64::from_le_bytes(blob[8..16].try_into().unwrap()) as usize;
+        let want = 16 + n * 4;
+        if blob.len() != want {
+            bail!("{path:?}: size {} != expected {want}", blob.len());
+        }
+        let mut data = Vec::with_capacity(n);
+        for chunk in blob[16..].chunks_exact(4) {
+            data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(WeightsFile { data })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dsde-test-{tag}-{}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_manifest(dir: &Path, extra: &str) {
+        let text = format!(
+            r#"{{
+              "format": "dsde-artifacts-v1",
+              "vocab": 256, "pad_id": 0, "max_len": 160, "spec_k": 12,
+              "buckets": [1, 4, 16],
+              "models": {{
+                "target": {{"n_params": 100, "weights": "t.wts",
+                            "step": "ts_b{{B}}.hlo.txt", "verify": "tv_b{{B}}.hlo.txt"}},
+                "draft": {{"n_params": 50,
+                           "weights": {{"good": "dg.wts", "weak": "dw.wts"}},
+                           "step": "ds_b{{B}}.hlo.txt"}}
+              }}{extra}
+            }}"#
+        );
+        fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn manifest_parses_and_resolves_paths() {
+        let d = tmpdir("manifest");
+        write_manifest(&d, "");
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.buckets, vec![1, 4, 16]);
+        assert_eq!(m.target_n_params, 100);
+        assert!(m.target_step_path(4).ends_with("ts_b4.hlo.txt"));
+        assert!(m.draft_step_path(16).ends_with("ds_b16.hlo.txt"));
+        assert!(m.weights_path("draft_weak").ends_with("dw.wts"));
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let d = tmpdir("bucket");
+        write_manifest(&d, "");
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.bucket_for(1), 1);
+        assert_eq!(m.bucket_for(2), 4);
+        assert_eq!(m.bucket_for(4), 4);
+        assert_eq!(m.bucket_for(9), 16);
+        assert_eq!(m.bucket_for(64), 16); // clamps to largest lowered
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load("/nonexistent-dir-dsde").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn weights_roundtrip() {
+        let d = tmpdir("wts");
+        let path = d.join("w.wts");
+        let vals: Vec<f32> = (0..10).map(|i| i as f32 * 0.5).collect();
+        let mut f = fs::File::create(&path).unwrap();
+        f.write_all(WTS_MAGIC).unwrap();
+        f.write_all(&(vals.len() as u64).to_le_bytes()).unwrap();
+        for v in &vals {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let w = WeightsFile::load(&path).unwrap();
+        assert_eq!(w.data, vals);
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn weights_rejects_bad_magic() {
+        let d = tmpdir("badwts");
+        let path = d.join("bad.wts");
+        fs::write(&path, b"NOTMAGIC\0\0\0\0\0\0\0\0").unwrap();
+        assert!(WeightsFile::load(&path).is_err());
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn weights_rejects_truncation() {
+        let d = tmpdir("trunc");
+        let path = d.join("t.wts");
+        let mut blob = Vec::new();
+        blob.extend_from_slice(WTS_MAGIC);
+        blob.extend_from_slice(&5u64.to_le_bytes());
+        blob.extend_from_slice(&[0u8; 8]); // only 2 floats of 5
+        fs::write(&path, blob).unwrap();
+        assert!(WeightsFile::load(&path).is_err());
+        fs::remove_dir_all(&d).ok();
+    }
+}

@@ -1,0 +1,290 @@
+//! PJRT execution context: lazy compile + memoized executables + uploaded
+//! weight buffers.  One `PjrtContext` owns everything PJRT for a model pair.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::{DraftKind, Manifest, WeightsFile};
+use crate::log_info;
+
+/// Which lowered graph to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GraphKind {
+    TargetStep,
+    TargetVerify,
+    DraftStep,
+}
+
+/// Output of a `step` graph: next-token logits, row-major `[B, V]`.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub vocab: usize,
+}
+
+impl StepOutput {
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.logits[b * self.vocab..(b + 1) * self.vocab]
+    }
+}
+
+/// Output of a `verify` graph.
+#[derive(Clone, Debug)]
+pub struct VerifyOutput {
+    /// Target logits `[B, K+1, V]` at the drafted positions + bonus slot.
+    pub tlogits: Vec<f32>,
+    /// Fused KL(p_target || q_draft) per drafted slot, `[B, K]`.
+    pub kld: Vec<f32>,
+    /// Fused draft entropy per drafted slot, `[B, K]`.
+    pub entropy: Vec<f32>,
+    pub batch: usize,
+    pub k: usize,
+    pub vocab: usize,
+}
+
+impl VerifyOutput {
+    /// Target logits for sequence `b`, slot `j` (j in 0..=K; K is bonus).
+    pub fn tlogits_row(&self, b: usize, j: usize) -> &[f32] {
+        let base = (b * (self.k + 1) + j) * self.vocab;
+        &self.tlogits[base..base + self.vocab]
+    }
+
+    pub fn kld_at(&self, b: usize, j: usize) -> f32 {
+        self.kld[b * self.k + j]
+    }
+
+    pub fn entropy_at(&self, b: usize, j: usize) -> f32 {
+        self.entropy[b * self.k + j]
+    }
+}
+
+/// PJRT CPU context for the artifact set: compiles lazily per
+/// (graph, bucket), keeps weights resident on device.
+pub struct PjrtContext {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<(GraphKind, usize), xla::PjRtLoadedExecutable>,
+    target_w: xla::PjRtBuffer,
+    draft_w: xla::PjRtBuffer,
+    /// cumulative host↔device + execute time, for the perf log
+    pub exec_seconds: f64,
+    pub exec_calls: u64,
+}
+
+impl PjrtContext {
+    /// Load manifest + weights and bring up the PJRT CPU client.
+    pub fn new(artifact_dir: impl AsRef<Path>, draft: DraftKind) -> Result<PjrtContext> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        log_info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let tw = WeightsFile::load(manifest.weights_path("target"))?;
+        anyhow::ensure!(
+            tw.len() == manifest.target_n_params,
+            "target weights {} != manifest {}",
+            tw.len(),
+            manifest.target_n_params
+        );
+        let dname = match draft {
+            DraftKind::Good => "draft_good",
+            DraftKind::Weak => "draft_weak",
+        };
+        let dw = WeightsFile::load(manifest.weights_path(dname))?;
+        anyhow::ensure!(
+            dw.len() == manifest.draft_n_params,
+            "draft weights {} != manifest {}",
+            dw.len(),
+            manifest.draft_n_params
+        );
+        let target_w = client
+            .buffer_from_host_buffer(&tw.data, &[tw.len()], None)
+            .map_err(|e| anyhow!("upload target weights: {e:?}"))?;
+        let draft_w = client
+            .buffer_from_host_buffer(&dw.data, &[dw.len()], None)
+            .map_err(|e| anyhow!("upload draft weights: {e:?}"))?;
+        Ok(PjrtContext {
+            manifest,
+            client,
+            exes: HashMap::new(),
+            target_w,
+            draft_w,
+            exec_seconds: 0.0,
+            exec_calls: 0,
+        })
+    }
+
+    /// Pre-compile the graphs for a bucket (e.g. at server startup).
+    pub fn warmup(&mut self, bucket: usize) -> Result<()> {
+        self.ensure_compiled(GraphKind::DraftStep, bucket)?;
+        self.ensure_compiled(GraphKind::TargetVerify, bucket)?;
+        Ok(())
+    }
+
+    fn ensure_compiled(&mut self, kind: GraphKind, bucket: usize) -> Result<()> {
+        if self.exes.contains_key(&(kind, bucket)) {
+            return Ok(());
+        }
+        let path = match kind {
+            GraphKind::TargetStep => self.manifest.target_step_path(bucket),
+            GraphKind::TargetVerify => self.manifest.target_verify_path(bucket),
+            GraphKind::DraftStep => self.manifest.draft_step_path(bucket),
+        };
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        log_info!(
+            "compiled {kind:?} bucket={bucket} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        self.exes.insert((kind, bucket), exe);
+        Ok(())
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    /// Run a step graph. `tokens` is `[bucket * max_len]` row-major i32,
+    /// `lens` is `[bucket]`.  Returns `[bucket, V]` logits.
+    pub fn step(
+        &mut self,
+        kind: GraphKind,
+        bucket: usize,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> Result<StepOutput> {
+        assert!(matches!(kind, GraphKind::TargetStep | GraphKind::DraftStep));
+        let l = self.manifest.max_len;
+        let v = self.manifest.vocab;
+        assert_eq!(tokens.len(), bucket * l, "tokens shape");
+        assert_eq!(lens.len(), bucket, "lens shape");
+        self.ensure_compiled(kind, bucket)?;
+        let t0 = Instant::now();
+        let tok_b = self.upload_i32(tokens, &[bucket, l])?;
+        let len_b = self.upload_i32(lens, &[bucket])?;
+        let wbuf = match kind {
+            GraphKind::DraftStep => &self.draft_w,
+            _ => &self.target_w,
+        };
+        let exe = &self.exes[&(kind, bucket)];
+        let outs = exe
+            .execute_b(&[wbuf, &tok_b, &len_b])
+            .map_err(|e| anyhow!("execute step: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch step output: {e:?}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple step output: {e:?}"))?;
+        let logits = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("step logits to_vec: {e:?}"))?;
+        debug_assert_eq!(logits.len(), bucket * v);
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        self.exec_calls += 1;
+        Ok(StepOutput {
+            logits,
+            batch: bucket,
+            vocab: v,
+        })
+    }
+
+    /// Run the target verify graph.
+    ///
+    /// `tokens` already has the drafted tokens appended after each context;
+    /// `ctx_lens[b]` is the pre-draft length (gather base), `att_lens[b] =
+    /// ctx_lens[b] + k_b` bounds attention, `draft_logits` is `[bucket, K, V]`.
+    pub fn verify(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        ctx_lens: &[i32],
+        att_lens: &[i32],
+        draft_logits: &[f32],
+    ) -> Result<VerifyOutput> {
+        let l = self.manifest.max_len;
+        let v = self.manifest.vocab;
+        let k = self.manifest.spec_k;
+        assert_eq!(tokens.len(), bucket * l);
+        assert_eq!(ctx_lens.len(), bucket);
+        assert_eq!(att_lens.len(), bucket);
+        assert_eq!(draft_logits.len(), bucket * k * v);
+        self.ensure_compiled(GraphKind::TargetVerify, bucket)?;
+        let t0 = Instant::now();
+        let tok_b = self.upload_i32(tokens, &[bucket, l])?;
+        let ctx_b = self.upload_i32(ctx_lens, &[bucket])?;
+        let att_b = self.upload_i32(att_lens, &[bucket])?;
+        let dl_b = self.upload_f32(draft_logits, &[bucket, k, v])?;
+        let exe = &self.exes[&(GraphKind::TargetVerify, bucket)];
+        let outs = exe
+            .execute_b(&[&self.target_w, &tok_b, &ctx_b, &att_b, &dl_b])
+            .map_err(|e| anyhow!("execute verify: {e:?}"))?;
+        let (tl, kl, en) = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch verify output: {e:?}"))?
+            .to_tuple3()
+            .map_err(|e| anyhow!("untuple verify output: {e:?}"))?;
+        let tlogits = tl.to_vec::<f32>().map_err(|e| anyhow!("tlogits: {e:?}"))?;
+        let kld = kl.to_vec::<f32>().map_err(|e| anyhow!("kld: {e:?}"))?;
+        let entropy = en.to_vec::<f32>().map_err(|e| anyhow!("entropy: {e:?}"))?;
+        debug_assert_eq!(tlogits.len(), bucket * (k + 1) * v);
+        debug_assert_eq!(kld.len(), bucket * k);
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        self.exec_calls += 1;
+        Ok(VerifyOutput {
+            tlogits,
+            kld,
+            entropy,
+            batch: bucket,
+            k,
+            vocab: v,
+        })
+    }
+
+    pub fn max_len(&self) -> usize {
+        self.manifest.max_len
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.manifest.vocab
+    }
+
+    pub fn spec_k(&self) -> usize {
+        self.manifest.spec_k
+    }
+
+    pub fn pad_id(&self) -> u32 {
+        self.manifest.pad_id
+    }
+
+    pub fn bucket_for(&self, batch: usize) -> usize {
+        self.manifest.bucket_for(batch)
+    }
+}
+
+// SAFETY: PjrtContext is only ever *moved* into a single engine thread (the
+// HTTP server funnels all requests through that thread via channels), so no
+// PJRT object is ever accessed concurrently.  The underlying PJRT CPU client
+// itself is documented thread-safe; the raw pointers in the `xla` wrappers
+// are what inhibit the auto-impl.
+unsafe impl Send for PjrtContext {}

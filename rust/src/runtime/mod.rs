@@ -1,0 +1,19 @@
+//! L3↔L2 bridge: loads the AOT artifacts emitted by `python/compile/aot.py`
+//! (HLO text + packed weights + manifest) and executes them on the PJRT CPU
+//! client via the `xla` crate.  This is the only module that touches PJRT;
+//! everything above it speaks [`crate::model::traits::SpecModel`].
+//!
+//! Design notes:
+//! * Interchange is HLO **text** — xla_extension 0.5.1 rejects jax≥0.5's
+//!   64-bit-id serialized protos; the text parser reassigns ids.
+//! * Weights are packed into a single f32 vector per model (`.wts` files,
+//!   DSDW1 format) and uploaded to the device **once**; per-step calls only
+//!   move tokens/lengths/logits (hot-path allocation is O(batch)).
+//! * Executables are compiled lazily per (function, batch-bucket) and
+//!   memoized; the engine pads its batch up to the nearest bucket.
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{Manifest, WeightsFile};
+pub use exec::{PjrtContext, StepOutput, VerifyOutput};

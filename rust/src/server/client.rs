@@ -1,0 +1,167 @@
+//! Load-generating HTTP client for the completions API (used by the
+//! `serve_http` example and the serving benchmarks).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// One completed load-test call.
+#[derive(Clone, Debug)]
+pub struct CallResult {
+    pub status: u16,
+    pub wall_s: f64,
+    pub body: Json,
+}
+
+/// Issue one blocking completions call.
+pub fn complete(
+    addr: &str,
+    prompt: &str,
+    max_tokens: usize,
+    temperature: f64,
+) -> Result<CallResult> {
+    let body = Json::obj()
+        .set("prompt", prompt)
+        .set("max_tokens", max_tokens)
+        .set("temperature", temperature)
+        .to_string();
+    let req = format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: dsde\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let t0 = Instant::now();
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    parse_response(&resp, wall_s)
+}
+
+/// Fetch the metrics snapshot.
+pub fn metrics(addr: &str) -> Result<Json> {
+    let req = "GET /v1/metrics HTTP/1.1\r\nHost: dsde\r\nConnection: close\r\n\r\n";
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    Ok(parse_response(&resp, 0.0)?.body)
+}
+
+fn parse_response(resp: &str, wall_s: f64) -> Result<CallResult> {
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed response: {resp:.60}"))?;
+    let body_text = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b)
+        .unwrap_or("{}");
+    let body = Json::parse(body_text).map_err(|e| anyhow!("body parse: {e}"))?;
+    Ok(CallResult {
+        status,
+        wall_s,
+        body,
+    })
+}
+
+/// Closed-loop load: `concurrency` worker threads each issue
+/// `calls_per_worker` sequential completions.  Returns all call results.
+pub fn closed_loop(
+    addr: &str,
+    prompts: Vec<String>,
+    max_tokens: usize,
+    temperature: f64,
+    concurrency: usize,
+) -> Vec<CallResult> {
+    let addr = addr.to_string();
+    let chunks: Vec<Vec<String>> = (0..concurrency)
+        .map(|w| {
+            prompts
+                .iter()
+                .skip(w)
+                .step_by(concurrency)
+                .cloned()
+                .collect()
+        })
+        .collect();
+    let mut handles = Vec::new();
+    for chunk in chunks {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            for p in chunk {
+                if let Ok(r) = complete(&addr, &p, max_tokens, temperature) {
+                    out.push(r);
+                }
+            }
+            out
+        }));
+    }
+    handles
+        .into_iter()
+        .flat_map(|h| h.join().unwrap_or_default())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineConfig, SlPolicyKind};
+    use crate::engine::engine::Engine;
+    use crate::model::sim_lm::{SimModel, SimPairKind};
+    use crate::server::http::serve;
+    use crate::sim::regime::DatasetProfile;
+
+    fn sim_server() -> crate::server::http::ServerHandle {
+        let cfg = EngineConfig {
+            max_batch: 4,
+            max_len: 4096,
+            policy: SlPolicyKind::Static(4),
+            seed: 2,
+            ..Default::default()
+        };
+        let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), 2);
+        serve(Engine::new(cfg, Box::new(model)), "127.0.0.1:0").unwrap()
+    }
+
+    #[test]
+    fn client_completes_against_server() {
+        let h = sim_server();
+        let addr = h.addr.to_string();
+        let r = complete(&addr, "hello", 8, 0.0).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body.get("tokens").and_then(|t| t.as_usize()), Some(8));
+        h.shutdown();
+    }
+
+    #[test]
+    fn closed_loop_load() {
+        let h = sim_server();
+        let addr = h.addr.to_string();
+        let prompts: Vec<String> = (0..6).map(|i| format!("prompt {i}")).collect();
+        let results = closed_loop(&addr, prompts, 6, 0.0, 3);
+        assert_eq!(results.len(), 6);
+        assert!(results.iter().all(|r| r.status == 200));
+        let m = metrics(&addr).unwrap();
+        assert!(m.get("tokens_out").and_then(|t| t.as_usize()).unwrap_or(0) >= 36);
+        h.shutdown();
+    }
+
+    #[test]
+    fn parse_response_extracts_status_and_body() {
+        let r = parse_response(
+            "HTTP/1.1 200 OK\r\nContent-Length: 9\r\n\r\n{\"a\": 1}",
+            0.5,
+        )
+        .unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body.get("a").and_then(|x| x.as_usize()), Some(1));
+    }
+}

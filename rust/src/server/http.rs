@@ -1,0 +1,415 @@
+//! Minimal HTTP/1.1 server with a JSON completions API.
+//!
+//! Endpoints:
+//! * `POST /v1/completions` — body `{"prompt": "...", "max_tokens": N,
+//!   "temperature": T}` → `{"id": .., "text": .., "latency_s": ..,
+//!   "ttft_s": .., "rounds": ..}` (blocks until the request completes).
+//! * `GET /v1/metrics` — engine metrics snapshot.
+//! * `GET /health` — liveness.
+//!
+//! One engine thread owns the [`Engine`]; connection threads submit work
+//! through an mpsc channel and park on a per-request response channel.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::engine::engine::Engine;
+use crate::engine::request::{FinishedRequest, Request, SamplingParams};
+use crate::model::vocab;
+use crate::util::json::Json;
+use crate::{log_info, log_warn};
+
+/// A parsed HTTP request (the subset we serve).
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Read one HTTP/1.1 request from the stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+/// Write an HTTP response with a JSON body.
+pub fn write_json(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()> {
+    let body = body.to_string();
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    Ok(())
+}
+
+enum EngineMsg {
+    Submit(Request, Sender<FinishedRequest>),
+    Metrics(Sender<Json>),
+    Shutdown,
+}
+
+/// Handle used to submit work / stop the server.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    tx: Sender<EngineMsg>,
+    stop: Arc<AtomicBool>,
+    engine_thread: Option<JoinHandle<()>>,
+    acceptor_thread: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(EngineMsg::Shutdown);
+        // poke the acceptor so it notices the stop flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.acceptor_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The engine thread's loop: interleave request intake with engine steps so
+/// new arrivals join the continuous batch.
+fn engine_loop(mut engine: Engine, rx: Receiver<EngineMsg>, stop: Arc<AtomicBool>) {
+    let mut pending: HashMap<u64, Sender<FinishedRequest>> = HashMap::new();
+    let mut next_id: u64 = 1;
+    loop {
+        // drain the message queue (non-blocking while busy, blocking if idle)
+        loop {
+            let msg = if engine.pending() == 0 && pending.is_empty() {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => return,
+                }
+            };
+            match msg {
+                EngineMsg::Submit(mut req, reply) => {
+                    req.id = next_id;
+                    next_id += 1;
+                    pending.insert(req.id, reply);
+                    engine.submit(req);
+                }
+                EngineMsg::Metrics(reply) => {
+                    let _ = reply.send(engine.metrics.to_json());
+                }
+                EngineMsg::Shutdown => {
+                    engine.abort_all();
+                    for fin in engine.take_finished() {
+                        if let Some(reply) = pending.remove(&fin.id) {
+                            let _ = reply.send(fin);
+                        }
+                    }
+                    return;
+                }
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if engine.pending() > 0 {
+            if let Err(e) = engine.step() {
+                log_warn!("engine step error: {e:#}");
+            }
+            for fin in engine.take_finished() {
+                if let Some(reply) = pending.remove(&fin.id) {
+                    let _ = reply.send(fin);
+                }
+            }
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, tx: &Sender<EngineMsg>) {
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            let _ = write_json(&mut stream, 200, &Json::obj().set("ok", true));
+        }
+        ("GET", "/v1/metrics") => {
+            let (rtx, rrx) = std::sync::mpsc::channel();
+            if tx.send(EngineMsg::Metrics(rtx)).is_ok() {
+                if let Ok(m) = rrx.recv() {
+                    let _ = write_json(&mut stream, 200, &m);
+                    return;
+                }
+            }
+            let _ = write_json(&mut stream, 500, &Json::obj().set("error", "engine gone"));
+        }
+        ("POST", "/v1/completions") => {
+            let parsed = match Json::parse(&req.body) {
+                Ok(j) => j,
+                Err(e) => {
+                    let _ = write_json(
+                        &mut stream,
+                        400,
+                        &Json::obj().set("error", format!("bad json: {e}")),
+                    );
+                    return;
+                }
+            };
+            let Some(prompt) = parsed.get("prompt").and_then(|p| p.as_str()) else {
+                let _ = write_json(
+                    &mut stream,
+                    400,
+                    &Json::obj().set("error", "missing 'prompt'"),
+                );
+                return;
+            };
+            let max_tokens = parsed
+                .get("max_tokens")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(64);
+            let temperature = parsed
+                .get("temperature")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.0);
+            let request = Request::new(
+                0, // engine thread assigns the real id
+                vocab::encode(prompt),
+                SamplingParams {
+                    temperature,
+                    max_tokens,
+                    stop_token: None,
+                },
+            );
+            let (rtx, rrx) = std::sync::mpsc::channel();
+            if tx.send(EngineMsg::Submit(request, rtx)).is_err() {
+                let _ = write_json(&mut stream, 500, &Json::obj().set("error", "engine gone"));
+                return;
+            }
+            match rrx.recv() {
+                Ok(fin) => {
+                    let body = Json::obj()
+                        .set("id", fin.id)
+                        .set("text", fin.output_text())
+                        .set("tokens", fin.output.len())
+                        .set("latency_s", fin.latency())
+                        .set("ttft_s", fin.ttft())
+                        .set("rounds", fin.rounds)
+                        .set("accepted", fin.accepted)
+                        .set("drafted", fin.drafted);
+                    let _ = write_json(&mut stream, 200, &body);
+                }
+                Err(_) => {
+                    let _ =
+                        write_json(&mut stream, 500, &Json::obj().set("error", "aborted"));
+                }
+            }
+        }
+        _ => {
+            let _ = write_json(&mut stream, 404, &Json::obj().set("error", "not found"));
+        }
+    }
+}
+
+/// Start serving on `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+pub fn serve(engine: Engine, addr: &str) -> Result<ServerHandle> {
+    static SERVER_SEQ: AtomicU64 = AtomicU64::new(0);
+    let _ = SERVER_SEQ.fetch_add(1, Ordering::Relaxed);
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_e = stop.clone();
+    let engine_thread = std::thread::spawn(move || engine_loop(engine, rx, stop_e));
+    let tx_acceptor = tx.clone();
+    let stop_a = stop.clone();
+    let acceptor_thread = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if stop_a.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let tx = tx_acceptor.clone();
+                    std::thread::spawn(move || handle_conn(s, &tx));
+                }
+                Err(e) => log_warn!("accept error: {e}"),
+            }
+        }
+    });
+    log_info!("serving on http://{local}");
+    Ok(ServerHandle {
+        addr: local,
+        tx,
+        stop,
+        engine_thread: Some(engine_thread),
+        acceptor_thread: Some(acceptor_thread),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineConfig, SlPolicyKind};
+    use crate::model::sim_lm::{SimModel, SimPairKind};
+    use crate::sim::regime::DatasetProfile;
+
+    fn sim_server() -> ServerHandle {
+        let cfg = EngineConfig {
+            max_batch: 4,
+            max_len: 4096,
+            policy: SlPolicyKind::Dsde(Default::default()),
+            seed: 1,
+            ..Default::default()
+        };
+        let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), 1);
+        serve(Engine::new(cfg, Box::new(model)), "127.0.0.1:0").unwrap()
+    }
+
+    fn raw_request(addr: std::net::SocketAddr, req: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(req.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn health_endpoint() {
+        let h = sim_server();
+        let resp = raw_request(
+            h.addr,
+            "GET /health HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200"));
+        assert!(resp.contains("\"ok\":true"));
+        h.shutdown();
+    }
+
+    #[test]
+    fn completion_roundtrip() {
+        let h = sim_server();
+        let body = r#"{"prompt": "def compute(x):", "max_tokens": 12}"#;
+        let req = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let resp = raw_request(h.addr, &req);
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        assert!(resp.contains("\"tokens\":12"), "{resp}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn metrics_endpoint() {
+        let h = sim_server();
+        let body = r#"{"prompt": "hi", "max_tokens": 4}"#;
+        let req = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        raw_request(h.addr, &req);
+        let resp = raw_request(
+            h.addr,
+            "GET /v1/metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.contains("block_efficiency"), "{resp}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn bad_json_is_400() {
+        let h = sim_server();
+        let body = "{nope";
+        let req = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let resp = raw_request(h.addr, &req);
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn unknown_path_404() {
+        let h = sim_server();
+        let resp = raw_request(
+            h.addr,
+            "GET /nope HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 404"));
+        h.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_batch_together() {
+        let h = sim_server();
+        let addr = h.addr;
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let body =
+                        format!(r#"{{"prompt": "req {i}", "max_tokens": 16}}"#);
+                    let req = format!(
+                        "POST /v1/completions HTTP/1.1\r\nHost: x\r\n\
+                         Content-Length: {}\r\n\r\n{body}",
+                        body.len()
+                    );
+                    raw_request(addr, &req)
+                })
+            })
+            .collect();
+        for t in threads {
+            let resp = t.join().unwrap();
+            assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        }
+        h.shutdown();
+    }
+}

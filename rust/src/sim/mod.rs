@@ -1,0 +1,14 @@
+//! Simulation substrates for paper-scale experiments.
+//!
+//! The paper's testbed (8×A100, LLaMA-70B/1B, Gemma-27B/2B, eight public
+//! datasets) is out of reach here, so the benchmark sweeps run the *same
+//! engine code* over:
+//! * [`regime`] — a per-sequence Markov regime process generating token
+//!   acceptance probabilities and the correlated KLD/entropy signals
+//!   (dataset profiles reproduce the paper's task-heterogeneity axis), and
+//! * [`cost`] — a latency cost model calibrated to the paper's A100 cost
+//!   ratios (target verify ≫ draft step; verified tokens nearly free —
+//!   the memory-bound property that makes speculative decoding pay off).
+
+pub mod cost;
+pub mod regime;

@@ -1,0 +1,424 @@
+//! Acceptance-regime process: the stochastic model behind [`crate::model::sim_lm::SimModel`].
+//!
+//! Each sequence carries a hidden 2-state Markov regime — **Stable**
+//! (predictable span: high draft acceptance, low & calm KLD) and
+//! **Volatile** (hard span: low acceptance, bursty KLD).  This encodes the
+//! paper's core premise that generation difficulty is *regional* (§1,
+//! Fig. 2): the per-token optimum fluctuates wildly, but the variance of
+//! the KLD signal reflects which region you are in.
+//!
+//! Per drafted token the process emits:
+//! * `accept_p` — the true probability the target accepts the draft token;
+//! * `kld`      — a noisy post-hoc divergence observation, `≈ −ln(accept_p)`
+//!   with multiplicative log-normal noise (weak token-level correlation,
+//!   matching the paper's Table 2 finding);
+//! * `entropy`  — a forward-looking draft-entropy observation, more tightly
+//!   coupled to `accept_p` (entropy is the *strongest* token-level
+//!   correlate in Table 2, r ≈ −0.34 at T = 0).
+//!
+//! Temperature degrades everything (paper §4.2–4.3): acceptance drops and
+//! all signal noise grows.
+
+use crate::util::rng::Rng;
+
+/// Hidden generation regime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    Stable,
+    Volatile,
+}
+
+/// Per-dataset parameters — the paper's eight evaluation datasets expressed
+/// as acceptance/stability profiles plus workload shape (prompt/output
+/// lengths, used by [`crate::workload`]).
+#[derive(Clone, Debug)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    /// mean acceptance prob in the stable regime (T = 0)
+    pub alpha_stable: f64,
+    /// mean acceptance prob in the volatile regime (T = 0)
+    pub alpha_volatile: f64,
+    /// within-regime acceptance jitter (std)
+    pub alpha_jitter: f64,
+    /// P(stable -> volatile) per engine step
+    pub p_enter_volatile: f64,
+    /// P(volatile -> stable) per engine step
+    pub p_exit_volatile: f64,
+    /// KLD log-normal noise sigma (token-level decorrelation)
+    pub kld_noise: f64,
+    /// entropy observation noise (std, additive)
+    pub ent_noise: f64,
+    /// acceptance penalty per unit temperature
+    pub temp_penalty: f64,
+    /// mean output tokens per request
+    pub mean_output: usize,
+    /// mean prompt bytes
+    pub mean_prompt: usize,
+}
+
+impl DatasetProfile {
+    /// CNN/DailyMail summarization — moderate difficulty (paper's probe set).
+    pub fn cnndm() -> Self {
+        DatasetProfile {
+            name: "cnndm",
+            alpha_stable: 0.76,
+            alpha_volatile: 0.38,
+            alpha_jitter: 0.07,
+            p_enter_volatile: 0.20,
+            p_exit_volatile: 0.25,
+            kld_noise: 0.9,
+            ent_noise: 0.55,
+            temp_penalty: 0.18,
+            mean_output: 96,
+            mean_prompt: 64,
+        }
+    }
+
+    /// XSum — extreme summarization, slightly harder than CNN/DM.
+    pub fn xsum() -> Self {
+        DatasetProfile {
+            name: "xsum",
+            alpha_stable: 0.75,
+            alpha_volatile: 0.40,
+            alpha_jitter: 0.08,
+            p_enter_volatile: 0.18,
+            p_exit_volatile: 0.26,
+            kld_noise: 0.9,
+            ent_noise: 0.55,
+            temp_penalty: 0.18,
+            mean_output: 72,
+            mean_prompt: 64,
+        }
+    }
+
+    /// GSM8K — math reasoning: long stable arithmetic spans punctuated by
+    /// volatile planning tokens.
+    pub fn gsm8k() -> Self {
+        DatasetProfile {
+            name: "gsm8k",
+            alpha_stable: 0.84,
+            alpha_volatile: 0.40,
+            alpha_jitter: 0.06,
+            p_enter_volatile: 0.12,
+            p_exit_volatile: 0.25,
+            kld_noise: 0.85,
+            ent_noise: 0.5,
+            temp_penalty: 0.20,
+            mean_output: 112,
+            mean_prompt: 48,
+        }
+    }
+
+    /// HotpotQA — multi-hop QA, short answers, mixed stability.
+    pub fn hotpotqa() -> Self {
+        DatasetProfile {
+            name: "hotpotqa",
+            alpha_stable: 0.73,
+            alpha_volatile: 0.38,
+            alpha_jitter: 0.08,
+            p_enter_volatile: 0.20,
+            p_exit_volatile: 0.27,
+            kld_noise: 0.95,
+            ent_noise: 0.6,
+            temp_penalty: 0.18,
+            mean_output: 64,
+            mean_prompt: 72,
+        }
+    }
+
+    /// Natural Questions — short factoid answers.
+    pub fn nq() -> Self {
+        DatasetProfile {
+            name: "nq",
+            alpha_stable: 0.70,
+            alpha_volatile: 0.35,
+            alpha_jitter: 0.08,
+            p_enter_volatile: 0.22,
+            p_exit_volatile: 0.25,
+            kld_noise: 0.95,
+            ent_noise: 0.6,
+            temp_penalty: 0.18,
+            mean_output: 48,
+            mean_prompt: 56,
+        }
+    }
+
+    /// HumanEval — code generation: the high-acceptance outlier (paper
+    /// Table 1: static SL = 8 beats SL = 2 by 26%).
+    pub fn humaneval() -> Self {
+        DatasetProfile {
+            name: "humaneval",
+            alpha_stable: 0.90,
+            alpha_volatile: 0.55,
+            alpha_jitter: 0.05,
+            p_enter_volatile: 0.08,
+            p_exit_volatile: 0.35,
+            kld_noise: 0.8,
+            ent_noise: 0.45,
+            temp_penalty: 0.15,
+            mean_output: 128,
+            mean_prompt: 72,
+        }
+    }
+
+    /// ShareGPT — open-ended dialogue: mid acceptance, frequent regime flips.
+    pub fn sharegpt() -> Self {
+        DatasetProfile {
+            name: "sharegpt",
+            alpha_stable: 0.78,
+            alpha_volatile: 0.42,
+            alpha_jitter: 0.09,
+            p_enter_volatile: 0.18,
+            p_exit_volatile: 0.25,
+            kld_noise: 1.0,
+            ent_noise: 0.6,
+            temp_penalty: 0.2,
+            mean_output: 120,
+            mean_prompt: 64,
+        }
+    }
+
+    /// WMT14 — machine translation: steady mid-high acceptance.
+    pub fn wmt14() -> Self {
+        DatasetProfile {
+            name: "wmt14",
+            alpha_stable: 0.78,
+            alpha_volatile: 0.45,
+            alpha_jitter: 0.06,
+            p_enter_volatile: 0.15,
+            p_exit_volatile: 0.28,
+            kld_noise: 0.85,
+            ent_noise: 0.5,
+            temp_penalty: 0.17,
+            mean_output: 80,
+            mean_prompt: 56,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DatasetProfile> {
+        match name {
+            "cnndm" => Some(Self::cnndm()),
+            "xsum" => Some(Self::xsum()),
+            "gsm8k" => Some(Self::gsm8k()),
+            "hotpotqa" => Some(Self::hotpotqa()),
+            "nq" => Some(Self::nq()),
+            "humaneval" => Some(Self::humaneval()),
+            "sharegpt" => Some(Self::sharegpt()),
+            "wmt14" => Some(Self::wmt14()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<DatasetProfile> {
+        vec![
+            Self::cnndm(),
+            Self::xsum(),
+            Self::gsm8k(),
+            Self::hotpotqa(),
+            Self::nq(),
+            Self::humaneval(),
+            Self::sharegpt(),
+            Self::wmt14(),
+        ]
+    }
+
+    /// Scale the acceptance parameters for a high-divergence pair
+    /// (Gemma-27B/2B, paper §4.4): multiplies both regime alphas.
+    pub fn with_divergence(mut self, alpha_scale: f64) -> Self {
+        self.alpha_stable = (self.alpha_stable * alpha_scale).clamp(0.02, 0.99);
+        self.alpha_volatile = (self.alpha_volatile * alpha_scale).clamp(0.02, 0.99);
+        self
+    }
+}
+
+/// One token's emissions from the process.
+#[derive(Clone, Copy, Debug)]
+pub struct TokenDraw {
+    pub accept_p: f64,
+    pub kld: f32,
+    pub entropy: f32,
+}
+
+/// The per-sequence regime process.
+#[derive(Clone, Debug)]
+pub struct RegimeProcess {
+    profile: DatasetProfile,
+    pub regime: Regime,
+    rng: Rng,
+}
+
+impl RegimeProcess {
+    pub fn new(profile: DatasetProfile, seed: u64) -> RegimeProcess {
+        let mut rng = Rng::new(seed);
+        // stationary initial regime
+        let p_v = profile.p_enter_volatile
+            / (profile.p_enter_volatile + profile.p_exit_volatile).max(1e-9);
+        let regime = if rng.chance(p_v) {
+            Regime::Volatile
+        } else {
+            Regime::Stable
+        };
+        RegimeProcess {
+            profile,
+            regime,
+            rng,
+        }
+    }
+
+    /// Advance the hidden regime one engine step.
+    pub fn step_regime(&mut self) {
+        let flip = match self.regime {
+            Regime::Stable => self.rng.chance(self.profile.p_enter_volatile),
+            Regime::Volatile => self.rng.chance(self.profile.p_exit_volatile),
+        };
+        if flip {
+            self.regime = match self.regime {
+                Regime::Stable => Regime::Volatile,
+                Regime::Volatile => Regime::Stable,
+            };
+        }
+    }
+
+    /// Draw one token's acceptance probability + signals at the given
+    /// sampling temperature.
+    pub fn draw_token(&mut self, temperature: f64) -> TokenDraw {
+        let base = match self.regime {
+            Regime::Stable => self.profile.alpha_stable,
+            Regime::Volatile => self.profile.alpha_volatile,
+        };
+        let temp_factor = 1.0 - self.profile.temp_penalty * temperature;
+        let jitter = self.rng.normal_ms(0.0, self.profile.alpha_jitter);
+        let accept_p = (base * temp_factor + jitter).clamp(0.02, 0.995);
+        // post-hoc KLD: -ln(a) with MEAN-NORMALIZED log-normal noise
+        // (token-decorrelated but unbiased: E[noise] = 1, so the *level* of
+        // KLD faithfully tracks disagreement while single tokens scatter)
+        let noise_sigma = self.profile.kld_noise * (1.0 + 0.5 * temperature);
+        let noise = self
+            .rng
+            .normal_ms(-0.5 * noise_sigma * noise_sigma, noise_sigma)
+            .exp();
+        let kld = (-accept_p.ln()) * noise;
+        // forward entropy: tighter link to accept_p (Table 2's strongest r)
+        let ent_base = 2.6 * (1.0 - accept_p);
+        let ent_sigma = self.profile.ent_noise * (1.0 + 0.6 * temperature);
+        let entropy = (ent_base + self.rng.normal_ms(0.0, ent_sigma)).max(0.0);
+        TokenDraw {
+            accept_p,
+            kld: kld as f32,
+            entropy: entropy as f32,
+        }
+    }
+
+    pub fn profile(&self) -> &DatasetProfile {
+        &self.profile
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::pearson;
+
+    #[test]
+    fn profiles_resolve_by_name() {
+        for p in DatasetProfile::all() {
+            assert_eq!(DatasetProfile::by_name(p.name).unwrap().name, p.name);
+        }
+        assert!(DatasetProfile::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn humaneval_easier_than_sharegpt() {
+        // paper Table 1's heterogeneity axis
+        assert!(
+            DatasetProfile::humaneval().alpha_stable
+                > DatasetProfile::sharegpt().alpha_stable
+        );
+    }
+
+    #[test]
+    fn regime_visits_both_states() {
+        let mut p = RegimeProcess::new(DatasetProfile::cnndm(), 1);
+        let mut stable = 0;
+        let mut volatile = 0;
+        for _ in 0..2000 {
+            p.step_regime();
+            match p.regime {
+                Regime::Stable => stable += 1,
+                Regime::Volatile => volatile += 1,
+            }
+        }
+        assert!(stable > 200 && volatile > 100, "{stable}/{volatile}");
+    }
+
+    #[test]
+    fn stable_regime_accepts_more() {
+        let prof = DatasetProfile::cnndm();
+        let mut p = RegimeProcess::new(prof.clone(), 2);
+        p.regime = Regime::Stable;
+        let a_stable: f64 =
+            (0..500).map(|_| p.draw_token(0.0).accept_p).sum::<f64>() / 500.0;
+        p.regime = Regime::Volatile;
+        let a_vol: f64 =
+            (0..500).map(|_| p.draw_token(0.0).accept_p).sum::<f64>() / 500.0;
+        assert!(a_stable > a_vol + 0.2, "{a_stable} vs {a_vol}");
+    }
+
+    #[test]
+    fn temperature_reduces_acceptance() {
+        let mut p = RegimeProcess::new(DatasetProfile::cnndm(), 3);
+        p.regime = Regime::Stable;
+        let a0: f64 = (0..800).map(|_| p.draw_token(0.0).accept_p).sum::<f64>() / 800.0;
+        let a1: f64 = (0..800).map(|_| p.draw_token(1.0).accept_p).sum::<f64>() / 800.0;
+        assert!(a1 < a0 - 0.05, "{a1} !< {a0}");
+    }
+
+    #[test]
+    fn divergence_scaling_lowers_alphas() {
+        let weak = DatasetProfile::cnndm().with_divergence(0.55);
+        assert!(weak.alpha_stable < 0.55);
+    }
+
+    #[test]
+    fn entropy_correlates_negatively_with_acceptance() {
+        // token-level: entropy is the strongest (negative) correlate
+        let mut p = RegimeProcess::new(DatasetProfile::cnndm(), 5);
+        let mut ents = Vec::new();
+        let mut accs = Vec::new();
+        let mut rng = Rng::new(7);
+        for i in 0..4000 {
+            if i % 4 == 0 {
+                p.step_regime();
+            }
+            let d = p.draw_token(0.0);
+            ents.push(d.entropy as f64);
+            accs.push(if rng.chance(d.accept_p) { 1.0 } else { 0.0 });
+        }
+        let r = pearson(&ents, &accs).unwrap();
+        assert!(r < -0.15, "entropy/accept r = {r}");
+    }
+
+    #[test]
+    fn kld_correlation_is_weak() {
+        // paper Table 2: |r| for lagging KLD is small at token level
+        let mut p = RegimeProcess::new(DatasetProfile::cnndm(), 6);
+        let mut klds = Vec::new();
+        let mut accs = Vec::new();
+        let mut rng = Rng::new(8);
+        for i in 0..4000 {
+            if i % 4 == 0 {
+                p.step_regime();
+            }
+            let d = p.draw_token(0.0);
+            klds.push(d.kld as f64);
+            accs.push(if rng.chance(d.accept_p) { 1.0 } else { 0.0 });
+        }
+        let r = pearson(&klds, &accs).unwrap();
+        assert!(r < 0.0, "kld should correlate negatively, r = {r}");
+        assert!(r.abs() < 0.35, "kld corr should be weak, r = {r}");
+    }
+}

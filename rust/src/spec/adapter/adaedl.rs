@@ -1,0 +1,138 @@
+//! AdaEDL baseline (Agrawal et al. 2024): entropy-based early draft
+//! stopping.  The draft proposes up to `base` tokens but stops as soon as
+//! the entropy-derived lower bound on the acceptance probability,
+//! `1 − λ·sqrt(H(q_j))`, falls below a threshold modulated by the
+//! historical acceptance rate.  A forward-looking signal — the contrast to
+//! DSDE's post-hoc KLD diagnostics the paper leans on in §4.4 (AdaEDL's
+//! draft-side confidence goes wrong exactly when draft and target diverge).
+
+use super::SlPolicy;
+use crate::spec::history::SeqSignals;
+
+/// AdaEDL configuration (paper evaluates `base = 7`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaEdlConfig {
+    /// Maximum draft length per step (the "base" hyperparameter).
+    pub base: usize,
+    /// λ — entropy penalty coefficient in the acceptance lower bound.
+    pub lambda: f64,
+    /// θ — stop threshold scale on the historical acceptance EWMA.
+    pub theta: f64,
+    /// Minimum SL (never stop before drafting this many).
+    pub sl_min: usize,
+}
+
+impl Default for AdaEdlConfig {
+    fn default() -> Self {
+        AdaEdlConfig {
+            base: 7,
+            lambda: 0.35,
+            theta: 0.6,
+            sl_min: 1,
+        }
+    }
+}
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct AdaEdl {
+    cfg: AdaEdlConfig,
+}
+
+impl AdaEdl {
+    pub fn new(cfg: AdaEdlConfig) -> AdaEdl {
+        AdaEdl { cfg }
+    }
+
+    pub fn config(&self) -> &AdaEdlConfig {
+        &self.cfg
+    }
+
+    /// Entropy-based lower bound on the acceptance probability of slot j.
+    pub fn acceptance_lower_bound(&self, entropy: f32) -> f64 {
+        1.0 - self.cfg.lambda * (entropy.max(0.0) as f64).sqrt()
+    }
+}
+
+impl SlPolicy for AdaEdl {
+    fn name(&self) -> &'static str {
+        "adaedl"
+    }
+
+    fn propose(&self, _sig: &SeqSignals) -> usize {
+        self.cfg.base
+    }
+
+    fn should_stop(&self, sig: &SeqSignals, j: usize, entropy: f32, _top_p: f32) -> bool {
+        if j + 1 < self.cfg.sl_min {
+            return false;
+        }
+        let bound = self.acceptance_lower_bound(entropy);
+        let threshold = self.cfg.theta * sig.accept_ewma;
+        bound < threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposes_base() {
+        let p = AdaEdl::new(AdaEdlConfig::default());
+        assert_eq!(p.propose(&SeqSignals::default()), 7);
+    }
+
+    #[test]
+    fn low_entropy_keeps_drafting() {
+        let p = AdaEdl::new(AdaEdlConfig::default());
+        let s = SeqSignals::default();
+        assert!(!p.should_stop(&s, 2, 0.01, 0.99));
+    }
+
+    #[test]
+    fn high_entropy_stops() {
+        let p = AdaEdl::new(AdaEdlConfig::default());
+        let s = SeqSignals::default(); // accept_ewma starts at 1.0
+        // bound = 1 - 0.35*sqrt(9) = -0.05 < 0.6
+        assert!(p.should_stop(&s, 2, 9.0, 0.1));
+    }
+
+    #[test]
+    fn threshold_scales_with_historical_acceptance() {
+        let p = AdaEdl::new(AdaEdlConfig::default());
+        let mut low_acc = SeqSignals::default();
+        for _ in 0..20 {
+            low_acc.record_step(&[1.0], &[1.0], 4, 0);
+        }
+        // with terrible history, the threshold drops -> keeps drafting longer
+        let ent = 1.2f32; // bound = 1 - 0.35*1.095 ≈ 0.617
+        let fresh = SeqSignals::default();
+        assert!(!p.should_stop(&fresh, 2, ent, 0.5) || p.should_stop(&fresh, 2, ent, 0.5));
+        // bound 0.617 vs fresh threshold 0.6 -> continue; vs low-acc threshold ~0 -> continue
+        assert!(!p.should_stop(&low_acc, 2, ent, 0.5));
+        // but at higher entropy fresh stops while low-acc still drafts
+        let ent2 = 3.0f32; // bound = 1 - 0.35*1.732 ≈ 0.394
+        assert!(p.should_stop(&fresh, 2, ent2, 0.5));
+        assert!(!p.should_stop(&low_acc, 2, ent2, 0.5));
+    }
+
+    #[test]
+    fn respects_sl_min() {
+        let p = AdaEdl::new(AdaEdlConfig {
+            sl_min: 3,
+            ..Default::default()
+        });
+        let s = SeqSignals::default();
+        assert!(!p.should_stop(&s, 0, 99.0, 0.0));
+        assert!(!p.should_stop(&s, 1, 99.0, 0.0));
+        assert!(p.should_stop(&s, 2, 99.0, 0.0));
+    }
+
+    #[test]
+    fn lower_bound_monotone_in_entropy() {
+        let p = AdaEdl::new(AdaEdlConfig::default());
+        assert!(p.acceptance_lower_bound(0.5) > p.acceptance_lower_bound(2.0));
+        assert!((p.acceptance_lower_bound(0.0) - 1.0).abs() < 1e-12);
+    }
+}

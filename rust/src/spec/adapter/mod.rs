@@ -1,0 +1,63 @@
+//! SL adapters — the per-sequence, per-iteration speculation-length
+//! policies.  [`DsdeAdapter`] is the paper's contribution; [`StaticSl`],
+//! [`AdaEdl`] and autoregressive mode (SL = 0 handled by the engine) are the
+//! evaluation baselines.
+
+pub mod adaedl;
+pub mod dsde;
+pub mod static_sl;
+pub mod variants;
+
+pub use adaedl::{AdaEdl, AdaEdlConfig};
+pub use dsde::{DsdeAdapter, DsdeConfig};
+pub use static_sl::StaticSl;
+pub use variants::{DsdeAblated, DsdeEntropy, DsdeVariant};
+
+use crate::spec::history::SeqSignals;
+
+/// A per-sequence speculation-length policy.
+///
+/// The engine calls [`SlPolicy::propose`] before each speculative round to
+/// get the sequence's requested SL, and may consult
+/// [`SlPolicy::should_stop`] after each drafted token (early-stopping
+/// policies like AdaEDL).  All policies are **training-free**: the only
+/// inputs are the sequence's online signal history.
+pub trait SlPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Requested speculation length for the next round (before SL-cap and
+    /// budget clamping).
+    fn propose(&self, sig: &SeqSignals) -> usize;
+
+    /// Early-stop check during drafting: called after drafting token `j`
+    /// (0-based) with the draft's entropy and top-token probability at that
+    /// slot.  Returning true stops this sequence's drafting at j+1 tokens.
+    fn should_stop(&self, _sig: &SeqSignals, _j: usize, _entropy: f32, _top_p: f32) -> bool {
+        false
+    }
+
+    /// Whether the policy wants the engine to run the calibration phase
+    /// (paper §3.1.1) for new sequences.
+    fn wants_calibration(&self) -> bool {
+        false
+    }
+
+    /// Number of preliminary speculative steps in the calibration phase.
+    fn calibration_steps(&self) -> usize {
+        0
+    }
+
+    /// Freeze the calibration (e.g. compute Eq. 1's SL_max) once the
+    /// calibration phase completes.  Default: no-op.
+    fn finish_calibration(&self, _sig: &mut SeqSignals) {}
+}
+
+/// Construct a policy from config (used by CLI/bench plumbing).
+pub fn make_policy(kind: &crate::config::SlPolicyKind) -> Box<dyn SlPolicy> {
+    use crate::config::SlPolicyKind;
+    match kind {
+        SlPolicyKind::Static(k) => Box::new(StaticSl::new(*k)),
+        SlPolicyKind::Dsde(cfg) => Box::new(DsdeAdapter::new(cfg.clone())),
+        SlPolicyKind::AdaEdl(cfg) => Box::new(AdaEdl::new(cfg.clone())),
+    }
+}

@@ -1,0 +1,51 @@
+//! Static speculation-length baseline — what vLLM ships today: one fixed
+//! SL for every sequence and every step.  The paper's "Static-opt" is this
+//! policy with the per-dataset best k found by profiling (the costly sweep
+//! our Fig. 6 bench reproduces).
+
+use super::SlPolicy;
+use crate::spec::history::SeqSignals;
+
+/// Fixed-SL policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StaticSl {
+    pub k: usize,
+}
+
+impl StaticSl {
+    pub fn new(k: usize) -> StaticSl {
+        StaticSl { k }
+    }
+}
+
+impl SlPolicy for StaticSl {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn propose(&self, _sig: &SeqSignals) -> usize {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_proposes_k() {
+        let p = StaticSl::new(6);
+        let mut s = SeqSignals::default();
+        assert_eq!(p.propose(&s), 6);
+        s.record_step(&[9.0; 4], &[3.0; 4], 4, 0); // terrible signals
+        assert_eq!(p.propose(&s), 6); // ...static doesn't care
+    }
+
+    #[test]
+    fn no_early_stop() {
+        let p = StaticSl::new(4);
+        let s = SeqSignals::default();
+        assert!(!p.should_stop(&s, 0, 99.0, 0.0));
+        assert!(!p.wants_calibration());
+    }
+}

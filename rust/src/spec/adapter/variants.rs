@@ -1,0 +1,256 @@
+//! Adapter ablations + extensions.
+//!
+//! The paper's conclusion calls out two directions we implement here so the
+//! ablation bench can quantify them:
+//! * **component ablations** of the DSDE penalty — SF-only (drop WVIR) and
+//!   WVIR-only (drop SF) — isolating how much each signal contributes;
+//! * **the "optionally combined with entropy" variant** (§1 contribution
+//!   list): DSDE's post-hoc penalty blended with a forward-looking
+//!   entropy-based early-stop, getting both failure modes covered;
+//! * an **oracle** policy (upper bound): proposes exactly the number of
+//!   tokens that will be accepted next round — unrealizable online, used to
+//!   bound how much headroom any predictor has left.
+
+use super::dsde::{DsdeAdapter, DsdeConfig};
+use super::SlPolicy;
+use crate::spec::history::SeqSignals;
+
+/// Which part of the DSDE penalty to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DsdeVariant {
+    /// Full penalty SF·WVIR (the paper's Eq. 2).
+    Full,
+    /// SF only (immediate disagreement, no stability history).
+    SfOnly,
+    /// WVIR only (stability history, no immediate level).
+    WvirOnly,
+}
+
+/// DSDE with an ablated penalty term.
+#[derive(Clone, Debug)]
+pub struct DsdeAblated {
+    inner: DsdeAdapter,
+    variant: DsdeVariant,
+}
+
+impl DsdeAblated {
+    pub fn new(cfg: DsdeConfig, variant: DsdeVariant) -> DsdeAblated {
+        DsdeAblated {
+            inner: DsdeAdapter::new(cfg),
+            variant,
+        }
+    }
+
+    fn penalty(&self, sig: &SeqSignals) -> f64 {
+        match self.variant {
+            DsdeVariant::Full => self.inner.scale_factor(sig) * sig.wvir(),
+            DsdeVariant::SfOnly => self.inner.scale_factor(sig),
+            // WVIR fluctuates around 1; recenter so stable ≈ no penalty
+            DsdeVariant::WvirOnly => (sig.wvir() - 1.0).max(0.0),
+        }
+    }
+}
+
+impl SlPolicy for DsdeAblated {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            DsdeVariant::Full => "dsde",
+            DsdeVariant::SfOnly => "dsde-sf-only",
+            DsdeVariant::WvirOnly => "dsde-wvir-only",
+        }
+    }
+
+    fn propose(&self, sig: &SeqSignals) -> usize {
+        let cfg = self.inner.config();
+        if sig.calibrated_sl_max.is_none() && sig.steps < cfg.calib_steps {
+            return cfg.calib_sl.clamp(cfg.sl_min, cfg.sl_limit);
+        }
+        let sl_max = sig
+            .calibrated_sl_max
+            .unwrap_or(cfg.sl_limit)
+            .clamp(cfg.sl_min, cfg.sl_limit);
+        let delta = (sl_max - cfg.sl_min) as f64;
+        let penalty = self.penalty(sig);
+        if penalty >= 1.0 {
+            return cfg.sl_min;
+        }
+        let sl_hat = (1.0 - penalty) * delta + cfg.sl_min as f64;
+        (sl_hat.round() as usize).clamp(cfg.sl_min, sl_max)
+    }
+
+    fn wants_calibration(&self) -> bool {
+        true
+    }
+
+    fn calibration_steps(&self) -> usize {
+        self.inner.config().calib_steps
+    }
+
+    fn finish_calibration(&self, sig: &mut SeqSignals) {
+        sig.calibrated_sl_max = Some(self.inner.calibrated_sl_max(sig));
+    }
+}
+
+/// DSDE + entropy early-stop: the paper's "optionally combined with
+/// entropy" extension.  Proposes with the full DSDE rule but additionally
+/// stops drafting early when the draft's forward-looking entropy signals a
+/// likely rejection (AdaEDL-style bound), so a stale regional signal can't
+/// overdraft into a fresh difficulty spike.
+#[derive(Clone, Debug)]
+pub struct DsdeEntropy {
+    inner: DsdeAdapter,
+    /// entropy-bound coefficient (λ of the acceptance lower bound)
+    pub lambda: f64,
+    /// stop threshold scale on the historical acceptance EWMA
+    pub theta: f64,
+}
+
+impl DsdeEntropy {
+    pub fn new(cfg: DsdeConfig, lambda: f64, theta: f64) -> DsdeEntropy {
+        DsdeEntropy {
+            inner: DsdeAdapter::new(cfg),
+            lambda,
+            theta,
+        }
+    }
+}
+
+impl SlPolicy for DsdeEntropy {
+    fn name(&self) -> &'static str {
+        "dsde+entropy"
+    }
+
+    fn propose(&self, sig: &SeqSignals) -> usize {
+        self.inner.propose(sig)
+    }
+
+    fn should_stop(&self, sig: &SeqSignals, j: usize, entropy: f32, _top_p: f32) -> bool {
+        if j == 0 {
+            return false; // always draft at least one token
+        }
+        let bound = 1.0 - self.lambda * (entropy.max(0.0) as f64).sqrt();
+        bound < self.theta * sig.accept_ewma
+    }
+
+    fn wants_calibration(&self) -> bool {
+        true
+    }
+
+    fn calibration_steps(&self) -> usize {
+        self.inner.config().calib_steps
+    }
+
+    fn finish_calibration(&self, sig: &mut SeqSignals) {
+        sig.calibrated_sl_max = Some(self.inner.calibrated_sl_max(sig));
+    }
+}
+
+/// Oracle upper bound: told (by the harness) how many tokens will be
+/// accepted, it proposes exactly that + 1.  Only usable on the simulator
+/// where the bench can peek at the acceptance process; quantifies the
+/// remaining headroom of any online predictor.
+#[derive(Clone, Debug, Default)]
+pub struct OracleHint {
+    /// next-round accepted-run hint, set by the harness between rounds
+    pub next_accept: std::cell::Cell<usize>,
+}
+
+// OracleHint is driven by the single-threaded bench harness.
+unsafe impl Sync for OracleHint {}
+
+#[derive(Clone, Debug)]
+pub struct OraclePolicy {
+    pub hint: std::sync::Arc<OracleHint>,
+    pub sl_limit: usize,
+}
+
+impl SlPolicy for OraclePolicy {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn propose(&self, _sig: &SeqSignals) -> usize {
+        (self.hint.next_accept.get() + 1).clamp(1, self.sl_limit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn signals(klds: &[f32], sl_max: Option<usize>) -> SeqSignals {
+        let mut s = SeqSignals::default();
+        for &k in klds {
+            s.record_step(&[k], &[0.4], 4, 2);
+        }
+        s.calibrated_sl_max = sl_max;
+        s
+    }
+
+    #[test]
+    fn full_variant_matches_dsde() {
+        let cfg = DsdeConfig::default();
+        let ab = DsdeAblated::new(cfg.clone(), DsdeVariant::Full);
+        let base = DsdeAdapter::new(cfg);
+        for klds in [[0.05f32; 30], [0.5; 30], [1.5; 30]] {
+            let s = signals(&klds, Some(10));
+            assert_eq!(ab.propose(&s), base.propose(&s), "klds {:?}", klds[0]);
+        }
+    }
+
+    #[test]
+    fn sf_only_ignores_history_variance() {
+        let ab = DsdeAblated::new(DsdeConfig::default(), DsdeVariant::SfOnly);
+        // bursty history but calm last step -> SF-only stays aggressive
+        let mut s = SeqSignals::default();
+        for k in [0.05f32, 2.0, 0.05, 2.0, 0.05, 2.0, 0.05, 2.0, 0.05, 0.05] {
+            s.record_step(&[k], &[0.4], 4, 2);
+        }
+        s.calibrated_sl_max = Some(10);
+        let full = DsdeAblated::new(DsdeConfig::default(), DsdeVariant::Full);
+        assert!(ab.propose(&s) >= full.propose(&s));
+    }
+
+    #[test]
+    fn wvir_only_ignores_kld_level() {
+        let ab = DsdeAblated::new(DsdeConfig::default(), DsdeVariant::WvirOnly);
+        // constant (stable) but HIGH kld: WVIR-only sees no instability
+        let s = signals(&[2.0; 30], Some(10));
+        assert_eq!(ab.propose(&s), 10);
+        // the full rule collapses to min here
+        let full = DsdeAblated::new(DsdeConfig::default(), DsdeVariant::Full);
+        assert_eq!(full.propose(&s), 2);
+    }
+
+    #[test]
+    fn names_are_distinct() {
+        let cfg = DsdeConfig::default;
+        assert_ne!(
+            DsdeAblated::new(cfg(), DsdeVariant::SfOnly).name(),
+            DsdeAblated::new(cfg(), DsdeVariant::WvirOnly).name()
+        );
+    }
+
+    #[test]
+    fn entropy_variant_stops_on_high_entropy() {
+        let p = DsdeEntropy::new(DsdeConfig::default(), 0.35, 0.6);
+        let s = SeqSignals::default();
+        assert!(!p.should_stop(&s, 0, 99.0, 0.0), "never stop at j=0");
+        assert!(p.should_stop(&s, 1, 9.0, 0.0));
+        assert!(!p.should_stop(&s, 1, 0.01, 0.9));
+    }
+
+    #[test]
+    fn oracle_follows_hint() {
+        let hint = std::sync::Arc::new(OracleHint::default());
+        let p = OraclePolicy {
+            hint: hint.clone(),
+            sl_limit: 12,
+        };
+        let s = SeqSignals::default();
+        hint.next_accept.set(5);
+        assert_eq!(p.propose(&s), 6);
+        hint.next_accept.set(99);
+        assert_eq!(p.propose(&s), 12);
+    }
+}

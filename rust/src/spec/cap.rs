@@ -1,0 +1,168 @@
+//! Adaptive speculative-length capping (paper §3.3) — the straggler-problem
+//! mitigation.  In batched per-sequence decoding the round cost follows
+//! `max_i SL_i`, so a single aggressive prediction stalls the whole batch.
+//! The paper frames the cap as the minimizer of the MSE between one shared
+//! cap and the individual predictions (Eq. 9–10), which is the batch mean
+//! (Eq. 11).  Alternative consensus functions are provided for the ablation
+//! bench (`fig9_scalability --cap-mode ...`).
+
+use crate::util::stats::percentile;
+
+/// Consensus function for the per-batch cap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CapMode {
+    /// No cap — naive per-sequence decoding (the paper's "No Cap" series).
+    None,
+    /// Paper Eq. 11: arithmetic mean of the predictions (MSE minimizer).
+    Mean,
+    /// Median of the predictions (robust-consensus ablation).
+    Median,
+    /// 90th percentile (loose-cap ablation).
+    P90,
+}
+
+impl CapMode {
+    pub fn parse(s: &str) -> Option<CapMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "nocap" | "no-cap" => Some(CapMode::None),
+            "mean" => Some(CapMode::Mean),
+            "median" => Some(CapMode::Median),
+            "p90" => Some(CapMode::P90),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CapMode::None => "none",
+            CapMode::Mean => "mean",
+            CapMode::Median => "median",
+            CapMode::P90 => "p90",
+        }
+    }
+}
+
+/// Compute the batch cap for the given per-sequence predictions.  Returns
+/// `usize::MAX` for [`CapMode::None`] (i.e. no constraint).  The mean is
+/// rounded up: `ceil` keeps the cap from starving a homogeneous batch whose
+/// predictions all sit at x.5 after integer prediction.
+pub fn compute_cap(mode: CapMode, predictions: &[usize]) -> usize {
+    if predictions.is_empty() {
+        return usize::MAX;
+    }
+    let xs: Vec<f64> = predictions.iter().map(|&x| x as f64).collect();
+    match mode {
+        CapMode::None => usize::MAX,
+        CapMode::Mean => {
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            m.ceil() as usize
+        }
+        CapMode::Median => percentile(&xs, 0.5).round() as usize,
+        CapMode::P90 => percentile(&xs, 0.9).ceil() as usize,
+    }
+}
+
+/// Apply the cap: `SL_i ← min(SL_i, cap)`, preserving a floor of 1 so a
+/// pathological cap of 0 cannot disable speculation entirely.
+pub fn apply_cap(mode: CapMode, predictions: &mut [usize]) -> usize {
+    let cap = compute_cap(mode, predictions).max(1);
+    for p in predictions.iter_mut() {
+        *p = (*p).min(cap);
+    }
+    cap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, forall};
+
+    #[test]
+    fn mean_cap_is_mse_minimizer() {
+        // Eq. 9-11: the cap minimizing sum (cap - sl_i)^2 is the mean.
+        let preds = [4usize, 2, 3, 1];
+        let cap = compute_cap(CapMode::Mean, &preds);
+        let mse = |c: f64| -> f64 {
+            preds.iter().map(|&p| (c - p as f64).powi(2)).sum::<f64>() / preds.len() as f64
+        };
+        let exact_mean = 2.5;
+        assert!(mse(exact_mean) <= mse(2.0) && mse(exact_mean) <= mse(4.0));
+        assert_eq!(cap, 3); // ceil(2.5)
+    }
+
+    #[test]
+    fn none_mode_is_unbounded() {
+        assert_eq!(compute_cap(CapMode::None, &[1, 12, 3]), usize::MAX);
+    }
+
+    #[test]
+    fn cap_tames_outlier() {
+        let mut preds = vec![2usize, 2, 2, 12];
+        let cap = apply_cap(CapMode::Mean, &mut preds);
+        assert_eq!(cap, 5); // ceil(4.5)
+        assert_eq!(preds, vec![2, 2, 2, 5]);
+    }
+
+    #[test]
+    fn median_robust_to_outlier() {
+        let mut preds = vec![2usize, 2, 2, 12];
+        let cap = apply_cap(CapMode::Median, &mut preds);
+        assert_eq!(cap, 2);
+        assert_eq!(preds, vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn p90_is_loose() {
+        let preds = vec![2usize, 2, 2, 2, 2, 2, 2, 2, 2, 12];
+        let cap = compute_cap(CapMode::P90, &preds);
+        assert!(cap >= 3 && cap <= 12);
+    }
+
+    #[test]
+    fn empty_predictions_unbounded() {
+        assert_eq!(compute_cap(CapMode::Mean, &[]), usize::MAX);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [CapMode::None, CapMode::Mean, CapMode::Median, CapMode::P90] {
+            assert_eq!(CapMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(CapMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn cap_invariants_property() {
+        forall(
+            41,
+            300,
+            |r| {
+                let n = r.range(1, 65);
+                let preds: Vec<usize> = (0..n).map(|_| r.range(1, 13)).collect();
+                let mode = [CapMode::None, CapMode::Mean, CapMode::Median, CapMode::P90]
+                    [r.range(0, 4)];
+                (preds, mode)
+            },
+            |(preds, mode)| {
+                let mut capped = preds.clone();
+                let cap = apply_cap(*mode, &mut capped);
+                let max_in = *preds.iter().max().unwrap();
+                let min_in = *preds.iter().min().unwrap();
+                // capped values never exceed originals and never below 1
+                for (c, o) in capped.iter().zip(preds) {
+                    if c > o {
+                        return Err(format!("cap raised {o} -> {c}"));
+                    }
+                    if *c == 0 {
+                        return Err("capped to zero".into());
+                    }
+                }
+                // cap lies within [min, max] of predictions (or MAX for None)
+                if *mode != CapMode::None && !(min_in..=max_in).contains(&cap.min(max_in)) {
+                    return Err(format!("cap {cap} outside [{min_in}, {max_in}]"));
+                }
+                check(true, "")
+            },
+        );
+    }
+}

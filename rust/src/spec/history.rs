@@ -1,0 +1,264 @@
+//! Per-sequence signal history — the data structure behind the paper's
+//! Fig. 5: after every verification step the per-token KLD values are
+//! aggregated into short-term (N=10) and long-term (N=30) windows, from
+//! which the WVIR (Eq. 4) is computed with exponential-decay weights
+//! (Eq. 5–7).  Also tracks acceptance statistics for the calibration phase
+//! (Eq. 1) and for the AdaEDL baseline's historical acceptance rate.
+
+use crate::util::ring::Ring;
+use crate::util::stats::{decay_weights, weighted_variance};
+
+/// Configuration for the history windows.
+#[derive(Clone, Copy, Debug)]
+pub struct HistoryConfig {
+    pub short_window: usize,
+    pub long_window: usize,
+    pub decay: f64,
+}
+
+impl Default for HistoryConfig {
+    fn default() -> Self {
+        // paper: N_short = 10, N_long = 30, δ = 0.85
+        HistoryConfig {
+            short_window: 10,
+            long_window: 30,
+            decay: 0.85,
+        }
+    }
+}
+
+/// Rolling signal state for one sequence.
+#[derive(Clone, Debug)]
+pub struct SeqSignals {
+    cfg: HistoryConfig,
+    /// per-step mean KLD, newest first via Ring (capacity = long window)
+    kld_steps: Ring,
+    /// mean KLD of the most recent verified step (μ_KLD,last, Eq. 3)
+    pub last_step_mean_kld: f64,
+    /// per-step draft entropy mean of the most recent step
+    pub last_step_mean_entropy: f64,
+    /// number of verification steps observed
+    pub steps: usize,
+    /// total drafted / accepted tokens (block-efficiency bookkeeping)
+    pub drafted_total: u64,
+    pub accepted_total: u64,
+    /// EWMA of per-step acceptance rate (AdaEDL's historical signal)
+    pub accept_ewma: f64,
+    // ---- calibration phase statistics (paper Eq. 1) -------------------------
+    /// max tokens accepted in any single calibration step (SL_{A,max})
+    pub calib_max_accepted: usize,
+    /// running sum/count of per-token KLD during calibration (μ_KLD,pre)
+    pub calib_kld_sum: f64,
+    pub calib_kld_count: u64,
+    /// max single KLD seen during calibration (KLD_{pre,max})
+    pub calib_kld_max: f64,
+    /// SL_max frozen after the calibration phase completes
+    pub calibrated_sl_max: Option<usize>,
+}
+
+impl SeqSignals {
+    pub fn new(cfg: HistoryConfig) -> SeqSignals {
+        SeqSignals {
+            cfg,
+            kld_steps: Ring::new(cfg.long_window.max(cfg.short_window)),
+            last_step_mean_kld: 0.0,
+            last_step_mean_entropy: 0.0,
+            steps: 0,
+            drafted_total: 0,
+            accepted_total: 0,
+            accept_ewma: 1.0,
+            calib_max_accepted: 0,
+            calib_kld_sum: 0.0,
+            calib_kld_count: 0,
+            calib_kld_max: 0.0,
+            calibrated_sl_max: None,
+        }
+    }
+
+    /// Record one verification step's observations.
+    ///
+    /// `klds`/`entropies` hold the per-token signals for the tokens that
+    /// were actually verified this step (length = drafted k).
+    pub fn record_step(
+        &mut self,
+        klds: &[f32],
+        entropies: &[f32],
+        drafted: usize,
+        accepted: usize,
+    ) {
+        self.steps += 1;
+        self.drafted_total += drafted as u64;
+        self.accepted_total += accepted as u64;
+        let rate = if drafted > 0 {
+            accepted as f64 / drafted as f64
+        } else {
+            1.0
+        };
+        self.accept_ewma = 0.8 * self.accept_ewma + 0.2 * rate;
+        if !klds.is_empty() {
+            let mean_kld =
+                klds.iter().map(|&x| x as f64).sum::<f64>() / klds.len() as f64;
+            self.last_step_mean_kld = mean_kld;
+            self.kld_steps.push(mean_kld);
+        }
+        if !entropies.is_empty() {
+            self.last_step_mean_entropy = entropies
+                .iter()
+                .map(|&x| x as f64)
+                .sum::<f64>()
+                / entropies.len() as f64;
+        }
+    }
+
+    /// Record calibration-phase per-token KLDs + acceptance.
+    pub fn record_calibration(&mut self, klds: &[f32], accepted: usize) {
+        self.calib_max_accepted = self.calib_max_accepted.max(accepted);
+        for &k in klds {
+            let k = k as f64;
+            self.calib_kld_sum += k;
+            self.calib_kld_count += 1;
+            self.calib_kld_max = self.calib_kld_max.max(k);
+        }
+    }
+
+    /// μ_KLD,pre — mean KLD over all calibration tokens.
+    pub fn calib_mean_kld(&self) -> f64 {
+        if self.calib_kld_count == 0 {
+            0.0
+        } else {
+            self.calib_kld_sum / self.calib_kld_count as f64
+        }
+    }
+
+    /// Weighted variance of the most recent `n` per-step KLD means (Eq. 7,
+    /// values most-recent-first with decay weights from Eq. 5).
+    pub fn weighted_var(&self, n: usize) -> f64 {
+        let vals = self.kld_steps.latest(n);
+        if vals.len() < 2 {
+            return 0.0;
+        }
+        let w = decay_weights(vals.len(), self.cfg.decay);
+        weighted_variance(&vals, &w)
+    }
+
+    /// WVIR = Var_w(short) / Var_w(long) (Eq. 4).  Returns 1.0 while the
+    /// long window is still too empty to be meaningful, and caps the ratio
+    /// to avoid FP blowups from a near-zero denominator.
+    pub fn wvir(&self) -> f64 {
+        let long = self.weighted_var(self.cfg.long_window);
+        let short = self.weighted_var(self.cfg.short_window);
+        if self.kld_steps.len() < self.cfg.short_window.min(4) || long < 1e-12 {
+            return 1.0;
+        }
+        (short / long).min(1e6)
+    }
+
+    /// Overall acceptance rate so far.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted_total == 0 {
+            1.0
+        } else {
+            self.accepted_total as f64 / self.drafted_total as f64
+        }
+    }
+
+    pub fn history_len(&self) -> usize {
+        self.kld_steps.len()
+    }
+}
+
+impl Default for SeqSignals {
+    fn default() -> Self {
+        SeqSignals::new(HistoryConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_updates_means() {
+        let mut s = SeqSignals::default();
+        s.record_step(&[1.0, 3.0], &[0.5, 1.5], 2, 1);
+        assert!((s.last_step_mean_kld - 2.0).abs() < 1e-9);
+        assert!((s.last_step_mean_entropy - 1.0).abs() < 1e-9);
+        assert_eq!(s.steps, 1);
+        assert_eq!(s.drafted_total, 2);
+        assert_eq!(s.accepted_total, 1);
+    }
+
+    #[test]
+    fn wvir_is_one_with_sparse_history() {
+        let mut s = SeqSignals::default();
+        s.record_step(&[1.0], &[0.1], 1, 1);
+        assert_eq!(s.wvir(), 1.0);
+    }
+
+    #[test]
+    fn wvir_detects_recent_instability() {
+        let mut s = SeqSignals::default();
+        // long stable history...
+        for _ in 0..30 {
+            s.record_step(&[1.0], &[0.1], 4, 4);
+        }
+        let stable = s.wvir();
+        // ...followed by a volatile burst
+        for v in [0.2f32, 3.0, 0.5, 4.0, 0.1, 5.0] {
+            s.record_step(&[v], &[0.1], 4, 1);
+        }
+        let volatile = s.wvir();
+        assert!(
+            volatile > stable,
+            "wvir stable={stable:.4} volatile={volatile:.4}"
+        );
+        assert!(volatile > 1.0, "short-term var should exceed long-term");
+    }
+
+    #[test]
+    fn wvir_near_one_for_stationary_signal() {
+        let mut s = SeqSignals::default();
+        // alternating but stationary signal
+        for i in 0..60 {
+            let v = if i % 2 == 0 { 1.0 } else { 2.0 };
+            s.record_step(&[v], &[0.1], 4, 2);
+        }
+        let w = s.wvir();
+        assert!(w > 0.3 && w < 3.0, "wvir {w}");
+    }
+
+    #[test]
+    fn calibration_statistics() {
+        let mut s = SeqSignals::default();
+        s.record_calibration(&[0.5, 1.5], 3);
+        s.record_calibration(&[2.0], 5);
+        assert_eq!(s.calib_max_accepted, 5);
+        assert!((s.calib_mean_kld() - (0.5 + 1.5 + 2.0) / 3.0).abs() < 1e-9);
+        assert!((s.calib_kld_max - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn acceptance_rate_tracks_totals() {
+        let mut s = SeqSignals::default();
+        s.record_step(&[1.0; 4], &[0.0; 4], 4, 2);
+        s.record_step(&[1.0; 4], &[0.0; 4], 4, 4);
+        assert!((s.acceptance_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_moves_toward_recent_rate() {
+        let mut s = SeqSignals::default();
+        for _ in 0..20 {
+            s.record_step(&[1.0], &[0.0], 4, 0);
+        }
+        assert!(s.accept_ewma < 0.1, "ewma {}", s.accept_ewma);
+    }
+
+    #[test]
+    fn empty_step_keeps_last_kld() {
+        let mut s = SeqSignals::default();
+        s.record_step(&[2.0], &[1.0], 1, 1);
+        s.record_step(&[], &[], 0, 0);
+        assert!((s.last_step_mean_kld - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,132 @@
+//! Distribution utilities over f32 logits: softmax, log-softmax, KLD,
+//! entropy.  The serving hot path gets these fused from the Pallas
+//! `kld_stats` kernel inside the verify graph; this host implementation is
+//! the oracle for tests, the fallback for the simulator, and the basis of
+//! the rejection sampler's residual distribution.
+
+/// In-place numerically-stable softmax.
+pub fn softmax(logits: &mut [f32]) {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in logits.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        for x in logits.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+/// Softmax with temperature into a fresh Vec. `temp <= 0` produces a
+/// one-hot argmax distribution (greedy decoding's limit).
+pub fn softmax_t(logits: &[f32], temp: f64) -> Vec<f32> {
+    let mut out = vec![0.0f32; logits.len()];
+    if temp <= 0.0 {
+        let mut bi = 0;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > bv {
+                bv = x;
+                bi = i;
+            }
+        }
+        out[bi] = 1.0;
+        return out;
+    }
+    let t = temp as f32;
+    for (o, &x) in out.iter_mut().zip(logits) {
+        *o = x / t;
+    }
+    softmax(&mut out);
+    out
+}
+
+/// KL(p || q) between two probability vectors (natural log).
+pub fn kl_divergence(p: &[f32], q: &[f32]) -> f32 {
+    debug_assert_eq!(p.len(), q.len());
+    let mut kl = 0.0f64;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 0.0 {
+            kl += pi as f64 * ((pi as f64).ln() - (qi.max(1e-12) as f64).ln());
+        }
+    }
+    kl as f32
+}
+
+/// Shannon entropy of a probability vector (nats).
+pub fn entropy(p: &[f32]) -> f32 {
+    let mut h = 0.0f64;
+    for &pi in p {
+        if pi > 0.0 {
+            h -= pi as f64 * (pi as f64).ln();
+        }
+    }
+    h as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        softmax(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let mut x = vec![1000.0f32, 1001.0];
+        softmax(&mut x);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_t_zero_is_one_hot() {
+        let p = softmax_t(&[0.5, 3.0, -1.0], 0.0);
+        assert_eq!(p, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_t_high_temp_flattens() {
+        let p1 = softmax_t(&[1.0, 2.0], 0.5);
+        let p2 = softmax_t(&[1.0, 2.0], 4.0);
+        assert!(p2[0] > p1[0], "higher temp is flatter");
+    }
+
+    #[test]
+    fn kld_zero_for_identical() {
+        let p = softmax_t(&[0.3, 1.0, -2.0], 1.0);
+        assert!(kl_divergence(&p, &p).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kld_nonnegative_and_asymmetric() {
+        let p = softmax_t(&[2.0, 0.0, 0.0], 1.0);
+        let q = softmax_t(&[0.0, 0.0, 2.0], 1.0);
+        let ab = kl_divergence(&p, &q);
+        let ba = kl_divergence(&q, &p);
+        assert!(ab > 0.0);
+        assert!((ab - ba).abs() < 1e-6, "symmetric by construction here");
+        let r = softmax_t(&[1.0, 0.5, 0.0], 1.0);
+        assert!(kl_divergence(&p, &r) >= 0.0);
+    }
+
+    #[test]
+    fn entropy_uniform_is_log_n() {
+        let p = vec![0.25f32; 4];
+        assert!((entropy(&p) - (4.0f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_onehot_is_zero() {
+        let p = vec![0.0f32, 1.0, 0.0];
+        assert!(entropy(&p).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Speculative-decoding core: exact rejection sampling, signal computation,
+//! per-sequence signal history, the SL adapters (the paper's contribution),
+//! and the adaptive SL-cap.
+
+pub mod adapter;
+pub mod cap;
+pub mod history;
+pub mod kld;
+pub mod rejection;

@@ -1,0 +1,359 @@
+//! Exact speculative rejection sampling (Leviathan et al. 2023 / Chen et
+//! al. 2023) — vLLM's RejectionSampler equivalent.
+//!
+//! For each drafted token x_j with draft distribution q_j and target
+//! distribution p_j:
+//!   * accept with probability min(1, p_j(x_j) / q_j(x_j));
+//!   * on rejection, emit a corrected token from the residual distribution
+//!     norm(max(0, p_j − q_j)) and stop;
+//!   * if all k tokens are accepted, emit one **bonus** token from the
+//!     target's distribution at the position after the last draft token.
+//!
+//! This procedure provably samples each emitted token from the target
+//! distribution — verified by the `exactness_*` property tests below.
+
+use crate::spec::kld::softmax_t;
+use crate::util::rng::Rng;
+
+/// Outcome of verifying one sequence's drafted tokens.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerifyOutcome {
+    /// Tokens to append: accepted prefix + (correction | bonus).
+    pub tokens: Vec<u32>,
+    /// Number of draft tokens accepted (0..=k).
+    pub accepted: usize,
+    /// True iff all k drafts were accepted (the trailing token is a bonus).
+    pub bonus: bool,
+}
+
+/// Rejection-sample one sequence.
+///
+/// * `draft_tokens[j]` — drafted token ids (len k).
+/// * `draft_dists[j]` — draft probability distribution at slot j (len V).
+/// * `target_dists[j]` — target distribution at slot j, for j in 0..=k — the
+///   entry at k is the bonus position.
+pub fn verify_sequence(
+    rng: &mut Rng,
+    draft_tokens: &[u32],
+    draft_dists: &[Vec<f32>],
+    target_dists: &[Vec<f32>],
+) -> VerifyOutcome {
+    let k = draft_tokens.len();
+    assert_eq!(draft_dists.len(), k, "draft dists");
+    assert!(target_dists.len() >= k + 1, "need k+1 target dists");
+    let mut tokens = Vec::with_capacity(k + 1);
+    for j in 0..k {
+        let x = draft_tokens[j] as usize;
+        let p = target_dists[j][x];
+        let q = draft_dists[j][x].max(1e-12);
+        let r = rng.f64() as f32;
+        if r < (p / q).min(1.0) {
+            tokens.push(draft_tokens[j]);
+            continue;
+        }
+        // rejected: sample from residual norm(max(0, p - q))
+        let tok = sample_residual(rng, &target_dists[j], &draft_dists[j]);
+        tokens.push(tok);
+        return VerifyOutcome {
+            tokens,
+            accepted: j,
+            bonus: false,
+        };
+    }
+    // all accepted: bonus token from the target's next-position distribution
+    let bonus_tok = sample_dist(rng, &target_dists[k]);
+    tokens.push(bonus_tok);
+    VerifyOutcome {
+        tokens,
+        accepted: k,
+        bonus: true,
+    }
+}
+
+/// Sample from norm(max(0, p − q)); falls back to p if the residual has no
+/// mass (possible only through numerical underflow).
+pub fn sample_residual(rng: &mut Rng, p: &[f32], q: &[f32]) -> u32 {
+    let mut total = 0.0f64;
+    for (&pi, &qi) in p.iter().zip(q) {
+        let d = (pi - qi).max(0.0);
+        total += d as f64;
+    }
+    if total <= 1e-12 {
+        return sample_dist(rng, p);
+    }
+    let mut t = rng.f64() * total;
+    for (i, (&pi, &qi)) in p.iter().zip(q).enumerate() {
+        let d = ((pi - qi).max(0.0)) as f64;
+        t -= d;
+        if t <= 0.0 {
+            return i as u32;
+        }
+    }
+    (p.len() - 1) as u32
+}
+
+/// Sample an index from a probability vector.
+pub fn sample_dist(rng: &mut Rng, p: &[f32]) -> u32 {
+    let mut t = rng.f64() as f32 * p.iter().sum::<f32>();
+    for (i, &pi) in p.iter().enumerate() {
+        t -= pi;
+        if t <= 0.0 {
+            return i as u32;
+        }
+    }
+    (p.len() - 1) as u32
+}
+
+/// Theoretical per-token acceptance probability E_x~q[min(1, p/q)] =
+/// 1 − TV(p, q).  Used by tests and the simulator calibration.
+pub fn acceptance_prob(p: &[f32], q: &[f32]) -> f64 {
+    let mut a = 0.0f64;
+    for (&pi, &qi) in p.iter().zip(q) {
+        a += (pi.min(qi)) as f64;
+    }
+    a
+}
+
+/// Convenience: greedy "rejection sampling" at temperature 0 — a draft
+/// token is accepted iff it equals the target argmax; the correction/bonus
+/// is the target argmax.  (This is the temp→0 limit of the exact sampler.)
+pub fn verify_sequence_greedy(
+    draft_tokens: &[u32],
+    target_logits: &[&[f32]],
+) -> VerifyOutcome {
+    let k = draft_tokens.len();
+    assert!(target_logits.len() >= k + 1);
+    let mut tokens = Vec::with_capacity(k + 1);
+    for j in 0..k {
+        let am = crate::util::rng::argmax(target_logits[j]) as u32;
+        if draft_tokens[j] == am {
+            tokens.push(am);
+        } else {
+            tokens.push(am);
+            return VerifyOutcome {
+                tokens,
+                accepted: j,
+                bonus: false,
+            };
+        }
+    }
+    tokens.push(crate::util::rng::argmax(target_logits[k]) as u32);
+    VerifyOutcome {
+        tokens,
+        accepted: k,
+        bonus: true,
+    }
+}
+
+/// Build a temperature-adjusted distribution from logits (helper shared by
+/// the PJRT model wrapper).
+pub fn dist_from_logits(logits: &[f32], temp: f64) -> Vec<f32> {
+    softmax_t(logits, temp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, forall};
+    use crate::util::rng::Rng;
+
+    fn random_dist(rng: &mut Rng, v: usize, sharp: f64) -> Vec<f32> {
+        let logits: Vec<f32> = (0..v).map(|_| (rng.normal() * sharp) as f32).collect();
+        softmax_t(&logits, 1.0)
+    }
+
+    #[test]
+    fn accepts_when_distributions_match() {
+        let mut rng = Rng::new(1);
+        let v = 16;
+        let p = random_dist(&mut rng, v, 2.0);
+        // draft == target -> always accept
+        let mut accepted = 0;
+        for _ in 0..200 {
+            let tok = sample_dist(&mut rng, &p);
+            let out = verify_sequence(
+                &mut rng,
+                &[tok],
+                &[p.clone()],
+                &[p.clone(), p.clone()],
+            );
+            if out.accepted == 1 {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 200);
+    }
+
+    #[test]
+    fn rejects_disjoint_supports() {
+        let mut rng = Rng::new(2);
+        let p = vec![0.0f32, 0.0, 0.5, 0.5];
+        let q = vec![0.5f32, 0.5, 0.0, 0.0];
+        for _ in 0..50 {
+            let tok = sample_dist(&mut rng, &q);
+            let out = verify_sequence(
+                &mut rng,
+                &[tok],
+                &[q.clone()],
+                &[p.clone(), p.clone()],
+            );
+            assert_eq!(out.accepted, 0);
+            assert!(out.tokens[0] >= 2, "correction must come from target support");
+        }
+    }
+
+    #[test]
+    fn bonus_emitted_on_full_acceptance() {
+        let mut rng = Rng::new(3);
+        let p = vec![1.0f32, 0.0];
+        let out = verify_sequence(
+            &mut rng,
+            &[0, 0, 0],
+            &[p.clone(), p.clone(), p.clone()],
+            &[p.clone(), p.clone(), p.clone(), p.clone()],
+        );
+        assert_eq!(out.accepted, 3);
+        assert!(out.bonus);
+        assert_eq!(out.tokens, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn acceptance_prob_is_one_minus_tv() {
+        let p = vec![0.6f32, 0.4, 0.0];
+        let q = vec![0.2f32, 0.4, 0.4];
+        // TV = 0.5 * (0.4 + 0 + 0.4) = 0.4 -> acceptance 0.6
+        assert!((acceptance_prob(&p, &q) - 0.6).abs() < 1e-6);
+    }
+
+    /// The core exactness property: for arbitrary draft/target pairs, the
+    /// distribution of the FIRST emitted token equals the target
+    /// distribution p_0 (chi-square-style tolerance over many trials).
+    #[test]
+    fn exactness_first_token_matches_target() {
+        forall(
+            11,
+            8,
+            |r| {
+                let v = 8;
+                (random_dist(r, v, 1.5), random_dist(r, v, 1.5))
+            },
+            |(p, q)| {
+                let mut rng = Rng::new(99);
+                let v = p.len();
+                let trials = 30_000;
+                let mut counts = vec![0usize; v];
+                for _ in 0..trials {
+                    let tok = sample_dist(&mut rng, q);
+                    let out = verify_sequence(
+                        &mut rng,
+                        &[tok],
+                        &[q.clone()],
+                        &[p.clone(), p.clone()],
+                    );
+                    counts[out.tokens[0] as usize] += 1;
+                }
+                for i in 0..v {
+                    let emp = counts[i] as f64 / trials as f64;
+                    let expect = p[i] as f64;
+                    let se = (expect * (1.0 - expect) / trials as f64).sqrt();
+                    if (emp - expect).abs() > 6.0 * se + 0.003 {
+                        return Err(format!(
+                            "token {i}: empirical {emp:.4} vs target {expect:.4}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Acceptance *rate* must match 1 − TV(p, q).
+    #[test]
+    fn exactness_acceptance_rate() {
+        forall(
+            13,
+            6,
+            |r| (random_dist(r, 12, 2.0), random_dist(r, 12, 2.0)),
+            |(p, q)| {
+                let mut rng = Rng::new(7);
+                let trials = 20_000;
+                let mut acc = 0usize;
+                for _ in 0..trials {
+                    let tok = sample_dist(&mut rng, q);
+                    let out = verify_sequence(
+                        &mut rng,
+                        &[tok],
+                        &[q.clone()],
+                        &[p.clone(), p.clone()],
+                    );
+                    acc += out.accepted;
+                }
+                let emp = acc as f64 / trials as f64;
+                let expect = acceptance_prob(p, q);
+                check(
+                    (emp - expect).abs() < 0.02,
+                    format!("acceptance {emp:.4} vs expected {expect:.4}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn multi_token_stops_at_first_rejection() {
+        let mut rng = Rng::new(5);
+        let p_accept = vec![1.0f32, 0.0];
+        let p_reject = vec![0.0f32, 1.0];
+        // draft always proposes token 0; slot 1 target mass is on token 1
+        let out = verify_sequence(
+            &mut rng,
+            &[0, 0, 0],
+            &[p_accept.clone(), p_accept.clone(), p_accept.clone()],
+            &[
+                p_accept.clone(),
+                p_reject.clone(),
+                p_accept.clone(),
+                p_accept.clone(),
+            ],
+        );
+        assert_eq!(out.accepted, 1);
+        assert!(!out.bonus);
+        assert_eq!(out.tokens, vec![0, 1]); // accepted, then correction
+    }
+
+    #[test]
+    fn greedy_verify_matches_argmax_chain() {
+        let t0 = [0.1f32, 0.9];
+        let t1 = [0.8f32, 0.2];
+        let t2 = [0.3f32, 0.7];
+        let out = verify_sequence_greedy(&[1, 0], &[&t0, &t1, &t2]);
+        assert_eq!(out.accepted, 2);
+        assert!(out.bonus);
+        assert_eq!(out.tokens, vec![1, 0, 1]);
+        let out2 = verify_sequence_greedy(&[1, 1], &[&t0, &t1, &t2]);
+        assert_eq!(out2.accepted, 1);
+        assert_eq!(out2.tokens, vec![1, 0]);
+    }
+
+    #[test]
+    fn residual_sampler_only_emits_positive_residual() {
+        let mut rng = Rng::new(17);
+        let p = vec![0.5f32, 0.3, 0.2, 0.0];
+        let q = vec![0.6f32, 0.1, 0.1, 0.2];
+        // residual support: {1, 2}
+        for _ in 0..500 {
+            let t = sample_residual(&mut rng, &p, &q);
+            assert!(t == 1 || t == 2, "got {t}");
+        }
+    }
+
+    #[test]
+    fn sample_dist_covers_support() {
+        let mut rng = Rng::new(19);
+        let p = vec![0.25f32; 4];
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample_dist(&mut rng, &p) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

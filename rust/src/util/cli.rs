@@ -1,0 +1,182 @@
+//! Tiny argument parser (no `clap` offline): `--key value`, `--key=value`,
+//! boolean `--flag`, and positional arguments, with typed getters and a
+//! generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Declarative flag spec for usage/help output.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.opts.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--buckets 1,4,16`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage block from flag specs.
+pub fn usage(prog: &str, summary: &str, specs: &[FlagSpec]) -> String {
+    let mut s = format!("{prog} — {summary}\n\nOptions:\n");
+    for f in specs {
+        let def = f
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, def));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--batch", "8", "--mode=fast"]);
+        assert_eq!(a.get("batch"), Some("8"));
+        assert_eq!(a.get("mode"), Some("fast"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        // value-less flags must come last or before another --flag: a bare
+        // token after a flag is consumed as its value (documented behavior).
+        let a = parse(&["run", "trace.json", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "trace.json".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = parse(&["--n", "42", "--rate", "1.5"]);
+        assert_eq!(a.usize_or("n", 0), 42);
+        assert_eq!(a.f64_or("rate", 0.0), 1.5);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--buckets", "1,4,16"]);
+        assert_eq!(a.usize_list_or("buckets", &[]), vec![1, 4, 16]);
+        assert_eq!(a.usize_list_or("other", &[2]), vec![2]);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["--check"]);
+        assert!(a.flag("check"));
+        assert_eq!(a.get("check"), None);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "dsde",
+            "engine",
+            &[FlagSpec {
+                name: "batch",
+                help: "batch size",
+                default: Some("8"),
+            }],
+        );
+        assert!(u.contains("--batch"));
+        assert!(u.contains("default: 8"));
+    }
+}

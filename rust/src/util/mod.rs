@@ -1,0 +1,12 @@
+//! Foundational substrates built in-crate (the offline vendor set has no
+//! `rand`, `serde`, `clap`, `criterion`, or `proptest` — so we provide the
+//! pieces the rest of the stack needs ourselves).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod ring;
+pub mod rng;
+pub mod stats;

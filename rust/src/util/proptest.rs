@@ -1,0 +1,78 @@
+//! Minimal property-testing harness (no `proptest` crate offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; failures report the case index and the
+//! sub-seed so a failing input can be reproduced deterministically with
+//! [`reproduce`].  Used by the coordinator invariants tests (routing,
+//! batching, KV accounting, rejection-sampler exactness).
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` inputs drawn from `gen`. Panics with the
+/// reproducing seed on the first failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let sub_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = Rng::new(sub_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (reproduce with seed {sub_seed}):\n  \
+                 input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Re-generate the input for a failing sub-seed (for debugging).
+pub fn reproduce<T, G: FnMut(&mut Rng) -> T>(sub_seed: u64, mut gen: G) -> T {
+    let mut rng = Rng::new(sub_seed);
+    gen(&mut rng)
+}
+
+/// Assert helper: turns a boolean + message into the Result the runner wants.
+pub fn check(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |r| r.range(0, 100),
+            |&x| {
+                count += 1;
+                check(x < 100, "in range")
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(2, 100, |r| r.range(0, 10), |&x| check(x < 5, format!("{x} >= 5")));
+    }
+
+    #[test]
+    fn reproduce_regenerates_same_input() {
+        let a = reproduce(42, |r| r.next_u64());
+        let b = reproduce(42, |r| r.next_u64());
+        assert_eq!(a, b);
+    }
+}

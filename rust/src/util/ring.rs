@@ -1,0 +1,135 @@
+//! Fixed-capacity ring buffer used for the per-sequence KLD signal windows
+//! (paper Fig. 5: short N=10 and long N=30 histories).  Pushing beyond
+//! capacity evicts the oldest entry; iteration order is most-recent-first to
+//! line up with the paper's reverse index i (Eq. 5).
+
+/// Fixed-capacity ring buffer of f64 with most-recent-first reads.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    buf: Vec<f64>,
+    cap: usize,
+    head: usize, // next write slot
+    len: usize,
+}
+
+impl Ring {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Ring {
+            buf: vec![0.0; cap],
+            cap,
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.buf[self.head] = x;
+        self.head = (self.head + 1) % self.cap;
+        if self.len < self.cap {
+            self.len += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.head = 0;
+    }
+
+    /// k-th most recent value (k = 0 is the newest). None if out of range.
+    pub fn recent(&self, k: usize) -> Option<f64> {
+        if k >= self.len {
+            return None;
+        }
+        let idx = (self.head + self.cap - 1 - k) % self.cap;
+        Some(self.buf[idx])
+    }
+
+    /// Copy out up to `n` most recent values, newest first.
+    pub fn latest(&self, n: usize) -> Vec<f64> {
+        (0..n.min(self.len)).map(|k| self.recent(k).unwrap()).collect()
+    }
+
+    /// Iterate newest → oldest.
+    pub fn iter_recent(&self) -> impl Iterator<Item = f64> + '_ {
+        (0..self.len).map(move |k| self.recent(k).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_recent_order() {
+        let mut r = Ring::new(3);
+        r.push(1.0);
+        r.push(2.0);
+        r.push(3.0);
+        assert_eq!(r.recent(0), Some(3.0));
+        assert_eq!(r.recent(1), Some(2.0));
+        assert_eq!(r.recent(2), Some(1.0));
+        assert_eq!(r.recent(3), None);
+    }
+
+    #[test]
+    fn eviction_keeps_newest() {
+        let mut r = Ring::new(3);
+        for i in 1..=5 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.latest(3), vec![5.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn latest_truncates_to_len() {
+        let mut r = Ring::new(10);
+        r.push(7.0);
+        assert_eq!(r.latest(5), vec![7.0]);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut r = Ring::new(2);
+        r.push(1.0);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.recent(0), None);
+    }
+
+    #[test]
+    fn full_flag() {
+        let mut r = Ring::new(2);
+        assert!(!r.is_full());
+        r.push(0.0);
+        r.push(0.0);
+        assert!(r.is_full());
+    }
+
+    #[test]
+    fn iter_matches_latest() {
+        let mut r = Ring::new(4);
+        for i in 0..6 {
+            r.push(i as f64);
+        }
+        let via_iter: Vec<f64> = r.iter_recent().collect();
+        assert_eq!(via_iter, r.latest(4));
+    }
+}

@@ -1,0 +1,254 @@
+//! Statistics helpers: plain + exponentially-weighted moments (paper
+//! Eq. 6–7), Pearson correlation (paper Table 2), percentiles, and an
+//! online Welford accumulator for metrics.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for len < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Weighted mean over (value, weight) pairs — paper Eq. 6.
+pub fn weighted_mean(values: &[f64], weights: &[f64]) -> f64 {
+    assert_eq!(values.len(), weights.len());
+    let wsum: f64 = weights.iter().sum();
+    if wsum <= 0.0 {
+        return 0.0;
+    }
+    values
+        .iter()
+        .zip(weights)
+        .map(|(v, w)| v * w)
+        .sum::<f64>()
+        / wsum
+}
+
+/// Weighted variance over (value, weight) pairs — paper Eq. 7.
+pub fn weighted_variance(values: &[f64], weights: &[f64]) -> f64 {
+    assert_eq!(values.len(), weights.len());
+    let wsum: f64 = weights.iter().sum();
+    if wsum <= 0.0 {
+        return 0.0;
+    }
+    let wm = weighted_mean(values, weights);
+    values
+        .iter()
+        .zip(weights)
+        .map(|(v, w)| w * (v - wm) * (v - wm))
+        .sum::<f64>()
+        / wsum
+}
+
+/// Exponential-decay weights α_i = δ^(i-1) for i = 1..=n where i == 1 is the
+/// most recent observation — paper Eq. 5.  `values` must be ordered
+/// most-recent-first; the returned weights align with that order.
+pub fn decay_weights(n: usize, delta: f64) -> Vec<f64> {
+    (0..n).map(|i| delta.powi(i as i32)).collect()
+}
+
+/// Pearson correlation coefficient r; returns None if either side is
+/// degenerate (zero variance) or lengths mismatch/empty.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return None;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return None;
+    }
+    Some(sxy / (sxx * syy).sqrt())
+}
+
+/// p-quantile (0..=1) by linear interpolation over a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = p.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let frac = idx - lo as f64;
+        s[lo] * (1.0 - frac) + s[hi] * frac
+    }
+}
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn weighted_mean_matches_unweighted_for_equal_weights() {
+        let xs = [2.0, 4.0, 9.0];
+        let w = [1.0, 1.0, 1.0];
+        assert!((weighted_mean(&xs, &w) - mean(&xs)).abs() < 1e-12);
+        assert!((weighted_variance(&xs, &w) - variance(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_variance_emphasizes_recent() {
+        // values most-recent-first; a recent outlier dominates under decay
+        let recent_spike = [10.0, 1.0, 1.0, 1.0, 1.0];
+        let old_spike = [1.0, 1.0, 1.0, 1.0, 10.0];
+        let w = decay_weights(5, 0.5);
+        assert!(
+            weighted_variance(&recent_spike, &w) > weighted_variance(&old_spike, &w)
+        );
+    }
+
+    #[test]
+    fn decay_weights_match_eq5() {
+        let w = decay_weights(4, 0.85);
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] - 0.85).abs() < 1e-12);
+        assert!((w[3] - 0.85f64.powi(3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys).unwrap() - 1.0).abs() < 1e-12);
+        let neg = [-2.0, -4.0, -6.0];
+        assert!((pearson(&xs, &neg).unwrap() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_degenerate_is_none() {
+        assert!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]).is_none());
+        assert!(pearson(&[1.0], &[1.0]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-9);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 9.0);
+        assert_eq!(w.count(), 8);
+    }
+}

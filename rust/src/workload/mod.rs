@@ -1,0 +1,275 @@
+//! Workload generation: the paper's eight evaluation datasets as synthetic
+//! request generators (prompt text of the right task flavor + length and
+//! output-length distributions from the dataset profile), plus arrival
+//! processes for open-loop serving experiments.
+
+use crate::engine::request::{Request, SamplingParams};
+use crate::model::vocab;
+use crate::sim::regime::DatasetProfile;
+use crate::util::rng::Rng;
+
+/// A named dataset workload.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub profile: DatasetProfile,
+}
+
+impl Dataset {
+    pub fn by_name(name: &str) -> Option<Dataset> {
+        DatasetProfile::by_name(name).map(|profile| Dataset { profile })
+    }
+
+    pub fn all() -> Vec<Dataset> {
+        DatasetProfile::all()
+            .into_iter()
+            .map(|profile| Dataset { profile })
+            .collect()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.profile.name
+    }
+
+    /// Task flavor used for prompt text synthesis.
+    fn flavor(&self) -> &'static str {
+        match self.profile.name {
+            "humaneval" => "code",
+            "sharegpt" => "dialogue",
+            "gsm8k" => "math",
+            _ => "prose",
+        }
+    }
+}
+
+/// Deterministic request generator over a dataset.
+pub struct WorkloadGen {
+    dataset: Dataset,
+    rng: Rng,
+    next_id: u64,
+    temperature: f64,
+    /// clamp on generated output length (e.g. context budget of the tiny
+    /// PJRT model); usize::MAX = profile-driven only
+    pub max_output: usize,
+    pub max_prompt: usize,
+}
+
+impl WorkloadGen {
+    pub fn new(dataset: Dataset, seed: u64) -> WorkloadGen {
+        WorkloadGen {
+            dataset,
+            rng: Rng::new(seed),
+            next_id: 0,
+            temperature: 0.0,
+            max_output: usize::MAX,
+            max_prompt: usize::MAX,
+        }
+    }
+
+    pub fn with_temperature(mut self, t: f64) -> WorkloadGen {
+        self.temperature = t;
+        self
+    }
+
+    /// Constrain lengths (used by the PJRT path whose context is 160).
+    pub fn with_limits(mut self, max_prompt: usize, max_output: usize) -> WorkloadGen {
+        self.max_prompt = max_prompt;
+        self.max_output = max_output;
+        self
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    /// Synthesize one request.
+    pub fn next_request(&mut self) -> Request {
+        let id = self.next_id;
+        self.next_id += 1;
+        let p = &self.dataset.profile;
+        // lengths: lognormal-ish around the profile means
+        let plen = ((p.mean_prompt as f64) * (0.6 + 0.8 * self.rng.f64())) as usize;
+        let plen = plen.clamp(8, self.max_prompt.max(8));
+        let olen = ((p.mean_output as f64) * (0.6 + 0.8 * self.rng.f64())) as usize;
+        let olen = olen.clamp(4, self.max_output.max(4));
+        let prompt = self.prompt_text(plen);
+        Request::new(
+            id,
+            prompt,
+            SamplingParams {
+                temperature: self.temperature,
+                max_tokens: olen,
+                stop_token: None,
+            },
+        )
+    }
+
+    /// A batch of n requests.
+    pub fn batch(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+
+    fn prompt_text(&mut self, len: usize) -> Vec<u32> {
+        let text = match self.dataset.flavor() {
+            "code" => Self::code_prompt(&mut self.rng),
+            "dialogue" => Self::dialogue_prompt(&mut self.rng),
+            "math" => Self::math_prompt(&mut self.rng),
+            _ => Self::prose_prompt(&mut self.rng),
+        };
+        let mut toks = vocab::encode(&text);
+        toks.truncate(len);
+        while toks.len() < len {
+            toks.push(b' ' as u32);
+        }
+        toks
+    }
+
+    fn code_prompt(rng: &mut Rng) -> String {
+        let fns = ["compute", "process", "merge", "scan", "reduce"];
+        let vars = ["count", "total", "idx", "value", "acc"];
+        format!(
+            "def {}({}):\n    {} = 0\n    for {} in range({}):\n        ",
+            fns[rng.range(0, fns.len())],
+            vars[rng.range(0, vars.len())],
+            vars[rng.range(0, vars.len())],
+            vars[rng.range(0, vars.len())],
+            rng.range(2, 64)
+        )
+    }
+
+    fn dialogue_prompt(rng: &mut Rng) -> String {
+        let topics = [
+            "the overall cost",
+            "a new method",
+            "daily traffic",
+            "the main problem",
+            "future growth",
+        ];
+        format!(
+            "User: Can you explain {} in simple terms?\nAgent: ",
+            topics[rng.range(0, topics.len())]
+        )
+    }
+
+    fn math_prompt(rng: &mut Rng) -> String {
+        format!(
+            "Q: A box holds {} items and another holds {} items. Each item \
+             costs {}. What is the total cost?\nA: ",
+            rng.range(2, 40),
+            rng.range(2, 40),
+            rng.range(2, 12)
+        )
+    }
+
+    fn prose_prompt(rng: &mut Rng) -> String {
+        let subjects = ["The system", "A model", "The report", "The market"];
+        format!(
+            "{} shows the results clearly. Summarize: ",
+            subjects[rng.range(0, subjects.len())]
+        )
+    }
+}
+
+/// Poisson arrival process (for open-loop server experiments).
+pub struct PoissonArrivals {
+    rng: Rng,
+    rate: f64,
+    next_at: f64,
+}
+
+impl PoissonArrivals {
+    pub fn new(rate_per_s: f64, seed: u64) -> PoissonArrivals {
+        let mut rng = Rng::new(seed);
+        let first = rng.exponential(rate_per_s);
+        PoissonArrivals {
+            rng,
+            rate: rate_per_s,
+            next_at: first,
+        }
+    }
+
+    /// Number of arrivals in (now - dt, now]; advances internal state.
+    pub fn arrivals_until(&mut self, now: f64) -> usize {
+        let mut n = 0;
+        while self.next_at <= now {
+            n += 1;
+            self.next_at += self.rng.exponential(self.rate);
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_eight_datasets_present() {
+        let names: Vec<&str> = Dataset::all().iter().map(|d| d.name()).collect();
+        for want in [
+            "cnndm", "xsum", "gsm8k", "hotpotqa", "nq", "humaneval", "sharegpt",
+            "wmt14",
+        ] {
+            assert!(names.contains(&want), "{want} missing");
+        }
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mk = || {
+            let mut g = WorkloadGen::new(Dataset::by_name("cnndm").unwrap(), 42);
+            g.batch(5)
+                .iter()
+                .map(|r| (r.prompt.clone(), r.params.max_tokens))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn limits_respected() {
+        let mut g = WorkloadGen::new(Dataset::by_name("humaneval").unwrap(), 1)
+            .with_limits(48, 80);
+        for r in g.batch(50) {
+            assert!(r.prompt.len() <= 48);
+            assert!(r.params.max_tokens <= 80);
+        }
+    }
+
+    #[test]
+    fn ids_are_unique_and_sequential() {
+        let mut g = WorkloadGen::new(Dataset::by_name("nq").unwrap(), 2);
+        let ids: Vec<u64> = g.batch(10).iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn code_prompts_look_like_code() {
+        let mut g = WorkloadGen::new(Dataset::by_name("humaneval").unwrap(), 3);
+        let r = g.next_request();
+        let text = vocab::decode(&r.prompt);
+        assert!(text.contains("def "), "{text}");
+    }
+
+    #[test]
+    fn temperature_propagates() {
+        let mut g =
+            WorkloadGen::new(Dataset::by_name("xsum").unwrap(), 4).with_temperature(1.0);
+        assert_eq!(g.next_request().params.temperature, 1.0);
+    }
+
+    #[test]
+    fn poisson_rate_approximately_met() {
+        let mut p = PoissonArrivals::new(10.0, 5);
+        let n = p.arrivals_until(100.0);
+        assert!((800..1200).contains(&n), "n = {n}");
+    }
+
+    #[test]
+    fn poisson_monotone_consumption() {
+        let mut p = PoissonArrivals::new(5.0, 6);
+        let a = p.arrivals_until(10.0);
+        let b = p.arrivals_until(10.0); // same time again -> nothing new
+        assert!(a > 0);
+        assert_eq!(b, 0);
+    }
+}

@@ -1,0 +1,293 @@
+//! Engine-level integration + property tests over the simulated substrate:
+//! cross-module invariants that unit tests can't see (adapter × scheduler ×
+//! KV × cap interplay), and the paper's qualitative claims in miniature.
+
+use dsde::config::{CapMode, EngineConfig, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::engine::request::{Request, SamplingParams};
+use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::sim::regime::DatasetProfile;
+use dsde::spec::adapter::{AdaEdlConfig, DsdeConfig};
+use dsde::util::proptest::{check, forall};
+use dsde::util::rng::Rng;
+use dsde::workload::{Dataset, WorkloadGen};
+
+fn engine_with(
+    policy: SlPolicyKind,
+    cap: CapMode,
+    batch: usize,
+    pair: SimPairKind,
+    profile: DatasetProfile,
+    seed: u64,
+) -> Engine {
+    let cfg = EngineConfig {
+        max_batch: batch,
+        max_len: 4096,
+        speculative: true,
+        policy,
+        cap_mode: cap,
+        kv_blocks: 16384,
+        seed,
+        ..Default::default()
+    };
+    let model = SimModel::new(pair, profile, seed);
+    Engine::new(cfg, Box::new(model))
+}
+
+fn run_workload(engine: &mut Engine, dataset: &str, n: usize, temp: f64, seed: u64) {
+    let mut gen = WorkloadGen::new(Dataset::by_name(dataset).unwrap(), seed)
+        .with_temperature(temp)
+        .with_limits(96, 128);
+    for req in gen.batch(n) {
+        engine.submit(req);
+    }
+    engine.run_to_completion();
+}
+
+#[test]
+fn all_policies_complete_all_datasets() {
+    for ds in ["cnndm", "humaneval", "sharegpt"] {
+        for policy in [
+            SlPolicyKind::Static(4),
+            SlPolicyKind::Dsde(DsdeConfig::default()),
+            SlPolicyKind::AdaEdl(AdaEdlConfig::default()),
+        ] {
+            let mut e = engine_with(
+                policy.clone(),
+                CapMode::Mean,
+                8,
+                SimPairKind::LlamaLike,
+                DatasetProfile::by_name(ds).unwrap(),
+                7,
+            );
+            run_workload(&mut e, ds, 16, 0.0, 7);
+            assert_eq!(e.metrics.requests.len(), 16, "{ds}/{policy:?}");
+            assert!(e.metrics.block_efficiency() > 1.0);
+        }
+    }
+}
+
+#[test]
+fn speculation_speeds_up_every_dataset() {
+    for ds in Dataset::all() {
+        let name = ds.name();
+        let mut ar = engine_with(
+            SlPolicyKind::Static(4),
+            CapMode::Mean,
+            8,
+            SimPairKind::LlamaLike,
+            ds.profile.clone(),
+            3,
+        );
+        ar.cfg.speculative = false;
+        run_workload(&mut ar, name, 12, 0.0, 3);
+        let mut sp = engine_with(
+            SlPolicyKind::Dsde(DsdeConfig::default()),
+            CapMode::Mean,
+            8,
+            SimPairKind::LlamaLike,
+            ds.profile.clone(),
+            3,
+        );
+        run_workload(&mut sp, name, 12, 0.0, 3);
+        assert!(
+            sp.metrics.mean_latency() < ar.metrics.mean_latency(),
+            "{name}: spec {:.2} !< ar {:.2}",
+            sp.metrics.mean_latency(),
+            ar.metrics.mean_latency()
+        );
+    }
+}
+
+#[test]
+fn cap_reduces_straggler_bubble() {
+    let run = |cap: CapMode| -> (u64, f64) {
+        let mut e = engine_with(
+            SlPolicyKind::Dsde(DsdeConfig::default()),
+            cap,
+            32,
+            SimPairKind::LlamaLike,
+            DatasetProfile::cnndm(),
+            11,
+        );
+        run_workload(&mut e, "cnndm", 64, 0.0, 11);
+        (e.metrics.straggler_bubble, e.metrics.throughput())
+    };
+    let (bubble_nocap, _tp_nocap) = run(CapMode::None);
+    let (bubble_cap, _tp_cap) = run(CapMode::Mean);
+    assert!(
+        bubble_cap < bubble_nocap,
+        "cap must shrink the straggler bubble: {bubble_cap} !< {bubble_nocap}"
+    );
+}
+
+#[test]
+fn low_acceptance_pair_prefers_short_sl() {
+    // Gemma-like regime: static-2 must beat static-8 (paper k_opt = 2)
+    let run = |k: usize| -> f64 {
+        let mut e = engine_with(
+            SlPolicyKind::Static(k),
+            CapMode::Mean,
+            8,
+            SimPairKind::GemmaLike,
+            DatasetProfile::cnndm(),
+            13,
+        );
+        run_workload(&mut e, "cnndm", 16, 0.0, 13);
+        e.metrics.mean_latency()
+    };
+    let l2 = run(2);
+    let l8 = run(8);
+    assert!(l2 < l8, "gemma-like: static-2 {l2:.2}s !< static-8 {l8:.2}s");
+}
+
+#[test]
+fn high_acceptance_pair_prefers_long_sl() {
+    // HumanEval + LLaMA-like: static-8 must beat static-2 (paper Table 1)
+    let run = |k: usize| -> f64 {
+        let mut e = engine_with(
+            SlPolicyKind::Static(k),
+            CapMode::Mean,
+            8,
+            SimPairKind::LlamaLike,
+            DatasetProfile::humaneval(),
+            17,
+        );
+        run_workload(&mut e, "humaneval", 16, 0.0, 17);
+        e.metrics.mean_latency()
+    };
+    let l2 = run(2);
+    let l8 = run(8);
+    assert!(l8 < l2, "humaneval: static-8 {l8:.2}s !< static-2 {l2:.2}s");
+}
+
+#[test]
+fn dsde_robust_in_low_acceptance_regime() {
+    // §4.4: in the Gemma-like regime DSDE must stay close to static-opt
+    // while AdaEDL (draft-confidence driven) degrades more.
+    let run = |policy: SlPolicyKind| -> f64 {
+        let mut e = engine_with(
+            policy,
+            CapMode::Mean,
+            8,
+            SimPairKind::GemmaLike,
+            DatasetProfile::cnndm(),
+            19,
+        );
+        run_workload(&mut e, "cnndm", 24, 0.0, 19);
+        e.metrics.mean_latency()
+    };
+    let static_opt = run(SlPolicyKind::Static(2));
+    let dsde = run(SlPolicyKind::Dsde(DsdeConfig::default()));
+    let adaedl = run(SlPolicyKind::AdaEdl(AdaEdlConfig::default()));
+    // DSDE within 40% of static-opt; AdaEDL worse than DSDE
+    assert!(
+        dsde < static_opt * 1.4,
+        "dsde {dsde:.2} vs static-opt {static_opt:.2}"
+    );
+    assert!(
+        dsde < adaedl,
+        "dsde {dsde:.2} should beat adaedl {adaedl:.2} in low-acceptance"
+    );
+}
+
+#[test]
+fn property_engine_never_loses_or_duplicates_requests() {
+    forall(
+        61,
+        12,
+        |r: &mut Rng| {
+            let n_req = r.range(1, 30);
+            let batch = r.range(1, 17);
+            let kv_blocks = r.range(40, 400);
+            let max_tokens = r.range(1, 60);
+            let cap = [CapMode::None, CapMode::Mean, CapMode::Median][r.range(0, 3)];
+            let pol = r.range(0, 3);
+            (n_req, batch, kv_blocks, max_tokens, cap, pol)
+        },
+        |&(n_req, batch, kv_blocks, max_tokens, cap, pol)| {
+            let policy = match pol {
+                0 => SlPolicyKind::Static(3),
+                1 => SlPolicyKind::Dsde(DsdeConfig::default()),
+                _ => SlPolicyKind::AdaEdl(AdaEdlConfig::default()),
+            };
+            let cfg = EngineConfig {
+                max_batch: batch,
+                max_len: 4096,
+                speculative: true,
+                policy,
+                cap_mode: cap,
+                kv_blocks,
+                seed: 5,
+                ..Default::default()
+            };
+            let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::nq(), 5);
+            let mut e = Engine::new(cfg, Box::new(model));
+            for i in 0..n_req {
+                e.submit(Request::new(
+                    i as u64,
+                    vec![65; 24],
+                    SamplingParams {
+                        max_tokens,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let done = e.run_to_completion();
+            let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            check(
+                ids == (0..n_req as u64).collect::<Vec<_>>(),
+                format!("got ids {ids:?} for n={n_req}"),
+            )?;
+            for r in &done {
+                check(
+                    r.output.len() <= max_tokens,
+                    format!("req {} output {} > max {}", r.id, r.output.len(), max_tokens),
+                )?;
+            }
+            check(e.kv_used_blocks() == 0, "KV blocks leaked after drain")
+        },
+    );
+}
+
+#[test]
+fn property_latency_monotone_under_temperature() {
+    // paper: sampling randomness lowers acceptance -> latency at T=1 >= T=0
+    for seed in [1u64, 2, 3] {
+        let run = |temp: f64| -> f64 {
+            let mut e = engine_with(
+                SlPolicyKind::Static(6),
+                CapMode::Mean,
+                8,
+                SimPairKind::LlamaLike,
+                DatasetProfile::cnndm(),
+                seed,
+            );
+            run_workload(&mut e, "cnndm", 16, temp, seed);
+            e.metrics.mean_latency()
+        };
+        let t0 = run(0.0);
+        let t1 = run(1.0);
+        assert!(t1 > t0 * 0.98, "T=1 {t1:.2} should not beat T=0 {t0:.2}");
+    }
+}
+
+#[test]
+fn throughput_scales_with_batch() {
+    let run = |batch: usize| -> f64 {
+        let mut e = engine_with(
+            SlPolicyKind::Dsde(DsdeConfig::default()),
+            CapMode::Mean,
+            batch,
+            SimPairKind::LlamaLike,
+            DatasetProfile::cnndm(),
+            23,
+        );
+        run_workload(&mut e, "cnndm", batch * 2, 0.0, 23);
+        e.metrics.throughput()
+    };
+    let t1 = run(1);
+    let t16 = run(16);
+    assert!(t16 > 4.0 * t1, "batch-16 {t16:.1} should be >> batch-1 {t1:.1}");
+}

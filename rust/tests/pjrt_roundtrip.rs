@@ -1,0 +1,204 @@
+//! Integration: the python-AOT → rust-PJRT bridge, end to end.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise).  Validates:
+//! * manifest + weights load and compile;
+//! * the verify graph's tlogits slots agree with chained step calls (the
+//!   invariant the speculative pipeline rests on);
+//! * the fused Pallas KLD signal is 0 when draft logits == target logits;
+//! * greedy engine output over the real model is deterministic and
+//!   independent of batch composition.
+
+use dsde::config::{EngineConfig, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::engine::request::{Request, SamplingParams};
+use dsde::model::pjrt_lm::PjrtModel;
+use dsde::model::traits::{SeqInput, SpecModel};
+use dsde::runtime::artifacts::DraftKind;
+use dsde::runtime::exec::{GraphKind, PjrtContext};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT test: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn verify_slots_match_step_chain() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut ctx = PjrtContext::new(&dir, DraftKind::Good).unwrap();
+    let l = ctx.max_len();
+    let v = ctx.vocab();
+    let k = ctx.spec_k();
+    // a short prompt followed by 3 "drafted" tokens
+    let prompt: Vec<i32> = "def compute(x):".bytes().map(|b| b as i32).collect();
+    let ctx_len = prompt.len() as i32;
+    let drafted = [32i32, 114, 101];
+    let mut tokens = vec![0i32; l];
+    tokens[..prompt.len()].copy_from_slice(&prompt);
+    for (j, &d) in drafted.iter().enumerate() {
+        tokens[prompt.len() + j] = d;
+    }
+    let dlog = vec![0f32; k * v];
+    let vout = ctx
+        .verify(1, &tokens, &[ctx_len], &[ctx_len + 3], &dlog)
+        .unwrap();
+
+    // chain step calls at ctx, ctx+1, ctx+2, ctx+3 and compare logits
+    for j in 0..=3usize {
+        let step = ctx
+            .step(GraphKind::TargetStep, 1, &tokens, &[ctx_len + j as i32])
+            .unwrap();
+        let a = step.row(0);
+        let b = vout.tlogits_row(0, j);
+        let max_diff = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 2e-3, "slot {j}: max diff {max_diff}");
+    }
+}
+
+#[test]
+fn kld_kernel_zero_for_matching_dists() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut ctx = PjrtContext::new(&dir, DraftKind::Good).unwrap();
+    let l = ctx.max_len();
+    let v = ctx.vocab();
+    let k = ctx.spec_k();
+    let prompt: Vec<i32> = "User: hello".bytes().map(|b| b as i32).collect();
+    let ctx_len = prompt.len() as i32;
+    let mut tokens = vec![0i32; l];
+    tokens[..prompt.len()].copy_from_slice(&prompt);
+    tokens[prompt.len()] = 32;
+    tokens[prompt.len() + 1] = 32;
+    // first pass to obtain target logits
+    let dlog = vec![0f32; k * v];
+    let v1 = ctx
+        .verify(1, &tokens, &[ctx_len], &[ctx_len + 2], &dlog)
+        .unwrap();
+    // second pass feeding the target's own logits as the draft's
+    let mut dlog2 = vec![0f32; k * v];
+    for j in 0..2 {
+        dlog2[j * v..(j + 1) * v].copy_from_slice(v1.tlogits_row(0, j));
+    }
+    let v2 = ctx
+        .verify(1, &tokens, &[ctx_len], &[ctx_len + 2], &dlog2)
+        .unwrap();
+    for j in 0..2 {
+        assert!(
+            v2.kld_at(0, j).abs() < 1e-3,
+            "kld slot {j} = {}",
+            v2.kld_at(0, j)
+        );
+        assert!(v2.entropy_at(0, j) >= 0.0);
+    }
+    // and the draft-weak pair must show *larger* disagreement than good
+    drop(ctx);
+    let mut weak = PjrtContext::new(&dir, DraftKind::Weak).unwrap();
+    let wk = weak
+        .verify(1, &tokens, &[ctx_len], &[ctx_len + 2], &dlog)
+        .unwrap();
+    // (dlog is zeros = uniform draft for both; this just checks execution)
+    assert!(wk.kld.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn greedy_generation_batch_invariant() {
+    let Some(dir) = artifacts_dir() else { return };
+    // generate solo
+    let gen = |prompts: &[&str]| -> Vec<String> {
+        let model = PjrtModel::new(&dir, DraftKind::Good, 1).unwrap();
+        let cfg = EngineConfig {
+            max_batch: 4,
+            max_len: model.max_len(),
+            spec_k: 8,
+            speculative: true,
+            policy: SlPolicyKind::Static(4),
+            temperature: 0.0,
+            seed: 1,
+            ..Default::default()
+        };
+        let mut eng = Engine::new(cfg, Box::new(model));
+        for (i, p) in prompts.iter().enumerate() {
+            eng.submit(Request::new(
+                i as u64,
+                p.bytes().map(|b| b as u32).collect(),
+                SamplingParams {
+                    temperature: 0.0,
+                    max_tokens: 12,
+                    stop_token: None,
+                },
+            ));
+        }
+        let mut done = eng.run_to_completion();
+        done.sort_by_key(|r| r.id);
+        done.iter().map(|r| r.output_text()).collect()
+    };
+    let solo = gen(&["def compute(count):"]);
+    let batch = gen(&["def compute(count):", "User: hi", "Q: A box holds"]);
+    assert_eq!(
+        solo[0], batch[0],
+        "greedy output must be independent of batch composition"
+    );
+    assert!(!solo[0].is_empty());
+}
+
+#[test]
+fn draft_model_agrees_with_target_often_enough() {
+    let Some(dir) = artifacts_dir() else { return };
+    // The distilled pair must yield a usable acceptance rate (the LLaMA-like
+    // regime); this is the core premise of the artifact build.
+    let model = PjrtModel::new(&dir, DraftKind::Good, 2).unwrap();
+    let cfg = EngineConfig {
+        max_batch: 4,
+        max_len: model.max_len(),
+        spec_k: 6,
+        speculative: true,
+        policy: SlPolicyKind::Static(4),
+        temperature: 0.0,
+        seed: 2,
+        ..Default::default()
+    };
+    let mut eng = Engine::new(cfg, Box::new(model));
+    for (i, p) in ["def compute(idx):", "for idx in range(", "User: ", "Q: A box "]
+        .iter()
+        .enumerate()
+    {
+        eng.submit(Request::new(
+            i as u64,
+            p.bytes().map(|b| b as u32).collect(),
+            SamplingParams {
+                temperature: 0.0,
+                max_tokens: 24,
+                stop_token: None,
+            },
+        ));
+    }
+    eng.run_to_completion();
+    let acc = eng.metrics.acceptance_rate();
+    assert!(
+        acc > 0.25,
+        "distilled draft acceptance too low: {acc:.3} (BE {:.2})",
+        eng.metrics.block_efficiency()
+    );
+}
+
+#[test]
+fn ar_round_emits_single_tokens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = PjrtModel::new(&dir, DraftKind::Good, 3).unwrap();
+    let toks: Vec<u32> = "def ".bytes().map(|b| b as u32).collect();
+    let seqs = [SeqInput {
+        id: 0,
+        tokens: &toks,
+        temperature: 0.0,
+    }];
+    let out = model.ar_round(&seqs).unwrap();
+    assert_eq!(out.new_tokens[0].len(), 1);
+    assert!(out.validate(1).is_ok());
+}
