@@ -1,18 +1,20 @@
 //! HTTP serving demo: brings up the completions server (simulated pair by
 //! default, `--pjrt` for the real artifacts), fires a closed-loop client
-//! load at it, and prints client-side + server-side metrics.
+//! load at it, and prints client-side + server-side metrics.  With
+//! `--replicas N` the server runs N engine replicas behind the router.
 //!
 //! ```bash
 //! cargo run --release --offline --example serve_http -- [--pjrt] \
-//!     [--requests 24] [--concurrency 6]
+//!     [--requests 24] [--concurrency 6] [--replicas 2] [--route least-loaded]
 //! ```
 
-use dsde::config::{CapMode, EngineConfig, SlPolicyKind};
+use dsde::config::{CapMode, EngineConfig, RoutePolicy, SlPolicyKind};
 use dsde::engine::engine::Engine;
 use dsde::model::pjrt_lm::PjrtModel;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::model::traits::SpecModel;
 use dsde::runtime::artifacts::DraftKind;
+use dsde::server::router::EngineRouter;
 use dsde::server::{client, http};
 use dsde::sim::regime::DatasetProfile;
 use dsde::spec::adapter::DsdeConfig;
@@ -24,32 +26,49 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n = args.usize_or("requests", 24);
     let concurrency = args.usize_or("concurrency", 6);
+    let replicas = args.usize_clamped_or("replicas", 1, 1, 64);
+    let route = RoutePolicy::parse(&args.str_or("route", "round-robin"))
+        .ok_or_else(|| anyhow::anyhow!("unknown route policy"))?;
     let use_pjrt = args.flag("pjrt");
 
-    let mut cfg = EngineConfig {
-        max_batch: concurrency.max(2),
-        max_len: 4096,
-        policy: SlPolicyKind::Dsde(DsdeConfig::default()),
-        cap_mode: CapMode::Mean,
-        seed: 3,
-        ..Default::default()
-    };
-    let model: Box<dyn SpecModel> = if use_pjrt {
-        let m = PjrtModel::new(args.str_or("artifacts", "artifacts"), DraftKind::Good, 3)?;
-        cfg.max_len = m.max_len();
-        cfg.spec_k = 8;
-        Box::new(m)
-    } else {
-        Box::new(SimModel::new(
-            SimPairKind::LlamaLike,
-            DatasetProfile::sharegpt(),
-            3,
-        ))
-    };
+    let engines: Vec<Engine> = (0..replicas)
+        .map(|i| -> anyhow::Result<Engine> {
+            let seed = 3 + i as u64;
+            let mut cfg = EngineConfig {
+                max_batch: concurrency.max(2),
+                max_len: 4096,
+                policy: SlPolicyKind::Dsde(DsdeConfig::default()),
+                cap_mode: CapMode::Mean,
+                seed,
+                ..Default::default()
+            };
+            let model: Box<dyn SpecModel> = if use_pjrt {
+                let m = PjrtModel::new(
+                    args.str_or("artifacts", "artifacts"),
+                    DraftKind::Good,
+                    seed,
+                )?;
+                cfg.max_len = m.max_len();
+                cfg.spec_k = 8;
+                Box::new(m)
+            } else {
+                Box::new(SimModel::new(
+                    SimPairKind::LlamaLike,
+                    DatasetProfile::sharegpt(),
+                    seed,
+                ))
+            };
+            Ok(Engine::new(cfg, model))
+        })
+        .collect::<anyhow::Result<_>>()?;
 
-    let handle = http::serve(Engine::new(cfg, model), "127.0.0.1:0")?;
+    let router = EngineRouter::new(engines, route);
+    let handle = http::serve_router(router, "127.0.0.1:0")?;
     let addr = handle.addr.to_string();
-    println!("server up at http://{addr} (pjrt={use_pjrt})");
+    println!(
+        "server up at http://{addr} (pjrt={use_pjrt}, replicas={replicas}, route={})",
+        route.name()
+    );
 
     // closed-loop load
     let prompts: Vec<String> = (0..n)
@@ -72,7 +91,7 @@ fn main() -> anyhow::Result<()> {
     println!("mean / p99    : {:.3} / {:.3} s", mean(&walls), percentile(&walls, 0.99));
 
     let m = client::metrics(&addr)?;
-    println!("\n== server view ==");
+    println!("\n== server view (aggregated over {replicas} replica(s)) ==");
     println!("{m}");
     handle.shutdown();
     Ok(())

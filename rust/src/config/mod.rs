@@ -73,6 +73,10 @@ pub struct EngineConfig {
     pub kv_blocks: usize,
     /// RNG seed for sampling.
     pub seed: u64,
+    /// Per-request metric summaries retained for percentile queries (the
+    /// all-time aggregates are O(1) regardless); bounds `/v1/metrics`
+    /// memory under sustained traffic.
+    pub metrics_retention: usize,
 }
 
 impl Default for EngineConfig {
@@ -88,6 +92,7 @@ impl Default for EngineConfig {
             kv_block_size: 16,
             kv_blocks: 4096,
             seed: 0,
+            metrics_retention: 4096,
         }
     }
 }
@@ -113,6 +118,9 @@ impl EngineConfig {
         if self.temperature < 0.0 {
             errs.push("temperature must be >= 0".to_string());
         }
+        if self.metrics_retention == 0 {
+            errs.push("metrics_retention must be > 0".to_string());
+        }
         if errs.is_empty() {
             Ok(())
         } else {
@@ -133,6 +141,71 @@ impl EngineConfig {
             .set("kv_block_size", self.kv_block_size)
             .set("kv_blocks", self.kv_blocks)
             .set("seed", self.seed)
+            .set("metrics_retention", self.metrics_retention)
+    }
+}
+
+/// Request-routing policy for a multi-replica [`RouterConfig`] deployment.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through replicas in submission order.
+    #[default]
+    RoundRobin,
+    /// Dispatch to the replica with the fewest in-flight requests.
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Some(RoutePolicy::RoundRobin),
+            "ll" | "least-loaded" | "leastloaded" => Some(RoutePolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Multi-replica serving configuration (the `--replicas` / `--route` CLI
+/// surface): how many engine replicas the router owns and how it picks one
+/// per request.  Each replica gets its own model instance, KV cache, and
+/// scheduler thread.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouterConfig {
+    pub replicas: usize,
+    pub policy: RoutePolicy,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replicas: 1,
+            policy: RoutePolicy::RoundRobin,
+        }
+    }
+}
+
+impl RouterConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.replicas == 0 {
+            return Err("replicas must be > 0".to_string());
+        }
+        if self.replicas > 256 {
+            return Err(format!("replicas {} unreasonably large (max 256)", self.replicas));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("replicas", self.replicas)
+            .set("route", self.policy.name())
     }
 }
 
@@ -184,5 +257,45 @@ mod tests {
         let s = EngineConfig::default().to_json().to_string();
         assert!(s.contains("\"policy\":\"dsde\""));
         assert!(s.contains("\"cap_mode\":\"mean\""));
+        assert!(s.contains("\"metrics_retention\":4096"));
+    }
+
+    #[test]
+    fn route_policy_parse() {
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(
+            RoutePolicy::parse("round-robin"),
+            Some(RoutePolicy::RoundRobin)
+        );
+        assert_eq!(
+            RoutePolicy::parse("least-loaded"),
+            Some(RoutePolicy::LeastLoaded)
+        );
+        assert_eq!(RoutePolicy::parse("LL"), Some(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn router_config_validation() {
+        assert!(RouterConfig::default().validate().is_ok());
+        let zero = RouterConfig {
+            replicas: 0,
+            ..Default::default()
+        };
+        assert!(zero.validate().is_err());
+        let huge = RouterConfig {
+            replicas: 1000,
+            ..Default::default()
+        };
+        assert!(huge.validate().is_err());
+        let s = RouterConfig::default().to_json().to_string();
+        assert!(s.contains("\"route\":\"round-robin\""));
+    }
+
+    #[test]
+    fn metrics_retention_validated() {
+        let mut c = EngineConfig::default();
+        c.metrics_retention = 0;
+        assert!(c.validate().unwrap_err().contains("metrics_retention"));
     }
 }

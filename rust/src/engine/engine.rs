@@ -1,10 +1,17 @@
-//! The engine step loop — Fig. 4 of the paper:
+//! The engine: request lifecycle + the staged step loop — Fig. 4 of the
+//! paper:
 //!
 //! ```text
-//!   schedule -> draft worker (k_i each) -> target worker (ragged verify)
-//!     -> rejection sampler -> SL adapter (signals -> SL_i^{(t+1)})
-//!     -> look-ahead scheduler (KV pre-mapping for the next round)
+//!   plan    | schedule (admit -> SL assignment -> cap -> KV look-ahead)
+//!   execute | draft worker (k_i each) -> target worker (ragged verify)
+//!           |   -> rejection sampler
+//!   apply   | token/signal application -> SL adapter state -> retirement
 //! ```
+//!
+//! The three stages live in [`super::step`] as `Engine::plan` /
+//! `Engine::execute` / `Engine::apply` with typed [`super::step::StepPlan`]
+//! and [`super::step::StepReport`] boundaries; [`Engine::step`] is the thin
+//! driver that chains them.
 //!
 //! The engine is substrate-agnostic: the same loop runs over the PJRT model
 //! (real forwards, wall-clock time) and the simulator (regime process,
@@ -21,25 +28,25 @@ use super::kv_cache::KvCache;
 use super::metrics::{EngineMetrics, RequestMetrics};
 use super::request::{FinishReason, FinishedRequest, Request, SeqState};
 use super::scheduler::Scheduler;
+use super::step::PlanOutcome;
 use crate::config::EngineConfig;
-use crate::model::traits::{SeqInput, SpecModel};
+use crate::model::traits::SpecModel;
 use crate::spec::adapter::{make_policy, SlPolicy};
-use crate::spec::cap;
 
 /// The speculative-decoding serving engine.
 pub struct Engine {
     pub cfg: EngineConfig,
-    model: Box<dyn SpecModel>,
-    policy: Box<dyn SlPolicy>,
-    scheduler: Scheduler,
-    kv: KvCache,
-    waiting: VecDeque<SeqState>,
-    running: Vec<SeqState>,
-    finished: Vec<FinishedRequest>,
+    pub(crate) model: Box<dyn SpecModel>,
+    pub(crate) policy: Box<dyn SlPolicy>,
+    pub(crate) scheduler: Scheduler,
+    pub(crate) kv: KvCache,
+    pub(crate) waiting: VecDeque<SeqState>,
+    pub(crate) running: Vec<SeqState>,
+    pub(crate) finished: Vec<FinishedRequest>,
     pub metrics: EngineMetrics,
-    clock: f64,
-    real_t0: Instant,
-    uses_virtual_time: bool,
+    pub(crate) clock: f64,
+    pub(crate) real_t0: Instant,
+    pub(crate) uses_virtual_time: bool,
 }
 
 impl Engine {
@@ -58,6 +65,7 @@ impl Engine {
         cfg.validate().expect("invalid engine config");
         let scheduler = Scheduler::new(cfg.max_batch);
         let kv = KvCache::new(cfg.kv_blocks, cfg.kv_block_size);
+        let metrics = EngineMetrics::with_retention(cfg.metrics_retention);
         Engine {
             scheduler,
             kv,
@@ -67,7 +75,7 @@ impl Engine {
             waiting: VecDeque::new(),
             running: Vec::new(),
             finished: Vec::new(),
-            metrics: EngineMetrics::default(),
+            metrics,
             clock: 0.0,
             real_t0: Instant::now(),
             uses_virtual_time: false,
@@ -77,6 +85,11 @@ impl Engine {
     /// Current engine time (virtual or wall).
     pub fn now(&self) -> f64 {
         self.clock
+    }
+
+    /// Whether the engine has been advancing on simulator virtual time.
+    pub fn is_virtual_time(&self) -> bool {
+        self.uses_virtual_time
     }
 
     /// Queue a request.
@@ -103,151 +116,21 @@ impl Engine {
         self.take_finished()
     }
 
-    /// One engine step.  Returns false when there was nothing to do.
+    /// One engine step: the thin `plan → execute → apply` driver.  Returns
+    /// false when there was nothing to do.
     pub fn step(&mut self) -> Result<bool> {
         self.metrics.steps += 1;
-        self.scheduler
-            .admit(&mut self.waiting, &mut self.running, &mut self.kv);
-        if self.running.is_empty() {
-            return Ok(false);
-        }
-
-        // ---- SL assignment (adapter -> budget clamps -> batch cap) ----------
-        let max_len = self.model.max_len().min(self.cfg.max_len);
-        let spec_k = self.model.spec_k().min(self.cfg.spec_k);
-        let mut sls: Vec<usize> = if self.cfg.speculative {
-            self.running
-                .iter()
-                .map(|s| {
-                    let want = self.policy.propose(&s.signals).clamp(1, spec_k);
-                    let ctx_room = max_len.saturating_sub(s.tokens.len() + 1);
-                    let budget = s.remaining().max(1);
-                    want.min(ctx_room.max(1)).min(budget)
-                })
-                .collect()
-        } else {
-            vec![0; self.running.len()]
+        let plan = match self.plan() {
+            PlanOutcome::Idle => return Ok(false),
+            PlanOutcome::Retry => return Ok(true),
+            PlanOutcome::Run(plan) => plan,
         };
-        let max_sl_pre_cap = sls.iter().copied().max().unwrap_or(0);
-        if self.cfg.speculative {
-            cap::apply_cap(self.cfg.cap_mode, &mut sls);
-        }
-
-        // ---- KV look-ahead pre-mapping (may preempt) -------------------------
-        let outcome = self.scheduler.reserve_lookahead(
-            &mut self.running,
-            &mut sls,
-            &mut self.kv,
-            &mut self.waiting,
-        );
-        debug_assert!(self.kv.check_invariants().is_ok());
-        if self.running.is_empty() {
-            return Ok(!self.waiting.is_empty());
-        }
-        let _ = outcome;
-
-        // ---- model round ------------------------------------------------------
-        let round = {
-            let running = &self.running;
-            let policy = &self.policy;
-            let inputs: Vec<SeqInput<'_>> = running
-                .iter()
-                .map(|s| SeqInput {
-                    id: s.id,
-                    tokens: &s.tokens,
-                    temperature: if s.params.temperature != 0.0 {
-                        s.params.temperature
-                    } else {
-                        self.cfg.temperature
-                    },
-                })
-                .collect();
-            let stop = |i: usize, j: usize, ent: f32, top_p: f32| -> bool {
-                policy.should_stop(&running[i].signals, j, ent, top_p)
-            };
-            if self.cfg.speculative {
-                self.model.spec_round(&inputs, &sls, &stop)?
-            } else {
-                self.model.ar_round(&inputs)?
-            }
-        };
-        debug_assert!(round.validate(self.running.len()).is_ok());
-
-        // ---- clock -----------------------------------------------------------
-        match round.sim_cost {
-            Some(c) => {
-                self.uses_virtual_time = true;
-                self.clock += c;
-                self.metrics.busy_time += c;
-            }
-            None => {
-                let t = self.real_t0.elapsed().as_secs_f64();
-                self.metrics.busy_time += t - self.clock;
-                self.clock = t;
-            }
-        }
-        self.metrics.now = self.clock;
-
-        // ---- apply outcome ----------------------------------------------------
-        if self.cfg.speculative {
-            self.metrics.verify_rounds += 1;
-        } else {
-            self.metrics.ar_rounds += 1;
-        }
-        let max_drafted = round.drafted.iter().copied().max().unwrap_or(0);
-        self.metrics.seq_rounds += self.running.len() as u64;
-        self.metrics.batch_hist.push(self.running.len() as f64);
-        self.metrics.sl_hist.push(max_drafted as f64);
-        let _ = max_sl_pre_cap;
-        let calib_steps = self.policy.calibration_steps();
-        for (i, seq) in self.running.iter_mut().enumerate() {
-            let new_tokens = &round.new_tokens[i];
-            if seq.first_token_at.is_none() && !new_tokens.is_empty() {
-                seq.first_token_at = Some(self.clock);
-            }
-            // budget clamp: never emit beyond max_tokens
-            let take = new_tokens.len().min(seq.remaining());
-            seq.tokens.extend_from_slice(&new_tokens[..take]);
-            seq.rounds += 1;
-            self.metrics.tokens_out += take as u64;
-            self.metrics.drafted += round.drafted[i] as u64;
-            self.metrics.accepted += round.accepted[i] as u64;
-            self.metrics.straggler_bubble +=
-                (max_drafted - round.drafted[i]) as u64;
-            // signals: calibration phase first (paper §3.1.1), then normal
-            let calibrating = self.policy.wants_calibration()
-                && seq.signals.calibrated_sl_max.is_none();
-            if calibrating {
-                seq.signals
-                    .record_calibration(&round.klds[i], round.accepted[i]);
-            }
-            seq.signals.record_step(
-                &round.klds[i],
-                &round.entropies[i],
-                round.drafted[i],
-                round.accepted[i],
-            );
-            if calibrating && seq.signals.steps >= calib_steps {
-                self.policy.finish_calibration(&mut seq.signals);
-            }
-            // reallocation: reclaim over-mapped look-ahead blocks
-            self.kv.trim(seq.id, seq.tokens.len());
-        }
-
-        // ---- retire finished sequences -----------------------------------------
-        let mut i = 0;
-        while i < self.running.len() {
-            if let Some(reason) = self.running[i].is_done(max_len) {
-                let seq = self.running.remove(i);
-                self.retire(seq, reason);
-            } else {
-                i += 1;
-            }
-        }
+        let round = self.execute(&plan)?;
+        self.apply(plan, round);
         Ok(true)
     }
 
-    fn retire(&mut self, seq: SeqState, reason: FinishReason) {
+    pub(crate) fn retire(&mut self, seq: SeqState, reason: FinishReason) {
         self.kv.release(seq.id);
         self.model.release(seq.id);
         let fin = FinishedRequest {
@@ -262,7 +145,7 @@ impl Engine {
             accepted: seq.signals.accepted_total,
             preemptions: seq.preemptions,
         };
-        self.metrics.requests.push(RequestMetrics {
+        self.metrics.record_request(RequestMetrics {
             id: fin.id,
             latency: fin.latency(),
             ttft: fin.ttft(),
@@ -273,6 +156,16 @@ impl Engine {
             preemptions: fin.preemptions,
         });
         self.finished.push(fin);
+    }
+
+    /// Abort only the head-of-line waiting request (used when the head can
+    /// never be scheduled, e.g. its prompt exceeds total KV capacity, and
+    /// FCFS forbids skipping it).  Returns the aborted id.
+    pub fn abort_head(&mut self) -> Option<u64> {
+        let seq = self.waiting.pop_front()?;
+        let id = seq.id;
+        self.retire(seq, FinishReason::Aborted);
+        Some(id)
     }
 
     /// Abort all in-flight work (server shutdown).
@@ -423,6 +316,19 @@ mod tests {
         assert_eq!(done.len(), 8);
         let preempted: usize = done.iter().map(|r| r.preemptions).sum();
         assert!(preempted > 0, "expected KV preemptions under pressure");
+        // scheduler outcome is wired into the engine metrics
+        assert_eq!(e.metrics.preemptions, preempted as u64);
+        // every preemption forces a re-admission, so admissions exceed n
+        assert!(e.metrics.admitted >= 8 + preempted as u64);
+    }
+
+    #[test]
+    fn admissions_tracked_without_pressure() {
+        let mut e = sim_engine(SlPolicyKind::Static(4), true);
+        submit_n(&mut e, 6, 8);
+        e.run_to_completion();
+        assert_eq!(e.metrics.admitted, 6);
+        assert_eq!(e.metrics.preemptions, 0);
     }
 
     #[test]
@@ -442,6 +348,7 @@ mod tests {
         e.run_to_completion();
         assert!(e.now() > 0.0);
         assert!(e.metrics.busy_time > 0.0);
+        assert!(e.is_virtual_time());
     }
 
     #[test]
@@ -461,6 +368,24 @@ mod tests {
         submit_n(&mut e, 8, 64);
         e.run_to_completion();
         assert!(e.metrics.straggler_bubble > 0);
+        // no cap -> the cap can never shave the round critical path
+        assert_eq!(e.metrics.cap_savings, 0);
+    }
+
+    #[test]
+    fn abort_head_pops_only_the_head() {
+        let mut e = sim_engine(SlPolicyKind::Static(4), true);
+        submit_n(&mut e, 3, 8);
+        assert_eq!(e.abort_head(), Some(0));
+        assert_eq!(e.pending(), 2);
+        let done = e.run_to_completion();
+        assert_eq!(done.len(), 3);
+        let aborted: Vec<u64> = done
+            .iter()
+            .filter(|r| r.reason == FinishReason::Aborted)
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(aborted, vec![0]);
     }
 
     #[test]

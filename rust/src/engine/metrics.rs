@@ -1,10 +1,19 @@
 //! Engine + per-request metrics: end-to-end latency, block efficiency
 //! (tokens emitted per target invocation — the paper's BE), goodput,
-//! throughput, straggler accounting, and signal traces for the analysis
-//! benches.
+//! throughput, straggler accounting, scheduler counters, and signal traces
+//! for the analysis benches.
+//!
+//! Long-running serving safety: per-request summaries are kept in a bounded
+//! retention window ([`RingBuf`]) while latency/TTFT distributions are
+//! tracked by O(1) running [`Welford`] aggregates, so `/v1/metrics` memory
+//! stays constant under sustained traffic.
 
 use crate::util::json::Json;
-use crate::util::stats::{mean, percentile, Welford};
+use crate::util::ring::RingBuf;
+use crate::util::stats::{percentile, Welford};
+
+/// Default number of per-request summaries retained for percentile queries.
+pub const DEFAULT_REQUEST_RETENTION: usize = 4096;
 
 /// Summary of one finished request (denormalized for dump/analysis).
 #[derive(Clone, Debug)]
@@ -20,7 +29,7 @@ pub struct RequestMetrics {
 }
 
 /// Rolling engine-level metrics.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct EngineMetrics {
     /// engine steps executed
     pub steps: u64,
@@ -39,6 +48,13 @@ pub struct EngineMetrics {
     /// sum over rounds of (max SL in round - per-seq SL), the straggler
     /// bubble: idle draft slots induced by batch synchronization
     pub straggler_bubble: u64,
+    /// sequences admitted from the waiting queue (scheduler outcome)
+    pub admitted: u64,
+    /// sequences preempted back to the waiting queue under KV pressure
+    pub preemptions: u64,
+    /// sum over rounds of (pre-cap max SL - post-cap max SL): draft slots
+    /// the batch-wide SL cap shaved off the round critical path (§3.3)
+    pub cap_savings: u64,
     /// wall/virtual time spent in rounds
     pub busy_time: f64,
     /// current clock (set by the engine)
@@ -47,11 +63,63 @@ pub struct EngineMetrics {
     pub batch_hist: Welford,
     /// per-step granted max SL
     pub sl_hist: Welford,
-    /// finished-request summaries
-    pub requests: Vec<RequestMetrics>,
+    /// finished requests, all time (survives window eviction)
+    pub completed: u64,
+    /// output tokens of finished requests, all time
+    pub completed_tokens: u64,
+    /// all-time end-to-end latency distribution (O(1) memory)
+    pub latency: Welford,
+    /// all-time time-to-first-token distribution (O(1) memory)
+    pub ttft: Welford,
+    /// bounded window of recent finished-request summaries (percentiles,
+    /// traces); evicts oldest beyond its retention capacity
+    pub requests: RingBuf<RequestMetrics>,
+}
+
+impl Default for EngineMetrics {
+    fn default() -> Self {
+        EngineMetrics::with_retention(DEFAULT_REQUEST_RETENTION)
+    }
 }
 
 impl EngineMetrics {
+    /// Construct with an explicit per-request retention window.
+    pub fn with_retention(retention: usize) -> EngineMetrics {
+        EngineMetrics {
+            steps: 0,
+            verify_rounds: 0,
+            ar_rounds: 0,
+            seq_rounds: 0,
+            tokens_out: 0,
+            drafted: 0,
+            accepted: 0,
+            straggler_bubble: 0,
+            admitted: 0,
+            preemptions: 0,
+            cap_savings: 0,
+            busy_time: 0.0,
+            now: 0.0,
+            batch_hist: Welford::new(),
+            sl_hist: Welford::new(),
+            completed: 0,
+            completed_tokens: 0,
+            latency: Welford::new(),
+            ttft: Welford::new(),
+            requests: RingBuf::new(retention.max(1)),
+        }
+    }
+
+    /// Record a finished request: updates the all-time aggregates and the
+    /// bounded window together (always use this rather than pushing into
+    /// [`EngineMetrics::requests`] directly).
+    pub fn record_request(&mut self, req: RequestMetrics) {
+        self.completed += 1;
+        self.completed_tokens += req.output_tokens as u64;
+        self.latency.push(req.latency);
+        self.ttft.push(req.ttft);
+        self.requests.push(req);
+    }
+
     /// Block efficiency: mean tokens emitted per sequence per target
     /// invocation — the paper's BE metric (Table 1).
     pub fn block_efficiency(&self) -> f64 {
@@ -80,11 +148,13 @@ impl EngineMetrics {
         }
     }
 
-    /// Mean end-to-end request latency (the paper's primary metric).
+    /// Mean end-to-end request latency (the paper's primary metric) — the
+    /// all-time aggregate, unaffected by window eviction.
     pub fn mean_latency(&self) -> f64 {
-        mean(&self.requests.iter().map(|r| r.latency).collect::<Vec<_>>())
+        self.latency.mean()
     }
 
+    /// p99 end-to-end latency over the retained request window.
     pub fn p99_latency(&self) -> f64 {
         percentile(
             &self.requests.iter().map(|r| r.latency).collect::<Vec<_>>(),
@@ -97,8 +167,40 @@ impl EngineMetrics {
         if self.busy_time <= 0.0 {
             return 0.0;
         }
-        let done: u64 = self.requests.iter().map(|r| r.output_tokens as u64).sum();
-        done as f64 / self.busy_time
+        self.completed_tokens as f64 / self.busy_time
+    }
+
+    /// Fold another engine's metrics into this one — the router uses this to
+    /// aggregate `/v1/metrics` across replicas.  Counters add; clocks take
+    /// the max; distributions merge; request windows concatenate (subject to
+    /// this window's retention bound).  Note `busy_time` sums to *total*
+    /// busy seconds across replicas, so the merged `throughput()` is a
+    /// per-busy-second rate that stays flat in replica count; for fleet
+    /// throughput divide token totals by the makespan (max per-replica
+    /// `busy_time`) as `EngineRouter::metrics_json` does.
+    pub fn merge(&mut self, other: &EngineMetrics) {
+        self.steps += other.steps;
+        self.verify_rounds += other.verify_rounds;
+        self.ar_rounds += other.ar_rounds;
+        self.seq_rounds += other.seq_rounds;
+        self.tokens_out += other.tokens_out;
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.straggler_bubble += other.straggler_bubble;
+        self.admitted += other.admitted;
+        self.preemptions += other.preemptions;
+        self.cap_savings += other.cap_savings;
+        self.busy_time += other.busy_time;
+        self.now = self.now.max(other.now);
+        self.batch_hist.merge(&other.batch_hist);
+        self.sl_hist.merge(&other.sl_hist);
+        self.completed += other.completed;
+        self.completed_tokens += other.completed_tokens;
+        self.latency.merge(&other.latency);
+        self.ttft.merge(&other.ttft);
+        for r in other.requests.iter() {
+            self.requests.push(r.clone());
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -109,15 +211,21 @@ impl EngineMetrics {
             .set("tokens_out", self.tokens_out)
             .set("drafted", self.drafted)
             .set("accepted", self.accepted)
+            .set("admitted", self.admitted)
+            .set("preemptions", self.preemptions)
+            .set("cap_savings", self.cap_savings)
             .set("acceptance_rate", self.acceptance_rate())
             .set("block_efficiency", self.block_efficiency())
             .set("throughput", self.throughput())
             .set("goodput", self.goodput())
             .set("mean_latency", self.mean_latency())
             .set("p99_latency", self.p99_latency())
+            .set("mean_ttft", self.ttft.mean())
             .set("straggler_bubble", self.straggler_bubble)
             .set("busy_time", self.busy_time)
-            .set("requests", self.requests.len())
+            .set("requests", self.completed)
+            .set("window_requests", self.requests.len() as u64)
+            .set("window_evicted", self.requests.evicted())
     }
 }
 
@@ -160,11 +268,62 @@ mod tests {
     #[test]
     fn latency_aggregation() {
         let mut m = EngineMetrics::default();
-        m.requests.push(req(2.0, 10));
-        m.requests.push(req(4.0, 30));
+        m.record_request(req(2.0, 10));
+        m.record_request(req(4.0, 30));
         assert!((m.mean_latency() - 3.0).abs() < 1e-12);
         m.busy_time = 10.0;
         assert!((m.goodput() - 4.0).abs() < 1e-12);
+        assert_eq!(m.completed, 2);
+    }
+
+    #[test]
+    fn retention_window_bounds_memory_but_keeps_aggregates() {
+        let mut m = EngineMetrics::with_retention(8);
+        for i in 0..100 {
+            m.record_request(req(1.0 + i as f64, 5));
+        }
+        // window bounded ...
+        assert_eq!(m.requests.len(), 8);
+        assert_eq!(m.requests.evicted(), 92);
+        // ... while the all-time aggregates still see every request
+        assert_eq!(m.completed, 100);
+        assert_eq!(m.completed_tokens, 500);
+        assert_eq!(m.latency.count(), 100);
+        let expect_mean = (0..100).map(|i| 1.0 + i as f64).sum::<f64>() / 100.0;
+        assert!((m.mean_latency() - expect_mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_distributions() {
+        let mut a = EngineMetrics::default();
+        a.steps = 10;
+        a.tokens_out = 100;
+        a.admitted = 4;
+        a.preemptions = 1;
+        a.cap_savings = 7;
+        a.busy_time = 2.0;
+        a.now = 5.0;
+        a.record_request(req(2.0, 10));
+        let mut b = EngineMetrics::default();
+        b.steps = 20;
+        b.tokens_out = 50;
+        b.admitted = 6;
+        b.preemptions = 2;
+        b.cap_savings = 3;
+        b.busy_time = 3.0;
+        b.now = 4.0;
+        b.record_request(req(4.0, 20));
+        a.merge(&b);
+        assert_eq!(a.steps, 30);
+        assert_eq!(a.tokens_out, 150);
+        assert_eq!(a.admitted, 10);
+        assert_eq!(a.preemptions, 3);
+        assert_eq!(a.cap_savings, 10);
+        assert!((a.busy_time - 5.0).abs() < 1e-12);
+        assert!((a.now - 5.0).abs() < 1e-12);
+        assert_eq!(a.completed, 2);
+        assert!((a.mean_latency() - 3.0).abs() < 1e-12);
+        assert_eq!(a.requests.len(), 2);
     }
 
     #[test]
@@ -173,5 +332,9 @@ mod tests {
         let s = m.to_json().to_string();
         assert!(s.contains("block_efficiency"));
         assert!(s.contains("straggler_bubble"));
+        assert!(s.contains("admitted"));
+        assert!(s.contains("preemptions"));
+        assert!(s.contains("cap_savings"));
+        assert!(s.contains("window_requests"));
     }
 }

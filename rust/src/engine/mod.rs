@@ -1,9 +1,11 @@
 //! The serving engine (vLLM-analog): request/sequence state, paged KV
 //! manager, continuous-batching scheduler with per-sequence look-ahead,
-//! the speculative step loop, and metrics.
+//! the staged speculative step pipeline (`plan → execute → apply`), and
+//! metrics.
 
 pub mod engine;
 pub mod kv_cache;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
+pub mod step;

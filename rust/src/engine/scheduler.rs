@@ -186,6 +186,56 @@ mod tests {
     }
 
     #[test]
+    fn fcfs_head_of_line_blocks_smaller_followers() {
+        // the head prompt (100 tokens -> 7 blocks) cannot fit in 5 blocks;
+        // FCFS must NOT skip ahead to the small follower that would fit
+        let s = Scheduler::new(8);
+        let mut waiting: VecDeque<_> = [seq(1, 100), seq(2, 8)].into_iter().collect();
+        let mut running = Vec::new();
+        let mut kv = KvCache::new(5, 16);
+        let n = s.admit(&mut waiting, &mut running, &mut kv);
+        assert_eq!(n, 0, "nothing may be admitted past a blocked head");
+        assert!(running.is_empty());
+        assert_eq!(
+            waiting.iter().map(|q| q.id).collect::<Vec<_>>(),
+            vec![1, 2],
+            "queue order must be preserved"
+        );
+        assert_eq!(kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn preempted_sequence_readmitted_before_older_waiting() {
+        // a preemption victim goes to the FRONT of the waiting queue
+        // (push_front fairness): it is re-admitted before requests that
+        // arrived while it was running
+        let s = Scheduler::new(2);
+        let mut running = vec![seq(1, 40), seq(2, 40)];
+        let mut sls = vec![8usize, 8];
+        // 40 tokens -> 5 blocks each (block 8); 49-token look-ahead needs 7
+        // blocks each: 14 > 11 total, so the tail (seq 2) is preempted
+        let mut kv = KvCache::new(11, 8);
+        for sq in &running {
+            kv.ensure(sq.id, sq.tokens.len()).unwrap();
+        }
+        let mut waiting: VecDeque<_> = [seq(9, 8)].into_iter().collect();
+        let out = s.reserve_lookahead(&mut running, &mut sls, &mut kv, &mut waiting);
+        assert_eq!(out.preempted, vec![2]);
+        assert_eq!(
+            waiting.iter().map(|q| q.id).collect::<Vec<_>>(),
+            vec![2, 9],
+            "victim must queue ahead of the newer arrival"
+        );
+        // free the pressure and re-admit: the victim comes back first
+        kv.release(1);
+        running.clear();
+        let n = s.admit(&mut waiting, &mut running, &mut kv);
+        assert_eq!(n, 2);
+        assert_eq!(running[0].id, 2, "preempted sequence re-admitted first");
+        assert_eq!(running[1].id, 9);
+    }
+
+    #[test]
     fn single_sequence_degrades_sl_instead_of_preempting() {
         let s = Scheduler::new(4);
         let mut running = vec![seq(1, 60)];

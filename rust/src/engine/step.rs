@@ -1,0 +1,549 @@
+//! The staged step pipeline: `plan → execute → apply`.
+//!
+//! One engine step used to be a single ~140-line monolith; it is now three
+//! independently testable stages with typed boundaries:
+//!
+//! * [`Engine::plan`] — admission, SL assignment (adapter proposal → budget
+//!   clamps → batch-wide cap, paper §3.3), and KV look-ahead pre-mapping
+//!   (which may preempt).  Produces a [`StepPlan`] — or reports that there
+//!   is nothing runnable.
+//! * [`Engine::execute`] — the model round (speculative draft + ragged
+//!   verify + rejection sampling, or one autoregressive token each) for the
+//!   planned batch.  Pure with respect to scheduling state.
+//! * [`Engine::apply`] — clock advance, token/signal application, adapter
+//!   calibration bookkeeping, KV trim, round-metric accounting, and
+//!   retirement.  Produces a [`StepReport`].  (Scheduler-outcome counters
+//!   are recorded by `plan` at decision time so they survive an
+//!   `execute` failure.)
+//!
+//! [`Engine::step`] (in [`super::engine`]) is the thin driver chaining the
+//! three.  Callers that want per-step introspection (benches, the router's
+//! drain loop, tests) can drive the stages directly.
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use crate::model::traits::{RoundOutcome, SeqInput};
+use crate::spec::cap;
+
+/// What the planner decided for this step.
+#[derive(Debug)]
+pub enum PlanOutcome {
+    /// Nothing runnable and nothing that can become runnable on its own —
+    /// the step loop should stop driving.
+    Idle,
+    /// Nothing runnable *this* step, but queued work may proceed on a
+    /// later one (e.g. every running sequence was preempted back to the
+    /// waiting queue).
+    Retry,
+    /// A scheduled batch ready for [`Engine::execute`].
+    Run(StepPlan),
+}
+
+/// The typed output of the planning stage: everything the execute/apply
+/// stages need to know about scheduling decisions, decoupled from clock and
+/// metric bookkeeping.
+#[derive(Clone, Debug)]
+pub struct StepPlan {
+    /// Scheduled batch size (length of the running list at plan time).
+    pub batch: usize,
+    /// Granted speculation length per running sequence (post cap and KV
+    /// reservation; all zeros in autoregressive mode).
+    pub sls: Vec<usize>,
+    /// Whether this round runs speculative decoding.
+    pub speculative: bool,
+    /// Effective context capacity for retirement checks.
+    pub max_len: usize,
+    /// Maximum proposed SL before the batch-wide cap was applied.
+    pub max_sl_pre_cap: usize,
+    /// Draft slots the cap shaved off the round critical path:
+    /// `max_sl_pre_cap - max(sls after cap)` (paper §3.3 ablation signal).
+    pub cap_savings: usize,
+    /// Sequences admitted from the waiting queue this step.
+    pub admitted: usize,
+    /// Sequence ids preempted back to the waiting queue this step.
+    pub preempted: Vec<u64>,
+}
+
+/// The typed output of the apply stage: what one executed step did.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// Batch size the round ran with.
+    pub batch: usize,
+    pub speculative: bool,
+    /// Tokens appended across the batch this step (post budget clamp).
+    pub tokens: usize,
+    /// Draft tokens proposed / accepted this step.
+    pub drafted: usize,
+    pub accepted: usize,
+    /// Scheduling outcome carried through from the plan.
+    pub admitted: usize,
+    pub preempted: Vec<u64>,
+    pub cap_savings: usize,
+    /// Ids of sequences retired by this step.
+    pub finished: Vec<u64>,
+    /// Round cost on the engine clock (virtual or wall seconds).
+    pub cost: f64,
+}
+
+impl Engine {
+    /// Stage 1 — admission + SL assignment + batch cap + KV look-ahead
+    /// reservation.  Mutates scheduling state (admits, preempts, pre-maps
+    /// KV) and records the scheduler-outcome counters
+    /// (`admitted`/`preemptions`/`cap_savings`) at decision time — so they
+    /// stay exact even if [`Engine::execute`] later fails — but never
+    /// touches the clock or round metrics (those belong to
+    /// [`Engine::apply`]).
+    pub fn plan(&mut self) -> PlanOutcome {
+        let admitted =
+            self.scheduler
+                .admit(&mut self.waiting, &mut self.running, &mut self.kv);
+        if self.running.is_empty() {
+            // nothing admitted and nothing running: either drained, or the
+            // head-of-line prompt can never fit (caller's capacity problem)
+            return PlanOutcome::Idle;
+        }
+
+        // ---- SL assignment (adapter -> budget clamps -> batch cap) ------
+        let max_len = self.model.max_len().min(self.cfg.max_len);
+        let spec_k = self.model.spec_k().min(self.cfg.spec_k);
+        let speculative = self.cfg.speculative;
+        let mut sls: Vec<usize> = if speculative {
+            self.running
+                .iter()
+                .map(|s| {
+                    let want = self.policy.propose(&s.signals).clamp(1, spec_k);
+                    let ctx_room = max_len.saturating_sub(s.tokens.len() + 1);
+                    let budget = s.remaining().max(1);
+                    want.min(ctx_room.max(1)).min(budget)
+                })
+                .collect()
+        } else {
+            vec![0; self.running.len()]
+        };
+        let max_sl_pre_cap = sls.iter().copied().max().unwrap_or(0);
+        if speculative {
+            cap::apply_cap(self.cfg.cap_mode, &mut sls);
+        }
+        let max_sl_post_cap = sls.iter().copied().max().unwrap_or(0);
+
+        // ---- KV look-ahead pre-mapping (may preempt) --------------------
+        let outcome = self.scheduler.reserve_lookahead(
+            &mut self.running,
+            &mut sls,
+            &mut self.kv,
+            &mut self.waiting,
+        );
+        debug_assert!(self.kv.check_invariants().is_ok());
+        self.metrics.admitted += admitted as u64;
+        self.metrics.preemptions += outcome.preempted.len() as u64;
+        if self.running.is_empty() {
+            // the whole batch was preempted away; no round will run (and
+            // no cap savings materialize)
+            return if self.waiting.is_empty() {
+                PlanOutcome::Idle
+            } else {
+                PlanOutcome::Retry
+            };
+        }
+        let cap_savings = max_sl_pre_cap - max_sl_post_cap;
+        self.metrics.cap_savings += cap_savings as u64;
+
+        PlanOutcome::Run(StepPlan {
+            batch: self.running.len(),
+            sls,
+            speculative,
+            max_len,
+            max_sl_pre_cap,
+            cap_savings,
+            admitted,
+            preempted: outcome.preempted,
+        })
+    }
+
+    /// Stage 2 — run the model round for the planned batch.  Does not touch
+    /// scheduling state, the clock, or metrics; failures surface here so
+    /// the caller can retry or abort without corrupted bookkeeping.
+    pub fn execute(&mut self, plan: &StepPlan) -> Result<RoundOutcome> {
+        debug_assert_eq!(plan.batch, self.running.len());
+        debug_assert_eq!(plan.sls.len(), self.running.len());
+        let round = {
+            let running = &self.running;
+            let policy = &self.policy;
+            let inputs: Vec<SeqInput<'_>> = running
+                .iter()
+                .map(|s| SeqInput {
+                    id: s.id,
+                    tokens: &s.tokens,
+                    temperature: if s.params.temperature != 0.0 {
+                        s.params.temperature
+                    } else {
+                        self.cfg.temperature
+                    },
+                })
+                .collect();
+            let stop = |i: usize, j: usize, ent: f32, top_p: f32| -> bool {
+                policy.should_stop(&running[i].signals, j, ent, top_p)
+            };
+            if plan.speculative {
+                self.model.spec_round(&inputs, &plan.sls, &stop)?
+            } else {
+                self.model.ar_round(&inputs)?
+            }
+        };
+        debug_assert!(round.validate(self.running.len()).is_ok());
+        Ok(round)
+    }
+
+    /// Stage 3 — advance the clock, apply tokens and adapter signals,
+    /// account round metrics, trim over-mapped KV, and retire finished
+    /// sequences.  (Scheduler-outcome counters were already recorded by
+    /// [`Engine::plan`].)
+    pub fn apply(&mut self, plan: StepPlan, round: RoundOutcome) -> StepReport {
+        // ---- clock ------------------------------------------------------
+        let cost = match round.sim_cost {
+            Some(c) => {
+                self.uses_virtual_time = true;
+                self.clock += c;
+                self.metrics.busy_time += c;
+                c
+            }
+            None => {
+                let t = self.real_t0.elapsed().as_secs_f64();
+                let delta = t - self.clock;
+                self.metrics.busy_time += delta;
+                self.clock = t;
+                delta
+            }
+        };
+        self.metrics.now = self.clock;
+
+        // ---- step-level counters ---------------------------------------
+        if plan.speculative {
+            self.metrics.verify_rounds += 1;
+        } else {
+            self.metrics.ar_rounds += 1;
+        }
+        // (admitted/preemptions/cap_savings were recorded by plan() at
+        // decision time; the plan carries copies for the report only)
+        let max_drafted = round.drafted.iter().copied().max().unwrap_or(0);
+        self.metrics.seq_rounds += self.running.len() as u64;
+        self.metrics.batch_hist.push(self.running.len() as f64);
+        self.metrics.sl_hist.push(max_drafted as f64);
+
+        // ---- per-sequence application -----------------------------------
+        let calib_steps = self.policy.calibration_steps();
+        let mut tokens = 0usize;
+        let mut drafted = 0usize;
+        let mut accepted = 0usize;
+        for (i, seq) in self.running.iter_mut().enumerate() {
+            let new_tokens = &round.new_tokens[i];
+            if seq.first_token_at.is_none() && !new_tokens.is_empty() {
+                seq.first_token_at = Some(self.clock);
+            }
+            // budget clamp: never emit beyond max_tokens
+            let take = new_tokens.len().min(seq.remaining());
+            seq.tokens.extend_from_slice(&new_tokens[..take]);
+            seq.rounds += 1;
+            tokens += take;
+            drafted += round.drafted[i];
+            accepted += round.accepted[i];
+            self.metrics.tokens_out += take as u64;
+            self.metrics.drafted += round.drafted[i] as u64;
+            self.metrics.accepted += round.accepted[i] as u64;
+            self.metrics.straggler_bubble +=
+                (max_drafted - round.drafted[i]) as u64;
+            // signals: calibration phase first (paper §3.1.1), then normal
+            let calibrating = self.policy.wants_calibration()
+                && seq.signals.calibrated_sl_max.is_none();
+            if calibrating {
+                seq.signals
+                    .record_calibration(&round.klds[i], round.accepted[i]);
+            }
+            seq.signals.record_step(
+                &round.klds[i],
+                &round.entropies[i],
+                round.drafted[i],
+                round.accepted[i],
+            );
+            if calibrating && seq.signals.steps >= calib_steps {
+                self.policy.finish_calibration(&mut seq.signals);
+            }
+            // reallocation: reclaim over-mapped look-ahead blocks
+            self.kv.trim(seq.id, seq.tokens.len());
+        }
+
+        // ---- retire finished sequences ----------------------------------
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < self.running.len() {
+            if let Some(reason) = self.running[i].is_done(plan.max_len) {
+                let seq = self.running.remove(i);
+                finished.push(seq.id);
+                self.retire(seq, reason);
+            } else {
+                i += 1;
+            }
+        }
+
+        StepReport {
+            batch: plan.batch,
+            speculative: plan.speculative,
+            tokens,
+            drafted,
+            accepted,
+            admitted: plan.admitted,
+            preempted: plan.preempted,
+            cap_savings: plan.cap_savings,
+            finished,
+            cost,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CapMode, EngineConfig, SlPolicyKind};
+    use crate::engine::request::{Request, SamplingParams};
+    use crate::model::sim_lm::{SimModel, SimPairKind};
+    use crate::sim::regime::DatasetProfile;
+    use crate::spec::adapter::DsdeConfig;
+
+    fn engine(cfg: EngineConfig) -> Engine {
+        let seed = cfg.seed;
+        let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), seed)
+            .with_max_len(cfg.max_len);
+        Engine::new(cfg, Box::new(model))
+    }
+
+    fn default_engine() -> Engine {
+        engine(EngineConfig {
+            max_batch: 4,
+            max_len: 512,
+            policy: SlPolicyKind::Static(4),
+            seed: 9,
+            ..Default::default()
+        })
+    }
+
+    fn submit_n(e: &mut Engine, n: usize, max_tokens: usize) {
+        for i in 0..n {
+            e.submit(Request::new(
+                i as u64,
+                vec![65; 32],
+                SamplingParams {
+                    max_tokens,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+
+    // ---- plan -----------------------------------------------------------
+
+    #[test]
+    fn plan_idle_with_no_work() {
+        let mut e = default_engine();
+        assert!(matches!(e.plan(), PlanOutcome::Idle));
+    }
+
+    #[test]
+    fn plan_grants_bounded_sls_and_admits() {
+        let mut e = default_engine();
+        submit_n(&mut e, 6, 32);
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        assert_eq!(plan.batch, 4); // max_batch bound
+        assert_eq!(plan.admitted, 4);
+        assert_eq!(plan.sls.len(), 4);
+        assert!(plan.speculative);
+        assert!(plan.sls.iter().all(|&sl| (1..=4).contains(&sl)));
+        assert_eq!(plan.max_sl_pre_cap, 4);
+        assert!(plan.preempted.is_empty());
+    }
+
+    #[test]
+    fn plan_autoregressive_grants_zero_sls() {
+        let mut e = engine(EngineConfig {
+            max_batch: 4,
+            max_len: 512,
+            speculative: false,
+            policy: SlPolicyKind::Static(4),
+            seed: 9,
+            ..Default::default()
+        });
+        submit_n(&mut e, 2, 8);
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        assert!(!plan.speculative);
+        assert_eq!(plan.sls, vec![0, 0]);
+        assert_eq!(plan.cap_savings, 0);
+    }
+
+    #[test]
+    fn plan_respects_output_budget() {
+        let mut e = default_engine();
+        submit_n(&mut e, 1, 2); // only 2 tokens wanted => SL clamped to <= 2
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        assert!(plan.sls[0] <= 2, "sls {:?}", plan.sls);
+    }
+
+    #[test]
+    fn plan_under_kv_pressure_records_preemption() {
+        // prompts of 45 tokens: admission maps 3 blocks each (47 slots);
+        // the SL-6 look-ahead needs a 4th block each, and with 10 blocks
+        // total only two sequences can grow — the tail is preempted.
+        let mut e = engine(EngineConfig {
+            max_batch: 8,
+            max_len: 512,
+            kv_blocks: 10,
+            policy: SlPolicyKind::Static(6),
+            seed: 3,
+            ..Default::default()
+        });
+        for i in 0..8 {
+            e.submit(Request::new(
+                i as u64,
+                vec![65; 45],
+                SamplingParams {
+                    max_tokens: 48,
+                    ..Default::default()
+                },
+            ));
+        }
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        assert_eq!(plan.admitted, 3);
+        assert!(
+            !plan.preempted.is_empty(),
+            "tight KV must preempt the tail: {plan:?}"
+        );
+        assert_eq!(plan.batch, plan.sls.len());
+    }
+
+    // ---- execute --------------------------------------------------------
+
+    #[test]
+    fn execute_round_is_consistent_with_plan() {
+        let mut e = default_engine();
+        submit_n(&mut e, 3, 32);
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        let round = e.execute(&plan).unwrap();
+        assert!(round.validate(plan.batch).is_ok());
+        for i in 0..plan.batch {
+            assert!(round.drafted[i] <= plan.sls[i]);
+            assert_eq!(round.new_tokens[i].len(), round.accepted[i] + 1);
+        }
+        assert!(round.sim_cost.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn execute_does_not_touch_clock_or_metrics() {
+        let mut e = default_engine();
+        submit_n(&mut e, 2, 16);
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        let before_now = e.now();
+        let before_tokens = e.metrics.tokens_out;
+        let _ = e.execute(&plan).unwrap();
+        assert_eq!(e.now(), before_now);
+        assert_eq!(e.metrics.tokens_out, before_tokens);
+    }
+
+    // ---- apply ----------------------------------------------------------
+
+    #[test]
+    fn apply_extends_sequences_and_advances_clock() {
+        let mut e = default_engine();
+        submit_n(&mut e, 2, 16);
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        let round = e.execute(&plan).unwrap();
+        let report = e.apply(plan, round);
+        assert_eq!(report.batch, 2);
+        assert!(report.tokens > 0);
+        assert!(report.cost > 0.0);
+        assert_eq!(report.admitted, 2);
+        assert!(e.now() > 0.0);
+        assert_eq!(e.metrics.tokens_out, report.tokens as u64);
+        assert_eq!(e.metrics.admitted, 2);
+    }
+
+    #[test]
+    fn apply_retires_on_budget_exhaustion() {
+        let mut e = default_engine();
+        submit_n(&mut e, 1, 1); // one token and done
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        let round = e.execute(&plan).unwrap();
+        let report = e.apply(plan, round);
+        assert_eq!(report.finished, vec![0]);
+        assert_eq!(report.tokens, 1);
+        assert_eq!(e.pending(), 0);
+        assert_eq!(e.take_finished().len(), 1);
+    }
+
+    #[test]
+    fn staged_loop_matches_run_to_completion_totals() {
+        // drive the stages manually and check the composition invariant:
+        // emitted tokens across reports == engine tokens_out == outputs
+        let mut e = default_engine();
+        submit_n(&mut e, 5, 24);
+        let mut total_tokens = 0usize;
+        let mut total_finished = 0usize;
+        loop {
+            e.metrics.steps += 1;
+            match e.plan() {
+                PlanOutcome::Idle => break,
+                PlanOutcome::Retry => continue,
+                PlanOutcome::Run(plan) => {
+                    let round = e.execute(&plan).unwrap();
+                    let report = e.apply(plan, round);
+                    total_tokens += report.tokens;
+                    total_finished += report.finished.len();
+                }
+            }
+        }
+        assert_eq!(total_finished, 5);
+        assert_eq!(total_tokens as u64, e.metrics.tokens_out);
+        assert_eq!(e.take_finished().len(), 5);
+        assert_eq!(e.metrics.tokens_out, 5 * 24);
+    }
+
+    #[test]
+    fn cap_savings_accumulate_with_heterogeneous_proposals() {
+        // DSDE proposals diverge across sequences after calibration, so the
+        // mean cap must shave the max proposal in at least one round
+        let mut e = {
+            let cfg = EngineConfig {
+                max_batch: 8,
+                max_len: 512,
+                policy: SlPolicyKind::Dsde(DsdeConfig::default()),
+                cap_mode: CapMode::Mean,
+                seed: 11,
+                ..Default::default()
+            };
+            let model =
+                SimModel::new(SimPairKind::LlamaLike, DatasetProfile::sharegpt(), 11)
+                    .with_max_len(512);
+            Engine::new(cfg, Box::new(model))
+        };
+        submit_n(&mut e, 8, 96);
+        e.run_to_completion();
+        assert!(
+            e.metrics.cap_savings > 0,
+            "mean cap should shave heterogeneous SL proposals"
+        );
+    }
+}

@@ -29,12 +29,16 @@ pub mod workload;
 
 /// Convenience re-exports for examples and binaries.
 pub mod prelude {
-    pub use crate::config::{AdapterConfig, CapMode, EngineConfig, SlPolicyKind};
+    pub use crate::config::{
+        AdapterConfig, CapMode, EngineConfig, RoutePolicy, RouterConfig, SlPolicyKind,
+    };
     pub use crate::engine::engine::Engine;
     pub use crate::engine::metrics::{EngineMetrics, RequestMetrics};
     pub use crate::engine::request::{Request, SamplingParams};
+    pub use crate::engine::step::{PlanOutcome, StepPlan, StepReport};
     pub use crate::model::sim_lm::{SimModel, SimPairKind};
     pub use crate::model::traits::SpecModel;
+    pub use crate::server::router::EngineRouter;
     pub use crate::sim::regime::DatasetProfile;
     pub use crate::workload::{Dataset, WorkloadGen};
 }

@@ -9,13 +9,14 @@
 
 use anyhow::Result;
 
-use dsde::config::{CapMode, EngineConfig, SlPolicyKind};
+use dsde::config::{CapMode, EngineConfig, RoutePolicy, RouterConfig, SlPolicyKind};
 use dsde::engine::engine::Engine;
 use dsde::model::pjrt_lm::PjrtModel;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::model::traits::{SeqInput, SpecModel};
 use dsde::runtime::artifacts::{DraftKind, Manifest};
-use dsde::server::http::serve;
+use dsde::server::http::serve_router;
+use dsde::server::router::EngineRouter;
 use dsde::sim::regime::DatasetProfile;
 use dsde::util::cli::{usage, Args, FlagSpec};
 use dsde::util::json::Json;
@@ -25,6 +26,8 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "artifacts", help: "artifact directory", default: Some("artifacts") },
     FlagSpec { name: "addr", help: "listen address (serve)", default: Some("127.0.0.1:8080") },
     FlagSpec { name: "policy", help: "static:<k> | dsde | adaedl:<base>", default: Some("dsde") },
+    FlagSpec { name: "replicas", help: "engine replicas behind the router (serve)", default: Some("1") },
+    FlagSpec { name: "route", help: "round-robin | least-loaded (serve)", default: Some("round-robin") },
     FlagSpec { name: "cap", help: "none | mean | median | p90", default: Some("mean") },
     FlagSpec { name: "batch", help: "max batch size", default: Some("8") },
     FlagSpec { name: "dataset", help: "cnndm|xsum|gsm8k|hotpotqa|nq|humaneval|sharegpt|wmt14", default: Some("cnndm") },
@@ -51,6 +54,17 @@ fn main() {
     std::process::exit(code);
 }
 
+fn router_config(args: &Args) -> Result<RouterConfig> {
+    let policy = RoutePolicy::parse(&args.str_or("route", "round-robin"))
+        .ok_or_else(|| anyhow::anyhow!("unknown route policy (round-robin | least-loaded)"))?;
+    let cfg = RouterConfig {
+        replicas: args.usize_clamped_or("replicas", 1, 1, 256),
+        policy,
+    };
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
 fn engine_config(args: &Args) -> Result<EngineConfig> {
     let policy = SlPolicyKind::parse(&args.str_or("policy", "dsde"))
         .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
@@ -67,42 +81,74 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     })
 }
 
-fn pjrt_model(args: &Args) -> Result<PjrtModel> {
+fn pjrt_model(args: &Args, seed: u64) -> Result<PjrtModel> {
     let draft = match args.str_or("draft", "good").as_str() {
         "weak" => DraftKind::Weak,
         _ => DraftKind::Good,
     };
-    PjrtModel::new(args.str_or("artifacts", "artifacts"), draft, args.u64_or("seed", 0))
+    PjrtModel::new(args.str_or("artifacts", "artifacts"), draft, seed)
 }
 
-fn sim_model(args: &Args) -> Result<SimModel> {
+fn sim_model(args: &Args, seed: u64) -> Result<SimModel> {
     let pair = match args.str_or("pair", "llama").as_str() {
         "gemma" => SimPairKind::GemmaLike,
         _ => SimPairKind::LlamaLike,
     };
     let profile = DatasetProfile::by_name(&args.str_or("dataset", "cnndm"))
         .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
-    Ok(SimModel::new(pair, profile, args.u64_or("seed", 0)))
+    Ok(SimModel::new(pair, profile, seed))
 }
 
 fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "serve" => {
-            let model = pjrt_model(args)?;
-            let mut cfg = engine_config(args)?;
-            cfg.max_len = model.max_len();
-            cfg.spec_k = cfg.spec_k.min(model.spec_k());
-            let handle = serve(Engine::new(cfg, Box::new(model)), &args.str_or("addr", "127.0.0.1:8080"))?;
-            println!("dsde serving (pjrt) on http://{}", handle.addr);
+            let rcfg = router_config(args)?;
+            let base_seed = args.u64_or("seed", 0);
+            // each replica owns its own PJRT context + weights (they are
+            // single-threaded by design); expect memory to scale with N
+            let engines: Vec<Engine> = (0..rcfg.replicas)
+                .map(|i| -> Result<Engine> {
+                    // decorrelate replica sampling RNG streams via the seed
+                    let model = pjrt_model(args, base_seed + i as u64)?;
+                    let mut cfg = engine_config(args)?;
+                    cfg.seed = base_seed + i as u64;
+                    cfg.max_len = model.max_len();
+                    cfg.spec_k = cfg.spec_k.min(model.spec_k());
+                    Ok(Engine::new(cfg, Box::new(model)))
+                })
+                .collect::<Result<_>>()?;
+            let router = EngineRouter::new(engines, rcfg.policy);
+            let handle = serve_router(router, &args.str_or("addr", "127.0.0.1:8080"))?;
+            println!(
+                "dsde serving (pjrt, {} replica(s), {}) on http://{}",
+                rcfg.replicas,
+                rcfg.policy.name(),
+                handle.addr
+            );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
         }
         "serve-sim" => {
-            let model = sim_model(args)?;
-            let cfg = engine_config(args)?;
-            let handle = serve(Engine::new(cfg, Box::new(model)), &args.str_or("addr", "127.0.0.1:8080"))?;
-            println!("dsde serving (sim) on http://{}", handle.addr);
+            let rcfg = router_config(args)?;
+            let base_seed = args.u64_or("seed", 0);
+            let engines: Vec<Engine> = (0..rcfg.replicas)
+                .map(|i| -> Result<Engine> {
+                    // decorrelate replica regime processes via the seed
+                    let mut cfg = engine_config(args)?;
+                    cfg.seed = base_seed + i as u64;
+                    let model = sim_model(args, base_seed + i as u64)?;
+                    Ok(Engine::new(cfg, Box::new(model)))
+                })
+                .collect::<Result<_>>()?;
+            let router = EngineRouter::new(engines, rcfg.policy);
+            let handle = serve_router(router, &args.str_or("addr", "127.0.0.1:8080"))?;
+            println!(
+                "dsde serving (sim, {} replica(s), {}) on http://{}",
+                rcfg.replicas,
+                rcfg.policy.name(),
+                handle.addr
+            );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
@@ -116,13 +162,13 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
             let pjrt = args.flag("pjrt");
             let mut cfg = engine_config(args)?;
             let model: Box<dyn SpecModel> = if pjrt {
-                let m = pjrt_model(args)?;
+                let m = pjrt_model(args, args.u64_or("seed", 0))?;
                 cfg.max_len = m.max_len();
                 cfg.spec_k = cfg.spec_k.min(m.spec_k());
                 Box::new(m)
             } else {
                 cfg.max_len = 4096;
-                Box::new(sim_model(args)?)
+                Box::new(sim_model(args, args.u64_or("seed", 0))?)
             };
             let mut gen = WorkloadGen::new(dataset, seed).with_temperature(temp);
             if pjrt {
@@ -182,7 +228,7 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
 /// Measure real PJRT round costs (draft step / verify / AR) across buckets —
 /// the data the simulator's cost model can be re-fit against.
 fn calibrate(args: &Args) -> Result<()> {
-    let mut model = pjrt_model(args)?;
+    let mut model = pjrt_model(args, args.u64_or("seed", 0))?;
     let max_len = model.max_len();
     let reps = args.usize_or("requests", 5);
     println!("bucket, draft_step_ms, verify_ms, ar_ms");

@@ -4,25 +4,29 @@
 //! * `POST /v1/completions` — body `{"prompt": "...", "max_tokens": N,
 //!   "temperature": T}` → `{"id": .., "text": .., "latency_s": ..,
 //!   "ttft_s": .., "rounds": ..}` (blocks until the request completes).
-//! * `GET /v1/metrics` — engine metrics snapshot.
-//! * `GET /health` — liveness.
+//! * `GET /v1/metrics` — metrics aggregated across engine replicas, plus a
+//!   per-replica breakdown.
+//! * `GET /health` — liveness + replica count.
 //!
-//! One engine thread owns the [`Engine`]; connection threads submit work
-//! through an mpsc channel and park on a per-request response channel.
+//! Connection threads hand requests to an [`EngineRouter`], which owns one
+//! engine thread per replica; [`serve`] wraps a single engine in a
+//! 1-replica router, [`serve_router`] serves an arbitrary replica set.
+//! Shutdown drains gracefully: in-flight requests complete before the
+//! engine threads exit.
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::config::RoutePolicy;
 use crate::engine::engine::Engine;
-use crate::engine::request::{FinishedRequest, Request, SamplingParams};
+use crate::engine::request::{Request, SamplingParams};
 use crate::model::vocab;
+use crate::server::router::EngineRouter;
 use crate::util::json::Json;
 use crate::{log_info, log_warn};
 
@@ -85,111 +89,47 @@ pub fn write_json(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()
     Ok(())
 }
 
-enum EngineMsg {
-    Submit(Request, Sender<FinishedRequest>),
-    Metrics(Sender<Json>),
-    Shutdown,
-}
-
 /// Handle used to submit work / stop the server.
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
-    tx: Sender<EngineMsg>,
+    router: Arc<EngineRouter>,
     stop: Arc<AtomicBool>,
-    engine_thread: Option<JoinHandle<()>>,
     acceptor_thread: Option<JoinHandle<()>>,
 }
 
 impl ServerHandle {
+    /// The router behind this server (e.g. for metric snapshots in-process).
+    pub fn router(&self) -> &EngineRouter {
+        &self.router
+    }
+
+    /// Stop accepting connections, then drain the engine replicas: every
+    /// in-flight request completes and is delivered before this returns.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        let _ = self.tx.send(EngineMsg::Shutdown);
         // poke the acceptor so it notices the stop flag
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.acceptor_thread.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.engine_thread.take() {
-            let _ = t.join();
-        }
+        self.router.shutdown();
     }
 }
 
-/// The engine thread's loop: interleave request intake with engine steps so
-/// new arrivals join the continuous batch.
-fn engine_loop(mut engine: Engine, rx: Receiver<EngineMsg>, stop: Arc<AtomicBool>) {
-    let mut pending: HashMap<u64, Sender<FinishedRequest>> = HashMap::new();
-    let mut next_id: u64 = 1;
-    loop {
-        // drain the message queue (non-blocking while busy, blocking if idle)
-        loop {
-            let msg = if engine.pending() == 0 && pending.is_empty() {
-                match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => return,
-                }
-            } else {
-                match rx.try_recv() {
-                    Ok(m) => m,
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => return,
-                }
-            };
-            match msg {
-                EngineMsg::Submit(mut req, reply) => {
-                    req.id = next_id;
-                    next_id += 1;
-                    pending.insert(req.id, reply);
-                    engine.submit(req);
-                }
-                EngineMsg::Metrics(reply) => {
-                    let _ = reply.send(engine.metrics.to_json());
-                }
-                EngineMsg::Shutdown => {
-                    engine.abort_all();
-                    for fin in engine.take_finished() {
-                        if let Some(reply) = pending.remove(&fin.id) {
-                            let _ = reply.send(fin);
-                        }
-                    }
-                    return;
-                }
-            }
-        }
-        if stop.load(Ordering::SeqCst) {
-            return;
-        }
-        if engine.pending() > 0 {
-            if let Err(e) = engine.step() {
-                log_warn!("engine step error: {e:#}");
-            }
-            for fin in engine.take_finished() {
-                if let Some(reply) = pending.remove(&fin.id) {
-                    let _ = reply.send(fin);
-                }
-            }
-        }
-    }
-}
-
-fn handle_conn(mut stream: TcpStream, tx: &Sender<EngineMsg>) {
+fn handle_conn(mut stream: TcpStream, router: &EngineRouter) {
     let req = match read_request(&mut stream) {
         Ok(r) => r,
         Err(_) => return,
     };
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => {
-            let _ = write_json(&mut stream, 200, &Json::obj().set("ok", true));
+            let body = Json::obj()
+                .set("ok", true)
+                .set("replicas", router.replica_count());
+            let _ = write_json(&mut stream, 200, &body);
         }
         ("GET", "/v1/metrics") => {
-            let (rtx, rrx) = std::sync::mpsc::channel();
-            if tx.send(EngineMsg::Metrics(rtx)).is_ok() {
-                if let Ok(m) = rrx.recv() {
-                    let _ = write_json(&mut stream, 200, &m);
-                    return;
-                }
-            }
-            let _ = write_json(&mut stream, 500, &Json::obj().set("error", "engine gone"));
+            let _ = write_json(&mut stream, 200, &router.metrics_json());
         }
         ("POST", "/v1/completions") => {
             let parsed = match Json::parse(&req.body) {
@@ -220,7 +160,7 @@ fn handle_conn(mut stream: TcpStream, tx: &Sender<EngineMsg>) {
                 .and_then(|x| x.as_f64())
                 .unwrap_or(0.0);
             let request = Request::new(
-                0, // engine thread assigns the real id
+                0, // the router assigns the globally unique id
                 vocab::encode(prompt),
                 SamplingParams {
                     temperature,
@@ -228,12 +168,7 @@ fn handle_conn(mut stream: TcpStream, tx: &Sender<EngineMsg>) {
                     stop_token: None,
                 },
             );
-            let (rtx, rrx) = std::sync::mpsc::channel();
-            if tx.send(EngineMsg::Submit(request, rtx)).is_err() {
-                let _ = write_json(&mut stream, 500, &Json::obj().set("error", "engine gone"));
-                return;
-            }
-            match rrx.recv() {
+            match router.complete(request) {
                 Ok(fin) => {
                     let body = Json::obj()
                         .set("id", fin.id)
@@ -258,18 +193,23 @@ fn handle_conn(mut stream: TcpStream, tx: &Sender<EngineMsg>) {
     }
 }
 
-/// Start serving on `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+/// Serve a single engine on `addr` (wraps it in a 1-replica router).
 pub fn serve(engine: Engine, addr: &str) -> Result<ServerHandle> {
-    static SERVER_SEQ: AtomicU64 = AtomicU64::new(0);
-    let _ = SERVER_SEQ.fetch_add(1, Ordering::Relaxed);
+    serve_router(
+        EngineRouter::new(vec![engine], RoutePolicy::RoundRobin),
+        addr,
+    )
+}
+
+/// Serve a replica set on `addr` (e.g. "127.0.0.1:0" for an ephemeral
+/// port).  Connection threads dispatch through the router's policy.
+pub fn serve_router(router: EngineRouter, addr: &str) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
-    let (tx, rx) = std::sync::mpsc::channel();
+    let router = Arc::new(router);
     let stop = Arc::new(AtomicBool::new(false));
-    let stop_e = stop.clone();
-    let engine_thread = std::thread::spawn(move || engine_loop(engine, rx, stop_e));
-    let tx_acceptor = tx.clone();
     let stop_a = stop.clone();
+    let router_a = router.clone();
     let acceptor_thread = std::thread::spawn(move || {
         for stream in listener.incoming() {
             if stop_a.load(Ordering::SeqCst) {
@@ -277,19 +217,22 @@ pub fn serve(engine: Engine, addr: &str) -> Result<ServerHandle> {
             }
             match stream {
                 Ok(s) => {
-                    let tx = tx_acceptor.clone();
-                    std::thread::spawn(move || handle_conn(s, &tx));
+                    let router = router_a.clone();
+                    std::thread::spawn(move || handle_conn(s, &router));
                 }
                 Err(e) => log_warn!("accept error: {e}"),
             }
         }
     });
-    log_info!("serving on http://{local}");
+    log_info!(
+        "serving on http://{local} ({} replica(s), {})",
+        router.replica_count(),
+        router.policy().name()
+    );
     Ok(ServerHandle {
         addr: local,
-        tx,
+        router,
         stop,
-        engine_thread: Some(engine_thread),
         acceptor_thread: Some(acceptor_thread),
     })
 }
@@ -301,16 +244,29 @@ mod tests {
     use crate::model::sim_lm::{SimModel, SimPairKind};
     use crate::sim::regime::DatasetProfile;
 
-    fn sim_server() -> ServerHandle {
+    fn sim_engine(seed: u64) -> Engine {
         let cfg = EngineConfig {
             max_batch: 4,
             max_len: 4096,
             policy: SlPolicyKind::Dsde(Default::default()),
-            seed: 1,
+            seed,
             ..Default::default()
         };
-        let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), 1);
-        serve(Engine::new(cfg, Box::new(model)), "127.0.0.1:0").unwrap()
+        let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), seed);
+        Engine::new(cfg, Box::new(model))
+    }
+
+    fn sim_server() -> ServerHandle {
+        serve(sim_engine(1), "127.0.0.1:0").unwrap()
+    }
+
+    fn sim_server_replicated(n: usize) -> ServerHandle {
+        let engines = (0..n).map(|i| sim_engine(1 + i as u64)).collect();
+        serve_router(
+            EngineRouter::new(engines, RoutePolicy::RoundRobin),
+            "127.0.0.1:0",
+        )
+        .unwrap()
     }
 
     fn raw_request(addr: std::net::SocketAddr, req: &str) -> String {
@@ -330,6 +286,7 @@ mod tests {
         );
         assert!(resp.starts_with("HTTP/1.1 200"));
         assert!(resp.contains("\"ok\":true"));
+        assert!(resp.contains("\"replicas\":1"));
         h.shutdown();
     }
 
@@ -361,6 +318,7 @@ mod tests {
             "GET /v1/metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
         );
         assert!(resp.contains("block_efficiency"), "{resp}");
+        assert!(resp.contains("route_policy"), "{resp}");
         h.shutdown();
     }
 
@@ -410,6 +368,37 @@ mod tests {
             let resp = t.join().unwrap();
             assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
         }
+        h.shutdown();
+    }
+
+    #[test]
+    fn replicated_server_completes_and_aggregates() {
+        let h = sim_server_replicated(2);
+        let addr = h.addr;
+        let threads: Vec<_> = (0..6)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let body =
+                        format!(r#"{{"prompt": "req {i}", "max_tokens": 8}}"#);
+                    let req = format!(
+                        "POST /v1/completions HTTP/1.1\r\nHost: x\r\n\
+                         Content-Length: {}\r\n\r\n{body}",
+                        body.len()
+                    );
+                    raw_request(addr, &req)
+                })
+            })
+            .collect();
+        for t in threads {
+            let resp = t.join().unwrap();
+            assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        }
+        let resp = raw_request(
+            addr,
+            "GET /v1/metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.contains("\"replica_count\":2"), "{resp}");
+        assert!(resp.contains("\"requests\":6"), "{resp}");
         h.shutdown();
     }
 }

@@ -1,11 +1,14 @@
 //! Serving front-end: a thread-based HTTP/1.1 server exposing a JSON
-//! completions API over the engine, plus a load-generating client.
+//! completions API over a multi-replica engine router, plus a
+//! load-generating client.
 //!
 //! Architecture (no async runtime in the offline vendor set — and none
-//! needed): acceptor threads parse requests and funnel them over an mpsc
-//! channel into the single engine thread (PJRT contexts are single-threaded
-//! by design); the engine thread runs the continuous-batching loop and
-//! completes waiting responses via per-request channels.
+//! needed): acceptor threads parse requests and hand them to the
+//! [`router::EngineRouter`], which owns one engine thread per replica
+//! (PJRT contexts are single-threaded by design, so each replica gets its
+//! own); each engine thread runs the continuous-batching `plan → execute →
+//! apply` loop and completes waiting responses via per-request channels.
 
 pub mod client;
 pub mod http;
+pub mod router;

@@ -1,0 +1,550 @@
+//! Multi-replica engine router: horizontal scale for the serving stack.
+//!
+//! An [`EngineRouter`] owns N engine replicas — each with its own model
+//! instance, KV cache, scheduler, and dedicated thread running the staged
+//! `plan → execute → apply` loop — and dispatches requests to them by a
+//! pluggable [`RoutePolicy`] (round-robin or least-loaded by in-flight
+//! count).  It aggregates [`EngineMetrics`] across replicas for
+//! `/v1/metrics` and performs a graceful drain on shutdown: every replica
+//! finishes its in-flight batch before its thread exits.
+//!
+//! Replicas are share-nothing: no KV or signal state crosses the boundary,
+//! so aggregate throughput scales with replica count until the host runs
+//! out of cores (see `benches/serving_load.rs`).  Cross-replica KV-aware
+//! placement is the designed follow-on (ROADMAP).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RoutePolicy;
+use crate::engine::engine::Engine;
+use crate::engine::metrics::EngineMetrics;
+use crate::engine::request::{FinishedRequest, Request};
+use crate::util::json::Json;
+use crate::log_warn;
+
+/// Messages into a replica's engine thread.
+pub(crate) enum EngineMsg {
+    /// Submit a request; the finished result is sent on the reply channel.
+    Submit(Request, Sender<FinishedRequest>),
+    /// Snapshot this replica's metrics.
+    Metrics(Sender<EngineMetrics>),
+    /// Graceful drain: finish everything in flight, then exit the thread.
+    Drain,
+    /// Abort in-flight work (clients observe `FinishReason::Aborted`) and
+    /// exit the thread.
+    Abort,
+}
+
+/// One engine replica: channel + thread + in-flight counter.
+struct Replica {
+    tx: Sender<EngineMsg>,
+    load: Arc<AtomicUsize>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// Deliver finished requests to their waiting reply channels.
+fn deliver(
+    engine: &mut Engine,
+    pending: &mut HashMap<u64, Sender<FinishedRequest>>,
+    load: &AtomicUsize,
+) {
+    for fin in engine.take_finished() {
+        load.fetch_sub(1, Ordering::SeqCst);
+        if let Some(reply) = pending.remove(&fin.id) {
+            let _ = reply.send(fin);
+        }
+    }
+    // orphaned waiters (should not happen): drop their channels so callers
+    // error out instead of hanging — and release their load slots so
+    // least-loaded routing does not shun this replica forever
+    if engine.pending() == 0 && !pending.is_empty() {
+        load.fetch_sub(pending.len(), Ordering::SeqCst);
+        pending.clear();
+    }
+}
+
+/// A replica's engine thread: interleave request intake with engine steps
+/// so new arrivals join the continuous batch.
+fn replica_loop(
+    mut engine: Engine,
+    rx: Receiver<EngineMsg>,
+    load: Arc<AtomicUsize>,
+) {
+    let mut pending: HashMap<u64, Sender<FinishedRequest>> = HashMap::new();
+    let mut draining = false;
+    let mut consecutive_errors = 0u32;
+    loop {
+        // drain the message queue (blocking when idle, else non-blocking)
+        loop {
+            let idle = engine.pending() == 0 && pending.is_empty() && !draining;
+            let msg = if idle {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return, // router dropped: nothing in flight
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        draining = true; // router gone: finish what we hold
+                        break;
+                    }
+                }
+            };
+            match msg {
+                EngineMsg::Submit(req, reply) => {
+                    pending.insert(req.id, reply);
+                    engine.submit(req);
+                }
+                EngineMsg::Metrics(reply) => {
+                    let _ = reply.send(engine.metrics.clone());
+                }
+                EngineMsg::Drain => draining = true,
+                EngineMsg::Abort => {
+                    engine.abort_all();
+                    deliver(&mut engine, &mut pending, &load);
+                    return;
+                }
+            }
+        }
+        if engine.pending() > 0 {
+            let progressed = match engine.step() {
+                Ok(p) => {
+                    consecutive_errors = 0;
+                    p
+                }
+                Err(e) => {
+                    consecutive_errors += 1;
+                    log_warn!(
+                        "engine step error ({consecutive_errors} consecutive): {e:#}"
+                    );
+                    // a transient failure is worth retrying; a persistently
+                    // failing model must not wedge the replica forever
+                    consecutive_errors < 3
+                }
+            };
+            deliver(&mut engine, &mut pending, &load);
+            if !progressed && engine.pending() > 0 {
+                // Stuck, not just slow.  Two causes, two remedies — either
+                // way the replica stays up instead of busy-spinning and
+                // starving everything routed here:
+                if consecutive_errors >= 3 {
+                    // persistently failing model: the whole batch is
+                    // unservable; clients observe FinishReason::Aborted
+                    log_warn!(
+                        "model failing persistently; aborting {} request(s)",
+                        engine.pending()
+                    );
+                    engine.abort_all();
+                    consecutive_errors = 0;
+                } else {
+                    // head-of-line prompt that can never fit in KV (FCFS
+                    // forbids skipping it): abort just the head so the
+                    // servable requests queued behind it proceed
+                    if let Some(id) = engine.abort_head() {
+                        log_warn!(
+                            "aborting unschedulable request {id} \
+                             (prompt cannot fit in KV)"
+                        );
+                    }
+                }
+                deliver(&mut engine, &mut pending, &load);
+            }
+        } else if draining {
+            return;
+        }
+    }
+}
+
+/// Routes requests across engine replicas; aggregates their metrics.
+pub struct EngineRouter {
+    replicas: Vec<Replica>,
+    policy: RoutePolicy,
+    rr_next: AtomicUsize,
+    next_id: AtomicU64,
+}
+
+impl EngineRouter {
+    /// Spawn one serving thread per engine.  Panics on an empty replica
+    /// set (a router with nothing behind it cannot serve).
+    pub fn new(engines: Vec<Engine>, policy: RoutePolicy) -> EngineRouter {
+        assert!(!engines.is_empty(), "EngineRouter needs >= 1 engine");
+        let replicas = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, engine)| {
+                let (tx, rx) = channel();
+                let load = Arc::new(AtomicUsize::new(0));
+                let load_t = load.clone();
+                let thread = std::thread::Builder::new()
+                    .name(format!("dsde-replica-{i}"))
+                    .spawn(move || replica_loop(engine, rx, load_t))
+                    .expect("spawn replica thread");
+                Replica {
+                    tx,
+                    load,
+                    thread: Mutex::new(Some(thread)),
+                }
+            })
+            .collect();
+        EngineRouter {
+            replicas,
+            policy,
+            rr_next: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Current in-flight request count per replica.
+    pub fn loads(&self) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .map(|r| r.load.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Total in-flight requests across replicas.
+    pub fn in_flight(&self) -> usize {
+        self.loads().iter().sum()
+    }
+
+    /// Pick a replica index for the next request.
+    fn pick(&self) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::SeqCst) % self.replicas.len()
+            }
+            RoutePolicy::LeastLoaded => {
+                let loads = self.loads();
+                let mut best = 0usize;
+                for (i, &l) in loads.iter().enumerate() {
+                    if l < loads[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Dispatch a request to a replica; returns the channel the finished
+    /// result arrives on.  The router assigns globally unique request ids
+    /// (any caller-provided id is overwritten).
+    pub fn submit(&self, mut req: Request) -> Receiver<FinishedRequest> {
+        req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        let idx = self.pick();
+        let replica = &self.replicas[idx];
+        let (rtx, rrx) = channel();
+        replica.load.fetch_add(1, Ordering::SeqCst);
+        if replica.tx.send(EngineMsg::Submit(req, rtx)).is_err() {
+            // replica already shut down; undo the load count — the caller
+            // observes a closed reply channel
+            replica.load.fetch_sub(1, Ordering::SeqCst);
+        }
+        rrx
+    }
+
+    /// Submit and block until the request completes.
+    pub fn complete(&self, req: Request) -> Result<FinishedRequest> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow!("request dropped: router is shutting down"))
+    }
+
+    /// Per-replica metrics snapshots (skips replicas that already exited).
+    pub fn replica_metrics(&self) -> Vec<EngineMetrics> {
+        self.replicas
+            .iter()
+            .filter_map(|r| {
+                let (tx, rx) = channel();
+                r.tx.send(EngineMsg::Metrics(tx)).ok()?;
+                rx.recv().ok()
+            })
+            .collect()
+    }
+
+    /// Merge per-replica snapshots into one aggregate.  The aggregate's
+    /// request window is sized to hold every replica's retained window, so
+    /// percentile queries see all replicas rather than whichever merged
+    /// last.
+    fn merge_snapshots(per: &[EngineMetrics]) -> EngineMetrics {
+        let window: usize = per.iter().map(|m| m.requests.len()).sum();
+        let mut agg = EngineMetrics::with_retention(window.max(1));
+        for m in per {
+            agg.merge(m);
+        }
+        agg
+    }
+
+    /// Metrics aggregated across all live replicas (counters summed,
+    /// distributions merged — see [`EngineMetrics::merge`]).
+    pub fn aggregated_metrics(&self) -> EngineMetrics {
+        Self::merge_snapshots(&self.replica_metrics())
+    }
+
+    /// The `/v1/metrics` payload: aggregate counters plus a per-replica
+    /// summary and the routing configuration.
+    ///
+    /// The merged `throughput`/`goodput` divide by *summed* busy seconds
+    /// (per-busy-second rates, flat in replica count); `fleet_throughput`
+    /// divides total tokens by the fleet makespan (the slowest replica's
+    /// busy time) and is the number that scales with replicas.
+    pub fn metrics_json(&self) -> Json {
+        let per = self.replica_metrics();
+        let agg = Self::merge_snapshots(&per);
+        let makespan = per.iter().map(|m| m.busy_time).fold(0.0f64, f64::max);
+        let fleet_throughput = if makespan > 0.0 {
+            agg.tokens_out as f64 / makespan
+        } else {
+            0.0
+        };
+        let loads = self.loads();
+        let replicas: Vec<Json> = per
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                Json::obj()
+                    .set("replica", i)
+                    .set("in_flight", *loads.get(i).unwrap_or(&0))
+                    .set("tokens_out", m.tokens_out)
+                    .set("requests", m.completed)
+                    .set("throughput", m.throughput())
+                    .set("busy_time", m.busy_time)
+                    .set("preemptions", m.preemptions)
+            })
+            .collect();
+        agg.to_json()
+            .set("route_policy", self.policy.name())
+            .set("replica_count", self.replicas.len())
+            .set("fleet_makespan", makespan)
+            .set("fleet_throughput", fleet_throughput)
+            .set("replicas", replicas)
+    }
+
+    /// Graceful drain: every replica finishes its in-flight work (clients
+    /// receive their completions), then the threads exit.  Idempotent.
+    pub fn shutdown(&self) {
+        for r in &self.replicas {
+            let _ = r.tx.send(EngineMsg::Drain);
+        }
+        self.join();
+    }
+
+    /// Hard stop: in-flight work is aborted (`FinishReason::Aborted`).
+    pub fn abort(&self) {
+        for r in &self.replicas {
+            let _ = r.tx.send(EngineMsg::Abort);
+        }
+        self.join();
+    }
+
+    fn join(&self) {
+        for r in &self.replicas {
+            let handle = r.thread.lock().expect("replica lock").take();
+            if let Some(t) = handle {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+impl Drop for EngineRouter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineConfig, SlPolicyKind};
+    use crate::engine::request::{FinishReason, SamplingParams};
+    use crate::model::sim_lm::{SimModel, SimPairKind};
+    use crate::sim::regime::DatasetProfile;
+
+    fn sim_engines(n: usize) -> Vec<Engine> {
+        (0..n)
+            .map(|i| {
+                let cfg = EngineConfig {
+                    max_batch: 4,
+                    max_len: 4096,
+                    policy: SlPolicyKind::Static(4),
+                    seed: 10 + i as u64,
+                    ..Default::default()
+                };
+                let model = SimModel::new(
+                    SimPairKind::LlamaLike,
+                    DatasetProfile::cnndm(),
+                    10 + i as u64,
+                );
+                Engine::new(cfg, Box::new(model))
+            })
+            .collect()
+    }
+
+    fn req(max_tokens: usize) -> Request {
+        Request::new(
+            0,
+            vec![65; 24],
+            SamplingParams {
+                max_tokens,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn single_replica_roundtrip() {
+        let router = EngineRouter::new(sim_engines(1), RoutePolicy::RoundRobin);
+        let fin = router.complete(req(8)).unwrap();
+        assert_eq!(fin.output.len(), 8);
+        assert_eq!(fin.reason, FinishReason::MaxTokens);
+        router.shutdown();
+    }
+
+    #[test]
+    fn round_robin_cycles_replicas() {
+        let router = EngineRouter::new(sim_engines(3), RoutePolicy::RoundRobin);
+        assert_eq!(router.pick(), 0);
+        assert_eq!(router.pick(), 1);
+        assert_eq!(router.pick(), 2);
+        assert_eq!(router.pick(), 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_replica() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::LeastLoaded);
+        // manufacture imbalance: replica 0 busy with 3 in-flight
+        router.replicas[0].load.store(3, Ordering::SeqCst);
+        assert_eq!(router.pick(), 1);
+        router.replicas[0].load.store(0, Ordering::SeqCst);
+        router.shutdown();
+    }
+
+    #[test]
+    fn ids_are_globally_unique_across_replicas() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::RoundRobin);
+        let rxs: Vec<_> = (0..10).map(|_| router.submit(req(4))).collect();
+        let mut ids: Vec<u64> = rxs.into_iter().map(|rx| rx.recv().unwrap().id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10);
+        router.shutdown();
+    }
+
+    #[test]
+    fn graceful_shutdown_completes_in_flight_work() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::RoundRobin);
+        let rxs: Vec<_> = (0..6).map(|_| router.submit(req(32))).collect();
+        router.shutdown(); // drain: all six must still complete normally
+        for rx in rxs {
+            let fin = rx.recv().expect("drained request must complete");
+            assert_eq!(fin.reason, FinishReason::MaxTokens);
+            assert_eq!(fin.output.len(), 32);
+        }
+        assert_eq!(router.in_flight(), 0);
+    }
+
+    #[test]
+    fn abort_delivers_aborted_results() {
+        let router = EngineRouter::new(sim_engines(1), RoutePolicy::RoundRobin);
+        let rxs: Vec<_> = (0..3).map(|_| router.submit(req(100_000))).collect();
+        router.abort();
+        for rx in rxs {
+            let fin = rx.recv().expect("aborted request still resolves");
+            assert_eq!(fin.reason, FinishReason::Aborted);
+        }
+    }
+
+    #[test]
+    fn unfittable_prompt_is_aborted_and_replica_stays_alive() {
+        // KV capacity: 8 blocks * 16 tokens = 128 slots; a 200-token prompt
+        // can never be admitted.  The replica must abort it (not busy-spin)
+        // and keep serving subsequent requests.
+        let cfg = EngineConfig {
+            max_batch: 4,
+            max_len: 4096,
+            kv_blocks: 8,
+            policy: SlPolicyKind::Static(4),
+            seed: 5,
+            ..Default::default()
+        };
+        let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), 5);
+        let router = EngineRouter::new(
+            vec![Engine::new(cfg, Box::new(model))],
+            RoutePolicy::RoundRobin,
+        );
+        // queue a servable request BEHIND the poison head before the
+        // replica reacts: only the head may be aborted, not its followers
+        let poisoned_rx =
+            router.submit(Request::new(0, vec![65; 200], SamplingParams::default()));
+        let behind_rx = router.submit(req(8));
+        let poisoned = poisoned_rx.recv().expect("wedged request must resolve");
+        assert_eq!(poisoned.reason, FinishReason::Aborted);
+        let behind = behind_rx.recv().expect("follower must survive the abort");
+        assert_eq!(behind.reason, FinishReason::MaxTokens);
+        assert_eq!(behind.output.len(), 8);
+        // the replica is unwedged and serves fresh traffic too
+        let fin = router.complete(req(8)).unwrap();
+        assert_eq!(fin.reason, FinishReason::MaxTokens);
+        assert_eq!(router.in_flight(), 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors_cleanly() {
+        let router = EngineRouter::new(sim_engines(1), RoutePolicy::RoundRobin);
+        router.shutdown();
+        assert!(router.complete(req(4)).is_err());
+        assert_eq!(router.in_flight(), 0);
+    }
+
+    #[test]
+    fn aggregated_metrics_sum_replica_counters() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::RoundRobin);
+        let rxs: Vec<_> = (0..8).map(|_| router.submit(req(12))).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let per = router.replica_metrics();
+        assert_eq!(per.len(), 2);
+        let agg = router.aggregated_metrics();
+        assert_eq!(
+            agg.tokens_out,
+            per.iter().map(|m| m.tokens_out).sum::<u64>()
+        );
+        assert_eq!(agg.completed, 8);
+        // round-robin with blocking-free submission: both replicas worked
+        assert!(per.iter().all(|m| m.completed == 4));
+        router.shutdown();
+    }
+
+    #[test]
+    fn metrics_json_has_aggregate_and_per_replica_views() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::LeastLoaded);
+        let fin = router.complete(req(6)).unwrap();
+        assert_eq!(fin.output.len(), 6);
+        let s = router.metrics_json().to_string();
+        assert!(s.contains("\"replica_count\":2"), "{s}");
+        assert!(s.contains("\"route_policy\":\"least-loaded\""), "{s}");
+        assert!(s.contains("\"replicas\":["), "{s}");
+        assert!(s.contains("block_efficiency"), "{s}");
+        router.shutdown();
+    }
+}

@@ -69,6 +69,18 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Like [`Args::usize_or`] but clamped into `[min, max]` — used for
+    /// flags with a sane operating envelope (e.g. `--replicas`).
+    pub fn usize_clamped_or(
+        &self,
+        name: &str,
+        default: usize,
+        min: usize,
+        max: usize,
+    ) -> usize {
+        self.usize_or(name, default).clamp(min, max)
+    }
+
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .and_then(|s| s.parse().ok())
@@ -142,6 +154,14 @@ mod tests {
         assert_eq!(a.f64_or("rate", 0.0), 1.5);
         assert_eq!(a.usize_or("missing", 7), 7);
         assert_eq!(a.str_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn clamped_getter_bounds_values() {
+        let a = parse(&["--replicas", "999", "--n", "0"]);
+        assert_eq!(a.usize_clamped_or("replicas", 1, 1, 64), 64);
+        assert_eq!(a.usize_clamped_or("n", 4, 1, 64), 1);
+        assert_eq!(a.usize_clamped_or("missing", 4, 1, 64), 4);
     }
 
     #[test]

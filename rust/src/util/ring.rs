@@ -1,7 +1,87 @@
-//! Fixed-capacity ring buffer used for the per-sequence KLD signal windows
+//! Fixed-capacity ring buffers.
+//!
+//! [`Ring`] is the f64 buffer used for the per-sequence KLD signal windows
 //! (paper Fig. 5: short N=10 and long N=30 histories).  Pushing beyond
 //! capacity evicts the oldest entry; iteration order is most-recent-first to
 //! line up with the paper's reverse index i (Eq. 5).
+//!
+//! [`RingBuf`] is the generic retention window used by
+//! [`crate::engine::metrics::EngineMetrics`] to bound per-request metric
+//! growth under sustained serving traffic: the newest `cap` items are kept,
+//! older ones are evicted, and iteration is oldest-first (insertion order).
+
+use std::collections::VecDeque;
+
+/// Generic fixed-capacity retention window: keeps the `cap` most recent
+/// items, iterates oldest → newest.
+#[derive(Clone, Debug)]
+pub struct RingBuf<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    /// total items ever pushed (including evicted ones)
+    pushed: u64,
+}
+
+impl<T> RingBuf<T> {
+    pub fn new(cap: usize) -> RingBuf<T> {
+        assert!(cap > 0);
+        RingBuf {
+            buf: VecDeque::with_capacity(cap.min(1024)),
+            cap,
+            pushed: 0,
+        }
+    }
+
+    /// Append, evicting the oldest item when at capacity.
+    pub fn push(&mut self, item: T) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(item);
+        self.pushed += 1;
+    }
+
+    /// Items currently retained.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total items ever pushed, including evicted ones.
+    pub fn total_pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Number of items evicted by the retention window so far.
+    pub fn evicted(&self) -> u64 {
+        self.pushed - self.buf.len() as u64
+    }
+
+    /// Iterate oldest → newest over the retained window.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf.iter()
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+}
+
+impl<'a, T> IntoIterator for &'a RingBuf<T> {
+    type Item = &'a T;
+    type IntoIter = std::collections::vec_deque::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.buf.iter()
+    }
+}
 
 /// Fixed-capacity ring buffer of f64 with most-recent-first reads.
 #[derive(Clone, Debug)]
@@ -131,5 +211,43 @@ mod tests {
         }
         let via_iter: Vec<f64> = r.iter_recent().collect();
         assert_eq!(via_iter, r.latest(4));
+    }
+
+    #[test]
+    fn ringbuf_bounded_and_ordered() {
+        let mut r: RingBuf<u32> = RingBuf::new(3);
+        for i in 0..7u32 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.capacity(), 3);
+        assert_eq!(r.iter().copied().collect::<Vec<_>>(), vec![4, 5, 6]);
+        assert_eq!(r.total_pushed(), 7);
+        assert_eq!(r.evicted(), 4);
+    }
+
+    #[test]
+    fn ringbuf_under_capacity_keeps_everything() {
+        let mut r: RingBuf<&str> = RingBuf::new(8);
+        r.push("a");
+        r.push("b");
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.evicted(), 0);
+        assert!(!r.is_empty());
+        let mut seen = 0;
+        for _ in &r {
+            seen += 1;
+        }
+        assert_eq!(seen, 2);
+    }
+
+    #[test]
+    fn ringbuf_clear_keeps_pushed_total() {
+        let mut r: RingBuf<u8> = RingBuf::new(2);
+        r.push(1);
+        r.push(2);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.total_pushed(), 2);
     }
 }

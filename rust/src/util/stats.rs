@@ -153,6 +153,27 @@ impl Welford {
         self.variance().sqrt()
     }
 
+    /// Combine with another accumulator (Chan et al.'s parallel update) —
+    /// used by the engine router to aggregate per-replica metrics.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let n = n1 + n2;
+        let delta = other.mean - self.mean;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -236,6 +257,44 @@ mod tests {
         assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn welford_merge_matches_single_pass() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0, 5.0, 3.0];
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let (a, b) = xs.split_at(4);
+        let mut wa = Welford::new();
+        for &x in a {
+            wa.push(x);
+        }
+        let mut wb = Welford::new();
+        for &x in b {
+            wb.push(x);
+        }
+        wa.merge(&wb);
+        assert_eq!(wa.count(), whole.count());
+        assert!((wa.mean() - whole.mean()).abs() < 1e-12);
+        assert!((wa.variance() - whole.variance()).abs() < 1e-9);
+        assert_eq!(wa.min(), whole.min());
+        assert_eq!(wa.max(), whole.max());
+    }
+
+    #[test]
+    fn welford_merge_with_empty_is_identity() {
+        let mut w = Welford::new();
+        w.push(2.0);
+        w.push(4.0);
+        let before = (w.count(), w.mean(), w.variance());
+        w.merge(&Welford::new());
+        assert_eq!((w.count(), w.mean(), w.variance()), before);
+        let mut empty = Welford::new();
+        empty.merge(&w);
+        assert_eq!(empty.count(), 2);
+        assert!((empty.mean() - 3.0).abs() < 1e-12);
     }
 
     #[test]

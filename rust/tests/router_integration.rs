@@ -1,0 +1,152 @@
+//! Integration: the multi-replica [`EngineRouter`] over the simulated
+//! substrate — completion guarantees across replicas, metric aggregation
+//! consistency, routing policies, and graceful drain.
+
+use dsde::config::{EngineConfig, RoutePolicy, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::engine::request::{FinishReason, Request, SamplingParams};
+use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::server::router::EngineRouter;
+use dsde::sim::regime::DatasetProfile;
+use dsde::spec::adapter::DsdeConfig;
+
+fn sim_engines(n: usize, base_seed: u64) -> Vec<Engine> {
+    (0..n)
+        .map(|i| {
+            let seed = base_seed + i as u64;
+            let cfg = EngineConfig {
+                max_batch: 4,
+                max_len: 4096,
+                policy: SlPolicyKind::Dsde(DsdeConfig::default()),
+                seed,
+                ..Default::default()
+            };
+            let model =
+                SimModel::new(SimPairKind::LlamaLike, DatasetProfile::sharegpt(), seed);
+            Engine::new(cfg, Box::new(model))
+        })
+        .collect()
+}
+
+fn req(prompt_len: usize, max_tokens: usize) -> Request {
+    Request::new(
+        0,
+        vec![65; prompt_len],
+        SamplingParams {
+            max_tokens,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn all_requests_complete_across_replicas() {
+    for replicas in [2usize, 4] {
+        let router = EngineRouter::new(sim_engines(replicas, 40), RoutePolicy::RoundRobin);
+        let n = 24;
+        let rxs: Vec<_> = (0..n).map(|_| router.submit(req(24, 16))).collect();
+        let mut ids = Vec::new();
+        for rx in rxs {
+            let fin = rx.recv().expect("request must complete");
+            assert_eq!(fin.reason, FinishReason::MaxTokens);
+            assert_eq!(fin.output.len(), 16);
+            ids.push(fin.id);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "no request lost or duplicated ({replicas} replicas)");
+        router.shutdown();
+    }
+}
+
+#[test]
+fn aggregated_metrics_match_per_replica_sums() {
+    let router = EngineRouter::new(sim_engines(3, 50), RoutePolicy::RoundRobin);
+    let n = 18;
+    let rxs: Vec<_> = (0..n).map(|_| router.submit(req(32, 24))).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let per = router.replica_metrics();
+    let agg = router.aggregated_metrics();
+    assert_eq!(per.len(), 3);
+    assert_eq!(agg.completed, n as u64);
+    assert_eq!(
+        agg.tokens_out,
+        per.iter().map(|m| m.tokens_out).sum::<u64>()
+    );
+    assert_eq!(agg.steps, per.iter().map(|m| m.steps).sum::<u64>());
+    assert_eq!(
+        agg.admitted,
+        per.iter().map(|m| m.admitted).sum::<u64>()
+    );
+    assert_eq!(
+        agg.preemptions,
+        per.iter().map(|m| m.preemptions).sum::<u64>()
+    );
+    assert_eq!(
+        agg.cap_savings,
+        per.iter().map(|m| m.cap_savings).sum::<u64>()
+    );
+    assert!((agg.busy_time - per.iter().map(|m| m.busy_time).sum::<f64>()).abs() < 1e-9);
+    // every replica actually served its round-robin share
+    for m in &per {
+        assert_eq!(m.completed, (n / 3) as u64);
+        assert!(m.tokens_out > 0);
+    }
+    // merged latency distribution covers every request, and the merged
+    // request window retains every replica's samples (no eviction bias)
+    assert_eq!(agg.latency.count(), n as u64);
+    assert_eq!(agg.requests.len(), n);
+    router.shutdown();
+}
+
+#[test]
+fn least_loaded_router_completes_everything() {
+    let router = EngineRouter::new(sim_engines(2, 60), RoutePolicy::LeastLoaded);
+    let rxs: Vec<_> = (0..12).map(|_| router.submit(req(24, 12))).collect();
+    for rx in rxs {
+        let fin = rx.recv().expect("least-loaded routing must not drop work");
+        assert_eq!(fin.output.len(), 12);
+    }
+    let agg = router.aggregated_metrics();
+    assert_eq!(agg.completed, 12);
+    router.shutdown();
+}
+
+#[test]
+fn drain_after_heavy_submission_loses_nothing() {
+    let router = EngineRouter::new(sim_engines(4, 70), RoutePolicy::RoundRobin);
+    let rxs: Vec<_> = (0..32).map(|_| router.submit(req(16, 20))).collect();
+    // immediately drain while everything is still in flight
+    router.shutdown();
+    let mut done = 0;
+    for rx in rxs {
+        let fin = rx.recv().expect("drain must deliver every in-flight request");
+        assert_eq!(fin.reason, FinishReason::MaxTokens);
+        done += 1;
+    }
+    assert_eq!(done, 32);
+    assert_eq!(router.in_flight(), 0);
+}
+
+#[test]
+fn router_metrics_json_reports_new_counters() {
+    let router = EngineRouter::new(sim_engines(2, 80), RoutePolicy::RoundRobin);
+    let rxs: Vec<_> = (0..8).map(|_| router.submit(req(24, 16))).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let s = router.metrics_json().to_string();
+    for key in [
+        "\"admitted\":",
+        "\"preemptions\":",
+        "\"cap_savings\":",
+        "\"replica_count\":2",
+        "\"route_policy\":\"round-robin\"",
+        "\"fleet_throughput\":",
+    ] {
+        assert!(s.contains(key), "metrics json missing {key}: {s}");
+    }
+    router.shutdown();
+}
