@@ -1,7 +1,9 @@
 //! HTTP serving demo: brings up the completions server (simulated pair by
 //! default, `--pjrt` for the real artifacts), fires a closed-loop client
-//! load at it, and prints client-side + server-side metrics.  With
-//! `--replicas N` the server runs N engine replicas behind the router.
+//! load at it, then streams a few completions to measure client-observed
+//! time-to-first-token, and prints client-side + server-side metrics
+//! (latency AND TTFT).  With `--replicas N` the server runs N engine
+//! replicas behind the router.
 //!
 //! ```bash
 //! cargo run --release --offline --example serve_http -- [--pjrt] \
@@ -85,14 +87,43 @@ fn main() -> anyhow::Result<()> {
 
     let ok = results.iter().filter(|r| r.status == 200).count();
     let walls: Vec<f64> = results.iter().map(|r| r.wall_s).collect();
-    println!("\n== client view ==");
+    println!("\n== client view (blocking) ==");
     println!("completed     : {ok}/{n}");
     println!("wall time     : {wall:.2} s  ({:.1} req/s)", ok as f64 / wall);
     println!("mean / p99    : {:.3} / {:.3} s", mean(&walls), percentile(&walls, 0.99));
 
+    // streaming: consume chunked deltas and measure TTFT at the client
+    let n_stream = concurrency.clamp(2, 8);
+    let mut ttfts = Vec::new();
+    let mut swalls = Vec::new();
+    let mut delta_counts = Vec::new();
+    for i in 0..n_stream {
+        let r = client::complete_streaming(
+            &addr,
+            &format!("stream probe {i}"),
+            max_tokens,
+            0.0,
+        )?;
+        ttfts.push(r.ttft_s);
+        swalls.push(r.wall_s);
+        delta_counts.push(r.deltas.len() as f64);
+    }
+    println!("\n== client view (streaming, {n_stream} requests) ==");
+    println!("ttft mean/p99 : {:.3} / {:.3} s", mean(&ttfts), percentile(&ttfts, 0.99));
+    println!("e2e  mean/p99 : {:.3} / {:.3} s", mean(&swalls), percentile(&swalls, 0.99));
+    println!("deltas/request: {:.1}", mean(&delta_counts));
+
     let m = client::metrics(&addr)?;
     println!("\n== server view (aggregated over {replicas} replica(s)) ==");
     println!("{m}");
+    let get = |k: &str| m.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    println!(
+        "\nserver latency mean {:.3}s  ttft mean {:.4}s (p99 {:.4}s)  itl mean {:.4}s",
+        get("mean_latency"),
+        get("mean_ttft"),
+        get("p99_ttft"),
+        get("mean_itl"),
+    );
     handle.shutdown();
     Ok(())
 }

@@ -1,15 +1,17 @@
 //! Open-loop serving under load (beyond the paper's closed-loop protocol —
 //! the "real-world serving" regime its title targets): Poisson request
 //! arrivals into the engine's continuous batch at increasing offered load,
-//! comparing DSDE+cap vs static SL on p50/p99 latency and goodput — plus a
-//! replica-scaling section driving the [`EngineRouter`] with 1..=N
-//! share-nothing engine replicas.
+//! comparing DSDE+cap vs static SL on p50/p99 latency, TTFT, and goodput —
+//! plus a replica-scaling section driving the [`EngineRouter`] with 1..=N
+//! share-nothing engine replicas and a token-streaming section verifying
+//! the incremental delivery path under load.
 //!
 //! The shapes to expect: at low load everyone is fine; as the offered rate
 //! approaches saturation, the better block efficiency of the adaptive
-//! policy pushes the latency knee to a higher rate.  Aggregate throughput
-//! grows monotonically with replica count (virtual-time makespan shrinks
-//! as the fixed workload spreads over more replicas).
+//! policy pushes the latency knee to a higher rate.  TTFT degrades before
+//! end-to-end latency does (queueing delays the first token).  Aggregate
+//! throughput grows monotonically with replica count (virtual-time
+//! makespan shrinks as the fixed workload spreads over more replicas).
 //!
 //! ```bash
 //! cargo bench --bench serving_load -- [--replicas 1,2,4] [--requests 96]
@@ -18,7 +20,7 @@
 use dsde::config::{CapMode, EngineConfig, RoutePolicy, SlPolicyKind};
 use dsde::engine::engine::Engine;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
-use dsde::server::router::EngineRouter;
+use dsde::server::router::{EngineRouter, StreamEvent};
 use dsde::sim::regime::DatasetProfile;
 use dsde::spec::adapter::DsdeConfig;
 use dsde::util::bench::Table;
@@ -26,11 +28,19 @@ use dsde::util::cli::Args;
 use dsde::util::stats::percentile;
 use dsde::workload::{Dataset, PoissonArrivals, WorkloadGen};
 
+/// Latency/TTFT percentiles + goodput from one open-loop run.
+struct OpenLoopResult {
+    p50: f64,
+    p99: f64,
+    ttft_p50: f64,
+    ttft_p99: f64,
+    goodput: f64,
+}
+
 /// Run an open-loop experiment: requests arrive at `rate_per_s` on the
-/// engine's virtual clock until `n_total` have been submitted; returns
-/// (p50, p99, goodput tok/s).
+/// engine's virtual clock until `n_total` have been submitted.
 fn open_loop(policy: SlPolicyKind, cap: CapMode, rate_per_s: f64, n_total: usize,
-             seed: u64) -> (f64, f64, f64) {
+             seed: u64) -> OpenLoopResult {
     let cfg = EngineConfig {
         max_batch: 16,
         max_len: 4096,
@@ -69,18 +79,18 @@ fn open_loop(policy: SlPolicyKind, cap: CapMode, rate_per_s: f64, n_total: usize
         engine.step().unwrap();
     }
     let lats: Vec<f64> = engine.metrics.requests.iter().map(|r| r.latency).collect();
-    (
-        percentile(&lats, 0.5),
-        percentile(&lats, 0.99),
-        engine.metrics.goodput(),
-    )
+    let ttfts: Vec<f64> = engine.metrics.requests.iter().map(|r| r.ttft).collect();
+    OpenLoopResult {
+        p50: percentile(&lats, 0.5),
+        p99: percentile(&lats, 0.99),
+        ttft_p50: percentile(&ttfts, 0.5),
+        ttft_p99: percentile(&ttfts, 0.99),
+        goodput: engine.metrics.goodput(),
+    }
 }
 
-/// Drive a fixed closed-loop workload of `n_total` requests through a
-/// router with `replicas` sim engines; returns (aggregate tok/s over the
-/// virtual-time makespan, total tokens, makespan seconds).
-fn replica_scaling(replicas: usize, n_total: usize) -> (f64, u64, f64) {
-    let engines: Vec<Engine> = (0..replicas)
+fn router_engines(replicas: usize) -> Vec<Engine> {
+    (0..replicas)
         .map(|i| {
             let seed = 7 + i as u64;
             let cfg = EngineConfig {
@@ -96,8 +106,14 @@ fn replica_scaling(replicas: usize, n_total: usize) -> (f64, u64, f64) {
                 SimModel::new(SimPairKind::LlamaLike, DatasetProfile::sharegpt(), seed);
             Engine::new(cfg, Box::new(model))
         })
-        .collect();
-    let router = EngineRouter::new(engines, RoutePolicy::RoundRobin);
+        .collect()
+}
+
+/// Drive a fixed closed-loop workload of `n_total` requests through a
+/// router with `replicas` sim engines; returns (aggregate tok/s over the
+/// virtual-time makespan, total tokens, makespan seconds, mean TTFT).
+fn replica_scaling(replicas: usize, n_total: usize) -> (f64, u64, f64, f64) {
+    let router = EngineRouter::new(router_engines(replicas), RoutePolicy::RoundRobin);
     let mut gen = WorkloadGen::new(Dataset::by_name("sharegpt").unwrap(), 7)
         .with_limits(64, 96);
     let rxs: Vec<_> = (0..n_total).map(|_| router.submit(gen.next_request())).collect();
@@ -115,7 +131,45 @@ fn replica_scaling(replicas: usize, n_total: usize) -> (f64, u64, f64) {
     } else {
         0.0
     };
-    (throughput, agg.tokens_out, makespan)
+    (throughput, agg.tokens_out, makespan, agg.ttft.mean())
+}
+
+/// Stream `n` requests through a 1-replica router, checking that every
+/// delta arrives in order and the concatenation matches the terminal
+/// summary; returns (mean deltas/request, mean TTFT, mean latency).
+fn streaming_smoke(n: usize) -> (f64, f64, f64) {
+    let router = EngineRouter::new(router_engines(1), RoutePolicy::RoundRobin);
+    let mut gen = WorkloadGen::new(Dataset::by_name("sharegpt").unwrap(), 11)
+        .with_limits(48, 64);
+    let mut delta_counts = 0usize;
+    let mut ttft_sum = 0.0;
+    let mut lat_sum = 0.0;
+    for _ in 0..n {
+        let rx = router.submit_streaming(gen.next_request());
+        let mut tokens = Vec::new();
+        let mut deltas = 0usize;
+        let mut done = None;
+        for ev in rx {
+            match ev {
+                StreamEvent::Delta { tokens: t, .. } => {
+                    deltas += 1;
+                    tokens.extend(t);
+                }
+                StreamEvent::Done(fin) => done = Some(fin),
+            }
+        }
+        let fin = done.expect("stream must terminate");
+        assert_eq!(tokens, fin.output, "deltas must concatenate to the output");
+        delta_counts += deltas;
+        ttft_sum += fin.ttft();
+        lat_sum += fin.latency();
+    }
+    router.shutdown();
+    (
+        delta_counts as f64 / n as f64,
+        ttft_sum / n as f64,
+        lat_sum / n as f64,
+    )
 }
 
 fn main() {
@@ -128,13 +182,14 @@ fn main() {
         "offered req/s",
         "static-4 p50/p99 (s)",
         "dsde+cap p50/p99 (s)",
+        "static-4 ttft p50/p99",
+        "dsde+cap ttft p50/p99",
         "static-4 goodput",
         "dsde+cap goodput",
     ]);
     for rate in [0.2, 0.5, 1.0, 2.0] {
-        let (sp50, sp99, sgp) =
-            open_loop(SlPolicyKind::Static(4), CapMode::None, rate, 64, 7);
-        let (dp50, dp99, dgp) = open_loop(
+        let s = open_loop(SlPolicyKind::Static(4), CapMode::None, rate, 64, 7);
+        let d = open_loop(
             SlPolicyKind::Dsde(DsdeConfig::default()),
             CapMode::Mean,
             rate,
@@ -143,17 +198,20 @@ fn main() {
         );
         table.row(&[
             format!("{rate:.1}"),
-            format!("{sp50:.1} / {sp99:.1}"),
-            format!("{dp50:.1} / {dp99:.1}"),
-            format!("{sgp:.1}"),
-            format!("{dgp:.1}"),
+            format!("{:.1} / {:.1}", s.p50, s.p99),
+            format!("{:.1} / {:.1}", d.p50, d.p99),
+            format!("{:.2} / {:.2}", s.ttft_p50, s.ttft_p99),
+            format!("{:.2} / {:.2}", d.ttft_p50, d.ttft_p99),
+            format!("{:.1}", s.goodput),
+            format!("{:.1}", d.goodput),
         ]);
     }
     table.print();
     println!(
         "\nshape check: p99 stays flat at low load and blows up past the \
-         saturation knee; the adaptive policy holds the knee at equal or \
-         higher offered rates."
+         saturation knee; TTFT degrades first (queueing delays the first \
+         token); the adaptive policy holds the knee at equal or higher \
+         offered rates."
     );
 
     println!(
@@ -165,13 +223,14 @@ fn main() {
         "aggregate tok/s",
         "total tokens",
         "makespan (virtual s)",
+        "mean ttft (s)",
         "speedup vs 1",
     ]);
     let mut base = 0.0f64;
     let mut last = 0.0f64;
     let mut monotone = true;
     for &r in &replica_counts {
-        let (tput, tokens, makespan) = replica_scaling(r.max(1), n_total);
+        let (tput, tokens, makespan, ttft) = replica_scaling(r.max(1), n_total);
         if base == 0.0 {
             base = tput;
         }
@@ -184,6 +243,7 @@ fn main() {
             format!("{tput:.1}"),
             format!("{tokens}"),
             format!("{makespan:.1}"),
+            format!("{ttft:.2}"),
             format!("{:.2}x", if base > 0.0 { tput / base } else { 0.0 }),
         ]);
     }
@@ -192,5 +252,20 @@ fn main() {
         "\nshape check: aggregate throughput {} monotonically with replica \
          count (share-nothing replicas split a fixed workload).",
         if monotone { "increased" } else { "DID NOT increase" }
+    );
+
+    println!("\n== token streaming through the router (1 replica) ==\n");
+    let (deltas_per_req, ttft, lat) = streaming_smoke(8);
+    println!("deltas/request : {deltas_per_req:.1}");
+    println!("mean ttft      : {ttft:.3} virtual s");
+    println!("mean latency   : {lat:.3} virtual s");
+    println!(
+        "\nshape check: every request streamed >1 delta whose concatenation \
+         equals the final output, and TTFT << end-to-end latency ({}).",
+        if deltas_per_req > 1.0 && ttft < lat {
+            "holds"
+        } else {
+            "DOES NOT hold"
+        }
     );
 }

@@ -17,6 +17,7 @@ pub enum SlPolicyKind {
 }
 
 impl SlPolicyKind {
+    /// Human-readable policy name (also the metrics/bench label).
     pub fn name(&self) -> String {
         match self {
             SlPolicyKind::Static(k) => format!("static-{k}"),
@@ -156,6 +157,7 @@ pub enum RoutePolicy {
 }
 
 impl RoutePolicy {
+    /// Parse CLI shorthand: `rr`/`round-robin` or `ll`/`least-loaded`.
     pub fn parse(s: &str) -> Option<RoutePolicy> {
         match s.to_ascii_lowercase().as_str() {
             "rr" | "round-robin" | "roundrobin" => Some(RoutePolicy::RoundRobin),
@@ -164,6 +166,7 @@ impl RoutePolicy {
         }
     }
 
+    /// Stable lowercase wire/CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             RoutePolicy::RoundRobin => "round-robin",
@@ -178,7 +181,9 @@ impl RoutePolicy {
 /// scheduler thread.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RouterConfig {
+    /// Number of engine replicas behind the router.
     pub replicas: usize,
+    /// How the router picks a replica per request.
     pub policy: RoutePolicy,
 }
 
@@ -192,6 +197,7 @@ impl Default for RouterConfig {
 }
 
 impl RouterConfig {
+    /// Validate invariants; returns a human-readable error.
     pub fn validate(&self) -> Result<(), String> {
         if self.replicas == 0 {
             return Err("replicas must be > 0".to_string());
@@ -202,6 +208,7 @@ impl RouterConfig {
         Ok(())
     }
 
+    /// Serialize (for experiment records).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("replicas", self.replicas)

@@ -28,13 +28,25 @@ use super::kv_cache::KvCache;
 use super::metrics::{EngineMetrics, RequestMetrics};
 use super::request::{FinishReason, FinishedRequest, Request, SeqState};
 use super::scheduler::Scheduler;
-use super::step::PlanOutcome;
+use super::step::{PlanOutcome, StepReport};
 use crate::config::EngineConfig;
 use crate::model::traits::SpecModel;
 use crate::spec::adapter::{make_policy, SlPolicy};
 
+/// What one driven engine step did (see [`Engine::step_detailed`]).
+#[derive(Debug)]
+pub enum StepOutcome {
+    /// Nothing runnable and nothing that can become runnable on its own.
+    Idle,
+    /// Nothing ran this step but queued work may proceed on a later one.
+    Retry,
+    /// A round ran; the report carries its per-request token deltas.
+    Ran(StepReport),
+}
+
 /// The speculative-decoding serving engine.
 pub struct Engine {
+    /// Engine configuration (validated at construction).
     pub cfg: EngineConfig,
     pub(crate) model: Box<dyn SpecModel>,
     pub(crate) policy: Box<dyn SlPolicy>,
@@ -43,6 +55,7 @@ pub struct Engine {
     pub(crate) waiting: VecDeque<SeqState>,
     pub(crate) running: Vec<SeqState>,
     pub(crate) finished: Vec<FinishedRequest>,
+    /// Rolling engine metrics (see [`EngineMetrics`]).
     pub metrics: EngineMetrics,
     pub(crate) clock: f64,
     pub(crate) real_t0: Instant,
@@ -50,6 +63,7 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Construct an engine with the policy named in the config.
     pub fn new(cfg: EngineConfig, model: Box<dyn SpecModel>) -> Engine {
         let policy = make_policy(&cfg.policy);
         Engine::with_policy(cfg, model, policy)
@@ -98,10 +112,12 @@ impl Engine {
         self.waiting.push_back(SeqState::from_request(req));
     }
 
+    /// Requests queued or running (not yet retired).
     pub fn pending(&self) -> usize {
         self.waiting.len() + self.running.len()
     }
 
+    /// Drain the finished-request buffer.
     pub fn take_finished(&mut self) -> Vec<FinishedRequest> {
         std::mem::take(&mut self.finished)
     }
@@ -119,15 +135,22 @@ impl Engine {
     /// One engine step: the thin `plan → execute → apply` driver.  Returns
     /// false when there was nothing to do.
     pub fn step(&mut self) -> Result<bool> {
+        Ok(!matches!(self.step_detailed()?, StepOutcome::Idle))
+    }
+
+    /// One engine step, surfacing the [`StepReport`] when a round ran.
+    /// This is the driver for callers that consume per-step output — the
+    /// replica loop forwards [`super::step::TokenDelta`]s from the report
+    /// to streaming subscribers.
+    pub fn step_detailed(&mut self) -> Result<StepOutcome> {
         self.metrics.steps += 1;
         let plan = match self.plan() {
-            PlanOutcome::Idle => return Ok(false),
-            PlanOutcome::Retry => return Ok(true),
+            PlanOutcome::Idle => return Ok(StepOutcome::Idle),
+            PlanOutcome::Retry => return Ok(StepOutcome::Retry),
             PlanOutcome::Run(plan) => plan,
         };
         let round = self.execute(&plan)?;
-        self.apply(plan, round);
-        Ok(true)
+        Ok(StepOutcome::Ran(self.apply(plan, round)))
     }
 
     pub(crate) fn retire(&mut self, seq: SeqState, reason: FinishReason) {
@@ -149,6 +172,7 @@ impl Engine {
             id: fin.id,
             latency: fin.latency(),
             ttft: fin.ttft(),
+            itl: fin.itl(),
             output_tokens: fin.output.len(),
             rounds: fin.rounds,
             drafted: fin.drafted,
@@ -180,14 +204,17 @@ impl Engine {
         }
     }
 
+    /// Name of the active SL policy.
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
     }
 
+    /// Name of the underlying model substrate.
     pub fn model_name(&self) -> String {
         self.model.name()
     }
 
+    /// KV blocks currently mapped.
     pub fn kv_used_blocks(&self) -> usize {
         self.kv.used_blocks()
     }
@@ -339,6 +366,36 @@ mod tests {
         for r in &done {
             assert!(r.output.len() <= 10);
         }
+    }
+
+    #[test]
+    fn step_detailed_surfaces_reports_until_idle() {
+        let mut e = sim_engine(SlPolicyKind::Static(4), true);
+        submit_n(&mut e, 2, 12);
+        let mut delta_tokens = 0usize;
+        loop {
+            match e.step_detailed().unwrap() {
+                StepOutcome::Idle => break,
+                StepOutcome::Retry => continue,
+                StepOutcome::Ran(report) => {
+                    delta_tokens +=
+                        report.deltas.iter().map(|d| d.tokens.len()).sum::<usize>();
+                }
+            }
+        }
+        // the streamed deltas account for every emitted token
+        assert_eq!(delta_tokens as u64, e.metrics.tokens_out);
+        assert_eq!(e.take_finished().len(), 2);
+    }
+
+    #[test]
+    fn request_metrics_carry_itl() {
+        let mut e = sim_engine(SlPolicyKind::Static(4), true);
+        submit_n(&mut e, 2, 24);
+        e.run_to_completion();
+        assert_eq!(e.metrics.itl.count(), 2);
+        assert!(e.metrics.itl.mean() > 0.0);
+        assert!(e.metrics.ttft.mean() > 0.0);
     }
 
     #[test]

@@ -14,7 +14,9 @@ use std::collections::HashMap;
 /// Allocation failure: not enough free blocks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Oom {
+    /// Blocks the allocation needed.
     pub requested: usize,
+    /// Blocks that were free.
     pub free: usize,
 }
 
@@ -29,6 +31,7 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Construct a manager with `total_blocks` pages of `block_size` tokens.
     pub fn new(total_blocks: usize, block_size: usize) -> KvCache {
         assert!(block_size > 0 && total_blocks > 0);
         KvCache {
@@ -39,18 +42,22 @@ impl KvCache {
         }
     }
 
+    /// Tokens per block.
     pub fn block_size(&self) -> usize {
         self.block_size
     }
 
+    /// Blocks currently unallocated.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Blocks currently mapped to sequences.
     pub fn used_blocks(&self) -> usize {
         self.total_blocks - self.free.len()
     }
 
+    /// Blocks needed to hold `tokens` tokens.
     pub fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_size)
     }

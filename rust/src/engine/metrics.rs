@@ -1,30 +1,50 @@
-//! Engine + per-request metrics: end-to-end latency, block efficiency
-//! (tokens emitted per target invocation — the paper's BE), goodput,
-//! throughput, straggler accounting, scheduler counters, and signal traces
-//! for the analysis benches.
+//! Engine + per-request metrics: end-to-end latency, time-to-first-token,
+//! inter-token latency, block efficiency (tokens emitted per target
+//! invocation — the paper's BE), goodput, throughput, straggler accounting,
+//! scheduler counters, and signal traces for the analysis benches.
 //!
 //! Long-running serving safety: per-request summaries are kept in a bounded
-//! retention window ([`RingBuf`]) while latency/TTFT distributions are
+//! retention window ([`RingBuf`]) while latency/TTFT/ITL distributions are
 //! tracked by O(1) running [`Welford`] aggregates, so `/v1/metrics` memory
 //! stays constant under sustained traffic.
+//!
+//! For cross-thread reporting (the router's `/v1/metrics` path) a
+//! [`MetricsSnapshot`] is the wire type: pre-reduced scalars plus the
+//! requested percentiles, so a snapshot never clones the retained request
+//! window over a channel.
 
 use crate::util::json::Json;
 use crate::util::ring::RingBuf;
-use crate::util::stats::{percentile, Welford};
+use crate::util::stats::{percentile, percentile_sorted, Welford};
 
 /// Default number of per-request summaries retained for percentile queries.
 pub const DEFAULT_REQUEST_RETENTION: usize = 4096;
 
+/// Percentiles a [`MetricsSnapshot`] reports when the caller does not ask
+/// for a specific set.
+pub const DEFAULT_QUANTILES: &[f64] = &[0.5, 0.9, 0.99];
+
 /// Summary of one finished request (denormalized for dump/analysis).
 #[derive(Clone, Debug)]
 pub struct RequestMetrics {
+    /// Request id (router-global on the serving path).
     pub id: u64,
+    /// End-to-end latency in engine seconds (arrival → finished).
     pub latency: f64,
+    /// Time to first token in engine seconds (arrival → first delta).
     pub ttft: f64,
+    /// Mean inter-token latency in engine seconds (0 when fewer than two
+    /// output tokens were produced).
+    pub itl: f64,
+    /// Output tokens produced.
     pub output_tokens: usize,
+    /// Engine rounds the request participated in.
     pub rounds: usize,
+    /// Draft tokens proposed for this request.
     pub drafted: u64,
+    /// Draft tokens accepted for this request.
     pub accepted: u64,
+    /// Times the request was preempted under KV pressure.
     pub preemptions: usize,
 }
 
@@ -42,8 +62,9 @@ pub struct EngineMetrics {
     pub seq_rounds: u64,
     /// tokens emitted across all sequences
     pub tokens_out: u64,
-    /// draft tokens proposed / accepted
+    /// draft tokens proposed
     pub drafted: u64,
+    /// draft tokens accepted
     pub accepted: u64,
     /// sum over rounds of (max SL in round - per-seq SL), the straggler
     /// bubble: idle draft slots induced by batch synchronization
@@ -71,6 +92,9 @@ pub struct EngineMetrics {
     pub latency: Welford,
     /// all-time time-to-first-token distribution (O(1) memory)
     pub ttft: Welford,
+    /// all-time per-request mean inter-token-latency distribution (O(1)
+    /// memory; requests with fewer than two output tokens are excluded)
+    pub itl: Welford,
     /// bounded window of recent finished-request summaries (percentiles,
     /// traces); evicts oldest beyond its retention capacity
     pub requests: RingBuf<RequestMetrics>,
@@ -105,6 +129,7 @@ impl EngineMetrics {
             completed_tokens: 0,
             latency: Welford::new(),
             ttft: Welford::new(),
+            itl: Welford::new(),
             requests: RingBuf::new(retention.max(1)),
         }
     }
@@ -117,6 +142,9 @@ impl EngineMetrics {
         self.completed_tokens += req.output_tokens as u64;
         self.latency.push(req.latency);
         self.ttft.push(req.ttft);
+        if req.output_tokens > 1 {
+            self.itl.push(req.itl);
+        }
         self.requests.push(req);
     }
 
@@ -170,14 +198,16 @@ impl EngineMetrics {
         self.completed_tokens as f64 / self.busy_time
     }
 
-    /// Fold another engine's metrics into this one — the router uses this to
-    /// aggregate `/v1/metrics` across replicas.  Counters add; clocks take
-    /// the max; distributions merge; request windows concatenate (subject to
-    /// this window's retention bound).  Note `busy_time` sums to *total*
-    /// busy seconds across replicas, so the merged `throughput()` is a
-    /// per-busy-second rate that stays flat in replica count; for fleet
-    /// throughput divide token totals by the makespan (max per-replica
-    /// `busy_time`) as `EngineRouter::metrics_json` does.
+    /// Fold another engine's metrics into this one — an in-process helper
+    /// for offline aggregation (benches, tests) where both windows are on
+    /// hand.  The router's `/v1/metrics` path aggregates the cheap wire
+    /// type instead: see [`MetricsSnapshot::merge`].  Counters add; clocks
+    /// take the max; distributions merge; request windows concatenate
+    /// (subject to this window's retention bound).  Note `busy_time` sums
+    /// to *total* busy seconds across replicas, so the merged
+    /// `throughput()` is a per-busy-second rate that stays flat in replica
+    /// count; for fleet throughput divide token totals by the makespan
+    /// (max per-replica `busy_time`) as `EngineRouter::metrics_json` does.
     pub fn merge(&mut self, other: &EngineMetrics) {
         self.steps += other.steps;
         self.verify_rounds += other.verify_rounds;
@@ -198,11 +228,60 @@ impl EngineMetrics {
         self.completed_tokens += other.completed_tokens;
         self.latency.merge(&other.latency);
         self.ttft.merge(&other.ttft);
+        self.itl.merge(&other.itl);
         for r in other.requests.iter() {
             self.requests.push(r.clone());
         }
     }
 
+    /// Reduce to a cheap wire snapshot: every scalar counter, the Welford
+    /// aggregates, and the given percentiles computed over the retained
+    /// request window — but **not** the window itself.  This is what replica
+    /// threads send back for `/v1/metrics`, keeping the reply O(#quantiles)
+    /// instead of O(`metrics_retention`).
+    pub fn snapshot(&self, quantiles: &[f64]) -> MetricsSnapshot {
+        // sort each series once and index every requested quantile from it —
+        // this runs on the replica's serving thread between engine steps, so
+        // per-poll cost matters
+        let mut lats: Vec<f64> = self.requests.iter().map(|r| r.latency).collect();
+        let mut ttfts: Vec<f64> = self.requests.iter().map(|r| r.ttft).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        MetricsSnapshot {
+            steps: self.steps,
+            verify_rounds: self.verify_rounds,
+            ar_rounds: self.ar_rounds,
+            seq_rounds: self.seq_rounds,
+            tokens_out: self.tokens_out,
+            drafted: self.drafted,
+            accepted: self.accepted,
+            straggler_bubble: self.straggler_bubble,
+            admitted: self.admitted,
+            preemptions: self.preemptions,
+            cap_savings: self.cap_savings,
+            busy_time: self.busy_time,
+            now: self.now,
+            batch_hist: self.batch_hist.clone(),
+            sl_hist: self.sl_hist.clone(),
+            completed: self.completed,
+            completed_tokens: self.completed_tokens,
+            latency: self.latency.clone(),
+            ttft: self.ttft.clone(),
+            itl: self.itl.clone(),
+            latency_quantiles: quantiles
+                .iter()
+                .map(|&q| (q, percentile_sorted(&lats, q)))
+                .collect(),
+            ttft_quantiles: quantiles
+                .iter()
+                .map(|&q| (q, percentile_sorted(&ttfts, q)))
+                .collect(),
+            window_len: self.requests.len() as u64,
+            window_evicted: self.requests.evicted(),
+        }
+    }
+
+    /// Serialize for the single-engine JSON paths (`dsde run --json`).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("steps", self.steps)
@@ -221,11 +300,225 @@ impl EngineMetrics {
             .set("mean_latency", self.mean_latency())
             .set("p99_latency", self.p99_latency())
             .set("mean_ttft", self.ttft.mean())
+            .set("mean_itl", self.itl.mean())
             .set("straggler_bubble", self.straggler_bubble)
             .set("busy_time", self.busy_time)
             .set("requests", self.completed)
             .set("window_requests", self.requests.len() as u64)
             .set("window_evicted", self.requests.evicted())
+    }
+}
+
+/// JSON key for a quantile/metric pair, e.g. `(0.99, "latency")` →
+/// `"p99_latency"`.
+fn quantile_key(metric: &str, q: f64) -> String {
+    let pct = q * 100.0;
+    if (pct - pct.round()).abs() < 1e-9 {
+        format!("p{}_{metric}", pct.round() as u64)
+    } else {
+        format!("p{pct}_{metric}")
+    }
+}
+
+/// A pre-reduced, cheaply clonable view of [`EngineMetrics`]: scalar
+/// counters, the O(1) Welford aggregates, and a small set of percentiles
+/// computed replica-side over the retained request window.
+///
+/// This is the `/v1/metrics` wire type — replicas reply with a snapshot
+/// instead of cloning their full retention window over a channel, so a
+/// high-frequency metrics scraper costs O(#quantiles) per replica per poll.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Engine steps executed.
+    pub steps: u64,
+    /// Speculative rounds (target verify invocations).
+    pub verify_rounds: u64,
+    /// Autoregressive rounds.
+    pub ar_rounds: u64,
+    /// Sum over rounds of scheduled batch size (the BE denominator).
+    pub seq_rounds: u64,
+    /// Tokens emitted across all sequences.
+    pub tokens_out: u64,
+    /// Draft tokens proposed.
+    pub drafted: u64,
+    /// Draft tokens accepted.
+    pub accepted: u64,
+    /// Idle draft slots induced by batch synchronization.
+    pub straggler_bubble: u64,
+    /// Sequences admitted from the waiting queue.
+    pub admitted: u64,
+    /// Sequences preempted back to the waiting queue under KV pressure.
+    pub preemptions: u64,
+    /// Draft slots the batch-wide SL cap shaved off round critical paths.
+    pub cap_savings: u64,
+    /// Wall/virtual seconds spent in rounds.
+    pub busy_time: f64,
+    /// Engine clock at snapshot time (max across replicas after a merge).
+    pub now: f64,
+    /// Per-step scheduled batch size distribution.
+    pub batch_hist: Welford,
+    /// Per-step granted max-SL distribution.
+    pub sl_hist: Welford,
+    /// Finished requests, all time.
+    pub completed: u64,
+    /// Output tokens of finished requests, all time.
+    pub completed_tokens: u64,
+    /// All-time end-to-end latency distribution.
+    pub latency: Welford,
+    /// All-time time-to-first-token distribution.
+    pub ttft: Welford,
+    /// All-time per-request mean inter-token-latency distribution.
+    pub itl: Welford,
+    /// `(quantile, value)` pairs for end-to-end latency over the retained
+    /// window, in the order they were requested.
+    pub latency_quantiles: Vec<(f64, f64)>,
+    /// `(quantile, value)` pairs for TTFT over the retained window.
+    pub ttft_quantiles: Vec<(f64, f64)>,
+    /// Requests in the retention window the percentiles were computed over.
+    pub window_len: u64,
+    /// Requests evicted from the retention window so far.
+    pub window_evicted: u64,
+}
+
+impl MetricsSnapshot {
+    /// Block efficiency: mean tokens emitted per sequence per target
+    /// invocation (the paper's BE).
+    pub fn block_efficiency(&self) -> f64 {
+        if self.seq_rounds == 0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.seq_rounds as f64
+        }
+    }
+
+    /// Draft-token acceptance rate.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Tokens per second of busy time (per-busy-second rate; flat in
+    /// replica count after a merge — see [`MetricsSnapshot::merge`]).
+    pub fn throughput(&self) -> f64 {
+        if self.busy_time <= 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.busy_time
+        }
+    }
+
+    /// Goodput: completed output tokens per second of busy time.
+    pub fn goodput(&self) -> f64 {
+        if self.busy_time <= 0.0 {
+            0.0
+        } else {
+            self.completed_tokens as f64 / self.busy_time
+        }
+    }
+
+    /// Mean end-to-end request latency (all-time aggregate).
+    pub fn mean_latency(&self) -> f64 {
+        self.latency.mean()
+    }
+
+    /// Fold another snapshot into this one — the router's cross-replica
+    /// aggregation.  Counters add, clocks take the max, Welford
+    /// distributions merge exactly (Chan et al.), and `busy_time` sums to
+    /// *total* busy seconds (so the merged [`MetricsSnapshot::throughput`]
+    /// is a per-busy-second rate; divide token totals by the makespan for
+    /// fleet throughput).
+    ///
+    /// Percentiles cannot be merged exactly from reduced form: the merged
+    /// quantile pairs take the **maximum** across replicas — a conservative
+    /// tail estimate that never under-reports the worst replica, so
+    /// alerting on the merged `p99_*` keys cannot miss a single-replica
+    /// SLO breach (central quantiles are biased toward the slowest
+    /// replica).  Callers needing exact fleet percentiles should read the
+    /// per-replica values instead.  Both sides must have been produced
+    /// with the same requested quantile list.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        let wa = self.window_len;
+        let wb = other.window_len;
+        self.steps += other.steps;
+        self.verify_rounds += other.verify_rounds;
+        self.ar_rounds += other.ar_rounds;
+        self.seq_rounds += other.seq_rounds;
+        self.tokens_out += other.tokens_out;
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.straggler_bubble += other.straggler_bubble;
+        self.admitted += other.admitted;
+        self.preemptions += other.preemptions;
+        self.cap_savings += other.cap_savings;
+        self.busy_time += other.busy_time;
+        self.now = self.now.max(other.now);
+        self.batch_hist.merge(&other.batch_hist);
+        self.sl_hist.merge(&other.sl_hist);
+        self.completed += other.completed;
+        self.completed_tokens += other.completed_tokens;
+        self.latency.merge(&other.latency);
+        self.ttft.merge(&other.ttft);
+        self.itl.merge(&other.itl);
+        merge_quantiles(&mut self.latency_quantiles, wa, &other.latency_quantiles, wb);
+        merge_quantiles(&mut self.ttft_quantiles, wa, &other.ttft_quantiles, wb);
+        self.window_len += other.window_len;
+        self.window_evicted += other.window_evicted;
+    }
+
+    /// Serialize with the same core keys as [`EngineMetrics::to_json`] plus
+    /// one `p<q>_latency` / `p<q>_ttft` key per requested quantile.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("steps", self.steps)
+            .set("verify_rounds", self.verify_rounds)
+            .set("ar_rounds", self.ar_rounds)
+            .set("tokens_out", self.tokens_out)
+            .set("drafted", self.drafted)
+            .set("accepted", self.accepted)
+            .set("admitted", self.admitted)
+            .set("preemptions", self.preemptions)
+            .set("cap_savings", self.cap_savings)
+            .set("acceptance_rate", self.acceptance_rate())
+            .set("block_efficiency", self.block_efficiency())
+            .set("throughput", self.throughput())
+            .set("goodput", self.goodput())
+            .set("mean_latency", self.mean_latency())
+            .set("mean_ttft", self.ttft.mean())
+            .set("mean_itl", self.itl.mean())
+            .set("straggler_bubble", self.straggler_bubble)
+            .set("busy_time", self.busy_time)
+            .set("requests", self.completed)
+            .set("window_requests", self.window_len)
+            .set("window_evicted", self.window_evicted);
+        for &(q, v) in &self.latency_quantiles {
+            j = j.set(&quantile_key("latency", q), v);
+        }
+        for &(q, v) in &self.ttft_quantiles {
+            j = j.set(&quantile_key("ttft", q), v);
+        }
+        j
+    }
+}
+
+/// Merge matching `(quantile, value)` pair lists by taking the per-quantile
+/// maximum across replicas (the conservative estimate documented on
+/// [`MetricsSnapshot::merge`]).  Empty windows contribute nothing.
+fn merge_quantiles(a: &mut Vec<(f64, f64)>, wa: u64, b: &[(f64, f64)], wb: u64) {
+    if wb == 0 || b.is_empty() {
+        return;
+    }
+    if wa == 0 || a.is_empty() {
+        *a = b.to_vec();
+        return;
+    }
+    debug_assert_eq!(a.len(), b.len(), "quantile lists must match to merge");
+    for ((qa, va), &(qb, vb)) in a.iter_mut().zip(b) {
+        debug_assert!((*qa - qb).abs() < 1e-12, "quantile order mismatch");
+        let _ = qb;
+        *va = va.max(vb);
     }
 }
 
@@ -238,6 +531,7 @@ mod tests {
             id: 0,
             latency: lat,
             ttft: lat * 0.1,
+            itl: lat * 0.05,
             output_tokens: toks,
             rounds: 10,
             drafted: 30,
@@ -336,5 +630,83 @@ mod tests {
         assert!(s.contains("preemptions"));
         assert!(s.contains("cap_savings"));
         assert!(s.contains("window_requests"));
+        assert!(s.contains("mean_itl"));
+    }
+
+    #[test]
+    fn itl_excludes_single_token_requests() {
+        let mut m = EngineMetrics::default();
+        m.record_request(req(2.0, 1)); // single token: no defined ITL
+        m.record_request(req(4.0, 10));
+        assert_eq!(m.itl.count(), 1);
+        assert!((m.itl.mean() - 0.2).abs() < 1e-12);
+        // latency/ttft still see both
+        assert_eq!(m.latency.count(), 2);
+        assert_eq!(m.ttft.count(), 2);
+    }
+
+    #[test]
+    fn snapshot_reduces_without_window() {
+        let mut m = EngineMetrics::with_retention(16);
+        m.busy_time = 10.0;
+        m.tokens_out = 40;
+        m.seq_rounds = 10;
+        for i in 0..10 {
+            m.record_request(req(1.0 + i as f64, 4));
+        }
+        let s = m.snapshot(&[0.5, 0.99]);
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.window_len, 10);
+        assert_eq!(s.latency_quantiles.len(), 2);
+        assert_eq!(s.latency_quantiles[0].0, 0.5);
+        assert!((s.latency_quantiles[0].1 - 5.5).abs() < 1e-9);
+        assert!((s.mean_latency() - m.mean_latency()).abs() < 1e-12);
+        assert!((s.block_efficiency() - m.block_efficiency()).abs() < 1e-12);
+        assert!((s.throughput() - m.throughput()).abs() < 1e-12);
+        let js = s.to_json().to_string();
+        assert!(js.contains("\"p50_latency\":"), "{js}");
+        assert!(js.contains("\"p99_latency\":"), "{js}");
+        assert!(js.contains("\"p50_ttft\":"), "{js}");
+    }
+
+    #[test]
+    fn snapshot_merge_sums_counters_and_maxes_quantiles() {
+        let mut a = EngineMetrics::default();
+        a.tokens_out = 100;
+        a.busy_time = 2.0;
+        a.record_request(req(2.0, 10));
+        let mut b = EngineMetrics::default();
+        b.tokens_out = 50;
+        b.busy_time = 3.0;
+        b.record_request(req(4.0, 20));
+        b.record_request(req(6.0, 20));
+        let mut sa = a.snapshot(DEFAULT_QUANTILES);
+        let sb = b.snapshot(DEFAULT_QUANTILES);
+        sa.merge(&sb);
+        assert_eq!(sa.tokens_out, 150);
+        assert_eq!(sa.completed, 3);
+        assert_eq!(sa.window_len, 3);
+        assert!((sa.busy_time - 5.0).abs() < 1e-12);
+        assert_eq!(sa.latency.count(), 3);
+        assert!((sa.mean_latency() - 4.0).abs() < 1e-12);
+        // conservative merge: per-quantile max across replicas —
+        // max(p50_a = 2.0, p50_b = 5.0) = 5.0, never under the worst replica
+        let p50 = sa.latency_quantiles.iter().find(|(q, _)| *q == 0.5).unwrap().1;
+        assert!((p50 - 5.0).abs() < 1e-9, "p50 {p50}");
+    }
+
+    #[test]
+    fn snapshot_merge_with_empty_is_identity() {
+        let mut m = EngineMetrics::default();
+        m.record_request(req(2.0, 8));
+        let mut s = m.snapshot(DEFAULT_QUANTILES);
+        let before_p50 = s.latency_quantiles[0].1;
+        s.merge(&MetricsSnapshot::default());
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.latency_quantiles[0].1, before_p50);
+        let mut empty = MetricsSnapshot::default();
+        empty.merge(&s);
+        assert_eq!(empty.completed, 1);
+        assert_eq!(empty.latency_quantiles.len(), DEFAULT_QUANTILES.len());
     }
 }

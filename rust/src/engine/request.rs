@@ -7,6 +7,7 @@ use crate::spec::history::SeqSignals;
 /// section motivates — each request can carry its own temperature).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SamplingParams {
+    /// Sampling temperature; 0.0 = greedy (or defer to the engine default).
     pub temperature: f64,
     /// stop generation after this many new tokens
     pub max_tokens: usize,
@@ -27,14 +28,18 @@ impl Default for SamplingParams {
 /// An inference request submitted to the engine.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Request id; the router overwrites it with a globally unique one.
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<u32>,
+    /// Per-request sampling parameters.
     pub params: SamplingParams,
     /// submission time on the engine clock (set by the engine at submit)
     pub arrival: f64,
 }
 
 impl Request {
+    /// Construct a request from raw token ids.
     pub fn new(id: u64, prompt: Vec<u32>, params: SamplingParams) -> Request {
         Request {
             id,
@@ -56,6 +61,7 @@ impl Request {
         )
     }
 
+    /// Builder-style temperature override.
     pub fn with_temperature(mut self, t: f64) -> Request {
         self.params.temperature = t;
         self
@@ -65,22 +71,44 @@ impl Request {
 /// Why a sequence finished.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
+    /// The request's `max_tokens` output budget was produced.
     MaxTokens,
+    /// The configured stop token was generated.
     StopToken,
+    /// The context window filled up before the budget was met.
     ContextFull,
+    /// Aborted by shutdown, client disconnect, or an unservable prompt.
     Aborted,
+}
+
+impl FinishReason {
+    /// Stable lowercase wire name (HTTP payloads, logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::StopToken => "stop_token",
+            FinishReason::ContextFull => "context_full",
+            FinishReason::Aborted => "aborted",
+        }
+    }
 }
 
 /// Live per-sequence engine state.
 #[derive(Clone, Debug)]
 pub struct SeqState {
+    /// Request id this sequence serves.
     pub id: u64,
+    /// Length of the prompt prefix inside [`SeqState::tokens`].
     pub prompt_len: usize,
     /// prompt + generated tokens
     pub tokens: Vec<u32>,
+    /// Sampling parameters inherited from the request.
     pub params: SamplingParams,
+    /// Online KLD/entropy/acceptance signal history (SL adapter input).
     pub signals: SeqSignals,
+    /// Arrival time on the engine clock.
     pub arrival: f64,
+    /// Engine-clock time the first output token was applied, if any.
     pub first_token_at: Option<f64>,
     /// engine steps this sequence participated in
     pub rounds: usize,
@@ -89,6 +117,7 @@ pub struct SeqState {
 }
 
 impl SeqState {
+    /// Initial sequence state for a freshly admitted request.
     pub fn from_request(req: Request) -> SeqState {
         let prompt_len = req.prompt.len();
         SeqState {
@@ -104,14 +133,17 @@ impl SeqState {
         }
     }
 
+    /// Output tokens generated so far.
     pub fn generated(&self) -> usize {
         self.tokens.len() - self.prompt_len
     }
 
+    /// The generated (non-prompt) token suffix.
     pub fn generated_tokens(&self) -> &[u32] {
         &self.tokens[self.prompt_len..]
     }
 
+    /// Decoded text of the generated tokens.
     pub fn output_text(&self) -> String {
         vocab::decode(self.generated_tokens())
     }
@@ -121,6 +153,7 @@ impl SeqState {
         self.params.max_tokens.saturating_sub(self.generated())
     }
 
+    /// Whether the sequence should retire, and why.
     pub fn is_done(&self, max_len: usize) -> Option<FinishReason> {
         if self.generated() >= self.params.max_tokens {
             return Some(FinishReason::MaxTokens);
@@ -140,27 +173,51 @@ impl SeqState {
 /// A finished request as returned to callers.
 #[derive(Clone, Debug)]
 pub struct FinishedRequest {
+    /// Request id.
     pub id: u64,
+    /// Generated output token ids.
     pub output: Vec<u32>,
+    /// Why the request finished.
     pub reason: FinishReason,
+    /// Arrival time on the engine clock.
     pub arrival: f64,
+    /// Engine-clock time the request retired.
     pub finished_at: f64,
+    /// Engine-clock time the first output token was applied.
     pub first_token_at: f64,
+    /// Engine rounds the request participated in.
     pub rounds: usize,
+    /// Draft tokens proposed for this request.
     pub drafted: u64,
+    /// Draft tokens accepted for this request.
     pub accepted: u64,
+    /// Times the request was preempted under KV pressure.
     pub preemptions: usize,
 }
 
 impl FinishedRequest {
+    /// End-to-end latency in engine seconds.
     pub fn latency(&self) -> f64 {
         self.finished_at - self.arrival
     }
 
+    /// Time to first token in engine seconds.
     pub fn ttft(&self) -> f64 {
         self.first_token_at - self.arrival
     }
 
+    /// Mean inter-token latency in engine seconds: the decode tail
+    /// (first token → finish) averaged over the remaining tokens.
+    /// 0.0 when fewer than two output tokens were produced.
+    pub fn itl(&self) -> f64 {
+        if self.output.len() < 2 {
+            0.0
+        } else {
+            (self.finished_at - self.first_token_at) / (self.output.len() - 1) as f64
+        }
+    }
+
+    /// Decoded output text.
     pub fn output_text(&self) -> String {
         vocab::decode(&self.output)
     }
@@ -232,6 +289,33 @@ mod tests {
         };
         assert!((f.latency() - 3.5).abs() < 1e-12);
         assert!((f.ttft() - 0.5).abs() < 1e-12);
+        // two output tokens: ITL spreads first-token -> finish over 1 gap
+        assert!((f.itl() - 3.0).abs() < 1e-12);
         assert_eq!(f.output_text(), "hi");
+    }
+
+    #[test]
+    fn itl_zero_for_single_token() {
+        let f = FinishedRequest {
+            id: 1,
+            output: vec![104],
+            reason: FinishReason::MaxTokens,
+            arrival: 0.0,
+            finished_at: 1.0,
+            first_token_at: 1.0,
+            rounds: 1,
+            drafted: 0,
+            accepted: 0,
+            preemptions: 0,
+        };
+        assert_eq!(f.itl(), 0.0);
+    }
+
+    #[test]
+    fn finish_reason_wire_names() {
+        assert_eq!(FinishReason::MaxTokens.name(), "max_tokens");
+        assert_eq!(FinishReason::StopToken.name(), "stop_token");
+        assert_eq!(FinishReason::ContextFull.name(), "context_full");
+        assert_eq!(FinishReason::Aborted.name(), "aborted");
     }
 }

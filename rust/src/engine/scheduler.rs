@@ -27,10 +27,12 @@ pub struct ScheduleOutcome {
 /// FCFS continuous-batching scheduler.
 #[derive(Clone, Debug)]
 pub struct Scheduler {
+    /// Maximum sequences scheduled per step.
     pub max_batch: usize,
 }
 
 impl Scheduler {
+    /// Construct a scheduler with the given batch bound.
     pub fn new(max_batch: usize) -> Scheduler {
         Scheduler { max_batch }
     }

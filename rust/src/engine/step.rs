@@ -65,21 +65,42 @@ pub struct StepPlan {
     pub preempted: Vec<u64>,
 }
 
+/// One request's accepted-token delta from a single engine step — the unit
+/// of incremental output forwarded to streaming consumers (the replica loop
+/// fans these out to per-request channels; see
+/// [`crate::server::router::EngineRouter::submit_streaming`]).
+#[derive(Clone, Debug)]
+pub struct TokenDelta {
+    /// Request id the tokens belong to.
+    pub id: u64,
+    /// Tokens appended this step (post budget clamp), in generation order.
+    pub tokens: Vec<u32>,
+    /// Engine-clock time the tokens were applied at.
+    pub t: f64,
+}
+
 /// The typed output of the apply stage: what one executed step did.
 #[derive(Clone, Debug)]
 pub struct StepReport {
     /// Batch size the round ran with.
     pub batch: usize,
+    /// Whether this round ran speculative decoding.
     pub speculative: bool,
     /// Tokens appended across the batch this step (post budget clamp).
     pub tokens: usize,
-    /// Draft tokens proposed / accepted this step.
+    /// Draft tokens proposed this step.
     pub drafted: usize,
+    /// Draft tokens accepted this step.
     pub accepted: usize,
-    /// Scheduling outcome carried through from the plan.
+    /// Sequences admitted this step (carried through from the plan).
     pub admitted: usize,
+    /// Sequence ids preempted this step (carried through from the plan).
     pub preempted: Vec<u64>,
+    /// Draft slots the batch-wide cap shaved (carried through from the plan).
     pub cap_savings: usize,
+    /// Per-request accepted-token deltas, one entry per sequence that
+    /// gained tokens this step — the streaming feed.
+    pub deltas: Vec<TokenDelta>,
     /// Ids of sequences retired by this step.
     pub finished: Vec<u64>,
     /// Round cost on the engine clock (virtual or wall seconds).
@@ -236,6 +257,7 @@ impl Engine {
         let mut tokens = 0usize;
         let mut drafted = 0usize;
         let mut accepted = 0usize;
+        let mut deltas: Vec<TokenDelta> = Vec::new();
         for (i, seq) in self.running.iter_mut().enumerate() {
             let new_tokens = &round.new_tokens[i];
             if seq.first_token_at.is_none() && !new_tokens.is_empty() {
@@ -244,6 +266,13 @@ impl Engine {
             // budget clamp: never emit beyond max_tokens
             let take = new_tokens.len().min(seq.remaining());
             seq.tokens.extend_from_slice(&new_tokens[..take]);
+            if take > 0 {
+                deltas.push(TokenDelta {
+                    id: seq.id,
+                    tokens: new_tokens[..take].to_vec(),
+                    t: self.clock,
+                });
+            }
             seq.rounds += 1;
             tokens += take;
             drafted += round.drafted[i];
@@ -295,6 +324,7 @@ impl Engine {
             admitted: plan.admitted,
             preempted: plan.preempted,
             cap_savings: plan.cap_savings,
+            deltas,
             finished,
             cost,
         }
@@ -492,6 +522,29 @@ mod tests {
         assert_eq!(report.tokens, 1);
         assert_eq!(e.pending(), 0);
         assert_eq!(e.take_finished().len(), 1);
+    }
+
+    #[test]
+    fn apply_reports_per_request_deltas() {
+        let mut e = default_engine();
+        submit_n(&mut e, 2, 16);
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        let round = e.execute(&plan).unwrap();
+        let report = e.apply(plan, round);
+        assert!(!report.deltas.is_empty());
+        // the deltas partition the step's emitted tokens by request
+        let delta_total: usize = report.deltas.iter().map(|d| d.tokens.len()).sum();
+        assert_eq!(delta_total, report.tokens);
+        let mut ids: Vec<u64> = report.deltas.iter().map(|d| d.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), report.deltas.len(), "one delta per request");
+        for d in &report.deltas {
+            assert!((d.t - e.now()).abs() < 1e-12, "stamped at the round clock");
+            assert!(!d.tokens.is_empty());
+        }
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Load-generating HTTP client for the completions API (used by the
-//! `serve_http` example and the serving benchmarks).
+//! `serve_http` example and the serving benchmarks), including a streaming
+//! consumer that measures client-observed time-to-first-token.
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::time::Instant;
 
@@ -12,9 +13,52 @@ use crate::util::json::Json;
 /// One completed load-test call.
 #[derive(Clone, Debug)]
 pub struct CallResult {
+    /// HTTP status code.
     pub status: u16,
+    /// Wall seconds from connect to last byte.
     pub wall_s: f64,
+    /// Parsed JSON response body.
     pub body: Json,
+}
+
+/// One delta line consumed from a streamed completion.
+#[derive(Clone, Debug)]
+pub struct StreamDelta {
+    /// Decoded text of this delta's tokens.
+    pub text: String,
+    /// Number of tokens in this delta.
+    pub tokens: usize,
+    /// Client wall seconds (since the request was sent) when the delta
+    /// arrived.
+    pub at_s: f64,
+}
+
+/// A fully consumed streaming completion.
+#[derive(Clone, Debug)]
+pub struct StreamResult {
+    /// HTTP status code.
+    pub status: u16,
+    /// Total wall seconds from send to stream end.
+    pub wall_s: f64,
+    /// Wall seconds until the first delta arrived — client-observed TTFT.
+    pub ttft_s: f64,
+    /// Every delta line, in arrival order.
+    pub deltas: Vec<StreamDelta>,
+    /// The terminal `"done": true` line (finish reason + server metrics).
+    pub finale: Json,
+}
+
+impl StreamResult {
+    /// Concatenated text across all deltas (equals the non-streaming
+    /// completion text for the same seeded request).
+    pub fn text(&self) -> String {
+        self.deltas.iter().map(|d| d.text.as_str()).collect()
+    }
+
+    /// Total tokens across all deltas.
+    pub fn tokens(&self) -> usize {
+        self.deltas.iter().map(|d| d.tokens).sum()
+    }
 }
 
 /// Issue one blocking completions call.
@@ -41,6 +85,130 @@ pub fn complete(
     stream.read_to_string(&mut resp)?;
     let wall_s = t0.elapsed().as_secs_f64();
     parse_response(&resp, wall_s)
+}
+
+/// Issue one streaming completions call (`"stream": true`) and consume the
+/// chunked NDJSON response incrementally, timestamping each delta — the
+/// client-side TTFT/ITL measurement path.
+pub fn complete_streaming(
+    addr: &str,
+    prompt: &str,
+    max_tokens: usize,
+    temperature: f64,
+) -> Result<StreamResult> {
+    let body = Json::obj()
+        .set("prompt", prompt)
+        .set("max_tokens", max_tokens)
+        .set("temperature", temperature)
+        .set("stream", true)
+        .to_string();
+    let req = format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: dsde\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let t0 = Instant::now();
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(req.as_bytes())?;
+    let mut reader = BufReader::new(stream);
+
+    // status line + headers
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line: {line:?}"))?;
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("transfer-encoding")
+                && v.trim().eq_ignore_ascii_case("chunked")
+            {
+                chunked = true;
+            }
+        }
+    }
+    if !chunked {
+        return Err(anyhow!("server did not stream (status {status})"));
+    }
+
+    // chunk loop: hex size line, `size` data bytes, CRLF.  Chunk framing
+    // carries no message semantics (a proxy may re-chunk the body), so
+    // NDJSON lines — and any UTF-8 sequence a boundary may split — are
+    // reassembled in a byte carry buffer before parsing.
+    let mut deltas = Vec::new();
+    let mut finale: Option<Json> = None;
+    let mut ttft_s = 0.0;
+    let mut carry: Vec<u8> = Vec::new();
+    loop {
+        let mut size_line = String::new();
+        if reader.read_line(&mut size_line)? == 0 {
+            break; // connection closed without the zero chunk
+        }
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| anyhow!("bad chunk size line: {size_line:?}"))?;
+        if size == 0 {
+            break;
+        }
+        let mut buf = vec![0u8; size + 2]; // data + trailing CRLF
+        reader.read_exact(&mut buf)?;
+        let at_s = t0.elapsed().as_secs_f64();
+        carry.extend_from_slice(&buf[..size]);
+        while let Some(pos) = carry.iter().position(|&b| b == b'\n') {
+            let line_bytes: Vec<u8> = carry.drain(..=pos).collect();
+            let line = std::str::from_utf8(&line_bytes)
+                .map_err(|e| anyhow!("stream line not utf8: {e}"))?
+                .trim();
+            if line.is_empty() {
+                continue;
+            }
+            let j = Json::parse(line).map_err(|e| anyhow!("stream json: {e}"))?;
+            if j.get("done").and_then(|d| d.as_bool()).unwrap_or(false) {
+                finale = Some(j);
+            } else {
+                if deltas.is_empty() {
+                    ttft_s = at_s;
+                }
+                deltas.push(StreamDelta {
+                    text: j
+                        .get("text")
+                        .and_then(|t| t.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    tokens: j.get("tokens").and_then(|t| t.as_usize()).unwrap_or(0),
+                    at_s,
+                });
+            }
+        }
+    }
+    // a well-behaved server always ends with a `"done": true` line (even
+    // on abort); its absence means the stream was truncated mid-flight —
+    // surface that instead of returning a partial completion as success
+    let finale = finale.ok_or_else(|| {
+        anyhow!(
+            "stream truncated: connection ended after {} delta(s) without a \
+             terminal event",
+            deltas.len()
+        )
+    })?;
+    Ok(StreamResult {
+        status,
+        wall_s: t0.elapsed().as_secs_f64(),
+        ttft_s,
+        deltas,
+        finale,
+    })
 }
 
 /// Fetch the metrics snapshot.
@@ -152,6 +320,42 @@ mod tests {
         let m = metrics(&addr).unwrap();
         assert!(m.get("tokens_out").and_then(|t| t.as_usize()).unwrap_or(0) >= 36);
         h.shutdown();
+    }
+
+    #[test]
+    fn streaming_matches_blocking_for_same_seed() {
+        let h = sim_server();
+        let blocking = complete(&h.addr.to_string(), "def f(x):", 12, 0.0).unwrap();
+        h.shutdown();
+        // a fresh server with the identical engine seed must stream the
+        // exact same completion, split into incremental deltas
+        let h2 = sim_server();
+        let streamed =
+            complete_streaming(&h2.addr.to_string(), "def f(x):", 12, 0.0).unwrap();
+        h2.shutdown();
+        assert_eq!(streamed.status, 200);
+        assert!(
+            streamed.deltas.len() >= 2,
+            "expected incremental deltas, got {}",
+            streamed.deltas.len()
+        );
+        assert_eq!(streamed.tokens(), 12);
+        assert_eq!(
+            streamed.text(),
+            blocking
+                .body
+                .get("text")
+                .and_then(|t| t.as_str())
+                .unwrap()
+        );
+        assert_eq!(
+            streamed.finale.get("finish_reason").and_then(|f| f.as_str()),
+            Some("max_tokens")
+        );
+        for w in streamed.deltas.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s, "deltas must arrive in order");
+        }
+        assert!(streamed.ttft_s > 0.0 && streamed.ttft_s <= streamed.wall_s);
     }
 
     #[test]

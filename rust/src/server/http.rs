@@ -4,15 +4,22 @@
 //! * `POST /v1/completions` — body `{"prompt": "...", "max_tokens": N,
 //!   "temperature": T}` → `{"id": .., "text": .., "latency_s": ..,
 //!   "ttft_s": .., "rounds": ..}` (blocks until the request completes).
-//! * `GET /v1/metrics` — metrics aggregated across engine replicas, plus a
+//!   With `"stream": true` the response switches to HTTP/1.1 chunked
+//!   transfer-encoding carrying newline-delimited JSON: one line per
+//!   accepted-token delta (`{"text": .., "tokens": .., "t": ..}`) as the
+//!   engine applies it, then a terminal line (`{"done": true,
+//!   "finish_reason": .., "latency_s": .., "ttft_s": .., "itl_s": ..,
+//!   ...}`) and the zero-length chunk.
+//! * `GET /v1/metrics` — pre-reduced metrics aggregated across engine
+//!   replicas (incl. TTFT/ITL statistics and percentiles), plus a
 //!   per-replica breakdown.
 //! * `GET /health` — liveness + replica count.
 //!
 //! Connection threads hand requests to an [`EngineRouter`], which owns one
 //! engine thread per replica; [`serve`] wraps a single engine in a
 //! 1-replica router, [`serve_router`] serves an arbitrary replica set.
-//! Shutdown drains gracefully: in-flight requests complete before the
-//! engine threads exit.
+//! Shutdown drains gracefully: in-flight requests complete (streams keep
+//! flowing to their terminal event) before the engine threads exit.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -26,15 +33,18 @@ use crate::config::RoutePolicy;
 use crate::engine::engine::Engine;
 use crate::engine::request::{Request, SamplingParams};
 use crate::model::vocab;
-use crate::server::router::EngineRouter;
+use crate::server::router::{EngineRouter, StreamEvent};
 use crate::util::json::Json;
 use crate::{log_info, log_warn};
 
 /// A parsed HTTP request (the subset we serve).
 #[derive(Debug)]
 pub struct HttpRequest {
+    /// Request method (`GET`, `POST`, ...).
     pub method: String,
+    /// Request path, e.g. `/v1/completions`.
     pub path: String,
+    /// Raw request body (sized by `Content-Length`).
     pub body: String,
 }
 
@@ -89,8 +99,75 @@ pub fn write_json(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()
     Ok(())
 }
 
+/// Write one chunk of an HTTP/1.1 chunked-transfer-encoding body.
+fn write_chunk(stream: &mut TcpStream, data: &str) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n{data}\r\n", data.len())
+}
+
+/// Serve one `"stream": true` completion: chunked NDJSON with one line per
+/// accepted-token delta, then a terminal line carrying the finish reason
+/// and per-request metrics, then the zero-length chunk.
+fn serve_streaming(stream: &mut TcpStream, router: &EngineRouter, request: Request) {
+    let rx = router.submit_streaming(request);
+    if write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )
+    .is_err()
+    {
+        return; // client already gone; the replica drops the stream lazily
+    }
+    let mut got_done = false;
+    for ev in rx {
+        let (line, is_done) = match ev {
+            StreamEvent::Delta { tokens, t } => (
+                Json::obj()
+                    .set("text", vocab::decode(&tokens))
+                    .set("tokens", tokens.len())
+                    .set("t", t)
+                    .to_string(),
+                false,
+            ),
+            StreamEvent::Done(fin) => (
+                Json::obj()
+                    .set("done", true)
+                    .set("id", fin.id)
+                    .set("finish_reason", fin.reason.name())
+                    .set("tokens", fin.output.len())
+                    .set("latency_s", fin.latency())
+                    .set("ttft_s", fin.ttft())
+                    .set("itl_s", fin.itl())
+                    .set("rounds", fin.rounds)
+                    .set("accepted", fin.accepted)
+                    .set("drafted", fin.drafted)
+                    .to_string(),
+                true,
+            ),
+        };
+        if write_chunk(stream, &format!("{line}\n")).is_err() {
+            return; // client hung up mid-stream
+        }
+        if is_done {
+            got_done = true;
+            break;
+        }
+    }
+    if !got_done {
+        // the replica exited without a terminal event (shutdown race):
+        // tell the client explicitly instead of truncating silently
+        let line = Json::obj()
+            .set("done", true)
+            .set("finish_reason", "aborted")
+            .to_string();
+        let _ = write_chunk(stream, &format!("{line}\n"));
+    }
+    let _ = stream.write_all(b"0\r\n\r\n");
+}
+
 /// Handle used to submit work / stop the server.
 pub struct ServerHandle {
+    /// The bound listen address (useful with `"127.0.0.1:0"`).
     pub addr: std::net::SocketAddr,
     router: Arc<EngineRouter>,
     stop: Arc<AtomicBool>,
@@ -159,6 +236,10 @@ fn handle_conn(mut stream: TcpStream, router: &EngineRouter) {
                 .get("temperature")
                 .and_then(|x| x.as_f64())
                 .unwrap_or(0.0);
+            let streaming = parsed
+                .get("stream")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false);
             let request = Request::new(
                 0, // the router assigns the globally unique id
                 vocab::encode(prompt),
@@ -168,14 +249,20 @@ fn handle_conn(mut stream: TcpStream, router: &EngineRouter) {
                     stop_token: None,
                 },
             );
+            if streaming {
+                serve_streaming(&mut stream, router, request);
+                return;
+            }
             match router.complete(request) {
                 Ok(fin) => {
                     let body = Json::obj()
                         .set("id", fin.id)
                         .set("text", fin.output_text())
                         .set("tokens", fin.output.len())
+                        .set("finish_reason", fin.reason.name())
                         .set("latency_s", fin.latency())
                         .set("ttft_s", fin.ttft())
+                        .set("itl_s", fin.itl())
                         .set("rounds", fin.rounds)
                         .set("accepted", fin.accepted)
                         .set("drafted", fin.drafted);
@@ -319,6 +406,47 @@ mod tests {
         );
         assert!(resp.contains("block_efficiency"), "{resp}");
         assert!(resp.contains("route_policy"), "{resp}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn streaming_raw_response_has_chunked_framing() {
+        let h = sim_server();
+        let body = r#"{"prompt": "hi", "max_tokens": 8, "stream": true}"#;
+        let req = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let resp = raw_request(h.addr, &req);
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        assert!(resp.contains("Transfer-Encoding: chunked"), "{resp}");
+        assert!(resp.contains("\"done\":true"), "{resp}");
+        assert!(resp.contains("\"finish_reason\":\"max_tokens\""), "{resp}");
+        assert!(resp.ends_with("0\r\n\r\n"), "terminal chunk missing: {resp:?}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn streaming_run_populates_ttft_metrics() {
+        let h = sim_server();
+        let addr = h.addr.to_string();
+        let r = crate::server::client::complete_streaming(&addr, "hello world", 16, 0.0)
+            .unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.tokens(), 16);
+        assert!(
+            r.finale.get("ttft_s").and_then(|x| x.as_f64()).unwrap() > 0.0,
+            "{:?}",
+            r.finale
+        );
+        // the aggregated serving metrics carry non-zero TTFT statistics
+        let m = crate::server::client::metrics(&addr).unwrap();
+        assert!(
+            m.get("mean_ttft").and_then(|x| x.as_f64()).unwrap() > 0.0,
+            "{m}"
+        );
+        assert!(m.get("p99_ttft").is_some(), "{m}");
+        assert!(m.get("mean_itl").is_some(), "{m}");
         h.shutdown();
     }
 

@@ -1,6 +1,6 @@
 //! Serving front-end: a thread-based HTTP/1.1 server exposing a JSON
 //! completions API over a multi-replica engine router, plus a
-//! load-generating client.
+//! load-generating client with blocking and streaming consumers.
 //!
 //! Architecture (no async runtime in the offline vendor set — and none
 //! needed): acceptor threads parse requests and hand them to the
@@ -8,6 +8,11 @@
 //! (PJRT contexts are single-threaded by design, so each replica gets its
 //! own); each engine thread runs the continuous-batching `plan → execute →
 //! apply` loop and completes waiting responses via per-request channels.
+//! Streaming requests (`"stream": true`) use the same path but their
+//! channel carries every per-step accepted-token delta
+//! ([`router::StreamEvent`]) as it is applied, surfaced over HTTP as
+//! chunked transfer-encoding — so time-to-first-token is observable
+//! end-to-end instead of being buried in the blocking response.
 
 pub mod client;
 pub mod http;

@@ -4,9 +4,19 @@
 //! instance, KV cache, scheduler, and dedicated thread running the staged
 //! `plan → execute → apply` loop — and dispatches requests to them by a
 //! pluggable [`RoutePolicy`] (round-robin or least-loaded by in-flight
-//! count).  It aggregates [`EngineMetrics`] across replicas for
+//! count).  It aggregates [`MetricsSnapshot`]s across replicas for
 //! `/v1/metrics` and performs a graceful drain on shutdown: every replica
 //! finishes its in-flight batch before its thread exits.
+//!
+//! Requests can complete two ways:
+//! * [`EngineRouter::submit`] / [`EngineRouter::complete`] — one
+//!   [`FinishedRequest`] when the whole output exists;
+//! * [`EngineRouter::submit_streaming`] — a [`StreamEvent`] channel that
+//!   carries every accepted-token delta as the engine's step loop applies
+//!   it ([`StreamEvent::Delta`]), then the finished-request summary
+//!   ([`StreamEvent::Done`]); the channel closes after the terminal event.
+//!   Drain still delivers every delta and the terminal event; abort
+//!   terminates open streams with a `FinishReason::Aborted` summary.
 //!
 //! Replicas are share-nothing: no KV or signal state crosses the boundary,
 //! so aggregate throughput scales with replica count until the host runs
@@ -22,18 +32,38 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use crate::config::RoutePolicy;
-use crate::engine::engine::Engine;
-use crate::engine::metrics::EngineMetrics;
+use crate::engine::engine::{Engine, StepOutcome};
+use crate::engine::metrics::{MetricsSnapshot, DEFAULT_QUANTILES};
 use crate::engine::request::{FinishedRequest, Request};
+use crate::engine::step::StepReport;
 use crate::util::json::Json;
 use crate::log_warn;
+
+/// One event on a streaming request's channel.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// Tokens accepted for this request in one engine step.
+    Delta {
+        /// The accepted tokens, in generation order.
+        tokens: Vec<u32>,
+        /// Engine-clock time the tokens were applied at.
+        t: f64,
+    },
+    /// Terminal event: the completed request summary.  The channel closes
+    /// after this is delivered.
+    Done(FinishedRequest),
+}
 
 /// Messages into a replica's engine thread.
 pub(crate) enum EngineMsg {
     /// Submit a request; the finished result is sent on the reply channel.
     Submit(Request, Sender<FinishedRequest>),
-    /// Snapshot this replica's metrics.
-    Metrics(Sender<EngineMetrics>),
+    /// Submit a request whose per-step token deltas (and terminal summary)
+    /// are forwarded on the reply channel as they happen.
+    SubmitStreaming(Request, Sender<StreamEvent>),
+    /// Snapshot this replica's metrics, pre-reduced to scalars plus the
+    /// requested percentiles (never the full retained request window).
+    Metrics(Vec<f64>, Sender<MetricsSnapshot>),
     /// Graceful drain: finish everything in flight, then exit the thread.
     Drain,
     /// Abort in-flight work (clients observe `FinishReason::Aborted`) and
@@ -48,24 +78,55 @@ struct Replica {
     thread: Mutex<Option<JoinHandle<()>>>,
 }
 
-/// Deliver finished requests to their waiting reply channels.
+/// Deliver finished requests to their waiting reply channels — blocking
+/// submitters get the [`FinishedRequest`], streaming subscribers get the
+/// terminal [`StreamEvent::Done`] (which also closes their channel).
 fn deliver(
     engine: &mut Engine,
     pending: &mut HashMap<u64, Sender<FinishedRequest>>,
+    streams: &mut HashMap<u64, Sender<StreamEvent>>,
     load: &AtomicUsize,
 ) {
     for fin in engine.take_finished() {
         load.fetch_sub(1, Ordering::SeqCst);
         if let Some(reply) = pending.remove(&fin.id) {
             let _ = reply.send(fin);
+        } else if let Some(reply) = streams.remove(&fin.id) {
+            let _ = reply.send(StreamEvent::Done(fin));
         }
     }
     // orphaned waiters (should not happen): drop their channels so callers
     // error out instead of hanging — and release their load slots so
     // least-loaded routing does not shun this replica forever
-    if engine.pending() == 0 && !pending.is_empty() {
-        load.fetch_sub(pending.len(), Ordering::SeqCst);
+    if engine.pending() == 0 && (!pending.is_empty() || !streams.is_empty()) {
+        load.fetch_sub(pending.len() + streams.len(), Ordering::SeqCst);
         pending.clear();
+        streams.clear();
+    }
+}
+
+/// Forward one step's accepted-token deltas to their streaming
+/// subscribers.  Takes the report by value so the token vectors move into
+/// the channel instead of being cloned on the per-step hot path.  A
+/// hung-up subscriber is dropped from the map — its request still runs to
+/// completion and is accounted normally; only the forwarding stops.
+fn forward_deltas(
+    report: StepReport,
+    streams: &mut HashMap<u64, Sender<StreamEvent>>,
+) {
+    for d in report.deltas {
+        let dead = match streams.get(&d.id) {
+            Some(tx) => tx
+                .send(StreamEvent::Delta {
+                    tokens: d.tokens,
+                    t: d.t,
+                })
+                .is_err(),
+            None => false,
+        };
+        if dead {
+            streams.remove(&d.id);
+        }
     }
 }
 
@@ -77,12 +138,16 @@ fn replica_loop(
     load: Arc<AtomicUsize>,
 ) {
     let mut pending: HashMap<u64, Sender<FinishedRequest>> = HashMap::new();
+    let mut streams: HashMap<u64, Sender<StreamEvent>> = HashMap::new();
     let mut draining = false;
     let mut consecutive_errors = 0u32;
     loop {
         // drain the message queue (blocking when idle, else non-blocking)
         loop {
-            let idle = engine.pending() == 0 && pending.is_empty() && !draining;
+            let idle = engine.pending() == 0
+                && pending.is_empty()
+                && streams.is_empty()
+                && !draining;
             let msg = if idle {
                 match rx.recv() {
                     Ok(m) => m,
@@ -103,22 +168,33 @@ fn replica_loop(
                     pending.insert(req.id, reply);
                     engine.submit(req);
                 }
-                EngineMsg::Metrics(reply) => {
-                    let _ = reply.send(engine.metrics.clone());
+                EngineMsg::SubmitStreaming(req, reply) => {
+                    streams.insert(req.id, reply);
+                    engine.submit(req);
+                }
+                EngineMsg::Metrics(quantiles, reply) => {
+                    let _ = reply.send(engine.metrics.snapshot(&quantiles));
                 }
                 EngineMsg::Drain => draining = true,
                 EngineMsg::Abort => {
                     engine.abort_all();
-                    deliver(&mut engine, &mut pending, &load);
+                    deliver(&mut engine, &mut pending, &mut streams, &load);
                     return;
                 }
             }
         }
         if engine.pending() > 0 {
-            let progressed = match engine.step() {
-                Ok(p) => {
+            let progressed = match engine.step_detailed() {
+                Ok(outcome) => {
                     consecutive_errors = 0;
-                    p
+                    match outcome {
+                        StepOutcome::Idle => false,
+                        StepOutcome::Retry => true,
+                        StepOutcome::Ran(report) => {
+                            forward_deltas(report, &mut streams);
+                            true
+                        }
+                    }
                 }
                 Err(e) => {
                     consecutive_errors += 1;
@@ -130,7 +206,7 @@ fn replica_loop(
                     consecutive_errors < 3
                 }
             };
-            deliver(&mut engine, &mut pending, &load);
+            deliver(&mut engine, &mut pending, &mut streams, &load);
             if !progressed && engine.pending() > 0 {
                 // Stuck, not just slow.  Two causes, two remedies — either
                 // way the replica stays up instead of busy-spinning and
@@ -155,7 +231,7 @@ fn replica_loop(
                         );
                     }
                 }
-                deliver(&mut engine, &mut pending, &load);
+                deliver(&mut engine, &mut pending, &mut streams, &load);
             }
         } else if draining {
             return;
@@ -202,10 +278,12 @@ impl EngineRouter {
         }
     }
 
+    /// Number of engine replicas behind this router.
     pub fn replica_count(&self) -> usize {
         self.replicas.len()
     }
 
+    /// The dispatch policy in effect.
     pub fn policy(&self) -> RoutePolicy {
         self.policy
     }
@@ -259,6 +337,28 @@ impl EngineRouter {
         rrx
     }
 
+    /// Dispatch a request whose output is consumed incrementally: the
+    /// returned channel yields one [`StreamEvent::Delta`] per engine step
+    /// that accepted tokens for the request, then [`StreamEvent::Done`]
+    /// with the finished-request summary, after which it closes.  Routing
+    /// (policy, unique ids, load accounting) and drain semantics are
+    /// identical to [`EngineRouter::submit`].
+    pub fn submit_streaming(&self, mut req: Request) -> Receiver<StreamEvent> {
+        req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        let idx = self.pick();
+        let replica = &self.replicas[idx];
+        let (rtx, rrx) = channel();
+        replica.load.fetch_add(1, Ordering::SeqCst);
+        if replica
+            .tx
+            .send(EngineMsg::SubmitStreaming(req, rtx))
+            .is_err()
+        {
+            replica.load.fetch_sub(1, Ordering::SeqCst);
+        }
+        rrx
+    }
+
     /// Submit and block until the request completes.
     pub fn complete(&self, req: Request) -> Result<FinishedRequest> {
         self.submit(req)
@@ -266,34 +366,43 @@ impl EngineRouter {
             .map_err(|_| anyhow!("request dropped: router is shutting down"))
     }
 
-    /// Per-replica metrics snapshots (skips replicas that already exited).
-    pub fn replica_metrics(&self) -> Vec<EngineMetrics> {
+    /// Per-replica metrics snapshots with the default percentile set
+    /// (skips replicas that already exited).  Each reply is pre-reduced on
+    /// the replica thread — O(#quantiles), never the full request window —
+    /// so high-frequency scraping stays cheap.
+    pub fn replica_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.replica_metrics_with(DEFAULT_QUANTILES)
+    }
+
+    /// Per-replica metrics snapshots carrying the requested percentiles.
+    pub fn replica_metrics_with(&self, quantiles: &[f64]) -> Vec<MetricsSnapshot> {
         self.replicas
             .iter()
             .filter_map(|r| {
                 let (tx, rx) = channel();
-                r.tx.send(EngineMsg::Metrics(tx)).ok()?;
+                r.tx.send(EngineMsg::Metrics(quantiles.to_vec(), tx)).ok()?;
                 rx.recv().ok()
             })
             .collect()
     }
 
-    /// Merge per-replica snapshots into one aggregate.  The aggregate's
-    /// request window is sized to hold every replica's retained window, so
-    /// percentile queries see all replicas rather than whichever merged
-    /// last.
-    fn merge_snapshots(per: &[EngineMetrics]) -> EngineMetrics {
-        let window: usize = per.iter().map(|m| m.requests.len()).sum();
-        let mut agg = EngineMetrics::with_retention(window.max(1));
-        for m in per {
+    /// Merge per-replica snapshots into one aggregate (counters summed,
+    /// distributions merged exactly, percentiles taking the per-quantile
+    /// maximum across replicas — see [`MetricsSnapshot::merge`]).
+    fn merge_snapshots(per: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let mut iter = per.iter();
+        let Some(first) = iter.next() else {
+            return MetricsSnapshot::default();
+        };
+        let mut agg = first.clone();
+        for m in iter {
             agg.merge(m);
         }
         agg
     }
 
-    /// Metrics aggregated across all live replicas (counters summed,
-    /// distributions merged — see [`EngineMetrics::merge`]).
-    pub fn aggregated_metrics(&self) -> EngineMetrics {
+    /// Metrics aggregated across all live replicas.
+    pub fn aggregated_metrics(&self) -> MetricsSnapshot {
         Self::merge_snapshots(&self.replica_metrics())
     }
 
@@ -505,6 +614,43 @@ mod tests {
         assert_eq!(fin.reason, FinishReason::MaxTokens);
         assert_eq!(router.in_flight(), 0);
         router.shutdown();
+    }
+
+    #[test]
+    fn streaming_deltas_concatenate_to_full_output() {
+        let router = EngineRouter::new(sim_engines(1), RoutePolicy::RoundRobin);
+        let rx = router.submit_streaming(req(16));
+        let mut tokens = Vec::new();
+        let mut last_t = f64::NEG_INFINITY;
+        let mut done = None;
+        for ev in rx {
+            match ev {
+                StreamEvent::Delta { tokens: t, t: at } => {
+                    assert!(at >= last_t, "deltas must arrive in clock order");
+                    assert!(!t.is_empty());
+                    last_t = at;
+                    tokens.extend(t);
+                }
+                StreamEvent::Done(fin) => done = Some(fin),
+            }
+        }
+        // the channel closed right after the terminal event
+        let fin = done.expect("stream must end with Done");
+        assert_eq!(fin.reason, FinishReason::MaxTokens);
+        assert_eq!(tokens, fin.output, "deltas must concatenate to the output");
+        assert_eq!(router.in_flight(), 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn streaming_subscriber_hangup_does_not_wedge_replica() {
+        let router = EngineRouter::new(sim_engines(1), RoutePolicy::RoundRobin);
+        drop(router.submit_streaming(req(64))); // client vanished immediately
+        // the replica keeps serving fresh traffic and load drains to zero
+        let fin = router.complete(req(8)).unwrap();
+        assert_eq!(fin.output.len(), 8);
+        router.shutdown();
+        assert_eq!(router.in_flight(), 0);
     }
 
     #[test]

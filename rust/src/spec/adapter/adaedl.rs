@@ -40,10 +40,12 @@ pub struct AdaEdl {
 }
 
 impl AdaEdl {
+    /// Construct from config.
     pub fn new(cfg: AdaEdlConfig) -> AdaEdl {
         AdaEdl { cfg }
     }
 
+    /// The policy's configuration.
     pub fn config(&self) -> &AdaEdlConfig {
         &self.cfg
     }

@@ -52,10 +52,12 @@ pub struct DsdeAdapter {
 }
 
 impl DsdeAdapter {
+    /// Construct from config.
     pub fn new(cfg: DsdeConfig) -> DsdeAdapter {
         DsdeAdapter { cfg }
     }
 
+    /// The adapter's configuration.
     pub fn config(&self) -> &DsdeConfig {
         &self.cfg
     }

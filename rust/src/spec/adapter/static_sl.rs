@@ -9,10 +9,12 @@ use crate::spec::history::SeqSignals;
 /// Fixed-SL policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct StaticSl {
+    /// The fixed speculation length proposed every round.
     pub k: usize,
 }
 
 impl StaticSl {
+    /// Construct with the fixed speculation length `k`.
     pub fn new(k: usize) -> StaticSl {
         StaticSl { k }
     }

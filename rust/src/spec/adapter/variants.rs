@@ -34,6 +34,7 @@ pub struct DsdeAblated {
 }
 
 impl DsdeAblated {
+    /// Construct a DSDE adapter with the given penalty ablation.
     pub fn new(cfg: DsdeConfig, variant: DsdeVariant) -> DsdeAblated {
         DsdeAblated {
             inner: DsdeAdapter::new(cfg),
@@ -106,6 +107,7 @@ pub struct DsdeEntropy {
 }
 
 impl DsdeEntropy {
+    /// Construct from the DSDE config plus the entropy-stop parameters.
     pub fn new(cfg: DsdeConfig, lambda: f64, theta: f64) -> DsdeEntropy {
         DsdeEntropy {
             inner: DsdeAdapter::new(cfg),
@@ -158,9 +160,12 @@ pub struct OracleHint {
 // OracleHint is driven by the single-threaded bench harness.
 unsafe impl Sync for OracleHint {}
 
+/// The oracle SL policy driven by an [`OracleHint`] (see its docs).
 #[derive(Clone, Debug)]
 pub struct OraclePolicy {
+    /// Shared hint cell the bench harness writes between rounds.
     pub hint: std::sync::Arc<OracleHint>,
+    /// Hard SL ceiling (the verify graph's K).
     pub sl_limit: usize,
 }
 

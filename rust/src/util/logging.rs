@@ -69,12 +69,16 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     eprintln!("[{t:9.3}s {}] {args}", level.tag());
 }
 
+/// Log at error level (always shown).
 #[macro_export]
 macro_rules! log_error { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($a)*)) } }
+/// Log at warn level.
 #[macro_export]
 macro_rules! log_warn { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($a)*)) } }
+/// Log at info level.
 #[macro_export]
 macro_rules! log_info { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($a)*)) } }
+/// Log at debug level (gated by `DSDE_LOG`).
 #[macro_export]
 macro_rules! log_debug { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($a)*)) } }
 

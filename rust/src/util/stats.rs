@@ -83,19 +83,27 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> Option<f64> {
 
 /// p-quantile (0..=1) by linear interpolation over a sorted copy.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
     let mut s: Vec<f64> = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let idx = p.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    percentile_sorted(&s, p)
+}
+
+/// p-quantile (0..=1) by linear interpolation over an already
+/// ascending-sorted slice — lets callers computing several quantiles of the
+/// same data sort once instead of once per quantile (see
+/// [`crate::engine::metrics::EngineMetrics::snapshot`]).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
     let lo = idx.floor() as usize;
     let hi = idx.ceil() as usize;
     if lo == hi {
-        s[lo]
+        sorted[lo]
     } else {
         let frac = idx - lo as f64;
-        s[lo] * (1.0 - frac) + s[hi] * frac
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
     }
 }
 

@@ -1,12 +1,14 @@
 //! Integration: the multi-replica [`EngineRouter`] over the simulated
 //! substrate — completion guarantees across replicas, metric aggregation
-//! consistency, routing policies, and graceful drain.
+//! consistency, routing policies, graceful drain, and incremental token
+//! streaming (delta ordering, streaming/blocking equivalence, stream
+//! termination on drain and abort).
 
 use dsde::config::{EngineConfig, RoutePolicy, SlPolicyKind};
 use dsde::engine::engine::Engine;
-use dsde::engine::request::{FinishReason, Request, SamplingParams};
+use dsde::engine::request::{FinishReason, FinishedRequest, Request, SamplingParams};
 use dsde::model::sim_lm::{SimModel, SimPairKind};
-use dsde::server::router::EngineRouter;
+use dsde::server::router::{EngineRouter, StreamEvent};
 use dsde::sim::regime::DatasetProfile;
 use dsde::spec::adapter::DsdeConfig;
 
@@ -37,6 +39,26 @@ fn req(prompt_len: usize, max_tokens: usize) -> Request {
             ..Default::default()
         },
     )
+}
+
+/// Consume a stream to the end; returns (ordered delta tokens, Done summary).
+fn drain_stream(
+    rx: std::sync::mpsc::Receiver<StreamEvent>,
+) -> (Vec<u32>, Option<FinishedRequest>) {
+    let mut tokens = Vec::new();
+    let mut done = None;
+    let mut last_t = f64::NEG_INFINITY;
+    for ev in rx {
+        match ev {
+            StreamEvent::Delta { tokens: t, t: at } => {
+                assert!(at >= last_t, "delta timestamps must be non-decreasing");
+                last_t = at;
+                tokens.extend(t);
+            }
+            StreamEvent::Done(fin) => done = Some(fin),
+        }
+    }
+    (tokens, done)
 }
 
 #[test]
@@ -94,10 +116,14 @@ fn aggregated_metrics_match_per_replica_sums() {
         assert_eq!(m.completed, (n / 3) as u64);
         assert!(m.tokens_out > 0);
     }
-    // merged latency distribution covers every request, and the merged
-    // request window retains every replica's samples (no eviction bias)
+    // merged latency/TTFT distributions cover every request, and the
+    // merged window accounting retains every replica's count
     assert_eq!(agg.latency.count(), n as u64);
-    assert_eq!(agg.requests.len(), n);
+    assert_eq!(agg.ttft.count(), n as u64);
+    assert_eq!(agg.window_len, n as u64);
+    // snapshots carry the requested percentiles pre-reduced
+    assert_eq!(agg.latency_quantiles.len(), 3);
+    assert!(agg.latency_quantiles.iter().all(|&(_, v)| v > 0.0));
     router.shutdown();
 }
 
@@ -145,8 +171,87 @@ fn router_metrics_json_reports_new_counters() {
         "\"replica_count\":2",
         "\"route_policy\":\"round-robin\"",
         "\"fleet_throughput\":",
+        "\"mean_ttft\":",
+        "\"mean_itl\":",
+        "\"p50_latency\":",
+        "\"p99_ttft\":",
     ] {
         assert!(s.contains(key), "metrics json missing {key}: {s}");
     }
     router.shutdown();
+}
+
+#[test]
+fn streaming_deltas_ordered_and_concatenate_to_blocking_output() {
+    // two routers over identically seeded single-replica engines: the
+    // streamed deltas must concatenate to exactly the blocking completion
+    let blocking_router = EngineRouter::new(sim_engines(1, 90), RoutePolicy::RoundRobin);
+    let blocking = blocking_router.complete(req(24, 32)).unwrap();
+    blocking_router.shutdown();
+    assert_eq!(blocking.output.len(), 32);
+
+    let streaming_router = EngineRouter::new(sim_engines(1, 90), RoutePolicy::RoundRobin);
+    let (tokens, done) = drain_stream(streaming_router.submit_streaming(req(24, 32)));
+    let fin = done.expect("stream must end with a terminal event");
+    assert_eq!(fin.reason, FinishReason::MaxTokens);
+    assert_eq!(tokens, fin.output, "deltas must concatenate to the output");
+    assert_eq!(tokens, blocking.output, "streaming must equal blocking");
+    assert!(fin.ttft() > 0.0, "virtual-clock TTFT must be observable");
+    assert_eq!(streaming_router.in_flight(), 0);
+
+    // and the streamed request populated the TTFT statistics
+    let agg = streaming_router.aggregated_metrics();
+    assert!(agg.ttft.mean() > 0.0);
+    assert!(agg.itl.mean() > 0.0);
+    streaming_router.shutdown();
+}
+
+#[test]
+fn streaming_interleaves_with_blocking_requests() {
+    let router = EngineRouter::new(sim_engines(2, 100), RoutePolicy::LeastLoaded);
+    let srx: Vec<_> = (0..4).map(|_| router.submit_streaming(req(16, 24))).collect();
+    let brx: Vec<_> = (0..4).map(|_| router.submit(req(16, 24))).collect();
+    for rx in brx {
+        let fin = rx.recv().expect("blocking requests complete");
+        assert_eq!(fin.output.len(), 24);
+    }
+    for rx in srx {
+        let (tokens, done) = drain_stream(rx);
+        let fin = done.expect("streams complete");
+        assert_eq!(tokens, fin.output);
+        assert_eq!(tokens.len(), 24);
+    }
+    assert_eq!(router.in_flight(), 0);
+    router.shutdown();
+}
+
+#[test]
+fn drain_completes_open_streams() {
+    let router = EngineRouter::new(sim_engines(2, 110), RoutePolicy::RoundRobin);
+    let rxs: Vec<_> = (0..6).map(|_| router.submit_streaming(req(16, 20))).collect();
+    // graceful drain while every stream is still in flight
+    router.shutdown();
+    for rx in rxs {
+        let (tokens, done) = drain_stream(rx);
+        let fin = done.expect("drain must run open streams to completion");
+        assert_eq!(fin.reason, FinishReason::MaxTokens);
+        assert_eq!(tokens.len(), 20, "no delta may be lost on drain");
+        assert_eq!(tokens, fin.output);
+    }
+    assert_eq!(router.in_flight(), 0);
+}
+
+#[test]
+fn abort_terminates_open_streams_cleanly() {
+    let router = EngineRouter::new(sim_engines(1, 120), RoutePolicy::RoundRobin);
+    let rxs: Vec<_> = (0..3)
+        .map(|_| router.submit_streaming(req(16, 100_000)))
+        .collect();
+    router.abort();
+    for rx in rxs {
+        let (_, done) = drain_stream(rx); // ends: the channel must close
+        let fin = done.expect("aborted stream still gets a terminal event");
+        assert_eq!(fin.reason, FinishReason::Aborted);
+    }
+    assert_eq!(router.in_flight(), 0);
 }
