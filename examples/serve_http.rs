@@ -7,7 +7,8 @@
 //!
 //! ```bash
 //! cargo run --release --offline --example serve_http -- [--pjrt] \
-//!     [--requests 24] [--concurrency 6] [--replicas 2] [--route least-loaded]
+//!     [--requests 24] [--concurrency 6] [--replicas 2] \
+//!     [--route least-loaded|kv-aware] [--no-steal]
 //! ```
 
 use dsde::config::{CapMode, EngineConfig, RoutePolicy, SlPolicyKind};
@@ -31,6 +32,7 @@ fn main() -> anyhow::Result<()> {
     let replicas = args.usize_clamped_or("replicas", 1, 1, 64);
     let route = RoutePolicy::parse(&args.str_or("route", "round-robin"))
         .ok_or_else(|| anyhow::anyhow!("unknown route policy"))?;
+    let steal = !args.flag("no-steal");
     let use_pjrt = args.flag("pjrt");
 
     let engines: Vec<Engine> = (0..replicas)
@@ -64,12 +66,14 @@ fn main() -> anyhow::Result<()> {
         })
         .collect::<anyhow::Result<_>>()?;
 
-    let router = EngineRouter::new(engines, route);
+    let router = EngineRouter::with_options(engines, route, steal);
     let handle = http::serve_router(router, "127.0.0.1:0")?;
     let addr = handle.addr.to_string();
     println!(
-        "server up at http://{addr} (pjrt={use_pjrt}, replicas={replicas}, route={})",
-        route.name()
+        "server up at http://{addr} (pjrt={use_pjrt}, replicas={replicas}, \
+         route={}, steal={})",
+        route.name(),
+        handle.router().stealing_enabled()
     );
 
     // closed-loop load
@@ -123,6 +127,12 @@ fn main() -> anyhow::Result<()> {
         get("mean_ttft"),
         get("p99_ttft"),
         get("mean_itl"),
+    );
+    println!(
+        "route={}  work stealing {} ({} request(s) migrated)",
+        handle.router().policy().name(),
+        if handle.router().stealing_enabled() { "on" } else { "off" },
+        handle.router().steals(),
     );
     handle.shutdown();
     Ok(())

@@ -3,8 +3,11 @@
 //! arrivals into the engine's continuous batch at increasing offered load,
 //! comparing DSDE+cap vs static SL on p50/p99 latency, TTFT, and goodput —
 //! plus a replica-scaling section driving the [`EngineRouter`] with 1..=N
-//! share-nothing engine replicas and a token-streaming section verifying
-//! the incremental delivery path under load.
+//! share-nothing engine replicas, a token-streaming section verifying the
+//! incremental delivery path under load, a skewed-prompt placement section
+//! (least-loaded vs kv-aware under tight KV), and a drain-tail section
+//! measuring what work stealing buys when one replica holds the whole
+//! queue.
 //!
 //! The shapes to expect: at low load everyone is fine; as the offered rate
 //! approaches saturation, the better block efficiency of the adaptive
@@ -172,6 +175,103 @@ fn streaming_smoke(n: usize) -> (f64, f64, f64) {
     )
 }
 
+/// One policy's numbers from the skewed-prompt placement scenario.
+struct PlacementResult {
+    p50: f64,
+    p99: f64,
+    preemptions: u64,
+}
+
+/// Skewed-prompt placement scenario: a windowed closed loop where every
+/// 4th request is a KV hog (long prompt + long output) over replicas with
+/// *tight* KV.  A request-count policy happily lands a second hog on a
+/// replica whose single in-flight request already owns most of its blocks;
+/// the KV-aware policy routes on projected block headroom and avoids the
+/// preemption thrash that inflates tail latency.
+fn placement_skewed(policy: RoutePolicy, n_total: usize) -> PlacementResult {
+    let replicas = 4usize;
+    let engines: Vec<Engine> = (0..replicas)
+        .map(|i| {
+            let seed = 31 + i as u64;
+            let cfg = EngineConfig {
+                max_batch: 8,
+                max_len: 4096,
+                policy: SlPolicyKind::Dsde(DsdeConfig::default()),
+                cap_mode: CapMode::Mean,
+                // tight: 96 blocks * 16 = 1536 token slots per replica;
+                // one hog projects to ~60 blocks
+                kv_blocks: 96,
+                seed,
+                ..Default::default()
+            };
+            let model =
+                SimModel::new(SimPairKind::LlamaLike, DatasetProfile::sharegpt(), seed);
+            Engine::new(cfg, Box::new(model))
+        })
+        .collect();
+    let router = EngineRouter::new(engines, policy);
+    let make = |i: usize| {
+        let (prompt, out) = if i % 4 == 0 { (768, 192) } else { (48, 48) };
+        dsde::engine::request::Request::new(
+            0,
+            vec![65; prompt],
+            dsde::engine::request::SamplingParams {
+                max_tokens: out,
+                ..Default::default()
+            },
+        )
+    };
+    // windowed closed loop: completions free the window for new arrivals,
+    // so in-flight counts keep looking balanced while KV occupancy is not
+    let window = 12usize;
+    let mut outstanding = std::collections::VecDeque::new();
+    let mut submitted = 0usize;
+    let mut lats = Vec::with_capacity(n_total);
+    while lats.len() < n_total {
+        while submitted < n_total && outstanding.len() < window {
+            outstanding.push_back(router.submit(make(submitted)));
+            submitted += 1;
+        }
+        let rx = outstanding.pop_front().expect("window never empty here");
+        let fin = rx.recv().expect("request must complete");
+        lats.push(fin.latency());
+    }
+    let agg = router.aggregated_metrics();
+    router.shutdown();
+    PlacementResult {
+        p50: percentile(&lats, 0.5),
+        p99: percentile(&lats, 0.99),
+        preemptions: agg.preemptions,
+    }
+}
+
+/// Drain-tail scenario: all `n_total` long requests land on replica 0 of
+/// 2 (the worst-case imbalance a burst can produce); returns (wall seconds
+/// to full completion, virtual-time makespan, requests migrated).  With
+/// stealing on, the idle replica takes over half the queue.
+fn drain_tail(steal: bool, n_total: usize) -> (f64, f64, u64) {
+    let router = EngineRouter::with_options(
+        router_engines(2),
+        RoutePolicy::RoundRobin,
+        steal,
+    );
+    let mut gen = WorkloadGen::new(Dataset::by_name("sharegpt").unwrap(), 17)
+        .with_limits(64, 96);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_total)
+        .map(|_| router.submit_to(0, gen.next_request()))
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("request must complete");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let per = router.replica_metrics();
+    let makespan = per.iter().map(|m| m.busy_time).fold(0.0f64, f64::max);
+    let steals = router.steals();
+    router.shutdown();
+    (wall, makespan, steals)
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let replica_counts = args.usize_list_or("replicas", &[1, 2, 4]);
@@ -267,5 +367,67 @@ fn main() {
         } else {
             "DOES NOT hold"
         }
+    );
+
+    println!(
+        "\n== skewed-prompt placement: 4 replicas, tight KV, every 4th \
+         request a KV hog ==\n"
+    );
+    let mut place_table = Table::new(&[
+        "policy",
+        "p50 latency (s)",
+        "p99 latency (s)",
+        "preemptions",
+    ]);
+    let ll = placement_skewed(RoutePolicy::LeastLoaded, 96);
+    let kv = placement_skewed(RoutePolicy::KvAware, 96);
+    for (name, r) in [("least-loaded", &ll), ("kv-aware", &kv)] {
+        place_table.row(&[
+            name.to_string(),
+            format!("{:.2}", r.p50),
+            format!("{:.2}", r.p99),
+            format!("{}", r.preemptions),
+        ]);
+    }
+    place_table.print();
+    println!(
+        "\nshape check: routing on projected KV blocks keeps the tail at or \
+         below the request-count policy's (kv-aware p99 {:.2}s <= \
+         least-loaded p99 {:.2}s: {}).",
+        kv.p99,
+        ll.p99,
+        if kv.p99 <= ll.p99 { "holds" } else { "DOES NOT hold" }
+    );
+
+    println!(
+        "\n== drain tail: all requests burst onto replica 0 of 2, stealing \
+         off vs on ==\n"
+    );
+    let mut steal_table = Table::new(&[
+        "stealing",
+        "wall time (s)",
+        "fleet makespan (virtual s)",
+        "requests migrated",
+    ]);
+    let (wall_off, mk_off, _) = drain_tail(false, 24);
+    let (wall_on, mk_on, migrated) = drain_tail(true, 24);
+    steal_table.row(&[
+        "off".into(),
+        format!("{wall_off:.3}"),
+        format!("{mk_off:.1}"),
+        "0".into(),
+    ]);
+    steal_table.row(&[
+        "on".into(),
+        format!("{wall_on:.3}"),
+        format!("{mk_on:.1}"),
+        format!("{migrated}"),
+    ]);
+    steal_table.print();
+    println!(
+        "\nshape check: the idle replica absorbs the stolen queue, cutting \
+         the fleet makespan (on {mk_on:.1}s < off {mk_off:.1}s with \
+         {migrated} migrated: {}).",
+        if mk_on < mk_off && migrated > 0 { "holds" } else { "DOES NOT hold" }
     );
 }

@@ -154,14 +154,23 @@ pub enum RoutePolicy {
     RoundRobin,
     /// Dispatch to the replica with the fewest in-flight requests.
     LeastLoaded,
+    /// Dispatch to the replica with the most projected KV-block headroom:
+    /// free blocks minus the blocks its queued work (waiting sequences +
+    /// channel backlog) and the candidate request (prompt + output budget)
+    /// will pre-map.  Request-count policies are blind to sequence length;
+    /// this one tracks the resource that actually saturates under
+    /// large-batch speculative serving.
+    KvAware,
 }
 
 impl RoutePolicy {
-    /// Parse CLI shorthand: `rr`/`round-robin` or `ll`/`least-loaded`.
+    /// Parse CLI shorthand: `rr`/`round-robin`, `ll`/`least-loaded`, or
+    /// `kv`/`kv-aware`.
     pub fn parse(s: &str) -> Option<RoutePolicy> {
         match s.to_ascii_lowercase().as_str() {
             "rr" | "round-robin" | "roundrobin" => Some(RoutePolicy::RoundRobin),
             "ll" | "least-loaded" | "leastloaded" => Some(RoutePolicy::LeastLoaded),
+            "kv" | "kv-aware" | "kvaware" => Some(RoutePolicy::KvAware),
             _ => None,
         }
     }
@@ -171,6 +180,7 @@ impl RoutePolicy {
         match self {
             RoutePolicy::RoundRobin => "round-robin",
             RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::KvAware => "kv-aware",
         }
     }
 }
@@ -185,6 +195,11 @@ pub struct RouterConfig {
     pub replicas: usize,
     /// How the router picks a replica per request.
     pub policy: RoutePolicy,
+    /// Work stealing for the drain tail: when a replica goes idle while a
+    /// sibling still has queued (not in-flight) requests, the router
+    /// migrates queued requests to the idle replica.  No-op with a single
+    /// replica.
+    pub steal: bool,
 }
 
 impl Default for RouterConfig {
@@ -192,6 +207,7 @@ impl Default for RouterConfig {
         RouterConfig {
             replicas: 1,
             policy: RoutePolicy::RoundRobin,
+            steal: true,
         }
     }
 }
@@ -213,6 +229,7 @@ impl RouterConfig {
         Json::obj()
             .set("replicas", self.replicas)
             .set("route", self.policy.name())
+            .set("steal", self.steal)
     }
 }
 
@@ -279,6 +296,9 @@ mod tests {
             Some(RoutePolicy::LeastLoaded)
         );
         assert_eq!(RoutePolicy::parse("LL"), Some(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("kv"), Some(RoutePolicy::KvAware));
+        assert_eq!(RoutePolicy::parse("kv-aware"), Some(RoutePolicy::KvAware));
+        assert_eq!(RoutePolicy::KvAware.name(), "kv-aware");
         assert_eq!(RoutePolicy::parse("nope"), None);
     }
 
@@ -297,6 +317,7 @@ mod tests {
         assert!(huge.validate().is_err());
         let s = RouterConfig::default().to_json().to_string();
         assert!(s.contains("\"route\":\"round-robin\""));
+        assert!(s.contains("\"steal\":true"));
     }
 
     #[test]

@@ -33,6 +33,27 @@ use crate::config::EngineConfig;
 use crate::model::traits::SpecModel;
 use crate::spec::adapter::{make_policy, SlPolicy};
 
+/// A cheap cross-thread load snapshot of one engine replica, published by
+/// the serving layer after every step and consumed by the router's
+/// KV-aware placement and work-stealing decisions (see
+/// [`crate::server::router::EngineRouter`]).  All fields are O(1) or
+/// O(#waiting) to compute — nothing here touches the KV block tables.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplicaLoad {
+    /// Sequences currently scheduled in the running batch.
+    pub in_flight: usize,
+    /// KV blocks currently mapped to sequences.
+    pub kv_used_blocks: usize,
+    /// KV blocks currently unallocated.
+    pub kv_free_blocks: usize,
+    /// Requests waiting in the engine's admission queue (not in-flight).
+    pub queued_requests: usize,
+    /// Projected token demand of the waiting queue: each queued sequence's
+    /// current length (prompt + any pre-preemption output) plus its
+    /// remaining output budget — the KV footprint it will grow to.
+    pub queued_prompt_tokens: usize,
+}
+
 /// What one driven engine step did (see [`Engine::step_detailed`]).
 #[derive(Debug)]
 pub enum StepOutcome {
@@ -106,9 +127,11 @@ impl Engine {
         self.uses_virtual_time
     }
 
-    /// Queue a request.
+    /// Queue a request.  `arrival` is backdated by any queue wait the
+    /// request already accrued on another replica ([`Request::waited`]),
+    /// so latency/TTFT survive a work-steal migration.
     pub fn submit(&mut self, mut req: Request) {
-        req.arrival = self.clock;
+        req.arrival = self.clock - req.waited;
         self.waiting.push_back(SeqState::from_request(req));
     }
 
@@ -217,6 +240,81 @@ impl Engine {
     /// KV blocks currently mapped.
     pub fn kv_used_blocks(&self) -> usize {
         self.kv.used_blocks()
+    }
+
+    /// KV blocks currently unallocated.
+    pub fn kv_free_blocks(&self) -> usize {
+        self.kv.free_blocks()
+    }
+
+    /// Tokens per KV block (the paged-attention page size).
+    pub fn kv_block_size(&self) -> usize {
+        self.kv.block_size()
+    }
+
+    /// Requests waiting in the admission queue (not yet running).
+    pub fn queued_requests(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Projected token demand of the waiting queue: current length plus
+    /// remaining output budget per queued sequence (see
+    /// [`ReplicaLoad::queued_prompt_tokens`]).
+    ///
+    /// O(#waiting) by design: the queue is mutated from several sites
+    /// (admission, preemption re-queue, stealing, aborts), and a scan per
+    /// step cannot drift the way an incrementally-maintained counter
+    /// could.  Revisit with a counter if queue depths ever reach the tens
+    /// of thousands.
+    pub fn queued_prompt_tokens(&self) -> usize {
+        self.waiting
+            .iter()
+            .map(|s| s.tokens.len() + s.remaining())
+            .sum()
+    }
+
+    /// Snapshot the replica-load gauges the router's placement layer
+    /// consumes (KV occupancy + queue pressure).
+    pub fn load_snapshot(&self) -> ReplicaLoad {
+        ReplicaLoad {
+            in_flight: self.running.len(),
+            kv_used_blocks: self.kv.used_blocks(),
+            kv_free_blocks: self.kv.free_blocks(),
+            queued_requests: self.waiting.len(),
+            queued_prompt_tokens: self.queued_prompt_tokens(),
+        }
+    }
+
+    /// Migrate up to `max` *untouched* requests off the back of the waiting
+    /// queue (work stealing).  Only sequences that have never run — no
+    /// generated tokens, no rounds, no preemptions — are eligible: they
+    /// carry no model or KV state, so they can restart on another replica
+    /// without changing their output.  The front of the queue (FCFS head,
+    /// preemption victims) is never stolen.  Returned requests preserve
+    /// their arrival order and carry the queue wait accrued here
+    /// ([`Request::waited`]), so the thief's latency accounting keeps
+    /// counting it.
+    pub fn steal_waiting(&mut self, max: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        while out.len() < max && self.waiting.len() > 1 {
+            let eligible = self
+                .waiting
+                .back()
+                .is_some_and(|s| s.rounds == 0 && s.generated() == 0 && s.preemptions == 0);
+            if !eligible {
+                break;
+            }
+            let seq = self.waiting.pop_back().unwrap();
+            out.push(Request {
+                id: seq.id,
+                prompt: seq.tokens,
+                params: seq.params,
+                arrival: seq.arrival,
+                waited: (self.clock - seq.arrival).max(0.0),
+            });
+        }
+        out.reverse();
+        out
     }
 }
 
@@ -443,6 +541,70 @@ mod tests {
             .map(|r| r.id)
             .collect();
         assert_eq!(aborted, vec![0]);
+    }
+
+    #[test]
+    fn load_snapshot_tracks_queue_and_kv() {
+        let mut e = sim_engine(SlPolicyKind::Static(4), true);
+        let snap = e.load_snapshot();
+        assert_eq!(snap.in_flight, 0);
+        assert_eq!(snap.queued_requests, 0);
+        assert_eq!(snap.kv_used_blocks, 0);
+        assert_eq!(snap.kv_free_blocks, e.cfg.kv_blocks);
+        submit_n(&mut e, 3, 16);
+        let snap = e.load_snapshot();
+        assert_eq!(snap.in_flight, 0, "nothing admitted before a step");
+        assert_eq!(snap.queued_requests, 3);
+        // 3 waiting seqs, each 32 prompt tokens + 16 budget
+        assert_eq!(snap.queued_prompt_tokens, 3 * (32 + 16));
+        assert_eq!(snap.kv_used_blocks, 0);
+        assert_eq!(snap.kv_free_blocks + snap.kv_used_blocks, e.cfg.kv_blocks);
+        e.step().unwrap();
+        let snap = e.load_snapshot();
+        assert_eq!(snap.in_flight, 3, "all admitted into the batch");
+        assert_eq!(snap.queued_requests, 0);
+        assert!(snap.kv_used_blocks > 0, "running seqs hold KV");
+        e.run_to_completion();
+        let snap = e.load_snapshot();
+        assert_eq!(snap.kv_used_blocks, 0, "drained engine frees all KV");
+        assert_eq!(snap.in_flight, 0);
+    }
+
+    #[test]
+    fn steal_waiting_takes_untouched_tail_preserving_order() {
+        let mut e = sim_engine(SlPolicyKind::Static(4), true);
+        submit_n(&mut e, 5, 8); // ids 0..5, all waiting and untouched
+        let stolen = e.steal_waiting(3);
+        assert_eq!(
+            stolen.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![2, 3, 4],
+            "steal pops the tail but preserves arrival order"
+        );
+        assert_eq!(e.pending(), 2);
+        // the head (FCFS front) is never stolen even when asked for more
+        let stolen = e.steal_waiting(10);
+        assert_eq!(stolen.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(e.pending(), 1);
+        assert!(e.steal_waiting(10).is_empty());
+        // stolen requests are whole: prompt + params intact
+        assert_eq!(stolen[0].prompt, vec![65; 32]);
+        assert_eq!(stolen[0].params.max_tokens, 8);
+    }
+
+    #[test]
+    fn steal_waiting_skips_started_sequences() {
+        // a preempted sequence (re-queued at the front with history) must
+        // never migrate: its regime/KV trajectory is replica-local
+        let mut e = sim_engine(SlPolicyKind::Static(4), true);
+        submit_n(&mut e, 2, 8);
+        let mut victim = e.waiting.pop_front().unwrap();
+        victim.preemptions = 1;
+        e.waiting.push_back(victim); // started seq at the tail
+        assert!(
+            e.steal_waiting(2).is_empty(),
+            "a preempted tail blocks stealing behind it"
+        );
+        assert_eq!(e.pending(), 2);
     }
 
     #[test]

@@ -47,6 +47,11 @@ impl KvCache {
         self.block_size
     }
 
+    /// Total blocks managed (free + allocated).
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
     /// Blocks currently unallocated.
     pub fn free_blocks(&self) -> usize {
         self.free.len()

@@ -36,6 +36,10 @@ pub struct Request {
     pub params: SamplingParams,
     /// submission time on the engine clock (set by the engine at submit)
     pub arrival: f64,
+    /// Queue wait already accrued on another replica before a work-steal
+    /// migration (engine seconds).  The engine backdates `arrival` by this
+    /// much at submit so latency/TTFT keep counting the victim-side wait.
+    pub waited: f64,
 }
 
 impl Request {
@@ -46,6 +50,7 @@ impl Request {
             prompt,
             params,
             arrival: 0.0,
+            waited: 0.0,
         }
     }
 

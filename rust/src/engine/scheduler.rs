@@ -238,6 +238,87 @@ mod tests {
     }
 
     #[test]
+    fn preempt_resume_cycle_keeps_counters_and_order_consistent() {
+        // full preempt -> resume cycle: the victim re-queues at the FRONT,
+        // is re-admitted first (no starvation), and the admitted/preempted
+        // outcome counters match the queue transitions exactly
+        let s = Scheduler::new(2);
+        // 12 blocks of 8: admission (41-token lookahead -> 6 blocks each)
+        // exactly fits both; the SL-8 lookahead (49 -> 7 each) cannot
+        let mut kv = KvCache::new(12, 8);
+        let mut waiting: VecDeque<_> = [seq(1, 40), seq(2, 40)].into_iter().collect();
+        let mut running = Vec::new();
+        // cycle 1: admit both
+        let admitted = s.admit(&mut waiting, &mut running, &mut kv);
+        assert_eq!(admitted, 2);
+        assert_eq!(running.len() + waiting.len(), 2, "requests conserved");
+        // cycle 2: big SLs blow the KV budget -> tail preempted
+        let mut sls = vec![8usize, 8];
+        let out = s.reserve_lookahead(&mut running, &mut sls, &mut kv, &mut waiting);
+        assert_eq!(out.preempted, vec![2]);
+        assert_eq!(out.admitted, 0, "reserve never admits");
+        assert_eq!(running.len(), 1);
+        assert_eq!(waiting.front().unwrap().id, 2, "victim re-queued at front");
+        assert_eq!(waiting.front().unwrap().preemptions, 1);
+        assert_eq!(running.len() + waiting.len(), 2, "requests conserved");
+        kv.check_invariants().unwrap();
+        // cycle 3: resume — seq 1 retires (release), victim re-admits and
+        // its lookahead now fits; the preemption counter does not move
+        kv.release(1);
+        running.clear();
+        let admitted = s.admit(&mut waiting, &mut running, &mut kv);
+        assert_eq!(admitted, 1);
+        assert_eq!(running[0].id, 2);
+        assert_eq!(running[0].preemptions, 1, "counter survives the round trip");
+        let mut sls = vec![8usize];
+        let out = s.reserve_lookahead(&mut running, &mut sls, &mut kv, &mut waiting);
+        assert!(out.preempted.is_empty(), "resumed victim must not thrash");
+        assert!(waiting.is_empty());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn repeated_preemption_cycles_never_starve_the_victim() {
+        // under sustained pressure the same victim bounces, but each cycle
+        // it re-queues at the front, so it is always next in line — its
+        // preemption count grows, proof it kept being the one re-admitted
+        let s = Scheduler::new(2);
+        let mut kv = KvCache::new(10, 8);
+        let mut waiting: VecDeque<_> = [seq(1, 36), seq(2, 36)].into_iter().collect();
+        let mut running = Vec::new();
+        for cycle in 1..=3 {
+            s.admit(&mut waiting, &mut running, &mut kv);
+            let mut sls = vec![8usize; running.len()];
+            let out =
+                s.reserve_lookahead(&mut running, &mut sls, &mut kv, &mut waiting);
+            assert_eq!(out.preempted, vec![2], "cycle {cycle}");
+            assert_eq!(waiting.front().unwrap().id, 2, "cycle {cycle}: front spot");
+            assert_eq!(waiting.front().unwrap().preemptions, cycle);
+            assert_eq!(running.len() + waiting.len(), 2, "requests conserved");
+            // survivor keeps running (its lookahead was granted)
+            assert_eq!(running[0].id, 1);
+            kv.check_invariants().unwrap();
+            // post-round reallocation (the apply stage's trim): the
+            // survivor gives back its over-mapped lookahead block, so the
+            // next cycle can re-admit the victim into the free batch slot
+            kv.trim(1, 36);
+        }
+    }
+
+    #[test]
+    fn reserve_on_empty_running_is_a_clean_noop() {
+        let s = Scheduler::new(4);
+        let mut running: Vec<SeqState> = Vec::new();
+        let mut sls: Vec<usize> = Vec::new();
+        let mut kv = KvCache::new(4, 16);
+        let mut waiting = VecDeque::new();
+        let out = s.reserve_lookahead(&mut running, &mut sls, &mut kv, &mut waiting);
+        assert!(out.preempted.is_empty());
+        assert!(out.scheduled.is_empty());
+        assert_eq!(kv.used_blocks(), 0);
+    }
+
+    #[test]
     fn single_sequence_degrades_sl_instead_of_preempting() {
         let s = Scheduler::new(4);
         let mut running = vec![seq(1, 60)];

@@ -22,7 +22,7 @@
 
 use anyhow::Result;
 
-use super::engine::Engine;
+use super::engine::{Engine, ReplicaLoad};
 use crate::model::traits::{RoundOutcome, SeqInput};
 use crate::spec::cap;
 
@@ -105,6 +105,9 @@ pub struct StepReport {
     pub finished: Vec<u64>,
     /// Round cost on the engine clock (virtual or wall seconds).
     pub cost: f64,
+    /// Post-step replica-load snapshot (KV occupancy + queue pressure) —
+    /// what the serving layer publishes for KV-aware placement.
+    pub load: ReplicaLoad,
 }
 
 impl Engine {
@@ -327,6 +330,7 @@ impl Engine {
             deltas,
             finished,
             cost,
+            load: self.load_snapshot(),
         }
     }
 }
@@ -545,6 +549,25 @@ mod tests {
             assert!((d.t - e.now()).abs() < 1e-12, "stamped at the round clock");
             assert!(!d.tokens.is_empty());
         }
+    }
+
+    #[test]
+    fn report_load_snapshot_matches_engine_state() {
+        let mut e = default_engine();
+        submit_n(&mut e, 6, 16); // max_batch 4: two stay queued
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        let round = e.execute(&plan).unwrap();
+        let report = e.apply(plan, round);
+        assert_eq!(report.load, e.load_snapshot());
+        assert_eq!(report.load.in_flight, 4);
+        assert_eq!(report.load.queued_requests, 2);
+        assert!(report.load.kv_used_blocks > 0);
+        assert_eq!(
+            report.load.kv_used_blocks + report.load.kv_free_blocks,
+            e.cfg.kv_blocks
+        );
     }
 
     #[test]

@@ -27,7 +27,8 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "addr", help: "listen address (serve)", default: Some("127.0.0.1:8080") },
     FlagSpec { name: "policy", help: "static:<k> | dsde | adaedl:<base>", default: Some("dsde") },
     FlagSpec { name: "replicas", help: "engine replicas behind the router (serve)", default: Some("1") },
-    FlagSpec { name: "route", help: "round-robin | least-loaded (serve)", default: Some("round-robin") },
+    FlagSpec { name: "route", help: "round-robin | least-loaded | kv-aware (serve)", default: Some("round-robin") },
+    FlagSpec { name: "steal", help: "drain-tail work stealing on|off (serve)", default: Some("on") },
     FlagSpec { name: "cap", help: "none | mean | median | p90", default: Some("mean") },
     FlagSpec { name: "batch", help: "max batch size", default: Some("8") },
     FlagSpec { name: "dataset", help: "cnndm|xsum|gsm8k|hotpotqa|nq|humaneval|sharegpt|wmt14", default: Some("cnndm") },
@@ -55,11 +56,18 @@ fn main() {
 }
 
 fn router_config(args: &Args) -> Result<RouterConfig> {
-    let policy = RoutePolicy::parse(&args.str_or("route", "round-robin"))
-        .ok_or_else(|| anyhow::anyhow!("unknown route policy (round-robin | least-loaded)"))?;
+    let policy = RoutePolicy::parse(&args.str_or("route", "round-robin")).ok_or_else(|| {
+        anyhow::anyhow!("unknown route policy (round-robin | least-loaded | kv-aware)")
+    })?;
+    let steal = match args.str_or("steal", "on").as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => return Err(anyhow::anyhow!("unknown --steal value {other} (on|off)")),
+    };
     let cfg = RouterConfig {
         replicas: args.usize_clamped_or("replicas", 1, 1, 256),
         policy,
+        steal,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
@@ -117,12 +125,13 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                     Ok(Engine::new(cfg, Box::new(model)))
                 })
                 .collect::<Result<_>>()?;
-            let router = EngineRouter::new(engines, rcfg.policy);
+            let router = EngineRouter::with_options(engines, rcfg.policy, rcfg.steal);
             let handle = serve_router(router, &args.str_or("addr", "127.0.0.1:8080"))?;
             println!(
-                "dsde serving (pjrt, {} replica(s), {}) on http://{}",
+                "dsde serving (pjrt, {} replica(s), {}, steal={}) on http://{}",
                 rcfg.replicas,
                 rcfg.policy.name(),
+                handle.router().stealing_enabled(),
                 handle.addr
             );
             loop {
@@ -141,12 +150,13 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                     Ok(Engine::new(cfg, Box::new(model)))
                 })
                 .collect::<Result<_>>()?;
-            let router = EngineRouter::new(engines, rcfg.policy);
+            let router = EngineRouter::with_options(engines, rcfg.policy, rcfg.steal);
             let handle = serve_router(router, &args.str_or("addr", "127.0.0.1:8080"))?;
             println!(
-                "dsde serving (sim, {} replica(s), {}) on http://{}",
+                "dsde serving (sim, {} replica(s), {}, steal={}) on http://{}",
                 rcfg.replicas,
                 rcfg.policy.name(),
+                handle.router().stealing_enabled(),
                 handle.addr
             );
             loop {

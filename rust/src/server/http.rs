@@ -12,8 +12,10 @@
 //!   ...}`) and the zero-length chunk.
 //! * `GET /v1/metrics` — pre-reduced metrics aggregated across engine
 //!   replicas (incl. TTFT/ITL statistics and percentiles), plus a
-//!   per-replica breakdown.
-//! * `GET /health` — liveness + replica count.
+//!   per-replica breakdown with KV-occupancy gauges (`kv_used_blocks`,
+//!   `kv_free_blocks`, `queued_requests`, `queued_prompt_tokens`) and the
+//!   router's work-stealing counter.
+//! * `GET /health` — liveness + replica count + routing configuration.
 //!
 //! Connection threads hand requests to an [`EngineRouter`], which owns one
 //! engine thread per replica; [`serve`] wraps a single engine in a
@@ -202,7 +204,9 @@ fn handle_conn(mut stream: TcpStream, router: &EngineRouter) {
         ("GET", "/health") => {
             let body = Json::obj()
                 .set("ok", true)
-                .set("replicas", router.replica_count());
+                .set("replicas", router.replica_count())
+                .set("route", router.policy().name())
+                .set("steal", router.stealing_enabled());
             let _ = write_json(&mut stream, 200, &body);
         }
         ("GET", "/v1/metrics") => {
@@ -374,6 +378,30 @@ mod tests {
         assert!(resp.starts_with("HTTP/1.1 200"));
         assert!(resp.contains("\"ok\":true"));
         assert!(resp.contains("\"replicas\":1"));
+        h.shutdown();
+    }
+
+    #[test]
+    fn health_reports_routing_config() {
+        let engines = (0..2).map(|i| sim_engine(1 + i as u64)).collect();
+        let h = serve_router(
+            EngineRouter::with_options(engines, RoutePolicy::KvAware, true),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let resp = raw_request(
+            h.addr,
+            "GET /health HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.contains("\"route\":\"kv-aware\""), "{resp}");
+        assert!(resp.contains("\"steal\":true"), "{resp}");
+        let resp = raw_request(
+            h.addr,
+            "GET /v1/metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.contains("\"kv_free_blocks\""), "{resp}");
+        assert!(resp.contains("\"queued_prompt_tokens\""), "{resp}");
+        assert!(resp.contains("\"steals\":"), "{resp}");
         h.shutdown();
     }
 

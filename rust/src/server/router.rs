@@ -18,21 +18,36 @@
 //!   Drain still delivers every delta and the terminal event; abort
 //!   terminates open streams with a `FinishReason::Aborted` summary.
 //!
-//! Replicas are share-nothing: no KV or signal state crosses the boundary,
-//! so aggregate throughput scales with replica count until the host runs
-//! out of cores (see `benches/serving_load.rs`).  Cross-replica KV-aware
-//! placement is the designed follow-on (ROADMAP).
+//! Replicas are share-nothing for *execution*: no KV or signal state
+//! crosses the boundary, so aggregate throughput scales with replica count
+//! until the host runs out of cores (see `benches/serving_load.rs`).  Two
+//! placement layers do look across the boundary:
+//!
+//! * **KV-aware routing** ([`RoutePolicy::KvAware`]): each replica thread
+//!   publishes a [`ReplicaLoad`] snapshot (KV occupancy + queue pressure)
+//!   into a lock-free load cell after every step; `submit` picks the
+//!   replica with the most projected KV-block headroom for the candidate
+//!   request (prompt + output budget), instead of the fewest in-flight
+//!   requests.  Request counts are blind to sequence length; blocks are
+//!   the resource that actually saturates.
+//! * **Work stealing** ([`EngineRouter::with_options`]): a balancer thread
+//!   watches the load cells; when a replica goes idle while a sibling
+//!   still has ≥2 queued (not in-flight) requests, it migrates untouched
+//!   queued requests — with their reply channels — to the idle replica,
+//!   fixing the drain-tail imbalance.  Only never-run sequences migrate,
+//!   so placement can never change a request's output tokens.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::RoutePolicy;
-use crate::engine::engine::{Engine, StepOutcome};
+use crate::engine::engine::{Engine, ReplicaLoad, StepOutcome};
 use crate::engine::metrics::{MetricsSnapshot, DEFAULT_QUANTILES};
 use crate::engine::request::{FinishedRequest, Request};
 use crate::engine::step::StepReport;
@@ -54,6 +69,16 @@ pub enum StreamEvent {
     Done(FinishedRequest),
 }
 
+/// The reply channel of a request in flight on a replica — shipped along
+/// with the request when the balancer migrates it to another replica, so
+/// stealing is invisible to the waiting client.
+pub(crate) enum ReplyTo {
+    /// Blocking submitter waiting for the one [`FinishedRequest`].
+    Blocking(Sender<FinishedRequest>),
+    /// Streaming subscriber consuming [`StreamEvent`]s.
+    Streaming(Sender<StreamEvent>),
+}
+
 /// Messages into a replica's engine thread.
 pub(crate) enum EngineMsg {
     /// Submit a request; the finished result is sent on the reply channel.
@@ -61,6 +86,13 @@ pub(crate) enum EngineMsg {
     /// Submit a request whose per-step token deltas (and terminal summary)
     /// are forwarded on the reply channel as they happen.
     SubmitStreaming(Request, Sender<StreamEvent>),
+    /// Work stealing, victim side: migrate up to `max` untouched waiting
+    /// requests (with their reply channels) back to the balancer.  Replies
+    /// with an empty batch when nothing is stealable.
+    Steal(usize, Sender<Vec<(Request, ReplyTo)>>),
+    /// Work stealing, thief side: adopt migrated requests, re-registering
+    /// their reply channels.
+    SubmitStolen(Vec<(Request, ReplyTo)>),
     /// Snapshot this replica's metrics, pre-reduced to scalars plus the
     /// requested percentiles (never the full retained request window).
     Metrics(Vec<f64>, Sender<MetricsSnapshot>),
@@ -71,10 +103,112 @@ pub(crate) enum EngineMsg {
     Abort,
 }
 
-/// One engine replica: channel + thread + in-flight counter.
+/// Projected token demand of a request: its prompt plus the full output
+/// budget it may grow to — the KV footprint placement must plan for.
+fn projected_tokens(req: &Request) -> usize {
+    req.prompt.len() + req.params.max_tokens
+}
+
+/// Lock-free per-replica load gauges shared between the replica thread
+/// (publisher), the router's submit path (KV-aware pick), and the balancer
+/// (steal trigger).  Staleness is bounded by one engine step; the
+/// `channel_*` pair covers the gap between a submit and the replica's next
+/// intake, so a burst of submissions is visible to placement immediately.
+pub(crate) struct LoadCell {
+    /// Tokens per KV block (immutable; set at construction).
+    block_size: usize,
+    /// Sequences currently scheduled in the running batch.
+    in_flight: AtomicUsize,
+    /// KV blocks currently mapped.
+    kv_used_blocks: AtomicUsize,
+    /// KV blocks currently free.
+    kv_free_blocks: AtomicUsize,
+    /// Requests waiting in the engine's admission queue.
+    queued_requests: AtomicUsize,
+    /// Projected token demand of the engine's waiting queue.
+    queued_prompt_tokens: AtomicUsize,
+    /// Requests sent to the replica's channel but not yet taken in
+    /// (router/balancer adds, replica subtracts on intake).
+    channel_requests: AtomicUsize,
+    /// Projected token demand of the channel backlog.
+    channel_tokens: AtomicUsize,
+}
+
+impl LoadCell {
+    fn new(engine: &Engine) -> LoadCell {
+        let snap = engine.load_snapshot();
+        LoadCell {
+            block_size: engine.kv_block_size(),
+            in_flight: AtomicUsize::new(snap.in_flight),
+            kv_used_blocks: AtomicUsize::new(snap.kv_used_blocks),
+            kv_free_blocks: AtomicUsize::new(snap.kv_free_blocks),
+            queued_requests: AtomicUsize::new(snap.queued_requests),
+            queued_prompt_tokens: AtomicUsize::new(snap.queued_prompt_tokens),
+            channel_requests: AtomicUsize::new(0),
+            channel_tokens: AtomicUsize::new(0),
+        }
+    }
+
+    /// Replica thread: publish fresh engine-truth gauges.
+    fn publish(&self, snap: &ReplicaLoad) {
+        self.in_flight.store(snap.in_flight, Ordering::SeqCst);
+        self.kv_used_blocks.store(snap.kv_used_blocks, Ordering::SeqCst);
+        self.kv_free_blocks.store(snap.kv_free_blocks, Ordering::SeqCst);
+        self.queued_requests.store(snap.queued_requests, Ordering::SeqCst);
+        self.queued_prompt_tokens
+            .store(snap.queued_prompt_tokens, Ordering::SeqCst);
+    }
+
+    /// Router/balancer: a request was sent to the replica's channel.
+    fn on_enqueue(&self, req: &Request) {
+        self.channel_requests.fetch_add(1, Ordering::SeqCst);
+        self.channel_tokens
+            .fetch_add(projected_tokens(req), Ordering::SeqCst);
+    }
+
+    /// Undo [`LoadCell::on_enqueue`] (failed send, or replica intake).
+    fn on_dequeue(&self, req: &Request) {
+        self.channel_requests.fetch_sub(1, Ordering::SeqCst);
+        self.channel_tokens
+            .fetch_sub(projected_tokens(req), Ordering::SeqCst);
+    }
+
+    /// Queue depth the balancer sees: engine waiting + channel backlog.
+    fn queued_total(&self) -> usize {
+        self.queued_requests.load(Ordering::SeqCst)
+            + self.channel_requests.load(Ordering::SeqCst)
+    }
+
+    /// Projected free blocks after this replica absorbs its queued work,
+    /// channel backlog, and the candidate request.  Negative = projected
+    /// KV over-subscription (preemption thrash ahead).
+    fn kv_headroom(&self, candidate_tokens: usize) -> isize {
+        let free = self.kv_free_blocks.load(Ordering::SeqCst) as isize;
+        let backlog = self.queued_prompt_tokens.load(Ordering::SeqCst)
+            + self.channel_tokens.load(Ordering::SeqCst)
+            + candidate_tokens;
+        free - backlog.div_ceil(self.block_size) as isize
+    }
+
+    /// Snapshot the published gauges (channel backlog folded into the
+    /// queue fields so callers see the router-wide truth).
+    fn snapshot(&self) -> ReplicaLoad {
+        ReplicaLoad {
+            in_flight: self.in_flight.load(Ordering::SeqCst),
+            kv_used_blocks: self.kv_used_blocks.load(Ordering::SeqCst),
+            kv_free_blocks: self.kv_free_blocks.load(Ordering::SeqCst),
+            queued_requests: self.queued_total(),
+            queued_prompt_tokens: self.queued_prompt_tokens.load(Ordering::SeqCst)
+                + self.channel_tokens.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// One engine replica: channel + thread + in-flight counter + load gauges.
 struct Replica {
     tx: Sender<EngineMsg>,
     load: Arc<AtomicUsize>,
+    cell: Arc<LoadCell>,
     thread: Mutex<Option<JoinHandle<()>>>,
 }
 
@@ -131,11 +265,15 @@ fn forward_deltas(
 }
 
 /// A replica's engine thread: interleave request intake with engine steps
-/// so new arrivals join the continuous batch.
+/// so new arrivals join the continuous batch.  Publishes fresh load gauges
+/// into `cell` after every intake round and every step, so the router's
+/// KV-aware pick and the balancer's steal trigger see at-most-one-step-old
+/// truth.
 fn replica_loop(
     mut engine: Engine,
     rx: Receiver<EngineMsg>,
     load: Arc<AtomicUsize>,
+    cell: Arc<LoadCell>,
 ) {
     let mut pending: HashMap<u64, Sender<FinishedRequest>> = HashMap::new();
     let mut streams: HashMap<u64, Sender<StreamEvent>> = HashMap::new();
@@ -143,6 +281,7 @@ fn replica_loop(
     let mut consecutive_errors = 0u32;
     loop {
         // drain the message queue (blocking when idle, else non-blocking)
+        let mut took_msg = false;
         loop {
             let idle = engine.pending() == 0
                 && pending.is_empty()
@@ -165,12 +304,60 @@ fn replica_loop(
             };
             match msg {
                 EngineMsg::Submit(req, reply) => {
+                    cell.on_dequeue(&req);
                     pending.insert(req.id, reply);
                     engine.submit(req);
                 }
                 EngineMsg::SubmitStreaming(req, reply) => {
+                    cell.on_dequeue(&req);
                     streams.insert(req.id, reply);
                     engine.submit(req);
+                }
+                EngineMsg::SubmitStolen(batch) => {
+                    for (req, reply) in batch {
+                        cell.on_dequeue(&req);
+                        match reply {
+                            ReplyTo::Blocking(tx) => {
+                                pending.insert(req.id, tx);
+                            }
+                            ReplyTo::Streaming(tx) => {
+                                streams.insert(req.id, tx);
+                            }
+                        }
+                        engine.submit(req);
+                    }
+                }
+                EngineMsg::Steal(max, reply) => {
+                    let mut batch: Vec<(Request, ReplyTo)> = Vec::new();
+                    for req in engine.steal_waiting(max) {
+                        let rt = if let Some(tx) = pending.remove(&req.id) {
+                            ReplyTo::Blocking(tx)
+                        } else if let Some(tx) = streams.remove(&req.id) {
+                            ReplyTo::Streaming(tx)
+                        } else {
+                            // no registered waiter (should not happen):
+                            // keep the request local rather than lose it
+                            engine.submit(req);
+                            continue;
+                        };
+                        batch.push((req, rt));
+                    }
+                    if let Err(std::sync::mpsc::SendError(batch)) = reply.send(batch)
+                    {
+                        // balancer vanished mid-steal: nothing may be lost —
+                        // restore the waiters and keep the work local
+                        for (req, rt) in batch {
+                            match rt {
+                                ReplyTo::Blocking(tx) => {
+                                    pending.insert(req.id, tx);
+                                }
+                                ReplyTo::Streaming(tx) => {
+                                    streams.insert(req.id, tx);
+                                }
+                            }
+                            engine.submit(req);
+                        }
+                    }
                 }
                 EngineMsg::Metrics(quantiles, reply) => {
                     let _ = reply.send(engine.metrics.snapshot(&quantiles));
@@ -179,11 +366,21 @@ fn replica_loop(
                 EngineMsg::Abort => {
                     engine.abort_all();
                     deliver(&mut engine, &mut pending, &mut streams, &load);
+                    cell.publish(&engine.load_snapshot());
                     return;
                 }
             }
+            took_msg = true;
+        }
+        if took_msg {
+            // intake changed the queue; refresh the gauges before stepping
+            cell.publish(&engine.load_snapshot());
         }
         if engine.pending() > 0 {
+            // the report's post-step snapshot doubles as the publish, so
+            // the normal path pays the O(#waiting) scan only once (in
+            // apply); abnormal paths below re-snapshot explicitly
+            let mut published = false;
             let progressed = match engine.step_detailed() {
                 Ok(outcome) => {
                     consecutive_errors = 0;
@@ -191,6 +388,8 @@ fn replica_loop(
                         StepOutcome::Idle => false,
                         StepOutcome::Retry => true,
                         StepOutcome::Ran(report) => {
+                            cell.publish(&report.load);
+                            published = true;
                             forward_deltas(report, &mut streams);
                             true
                         }
@@ -232,9 +431,134 @@ fn replica_loop(
                     }
                 }
                 deliver(&mut engine, &mut pending, &mut streams, &load);
+                published = false; // aborts changed queue/KV state
+            }
+            if !published {
+                cell.publish(&engine.load_snapshot());
             }
         } else if draining {
             return;
+        }
+    }
+}
+
+/// How often the balancer re-examines the load cells while the fleet has
+/// work in flight.  Cheap (a handful of atomic loads per replica), so it
+/// can afford to be much finer than a round.
+const STEAL_POLL: Duration = Duration::from_micros(200);
+
+/// Balancer poll interval while the fleet is completely idle — no point
+/// burning 5k wake-ups/second on a server at zero traffic.  Worst-case
+/// added steal latency after an idle period is one of these.
+const STEAL_POLL_IDLE: Duration = Duration::from_millis(2);
+
+/// Minimum queued (not in-flight) requests on a replica before the
+/// balancer migrates work off it: a queue of one is the FCFS head and is
+/// about to run locally anyway.
+const STEAL_MIN_QUEUE: usize = 2;
+
+/// The balancer thread's per-replica handle (its own channel clone +
+/// shared counters; the router's `Replica` structs stay single-owner).
+struct BalancerView {
+    tx: Sender<EngineMsg>,
+    load: Arc<AtomicUsize>,
+    cell: Arc<LoadCell>,
+}
+
+/// Work-stealing balancer: poll the load cells; when a replica sits idle
+/// while a sibling has a queue, migrate untouched queued requests (and
+/// their reply channels) from the deepest queue to the idle replicas.
+/// Runs until the router stops it (always before drain/abort, so replica
+/// threads are guaranteed alive and responsive here).
+fn balancer_loop(
+    views: Vec<BalancerView>,
+    stop: Arc<AtomicBool>,
+    steals: Arc<AtomicU64>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        // fine-grained polling only while someone has work; idle fleets
+        // back off so the thread costs ~nothing at zero traffic
+        let busy = views
+            .iter()
+            .any(|v| v.load.load(Ordering::SeqCst) > 0);
+        std::thread::sleep(if busy { STEAL_POLL } else { STEAL_POLL_IDLE });
+        // idle replicas: nothing router-tracked at all (queued or running)
+        let idle: Vec<usize> = views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.load.load(Ordering::SeqCst) == 0)
+            .map(|(i, _)| i)
+            .collect();
+        if idle.is_empty() {
+            continue;
+        }
+        // victim: the deepest queue (engine waiting + channel backlog)
+        let Some((victim, depth)) = views
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (i, v.cell.queued_total()))
+            .max_by_key(|&(_, q)| q)
+        else {
+            continue;
+        };
+        if depth < STEAL_MIN_QUEUE {
+            continue;
+        }
+        // leave the victim its fair share of its own queue
+        let take = depth.div_ceil(idle.len() + 1).max(1);
+        for &thief in &idle {
+            if thief == victim {
+                continue;
+            }
+            let (btx, brx) = channel();
+            if views[victim].tx.send(EngineMsg::Steal(take, btx)).is_err() {
+                break;
+            }
+            let Ok(batch) = brx.recv() else { break };
+            if batch.is_empty() {
+                break; // nothing stealable (started seqs / head only)
+            }
+            let n = batch.len();
+            // in-flight accounting and channel projection migrate with
+            // the requests, so placement keeps seeing the truth
+            views[victim].load.fetch_sub(n, Ordering::SeqCst);
+            views[thief].load.fetch_add(n, Ordering::SeqCst);
+            for (req, _) in &batch {
+                views[thief].cell.on_enqueue(req);
+            }
+            if let Err(std::sync::mpsc::SendError(msg)) =
+                views[thief].tx.send(EngineMsg::SubmitStolen(batch))
+            {
+                // thief thread gone (it panicked — teardown always stops
+                // the balancer first): fully undo the thief-side
+                // accounting, then hand the still-servable batch back to
+                // the live victim so nothing is dropped
+                let EngineMsg::SubmitStolen(batch) = msg else {
+                    unreachable!("send returns the message it was given")
+                };
+                views[thief].load.fetch_sub(n, Ordering::SeqCst);
+                for (req, _) in &batch {
+                    views[thief].cell.on_dequeue(req);
+                }
+                views[victim].load.fetch_add(n, Ordering::SeqCst);
+                for (req, _) in &batch {
+                    views[victim].cell.on_enqueue(req);
+                }
+                if let Err(std::sync::mpsc::SendError(msg)) =
+                    views[victim].tx.send(EngineMsg::SubmitStolen(batch))
+                {
+                    // victim died too: undo and let the dropped reply
+                    // channels surface as errors at the callers
+                    views[victim].load.fetch_sub(n, Ordering::SeqCst);
+                    if let EngineMsg::SubmitStolen(batch) = msg {
+                        for (req, _) in &batch {
+                            views[victim].cell.on_dequeue(req);
+                        }
+                    }
+                }
+                break;
+            }
+            steals.fetch_add(n as u64, Ordering::SeqCst);
         }
     }
 }
@@ -243,38 +567,89 @@ fn replica_loop(
 pub struct EngineRouter {
     replicas: Vec<Replica>,
     policy: RoutePolicy,
+    steal: bool,
     rr_next: AtomicUsize,
     next_id: AtomicU64,
+    steals: Arc<AtomicU64>,
+    balancer_stop: Arc<AtomicBool>,
+    balancer: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl EngineRouter {
-    /// Spawn one serving thread per engine.  Panics on an empty replica
-    /// set (a router with nothing behind it cannot serve).
+    /// Spawn one serving thread per engine, work stealing disabled.
+    /// Panics on an empty replica set (a router with nothing behind it
+    /// cannot serve).
     pub fn new(engines: Vec<Engine>, policy: RoutePolicy) -> EngineRouter {
+        EngineRouter::with_options(engines, policy, false)
+    }
+
+    /// Spawn one serving thread per engine; with `steal` a balancer thread
+    /// also runs, migrating untouched queued requests from a backlogged
+    /// replica to an idle one (the drain-tail fix).  Stealing never changes
+    /// a request's output tokens — only never-run sequences migrate.
+    /// Panics on an empty replica set.
+    pub fn with_options(
+        engines: Vec<Engine>,
+        policy: RoutePolicy,
+        steal: bool,
+    ) -> EngineRouter {
         assert!(!engines.is_empty(), "EngineRouter needs >= 1 engine");
-        let replicas = engines
+        // a single replica has nobody to steal from: record the EFFECTIVE
+        // state so /health and stealing_enabled() never claim a balancer
+        // that does not exist
+        let steal = steal && engines.len() >= 2;
+        let replicas: Vec<Replica> = engines
             .into_iter()
             .enumerate()
             .map(|(i, engine)| {
                 let (tx, rx) = channel();
                 let load = Arc::new(AtomicUsize::new(0));
+                let cell = Arc::new(LoadCell::new(&engine));
                 let load_t = load.clone();
+                let cell_t = cell.clone();
                 let thread = std::thread::Builder::new()
                     .name(format!("dsde-replica-{i}"))
-                    .spawn(move || replica_loop(engine, rx, load_t))
+                    .spawn(move || replica_loop(engine, rx, load_t, cell_t))
                     .expect("spawn replica thread");
                 Replica {
                     tx,
                     load,
+                    cell,
                     thread: Mutex::new(Some(thread)),
                 }
             })
             .collect();
+        let steals = Arc::new(AtomicU64::new(0));
+        let balancer_stop = Arc::new(AtomicBool::new(false));
+        let balancer = if steal {
+            let views: Vec<BalancerView> = replicas
+                .iter()
+                .map(|r| BalancerView {
+                    tx: r.tx.clone(),
+                    load: r.load.clone(),
+                    cell: r.cell.clone(),
+                })
+                .collect();
+            let stop = balancer_stop.clone();
+            let stolen = steals.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("dsde-balancer".to_string())
+                    .spawn(move || balancer_loop(views, stop, stolen))
+                    .expect("spawn balancer thread"),
+            )
+        } else {
+            None
+        };
         EngineRouter {
             replicas,
             policy,
+            steal,
             rr_next: AtomicUsize::new(0),
             next_id: AtomicU64::new(0),
+            steals,
+            balancer_stop,
+            balancer: Mutex::new(balancer),
         }
     }
 
@@ -288,6 +663,17 @@ impl EngineRouter {
         self.policy
     }
 
+    /// Whether the work-stealing balancer is actually running (false on a
+    /// single-replica router even when stealing was requested).
+    pub fn stealing_enabled(&self) -> bool {
+        self.steal
+    }
+
+    /// Requests migrated between replicas by the balancer so far.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::SeqCst)
+    }
+
     /// Current in-flight request count per replica.
     pub fn loads(&self) -> Vec<usize> {
         self.replicas
@@ -296,13 +682,21 @@ impl EngineRouter {
             .collect()
     }
 
+    /// Per-replica load gauges (KV occupancy + queue pressure) as last
+    /// published by the replica threads, with the channel backlog folded
+    /// in — the data the KV-aware policy routes on.
+    pub fn replica_loads(&self) -> Vec<ReplicaLoad> {
+        self.replicas.iter().map(|r| r.cell.snapshot()).collect()
+    }
+
     /// Total in-flight requests across replicas.
     pub fn in_flight(&self) -> usize {
         self.loads().iter().sum()
     }
 
-    /// Pick a replica index for the next request.
-    fn pick(&self) -> usize {
+    /// Pick a replica index for a request with the given projected token
+    /// demand (prompt + output budget; only KvAware uses it).
+    fn pick(&self, candidate_tokens: usize) -> usize {
         match self.policy {
             RoutePolicy::RoundRobin => {
                 self.rr_next.fetch_add(1, Ordering::SeqCst) % self.replicas.len()
@@ -317,6 +711,26 @@ impl EngineRouter {
                 }
                 best
             }
+            RoutePolicy::KvAware => {
+                let mut best = 0usize;
+                let mut best_headroom = isize::MIN;
+                let mut best_load = usize::MAX;
+                for (i, r) in self.replicas.iter().enumerate() {
+                    let headroom = r.cell.kv_headroom(candidate_tokens);
+                    let load = r.load.load(Ordering::SeqCst);
+                    // most projected KV headroom wins; in-flight count
+                    // breaks ties (equal-KV replicas degrade to
+                    // least-loaded, e.g. uniform workloads)
+                    if headroom > best_headroom
+                        || (headroom == best_headroom && load < best_load)
+                    {
+                        best = i;
+                        best_headroom = headroom;
+                        best_load = load;
+                    }
+                }
+                best
+            }
         }
     }
 
@@ -325,14 +739,33 @@ impl EngineRouter {
     /// (any caller-provided id is overwritten).
     pub fn submit(&self, mut req: Request) -> Receiver<FinishedRequest> {
         req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
-        let idx = self.pick();
+        let idx = self.pick(projected_tokens(&req));
+        self.dispatch_to(idx, req)
+    }
+
+    /// Dispatch a request to a *specific* replica, bypassing the routing
+    /// policy (ids are still router-assigned).  For diagnostics, benches,
+    /// and imbalance tests — production traffic goes through
+    /// [`EngineRouter::submit`].
+    pub fn submit_to(&self, idx: usize, mut req: Request) -> Receiver<FinishedRequest> {
+        req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        self.dispatch_to(idx, req)
+    }
+
+    fn dispatch_to(&self, idx: usize, req: Request) -> Receiver<FinishedRequest> {
         let replica = &self.replicas[idx];
         let (rtx, rrx) = channel();
         replica.load.fetch_add(1, Ordering::SeqCst);
-        if replica.tx.send(EngineMsg::Submit(req, rtx)).is_err() {
-            // replica already shut down; undo the load count — the caller
+        replica.cell.on_enqueue(&req);
+        if let Err(std::sync::mpsc::SendError(msg)) =
+            replica.tx.send(EngineMsg::Submit(req, rtx))
+        {
+            // replica already shut down; undo the accounting — the caller
             // observes a closed reply channel
             replica.load.fetch_sub(1, Ordering::SeqCst);
+            if let EngineMsg::Submit(req, _) = msg {
+                replica.cell.on_dequeue(&req);
+            }
         }
         rrx
     }
@@ -345,16 +778,19 @@ impl EngineRouter {
     /// identical to [`EngineRouter::submit`].
     pub fn submit_streaming(&self, mut req: Request) -> Receiver<StreamEvent> {
         req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
-        let idx = self.pick();
+        let idx = self.pick(projected_tokens(&req));
         let replica = &self.replicas[idx];
         let (rtx, rrx) = channel();
         replica.load.fetch_add(1, Ordering::SeqCst);
-        if replica
+        replica.cell.on_enqueue(&req);
+        if let Err(std::sync::mpsc::SendError(msg)) = replica
             .tx
             .send(EngineMsg::SubmitStreaming(req, rtx))
-            .is_err()
         {
             replica.load.fetch_sub(1, Ordering::SeqCst);
+            if let EngineMsg::SubmitStreaming(req, _) = msg {
+                replica.cell.on_dequeue(&req);
+            }
         }
         rrx
     }
@@ -423,10 +859,12 @@ impl EngineRouter {
             0.0
         };
         let loads = self.loads();
+        let cells = self.replica_loads();
         let replicas: Vec<Json> = per
             .iter()
             .enumerate()
             .map(|(i, m)| {
+                let lc = cells.get(i).copied().unwrap_or_default();
                 Json::obj()
                     .set("replica", i)
                     .set("in_flight", *loads.get(i).unwrap_or(&0))
@@ -435,19 +873,36 @@ impl EngineRouter {
                     .set("throughput", m.throughput())
                     .set("busy_time", m.busy_time)
                     .set("preemptions", m.preemptions)
+                    .set("kv_used_blocks", lc.kv_used_blocks)
+                    .set("kv_free_blocks", lc.kv_free_blocks)
+                    .set("queued_requests", lc.queued_requests)
+                    .set("queued_prompt_tokens", lc.queued_prompt_tokens)
             })
             .collect();
         agg.to_json()
             .set("route_policy", self.policy.name())
             .set("replica_count", self.replicas.len())
+            .set("work_stealing", self.steal)
+            .set("steals", self.steals())
             .set("fleet_makespan", makespan)
             .set("fleet_throughput", fleet_throughput)
             .set("replicas", replicas)
     }
 
+    /// Stop the balancer (if running) and wait for it — always before
+    /// drain/abort so no steal can race a replica teardown.  Idempotent.
+    fn stop_balancer(&self) {
+        self.balancer_stop.store(true, Ordering::SeqCst);
+        let handle = self.balancer.lock().expect("balancer lock").take();
+        if let Some(t) = handle {
+            let _ = t.join();
+        }
+    }
+
     /// Graceful drain: every replica finishes its in-flight work (clients
     /// receive their completions), then the threads exit.  Idempotent.
     pub fn shutdown(&self) {
+        self.stop_balancer();
         for r in &self.replicas {
             let _ = r.tx.send(EngineMsg::Drain);
         }
@@ -456,6 +911,7 @@ impl EngineRouter {
 
     /// Hard stop: in-flight work is aborted (`FinishReason::Aborted`).
     pub fn abort(&self) {
+        self.stop_balancer();
         for r in &self.replicas {
             let _ = r.tx.send(EngineMsg::Abort);
         }
@@ -529,10 +985,10 @@ mod tests {
     #[test]
     fn round_robin_cycles_replicas() {
         let router = EngineRouter::new(sim_engines(3), RoutePolicy::RoundRobin);
-        assert_eq!(router.pick(), 0);
-        assert_eq!(router.pick(), 1);
-        assert_eq!(router.pick(), 2);
-        assert_eq!(router.pick(), 0);
+        assert_eq!(router.pick(24), 0);
+        assert_eq!(router.pick(24), 1);
+        assert_eq!(router.pick(24), 2);
+        assert_eq!(router.pick(24), 0);
         router.shutdown();
     }
 
@@ -541,9 +997,129 @@ mod tests {
         let router = EngineRouter::new(sim_engines(2), RoutePolicy::LeastLoaded);
         // manufacture imbalance: replica 0 busy with 3 in-flight
         router.replicas[0].load.store(3, Ordering::SeqCst);
-        assert_eq!(router.pick(), 1);
+        assert_eq!(router.pick(24), 1);
         router.replicas[0].load.store(0, Ordering::SeqCst);
         router.shutdown();
+    }
+
+    #[test]
+    fn kv_aware_prefers_replica_with_block_headroom() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::KvAware);
+        // manufacture KV pressure on replica 0: almost no free blocks
+        router.replicas[0]
+            .cell
+            .kv_free_blocks
+            .store(2, Ordering::SeqCst);
+        assert_eq!(router.pick(64), 1);
+        // flip it: replica 1 is the full one now
+        router.replicas[0]
+            .cell
+            .kv_free_blocks
+            .store(4096, Ordering::SeqCst);
+        router.replicas[1]
+            .cell
+            .kv_free_blocks
+            .store(2, Ordering::SeqCst);
+        assert_eq!(router.pick(64), 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn kv_aware_counts_queued_and_channel_backlog() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::KvAware);
+        // equal free blocks, but replica 0 has a deep projected queue
+        router.replicas[0]
+            .cell
+            .queued_prompt_tokens
+            .store(60_000, Ordering::SeqCst);
+        assert_eq!(router.pick(64), 1);
+        router.replicas[0]
+            .cell
+            .queued_prompt_tokens
+            .store(0, Ordering::SeqCst);
+        router.replicas[1]
+            .cell
+            .channel_tokens
+            .store(60_000, Ordering::SeqCst);
+        assert_eq!(router.pick(64), 0);
+        router.replicas[1].cell.channel_tokens.store(0, Ordering::SeqCst);
+        // all equal: tie breaks by in-flight count
+        router.replicas[0].load.store(2, Ordering::SeqCst);
+        assert_eq!(router.pick(64), 1);
+        router.replicas[0].load.store(0, Ordering::SeqCst);
+        router.shutdown();
+    }
+
+    #[test]
+    fn kv_aware_router_completes_everything() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::KvAware);
+        let rxs: Vec<_> = (0..10).map(|_| router.submit(req(8))).collect();
+        for rx in rxs {
+            let fin = rx.recv().expect("kv-aware routing must not drop work");
+            assert_eq!(fin.output.len(), 8);
+        }
+        assert_eq!(router.in_flight(), 0);
+        let agg = router.aggregated_metrics();
+        assert_eq!(agg.completed, 10);
+        router.shutdown();
+    }
+
+    #[test]
+    fn submit_to_targets_specific_replica() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::RoundRobin);
+        let rxs: Vec<_> = (0..4).map(|_| router.submit_to(1, req(6))).collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().output.len(), 6);
+        }
+        let per = router.replica_metrics();
+        assert_eq!(per[0].completed, 0, "replica 0 must stay untouched");
+        assert_eq!(per[1].completed, 4);
+        router.shutdown();
+    }
+
+    #[test]
+    fn work_stealing_rebalances_a_hot_replica() {
+        // all work lands on replica 0; the balancer must move some of the
+        // queue to idle replica 1, and nothing may be lost or duplicated.
+        // Whether a steal fires in time is wall-clock dependent (the sim
+        // burst races the 200µs balancer poll), so retry with fresh
+        // routers; the no-loss/no-dup invariants are asserted every
+        // attempt regardless.
+        let n = 24;
+        for attempt in 0..5 {
+            let router = EngineRouter::with_options(
+                sim_engines(2),
+                RoutePolicy::RoundRobin,
+                true,
+            );
+            let rxs: Vec<_> = (0..n).map(|_| router.submit_to(0, req(256))).collect();
+            let mut ids = Vec::new();
+            for rx in rxs {
+                let fin = rx.recv().expect("stolen or local, every request resolves");
+                assert_eq!(fin.reason, FinishReason::MaxTokens);
+                assert_eq!(fin.output.len(), 256);
+                ids.push(fin.id);
+            }
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), n, "no duplicate or lost completions");
+            assert_eq!(router.in_flight(), 0);
+            let stolen = router.steals();
+            let per = router.replica_metrics();
+            assert_eq!(per.iter().map(|m| m.completed).sum::<u64>(), n as u64);
+            router.shutdown();
+            if stolen > 0 {
+                assert!(
+                    per.iter().all(|m| m.completed > 0),
+                    "both replicas must execute stolen work: {:?}",
+                    per.iter().map(|m| m.completed).collect::<Vec<_>>()
+                );
+                return;
+            }
+            // burst drained before the balancer got scheduled; try again
+            eprintln!("attempt {attempt}: no steal fired, retrying");
+        }
+        panic!("balancer never migrated work across 5 hot-replica bursts");
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! Property/fuzz tests for the paged [`KvCache`]: randomized
+//! `ensure`/`trim`/`release` traffic (seeded xoshiro256++ `Rng` — the
+//! repo's offline stand-in for `StdRng`) with a shadow-model oracle,
+//! asserting `check_invariants()` after every single op and that `ensure`
+//! returns `Oom` **iff** the blocks it would need to grow by exceed the
+//! free pool — with state untouched on failure.
+//!
+//! The fast trace runs in tier-1; the wide multi-geometry sweep is
+//! `#[ignore]`d and runs in the CI soak lane
+//! (`cargo test --release -- --ignored`).
+
+use dsde::engine::kv_cache::{KvCache, Oom};
+use dsde::util::rng::Rng;
+
+/// Drive `ops` random operations against a `total_blocks`×`block_size`
+/// cache, checking the Oom oracle and the global invariants at every step.
+fn run_trace(seed: u64, ops: usize, total_blocks: usize, block_size: usize) {
+    let mut rng = Rng::new(seed);
+    let mut kv = KvCache::new(total_blocks, block_size);
+    let ids: u64 = 8; // small id space so ops collide on live sequences
+    let max_tokens = total_blocks * block_size * 2; // over-ask sometimes
+    for step in 0..ops {
+        let id = rng.range(0, ids as usize) as u64;
+        let tokens = rng.range(0, max_tokens + 1);
+        let op = rng.range(0, 10);
+        let ctx = || format!("seed {seed} step {step} id {id} tokens {tokens}");
+        match op {
+            // ensure dominates the mix: it is the only fallible op
+            0..=5 => {
+                let have = kv.table(id).len();
+                let free = kv.free_blocks();
+                let need = tokens.div_ceil(block_size);
+                let grow = need.saturating_sub(have);
+                let expect_oom = grow > free;
+                match kv.ensure(id, tokens) {
+                    Ok(()) => {
+                        assert!(!expect_oom, "ensure succeeded under oom: {}", ctx());
+                        assert_eq!(
+                            kv.table(id).len(),
+                            need.max(have),
+                            "table must grow to demand, never shrink: {}",
+                            ctx()
+                        );
+                        assert_eq!(kv.free_blocks(), free - grow, "{}", ctx());
+                    }
+                    Err(err) => {
+                        assert!(expect_oom, "spurious oom: {err:?} {}", ctx());
+                        assert_eq!(
+                            err,
+                            Oom {
+                                requested: grow,
+                                free
+                            },
+                            "{}",
+                            ctx()
+                        );
+                        // failed allocation must not move anything
+                        assert_eq!(kv.table(id).len(), have, "{}", ctx());
+                        assert_eq!(kv.free_blocks(), free, "{}", ctx());
+                    }
+                }
+            }
+            6..=7 => {
+                let have = kv.table(id).len();
+                let free = kv.free_blocks();
+                let need = tokens.div_ceil(block_size);
+                kv.trim(id, tokens);
+                let kept = have.min(need);
+                assert_eq!(kv.table(id).len(), kept);
+                assert_eq!(kv.free_blocks(), free + (have - kept));
+            }
+            _ => {
+                let have = kv.table(id).len();
+                let free = kv.free_blocks();
+                kv.release(id);
+                assert_eq!(kv.table(id).len(), 0);
+                assert_eq!(kv.free_blocks(), free + have);
+            }
+        }
+        if let Err(e) = kv.check_invariants() {
+            panic!("invariant broken: {e} ({})", ctx());
+        }
+    }
+    // terminal: releasing everything returns the cache to pristine
+    for id in 0..ids {
+        kv.release(id);
+    }
+    assert_eq!(kv.free_blocks(), total_blocks, "seed {seed}: blocks leaked");
+    kv.check_invariants().unwrap();
+}
+
+#[test]
+fn random_traffic_keeps_invariants_fast() {
+    // tier-1 lane: quick but real coverage
+    for seed in [1u64, 2, 3] {
+        run_trace(seed, 2_000, 32, 16);
+    }
+}
+
+#[test]
+fn oom_boundary_is_exact() {
+    // deterministic edge: fill to exactly full, then ask for one more
+    let mut kv = KvCache::new(4, 8);
+    kv.ensure(1, 32).unwrap(); // 4 blocks, exactly full
+    assert_eq!(kv.free_blocks(), 0);
+    kv.ensure(1, 32).unwrap(); // idempotent at capacity
+    let err = kv.ensure(1, 33).unwrap_err(); // needs a 5th block
+    assert_eq!(err, Oom { requested: 1, free: 0 });
+    let err = kv.ensure(2, 1).unwrap_err(); // any new seq is one block
+    assert_eq!(err, Oom { requested: 1, free: 0 });
+    kv.trim(1, 25); // still 4 blocks (25 tokens -> 4 blocks of 8)
+    assert_eq!(kv.free_blocks(), 0);
+    kv.trim(1, 24); // 3 blocks: one frees
+    assert_eq!(kv.free_blocks(), 1);
+    kv.ensure(2, 8).unwrap(); // and is immediately reusable
+    kv.check_invariants().unwrap();
+}
+
+#[test]
+fn zero_token_ensure_allocates_nothing() {
+    let mut kv = KvCache::new(2, 16);
+    kv.ensure(1, 0).unwrap();
+    assert_eq!(kv.table(1).len(), 0);
+    assert_eq!(kv.free_blocks(), 2);
+    kv.trim(1, 0);
+    kv.release(1);
+    kv.check_invariants().unwrap();
+}
+
+/// Soak lane (`--ignored`): ~10k ops per trace across many seeds and
+/// geometries, including a 1-block pathological cache and a large pool.
+#[test]
+#[ignore = "soak: long randomized sweep, run with cargo test --release -- --ignored"]
+fn random_traffic_keeps_invariants_soak() {
+    for seed in 0u64..8 {
+        run_trace(seed, 10_000, 32, 16);
+        run_trace(seed ^ 0xBEEF, 10_000, 1, 4);
+        run_trace(seed ^ 0xCAFE, 10_000, 257, 3);
+        run_trace(seed ^ 0xF00D, 10_000, 1024, 64);
+    }
+}

@@ -1,0 +1,235 @@
+//! Deterministic multi-replica placement soak (`#[ignore]`d — the CI
+//! `soak` lane runs these with `cargo test --release -- --ignored`).
+//!
+//! Placement bugs are silent: everything still completes, just slowly, or
+//! with corrupted outputs nobody diffs.  These tests drive large seeded
+//! workloads through every routing policy, with and without work
+//! stealing, and assert the load-bearing guarantee end-to-end: **placement
+//! never changes generation results**.  The sim substrate draws each
+//! sequence's tokens from RNG streams keyed by (model seed, request id),
+//! and all replicas share one model seed here, so any divergence across
+//! policies/steal settings/reruns is a real placement bug (lost, duplicated,
+//! or migrated-with-state requests), not noise.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use dsde::config::{EngineConfig, RoutePolicy, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::engine::request::{FinishReason, Request, SamplingParams};
+use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::server::router::EngineRouter;
+use dsde::sim::regime::DatasetProfile;
+use dsde::util::rng::Rng;
+
+/// Replica set with an IDENTICAL model seed on every replica: generation
+/// is then a pure function of the router-assigned request id, so placement
+/// cannot change any output.
+fn same_seed_engines(n: usize, seed: u64, kv_blocks: usize) -> Vec<Engine> {
+    (0..n)
+        .map(|_| {
+            let cfg = EngineConfig {
+                max_batch: 4,
+                max_len: 4096,
+                policy: SlPolicyKind::Static(4),
+                kv_blocks,
+                seed,
+                ..Default::default()
+            };
+            let model =
+                SimModel::new(SimPairKind::LlamaLike, DatasetProfile::sharegpt(), seed);
+            Engine::new(cfg, Box::new(model))
+        })
+        .collect()
+}
+
+/// Seeded mixed-size workload (short chats through long documents).
+fn workload(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let prompt = rng.range(8, 220);
+            let out = rng.range(1, 120);
+            Request::new(
+                0,
+                vec![65; prompt],
+                SamplingParams {
+                    max_tokens: out,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect()
+}
+
+/// Run one full soak pass; returns the id → output-token map.
+fn run_pass(
+    policy: RoutePolicy,
+    steal: bool,
+    n: usize,
+    workload_seed: u64,
+) -> HashMap<u64, Vec<u32>> {
+    let router =
+        EngineRouter::with_options(same_seed_engines(4, 99, 4096), policy, steal);
+    let rxs: Vec<_> = workload(n, workload_seed)
+        .into_iter()
+        .map(|r| router.submit(r))
+        .collect();
+    let mut out: HashMap<u64, Vec<u32>> = HashMap::new();
+    for rx in rxs {
+        let fin = rx.recv().expect("soak request must complete");
+        assert_eq!(fin.reason, FinishReason::MaxTokens);
+        assert!(
+            out.insert(fin.id, fin.output).is_none(),
+            "request id {} completed twice",
+            fin.id
+        );
+    }
+    assert_eq!(out.len(), n);
+    assert_eq!(router.in_flight(), 0);
+    let agg = router.aggregated_metrics();
+    assert_eq!(agg.completed, n as u64, "router lost completions");
+    router.shutdown();
+    out
+}
+
+#[test]
+#[ignore = "soak: ~2k requests across policies, run with cargo test --release -- --ignored"]
+fn cross_policy_soak_outputs_identical() {
+    let n = 400;
+    let baseline = run_pass(RoutePolicy::RoundRobin, false, n, 7);
+    for (policy, steal) in [
+        (RoutePolicy::RoundRobin, true),
+        (RoutePolicy::LeastLoaded, false),
+        (RoutePolicy::LeastLoaded, true),
+        (RoutePolicy::KvAware, false),
+        (RoutePolicy::KvAware, true),
+    ] {
+        let pass = run_pass(policy, steal, n, 7);
+        assert_eq!(pass.len(), baseline.len());
+        for (id, tokens) in &baseline {
+            assert_eq!(
+                pass.get(id),
+                Some(tokens),
+                "{policy:?}/steal={steal} changed the output of request {id}"
+            );
+        }
+    }
+    // and a bitwise-identical rerun: steal timing may differ, outputs may not
+    assert_eq!(run_pass(RoutePolicy::KvAware, true, n, 7), baseline);
+}
+
+#[test]
+#[ignore = "soak: tight-KV preemption churn, run with cargo test --release -- --ignored"]
+fn kv_pressure_soak_outputs_identical() {
+    // tight KV forces admission stalls and preemptions; placement and
+    // preemption churn still must not leak into outputs
+    let n = 200;
+    let run = |policy| {
+        let router =
+            EngineRouter::with_options(same_seed_engines(2, 41, 64), policy, true);
+        let rxs: Vec<_> = workload(n, 13)
+            .into_iter()
+            .map(|r| router.submit(r))
+            .collect();
+        let mut out = HashMap::new();
+        for rx in rxs {
+            let fin = rx.recv().expect("request must complete under pressure");
+            out.insert(fin.id, fin.output);
+        }
+        router.shutdown();
+        out
+    };
+    let a = run(RoutePolicy::LeastLoaded);
+    let b = run(RoutePolicy::KvAware);
+    assert_eq!(a, b, "KV pressure must not make placement observable");
+}
+
+#[test]
+#[ignore = "soak: concurrent submit/steal/drain, run with cargo test --release -- --ignored"]
+fn concurrent_submit_steal_drain_loses_nothing() {
+    // 8 submitter threads hammer a stealing router, deliberately piling
+    // half the traffic onto replica 0 so the balancer keeps migrating
+    // underneath them; total completions must equal total submissions with
+    // globally unique ids
+    let router = Arc::new(EngineRouter::with_options(
+        same_seed_engines(3, 5, 4096),
+        RoutePolicy::RoundRobin,
+        true,
+    ));
+    let seen: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+    let per_thread = 40usize;
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            let router = router.clone();
+            let seen = seen.clone();
+            std::thread::spawn(move || {
+                let reqs = workload(per_thread, 100 + t as u64);
+                let rxs: Vec<_> = reqs
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        if i % 2 == 0 {
+                            router.submit_to(0, r) // manufacture imbalance
+                        } else {
+                            router.submit(r)
+                        }
+                    })
+                    .collect();
+                let mut done = 0usize;
+                for rx in rxs {
+                    let fin = rx.recv().expect("no request may be dropped");
+                    assert_eq!(fin.reason, FinishReason::MaxTokens);
+                    assert!(
+                        seen.lock().unwrap().insert(fin.id),
+                        "request id {} delivered twice",
+                        fin.id
+                    );
+                    done += 1;
+                }
+                done
+            })
+        })
+        .collect();
+    let total: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    assert_eq!(total, 8 * per_thread);
+    assert_eq!(seen.lock().unwrap().len(), 8 * per_thread);
+    assert_eq!(router.in_flight(), 0);
+    let agg = router.aggregated_metrics();
+    assert_eq!(agg.completed, (8 * per_thread) as u64);
+    router.shutdown();
+}
+
+#[test]
+#[ignore = "soak: abort under concurrent steal, run with cargo test --release -- --ignored"]
+fn abort_under_stealing_resolves_every_request() {
+    // every submitted request resolves exactly once even when the router
+    // is hard-aborted while the balancer is mid-migration
+    let router = Arc::new(EngineRouter::with_options(
+        same_seed_engines(2, 9, 4096),
+        RoutePolicy::RoundRobin,
+        true,
+    ));
+    let n = 64usize;
+    let rxs: Vec<_> = workload(n, 21)
+        .into_iter()
+        .map(|r| router.submit_to(0, r)) // deep queue: stealing mid-flight
+        .collect();
+    // let some work start (and some steals happen), then pull the plug
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    router.abort();
+    let mut resolved = 0usize;
+    let mut ids = HashSet::new();
+    for rx in rxs {
+        let fin = rx.recv().expect("abort must still resolve every request");
+        assert!(
+            matches!(fin.reason, FinishReason::Aborted | FinishReason::MaxTokens),
+            "unexpected finish reason {:?}",
+            fin.reason
+        );
+        assert!(ids.insert(fin.id), "request id {} resolved twice", fin.id);
+        resolved += 1;
+    }
+    assert_eq!(resolved, n);
+    assert_eq!(router.in_flight(), 0);
+}
