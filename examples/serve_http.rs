@@ -8,10 +8,11 @@
 //! ```bash
 //! cargo run --release --offline --example serve_http -- [--pjrt] \
 //!     [--requests 24] [--concurrency 6] [--replicas 2] \
-//!     [--route least-loaded|kv-aware] [--no-steal]
+//!     [--route least-loaded|kv-aware] [--no-steal] \
+//!     [--frontend threaded|event-loop]
 //! ```
 
-use dsde::config::{CapMode, EngineConfig, RoutePolicy, SlPolicyKind};
+use dsde::config::{CapMode, EngineConfig, FrontendKind, RoutePolicy, SlPolicyKind};
 use dsde::engine::engine::Engine;
 use dsde::model::pjrt_lm::PjrtModel;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
@@ -33,6 +34,8 @@ fn main() -> anyhow::Result<()> {
     let route = RoutePolicy::parse(&args.str_or("route", "round-robin"))
         .ok_or_else(|| anyhow::anyhow!("unknown route policy"))?;
     let steal = !args.flag("no-steal");
+    let frontend = FrontendKind::parse(&args.str_or("frontend", "threaded"))
+        .ok_or_else(|| anyhow::anyhow!("unknown front-end (threaded | event-loop)"))?;
     let use_pjrt = args.flag("pjrt");
 
     let engines: Vec<Engine> = (0..replicas)
@@ -67,13 +70,18 @@ fn main() -> anyhow::Result<()> {
         .collect::<anyhow::Result<_>>()?;
 
     let router = EngineRouter::with_options(engines, route, steal);
-    let handle = http::serve_router(router, "127.0.0.1:0")?;
+    let opts = http::ServeOptions {
+        frontend,
+        ..Default::default()
+    };
+    let handle = http::serve_router_with(router, "127.0.0.1:0", opts)?;
     let addr = handle.addr.to_string();
     println!(
         "server up at http://{addr} (pjrt={use_pjrt}, replicas={replicas}, \
-         route={}, steal={})",
+         route={}, steal={}, frontend={})",
         route.name(),
-        handle.router().stealing_enabled()
+        handle.router().stealing_enabled(),
+        frontend.name()
     );
 
     // closed-loop load
@@ -133,6 +141,14 @@ fn main() -> anyhow::Result<()> {
         handle.router().policy().name(),
         if handle.router().stealing_enabled() { "on" } else { "off" },
         handle.router().steals(),
+    );
+    let fs = handle.frontend_stats();
+    println!(
+        "frontend={}  connections accepted={} rejected={} open={}",
+        fs.kind().name(),
+        fs.accepted(),
+        fs.rejected(),
+        fs.open(),
     );
     handle.shutdown();
     Ok(())

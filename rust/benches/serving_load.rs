@@ -16,13 +16,26 @@
 //! throughput grows monotonically with replica count (virtual-time
 //! makespan shrinks as the fixed workload spreads over more replicas).
 //!
+//! The front-end concurrency-scaling section drives hundreds to 1k+
+//! *concurrent streaming clients* against a live HTTP server, comparing
+//! the thread-per-connection front-end with the poll-based event loop:
+//! same engine work either way, but the threaded front-end pays one
+//! parked thread per open stream while the event loop serves the whole
+//! set from a single loop thread.
+//!
 //! ```bash
-//! cargo bench --bench serving_load -- [--replicas 1,2,4] [--requests 96]
+//! cargo bench --bench serving_load -- [--replicas 1,2,4] [--requests 96] \
+//!     [--stream-clients 64,256,1024] [--smoke]
 //! ```
+//!
+//! `--smoke` shrinks every section to seconds of runtime — the CI
+//! bench-bitrot guard runs it on every push.
 
-use dsde::config::{CapMode, EngineConfig, RoutePolicy, SlPolicyKind};
+use dsde::config::{CapMode, EngineConfig, FrontendKind, RoutePolicy, SlPolicyKind};
 use dsde::engine::engine::Engine;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::server::client;
+use dsde::server::http::{serve_router_with, ServeOptions};
 use dsde::server::router::{EngineRouter, StreamEvent};
 use dsde::sim::regime::DatasetProfile;
 use dsde::spec::adapter::DsdeConfig;
@@ -272,10 +285,73 @@ fn drain_tail(steal: bool, n_total: usize) -> (f64, f64, u64) {
     (wall, makespan, steals)
 }
 
+/// Drive `clients` concurrent streaming completions against a live
+/// 2-replica HTTP server behind the given front-end; returns (wall
+/// seconds, client TTFT p50, client TTFT p99, completed count).
+fn frontend_scaling(kind: FrontendKind, clients: usize, tokens: usize) -> (f64, f64, f64, usize) {
+    let engines: Vec<Engine> = (0..2)
+        .map(|i| {
+            let seed = 23 + i as u64;
+            let cfg = EngineConfig {
+                max_batch: 64,
+                max_len: 4096,
+                policy: SlPolicyKind::Dsde(DsdeConfig::default()),
+                cap_mode: CapMode::Mean,
+                kv_blocks: 65536,
+                seed,
+                ..Default::default()
+            };
+            let model =
+                SimModel::new(SimPairKind::LlamaLike, DatasetProfile::sharegpt(), seed);
+            Engine::new(cfg, Box::new(model))
+        })
+        .collect();
+    let router = EngineRouter::new(engines, RoutePolicy::RoundRobin);
+    let handle = serve_router_with(
+        router,
+        "127.0.0.1:0",
+        ServeOptions {
+            frontend: kind,
+            ..Default::default()
+        },
+    )
+    .expect("bind bench server");
+    let addr = handle.addr.to_string();
+    let t0 = std::time::Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                client::complete_streaming(&addr, &format!("load probe {i}"), tokens, 0.0)
+                    .map(|r| r.ttft_s)
+                    .ok()
+            })
+        })
+        .collect();
+    let mut ttfts = Vec::new();
+    for t in threads {
+        if let Some(v) = t.join().unwrap_or(None) {
+            ttfts.push(v);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    handle.shutdown();
+    (
+        wall,
+        percentile(&ttfts, 0.5),
+        percentile(&ttfts, 0.99),
+        ttfts.len(),
+    )
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let replica_counts = args.usize_list_or("replicas", &[1, 2, 4]);
-    let n_total = args.usize_or("requests", 96);
+    // --smoke: seconds-scale parameters for the CI bench-bitrot guard
+    let smoke = args.flag("smoke");
+    let replica_counts = args.usize_list_or("replicas", if smoke { &[1, 2] } else { &[1, 2, 4] });
+    let n_total = args.usize_or("requests", if smoke { 12 } else { 96 });
+    let ol_requests = if smoke { 8 } else { 64 };
+    let ol_rates: &[f64] = if smoke { &[0.5, 2.0] } else { &[0.2, 0.5, 1.0, 2.0] };
 
     println!("== open-loop serving: Poisson arrivals, ShareGPT profile, batch 16 ==\n");
     let mut table = Table::new(&[
@@ -287,13 +363,13 @@ fn main() {
         "static-4 goodput",
         "dsde+cap goodput",
     ]);
-    for rate in [0.2, 0.5, 1.0, 2.0] {
-        let s = open_loop(SlPolicyKind::Static(4), CapMode::None, rate, 64, 7);
+    for &rate in ol_rates {
+        let s = open_loop(SlPolicyKind::Static(4), CapMode::None, rate, ol_requests, 7);
         let d = open_loop(
             SlPolicyKind::Dsde(DsdeConfig::default()),
             CapMode::Mean,
             rate,
-            64,
+            ol_requests,
             7,
         );
         table.row(&[
@@ -355,7 +431,7 @@ fn main() {
     );
 
     println!("\n== token streaming through the router (1 replica) ==\n");
-    let (deltas_per_req, ttft, lat) = streaming_smoke(8);
+    let (deltas_per_req, ttft, lat) = streaming_smoke(if smoke { 4 } else { 8 });
     println!("deltas/request : {deltas_per_req:.1}");
     println!("mean ttft      : {ttft:.3} virtual s");
     println!("mean latency   : {lat:.3} virtual s");
@@ -379,8 +455,9 @@ fn main() {
         "p99 latency (s)",
         "preemptions",
     ]);
-    let ll = placement_skewed(RoutePolicy::LeastLoaded, 96);
-    let kv = placement_skewed(RoutePolicy::KvAware, 96);
+    let placement_n = if smoke { 16 } else { 96 };
+    let ll = placement_skewed(RoutePolicy::LeastLoaded, placement_n);
+    let kv = placement_skewed(RoutePolicy::KvAware, placement_n);
     for (name, r) in [("least-loaded", &ll), ("kv-aware", &kv)] {
         place_table.row(&[
             name.to_string(),
@@ -409,8 +486,9 @@ fn main() {
         "fleet makespan (virtual s)",
         "requests migrated",
     ]);
-    let (wall_off, mk_off, _) = drain_tail(false, 24);
-    let (wall_on, mk_on, migrated) = drain_tail(true, 24);
+    let drain_n = if smoke { 8 } else { 24 };
+    let (wall_off, mk_off, _) = drain_tail(false, drain_n);
+    let (wall_on, mk_on, migrated) = drain_tail(true, drain_n);
     steal_table.row(&[
         "off".into(),
         format!("{wall_off:.3}"),
@@ -429,5 +507,46 @@ fn main() {
          the fleet makespan (on {mk_on:.1}s < off {mk_off:.1}s with \
          {migrated} migrated: {}).",
         if mk_on < mk_off && migrated > 0 { "holds" } else { "DOES NOT hold" }
+    );
+
+    println!(
+        "\n== front-end concurrency scaling: concurrent streaming clients \
+         over live HTTP, threaded vs event-loop (2 replicas) ==\n"
+    );
+    let client_counts = args.usize_list_or(
+        "stream-clients",
+        if smoke { &[16] } else { &[64, 256, 1024] },
+    );
+    let stream_tokens = if smoke { 8 } else { 32 };
+    let mut fe_table = Table::new(&[
+        "clients",
+        "threaded wall (s)",
+        "threaded ttft p50/p99 (s)",
+        "event-loop wall (s)",
+        "event-loop ttft p50/p99 (s)",
+        "completed (t / e)",
+    ]);
+    let mut all_completed = true;
+    for &c in &client_counts {
+        let (tw, tp50, tp99, tn) = frontend_scaling(FrontendKind::Threaded, c, stream_tokens);
+        let (ew, ep50, ep99, en) = frontend_scaling(FrontendKind::EventLoop, c, stream_tokens);
+        all_completed &= tn == c && en == c;
+        fe_table.row(&[
+            format!("{c}"),
+            format!("{tw:.2}"),
+            format!("{tp50:.3} / {tp99:.3}"),
+            format!("{ew:.2}"),
+            format!("{ep50:.3} / {ep99:.3}"),
+            format!("{tn} / {en}"),
+        ]);
+    }
+    fe_table.print();
+    println!(
+        "\nshape check: every client completed on both front-ends ({}); the \
+         threaded front-end parks one OS thread per open stream while the \
+         event loop serves the same set from a single loop thread — at the \
+         1k+ point that is the difference between ~1k blocked threads and \
+         one poll set.",
+        if all_completed { "holds" } else { "DOES NOT hold" }
     );
 }

@@ -185,9 +185,48 @@ impl RoutePolicy {
     }
 }
 
-/// Multi-replica serving configuration (the `--replicas` / `--route` CLI
-/// surface): how many engine replicas the router owns and how it picks one
-/// per request.  Each replica gets its own model instance, KV cache, and
+/// Which HTTP front-end drives connections (the `--frontend` CLI
+/// surface).  Both serve the same endpoints with byte-identical
+/// responses; they differ in how concurrency is paid for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FrontendKind {
+    /// One thread per TCP connection, blocking I/O.  Simple; a streaming
+    /// response pins its thread for the stream's lifetime, so concurrency
+    /// is thread-bound.
+    #[default]
+    Threaded,
+    /// All connections multiplexed on one poll-based loop thread with
+    /// nonblocking sockets and a self-pipe waker: concurrency costs
+    /// sockets and KV blocks, not threads.
+    EventLoop,
+}
+
+impl FrontendKind {
+    /// Parse CLI shorthand: `threaded`/`thread`, or
+    /// `event-loop`/`eventloop`/`poll`.
+    pub fn parse(s: &str) -> Option<FrontendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "threaded" | "thread" | "threads" => Some(FrontendKind::Threaded),
+            "event-loop" | "eventloop" | "event_loop" | "poll" => {
+                Some(FrontendKind::EventLoop)
+            }
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase wire/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrontendKind::Threaded => "threaded",
+            FrontendKind::EventLoop => "event-loop",
+        }
+    }
+}
+
+/// Multi-replica serving configuration (the `--replicas` / `--route` /
+/// `--frontend` CLI surface): how many engine replicas the router owns,
+/// how it picks one per request, and which HTTP front-end faces the
+/// clients.  Each replica gets its own model instance, KV cache, and
 /// scheduler thread.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RouterConfig {
@@ -200,6 +239,8 @@ pub struct RouterConfig {
     /// migrates queued requests to the idle replica.  No-op with a single
     /// replica.
     pub steal: bool,
+    /// Which HTTP front-end faces the clients.
+    pub frontend: FrontendKind,
 }
 
 impl Default for RouterConfig {
@@ -208,6 +249,7 @@ impl Default for RouterConfig {
             replicas: 1,
             policy: RoutePolicy::RoundRobin,
             steal: true,
+            frontend: FrontendKind::Threaded,
         }
     }
 }
@@ -230,6 +272,7 @@ impl RouterConfig {
             .set("replicas", self.replicas)
             .set("route", self.policy.name())
             .set("steal", self.steal)
+            .set("frontend", self.frontend.name())
     }
 }
 
@@ -318,6 +361,20 @@ mod tests {
         let s = RouterConfig::default().to_json().to_string();
         assert!(s.contains("\"route\":\"round-robin\""));
         assert!(s.contains("\"steal\":true"));
+        assert!(s.contains("\"frontend\":\"threaded\""));
+    }
+
+    #[test]
+    fn frontend_kind_parse() {
+        assert_eq!(FrontendKind::parse("threaded"), Some(FrontendKind::Threaded));
+        assert_eq!(
+            FrontendKind::parse("event-loop"),
+            Some(FrontendKind::EventLoop)
+        );
+        assert_eq!(FrontendKind::parse("POLL"), Some(FrontendKind::EventLoop));
+        assert_eq!(FrontendKind::parse("nope"), None);
+        assert_eq!(FrontendKind::EventLoop.name(), "event-loop");
+        assert_eq!(FrontendKind::default(), FrontendKind::Threaded);
     }
 
     #[test]

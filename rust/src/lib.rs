@@ -12,7 +12,9 @@
 //!   SL-Adapter (KLD-variance / WVIR signal) plus the adaptive
 //!   [`spec::cap`] SL-cap for the straggler problem.  On top sits the
 //!   [`server`] layer: a multi-replica router and an HTTP/1.1 front-end
-//!   with blocking and token-streaming completions.
+//!   with blocking and token-streaming completions, selectable between a
+//!   thread-per-connection and a poll-based event-loop implementation
+//!   (`--frontend`), byte-identical either way.
 //! * **L2/L1 (build-time python)** — a tiny transformer pair with Pallas
 //!   kernels, AOT-lowered to HLO text artifacts loaded by [`runtime`].
 //!
@@ -25,6 +27,9 @@ pub mod engine;
 pub mod server;
 pub mod spec;
 
+pub mod util;
+pub mod workload;
+
 // Modules below predate the crate-wide `missing_docs` lint; their public
 // surfaces are documented opportunistically (ROADMAP: finish the sweep).
 #[allow(missing_docs)]
@@ -35,15 +40,12 @@ pub mod repro;
 pub mod runtime;
 #[allow(missing_docs)]
 pub mod sim;
-#[allow(missing_docs)]
-pub mod util;
-#[allow(missing_docs)]
-pub mod workload;
 
 /// Convenience re-exports for examples and binaries.
 pub mod prelude {
     pub use crate::config::{
-        AdapterConfig, CapMode, EngineConfig, RoutePolicy, RouterConfig, SlPolicyKind,
+        AdapterConfig, CapMode, EngineConfig, FrontendKind, RoutePolicy, RouterConfig,
+        SlPolicyKind,
     };
     pub use crate::engine::engine::{Engine, StepOutcome};
     pub use crate::engine::metrics::{EngineMetrics, MetricsSnapshot, RequestMetrics};

@@ -9,13 +9,15 @@
 
 use anyhow::Result;
 
-use dsde::config::{CapMode, EngineConfig, RoutePolicy, RouterConfig, SlPolicyKind};
+use dsde::config::{
+    CapMode, EngineConfig, FrontendKind, RoutePolicy, RouterConfig, SlPolicyKind,
+};
 use dsde::engine::engine::Engine;
 use dsde::model::pjrt_lm::PjrtModel;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::model::traits::{SeqInput, SpecModel};
 use dsde::runtime::artifacts::{DraftKind, Manifest};
-use dsde::server::http::serve_router;
+use dsde::server::http::{serve_router_with, ServeOptions};
 use dsde::server::router::EngineRouter;
 use dsde::sim::regime::DatasetProfile;
 use dsde::util::cli::{usage, Args, FlagSpec};
@@ -29,6 +31,7 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "replicas", help: "engine replicas behind the router (serve)", default: Some("1") },
     FlagSpec { name: "route", help: "round-robin | least-loaded | kv-aware (serve)", default: Some("round-robin") },
     FlagSpec { name: "steal", help: "drain-tail work stealing on|off (serve)", default: Some("on") },
+    FlagSpec { name: "frontend", help: "threaded | event-loop (serve)", default: Some("threaded") },
     FlagSpec { name: "cap", help: "none | mean | median | p90", default: Some("mean") },
     FlagSpec { name: "batch", help: "max batch size", default: Some("8") },
     FlagSpec { name: "dataset", help: "cnndm|xsum|gsm8k|hotpotqa|nq|humaneval|sharegpt|wmt14", default: Some("cnndm") },
@@ -64,10 +67,13 @@ fn router_config(args: &Args) -> Result<RouterConfig> {
         "off" | "false" | "0" => false,
         other => return Err(anyhow::anyhow!("unknown --steal value {other} (on|off)")),
     };
+    let frontend = FrontendKind::parse(&args.str_or("frontend", "threaded"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --frontend value (threaded | event-loop)"))?;
     let cfg = RouterConfig {
         replicas: args.usize_clamped_or("replicas", 1, 1, 256),
         policy,
         steal,
+        frontend,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
@@ -126,12 +132,18 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                 })
                 .collect::<Result<_>>()?;
             let router = EngineRouter::with_options(engines, rcfg.policy, rcfg.steal);
-            let handle = serve_router(router, &args.str_or("addr", "127.0.0.1:8080"))?;
+            let opts = ServeOptions {
+                frontend: rcfg.frontend,
+                ..Default::default()
+            };
+            let handle =
+                serve_router_with(router, &args.str_or("addr", "127.0.0.1:8080"), opts)?;
             println!(
-                "dsde serving (pjrt, {} replica(s), {}, steal={}) on http://{}",
+                "dsde serving (pjrt, {} replica(s), {}, steal={}, {} front-end) on http://{}",
                 rcfg.replicas,
                 rcfg.policy.name(),
                 handle.router().stealing_enabled(),
+                rcfg.frontend.name(),
                 handle.addr
             );
             loop {
@@ -151,12 +163,18 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                 })
                 .collect::<Result<_>>()?;
             let router = EngineRouter::with_options(engines, rcfg.policy, rcfg.steal);
-            let handle = serve_router(router, &args.str_or("addr", "127.0.0.1:8080"))?;
+            let opts = ServeOptions {
+                frontend: rcfg.frontend,
+                ..Default::default()
+            };
+            let handle =
+                serve_router_with(router, &args.str_or("addr", "127.0.0.1:8080"), opts)?;
             println!(
-                "dsde serving (sim, {} replica(s), {}, steal={}) on http://{}",
+                "dsde serving (sim, {} replica(s), {}, steal={}, {} front-end) on http://{}",
                 rcfg.replicas,
                 rcfg.policy.name(),
                 handle.router().stealing_enabled(),
+                rcfg.frontend.name(),
                 handle.addr
             );
             loop {

@@ -1,0 +1,813 @@
+//! Shared HTTP/1.1 plumbing for both front-ends, plus the per-connection
+//! state machine the event loop drives.
+//!
+//! Everything both front-ends must agree on byte-for-byte lives here —
+//! the incremental request parser with its protocol limits
+//! ([`ConnLimits`]), the response encoders, the completion/stream JSON
+//! line builders, and the endpoint dispatch table — so the `threaded`
+//! and `event-loop` front-ends produce identical responses by
+//! construction (the cross-front-end equivalence test in
+//! `tests/http_frontend.rs` pins this).
+//!
+//! The [`Conn`] state machine is event-loop-only: a nonblocking socket
+//! stepped by readiness events through
+//! `Reading → (WaitBlocking | Streaming) → Flushing → Closed`, with all
+//! writes buffered so a slow reader backpressures into the connection's
+//! own output buffer instead of blocking the loop.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::FrontendKind;
+use crate::engine::request::{FinishedRequest, Request, SamplingParams};
+use crate::model::vocab;
+use crate::server::router::{EngineRouter, StreamEvent};
+use crate::util::json::Json;
+use crate::util::sys::{Waker, POLLIN, POLLOUT};
+
+/// A parsed HTTP request (the subset we serve).
+#[derive(Debug)]
+pub struct HttpRequest {
+    /// Request method (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request path, e.g. `/v1/completions`.
+    pub path: String,
+    /// Raw request body (sized by `Content-Length`).
+    pub body: String,
+}
+
+/// Protocol limits and timeouts enforced per connection by both
+/// front-ends (the slowloris guard of the serving stack).
+#[derive(Clone, Copy, Debug)]
+pub struct ConnLimits {
+    /// Maximum bytes of request line + headers before the connection is
+    /// answered `413` and closed.
+    pub max_header_bytes: usize,
+    /// Maximum `Content-Length` accepted before answering `413`.
+    pub max_body_bytes: usize,
+    /// A connection must deliver its complete header block within this
+    /// long of connecting, or it is answered `408` and closed.
+    pub header_timeout: Duration,
+    /// A connection that goes this long without transferring a byte
+    /// while we still expect request data is answered `408` and closed.
+    /// Also the write-stall budget: a client that stops *reading* its
+    /// response while bytes are pending is cut off after this long
+    /// (engine waits don't count — only an unflushable response does).
+    pub idle_timeout: Duration,
+    /// Open-connection cap; connections over it are answered `503` and
+    /// closed immediately (counted in [`FrontendStats::rejected`]).
+    pub max_open_conns: usize,
+}
+
+impl Default for ConnLimits {
+    fn default() -> Self {
+        ConnLimits {
+            max_header_bytes: 16 * 1024,
+            max_body_bytes: 1024 * 1024,
+            header_timeout: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(30),
+            max_open_conns: 8192,
+        }
+    }
+}
+
+/// Front-end connection counters reported on `/health` and
+/// `/v1/metrics` (and queryable in-process via
+/// `ServerHandle::frontend_stats`).
+#[derive(Debug)]
+pub struct FrontendStats {
+    kind: FrontendKind,
+    open: AtomicUsize,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl FrontendStats {
+    pub(crate) fn new(kind: FrontendKind) -> FrontendStats {
+        FrontendStats {
+            kind,
+            open: AtomicUsize::new(0),
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// Which front-end implementation is serving.
+    pub fn kind(&self) -> FrontendKind {
+        self.kind
+    }
+
+    /// Connections currently open.
+    pub fn open(&self) -> usize {
+        self.open.load(Ordering::SeqCst)
+    }
+
+    /// Connections accepted into request handling since startup.
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::SeqCst)
+    }
+
+    /// Connections turned away at the open-connection cap since startup.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn on_accept(&self) {
+        self.accepted.fetch_add(1, Ordering::SeqCst);
+        self.open.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn on_close(&self) {
+        self.open.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// The `"frontend"` object embedded in `/health` and `/v1/metrics`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("kind", self.kind.name())
+            .set("open_connections", self.open())
+            .set("accepted", self.accepted())
+            .set("rejected", self.rejected())
+    }
+}
+
+// ---- request parsing ---------------------------------------------------------
+
+/// Outcome of parsing the bytes accumulated so far for one request.
+pub(crate) enum ParseStatus {
+    /// Not enough bytes yet.
+    Partial,
+    /// A complete request.
+    Complete(HttpRequest),
+    /// Protocol violation: answer with this status + message and close.
+    Invalid(u16, &'static str),
+}
+
+/// Byte offset just past the `\r\n\r\n` header terminator, if present.
+pub(crate) fn header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+/// Incremental request parser: stateless over the connection's
+/// accumulated input buffer (cheap at our sizes), shared by both
+/// front-ends so malformed/oversized requests get identical answers.
+pub(crate) fn parse_request(buf: &[u8], limits: &ConnLimits) -> ParseStatus {
+    let Some(body_start) = header_end(buf) else {
+        if buf.len() > limits.max_header_bytes {
+            return ParseStatus::Invalid(413, "headers too large");
+        }
+        return ParseStatus::Partial;
+    };
+    if body_start > limits.max_header_bytes {
+        return ParseStatus::Invalid(413, "headers too large");
+    }
+    let head = String::from_utf8_lossy(&buf[..body_start - 4]);
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(path)) = (parts.next(), parts.next()) else {
+        return ParseStatus::Invalid(400, "malformed request line");
+    };
+    let mut content_length = 0usize;
+    for h in lines {
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                match v.trim().parse::<usize>() {
+                    Ok(n) => content_length = n,
+                    Err(_) => return ParseStatus::Invalid(400, "bad content-length"),
+                }
+            }
+        }
+    }
+    if content_length > limits.max_body_bytes {
+        return ParseStatus::Invalid(413, "body too large");
+    }
+    if buf.len() - body_start < content_length {
+        return ParseStatus::Partial;
+    }
+    let body = String::from_utf8_lossy(&buf[body_start..body_start + content_length]);
+    ParseStatus::Complete(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        body: body.into_owned(),
+    })
+}
+
+// ---- response encoding -------------------------------------------------------
+
+/// Reason phrase for the statuses we emit.
+pub(crate) fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Encode a complete JSON response (status line + headers + body).
+pub(crate) fn encode_json(status: u16, body: &Json) -> Vec<u8> {
+    let body = body.to_string();
+    format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        reason(status),
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Encode an error response with the standard `{"error": msg}` body.
+pub(crate) fn encode_error(status: u16, msg: &str) -> Vec<u8> {
+    encode_json(status, &Json::obj().set("error", msg))
+}
+
+/// The streaming response preamble (chunked NDJSON).
+pub(crate) const STREAM_HEADER: &[u8] = b"HTTP/1.1 200 OK\r\n\
+    Content-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\n\
+    Connection: close\r\n\r\n";
+
+/// The zero-length chunk terminating a chunked body.
+pub(crate) const STREAM_TERMINATOR: &[u8] = b"0\r\n\r\n";
+
+/// Encode one NDJSON line as an HTTP chunk (the newline rides inside the
+/// chunk data, matching the blocking front-end's historical framing).
+pub(crate) fn encode_chunk_line(line: &str) -> Vec<u8> {
+    format!("{:x}\r\n{line}\n\r\n", line.len() + 1).into_bytes()
+}
+
+/// One accepted-token delta as an NDJSON line.
+pub(crate) fn delta_line(tokens: &[u32], t: f64) -> String {
+    Json::obj()
+        .set("text", vocab::decode(tokens))
+        .set("tokens", tokens.len())
+        .set("t", t)
+        .to_string()
+}
+
+/// The terminal NDJSON line of a stream.
+pub(crate) fn done_line(fin: &FinishedRequest) -> String {
+    Json::obj()
+        .set("done", true)
+        .set("id", fin.id)
+        .set("finish_reason", fin.reason.name())
+        .set("tokens", fin.output.len())
+        .set("latency_s", fin.latency())
+        .set("ttft_s", fin.ttft())
+        .set("itl_s", fin.itl())
+        .set("rounds", fin.rounds)
+        .set("accepted", fin.accepted)
+        .set("drafted", fin.drafted)
+        .to_string()
+}
+
+/// Terminal line for a stream whose replica exited without a summary
+/// (shutdown race): tell the client explicitly instead of truncating.
+pub(crate) fn aborted_line() -> String {
+    Json::obj()
+        .set("done", true)
+        .set("finish_reason", "aborted")
+        .to_string()
+}
+
+/// The blocking completion response body.
+pub(crate) fn blocking_body(fin: &FinishedRequest) -> Json {
+    Json::obj()
+        .set("id", fin.id)
+        .set("text", fin.output_text())
+        .set("tokens", fin.output.len())
+        .set("finish_reason", fin.reason.name())
+        .set("latency_s", fin.latency())
+        .set("ttft_s", fin.ttft())
+        .set("itl_s", fin.itl())
+        .set("rounds", fin.rounds)
+        .set("accepted", fin.accepted)
+        .set("drafted", fin.drafted)
+}
+
+/// Best-effort bounded input drain before dropping a socket that may
+/// still have request bytes in flight: closing with unread input makes
+/// TCP abort (RST) the connection, which can destroy a just-written
+/// response in the client's receive queue.  On a blocking socket this
+/// waits up to 50ms for the tail; on a nonblocking one it consumes only
+/// what has already arrived.
+pub(crate) fn drain_before_close(stream: &mut TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let deadline = Instant::now() + Duration::from_millis(250);
+    let mut junk = [0u8; 4096];
+    let mut drained = 0usize;
+    // byte AND wall-clock bounded: a peer trickling bytes must not pin
+    // the caller (the threaded acceptor runs this inline)
+    while drained < 256 * 1024 && Instant::now() < deadline {
+        match stream.read(&mut junk) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => drained += n,
+        }
+    }
+}
+
+// ---- dispatch ----------------------------------------------------------------
+
+/// How a parsed request proceeds: an immediate response, or an engine
+/// reply channel the front-end must wait on (blocking recv for the
+/// threaded front-end, waker-pumped `try_recv` for the event loop).
+pub(crate) enum Dispatch {
+    /// Full response bytes, ready to write.
+    Immediate(Vec<u8>),
+    /// A blocking completion in flight on the engine.
+    Blocking(Receiver<FinishedRequest>),
+    /// A streaming completion in flight on the engine.
+    Streaming(Receiver<StreamEvent>),
+}
+
+/// Route one request.  `waker` is the event loop's self-pipe (None on
+/// the threaded front-end): it rides along on engine submissions so
+/// replica threads can signal deliveries without a blocking `recv`
+/// anywhere on the loop.
+pub(crate) fn dispatch(
+    req: &HttpRequest,
+    router: &EngineRouter,
+    stats: &FrontendStats,
+    waker: Option<&Arc<Waker>>,
+) -> Dispatch {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            let body = Json::obj()
+                .set("ok", true)
+                .set("replicas", router.replica_count())
+                .set("route", router.policy().name())
+                .set("steal", router.stealing_enabled())
+                .set("frontend", stats.to_json());
+            Dispatch::Immediate(encode_json(200, &body))
+        }
+        ("GET", "/v1/metrics") => {
+            let body = router.metrics_json().set("frontend", stats.to_json());
+            Dispatch::Immediate(encode_json(200, &body))
+        }
+        ("POST", "/v1/completions") => {
+            let parsed = match Json::parse(&req.body) {
+                Ok(j) => j,
+                Err(e) => {
+                    return Dispatch::Immediate(encode_error(400, &format!("bad json: {e}")));
+                }
+            };
+            let Some(prompt) = parsed.get("prompt").and_then(|p| p.as_str()) else {
+                return Dispatch::Immediate(encode_error(400, "missing 'prompt'"));
+            };
+            let max_tokens = parsed
+                .get("max_tokens")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(64);
+            let temperature = parsed
+                .get("temperature")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.0);
+            let streaming = parsed
+                .get("stream")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false);
+            let request = Request::new(
+                0, // the router assigns the globally unique id
+                vocab::encode(prompt),
+                SamplingParams {
+                    temperature,
+                    max_tokens,
+                    stop_token: None,
+                },
+            );
+            match (streaming, waker) {
+                (true, Some(w)) => {
+                    Dispatch::Streaming(router.submit_streaming_with_waker(request, w.clone()))
+                }
+                (true, None) => Dispatch::Streaming(router.submit_streaming(request)),
+                (false, Some(w)) => {
+                    Dispatch::Blocking(router.submit_with_waker(request, w.clone()))
+                }
+                (false, None) => Dispatch::Blocking(router.submit(request)),
+            }
+        }
+        (_, "/health") | (_, "/v1/metrics") => {
+            Dispatch::Immediate(encode_error(405, "method not allowed (use GET)"))
+        }
+        (_, "/v1/completions") => {
+            Dispatch::Immediate(encode_error(405, "method not allowed (use POST)"))
+        }
+        _ => Dispatch::Immediate(encode_error(404, "not found")),
+    }
+}
+
+// ---- the event-loop connection state machine ---------------------------------
+
+/// Stop pulling stream events once this much encoded output is already
+/// waiting on a connection: a reader slower than the engine
+/// backpressures into its own buffer (events keep queueing on the
+/// unbounded channel; the engine never blocks) instead of growing the
+/// buffer without bound or stalling the loop.
+const OUT_HIGH_WATER: usize = 256 * 1024;
+
+/// Per-connection protocol state.
+pub(crate) enum ConnState {
+    /// Accumulating request bytes.
+    Reading,
+    /// Blocking completion submitted; waiting on the engine.
+    WaitBlocking(Receiver<FinishedRequest>),
+    /// Streaming completion in flight; `terminated` once the final chunk
+    /// has been queued.
+    Streaming {
+        /// Event channel from the engine replica.
+        rx: Receiver<StreamEvent>,
+        /// The terminal line + zero chunk are already in the out buffer.
+        terminated: bool,
+    },
+    /// Response fully queued; close once the out buffer drains.
+    Flushing,
+    /// Finished (the event loop reaps and drops the socket).
+    Closed,
+}
+
+/// One nonblocking connection owned by the event loop.
+pub(crate) struct Conn {
+    stream: TcpStream,
+    pub(crate) state: ConnState,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    out_pos: usize,
+    created: Instant,
+    last_progress: Instant,
+    headers_done: bool,
+}
+
+impl Conn {
+    pub(crate) fn new(stream: TcpStream) -> Conn {
+        let now = Instant::now();
+        Conn {
+            stream,
+            state: ConnState::Reading,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            out_pos: 0,
+            created: now,
+            last_progress: now,
+            headers_done: false,
+        }
+    }
+
+    pub(crate) fn fd(&self) -> i32 {
+        use std::os::unix::io::AsRawFd;
+        self.stream.as_raw_fd()
+    }
+
+    pub(crate) fn is_closed(&self) -> bool {
+        matches!(self.state, ConnState::Closed)
+    }
+
+    fn has_pending_out(&self) -> bool {
+        self.out_pos < self.outbuf.len()
+    }
+
+    /// Poll interest: readable while parsing the request, writable while
+    /// output is queued.  Engine-waiting connections with a drained
+    /// buffer have no interest bits — the waker pumps them.
+    pub(crate) fn interest(&self) -> i16 {
+        let mut ev = 0i16;
+        if matches!(self.state, ConnState::Reading) {
+            ev |= POLLIN;
+        }
+        if self.has_pending_out() {
+            ev |= POLLOUT;
+        }
+        ev
+    }
+
+    fn queue(&mut self, bytes: &[u8]) {
+        self.outbuf.extend_from_slice(bytes);
+    }
+
+    /// Queue a complete response and transition to `Flushing`.
+    fn respond(&mut self, bytes: Vec<u8>) {
+        self.queue(&bytes);
+        self.state = ConnState::Flushing;
+    }
+
+    /// Readiness: the socket has bytes (or EOF).  Reads until
+    /// `WouldBlock`, feeding the parser; a complete request dispatches.
+    pub(crate) fn on_readable(
+        &mut self,
+        router: &EngineRouter,
+        stats: &FrontendStats,
+        waker: &Arc<Waker>,
+        limits: &ConnLimits,
+    ) {
+        if !matches!(self.state, ConnState::Reading) {
+            return;
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    // client closed before completing a request
+                    self.state = ConnState::Closed;
+                    return;
+                }
+                Ok(n) => {
+                    self.last_progress = Instant::now();
+                    self.inbuf.extend_from_slice(&chunk[..n]);
+                    if !self.headers_done {
+                        self.headers_done = header_end(&self.inbuf).is_some();
+                    }
+                    match parse_request(&self.inbuf, limits) {
+                        ParseStatus::Partial => {}
+                        ParseStatus::Invalid(status, msg) => {
+                            self.respond(encode_error(status, msg));
+                            self.try_flush();
+                            return;
+                        }
+                        ParseStatus::Complete(req) => {
+                            self.inbuf.clear();
+                            match dispatch(&req, router, stats, Some(waker)) {
+                                Dispatch::Immediate(bytes) => self.respond(bytes),
+                                Dispatch::Blocking(rx) => {
+                                    self.state = ConnState::WaitBlocking(rx);
+                                }
+                                Dispatch::Streaming(rx) => {
+                                    self.queue(STREAM_HEADER);
+                                    self.state = ConnState::Streaming {
+                                        rx,
+                                        terminated: false,
+                                    };
+                                }
+                            }
+                            self.pump();
+                            return;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.state = ConnState::Closed;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Move engine-side progress into the output buffer (nonblocking
+    /// `try_recv` only) and flush what the socket will take.
+    pub(crate) fn pump(&mut self) {
+        match &mut self.state {
+            ConnState::WaitBlocking(rx) => match rx.try_recv() {
+                Ok(fin) => {
+                    let bytes = encode_json(200, &blocking_body(&fin));
+                    self.respond(bytes);
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => {
+                    // replica exited without a result (shutdown race)
+                    self.respond(encode_error(500, "aborted"));
+                }
+            },
+            ConnState::Streaming { rx, terminated } => {
+                while !*terminated && self.outbuf.len() - self.out_pos < OUT_HIGH_WATER {
+                    match rx.try_recv() {
+                        Ok(StreamEvent::Delta { tokens, t }) => {
+                            let chunk = encode_chunk_line(&delta_line(&tokens, t));
+                            self.outbuf.extend_from_slice(&chunk);
+                        }
+                        Ok(StreamEvent::Done(fin)) => {
+                            let chunk = encode_chunk_line(&done_line(&fin));
+                            self.outbuf.extend_from_slice(&chunk);
+                            self.outbuf.extend_from_slice(STREAM_TERMINATOR);
+                            *terminated = true;
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            let chunk = encode_chunk_line(&aborted_line());
+                            self.outbuf.extend_from_slice(&chunk);
+                            self.outbuf.extend_from_slice(STREAM_TERMINATOR);
+                            *terminated = true;
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        self.try_flush();
+    }
+
+    /// Readiness: the socket will take more bytes.
+    pub(crate) fn on_writable(&mut self) {
+        self.try_flush();
+        // a drained stream buffer frees room to pull more events
+        if matches!(
+            self.state,
+            ConnState::Streaming {
+                terminated: false,
+                ..
+            }
+        ) {
+            self.pump();
+        }
+    }
+
+    fn try_flush(&mut self) {
+        while self.has_pending_out() {
+            match self.stream.write(&self.outbuf[self.out_pos..]) {
+                Ok(0) => {
+                    self.state = ConnState::Closed;
+                    return;
+                }
+                Ok(n) => {
+                    self.out_pos += n;
+                    self.last_progress = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.state = ConnState::Closed;
+                    return;
+                }
+            }
+        }
+        // compact the flushed prefix once it grows: the high-water mark
+        // bounds only the *pending* bytes, so without this a long stream
+        // to a steadily-slow reader would retain every byte ever queued
+        if self.has_pending_out() && self.out_pos >= 64 * 1024 {
+            self.outbuf.drain(..self.out_pos);
+            self.out_pos = 0;
+        }
+        if !self.has_pending_out() {
+            self.outbuf.clear();
+            self.out_pos = 0;
+            let response_complete = matches!(self.state, ConnState::Flushing)
+                || matches!(
+                    self.state,
+                    ConnState::Streaming {
+                        terminated: true,
+                        ..
+                    }
+                );
+            if response_complete {
+                // discard any late request bytes already buffered before
+                // dropping the socket: closing with unread input makes
+                // TCP abort (RST) the connection, which can destroy the
+                // just-written response in the client's receive queue —
+                // exactly the error replies (413/408) a still-sending
+                // client most needs to see.  Byte-capped: the socket is
+                // nonblocking, but a client streaming at line rate must
+                // not pin the loop here.
+                let mut junk = [0u8; 4096];
+                let mut drained = 0usize;
+                while drained < 64 * 1024 {
+                    match self.stream.read(&mut junk) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => drained += n,
+                    }
+                }
+                self.state = ConnState::Closed;
+            }
+        }
+    }
+
+    /// Enforce the slowloris guard (header + idle timeouts while reading
+    /// the request) and the write-stall guard (a client that stops
+    /// reading its response is cut off after the idle budget — otherwise
+    /// it holds a connection slot, and shutdown, hostage).  An engine
+    /// wait is *not* a stall: a connection with an empty out buffer is
+    /// waiting on work the engine (or drain) is guaranteed to deliver.
+    pub(crate) fn check_timeouts(&mut self, now: Instant, limits: &ConnLimits) {
+        if matches!(self.state, ConnState::Reading) {
+            if !self.headers_done && now.duration_since(self.created) > limits.header_timeout {
+                self.respond(encode_error(408, "header read timeout"));
+                self.try_flush();
+                return;
+            }
+            if now.duration_since(self.last_progress) > limits.idle_timeout {
+                self.respond(encode_error(408, "idle timeout"));
+                self.try_flush();
+                return;
+            }
+        }
+        if self.has_pending_out() && now.duration_since(self.last_progress) > limits.idle_timeout
+        {
+            self.state = ConnState::Closed;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> ConnLimits {
+        ConnLimits::default()
+    }
+
+    fn parse(s: &str) -> ParseStatus {
+        parse_request(s.as_bytes(), &limits())
+    }
+
+    #[test]
+    fn parser_incremental_then_complete() {
+        match parse("POST /v1/completions HTTP/1.1\r\nContent-Le") {
+            ParseStatus::Partial => {}
+            _ => panic!("expected Partial"),
+        }
+        let full = "POST /v1/completions HTTP/1.1\r\nContent-Length: 4\r\n\r\nbody";
+        match parse(full) {
+            ParseStatus::Complete(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/v1/completions");
+                assert_eq!(r.body, "body");
+            }
+            _ => panic!("expected Complete"),
+        }
+    }
+
+    #[test]
+    fn parser_waits_for_body() {
+        let partial = "POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nhalf";
+        match parse(partial) {
+            ParseStatus::Partial => {}
+            _ => panic!("body incomplete, expected Partial"),
+        }
+    }
+
+    #[test]
+    fn parser_rejects_malformed_request_line() {
+        match parse("NONSENSE\r\n\r\n") {
+            ParseStatus::Invalid(400, _) => {}
+            _ => panic!("expected 400"),
+        }
+    }
+
+    #[test]
+    fn parser_rejects_bad_content_length() {
+        match parse("POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n") {
+            ParseStatus::Invalid(400, _) => {}
+            _ => panic!("expected 400"),
+        }
+    }
+
+    #[test]
+    fn parser_rejects_oversized_declared_body() {
+        let req = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            limits().max_body_bytes + 1
+        );
+        match parse(&req) {
+            ParseStatus::Invalid(413, _) => {}
+            _ => panic!("expected 413"),
+        }
+    }
+
+    #[test]
+    fn parser_rejects_oversized_headers() {
+        let junk = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n", "a".repeat(20_000));
+        match parse(&junk) {
+            ParseStatus::Invalid(413, _) => {}
+            _ => panic!("expected 413 on unterminated oversized headers"),
+        }
+    }
+
+    #[test]
+    fn chunk_line_framing_matches_http_chunked() {
+        let bytes = encode_chunk_line("{\"a\":1}");
+        let s = String::from_utf8(bytes).unwrap();
+        assert_eq!(s, "8\r\n{\"a\":1}\n\r\n");
+    }
+
+    #[test]
+    fn error_encoding_carries_json_body() {
+        let s = String::from_utf8(encode_error(413, "body too large")).unwrap();
+        assert!(s.starts_with("HTTP/1.1 413 Payload Too Large\r\n"), "{s}");
+        assert!(s.ends_with("{\"error\":\"body too large\"}"), "{s}");
+    }
+
+    #[test]
+    fn stats_counters_track_lifecycle() {
+        let s = FrontendStats::new(FrontendKind::EventLoop);
+        s.on_accept();
+        s.on_accept();
+        s.on_reject();
+        s.on_close();
+        assert_eq!(s.accepted(), 2);
+        assert_eq!(s.rejected(), 1);
+        assert_eq!(s.open(), 1);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"kind\":\"event-loop\""), "{j}");
+        assert!(j.contains("\"open_connections\":1"), "{j}");
+    }
+}

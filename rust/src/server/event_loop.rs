@@ -1,0 +1,175 @@
+//! Poll-based event-loop HTTP front-end: all connections multiplexed on
+//! one thread, so concurrency is bounded by sockets and KV blocks — not
+//! by threads.
+//!
+//! One loop thread owns every connection.  Each iteration it polls
+//! (`util::sys::poll`) over:
+//!
+//! * the **waker** self-pipe — engine replica threads poke it after
+//!   every `StreamEvent`/`FinishedRequest` delivery
+//!   (`submit_*_with_waker`), which is the nonblocking notification path
+//!   that replaces the threaded front-end's blocking `recv`;
+//! * the **listener** — accepted sockets are made nonblocking and enter
+//!   the [`Conn`] state machine;
+//! * every **connection**, with interest computed from its state
+//!   (readable while parsing, writable while output is buffered).
+//!
+//! Slow readers cannot stall the loop: writes are buffered per
+//! connection and stream events stop being pulled past a high-water
+//! mark, so backpressure lands on the one slow connection while its
+//! events queue harmlessly on the unbounded channel.
+//!
+//! Shutdown ordering (see `ServerHandle::shutdown`): the stop flag
+//! closes idle connections and stops accepting, the router drains —
+//! waking the loop for every terminal delivery — and the loop exits once
+//! its last connection flushes and closes.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::log_warn;
+use crate::server::conn::{Conn, ConnLimits, ConnState, FrontendStats};
+use crate::server::router::EngineRouter;
+use crate::util::sys::{poll, PollFd, Waker, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+
+/// Poll timeout: bounds how stale timeout checks and the stop flag can
+/// get while the loop is otherwise idle.
+const POLL_TIMEOUT_MS: i32 = 100;
+
+/// Drive the event loop until `stop` is set and every connection has
+/// drained.  Runs on its own thread (spawned by `serve_router_with`).
+pub(crate) fn run(
+    listener: TcpListener,
+    router: Arc<EngineRouter>,
+    stats: Arc<FrontendStats>,
+    waker: Arc<Waker>,
+    stop: Arc<AtomicBool>,
+    limits: ConnLimits,
+) {
+    use std::os::unix::io::AsRawFd;
+    if let Err(e) = listener.set_nonblocking(true) {
+        log_warn!("event loop: cannot make listener nonblocking: {e}");
+        return;
+    }
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut pfds: Vec<PollFd> = Vec::new();
+    // iterations to keep the listener OUT of the poll set after an
+    // accept failure (EMFILE/ENFILE fd exhaustion): the backlogged
+    // connection would otherwise keep the level-triggered listener
+    // readable and spin the loop hot until an fd frees up
+    let mut accept_backoff = 0u32;
+    loop {
+        let stopping = stop.load(Ordering::SeqCst);
+        if stopping && conns.is_empty() {
+            return;
+        }
+        pfds.clear();
+        pfds.push(PollFd::new(waker.read_fd(), POLLIN));
+        accept_backoff = accept_backoff.saturating_sub(1);
+        let listener_slot = if stopping || accept_backoff > 0 {
+            None
+        } else {
+            pfds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
+            Some(1)
+        };
+        let base = pfds.len();
+        for c in &conns {
+            pfds.push(PollFd::new(c.fd(), c.interest()));
+        }
+        if let Err(e) = poll(&mut pfds, POLL_TIMEOUT_MS) {
+            log_warn!("event loop: poll failed: {e}");
+            return;
+        }
+
+        if pfds[0].has(POLLIN) {
+            waker.drain();
+        }
+
+        // connection readiness first (indices line up with `pfds`; new
+        // accepts below only append)
+        let n = conns.len();
+        for (i, c) in conns.iter_mut().enumerate().take(n) {
+            let p = &pfds[base + i];
+            if p.has(POLLIN) {
+                c.on_readable(&router, &stats, &waker, &limits);
+            }
+            if p.has(POLLOUT) {
+                c.on_writable();
+            }
+            if p.has(POLLERR | POLLNVAL) {
+                c.state = ConnState::Closed;
+            }
+            // POLLHUP without readable data: the peer is fully gone.  A
+            // connection still Reading sees it via the EOF read above;
+            // one waiting on the engine would otherwise spin here.
+            if p.has(POLLHUP) && !p.has(POLLIN) && !matches!(c.state, ConnState::Reading) {
+                c.state = ConnState::Closed;
+            }
+        }
+
+        // accept new connections
+        if let Some(slot) = listener_slot {
+            if pfds[slot].has(POLLIN) {
+                loop {
+                    match listener.accept() {
+                        Ok((mut s, _)) => {
+                            if conns.len() >= limits.max_open_conns {
+                                stats.on_reject();
+                                // nonblocking so the drain below cannot
+                                // stall the loop; the tiny 503 fits the
+                                // empty send buffer in one write
+                                let _ = s.set_nonblocking(true);
+                                let _ = std::io::Write::write_all(
+                                    &mut s,
+                                    &crate::server::conn::encode_error(503, "server at capacity"),
+                                );
+                                crate::server::conn::drain_before_close(&mut s);
+                                continue; // socket drops (closes) here
+                            }
+                            if s.set_nonblocking(true).is_err() {
+                                continue;
+                            }
+                            let _ = s.set_nodelay(true);
+                            stats.on_accept();
+                            conns.push(Conn::new(s));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(e) => {
+                            // likely fd exhaustion; stop polling the
+                            // listener for ~5 ticks instead of spinning
+                            log_warn!("event loop: accept error (backing off): {e}");
+                            accept_backoff = 5;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+
+        // pump engine-side progress into every waiting connection.  The
+        // waker told us *something* was delivered; try_recv on the rest
+        // is a cheap no-op, so we skip per-request bookkeeping entirely.
+        let now = Instant::now();
+        for c in conns.iter_mut() {
+            c.pump();
+            if stopping && matches!(c.state, ConnState::Reading) {
+                // no request yet: shutdown refuses new work
+                c.state = ConnState::Closed;
+            }
+            c.check_timeouts(now, &limits);
+        }
+
+        // reap closed connections
+        conns.retain(|c| {
+            if c.is_closed() {
+                stats.on_close();
+                false
+            } else {
+                true
+            }
+        });
+    }
+}

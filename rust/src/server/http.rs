@@ -1,4 +1,5 @@
-//! Minimal HTTP/1.1 server with a JSON completions API.
+//! HTTP/1.1 server with a JSON completions API, in two selectable
+//! front-ends behind the same endpoints and byte-identical responses.
 //!
 //! Endpoints:
 //! * `POST /v1/completions` — body `{"prompt": "...", "max_tokens": N,
@@ -11,143 +12,160 @@
 //!   "finish_reason": .., "latency_s": .., "ttft_s": .., "itl_s": ..,
 //!   ...}`) and the zero-length chunk.
 //! * `GET /v1/metrics` — pre-reduced metrics aggregated across engine
-//!   replicas (incl. TTFT/ITL statistics and percentiles), plus a
-//!   per-replica breakdown with KV-occupancy gauges (`kv_used_blocks`,
-//!   `kv_free_blocks`, `queued_requests`, `queued_prompt_tokens`) and the
-//!   router's work-stealing counter.
-//! * `GET /health` — liveness + replica count + routing configuration.
+//!   replicas (incl. TTFT/ITL statistics and percentiles), a per-replica
+//!   breakdown with KV-occupancy gauges, the router's work-stealing
+//!   counter, and the front-end's connection counters (`frontend.kind`,
+//!   `open_connections`, `accepted`, `rejected`).
+//! * `GET /health` — liveness + replica count + routing configuration +
+//!   the same front-end counters.
 //!
-//! Connection threads hand requests to an [`EngineRouter`], which owns one
-//! engine thread per replica; [`serve`] wraps a single engine in a
-//! 1-replica router, [`serve_router`] serves an arbitrary replica set.
-//! Shutdown drains gracefully: in-flight requests complete (streams keep
-//! flowing to their terminal event) before the engine threads exit.
+//! Front-ends ([`ServeOptions::frontend`], CLI `--frontend`):
+//! * **`threaded`** — one thread per TCP connection, blocking I/O.
+//!   Simple, but a streaming response pins its thread for the stream's
+//!   lifetime, so concurrency is thread-bound.
+//! * **`event-loop`** — every connection multiplexed on one poll-based
+//!   loop thread (`server/event_loop.rs`); engine replicas wake the loop
+//!   through a self-pipe, so thousands of concurrent streams cost
+//!   sockets, not threads.
+//!
+//! Both front-ends share the parser, limits, dispatch table, and
+//! response encoders in `server/conn.rs`, answer protocol violations
+//! with proper `400`/`405`/`413` JSON errors, and enforce header-read +
+//! idle timeouts ([`ConnLimits`], the slowloris guard).  Shutdown drains
+//! gracefully: in-flight requests complete (streams keep flowing to
+//! their terminal event) before the engine threads exit.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::config::RoutePolicy;
+use crate::config::{FrontendKind, RoutePolicy};
 use crate::engine::engine::Engine;
-use crate::engine::request::{Request, SamplingParams};
-use crate::model::vocab;
+use crate::server::conn::{self, Dispatch, ParseStatus};
+pub use crate::server::conn::{ConnLimits, FrontendStats, HttpRequest};
+use crate::server::event_loop;
 use crate::server::router::{EngineRouter, StreamEvent};
 use crate::util::json::Json;
+use crate::util::sys::Waker;
 use crate::{log_info, log_warn};
 
-/// A parsed HTTP request (the subset we serve).
-#[derive(Debug)]
-pub struct HttpRequest {
-    /// Request method (`GET`, `POST`, ...).
-    pub method: String,
-    /// Request path, e.g. `/v1/completions`.
-    pub path: String,
-    /// Raw request body (sized by `Content-Length`).
-    pub body: String,
+/// Front-end configuration for [`serve_router_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeOptions {
+    /// Which front-end drives connections (default: threaded).
+    pub frontend: FrontendKind,
+    /// Protocol limits and timeouts, enforced by both front-ends.
+    pub limits: ConnLimits,
 }
 
-/// Read one HTTP/1.1 request from the stream.
+/// Read one HTTP/1.1 request from the stream (blocking; default
+/// [`ConnLimits`] apply, including the header/idle timeouts).
 pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("/").to_string();
-    let mut content_length = 0usize;
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim();
-        if h.is_empty() {
-            break;
-        }
-        if let Some((k, v)) = h.split_once(':') {
-            if k.eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().unwrap_or(0);
-            }
-        }
+    match read_request_limited(stream, &ConnLimits::default()) {
+        ReadOutcome::Request(r) => Ok(r),
+        ReadOutcome::Fail(status, msg) => Err(anyhow!("http {status}: {msg}")),
+        ReadOutcome::Disconnected => Err(anyhow!("connection closed mid-request")),
     }
-    let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        reader.read_exact(&mut body)?;
-    }
-    Ok(HttpRequest {
-        method,
-        path,
-        body: String::from_utf8_lossy(&body).into_owned(),
-    })
 }
 
 /// Write an HTTP response with a JSON body.
 pub fn write_json(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()> {
-    let body = body.to_string();
-    let reason = match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        _ => "Internal Server Error",
-    };
-    write!(
-        stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    )?;
+    stream.write_all(&conn::encode_json(status, body))?;
     Ok(())
 }
 
-/// Write one chunk of an HTTP/1.1 chunked-transfer-encoding body.
-fn write_chunk(stream: &mut TcpStream, data: &str) -> std::io::Result<()> {
-    write!(stream, "{:x}\r\n{data}\r\n", data.len())
+/// How the blocking request reader finished.
+enum ReadOutcome {
+    /// A complete request.
+    Request(HttpRequest),
+    /// Protocol violation or timeout: answer with status + message.
+    Fail(u16, String),
+    /// The client vanished; nothing to answer.
+    Disconnected,
 }
 
-/// Serve one `"stream": true` completion: chunked NDJSON with one line per
-/// accepted-token delta, then a terminal line carrying the finish reason
-/// and per-request metrics, then the zero-length chunk.
-fn serve_streaming(stream: &mut TcpStream, router: &EngineRouter, request: Request) {
-    let rx = router.submit_streaming(request);
-    if write!(
-        stream,
-        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
-         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
-    )
-    .is_err()
-    {
+fn timeout_outcome(headers_done: bool) -> ReadOutcome {
+    let msg = if headers_done {
+        "idle timeout"
+    } else {
+        "header read timeout"
+    };
+    ReadOutcome::Fail(408, msg.to_string())
+}
+
+/// Blocking request read with the same limits/timeouts the event loop
+/// enforces: the socket read deadline tracks the header/idle budget, and
+/// the shared incremental parser supplies identical error responses.
+fn read_request_limited(stream: &mut TcpStream, limits: &ConnLimits) -> ReadOutcome {
+    let start = Instant::now();
+    let mut last_byte = start;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut headers_done = false;
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        let now = Instant::now();
+        let idle_deadline = last_byte + limits.idle_timeout;
+        let deadline = if headers_done {
+            idle_deadline
+        } else {
+            idle_deadline.min(start + limits.header_timeout)
+        };
+        if now >= deadline {
+            return timeout_outcome(headers_done);
+        }
+        if stream.set_read_timeout(Some(deadline - now)).is_err() {
+            return ReadOutcome::Disconnected;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return ReadOutcome::Disconnected,
+            Ok(n) => {
+                last_byte = Instant::now();
+                buf.extend_from_slice(&chunk[..n]);
+                if !headers_done {
+                    headers_done = conn::header_end(&buf).is_some();
+                }
+                match conn::parse_request(&buf, limits) {
+                    ParseStatus::Partial => {}
+                    ParseStatus::Complete(r) => return ReadOutcome::Request(r),
+                    ParseStatus::Invalid(status, msg) => {
+                        return ReadOutcome::Fail(status, msg.to_string());
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return timeout_outcome(headers_done);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ReadOutcome::Disconnected,
+        }
+    }
+}
+
+/// Serve one `"stream": true` completion on the threaded front-end:
+/// chunked NDJSON via the shared line builders, so the bytes match the
+/// event-loop front-end exactly.
+fn serve_streaming_blocking(stream: &mut TcpStream, rx: Receiver<StreamEvent>) {
+    if stream.write_all(conn::STREAM_HEADER).is_err() {
         return; // client already gone; the replica drops the stream lazily
     }
     let mut got_done = false;
     for ev in rx {
         let (line, is_done) = match ev {
-            StreamEvent::Delta { tokens, t } => (
-                Json::obj()
-                    .set("text", vocab::decode(&tokens))
-                    .set("tokens", tokens.len())
-                    .set("t", t)
-                    .to_string(),
-                false,
-            ),
-            StreamEvent::Done(fin) => (
-                Json::obj()
-                    .set("done", true)
-                    .set("id", fin.id)
-                    .set("finish_reason", fin.reason.name())
-                    .set("tokens", fin.output.len())
-                    .set("latency_s", fin.latency())
-                    .set("ttft_s", fin.ttft())
-                    .set("itl_s", fin.itl())
-                    .set("rounds", fin.rounds)
-                    .set("accepted", fin.accepted)
-                    .set("drafted", fin.drafted)
-                    .to_string(),
-                true,
-            ),
+            StreamEvent::Delta { tokens, t } => (conn::delta_line(&tokens, t), false),
+            StreamEvent::Done(fin) => (conn::done_line(&fin), true),
         };
-        if write_chunk(stream, &format!("{line}\n")).is_err() {
+        if stream.write_all(&conn::encode_chunk_line(&line)).is_err() {
             return; // client hung up mid-stream
         }
         if is_done {
@@ -158,13 +176,45 @@ fn serve_streaming(stream: &mut TcpStream, router: &EngineRouter, request: Reque
     if !got_done {
         // the replica exited without a terminal event (shutdown race):
         // tell the client explicitly instead of truncating silently
-        let line = Json::obj()
-            .set("done", true)
-            .set("finish_reason", "aborted")
-            .to_string();
-        let _ = write_chunk(stream, &format!("{line}\n"));
+        let _ = stream.write_all(&conn::encode_chunk_line(&conn::aborted_line()));
     }
-    let _ = stream.write_all(b"0\r\n\r\n");
+    let _ = stream.write_all(conn::STREAM_TERMINATOR);
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    router: &EngineRouter,
+    stats: &FrontendStats,
+    limits: &ConnLimits,
+) {
+    let req = match read_request_limited(&mut stream, limits) {
+        ReadOutcome::Request(r) => r,
+        ReadOutcome::Fail(status, msg) => {
+            let _ = stream.write_all(&conn::encode_error(status, &msg));
+            conn::drain_before_close(&mut stream);
+            return;
+        }
+        ReadOutcome::Disconnected => return,
+    };
+    // request fully read: lift the read deadline — engine waits may
+    // legitimately exceed the idle budget.  The *write* deadline stays:
+    // a client that stops reading its response would otherwise pin this
+    // thread (and its connection slot) forever.
+    let _ = stream.set_read_timeout(None);
+    let _ = stream.set_write_timeout(Some(limits.idle_timeout));
+    match conn::dispatch(&req, router, stats, None) {
+        Dispatch::Immediate(bytes) => {
+            let _ = stream.write_all(&bytes);
+        }
+        Dispatch::Blocking(rx) => {
+            let bytes = match rx.recv() {
+                Ok(fin) => conn::encode_json(200, &conn::blocking_body(&fin)),
+                Err(_) => conn::encode_error(500, "aborted"),
+            };
+            let _ = stream.write_all(&bytes);
+        }
+        Dispatch::Streaming(rx) => serve_streaming_blocking(&mut stream, rx),
+    }
 }
 
 /// Handle used to submit work / stop the server.
@@ -173,7 +223,9 @@ pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     router: Arc<EngineRouter>,
     stop: Arc<AtomicBool>,
-    acceptor_thread: Option<JoinHandle<()>>,
+    serving_thread: Option<JoinHandle<()>>,
+    stats: Arc<FrontendStats>,
+    waker: Option<Arc<Waker>>,
 }
 
 impl ServerHandle {
@@ -182,104 +234,37 @@ impl ServerHandle {
         &self.router
     }
 
+    /// The front-end's connection counters (also on `/health` and
+    /// `/v1/metrics`).
+    pub fn frontend_stats(&self) -> &FrontendStats {
+        &self.stats
+    }
+
     /// Stop accepting connections, then drain the engine replicas: every
     /// in-flight request completes and is delivered before this returns.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // poke the acceptor so it notices the stop flag
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.acceptor_thread.take() {
-            let _ = t.join();
-        }
-        self.router.shutdown();
-    }
-}
-
-fn handle_conn(mut stream: TcpStream, router: &EngineRouter) {
-    let req = match read_request(&mut stream) {
-        Ok(r) => r,
-        Err(_) => return,
-    };
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/health") => {
-            let body = Json::obj()
-                .set("ok", true)
-                .set("replicas", router.replica_count())
-                .set("route", router.policy().name())
-                .set("steal", router.stealing_enabled());
-            let _ = write_json(&mut stream, 200, &body);
-        }
-        ("GET", "/v1/metrics") => {
-            let _ = write_json(&mut stream, 200, &router.metrics_json());
-        }
-        ("POST", "/v1/completions") => {
-            let parsed = match Json::parse(&req.body) {
-                Ok(j) => j,
-                Err(e) => {
-                    let _ = write_json(
-                        &mut stream,
-                        400,
-                        &Json::obj().set("error", format!("bad json: {e}")),
-                    );
-                    return;
-                }
-            };
-            let Some(prompt) = parsed.get("prompt").and_then(|p| p.as_str()) else {
-                let _ = write_json(
-                    &mut stream,
-                    400,
-                    &Json::obj().set("error", "missing 'prompt'"),
-                );
-                return;
-            };
-            let max_tokens = parsed
-                .get("max_tokens")
-                .and_then(|x| x.as_usize())
-                .unwrap_or(64);
-            let temperature = parsed
-                .get("temperature")
-                .and_then(|x| x.as_f64())
-                .unwrap_or(0.0);
-            let streaming = parsed
-                .get("stream")
-                .and_then(|x| x.as_bool())
-                .unwrap_or(false);
-            let request = Request::new(
-                0, // the router assigns the globally unique id
-                vocab::encode(prompt),
-                SamplingParams {
-                    temperature,
-                    max_tokens,
-                    stop_token: None,
-                },
-            );
-            if streaming {
-                serve_streaming(&mut stream, router, request);
-                return;
-            }
-            match router.complete(request) {
-                Ok(fin) => {
-                    let body = Json::obj()
-                        .set("id", fin.id)
-                        .set("text", fin.output_text())
-                        .set("tokens", fin.output.len())
-                        .set("finish_reason", fin.reason.name())
-                        .set("latency_s", fin.latency())
-                        .set("ttft_s", fin.ttft())
-                        .set("itl_s", fin.itl())
-                        .set("rounds", fin.rounds)
-                        .set("accepted", fin.accepted)
-                        .set("drafted", fin.drafted);
-                    let _ = write_json(&mut stream, 200, &body);
-                }
-                Err(_) => {
-                    let _ =
-                        write_json(&mut stream, 500, &Json::obj().set("error", "aborted"));
+        match self.waker.take() {
+            Some(waker) => {
+                // event loop: the stop flag ends accepting; the drain
+                // below wakes the loop for every terminal delivery, and
+                // the loop exits once its last connection flushes
+                waker.wake();
+                self.router.shutdown();
+                waker.wake();
+                if let Some(t) = self.serving_thread.take() {
+                    let _ = t.join();
                 }
             }
-        }
-        _ => {
-            let _ = write_json(&mut stream, 404, &Json::obj().set("error", "not found"));
+            None => {
+                // threaded: poke the acceptor so it notices the stop
+                // flag; connection threads finish via the drain
+                let _ = TcpStream::connect(self.addr);
+                if let Some(t) = self.serving_thread.take() {
+                    let _ = t.join();
+                }
+                self.router.shutdown();
+            }
         }
     }
 }
@@ -293,38 +278,96 @@ pub fn serve(engine: Engine, addr: &str) -> Result<ServerHandle> {
 }
 
 /// Serve a replica set on `addr` (e.g. "127.0.0.1:0" for an ephemeral
-/// port).  Connection threads dispatch through the router's policy.
+/// port) with the default options (threaded front-end).
 pub fn serve_router(router: EngineRouter, addr: &str) -> Result<ServerHandle> {
+    serve_router_with(router, addr, ServeOptions::default())
+}
+
+/// Serve a replica set on `addr` with an explicit front-end choice and
+/// protocol limits.
+pub fn serve_router_with(
+    router: EngineRouter,
+    addr: &str,
+    opts: ServeOptions,
+) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let router = Arc::new(router);
     let stop = Arc::new(AtomicBool::new(false));
-    let stop_a = stop.clone();
-    let router_a = router.clone();
-    let acceptor_thread = std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            if stop_a.load(Ordering::SeqCst) {
-                break;
-            }
-            match stream {
-                Ok(s) => {
-                    let router = router_a.clone();
-                    std::thread::spawn(move || handle_conn(s, &router));
-                }
-                Err(e) => log_warn!("accept error: {e}"),
-            }
+    let stats = Arc::new(FrontendStats::new(opts.frontend));
+    let limits = opts.limits;
+    let (serving_thread, waker) = match opts.frontend {
+        FrontendKind::Threaded => {
+            let stop_a = stop.clone();
+            let router_a = router.clone();
+            let stats_a = stats.clone();
+            let t = std::thread::Builder::new()
+                .name("dsde-http-accept".to_string())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if stop_a.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        match stream {
+                            Ok(s) => {
+                                if stats_a.open() >= limits.max_open_conns {
+                                    stats_a.on_reject();
+                                    // reject off-thread: the blocking
+                                    // write + drain must not stall the
+                                    // acceptor under a rejection storm
+                                    std::thread::spawn(move || {
+                                        let mut s = s;
+                                        let _ = s.write_all(&conn::encode_error(
+                                            503,
+                                            "server at capacity",
+                                        ));
+                                        conn::drain_before_close(&mut s);
+                                    });
+                                    continue;
+                                }
+                                stats_a.on_accept();
+                                let router = router_a.clone();
+                                let stats = stats_a.clone();
+                                std::thread::spawn(move || {
+                                    handle_conn(s, &router, &stats, &limits);
+                                    stats.on_close();
+                                });
+                            }
+                            Err(e) => log_warn!("accept error: {e}"),
+                        }
+                    }
+                })
+                .expect("spawn acceptor thread");
+            (t, None)
         }
-    });
+        FrontendKind::EventLoop => {
+            let waker = Arc::new(Waker::new()?);
+            let stop_a = stop.clone();
+            let router_a = router.clone();
+            let stats_a = stats.clone();
+            let waker_a = waker.clone();
+            let t = std::thread::Builder::new()
+                .name("dsde-http-loop".to_string())
+                .spawn(move || {
+                    event_loop::run(listener, router_a, stats_a, waker_a, stop_a, limits)
+                })
+                .expect("spawn event loop thread");
+            (t, Some(waker))
+        }
+    };
     log_info!(
-        "serving on http://{local} ({} replica(s), {})",
+        "serving on http://{local} ({} replica(s), {}, {} front-end)",
         router.replica_count(),
-        router.policy().name()
+        router.policy().name(),
+        opts.frontend.name()
     );
     Ok(ServerHandle {
         addr: local,
         router,
         stop,
-        acceptor_thread: Some(acceptor_thread),
+        serving_thread: Some(serving_thread),
+        stats,
+        waker,
     })
 }
 
@@ -378,6 +421,7 @@ mod tests {
         assert!(resp.starts_with("HTTP/1.1 200"));
         assert!(resp.contains("\"ok\":true"));
         assert!(resp.contains("\"replicas\":1"));
+        assert!(resp.contains("\"kind\":\"threaded\""), "{resp}");
         h.shutdown();
     }
 
@@ -434,6 +478,8 @@ mod tests {
         );
         assert!(resp.contains("block_efficiency"), "{resp}");
         assert!(resp.contains("route_policy"), "{resp}");
+        assert!(resp.contains("\"accepted\":"), "{resp}");
+        assert!(resp.contains("\"open_connections\":"), "{resp}");
         h.shutdown();
     }
 
@@ -499,6 +545,36 @@ mod tests {
             "GET /nope HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
         );
         assert!(resp.starts_with("HTTP/1.1 404"));
+        h.shutdown();
+    }
+
+    #[test]
+    fn wrong_method_is_405() {
+        let h = sim_server();
+        let resp = raw_request(
+            h.addr,
+            "POST /health HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 405"), "{resp}");
+        assert!(resp.contains("\"error\""), "{resp}");
+        let resp = raw_request(
+            h.addr,
+            "GET /v1/completions HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 405"), "{resp}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let h = sim_server();
+        let req = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            ConnLimits::default().max_body_bytes + 1
+        );
+        let resp = raw_request(h.addr, &req);
+        assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+        assert!(resp.contains("\"error\""), "{resp}");
         h.shutdown();
     }
 

@@ -1,19 +1,40 @@
-//! Serving front-end: a thread-based HTTP/1.1 server exposing a JSON
-//! completions API over a multi-replica engine router, plus a
-//! load-generating client with blocking and streaming consumers.
+//! Serving front-end: an HTTP/1.1 server exposing a JSON completions API
+//! over a multi-replica engine router, plus a load-generating client with
+//! blocking and streaming consumers.
 //!
-//! Architecture (no async runtime in the offline vendor set — and none
-//! needed): acceptor threads parse requests and hand them to the
-//! [`router::EngineRouter`], which owns one engine thread per replica
-//! (PJRT contexts are single-threaded by design, so each replica gets its
-//! own); each engine thread runs the continuous-batching `plan → execute →
-//! apply` loop and completes waiting responses via per-request channels.
-//! Streaming requests (`"stream": true`) use the same path but their
-//! channel carries every per-step accepted-token delta
-//! ([`router::StreamEvent`]) as it is applied, surfaced over HTTP as
-//! chunked transfer-encoding — so time-to-first-token is observable
-//! end-to-end instead of being buried in the blocking response.
+//! Two front-ends serve the same endpoints with byte-identical responses
+//! (no async runtime in the offline vendor set — and none needed):
+//!
+//! * **threaded** (`--frontend threaded`, the default): one thread per
+//!   TCP connection, blocking I/O.  A streaming response pins its thread
+//!   for the stream's lifetime, so concurrency is thread-bound.
+//! * **event-loop** (`--frontend event-loop`): every connection
+//!   multiplexed on one poll-based loop thread (`server/event_loop.rs`,
+//!   built on the `poll(2)` shim in [`crate::util::sys`]).  Engine
+//!   replica threads wake the loop through a self-pipe after every
+//!   delivery, so token deltas flow engine → loop → socket without a
+//!   blocking `recv` anywhere, and thousands of concurrent streams cost
+//!   sockets — not threads.
+//!
+//! Behind either front-end, the [`router::EngineRouter`] owns one engine
+//! thread per replica (PJRT contexts are single-threaded by design, so
+//! each replica gets its own); each engine thread runs the
+//! continuous-batching `plan → execute → apply` loop and completes
+//! waiting responses via per-request channels.  Streaming requests
+//! (`"stream": true`) use the same path but their channel carries every
+//! per-step accepted-token delta ([`router::StreamEvent`]) as it is
+//! applied, surfaced over HTTP as chunked transfer-encoding — so
+//! time-to-first-token is observable end-to-end instead of being buried
+//! in the blocking response.
+//!
+//! The pieces both front-ends share — the incremental request parser
+//! with its protocol limits, the response encoders, and the endpoint
+//! dispatch table — live in the private `conn` module; its public
+//! surface ([`http::ConnLimits`], [`http::FrontendStats`]) is re-exported
+//! from [`http`].
 
 pub mod client;
+mod conn;
+mod event_loop;
 pub mod http;
 pub mod router;

@@ -52,6 +52,7 @@ use crate::engine::metrics::{MetricsSnapshot, DEFAULT_QUANTILES};
 use crate::engine::request::{FinishedRequest, Request};
 use crate::engine::step::StepReport;
 use crate::util::json::Json;
+use crate::util::sys::Waker;
 use crate::log_warn;
 
 /// One event on a streaming request's channel.
@@ -69,23 +70,50 @@ pub enum StreamEvent {
     Done(FinishedRequest),
 }
 
+/// A reply sender plus the optional event-loop waker poked after every
+/// successful send.  This is the nonblocking notification path of the
+/// poll-based front-end: the replica thread delivers on the plain mpsc
+/// channel exactly as before, then pokes the self-pipe so the event loop
+/// wakes and `try_recv`s — no blocking `recv` anywhere on the loop.  The
+/// threaded front-end passes no waker and the wrapper is free.
+pub(crate) struct Notify<T> {
+    tx: Sender<T>,
+    waker: Option<Arc<Waker>>,
+}
+
+impl<T> Notify<T> {
+    fn new(tx: Sender<T>, waker: Option<Arc<Waker>>) -> Notify<T> {
+        Notify { tx, waker }
+    }
+
+    fn send(&self, v: T) -> Result<(), std::sync::mpsc::SendError<T>> {
+        let r = self.tx.send(v);
+        if r.is_ok() {
+            if let Some(w) = &self.waker {
+                w.wake();
+            }
+        }
+        r
+    }
+}
+
 /// The reply channel of a request in flight on a replica — shipped along
 /// with the request when the balancer migrates it to another replica, so
 /// stealing is invisible to the waiting client.
 pub(crate) enum ReplyTo {
     /// Blocking submitter waiting for the one [`FinishedRequest`].
-    Blocking(Sender<FinishedRequest>),
+    Blocking(Notify<FinishedRequest>),
     /// Streaming subscriber consuming [`StreamEvent`]s.
-    Streaming(Sender<StreamEvent>),
+    Streaming(Notify<StreamEvent>),
 }
 
 /// Messages into a replica's engine thread.
 pub(crate) enum EngineMsg {
     /// Submit a request; the finished result is sent on the reply channel.
-    Submit(Request, Sender<FinishedRequest>),
+    Submit(Request, Notify<FinishedRequest>),
     /// Submit a request whose per-step token deltas (and terminal summary)
     /// are forwarded on the reply channel as they happen.
-    SubmitStreaming(Request, Sender<StreamEvent>),
+    SubmitStreaming(Request, Notify<StreamEvent>),
     /// Work stealing, victim side: migrate up to `max` untouched waiting
     /// requests (with their reply channels) back to the balancer.  Replies
     /// with an empty batch when nothing is stealable.
@@ -217,8 +245,8 @@ struct Replica {
 /// terminal [`StreamEvent::Done`] (which also closes their channel).
 fn deliver(
     engine: &mut Engine,
-    pending: &mut HashMap<u64, Sender<FinishedRequest>>,
-    streams: &mut HashMap<u64, Sender<StreamEvent>>,
+    pending: &mut HashMap<u64, Notify<FinishedRequest>>,
+    streams: &mut HashMap<u64, Notify<StreamEvent>>,
     load: &AtomicUsize,
 ) {
     for fin in engine.take_finished() {
@@ -246,7 +274,7 @@ fn deliver(
 /// completion and is accounted normally; only the forwarding stops.
 fn forward_deltas(
     report: StepReport,
-    streams: &mut HashMap<u64, Sender<StreamEvent>>,
+    streams: &mut HashMap<u64, Notify<StreamEvent>>,
 ) {
     for d in report.deltas {
         let dead = match streams.get(&d.id) {
@@ -275,8 +303,8 @@ fn replica_loop(
     load: Arc<AtomicUsize>,
     cell: Arc<LoadCell>,
 ) {
-    let mut pending: HashMap<u64, Sender<FinishedRequest>> = HashMap::new();
-    let mut streams: HashMap<u64, Sender<StreamEvent>> = HashMap::new();
+    let mut pending: HashMap<u64, Notify<FinishedRequest>> = HashMap::new();
+    let mut streams: HashMap<u64, Notify<StreamEvent>> = HashMap::new();
     let mut draining = false;
     let mut consecutive_errors = 0u32;
     loop {
@@ -737,28 +765,46 @@ impl EngineRouter {
     /// Dispatch a request to a replica; returns the channel the finished
     /// result arrives on.  The router assigns globally unique request ids
     /// (any caller-provided id is overwritten).
-    pub fn submit(&self, mut req: Request) -> Receiver<FinishedRequest> {
-        req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+    pub fn submit(&self, req: Request) -> Receiver<FinishedRequest> {
         let idx = self.pick(projected_tokens(&req));
-        self.dispatch_to(idx, req)
+        self.dispatch_to(idx, req, None)
+    }
+
+    /// Like [`EngineRouter::submit`], but the replica thread pokes `waker`
+    /// after delivering the result — the event-loop front-end's
+    /// nonblocking completion path (the loop `try_recv`s on wake instead
+    /// of parking a thread in `recv`).
+    pub fn submit_with_waker(
+        &self,
+        req: Request,
+        waker: Arc<Waker>,
+    ) -> Receiver<FinishedRequest> {
+        let idx = self.pick(projected_tokens(&req));
+        self.dispatch_to(idx, req, Some(waker))
     }
 
     /// Dispatch a request to a *specific* replica, bypassing the routing
     /// policy (ids are still router-assigned).  For diagnostics, benches,
     /// and imbalance tests — production traffic goes through
     /// [`EngineRouter::submit`].
-    pub fn submit_to(&self, idx: usize, mut req: Request) -> Receiver<FinishedRequest> {
-        req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
-        self.dispatch_to(idx, req)
+    pub fn submit_to(&self, idx: usize, req: Request) -> Receiver<FinishedRequest> {
+        self.dispatch_to(idx, req, None)
     }
 
-    fn dispatch_to(&self, idx: usize, req: Request) -> Receiver<FinishedRequest> {
+    fn dispatch_to(
+        &self,
+        idx: usize,
+        mut req: Request,
+        waker: Option<Arc<Waker>>,
+    ) -> Receiver<FinishedRequest> {
+        req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
         let replica = &self.replicas[idx];
         let (rtx, rrx) = channel();
         replica.load.fetch_add(1, Ordering::SeqCst);
         replica.cell.on_enqueue(&req);
-        if let Err(std::sync::mpsc::SendError(msg)) =
-            replica.tx.send(EngineMsg::Submit(req, rtx))
+        if let Err(std::sync::mpsc::SendError(msg)) = replica
+            .tx
+            .send(EngineMsg::Submit(req, Notify::new(rtx, waker)))
         {
             // replica already shut down; undo the accounting — the caller
             // observes a closed reply channel
@@ -776,7 +822,26 @@ impl EngineRouter {
     /// with the finished-request summary, after which it closes.  Routing
     /// (policy, unique ids, load accounting) and drain semantics are
     /// identical to [`EngineRouter::submit`].
-    pub fn submit_streaming(&self, mut req: Request) -> Receiver<StreamEvent> {
+    pub fn submit_streaming(&self, req: Request) -> Receiver<StreamEvent> {
+        self.submit_streaming_opts(req, None)
+    }
+
+    /// Like [`EngineRouter::submit_streaming`], but the replica thread
+    /// pokes `waker` after every delta and after the terminal event — the
+    /// event-loop front-end's nonblocking streaming path.
+    pub fn submit_streaming_with_waker(
+        &self,
+        req: Request,
+        waker: Arc<Waker>,
+    ) -> Receiver<StreamEvent> {
+        self.submit_streaming_opts(req, Some(waker))
+    }
+
+    fn submit_streaming_opts(
+        &self,
+        mut req: Request,
+        waker: Option<Arc<Waker>>,
+    ) -> Receiver<StreamEvent> {
         req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
         let idx = self.pick(projected_tokens(&req));
         let replica = &self.replicas[idx];
@@ -785,7 +850,7 @@ impl EngineRouter {
         replica.cell.on_enqueue(&req);
         if let Err(std::sync::mpsc::SendError(msg)) = replica
             .tx
-            .send(EngineMsg::SubmitStreaming(req, rtx))
+            .send(EngineMsg::SubmitStreaming(req, Notify::new(rtx, waker)))
         {
             replica.load.fetch_sub(1, Ordering::SeqCst);
             if let EngineMsg::SubmitStreaming(req, _) = msg {

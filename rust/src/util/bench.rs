@@ -10,15 +10,22 @@ use crate::util::stats::percentile;
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case label, as passed to [`bench`] / [`summarize`].
     pub name: String,
+    /// Timed iterations the statistics cover.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub p50_s: f64,
+    /// 99th-percentile seconds per iteration.
     pub p99_s: f64,
+    /// Fastest iteration in seconds.
     pub min_s: f64,
 }
 
 impl BenchResult {
+    /// One human-readable report line (name + mean/p50/p99 + iters).
     pub fn row(&self) -> String {
         format!(
             "{:<40} {:>12} mean  {:>12} p50  {:>12} p99  ({} iters)",
@@ -78,6 +85,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Create a table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -85,11 +93,13 @@ impl Table {
         }
     }
 
+    /// Append one row; panics if the cell count mismatches the headers.
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render the table with aligned columns (markdown-ish pipes).
     pub fn render(&self) -> String {
         let ncols = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -120,6 +130,7 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

@@ -7,8 +7,11 @@ use std::collections::BTreeMap;
 /// Declarative flag spec for usage/help output.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {
+    /// Flag name without the leading `--`.
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Default value shown in the usage string (None for boolean flags).
     pub default: Option<&'static str>,
 }
 
@@ -51,18 +54,22 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether the boolean `--name` flag was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// String value of `--name`, or `default`.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// usize value of `--name`, or `default` (also on parse failure).
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .and_then(|s| s.parse().ok())
@@ -81,12 +88,14 @@ impl Args {
         self.usize_or(name, default).clamp(min, max)
     }
 
+    /// u64 value of `--name`, or `default` (also on parse failure).
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .and_then(|s| s.parse().ok())
             .unwrap_or(default)
     }
 
+    /// f64 value of `--name`, or `default` (also on parse failure).
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .and_then(|s| s.parse().ok())
@@ -105,6 +114,7 @@ impl Args {
         }
     }
 
+    /// Positional (non-flag) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -11,20 +11,28 @@ use std::fmt;
 /// A JSON value. Objects use BTreeMap for deterministic serialization.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys ⇒ deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---- constructors -------------------------------------------------------
+    /// An empty object (chain with [`Json::set`]).
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Builder-style insert; a no-op on non-object values.
     pub fn set(mut self, key: &str, val: impl Into<Json>) -> Json {
         if let Json::Obj(ref mut m) = self {
             m.insert(key.to_string(), val.into());
@@ -33,6 +41,7 @@ impl Json {
     }
 
     // ---- accessors -----------------------------------------------------------
+    /// Object field lookup; None on non-objects and missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -49,6 +58,7 @@ impl Json {
         Some(cur)
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -56,10 +66,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// String slice, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -67,6 +79,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -74,6 +87,7 @@ impl Json {
         }
     }
 
+    /// Element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -82,6 +96,7 @@ impl Json {
     }
 
     // ---- parsing -------------------------------------------------------------
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, i: 0 };
@@ -143,9 +158,12 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+/// Parse failure, with the byte offset it occurred at.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// Byte offset into the input where parsing failed.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

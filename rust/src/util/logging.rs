@@ -5,17 +5,24 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
+/// Log severity, most severe first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable or data-losing conditions; always shown.
     Error = 0,
+    /// Degraded-but-continuing conditions.
     Warn = 1,
+    /// Lifecycle events (the default level).
     Info = 2,
+    /// Per-operation detail (enable with `DSDE_LOG=debug`).
     Debug = 3,
+    /// Hot-path tracing.
     Trace = 4,
 }
 
 impl Level {
+    /// Parse a case-insensitive level name.
     pub fn from_str(s: &str) -> Option<Level> {
         match s.to_ascii_lowercase().as_str() {
             "error" => Some(Level::Error),
@@ -27,6 +34,7 @@ impl Level {
         }
     }
 
+    /// Fixed-width tag used in the log line prefix.
     pub fn tag(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -57,10 +65,12 @@ pub fn init() {
     }
 }
 
+/// Whether messages at `level` currently pass the filter.
 pub fn enabled(level: Level) -> bool {
     (level as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one log line (the `log_*!` macros route here).
 pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;

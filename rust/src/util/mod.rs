@@ -10,3 +10,4 @@ pub mod proptest;
 pub mod ring;
 pub mod rng;
 pub mod stats;
+pub mod sys;

@@ -23,6 +23,7 @@ pub struct RingBuf<T> {
 }
 
 impl<T> RingBuf<T> {
+    /// Create a window retaining the `cap` most recent items (cap > 0).
     pub fn new(cap: usize) -> RingBuf<T> {
         assert!(cap > 0);
         RingBuf {
@@ -46,10 +47,12 @@ impl<T> RingBuf<T> {
         self.buf.len()
     }
 
+    /// Whether nothing is retained.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
 
+    /// The retention capacity set at construction.
     pub fn capacity(&self) -> usize {
         self.cap
     }
@@ -69,6 +72,7 @@ impl<T> RingBuf<T> {
         self.buf.iter()
     }
 
+    /// Drop all retained items (the total-pushed counter is kept).
     pub fn clear(&mut self) {
         self.buf.clear();
     }
@@ -93,6 +97,7 @@ pub struct Ring {
 }
 
 impl Ring {
+    /// Create a ring holding up to `cap` values (cap > 0).
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0);
         Ring {
@@ -103,6 +108,7 @@ impl Ring {
         }
     }
 
+    /// Append, evicting the oldest value when at capacity.
     pub fn push(&mut self, x: f64) {
         self.buf[self.head] = x;
         self.head = (self.head + 1) % self.cap;
@@ -111,22 +117,27 @@ impl Ring {
         }
     }
 
+    /// Values currently held.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether nothing has been pushed (or the ring was cleared).
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Whether the ring holds `capacity` values.
     pub fn is_full(&self) -> bool {
         self.len == self.cap
     }
 
+    /// The capacity set at construction.
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
+    /// Forget all values.
     pub fn clear(&mut self) {
         self.len = 0;
         self.head = 0;

@@ -44,6 +44,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);

@@ -118,6 +118,7 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Welford {
             n: 0,
@@ -128,6 +129,7 @@ impl Welford {
         }
     }
 
+    /// Fold in one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -137,10 +139,12 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Observations folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0.0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -149,6 +153,7 @@ impl Welford {
         }
     }
 
+    /// Running population variance (0.0 for fewer than 2 observations).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -157,6 +162,7 @@ impl Welford {
         }
     }
 
+    /// Running population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
@@ -182,6 +188,7 @@ impl Welford {
         self.max = self.max.max(other.max);
     }
 
+    /// Smallest observation (0.0 when empty).
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -190,6 +197,7 @@ impl Welford {
         }
     }
 
+    /// Largest observation (0.0 when empty).
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             0.0

@@ -1,0 +1,235 @@
+//! Thin `extern "C"` shim over the POSIX readiness API (no `libc` crate in
+//! the offline vendor set).
+//!
+//! The event-loop HTTP front-end (`server/event_loop.rs`) needs exactly
+//! three primitives the standard library does not expose: `poll(2)` for
+//! readiness multiplexing, `pipe(2)` for a self-pipe waker, and
+//! `fcntl(2)` to make the pipe ends nonblocking.  This module declares
+//! them directly against the system libc that `std` already links, wraps
+//! them in safe Rust, and keeps every `unsafe` block in the crate behind
+//! this one file.
+//!
+//! Everything here is POSIX (the repo's build and CI targets are Linux);
+//! sockets themselves stay `std::net` types — only their raw fds are
+//! borrowed for the poll set.
+
+use std::io;
+use std::os::raw::{c_int, c_ulong};
+
+/// One entry in a [`poll`] set, laid out exactly like libc's `struct
+/// pollfd`.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    /// File descriptor to watch (a negative fd is ignored by the kernel).
+    pub fd: i32,
+    /// Requested readiness events ([`POLLIN`] / [`POLLOUT`] bits).
+    pub events: i16,
+    /// Returned readiness events (includes error bits even when not
+    /// requested).
+    pub revents: i16,
+}
+
+impl PollFd {
+    /// Watch `fd` for the given interest bits.
+    pub fn new(fd: i32, events: i16) -> PollFd {
+        PollFd {
+            fd,
+            events,
+            revents: 0,
+        }
+    }
+
+    /// Whether any of `bits` came back in `revents`.
+    pub fn has(&self, bits: i16) -> bool {
+        self.revents & bits != 0
+    }
+}
+
+/// Readable (or a peer hangup with pending data).
+pub const POLLIN: i16 = 0x001;
+/// Writable without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition on the fd (always reported, never requested).
+pub const POLLERR: i16 = 0x008;
+/// Peer closed the connection (always reported, never requested).
+pub const POLLHUP: i16 = 0x010;
+/// The fd is not open (always reported, never requested).
+pub const POLLNVAL: i16 = 0x020;
+
+mod c {
+    use std::os::raw::{c_int, c_ulong};
+
+    extern "C" {
+        pub fn poll(fds: *mut super::PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+    }
+}
+
+const F_GETFL: c_int = 3;
+const F_SETFL: c_int = 4;
+const O_NONBLOCK: c_int = 0o4000;
+
+/// Block until at least one entry is ready, `timeout_ms` elapses
+/// (`-1` = forever, `0` = nonblocking), or a signal arrives.  Retries
+/// `EINTR` internally; returns the number of entries with nonzero
+/// `revents`.
+pub fn poll(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        // SAFETY: `fds` is a live, exclusively borrowed slice of repr(C)
+        // pollfd-compatible structs; the kernel writes only `revents`.
+        let rc = unsafe { c::poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+fn set_nonblocking(fd: c_int) -> io::Result<()> {
+    // SAFETY: plain fcntl flag read/modify/write on an fd we own.
+    let flags = unsafe { c::fcntl(fd, F_GETFL) };
+    if flags < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let rc = unsafe { c::fcntl(fd, F_SETFL, flags | O_NONBLOCK) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+/// Self-pipe waker: lets any thread interrupt a [`poll`] sleep.
+///
+/// The read end is registered in the poll set alongside the sockets; any
+/// thread holding a clone of the `Arc<Waker>` calls [`Waker::wake`] to
+/// make the loop's `poll` return immediately.  Both pipe ends are
+/// nonblocking, so `wake` never blocks: once the pipe's buffer holds a
+/// byte the wake-up is already guaranteed and further writes may be
+/// dropped (`EAGAIN`) without losing anything.  This is how engine
+/// replica threads notify the event loop that a `StreamEvent` or
+/// `FinishedRequest` is ready without any blocking `recv` — see
+/// `EngineRouter::submit_streaming_with_waker`.
+#[derive(Debug)]
+pub struct Waker {
+    read_fd: c_int,
+    write_fd: c_int,
+}
+
+impl Waker {
+    /// Create a nonblocking self-pipe pair.
+    pub fn new() -> io::Result<Waker> {
+        let mut fds: [c_int; 2] = [0; 2];
+        // SAFETY: `fds` is a valid out-array of two c_ints.
+        let rc = unsafe { c::pipe(fds.as_mut_ptr()) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let waker = Waker {
+            read_fd: fds[0],
+            write_fd: fds[1],
+        };
+        set_nonblocking(waker.read_fd)?;
+        set_nonblocking(waker.write_fd)?;
+        Ok(waker)
+    }
+
+    /// The read end, for registering in a poll set with [`POLLIN`].
+    pub fn read_fd(&self) -> i32 {
+        self.read_fd
+    }
+
+    /// Interrupt the poller.  Never blocks; a full pipe means a wake-up
+    /// is already pending, so the dropped byte is harmless.
+    pub fn wake(&self) {
+        let byte = [1u8];
+        // SAFETY: writing one byte from a live stack buffer to an fd we
+        // own; the nonblocking pipe returns EAGAIN instead of blocking.
+        let _ = unsafe { c::write(self.write_fd, byte.as_ptr(), 1) };
+    }
+
+    /// Consume all pending wake-up bytes (call after `poll` reports the
+    /// read end readable, before handling the work the wakes announced).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            // SAFETY: reading into a live stack buffer from an fd we own.
+            let n = unsafe { c::read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+            if n <= 0 {
+                break; // empty (EAGAIN), EOF, or error: nothing left
+            }
+        }
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        // SAFETY: closing fds this struct exclusively owns.
+        unsafe {
+            c::close(self.read_fd);
+            c::close(self.write_fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poll_times_out_on_idle_pipe() {
+        let w = Waker::new().unwrap();
+        let mut fds = [PollFd::new(w.read_fd(), POLLIN)];
+        let n = poll(&mut fds, 0).unwrap();
+        assert_eq!(n, 0);
+        assert!(!fds[0].has(POLLIN));
+    }
+
+    #[test]
+    fn wake_makes_pipe_readable_and_drain_clears_it() {
+        let w = Waker::new().unwrap();
+        w.wake();
+        w.wake(); // coalesced wakes are fine
+        let mut fds = [PollFd::new(w.read_fd(), POLLIN)];
+        let n = poll(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].has(POLLIN));
+        w.drain();
+        let mut fds = [PollFd::new(w.read_fd(), POLLIN)];
+        assert_eq!(poll(&mut fds, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn wake_from_another_thread_interrupts_poll() {
+        let w = std::sync::Arc::new(Waker::new().unwrap());
+        let w2 = w.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            w2.wake();
+        });
+        let mut fds = [PollFd::new(w.read_fd(), POLLIN)];
+        let t0 = std::time::Instant::now();
+        let n = poll(&mut fds, 5000).unwrap();
+        assert_eq!(n, 1);
+        assert!(t0.elapsed().as_secs() < 5, "poll returned via wake, not timeout");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wake_never_blocks_even_when_pipe_is_full() {
+        let w = Waker::new().unwrap();
+        // a linux pipe buffers 64KiB; far more wakes than that must all
+        // return immediately
+        for _ in 0..100_000 {
+            w.wake();
+        }
+        w.drain();
+    }
+}

@@ -11,14 +11,17 @@ use crate::util::rng::Rng;
 /// A named dataset workload.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Length/acceptance profile backing this dataset's simulator regime.
     pub profile: DatasetProfile,
 }
 
 impl Dataset {
+    /// Look up one of the paper's eight datasets by name (e.g. `cnndm`).
     pub fn by_name(name: &str) -> Option<Dataset> {
         DatasetProfile::by_name(name).map(|profile| Dataset { profile })
     }
 
+    /// All eight evaluation datasets.
     pub fn all() -> Vec<Dataset> {
         DatasetProfile::all()
             .into_iter()
@@ -26,6 +29,7 @@ impl Dataset {
             .collect()
     }
 
+    /// The dataset's stable name.
     pub fn name(&self) -> &'static str {
         self.profile.name
     }
@@ -50,10 +54,12 @@ pub struct WorkloadGen {
     /// clamp on generated output length (e.g. context budget of the tiny
     /// PJRT model); usize::MAX = profile-driven only
     pub max_output: usize,
+    /// clamp on generated prompt length; usize::MAX = profile-driven only
     pub max_prompt: usize,
 }
 
 impl WorkloadGen {
+    /// Deterministic generator over `dataset`, seeded for reproducibility.
     pub fn new(dataset: Dataset, seed: u64) -> WorkloadGen {
         WorkloadGen {
             dataset,
@@ -65,6 +71,7 @@ impl WorkloadGen {
         }
     }
 
+    /// Builder-style sampling temperature for the generated requests.
     pub fn with_temperature(mut self, t: f64) -> WorkloadGen {
         self.temperature = t;
         self
@@ -77,6 +84,7 @@ impl WorkloadGen {
         self
     }
 
+    /// The dataset this generator draws from.
     pub fn dataset(&self) -> &Dataset {
         &self.dataset
     }
@@ -177,6 +185,7 @@ pub struct PoissonArrivals {
 }
 
 impl PoissonArrivals {
+    /// A Poisson process with `rate_per_s` expected arrivals per second.
     pub fn new(rate_per_s: f64, seed: u64) -> PoissonArrivals {
         let mut rng = Rng::new(seed);
         let first = rng.exponential(rate_per_s);

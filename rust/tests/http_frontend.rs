@@ -1,0 +1,433 @@
+//! Cross-front-end integration tests for the HTTP serving layer.
+//!
+//! The contract under test: the `threaded` and `event-loop` front-ends
+//! are interchangeable — same endpoints, same limits, and (for the
+//! deterministic simulator with a fixed seed) **byte-identical**
+//! responses — while the event loop serves many concurrent streaming
+//! connections from a single loop thread, never stalls on a slow
+//! reader, and still honors drain/abort semantics.
+//!
+//! Byte-identity is asserted over *sequential* requests: under
+//! concurrency the router's id assignment (and therefore the simulator's
+//! per-sequence RNG streams) depends on socket arrival order, so
+//! concurrent runs are checked for completeness and per-stream
+//! invariants instead.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use dsde::config::{EngineConfig, FrontendKind, RoutePolicy, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::server::client;
+use dsde::server::http::{serve_router_with, ConnLimits, ServeOptions, ServerHandle};
+use dsde::server::router::EngineRouter;
+use dsde::sim::regime::DatasetProfile;
+
+const BOTH: [FrontendKind; 2] = [FrontendKind::Threaded, FrontendKind::EventLoop];
+
+fn sim_engine(seed: u64, max_batch: usize, max_len: usize) -> Engine {
+    let cfg = EngineConfig {
+        max_batch,
+        max_len,
+        policy: SlPolicyKind::Dsde(Default::default()),
+        seed,
+        ..Default::default()
+    };
+    let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), seed);
+    Engine::new(cfg, Box::new(model))
+}
+
+fn server_with(kind: FrontendKind, max_batch: usize, limits: ConnLimits) -> ServerHandle {
+    let router = EngineRouter::new(
+        vec![sim_engine(1, max_batch, 4096)],
+        RoutePolicy::RoundRobin,
+    );
+    serve_router_with(
+        router,
+        "127.0.0.1:0",
+        ServeOptions {
+            frontend: kind,
+            limits,
+        },
+    )
+    .unwrap()
+}
+
+fn server(kind: FrontendKind) -> ServerHandle {
+    server_with(kind, 4, ConnLimits::default())
+}
+
+fn raw(addr: SocketAddr, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn post_completion(prompt: &str, max_tokens: usize, stream: bool) -> String {
+    let body = if stream {
+        format!(r#"{{"prompt": "{prompt}", "max_tokens": {max_tokens}, "stream": true}}"#)
+    } else {
+        format!(r#"{{"prompt": "{prompt}", "max_tokens": {max_tokens}}}"#)
+    };
+    format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Same seed + same sequential request order ⇒ the two front-ends must
+/// answer with the exact same bytes, for blocking and streaming
+/// completions and for every protocol-error response.
+#[test]
+fn frontends_produce_byte_identical_responses() {
+    let transcript = |kind: FrontendKind| -> Vec<String> {
+        let h = server(kind);
+        let addr = h.addr;
+        let out = vec![
+            raw(addr, &post_completion("def compute(x):", 12, false)),
+            raw(addr, &post_completion("hello world", 8, true)),
+            raw(addr, &post_completion("summarize this", 6, false)),
+            raw(addr, &post_completion("stream two", 10, true)),
+            // malformed request line -> 400
+            raw(addr, "BAD\r\n\r\n"),
+            // bad JSON body -> 400
+            raw(
+                addr,
+                "POST /v1/completions HTTP/1.1\r\nContent-Length: 5\r\n\r\n{nope",
+            ),
+            // unknown path -> 404
+            raw(addr, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n"),
+            // wrong methods on known paths -> 405
+            raw(addr, "PUT /v1/completions HTTP/1.1\r\nContent-Length: 0\r\n\r\n"),
+            raw(addr, "POST /health HTTP/1.1\r\nContent-Length: 0\r\n\r\n"),
+            // oversized declared body -> 413
+            raw(
+                addr,
+                "POST /v1/completions HTTP/1.1\r\nContent-Length: 10000000\r\n\r\n",
+            ),
+        ];
+        h.shutdown();
+        out
+    };
+    let threaded = transcript(FrontendKind::Threaded);
+    let event_loop = transcript(FrontendKind::EventLoop);
+    assert_eq!(threaded.len(), event_loop.len());
+    for (i, (t, e)) in threaded.iter().zip(&event_loop).enumerate() {
+        assert_eq!(t, e, "response {i} differs across front-ends");
+    }
+    // sanity on what was compared
+    assert!(threaded[0].starts_with("HTTP/1.1 200"), "{}", threaded[0]);
+    assert!(threaded[1].contains("Transfer-Encoding: chunked"), "{}", threaded[1]);
+    assert!(threaded[1].contains("\"done\":true"), "{}", threaded[1]);
+    assert!(threaded[1].ends_with("0\r\n\r\n"), "{}", threaded[1]);
+    assert!(threaded[4].starts_with("HTTP/1.1 400"), "{}", threaded[4]);
+    assert!(threaded[5].starts_with("HTTP/1.1 400"), "{}", threaded[5]);
+    assert!(threaded[6].starts_with("HTTP/1.1 404"), "{}", threaded[6]);
+    assert!(threaded[7].starts_with("HTTP/1.1 405"), "{}", threaded[7]);
+    assert!(threaded[8].starts_with("HTTP/1.1 405"), "{}", threaded[8]);
+    assert!(threaded[9].starts_with("HTTP/1.1 413"), "{}", threaded[9]);
+}
+
+/// N concurrent blocking + streaming clients all complete on both
+/// front-ends, with correct token counts and well-formed streams.
+#[test]
+fn concurrent_mixed_clients_complete_on_both_frontends() {
+    for kind in BOTH {
+        let h = server_with(kind, 16, ConnLimits::default());
+        let addr = h.addr.to_string();
+        let mut threads = Vec::new();
+        for i in 0..16 {
+            let addr = addr.clone();
+            threads.push(std::thread::spawn(move || {
+                let r = client::complete(&addr, &format!("blocking {i}"), 12, 0.0).unwrap();
+                assert_eq!(r.status, 200);
+                assert_eq!(r.body.get("tokens").and_then(|t| t.as_usize()), Some(12));
+            }));
+        }
+        for i in 0..16 {
+            let addr = addr.clone();
+            threads.push(std::thread::spawn(move || {
+                let r =
+                    client::complete_streaming(&addr, &format!("stream {i}"), 12, 0.0).unwrap();
+                assert_eq!(r.status, 200);
+                assert_eq!(r.tokens(), 12, "deltas must cover the full output");
+                assert_eq!(
+                    r.finale.get("finish_reason").and_then(|f| f.as_str()),
+                    Some("max_tokens")
+                );
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(
+            h.frontend_stats().accepted() >= 32,
+            "{kind:?}: accepted {}",
+            h.frontend_stats().accepted()
+        );
+        h.shutdown();
+    }
+}
+
+/// A streaming client that never reads its response must not stall the
+/// event loop: its output backpressures into that connection's buffer
+/// while every other connection keeps being served.
+#[test]
+fn slow_streaming_reader_does_not_stall_other_connections() {
+    let h = server_with(FrontendKind::EventLoop, 8, ConnLimits::default());
+    let addr = h.addr;
+    let mut slow = TcpStream::connect(addr).unwrap();
+    slow.write_all(post_completion("slow reader", 2048, true).as_bytes())
+        .unwrap();
+    // let the loop dispatch the slow stream before loading the server
+    std::thread::sleep(Duration::from_millis(150));
+    for i in 0..6 {
+        let r = client::complete(&addr.to_string(), &format!("fast {i}"), 8, 0.0).unwrap();
+        assert_eq!(r.status, 200, "blocking client stalled behind slow reader");
+    }
+    let s = client::complete_streaming(&addr.to_string(), "fast stream", 8, 0.0).unwrap();
+    assert_eq!(s.tokens(), 8, "streaming client stalled behind slow reader");
+    drop(slow); // close the stalled connection so shutdown drains cleanly
+    h.shutdown();
+}
+
+/// Graceful drain under the event loop: open streams run to their
+/// terminal event with the complete output before shutdown returns.
+#[test]
+fn event_loop_drain_completes_open_streams() {
+    let h = server_with(FrontendKind::EventLoop, 8, ConnLimits::default());
+    let addr = h.addr.to_string();
+    let clients: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                client::complete_streaming(&addr, &format!("drain {i}"), 512, 0.0).unwrap()
+            })
+        })
+        .collect();
+    // wait until all four streams are actually in flight (or already done)
+    let t0 = Instant::now();
+    while h.router().in_flight() < 4 && h.router().aggregated_metrics().completed < 4 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "streams never reached the engine"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    h.shutdown(); // drain: every open stream must still complete fully
+    for c in clients {
+        let r = c.join().unwrap();
+        assert_eq!(r.tokens(), 512);
+        assert_eq!(
+            r.finale.get("finish_reason").and_then(|f| f.as_str()),
+            Some("max_tokens")
+        );
+    }
+}
+
+/// Abort under the event loop: open streams terminate promptly with an
+/// `aborted` summary instead of hanging or truncating.
+#[test]
+fn event_loop_abort_terminates_open_streams() {
+    // huge context + output budget: the request cannot finish on its own
+    // before the abort lands
+    let router = EngineRouter::new(
+        vec![sim_engine(1, 4, 1 << 20)],
+        RoutePolicy::RoundRobin,
+    );
+    let h = serve_router_with(
+        router,
+        "127.0.0.1:0",
+        ServeOptions {
+            frontend: FrontendKind::EventLoop,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = h.addr.to_string();
+    let c = std::thread::spawn(move || {
+        client::complete_streaming(&addr, "long running", 200_000, 0.0).unwrap()
+    });
+    let t0 = Instant::now();
+    while h.router().in_flight() < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "stream never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    h.router().abort();
+    let r = c.join().unwrap();
+    assert_eq!(
+        r.finale.get("finish_reason").and_then(|f| f.as_str()),
+        Some("aborted")
+    );
+    h.shutdown();
+}
+
+/// Slowloris guard: a connection that never completes its headers is
+/// answered `408` and closed, on both front-ends.
+#[test]
+fn header_read_timeout_closes_slowloris_connections() {
+    for kind in BOTH {
+        let limits = ConnLimits {
+            header_timeout: Duration::from_millis(250),
+            idle_timeout: Duration::from_millis(2000),
+            ..Default::default()
+        };
+        let h = server_with(kind, 4, limits);
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        s.write_all(b"GET /health HT").unwrap(); // headers never finish
+        let t0 = Instant::now();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 408"), "{kind:?}: {out:?}");
+        assert!(out.contains("header read timeout"), "{kind:?}: {out}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "{kind:?}: timeout took {:?}",
+            t0.elapsed()
+        );
+        h.shutdown();
+    }
+}
+
+/// Idle guard: headers arrive but the declared body never does — the
+/// connection is answered `408` after the idle budget, on both
+/// front-ends.
+#[test]
+fn idle_timeout_closes_stalled_body_connections() {
+    for kind in BOTH {
+        let limits = ConnLimits {
+            header_timeout: Duration::from_millis(2000),
+            idle_timeout: Duration::from_millis(250),
+            ..Default::default()
+        };
+        let h = server_with(kind, 4, limits);
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        s.write_all(b"POST /v1/completions HTTP/1.1\r\nContent-Length: 5\r\n\r\n")
+            .unwrap(); // body never arrives
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 408"), "{kind:?}: {out:?}");
+        assert!(out.contains("idle timeout"), "{kind:?}: {out}");
+        h.shutdown();
+    }
+}
+
+/// Oversized header blocks are rejected with `413` on both front-ends.
+#[test]
+fn oversized_headers_rejected_with_413() {
+    for kind in BOTH {
+        let h = server(kind);
+        let junk = format!(
+            "GET /health HTTP/1.1\r\nX-Pad: {}\r\n\r\n",
+            "a".repeat(20_000)
+        );
+        let resp = raw(h.addr, &junk);
+        assert!(resp.starts_with("HTTP/1.1 413"), "{kind:?}: {resp}");
+        assert!(resp.contains("\"error\""), "{kind:?}: {resp}");
+        h.shutdown();
+    }
+}
+
+/// The open-connection cap turns extra connections away with `503` and
+/// counts them, on both front-ends.
+#[test]
+fn connection_cap_rejects_with_503() {
+    for kind in BOTH {
+        let limits = ConnLimits {
+            max_open_conns: 1,
+            ..Default::default()
+        };
+        let h = server_with(kind, 4, limits);
+        let s1 = TcpStream::connect(h.addr).unwrap();
+        // let the server register the held connection before the next one
+        std::thread::sleep(Duration::from_millis(150));
+        let resp = raw(h.addr, "GET /health HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 503"), "{kind:?}: {resp:?}");
+        assert!(h.frontend_stats().rejected() >= 1, "{kind:?}");
+        drop(s1);
+        h.shutdown();
+    }
+}
+
+/// `/health` and `/v1/metrics` expose the active front-end kind and the
+/// connection counters.
+#[test]
+fn health_and_metrics_report_frontend_counters() {
+    for kind in BOTH {
+        let h = server(kind);
+        let health = raw(h.addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(
+            health.contains(&format!("\"kind\":\"{}\"", kind.name())),
+            "{kind:?}: {health}"
+        );
+        assert!(health.contains("\"open_connections\":"), "{kind:?}: {health}");
+        let metrics = raw(h.addr, "GET /v1/metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(metrics.contains("\"frontend\":{"), "{kind:?}: {metrics}");
+        assert!(metrics.contains("\"rejected\":0"), "{kind:?}: {metrics}");
+        // both requests above were accepted and have closed by now
+        let t0 = Instant::now();
+        while h.frontend_stats().open() > 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(h.frontend_stats().accepted() >= 2, "{kind:?}");
+        assert_eq!(h.frontend_stats().open(), 0, "{kind:?}");
+        h.shutdown();
+    }
+}
+
+/// The event loop holds many concurrent streaming connections on its one
+/// thread (tier-1-sized; the 1k soak below scales it up).
+#[test]
+fn event_loop_serves_many_concurrent_streams() {
+    let h = server_with(FrontendKind::EventLoop, 32, ConnLimits::default());
+    let addr = h.addr.to_string();
+    let threads: Vec<_> = (0..128)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let r = client::complete_streaming(&addr, &format!("c{i}"), 16, 0.0).unwrap();
+                assert_eq!(r.tokens(), 16);
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert!(h.frontend_stats().accepted() >= 128);
+    h.shutdown();
+}
+
+/// Soak (CI `soak` job, `cargo test --release -- --ignored`): ≥1k
+/// concurrent streaming clients against the event loop — concurrency the
+/// threaded front-end would pay 1k blocked threads for, served here by a
+/// single loop thread.
+#[test]
+#[ignore]
+fn event_loop_serves_1k_concurrent_streams() {
+    let h = server_with(FrontendKind::EventLoop, 64, ConnLimits::default());
+    let addr = h.addr.to_string();
+    let threads: Vec<_> = (0..1024)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let r = client::complete_streaming(&addr, &format!("c{i}"), 8, 0.0).unwrap();
+                assert_eq!(r.tokens(), 8);
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert!(h.frontend_stats().accepted() >= 1024);
+    // every connection drains back out of the loop
+    let t0 = Instant::now();
+    while h.frontend_stats().open() > 0 && t0.elapsed() < Duration::from_secs(30) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(h.frontend_stats().open(), 0);
+    h.shutdown();
+}
