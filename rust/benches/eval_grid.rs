@@ -1,0 +1,31 @@
+//! Eval-grid bench: run a micro grid through the eval runner and print
+//! the paper-style Markdown table.  Mainly a bitrot guard for the eval
+//! subsystem from the bench side — the CI `eval-smoke` job exercises the
+//! same path through the `pallas eval` CLI.
+
+use std::time::Instant;
+
+use dsde::eval::{run_grid, GridSpec};
+use dsde::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut grid = GridSpec::default_grid().smoke();
+    if args.flag("smoke") {
+        // CI-sized: two datasets x two policy points, minimal cells
+        grid.workloads.truncate(2);
+        grid.policies.truncate(2);
+        grid.requests = 4;
+    }
+    let t0 = Instant::now();
+    let report = run_grid(&grid, |i, total, label| {
+        eprintln!("[{:>3}/{total}] {label}", i + 1);
+    })
+    .expect("grid run");
+    print!("{}", report.to_markdown());
+    println!(
+        "\n{} cell(s) in {:.2}s",
+        report.cells.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

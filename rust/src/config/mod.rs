@@ -241,6 +241,10 @@ pub struct RouterConfig {
     pub steal: bool,
     /// Which HTTP front-end faces the clients.
     pub frontend: FrontendKind,
+    /// Serving-trace recording (`--record <path>`): when set, every
+    /// routed request is appended to this NDJSON trace for later
+    /// `pallas eval --replay` comparison.  `None` = no recording.
+    pub record: Option<String>,
 }
 
 impl Default for RouterConfig {
@@ -250,6 +254,7 @@ impl Default for RouterConfig {
             policy: RoutePolicy::RoundRobin,
             steal: true,
             frontend: FrontendKind::Threaded,
+            record: None,
         }
     }
 }
@@ -273,6 +278,13 @@ impl RouterConfig {
             .set("route", self.policy.name())
             .set("steal", self.steal)
             .set("frontend", self.frontend.name())
+            .set(
+                "record",
+                match &self.record {
+                    Some(path) => Json::Str(path.clone()),
+                    None => Json::Null,
+                },
+            )
     }
 }
 
@@ -362,6 +374,13 @@ mod tests {
         assert!(s.contains("\"route\":\"round-robin\""));
         assert!(s.contains("\"steal\":true"));
         assert!(s.contains("\"frontend\":\"threaded\""));
+        assert!(s.contains("\"record\":null"));
+        let recording = RouterConfig {
+            record: Some("trace.ndjson".to_string()),
+            ..Default::default()
+        };
+        let s = recording.to_json().to_string();
+        assert!(s.contains("\"record\":\"trace.ndjson\""), "{s}");
     }
 
     #[test]

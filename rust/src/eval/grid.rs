@@ -1,0 +1,425 @@
+//! Grid expansion: the axes of the evaluation space and their cartesian
+//! product into runnable [`CellSpec`]s.
+
+use crate::config::{CapMode, RoutePolicy, SlPolicyKind};
+use crate::model::sim_lm::SimPairKind;
+use crate::repro::ExperimentSpec;
+use crate::sim::regime::DatasetProfile;
+use crate::spec::adapter::{AdaEdlConfig, DsdeConfig};
+use crate::util::json::Json;
+use crate::workload::MixedWorkloadGen;
+
+/// One point on the policy axis: an SL policy plus the batch-wide cap
+/// mode it runs under ("with and without the adaptive cap" is two
+/// points).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyPoint {
+    /// SL policy under test.
+    pub policy: SlPolicyKind,
+    /// Batch-wide SL-cap mode (paper §3.3).
+    pub cap: CapMode,
+}
+
+impl PolicyPoint {
+    /// Construct from policy + cap.
+    pub fn new(policy: SlPolicyKind, cap: CapMode) -> PolicyPoint {
+        PolicyPoint { policy, cap }
+    }
+
+    /// Parse CLI shorthand `<policy>[+<cap>]`, e.g. `dsde`, `dsde+none`,
+    /// `static:4+median` (the cap defaults to `mean`).
+    pub fn parse(s: &str) -> Option<PolicyPoint> {
+        let (p, cap) = match s.split_once('+') {
+            Some((p, c)) => (p, CapMode::parse(c.trim())?),
+            None => (s, CapMode::Mean),
+        };
+        Some(PolicyPoint {
+            policy: SlPolicyKind::parse(p.trim())?,
+            cap,
+        })
+    }
+
+    /// Stable cell label, e.g. `dsde+mean`.
+    pub fn label(&self) -> String {
+        format!("{}+{}", self.policy.name(), self.cap.name())
+    }
+}
+
+/// Arrival overlay for open-loop cells.  Non-closed overlays pace
+/// admissions on the simulator's *virtual* clock, so open-loop cells are
+/// as deterministic as closed ones.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalSpec {
+    /// Closed loop: every request queued up front.
+    Closed,
+    /// Poisson arrivals.
+    Poisson {
+        /// Expected arrivals per virtual second.
+        rate: f64,
+    },
+    /// Bursty on/off overlay (see [`crate::workload::BurstyArrivals`]):
+    /// gap phases at `base` alternate with burst phases at `burst`.
+    Bursty {
+        /// Arrivals per virtual second inside gap phases.
+        base: f64,
+        /// Arrivals per virtual second inside burst phases.
+        burst: f64,
+        /// Mean gap-phase length in virtual seconds.
+        gap_s: f64,
+        /// Mean burst-phase length in virtual seconds.
+        burst_s: f64,
+    },
+}
+
+impl ArrivalSpec {
+    /// Parse `closed`, `poisson:<rate>`, or
+    /// `bursty:<base>,<burst>,<gap_s>,<burst_s>`.
+    pub fn parse(s: &str) -> Option<ArrivalSpec> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("closed") {
+            return Some(ArrivalSpec::Closed);
+        }
+        let (head, args) = s.split_once(':')?;
+        match head.to_ascii_lowercase().as_str() {
+            "poisson" => {
+                let rate: f64 = args.trim().parse().ok()?;
+                (rate > 0.0).then_some(ArrivalSpec::Poisson { rate })
+            }
+            "bursty" => {
+                let parts: Vec<f64> = args
+                    .split(',')
+                    .map(|p| p.trim().parse::<f64>())
+                    .collect::<Result<_, _>>()
+                    .ok()?;
+                let &[base, burst, gap_s, burst_s] = parts.as_slice() else {
+                    return None;
+                };
+                (base > 0.0 && burst > 0.0 && gap_s > 0.0 && burst_s > 0.0).then_some(
+                    ArrivalSpec::Bursty {
+                        base,
+                        burst,
+                        gap_s,
+                        burst_s,
+                    },
+                )
+            }
+            _ => None,
+        }
+    }
+
+    /// Stable label for reports and progress lines.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalSpec::Closed => "closed".to_string(),
+            ArrivalSpec::Poisson { rate } => format!("poisson:{rate}"),
+            ArrivalSpec::Bursty {
+                base,
+                burst,
+                gap_s,
+                burst_s,
+            } => format!("bursty:{base},{burst},{gap_s},{burst_s}"),
+        }
+    }
+}
+
+/// Resolve a workload string — a dataset name (`cnndm`) or a weighted mix
+/// spec (`sharegpt=2+humaneval=1`) — into the simulator profile its cells
+/// run against.  Mixes blend their components' profiles by weight
+/// ([`DatasetProfile::blend`]).
+pub fn profile_for(workload: &str, divergence: f64) -> Option<DatasetProfile> {
+    if let Some(p) = DatasetProfile::by_name(workload) {
+        return Some(p.with_divergence(divergence));
+    }
+    let mix = MixedWorkloadGen::parse(workload, 0)?;
+    Some(DatasetProfile::blend(&mix.component_profiles()).with_divergence(divergence))
+}
+
+/// The full grid specification: one entry per axis plus the knobs shared
+/// by every cell.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    /// Workload axis: dataset names and/or `+`-separated weighted mixes.
+    pub workloads: Vec<String>,
+    /// Policy axis (SL policy × cap mode points).
+    pub policies: Vec<PolicyPoint>,
+    /// Acceptance-regime axis: divergence scales applied via
+    /// [`DatasetProfile::with_divergence`] (`1.0` = native, `< 1` =
+    /// low-acceptance stress, paper §4.4).
+    pub divergences: Vec<f64>,
+    /// Batch-size axis.
+    pub batches: Vec<usize>,
+    /// Requests per cell.
+    pub requests: usize,
+    /// Engine replicas behind the router per cell.
+    pub replicas: usize,
+    /// Routing policy (multi-replica cells).
+    pub route: RoutePolicy,
+    /// Drain-tail work stealing (multi-replica cells).
+    pub steal: bool,
+    /// Arrival overlay applied to every cell.
+    pub arrivals: ArrivalSpec,
+    /// Sampling temperature.
+    pub temperature: f64,
+    /// Seed for model, engine, and workload streams.
+    pub seed: u64,
+    /// Prompt-length clamp on the workload generators.
+    pub max_prompt: usize,
+    /// Output-length clamp on the workload generators.
+    pub max_output: usize,
+}
+
+impl GridSpec {
+    /// The `--grid default` grid: all eight datasets plus a dialogue/code
+    /// mix × {static-4, AdaEDL, DSDE} with the mean cap plus DSDE without
+    /// any cap × native and low-acceptance regimes × two batch sizes.
+    pub fn default_grid() -> GridSpec {
+        let mut workloads: Vec<String> = DatasetProfile::all()
+            .iter()
+            .map(|p| p.name.to_string())
+            .collect();
+        workloads.push("sharegpt=2+humaneval=1".to_string());
+        GridSpec {
+            workloads,
+            policies: vec![
+                PolicyPoint::new(SlPolicyKind::Static(4), CapMode::Mean),
+                PolicyPoint::new(SlPolicyKind::AdaEdl(AdaEdlConfig::default()), CapMode::Mean),
+                PolicyPoint::new(SlPolicyKind::Dsde(DsdeConfig::default()), CapMode::Mean),
+                PolicyPoint::new(SlPolicyKind::Dsde(DsdeConfig::default()), CapMode::None),
+            ],
+            divergences: vec![1.0, 0.55],
+            batches: vec![8, 32],
+            requests: 64,
+            replicas: 1,
+            route: RoutePolicy::RoundRobin,
+            steal: false,
+            arrivals: ArrivalSpec::Closed,
+            temperature: 0.0,
+            seed: 0,
+            max_prompt: 96,
+            max_output: 256,
+        }
+    }
+
+    /// Shrink to `--smoke` size: two datasets plus the mix, the native
+    /// regime, one small batch, tiny cells with a tight output clamp (the
+    /// clamp-not-reject fix in [`crate::workload::WorkloadGen::with_limits`]
+    /// is what keeps such cells from stalling).
+    pub fn smoke(mut self) -> GridSpec {
+        self.workloads = vec![
+            "cnndm".to_string(),
+            "humaneval".to_string(),
+            "sharegpt=2+humaneval=1".to_string(),
+        ];
+        self.divergences = vec![1.0];
+        self.batches = vec![4];
+        self.requests = 8;
+        self.max_prompt = 48;
+        self.max_output = 24;
+        self
+    }
+
+    /// Cartesian expansion into runnable cells, in axis order (workload
+    /// outermost, batch innermost).
+    pub fn cells(&self) -> Vec<CellSpec> {
+        let mut out = Vec::new();
+        for w in &self.workloads {
+            for p in &self.policies {
+                for &d in &self.divergences {
+                    for &b in &self.batches {
+                        out.push(CellSpec {
+                            workload: w.clone(),
+                            policy: p.clone(),
+                            divergence: d,
+                            batch: b,
+                            requests: self.requests,
+                            replicas: self.replicas,
+                            route: self.route,
+                            steal: self.steal,
+                            arrivals: self.arrivals,
+                            temperature: self.temperature,
+                            seed: self.seed,
+                            max_prompt: self.max_prompt,
+                            max_output: self.max_output,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The `grid` block of the report schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("workloads", self.workloads.clone())
+            .set(
+                "policies",
+                self.policies.iter().map(|p| p.label()).collect::<Vec<_>>(),
+            )
+            .set("divergences", self.divergences.clone())
+            .set("batches", self.batches.clone())
+            .set("requests", self.requests)
+            .set("replicas", self.replicas)
+            .set("route", self.route.name())
+            .set("steal", self.steal)
+            .set("arrivals", self.arrivals.label())
+            .set("temperature", self.temperature)
+            .set("seed", self.seed)
+            .set("max_prompt", self.max_prompt)
+            .set("max_output", self.max_output)
+    }
+}
+
+/// One fully-specified grid cell.
+#[derive(Clone, Debug)]
+pub struct CellSpec {
+    /// Workload: a dataset name or a `+`-separated weighted mix spec.
+    pub workload: String,
+    /// Policy point (SL policy + cap mode).
+    pub policy: PolicyPoint,
+    /// Acceptance divergence scale (`1.0` = native).
+    pub divergence: f64,
+    /// Scheduler batch size.
+    pub batch: usize,
+    /// Requests run through the cell.
+    pub requests: usize,
+    /// Engine replicas behind the router.
+    pub replicas: usize,
+    /// Routing policy (multi-replica cells).
+    pub route: RoutePolicy,
+    /// Drain-tail work stealing (multi-replica cells).
+    pub steal: bool,
+    /// Arrival overlay.
+    pub arrivals: ArrivalSpec,
+    /// Sampling temperature.
+    pub temperature: f64,
+    /// Seed for model/engine/workload streams.
+    pub seed: u64,
+    /// Prompt-length clamp.
+    pub max_prompt: usize,
+    /// Output-length clamp.
+    pub max_output: usize,
+}
+
+impl CellSpec {
+    /// Progress-line label, e.g. `cnndm dsde+mean a1.00 b8`.
+    pub fn label(&self) -> String {
+        format!(
+            "{} {} a{:.2} b{}",
+            self.workload,
+            self.policy.label(),
+            self.divergence,
+            self.batch
+        )
+    }
+
+    /// The simulator profile this cell runs against (`None` on an unknown
+    /// workload string).
+    pub fn profile(&self) -> Option<DatasetProfile> {
+        profile_for(&self.workload, self.divergence)
+    }
+
+    /// The repro-spec core shared with [`crate::repro`].  For mixes the
+    /// `dataset` field keeps the default name — the runner resolves their
+    /// blended profile via [`CellSpec::profile`] and never reads it back.
+    pub(crate) fn experiment(&self) -> ExperimentSpec {
+        let dataset = DatasetProfile::by_name(&self.workload)
+            .map(|p| p.name)
+            .unwrap_or("cnndm");
+        ExperimentSpec {
+            dataset,
+            pair: SimPairKind::LlamaLike,
+            policy: self.policy.policy.clone(),
+            cap: self.policy.cap,
+            speculative: true,
+            batch: self.batch,
+            requests: self.requests,
+            temperature: self.temperature,
+            seed: self.seed,
+            divergence: self.divergence,
+            max_prompt: self.max_prompt,
+            max_output: self.max_output,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_point_parse_forms() {
+        let p = PolicyPoint::parse("dsde").unwrap();
+        assert!(matches!(p.policy, SlPolicyKind::Dsde(_)));
+        assert_eq!(p.cap, CapMode::Mean);
+        let p = PolicyPoint::parse("dsde+none").unwrap();
+        assert_eq!(p.cap, CapMode::None);
+        let p = PolicyPoint::parse("static:6+median").unwrap();
+        assert_eq!(p.policy, SlPolicyKind::Static(6));
+        assert_eq!(p.cap, CapMode::Median);
+        assert_eq!(p.label(), "static-6+median");
+        assert!(PolicyPoint::parse("bogus").is_none());
+        assert!(PolicyPoint::parse("dsde+bogus").is_none());
+    }
+
+    #[test]
+    fn arrival_spec_parse_roundtrip() {
+        for s in ["closed", "poisson:12.5", "bursty:2,40,8,2"] {
+            let a = ArrivalSpec::parse(s).unwrap();
+            assert_eq!(ArrivalSpec::parse(&a.label()), Some(a));
+        }
+        assert!(ArrivalSpec::parse("poisson:-1").is_none());
+        assert!(ArrivalSpec::parse("bursty:1,2,3").is_none());
+        assert!(ArrivalSpec::parse("nope:1").is_none());
+    }
+
+    #[test]
+    fn default_grid_covers_all_datasets_and_a_mix() {
+        let g = GridSpec::default_grid();
+        assert_eq!(g.workloads.len(), 9, "eight datasets + one mix");
+        assert!(g.workloads.iter().any(|w| w.contains('+')), "mix present");
+        assert_eq!(g.policies.len(), 4);
+        // policy axis carries three distinct SL policies and a cap ablation
+        let caps: Vec<&str> = g.policies.iter().map(|p| p.cap.name()).collect();
+        assert!(caps.contains(&"none") && caps.contains(&"mean"));
+        assert_eq!(g.cells().len(), 9 * 4 * 2 * 2);
+    }
+
+    #[test]
+    fn smoke_grid_is_small_but_covers_the_acceptance_floor() {
+        let g = GridSpec::default_grid().smoke();
+        let datasets = g
+            .workloads
+            .iter()
+            .filter(|w| DatasetProfile::by_name(w).is_some())
+            .count();
+        assert!(datasets >= 2, "at least two plain datasets");
+        let mut names: Vec<String> = g.policies.iter().map(|p| p.policy.name()).collect();
+        names.sort();
+        names.dedup();
+        assert!(names.len() >= 3, "at least three SL policies: {names:?}");
+        assert!(g.cells().len() <= 16, "smoke stays tiny");
+        assert!(g.max_output <= 32, "smoke cells exercise tight clamps");
+    }
+
+    #[test]
+    fn profile_resolution_handles_mixes() {
+        let single = profile_for("gsm8k", 1.0).unwrap();
+        assert_eq!(single.name, "gsm8k");
+        let scaled = profile_for("gsm8k", 0.5).unwrap();
+        assert!(scaled.alpha_stable < single.alpha_stable);
+        let mix = profile_for("sharegpt=2+humaneval=1", 1.0).unwrap();
+        assert_eq!(mix.name, "mix");
+        assert!(profile_for("bogus", 1.0).is_none());
+    }
+
+    #[test]
+    fn cell_label_and_experiment_core() {
+        let g = GridSpec::default_grid().smoke();
+        let cell = &g.cells()[0];
+        assert!(cell.label().contains(&cell.workload));
+        let spec = cell.experiment();
+        assert_eq!(spec.batch, cell.batch);
+        assert_eq!(spec.max_output, cell.max_output);
+    }
+}

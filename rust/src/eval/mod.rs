@@ -1,0 +1,36 @@
+//! `pallas eval` — the paper-reproduction evaluation subsystem.
+//!
+//! "Speculative Decoding: Performance or Illusion?" shows SD speedups
+//! routinely evaporating outside the regime they were tuned in, so this
+//! repo's claims are backed by a *reproducible grid*, not ad-hoc bench
+//! sections.  The subsystem has four parts:
+//!
+//! * [`grid`] — the experiment axes (datasets **and weighted mixes** ×
+//!   SL policies with/without the adaptive cap × acceptance regimes ×
+//!   batch sizes, plus optional Poisson/bursty arrival overlays) and
+//!   their cartesian expansion into cells;
+//! * [`runner`] — per-cell execution through the real engine stack:
+//!   single-replica cells run deterministically on the virtual clock,
+//!   multi-replica cells route through an
+//!   [`crate::server::router::EngineRouter`], and arrival-overlay cells
+//!   run an open loop paced on the simulator's virtual time;
+//! * [`report`] — a machine-readable JSON report (schema
+//!   [`report::REPORT_SCHEMA`]) plus a rendered Markdown table mirroring
+//!   the paper's result tables;
+//! * [`trace`] — serving-trace record (`serve --record <path>` writes
+//!   NDJSON) and deterministic replay (`pallas eval --replay <path>`),
+//!   for apples-to-apples comparison of routing/policy configurations
+//!   over the *same* captured traffic.
+//!
+//! `EVALUATION.md` at the repository root maps each paper claim to the
+//! exact `pallas eval` invocation that reproduces it.
+
+pub mod grid;
+pub mod report;
+pub mod runner;
+pub mod trace;
+
+pub use grid::{ArrivalSpec, CellSpec, GridSpec, PolicyPoint};
+pub use report::{GridReport, REPORT_SCHEMA};
+pub use runner::{run_cell, run_grid, CellResult};
+pub use trace::{load_trace, replay, ReplayConfig, ReplayOutcome, TraceEntry, TraceRecorder};

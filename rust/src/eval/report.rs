@@ -1,0 +1,195 @@
+//! Structured eval reports: machine-readable JSON (schema
+//! [`REPORT_SCHEMA`]) plus a rendered Markdown table mirroring the
+//! paper's result tables (latency, TTFT, acceptance, SL distribution,
+//! cap savings per cell).
+
+use super::grid::GridSpec;
+use super::runner::{quantile_value, CellResult};
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+/// Schema tag embedded in every report (`"schema"` key); bump on any
+/// breaking change to the cell row layout.
+pub const REPORT_SCHEMA: &str = "dsde-eval-report-v1";
+
+/// String-typed keys every cell row must carry.
+const CELL_STR_KEYS: &[&str] = &["workload", "policy", "cap", "route", "arrivals"];
+
+/// Number-typed keys every cell row must carry.
+const CELL_NUM_KEYS: &[&str] = &[
+    "divergence",
+    "batch",
+    "replicas",
+    "requests",
+    "completed",
+    "tokens_out",
+    "acceptance_rate",
+    "block_efficiency",
+    "throughput",
+    "mean_latency",
+    "p50_latency",
+    "p99_latency",
+    "mean_ttft",
+    "p99_ttft",
+    "mean_itl",
+    "mean_sl",
+    "sl_std",
+    "cap_savings",
+    "straggler_bubble",
+    "preemptions",
+    "wall_s",
+];
+
+/// A finished grid run: the grid that ran plus every cell's result.
+pub struct GridReport {
+    /// The grid specification that was expanded.
+    pub grid: GridSpec,
+    /// Per-cell results, in expansion order.
+    pub cells: Vec<CellResult>,
+}
+
+impl GridReport {
+    /// The machine-readable report document.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema", REPORT_SCHEMA)
+            .set("grid", self.grid.to_json())
+            .set(
+                "cells",
+                Json::Arr(self.cells.iter().map(|c| c.to_json()).collect()),
+            )
+    }
+
+    /// The Markdown results table (also readable as aligned plain text).
+    pub fn to_markdown(&self) -> String {
+        let mut t = Table::new(&[
+            "workload", "policy", "cap", "alpha", "batch", "lat(s)", "p99(s)", "ttft(s)",
+            "accept", "BE", "SL", "cap_sav",
+        ]);
+        for c in &self.cells {
+            let m = &c.metrics;
+            t.row(&[
+                c.cell.workload.clone(),
+                c.cell.policy.policy.name(),
+                c.cell.policy.cap.name().to_string(),
+                format!("{:.2}", c.cell.divergence),
+                c.cell.batch.to_string(),
+                format!("{:.3}", m.mean_latency()),
+                format!("{:.3}", quantile_value(&m.latency_quantiles, 0.99)),
+                format!("{:.3}", m.ttft.mean()),
+                format!("{:.3}", m.acceptance_rate()),
+                format!("{:.2}", m.block_efficiency()),
+                format!("{:.1}", m.sl_hist.mean()),
+                m.cap_savings.to_string(),
+            ]);
+        }
+        format!(
+            "# `pallas eval` grid report — {} cells\n\n{}",
+            self.cells.len(),
+            t.render()
+        )
+    }
+
+    /// Validate a parsed report against the schema: the schema tag, the
+    /// grid block's axis arrays, and every cell row's typed columns.
+    /// Returns the first violation found.
+    pub fn validate(j: &Json) -> Result<(), String> {
+        if j.get("schema").and_then(|s| s.as_str()) != Some(REPORT_SCHEMA) {
+            return Err(format!("schema tag missing or != {REPORT_SCHEMA:?}"));
+        }
+        let grid = j
+            .get("grid")
+            .ok_or_else(|| "missing grid block".to_string())?;
+        for k in ["workloads", "policies", "divergences", "batches"] {
+            if grid.get(k).and_then(|v| v.as_arr()).is_none() {
+                return Err(format!("grid.{k} missing or not an array"));
+            }
+        }
+        let cells = j
+            .get("cells")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| "cells missing or not an array".to_string())?;
+        if cells.is_empty() {
+            return Err("cells array is empty".to_string());
+        }
+        for (i, c) in cells.iter().enumerate() {
+            for k in CELL_STR_KEYS {
+                if c.get(k).and_then(|v| v.as_str()).is_none() {
+                    return Err(format!("cell {i}: {k} missing or not a string"));
+                }
+            }
+            for k in CELL_NUM_KEYS {
+                if c.get(k).and_then(|v| v.as_f64()).is_none() {
+                    return Err(format!("cell {i}: {k} missing or not a number"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::runner::run_grid;
+
+    fn tiny_report() -> GridReport {
+        let mut grid = GridSpec::default_grid().smoke();
+        grid.workloads = vec!["cnndm".to_string(), "humaneval".to_string()];
+        grid.policies.truncate(2);
+        grid.requests = 4;
+        run_grid(&grid, |_, _, _| {}).unwrap()
+    }
+
+    #[test]
+    fn report_json_roundtrips_and_validates() {
+        let report = tiny_report();
+        let text = report.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        GridReport::validate(&parsed).expect("self-produced report must validate");
+        assert_eq!(
+            parsed.get("cells").unwrap().as_arr().unwrap().len(),
+            report.cells.len()
+        );
+    }
+
+    #[test]
+    fn validation_catches_corruption() {
+        let report = tiny_report();
+        // wrong schema tag
+        let mut j = report.to_json();
+        j = j.set("schema", "nope");
+        assert!(GridReport::validate(&j).is_err());
+        // a cell missing a required numeric column
+        let good = report.to_json();
+        let Json::Obj(mut top) = good.clone() else {
+            panic!("report is an object")
+        };
+        let Some(Json::Arr(cells)) = top.get_mut("cells") else {
+            panic!("cells is an array")
+        };
+        let Json::Obj(row) = &mut cells[0] else {
+            panic!("cell is an object")
+        };
+        row.remove("mean_latency");
+        let err = GridReport::validate(&Json::Obj(top)).unwrap_err();
+        assert!(err.contains("mean_latency"), "{err}");
+        // empty document
+        assert!(GridReport::validate(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn markdown_table_carries_the_paper_columns() {
+        let report = tiny_report();
+        let md = report.to_markdown();
+        assert!(md.contains("| workload"), "{md}");
+        assert!(md.contains("ttft(s)"), "{md}");
+        assert!(md.contains("cap_sav"), "{md}");
+        assert!(md.contains("cnndm"), "{md}");
+        // one header + one separator + one line per cell
+        assert_eq!(
+            md.lines().filter(|l| l.starts_with('|')).count(),
+            report.cells.len() + 2
+        );
+    }
+}

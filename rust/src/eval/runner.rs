@@ -1,0 +1,386 @@
+//! Per-cell execution: drive each [`CellSpec`] through the real engine
+//! stack and reduce the outcome to a [`CellResult`].
+//!
+//! Three drivers, picked per cell:
+//! * **closed, 1 replica** — submit everything, `run_to_completion` on
+//!   the virtual clock: fully deterministic (the report is reproducible
+//!   bit-for-bit for a given seed);
+//! * **closed, N replicas** — the real [`EngineRouter`] path (routing
+//!   policy, work stealing, per-replica threads).  Outputs stay
+//!   placement-invariant; latency aggregates may jitter slightly with
+//!   wall-clock intake timing — exactly like production;
+//! * **arrival overlay** — a single-engine open loop paced on the
+//!   simulator's *virtual* clock: arrival times are drawn from the
+//!   Poisson/bursty process up front, and each request's `arrival` is
+//!   backdated so latency/TTFT include the virtual queueing delay.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::grid::{ArrivalSpec, CellSpec, GridSpec};
+use super::report::GridReport;
+use crate::engine::engine::Engine;
+use crate::engine::metrics::{MetricsSnapshot, DEFAULT_QUANTILES};
+use crate::engine::request::Request;
+use crate::repro::{build_engine_with_profile, ExperimentSpec};
+use crate::server::router::EngineRouter;
+use crate::sim::regime::DatasetProfile;
+use crate::util::json::Json;
+use crate::workload::{
+    BurstyArrivals, Dataset, MixedWorkloadGen, PoissonArrivals, RequestSource, WorkloadGen,
+};
+
+/// One executed cell: its spec plus the metrics it produced.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// The cell that ran.
+    pub cell: CellSpec,
+    /// Pre-reduced engine metrics, aggregated across the cell's replicas.
+    pub metrics: MetricsSnapshot,
+    /// Wall-clock seconds the cell took to execute.
+    pub wall_s: f64,
+}
+
+/// Look up a quantile value in a snapshot's `(quantile, value)` pairs.
+pub(crate) fn quantile_value(pairs: &[(f64, f64)], q: f64) -> f64 {
+    pairs
+        .iter()
+        .find(|(p, _)| (p - q).abs() < 1e-9)
+        .map(|(_, v)| *v)
+        .unwrap_or(0.0)
+}
+
+impl CellResult {
+    /// One flattened row of the report schema's `cells[]` array.
+    pub fn to_json(&self) -> Json {
+        let m = &self.metrics;
+        Json::obj()
+            .set("workload", self.cell.workload.clone())
+            .set("policy", self.cell.policy.policy.name())
+            .set("cap", self.cell.policy.cap.name())
+            .set("divergence", self.cell.divergence)
+            .set("batch", self.cell.batch)
+            .set("replicas", self.cell.replicas)
+            .set("route", self.cell.route.name())
+            .set("arrivals", self.cell.arrivals.label())
+            .set("requests", self.cell.requests)
+            .set("completed", m.completed)
+            .set("tokens_out", m.tokens_out)
+            .set("acceptance_rate", m.acceptance_rate())
+            .set("block_efficiency", m.block_efficiency())
+            .set("throughput", m.throughput())
+            .set("mean_latency", m.mean_latency())
+            .set("p50_latency", quantile_value(&m.latency_quantiles, 0.5))
+            .set("p99_latency", quantile_value(&m.latency_quantiles, 0.99))
+            .set("mean_ttft", m.ttft.mean())
+            .set("p99_ttft", quantile_value(&m.ttft_quantiles, 0.99))
+            .set("mean_itl", m.itl.mean())
+            .set("mean_sl", m.sl_hist.mean())
+            .set("sl_std", m.sl_hist.std())
+            .set("cap_savings", m.cap_savings)
+            .set("straggler_bubble", m.straggler_bubble)
+            .set("preemptions", m.preemptions)
+            .set("wall_s", self.wall_s)
+    }
+}
+
+/// Build the cell's request source: a single-dataset generator or a
+/// weighted multi-tenant mix.
+fn source_for(cell: &CellSpec) -> Result<Box<dyn RequestSource>> {
+    if let Some(ds) = Dataset::by_name(&cell.workload) {
+        return Ok(Box::new(
+            WorkloadGen::new(ds, cell.seed)
+                .with_temperature(cell.temperature)
+                .with_limits(cell.max_prompt, cell.max_output),
+        ));
+    }
+    let mix = MixedWorkloadGen::parse(&cell.workload, cell.seed)
+        .ok_or_else(|| anyhow!("unknown workload {:?}", cell.workload))?;
+    Ok(Box::new(
+        mix.with_temperature(cell.temperature)
+            .with_limits(cell.max_prompt, cell.max_output),
+    ))
+}
+
+fn run_closed_single(
+    spec: &ExperimentSpec,
+    profile: DatasetProfile,
+    reqs: Vec<Request>,
+) -> Result<MetricsSnapshot> {
+    let mut engine = build_engine_with_profile(spec, profile);
+    for r in reqs {
+        engine.submit(r);
+    }
+    engine.run_to_completion();
+    Ok(engine.metrics.snapshot(DEFAULT_QUANTILES))
+}
+
+fn run_closed_routed(
+    cell: &CellSpec,
+    spec: &ExperimentSpec,
+    profile: DatasetProfile,
+    reqs: Vec<Request>,
+) -> Result<MetricsSnapshot> {
+    // every replica gets the SAME model seed: outputs stay a pure function
+    // of (seed, id), so placement can never change generation results
+    let engines: Vec<Engine> = (0..cell.replicas)
+        .map(|_| build_engine_with_profile(spec, profile.clone()))
+        .collect();
+    let router = EngineRouter::with_options(engines, cell.route, cell.steal);
+    let rxs: Vec<_> = reqs.into_iter().map(|r| router.submit(r)).collect();
+    for rx in rxs {
+        rx.recv()
+            .map_err(|_| anyhow!("replica dropped a grid request"))?;
+    }
+    let snap = router.aggregated_metrics();
+    router.shutdown();
+    Ok(snap)
+}
+
+fn run_open_loop(
+    spec: &ExperimentSpec,
+    profile: DatasetProfile,
+    reqs: Vec<Request>,
+    arrivals: ArrivalSpec,
+    seed: u64,
+) -> Result<MetricsSnapshot> {
+    let mut times = Vec::with_capacity(reqs.len());
+    match arrivals {
+        ArrivalSpec::Closed => unreachable!("open-loop driver needs an arrival process"),
+        ArrivalSpec::Poisson { rate } => {
+            let mut p = PoissonArrivals::new(rate, seed);
+            for _ in 0..reqs.len() {
+                times.push(p.next_arrival());
+            }
+        }
+        ArrivalSpec::Bursty {
+            base,
+            burst,
+            gap_s,
+            burst_s,
+        } => {
+            let mut b = BurstyArrivals::new(base, burst, gap_s, burst_s, seed);
+            for _ in 0..reqs.len() {
+                times.push(b.next_arrival());
+            }
+        }
+    }
+    let mut engine = build_engine_with_profile(spec, profile);
+    let mut next = 0usize;
+    while next < reqs.len() || engine.pending() > 0 {
+        if engine.pending() == 0 && next < reqs.len() && times[next] > engine.now() {
+            // standard discrete-event jump: the engine drained ahead of
+            // the next arrival, so advance the virtual clock to it (never
+            // pull the arrival backward — that would erase the idle gap
+            // and serialize the burst that follows it)
+            engine.clock = times[next];
+        }
+        // admit everything that has arrived by the virtual clock
+        while next < reqs.len() && times[next] <= engine.now() {
+            let mut r = reqs[next].clone();
+            // backdate the arrival onto the virtual clock so latency/TTFT
+            // include the virtual queueing delay (same mechanism as a
+            // work-steal migration's accrued wait)
+            r.waited = (engine.now() - times[next]).max(0.0);
+            engine.submit(r);
+            next += 1;
+        }
+        engine.step().map_err(|e| anyhow!("engine step: {e:#}"))?;
+    }
+    Ok(engine.metrics.snapshot(DEFAULT_QUANTILES))
+}
+
+/// Execute one grid cell.  Arrival-overlay cells run the single-engine
+/// virtual-time driver, so they reject `replicas > 1` explicitly rather
+/// than silently reporting a multi-replica configuration that never ran.
+pub fn run_cell(cell: &CellSpec) -> Result<CellResult> {
+    let t0 = Instant::now();
+    if cell.arrivals != ArrivalSpec::Closed && cell.replicas > 1 {
+        return Err(anyhow!(
+            "arrival overlays run single-engine on the virtual clock; \
+             use --replicas 1 (got {})",
+            cell.replicas
+        ));
+    }
+    let profile = cell
+        .profile()
+        .ok_or_else(|| anyhow!("unknown workload {:?}", cell.workload))?;
+    let spec = cell.experiment();
+    let mut source = source_for(cell)?;
+    let reqs = source.batch(cell.requests);
+    let metrics = match (cell.arrivals, cell.replicas) {
+        (ArrivalSpec::Closed, 0 | 1) => run_closed_single(&spec, profile, reqs)?,
+        (ArrivalSpec::Closed, _) => run_closed_routed(cell, &spec, profile, reqs)?,
+        (arr, _) => run_open_loop(&spec, profile, reqs, arr, cell.seed)?,
+    };
+    Ok(CellResult {
+        cell: cell.clone(),
+        metrics,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Execute every cell of a grid, reporting progress through `progress`
+/// (`(index, total, label)` before each cell runs).
+pub fn run_grid<F: FnMut(usize, usize, &str)>(
+    grid: &GridSpec,
+    mut progress: F,
+) -> Result<GridReport> {
+    let cells = grid.cells();
+    let total = cells.len();
+    let mut results = Vec::with_capacity(total);
+    for (i, cell) in cells.iter().enumerate() {
+        progress(i, total, &cell.label());
+        results.push(run_cell(cell)?);
+    }
+    Ok(GridReport {
+        grid: grid.clone(),
+        cells: results,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CapMode, RoutePolicy, SlPolicyKind};
+    use crate::eval::grid::PolicyPoint;
+
+    fn tiny_cell(workload: &str) -> CellSpec {
+        CellSpec {
+            workload: workload.to_string(),
+            policy: PolicyPoint::new(SlPolicyKind::Dsde(Default::default()), CapMode::Mean),
+            divergence: 1.0,
+            batch: 4,
+            requests: 6,
+            replicas: 1,
+            route: RoutePolicy::RoundRobin,
+            steal: false,
+            arrivals: ArrivalSpec::Closed,
+            temperature: 0.0,
+            seed: 3,
+            max_prompt: 32,
+            max_output: 12,
+        }
+    }
+
+    #[test]
+    fn closed_single_cell_completes_every_request() {
+        let r = run_cell(&tiny_cell("cnndm")).unwrap();
+        assert_eq!(r.metrics.completed, 6);
+        assert!(r.metrics.mean_latency() > 0.0);
+        assert!(r.metrics.acceptance_rate() > 0.0);
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"workload\":\"cnndm\""), "{j}");
+        assert!(j.contains("\"p99_latency\""), "{j}");
+    }
+
+    #[test]
+    fn closed_single_cell_is_deterministic() {
+        let a = run_cell(&tiny_cell("gsm8k")).unwrap();
+        let b = run_cell(&tiny_cell("gsm8k")).unwrap();
+        assert_eq!(a.metrics.tokens_out, b.metrics.tokens_out);
+        assert!((a.metrics.mean_latency() - b.metrics.mean_latency()).abs() < 1e-12);
+        assert!((a.metrics.busy_time - b.metrics.busy_time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn routed_cell_completes_across_replicas() {
+        let mut cell = tiny_cell("xsum");
+        cell.replicas = 2;
+        cell.route = RoutePolicy::KvAware;
+        cell.steal = true;
+        let r = run_cell(&cell).unwrap();
+        assert_eq!(r.metrics.completed, 6);
+    }
+
+    #[test]
+    fn mixed_workload_cell_runs_on_blended_profile() {
+        let r = run_cell(&tiny_cell("sharegpt=2+humaneval=1")).unwrap();
+        assert_eq!(r.metrics.completed, 6);
+        assert!(r.metrics.tokens_out > 0);
+    }
+
+    #[test]
+    fn open_loop_cells_complete_and_account_queueing() {
+        for arrivals in [
+            ArrivalSpec::Poisson { rate: 50.0 },
+            ArrivalSpec::Bursty {
+                base: 5.0,
+                burst: 200.0,
+                gap_s: 0.5,
+                burst_s: 0.2,
+            },
+        ] {
+            let mut cell = tiny_cell("nq");
+            cell.arrivals = arrivals;
+            cell.requests = 12;
+            let r = run_cell(&cell).unwrap();
+            assert_eq!(r.metrics.completed, 12, "{arrivals:?}");
+            assert!(r.metrics.mean_latency() > 0.0);
+        }
+    }
+
+    #[test]
+    fn open_loop_rejects_multi_replica_cells() {
+        let mut cell = tiny_cell("cnndm");
+        cell.arrivals = ArrivalSpec::Poisson { rate: 10.0 };
+        cell.replicas = 2;
+        let err = format!("{:#}", run_cell(&cell).unwrap_err());
+        assert!(err.contains("single-engine"), "{err}");
+    }
+
+    #[test]
+    fn open_loop_clock_jumps_over_idle_gaps() {
+        let mut cell = tiny_cell("cnndm");
+        cell.arrivals = ArrivalSpec::Poisson { rate: 0.2 };
+        cell.requests = 6;
+        let r = run_cell(&cell).unwrap();
+        assert_eq!(r.metrics.completed, 6);
+        // sparse arrivals: the engine idles between requests and the
+        // discrete-event jump carries the virtual clock to each arrival,
+        // so the final clock spans the arrival process (~30 virtual
+        // seconds at 0.2/s), not just the summed service time
+        assert!(r.metrics.now > 3.0, "clock {}", r.metrics.now);
+        // ...and requests served on arrival accrue no queueing latency
+        assert!(
+            r.metrics.mean_latency() < 3.0,
+            "lat {}",
+            r.metrics.mean_latency()
+        );
+    }
+
+    #[test]
+    fn open_loop_is_deterministic_too() {
+        let mk = || {
+            let mut cell = tiny_cell("wmt14");
+            cell.arrivals = ArrivalSpec::Poisson { rate: 30.0 };
+            run_cell(&cell).unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert!((a.metrics.mean_latency() - b.metrics.mean_latency()).abs() < 1e-12);
+        assert_eq!(a.metrics.tokens_out, b.metrics.tokens_out);
+    }
+
+    #[test]
+    fn unknown_workload_is_an_error() {
+        assert!(run_cell(&tiny_cell("bogus")).is_err());
+    }
+
+    #[test]
+    fn run_grid_reports_progress_for_every_cell() {
+        let mut grid = GridSpec::default_grid().smoke();
+        grid.workloads = vec!["cnndm".to_string()];
+        grid.policies.truncate(2);
+        grid.requests = 4;
+        let mut seen = Vec::new();
+        let report = run_grid(&grid, |i, total, label| {
+            seen.push((i, total, label.to_string()));
+        })
+        .unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(seen.len(), 2);
+        assert_eq!(seen[0].1, 2);
+    }
+}

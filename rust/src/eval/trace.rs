@@ -1,0 +1,376 @@
+//! Serving-trace record/replay.
+//!
+//! `serve`/`serve-sim --record <path>` attaches a [`TraceRecorder`] to the
+//! router's record hook: every admitted request is appended to an NDJSON
+//! trace — arrival time, prompt/output lengths, sampling params, dataset
+//! tag — and `pallas eval --replay <path>` re-runs a captured trace
+//! through any policy/routing configuration for apples-to-apples
+//! comparison.
+//!
+//! **Determinism contract.** Replay submits the trace sequentially from
+//! one thread (router ids are therefore assigned in trace order) and
+//! every replica gets the *same* model seed, so each request's output
+//! tokens are a pure function of `(seed, id)` — byte-identical across
+//! `--route`, `--replicas`, `--steal`, and front-end choices
+//! (`tests/eval_replay.rs` pins this).  Latency aggregates may differ —
+//! that is the point of the comparison; completion counts and token
+//! totals are stable.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{CapMode, EngineConfig, RoutePolicy, SlPolicyKind};
+use crate::engine::engine::Engine;
+use crate::engine::metrics::MetricsSnapshot;
+use crate::engine::request::{Request, SamplingParams};
+use crate::model::sim_lm::{SimModel, SimPairKind};
+use crate::server::router::{EngineRouter, RecordHook};
+use crate::sim::regime::DatasetProfile;
+use crate::util::json::Json;
+
+/// One recorded admission.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEntry {
+    /// Seconds since recording started.
+    pub t: f64,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Requested output budget in tokens.
+    pub max_tokens: usize,
+    /// Sampling temperature.
+    pub temperature: f64,
+    /// Dataset/tenant tag (the recorder's default tag).
+    pub tag: String,
+}
+
+impl TraceEntry {
+    /// One NDJSON line's JSON value (no trailing newline).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("t", self.t)
+            .set("prompt_len", self.prompt_len)
+            .set("max_tokens", self.max_tokens)
+            .set("temperature", self.temperature)
+            .set("tag", self.tag.clone())
+    }
+
+    /// Parse one NDJSON line's JSON value.
+    pub fn from_json(j: &Json) -> Result<TraceEntry, String> {
+        let num = |k: &str| -> Result<f64, String> {
+            j.get(k)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| format!("missing numeric field {k:?}"))
+        };
+        Ok(TraceEntry {
+            t: num("t")?,
+            prompt_len: num("prompt_len")? as usize,
+            max_tokens: num("max_tokens")? as usize,
+            temperature: num("temperature")?,
+            tag: j
+                .get("tag")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| "missing string field \"tag\"".to_string())?
+                .to_string(),
+        })
+    }
+}
+
+/// Appends one NDJSON line per routed request.  Thread-safe: the router's
+/// record hook may fire from any submitting thread; lines are written
+/// atomically under a mutex and flushed immediately, so a killed server
+/// loses at most the line in flight.
+pub struct TraceRecorder {
+    out: Mutex<BufWriter<File>>,
+    t0: Instant,
+    tag: String,
+}
+
+impl TraceRecorder {
+    /// Create (truncating) the trace file; `tag` labels every entry (by
+    /// convention the serving `--dataset` value).
+    pub fn create(path: impl AsRef<Path>, tag: &str) -> Result<TraceRecorder> {
+        let file = File::create(path.as_ref())
+            .with_context(|| format!("creating trace {:?}", path.as_ref()))?;
+        Ok(TraceRecorder {
+            out: Mutex::new(BufWriter::new(file)),
+            t0: Instant::now(),
+            tag: tag.to_string(),
+        })
+    }
+
+    /// Record one admitted request.
+    pub fn record(&self, req: &Request) {
+        let entry = TraceEntry {
+            t: self.t0.elapsed().as_secs_f64(),
+            prompt_len: req.prompt.len(),
+            max_tokens: req.params.max_tokens,
+            temperature: req.params.temperature,
+            tag: self.tag.clone(),
+        };
+        let mut out = self.out.lock().expect("trace lock");
+        let _ = writeln!(out, "{}", entry.to_json());
+        let _ = out.flush();
+    }
+
+    /// The router-side hook (see [`EngineRouter::set_record_hook`]).
+    /// Takes the `Arc` handle into the closure; clone first if you need
+    /// to keep using the recorder directly.
+    pub fn hook(self: Arc<Self>) -> RecordHook {
+        Box::new(move |req| self.record(req))
+    }
+}
+
+/// Load an NDJSON trace (blank lines ignored).  Fails with the offending
+/// line number on malformed input.
+pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<TraceEntry>> {
+    let file = File::open(path.as_ref())
+        .with_context(|| format!("opening trace {:?}", path.as_ref()))?;
+    let mut out = Vec::new();
+    for (i, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line).map_err(|e| anyhow!("trace line {}: {e}", i + 1))?;
+        let entry =
+            TraceEntry::from_json(&j).map_err(|e| anyhow!("trace line {}: {e}", i + 1))?;
+        out.push(entry);
+    }
+    Ok(out)
+}
+
+/// Configuration a replayed trace runs under.
+#[derive(Clone, Debug)]
+pub struct ReplayConfig {
+    /// Engine replicas behind the router.
+    pub replicas: usize,
+    /// Routing policy.
+    pub route: RoutePolicy,
+    /// Drain-tail work stealing.
+    pub steal: bool,
+    /// SL policy.
+    pub policy: SlPolicyKind,
+    /// Batch-wide SL-cap mode.
+    pub cap: CapMode,
+    /// Scheduler batch size.
+    pub batch: usize,
+    /// Model/engine seed — shared by EVERY replica (the determinism
+    /// contract; see the module docs).
+    pub seed: u64,
+    /// Simulator profile the replay runs against.
+    pub profile: DatasetProfile,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            replicas: 1,
+            route: RoutePolicy::RoundRobin,
+            steal: false,
+            policy: SlPolicyKind::Dsde(Default::default()),
+            cap: CapMode::Mean,
+            batch: 8,
+            seed: 0,
+            profile: DatasetProfile::cnndm(),
+        }
+    }
+}
+
+/// Per-request replay row: `(router id, output tokens, finish reason)`.
+pub type ReplayRow = (u64, Vec<u32>, &'static str);
+
+/// Outcome of replaying one trace under one configuration.
+#[derive(Clone, Debug)]
+pub struct ReplayOutcome {
+    /// Per-request rows, sorted by router id (= trace order).
+    pub outputs: Vec<ReplayRow>,
+    /// Metrics aggregated across the replay's replicas.
+    pub metrics: MetricsSnapshot,
+}
+
+impl ReplayOutcome {
+    /// FNV-1a digest over ids, output tokens, and finish reasons — a cheap
+    /// equality witness for apples-to-apples comparisons.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for (id, toks, reason) in &self.outputs {
+            for b in id.to_le_bytes() {
+                eat(b);
+            }
+            for t in toks {
+                for b in t.to_le_bytes() {
+                    eat(b);
+                }
+            }
+            for b in reason.bytes() {
+                eat(b);
+            }
+        }
+        h
+    }
+}
+
+/// Replay a trace through a fresh router built from `cfg`.  Requests are
+/// submitted sequentially in trace order (ids deterministic); prompts are
+/// synthesized filler of the recorded length — the simulator's outputs
+/// depend on `(seed, id)`, not prompt content, so recorded traces stay
+/// compact (lengths, not text).
+pub fn replay(trace: &[TraceEntry], cfg: &ReplayConfig) -> Result<ReplayOutcome> {
+    let engines: Vec<Engine> = (0..cfg.replicas.max(1))
+        .map(|_| {
+            let ecfg = EngineConfig {
+                max_batch: cfg.batch,
+                max_len: 4096,
+                policy: cfg.policy.clone(),
+                cap_mode: cfg.cap,
+                kv_blocks: 65536,
+                seed: cfg.seed,
+                ..Default::default()
+            };
+            let model = SimModel::new(SimPairKind::LlamaLike, cfg.profile.clone(), cfg.seed);
+            Engine::new(ecfg, Box::new(model))
+        })
+        .collect();
+    let router = EngineRouter::with_options(engines, cfg.route, cfg.steal);
+    let rxs: Vec<_> = trace
+        .iter()
+        .map(|e| {
+            let req = Request::new(
+                0, // the router assigns trace-order ids
+                vec![b'.' as u32; e.prompt_len.max(1)],
+                SamplingParams {
+                    temperature: e.temperature,
+                    max_tokens: e.max_tokens.max(1),
+                    stop_token: None,
+                },
+            );
+            router.submit(req)
+        })
+        .collect();
+    let mut outputs: Vec<ReplayRow> = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        let fin = rx
+            .recv()
+            .map_err(|_| anyhow!("replay request dropped by the router"))?;
+        outputs.push((fin.id, fin.output, fin.reason.name()));
+    }
+    let metrics = router.aggregated_metrics();
+    router.shutdown();
+    outputs.sort_by_key(|(id, _, _)| *id);
+    Ok(ReplayOutcome { outputs, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dsde-trace-{name}-{}", std::process::id()))
+    }
+
+    fn synth_trace(n: usize) -> Vec<TraceEntry> {
+        (0..n)
+            .map(|i| TraceEntry {
+                t: i as f64 * 0.01,
+                prompt_len: 16 + (i % 5) * 8,
+                max_tokens: 6 + (i % 3) * 4,
+                temperature: 0.0,
+                tag: "cnndm".to_string(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn entry_json_roundtrip() {
+        let e = TraceEntry {
+            t: 1.25,
+            prompt_len: 40,
+            max_tokens: 32,
+            temperature: 0.7,
+            tag: "sharegpt".to_string(),
+        };
+        let j = Json::parse(&e.to_json().to_string()).unwrap();
+        assert_eq!(TraceEntry::from_json(&j).unwrap(), e);
+        assert!(TraceEntry::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn recorder_writes_loadable_ndjson() {
+        let path = tmp("rec");
+        let rec = TraceRecorder::create(&path, "xsum").unwrap();
+        for i in 0..5u64 {
+            let req = Request::new(
+                i,
+                vec![65; 10 + i as usize],
+                SamplingParams {
+                    max_tokens: 4 + i as usize,
+                    ..Default::default()
+                },
+            );
+            rec.record(&req);
+        }
+        let trace = load_trace(&path).unwrap();
+        assert_eq!(trace.len(), 5);
+        assert_eq!(trace[0].prompt_len, 10);
+        assert_eq!(trace[4].max_tokens, 8);
+        assert!(trace.iter().all(|e| e.tag == "xsum"));
+        // arrival stamps are nondecreasing
+        assert!(trace.windows(2).all(|w| w[0].t <= w[1].t));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = tmp("bad");
+        std::fs::write(&path, "{\"t\": 1}\n").unwrap();
+        let err = format!("{:#}", load_trace(&path).unwrap_err());
+        assert!(err.contains("line 1"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_is_config_invariant_on_outputs() {
+        let trace = synth_trace(10);
+        let base = ReplayConfig::default();
+        let a = replay(&trace, &base).unwrap();
+        let b = replay(
+            &trace,
+            &ReplayConfig {
+                replicas: 3,
+                route: RoutePolicy::KvAware,
+                steal: true,
+                ..base.clone()
+            },
+        )
+        .unwrap();
+        assert_eq!(a.outputs, b.outputs, "outputs must be placement-invariant");
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.metrics.completed, 10);
+        assert_eq!(b.metrics.completed, 10);
+        assert_eq!(a.metrics.tokens_out, b.metrics.tokens_out);
+    }
+
+    #[test]
+    fn digest_tracks_output_changes() {
+        let trace = synth_trace(6);
+        let a = replay(&trace, &ReplayConfig::default()).unwrap();
+        let b = replay(
+            &trace,
+            &ReplayConfig {
+                seed: 99,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_ne!(a.digest(), b.digest(), "different seeds, different outputs");
+    }
+}

@@ -18,28 +18,26 @@
 //! * **L2/L1 (build-time python)** — a tiny transformer pair with Pallas
 //!   kernels, AOT-lowered to HLO text artifacts loaded by [`runtime`].
 //!
+//! The [`eval`] subsystem (`pallas eval`) reproduces the paper's claims as
+//! a structured experiment grid over this stack — datasets × SL policies ×
+//! acceptance regimes × batch sizes, with serving-trace record/replay for
+//! apples-to-apples configuration comparison (see `EVALUATION.md`).
+//!
 //! Python never runs on the request path: after `make artifacts`, the
 //! binaries in this crate are self-contained.
 #![warn(missing_docs)]
 
 pub mod config;
 pub mod engine;
+pub mod eval;
+pub mod model;
+pub mod repro;
+pub mod runtime;
 pub mod server;
+pub mod sim;
 pub mod spec;
-
 pub mod util;
 pub mod workload;
-
-// Modules below predate the crate-wide `missing_docs` lint; their public
-// surfaces are documented opportunistically (ROADMAP: finish the sweep).
-#[allow(missing_docs)]
-pub mod model;
-#[allow(missing_docs)]
-pub mod repro;
-#[allow(missing_docs)]
-pub mod runtime;
-#[allow(missing_docs)]
-pub mod sim;
 
 /// Convenience re-exports for examples and binaries.
 pub mod prelude {

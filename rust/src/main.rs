@@ -1,11 +1,18 @@
-//! `dsde` — the leader binary.
+//! `dsde` (also installed as `pallas`) — the leader binary.
 //!
 //! Subcommands:
 //! * `serve`      — HTTP completions server over the real PJRT model pair.
 //! * `serve-sim`  — same server over the calibrated simulator.
 //! * `run`        — run a dataset workload offline and print metrics.
+//! * `eval`       — paper-reproduction experiment grid / trace replay /
+//!   report validation (see `EVALUATION.md`).
 //! * `calibrate`  — measure real PJRT step costs (feeds the sim cost model).
 //! * `info`       — print artifact manifest + config summary.
+//!
+//! `serve`/`serve-sim` accept `--record <path>` to capture an NDJSON
+//! serving trace that `eval --replay <path>` re-runs deterministically.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -13,6 +20,10 @@ use dsde::config::{
     CapMode, EngineConfig, FrontendKind, RoutePolicy, RouterConfig, SlPolicyKind,
 };
 use dsde::engine::engine::Engine;
+use dsde::eval::{
+    load_trace, replay, run_grid, ArrivalSpec, GridReport, GridSpec, PolicyPoint, ReplayConfig,
+    TraceRecorder,
+};
 use dsde::model::pjrt_lm::PjrtModel;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::model::traits::{SeqInput, SpecModel};
@@ -42,6 +53,19 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "seed", help: "rng seed", default: Some("0") },
     FlagSpec { name: "ar", help: "autoregressive baseline (flag)", default: None },
     FlagSpec { name: "json", help: "emit metrics as JSON (flag)", default: None },
+    FlagSpec { name: "record", help: "record serving trace NDJSON (serve)", default: None },
+    FlagSpec { name: "grid", help: "grid preset (eval): default", default: Some("default") },
+    FlagSpec { name: "smoke", help: "shrink the eval grid to smoke size (flag)", default: None },
+    FlagSpec { name: "datasets", help: "eval workloads: names/mixes, comma-separated", default: None },
+    FlagSpec { name: "policies", help: "eval policies: <policy>[+<cap>], comma-separated", default: None },
+    FlagSpec { name: "divergences", help: "eval alpha scales, comma-separated", default: None },
+    FlagSpec { name: "batches", help: "eval batch sizes, comma-separated", default: None },
+    FlagSpec { name: "arrivals", help: "closed | poisson:<rate> | bursty:<b>,<B>,<g>,<l> (eval)", default: Some("closed") },
+    FlagSpec { name: "out", help: "eval JSON report path", default: Some("eval_report.json") },
+    FlagSpec { name: "md", help: "eval Markdown table path", default: Some("eval_report.md") },
+    FlagSpec { name: "replay", help: "replay a recorded trace (eval)", default: None },
+    FlagSpec { name: "validate", help: "schema-check a JSON report (eval)", default: None },
+    FlagSpec { name: "divergence", help: "alpha scale for run/replay", default: Some("1.0") },
 ];
 
 fn main() {
@@ -74,9 +98,23 @@ fn router_config(args: &Args) -> Result<RouterConfig> {
         policy,
         steal,
         frontend,
+        record: args.get("record").map(String::from),
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
+}
+
+/// Attach the `--record` trace hook to a freshly built router (no-op when
+/// recording was not requested).  The recorder tags every entry with the
+/// serving `--dataset` value.
+fn attach_recorder(router: &mut EngineRouter, rcfg: &RouterConfig, args: &Args) -> Result<()> {
+    if let Some(path) = &rcfg.record {
+        let tag = args.str_or("dataset", "cnndm");
+        let rec = Arc::new(TraceRecorder::create(path, &tag)?);
+        router.set_record_hook(rec.hook());
+        println!("recording serving trace to {path} (tag {tag})");
+    }
+    Ok(())
 }
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -131,7 +169,8 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                     Ok(Engine::new(cfg, Box::new(model)))
                 })
                 .collect::<Result<_>>()?;
-            let router = EngineRouter::with_options(engines, rcfg.policy, rcfg.steal);
+            let mut router = EngineRouter::with_options(engines, rcfg.policy, rcfg.steal);
+            attach_recorder(&mut router, &rcfg, args)?;
             let opts = ServeOptions {
                 frontend: rcfg.frontend,
                 ..Default::default()
@@ -162,7 +201,8 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                     Ok(Engine::new(cfg, Box::new(model)))
                 })
                 .collect::<Result<_>>()?;
-            let router = EngineRouter::with_options(engines, rcfg.policy, rcfg.steal);
+            let mut router = EngineRouter::with_options(engines, rcfg.policy, rcfg.steal);
+            attach_recorder(&mut router, &rcfg, args)?;
             let opts = ServeOptions {
                 frontend: rcfg.frontend,
                 ..Default::default()
@@ -223,6 +263,7 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "eval" => eval_cmd(args),
         "calibrate" => calibrate(args),
         "info" => {
             let m = Manifest::load(args.str_or("artifacts", "artifacts"))?;
@@ -244,13 +285,143 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                 usage(
                     "dsde",
                     "DSDE dynamic speculative decoding engine\n\
-                     \nCommands: serve | serve-sim | run [--pjrt] | calibrate | info",
+                     \nCommands: serve | serve-sim | run [--pjrt] | eval | calibrate | info",
                     FLAGS
                 )
             );
             Ok(())
         }
     }
+}
+
+/// The `eval` subcommand: report validation (`--validate`), trace replay
+/// (`--replay`), or a full grid run (the default).  See `EVALUATION.md`
+/// for the paper-claim → invocation map.
+fn eval_cmd(args: &Args) -> Result<()> {
+    // --validate <report.json>: schema-check an existing report and exit
+    if let Some(path) = args.get("validate") {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        GridReport::validate(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let cells = j.get("cells").and_then(|c| c.as_arr()).map_or(0, |c| c.len());
+        println!("{path}: valid {} report ({cells} cells)", dsde::eval::REPORT_SCHEMA);
+        return Ok(());
+    }
+    // --replay <trace.ndjson>: re-run a recorded trace under this config
+    if let Some(path) = args.get("replay") {
+        let trace = load_trace(path)?;
+        let profile = DatasetProfile::by_name(&args.str_or("dataset", "cnndm"))
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?
+            .with_divergence(args.f64_or("divergence", 1.0));
+        let policy = SlPolicyKind::parse(&args.str_or("policy", "dsde"))
+            .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
+        let cap = CapMode::parse(&args.str_or("cap", "mean"))
+            .ok_or_else(|| anyhow::anyhow!("unknown cap mode"))?;
+        let route = RoutePolicy::parse(&args.str_or("route", "round-robin"))
+            .ok_or_else(|| anyhow::anyhow!("unknown route policy"))?;
+        let cfg = ReplayConfig {
+            replicas: args.usize_clamped_or("replicas", 1, 1, 256),
+            route,
+            steal: args.str_or("steal", "off") == "on",
+            policy,
+            cap,
+            batch: args.usize_or("batch", 8),
+            seed: args.u64_or("seed", 0),
+            profile,
+        };
+        let outcome = replay(&trace, &cfg)?;
+        let m = &outcome.metrics;
+        println!(
+            "replayed {} request(s)  digest {:016x}  tokens {}  acceptance {:.3}  \
+             mean latency {:.3}s  mean ttft {:.3}s",
+            outcome.outputs.len(),
+            outcome.digest(),
+            m.tokens_out,
+            m.acceptance_rate(),
+            m.mean_latency(),
+            m.ttft.mean(),
+        );
+        if args.flag("json") {
+            println!(
+                "{}",
+                m.to_json()
+                    .set("digest", format!("{:016x}", outcome.digest()))
+                    .set("replayed", outcome.outputs.len())
+            );
+        }
+        return Ok(());
+    }
+    // grid run
+    let preset = args.str_or("grid", "default");
+    if preset != "default" {
+        return Err(anyhow::anyhow!("unknown grid preset {preset:?} (available: default)"));
+    }
+    let mut grid = GridSpec::default_grid();
+    if args.flag("smoke") {
+        grid = grid.smoke();
+    }
+    if let Some(ds) = args.get("datasets") {
+        grid.workloads = ds
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    if let Some(ps) = args.get("policies") {
+        grid.policies = ps
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                PolicyPoint::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("bad policy point {s:?}"))
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(ds) = args.get("divergences") {
+        grid.divergences = ds
+            .split(',')
+            .filter_map(|s| s.trim().parse::<f64>().ok())
+            .collect();
+    }
+    let batches = args.usize_list_or("batches", &[]);
+    if !batches.is_empty() {
+        grid.batches = batches;
+    }
+    grid.arrivals = ArrivalSpec::parse(&args.str_or("arrivals", "closed"))
+        .ok_or_else(|| anyhow::anyhow!("bad --arrivals spec"))?;
+    grid.requests = args.usize_or("requests", grid.requests);
+    grid.replicas = args.usize_clamped_or("replicas", grid.replicas, 1, 256);
+    grid.route = RoutePolicy::parse(&args.str_or("route", "round-robin"))
+        .ok_or_else(|| anyhow::anyhow!("unknown route policy"))?;
+    grid.steal = args.str_or("steal", "off") == "on";
+    grid.temperature = args.f64_or("temperature", grid.temperature);
+    grid.seed = args.u64_or("seed", grid.seed);
+    if grid.workloads.is_empty()
+        || grid.policies.is_empty()
+        || grid.divergences.is_empty()
+        || grid.batches.is_empty()
+    {
+        return Err(anyhow::anyhow!("empty grid axis"));
+    }
+
+    let report = run_grid(&grid, |i, total, label| {
+        eprintln!("[{:>3}/{total}] {label}", i + 1);
+    })?;
+    let json_path = args.str_or("out", "eval_report.json");
+    let md_path = args.str_or("md", "eval_report.md");
+    let json_text = report.to_json().to_string();
+    std::fs::write(&json_path, &json_text)?;
+    let md = report.to_markdown();
+    std::fs::write(&md_path, &md)?;
+    // self-check: the report we just wrote must satisfy its own schema
+    let parsed = Json::parse(&json_text).map_err(|e| anyhow::anyhow!("self-parse: {e}"))?;
+    GridReport::validate(&parsed).map_err(|e| anyhow::anyhow!("self-validate: {e}"))?;
+    print!("{md}");
+    println!(
+        "\n{} cell(s) -> {json_path} (validated) + {md_path}",
+        report.cells.len()
+    );
+    Ok(())
 }
 
 /// Measure real PJRT round costs (draft step / verify / AR) across buckets —

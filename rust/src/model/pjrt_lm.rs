@@ -36,6 +36,8 @@ pub struct PjrtModel {
 }
 
 impl PjrtModel {
+    /// Bring up the PJRT context over an artifact directory with the
+    /// chosen draft weights.
     pub fn new(artifact_dir: impl AsRef<std::path::Path>, draft: DraftKind, seed: u64) -> Result<PjrtModel> {
         let ctx = PjrtContext::new(artifact_dir, draft)?;
         Ok(PjrtModel {
@@ -54,6 +56,7 @@ impl PjrtModel {
         self.ctx.warmup(bucket)
     }
 
+    /// Cumulative `(PJRT seconds, PJRT calls)` for the perf log.
     pub fn pjrt_stats(&self) -> (f64, u64) {
         (self.ctx.exec_seconds, self.ctx.exec_calls)
     }

@@ -31,9 +31,10 @@ impl SimPairKind {
         }
     }
 
-    /// Cost scaling: the Gemma target (27B) is cheaper per step than the
-    /// 70B LLaMA; latency ratios in Table 4 are normalized anyway, so we
-    /// keep the same cost model and let acceptance drive the divergence.
+    /// Stable pair tag for logs/metrics.  (Cost note: the Gemma target is
+    /// cheaper per step than the 70B LLaMA, but Table 4's ratios are
+    /// normalized, so both pairs share one cost model and acceptance
+    /// drives the divergence.)
     pub fn name(self) -> &'static str {
         match self {
             SimPairKind::LlamaLike => "llama70b-1b",
@@ -70,6 +71,8 @@ pub struct SimModel {
 }
 
 impl SimModel {
+    /// Construct over a dataset profile (the pair's acceptance scaling is
+    /// applied here) with the paper-calibrated A100 cost model.
     pub fn new(pair: SimPairKind, profile: DatasetProfile, seed: u64) -> SimModel {
         let profile = profile.with_divergence(pair.alpha_scale());
         SimModel {
@@ -85,21 +88,25 @@ impl SimModel {
         }
     }
 
+    /// Builder-style latency cost-model override.
     pub fn with_cost(mut self, cost: CostModel) -> SimModel {
         self.cost = cost;
         self
     }
 
+    /// Builder-style context-capacity override.
     pub fn with_max_len(mut self, max_len: usize) -> SimModel {
         self.max_len = max_len;
         self
     }
 
+    /// Builder-style speculation-length ceiling override.
     pub fn with_spec_k(mut self, k: usize) -> SimModel {
         self.spec_k = k;
         self
     }
 
+    /// The (pair-scaled) dataset profile this model simulates.
     pub fn profile(&self) -> &DatasetProfile {
         &self.profile
     }

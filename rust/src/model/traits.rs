@@ -42,6 +42,7 @@ pub struct RoundOutcome {
 }
 
 impl RoundOutcome {
+    /// Empty outcome with capacity for an `n`-sequence batch.
     pub fn with_capacity(n: usize) -> RoundOutcome {
         RoundOutcome {
             new_tokens: Vec::with_capacity(n),

@@ -1,5 +1,10 @@
 //! Reproduction harness: one-call experiment runner shared by the paper
-//! bench binaries (`rust/benches/*`) and scriptable from downstream code.
+//! bench binaries (`rust/benches/*`), the [`crate::eval`] grid runner, and
+//! downstream scripts.  An [`ExperimentSpec`] names one point in the
+//! evaluation space; [`run`] executes it closed-loop on a single simulated
+//! engine, and the [`build_engine`] / [`build_workload`] halves are exposed
+//! so the eval subsystem can route the same cells through a multi-replica
+//! [`crate::server::router::EngineRouter`] or an open-loop arrival driver.
 
 use crate::config::{CapMode, EngineConfig, SlPolicyKind};
 use crate::engine::engine::Engine;
@@ -11,15 +16,33 @@ use crate::workload::{Dataset, WorkloadGen};
 /// One experiment's specification.
 #[derive(Clone, Debug)]
 pub struct ExperimentSpec {
+    /// Dataset name (one of the paper's eight; see
+    /// [`DatasetProfile::by_name`]).
     pub dataset: &'static str,
+    /// Which draft/target pair the simulator emulates.
     pub pair: SimPairKind,
+    /// SL policy under test.
     pub policy: SlPolicyKind,
+    /// Batch-wide SL-cap mode (paper §3.3).
     pub cap: CapMode,
+    /// Speculative decoding on (false = autoregressive baseline).
     pub speculative: bool,
+    /// Scheduler batch size.
     pub batch: usize,
+    /// Requests submitted (closed loop).
     pub requests: usize,
+    /// Sampling temperature for workload and engine.
     pub temperature: f64,
+    /// Seed for model, engine sampling, and workload streams.
     pub seed: u64,
+    /// Extra acceptance scaling on top of the pair's
+    /// ([`DatasetProfile::with_divergence`]); `1.0` = the pair's native
+    /// regime, `< 1` = low-acceptance stress (paper §4.4).
+    pub divergence: f64,
+    /// Prompt-length clamp applied to the workload generator.
+    pub max_prompt: usize,
+    /// Output-length clamp applied to the workload generator.
+    pub max_output: usize,
 }
 
 impl Default for ExperimentSpec {
@@ -34,13 +57,31 @@ impl Default for ExperimentSpec {
             requests: 128,
             temperature: 0.0,
             seed: 0,
+            divergence: 1.0,
+            max_prompt: 96,
+            max_output: 256,
         }
     }
 }
 
-/// Run one simulated experiment and return the engine metrics.
-pub fn run(spec: &ExperimentSpec) -> EngineMetrics {
-    let profile = DatasetProfile::by_name(spec.dataset).expect("dataset");
+impl ExperimentSpec {
+    /// The dataset profile this spec runs against, with the divergence
+    /// scaling applied.
+    pub fn profile(&self) -> DatasetProfile {
+        DatasetProfile::by_name(self.dataset)
+            .expect("dataset")
+            .with_divergence(self.divergence)
+    }
+}
+
+/// Build the simulated engine a spec describes (no requests submitted).
+pub fn build_engine(spec: &ExperimentSpec) -> Engine {
+    build_engine_with_profile(spec, spec.profile())
+}
+
+/// Like [`build_engine`] but over an explicit profile — the eval grid uses
+/// this for blended multi-tenant regimes that have no dataset name.
+pub fn build_engine_with_profile(spec: &ExperimentSpec, profile: DatasetProfile) -> Engine {
     let cfg = EngineConfig {
         max_batch: spec.batch,
         max_len: 4096,
@@ -53,10 +94,20 @@ pub fn run(spec: &ExperimentSpec) -> EngineMetrics {
         ..Default::default()
     };
     let model = SimModel::new(spec.pair, profile, spec.seed);
-    let mut engine = Engine::new(cfg, Box::new(model));
-    let mut gen = WorkloadGen::new(Dataset::by_name(spec.dataset).unwrap(), spec.seed)
+    Engine::new(cfg, Box::new(model))
+}
+
+/// Build the workload generator a spec describes.
+pub fn build_workload(spec: &ExperimentSpec) -> WorkloadGen {
+    WorkloadGen::new(Dataset::by_name(spec.dataset).expect("dataset"), spec.seed)
         .with_temperature(spec.temperature)
-        .with_limits(96, 256);
+        .with_limits(spec.max_prompt, spec.max_output)
+}
+
+/// Run one simulated experiment and return the engine metrics.
+pub fn run(spec: &ExperimentSpec) -> EngineMetrics {
+    let mut engine = build_engine(spec);
+    let mut gen = build_workload(spec);
     for req in gen.batch(spec.requests) {
         engine.submit(req);
     }
@@ -104,6 +155,37 @@ mod tests {
         let m = run(&spec);
         assert_eq!(m.requests.len(), 8);
         assert!(m.mean_latency() > 0.0);
+    }
+
+    #[test]
+    fn divergence_stress_lowers_acceptance() {
+        let base = ExperimentSpec {
+            requests: 16,
+            ..Default::default()
+        };
+        let stressed = ExperimentSpec {
+            divergence: 0.5,
+            requests: 16,
+            ..Default::default()
+        };
+        let a = run(&base).acceptance_rate();
+        let b = run(&stressed).acceptance_rate();
+        assert!(b < a, "stressed {b} !< native {a}");
+    }
+
+    #[test]
+    fn workload_limits_honored() {
+        let spec = ExperimentSpec {
+            max_prompt: 12,
+            max_output: 6,
+            requests: 4,
+            ..Default::default()
+        };
+        let mut gen = build_workload(&spec);
+        for r in gen.batch(10) {
+            assert!(r.prompt.len() <= 12);
+            assert!(r.params.max_tokens <= 6);
+        }
     }
 
     #[test]

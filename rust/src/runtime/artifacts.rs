@@ -13,6 +13,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// 8-byte magic prefix of a DSDW1 weights file.
 pub const WTS_MAGIC: &[u8; 8] = b"DSDW1\0\0\0";
 
 /// Which draft weights to load — the paper's two regimes.
@@ -27,19 +28,33 @@ pub enum DraftKind {
 /// Parsed artifact manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Vocabulary size the graphs were lowered for.
     pub vocab: usize,
+    /// Reserved padding token id (paper §3.2).
     pub pad_id: u32,
+    /// Padded context length of the lowered graphs.
     pub max_len: usize,
+    /// Verify graph's static speculation-length ceiling K.
     pub spec_k: usize,
+    /// Batch buckets the graphs were lowered for.
     pub buckets: Vec<usize>,
+    /// Target model parameter count (weights-file validation).
     pub target_n_params: usize,
+    /// Draft model parameter count (weights-file validation).
     pub draft_n_params: usize,
+    /// File-name template of the target step graph (`{B}` = bucket).
     pub target_step_tpl: String,
+    /// File-name template of the target verify graph.
     pub target_verify_tpl: String,
+    /// File-name template of the draft step graph.
     pub draft_step_tpl: String,
+    /// Target weights file name.
     pub target_weights: String,
+    /// Distilled (high-acceptance) draft weights file name.
     pub draft_good_weights: String,
+    /// Shifted-corpus (low-acceptance) draft weights file name.
     pub draft_weak_weights: String,
 }
 
@@ -121,19 +136,24 @@ impl Manifest {
             .unwrap_or_else(|| *self.buckets.iter().max().unwrap())
     }
 
+    /// Path of the target step graph lowered for `bucket`.
     pub fn target_step_path(&self, bucket: usize) -> PathBuf {
         self.dir.join(self.target_step_tpl.replace("{B}", &bucket.to_string()))
     }
 
+    /// Path of the target verify graph lowered for `bucket`.
     pub fn target_verify_path(&self, bucket: usize) -> PathBuf {
         self.dir
             .join(self.target_verify_tpl.replace("{B}", &bucket.to_string()))
     }
 
+    /// Path of the draft step graph lowered for `bucket`.
     pub fn draft_step_path(&self, bucket: usize) -> PathBuf {
         self.dir.join(self.draft_step_tpl.replace("{B}", &bucket.to_string()))
     }
 
+    /// Path of a weights file: `target`, `draft_good`, or `draft_weak`
+    /// (panics on anything else).
     pub fn weights_path(&self, which: &str) -> PathBuf {
         let name = match which {
             "target" => &self.target_weights,
@@ -148,10 +168,12 @@ impl Manifest {
 /// A loaded DSDW1 weights file.
 #[derive(Clone, Debug)]
 pub struct WeightsFile {
+    /// The packed f32 parameter vector.
     pub data: Vec<f32>,
 }
 
 impl WeightsFile {
+    /// Load and validate a DSDW1 file (magic, declared count, exact size).
     pub fn load(path: impl AsRef<Path>) -> Result<WeightsFile> {
         let path = path.as_ref();
         let blob = fs::read(path).with_context(|| format!("reading {path:?}"))?;
@@ -170,10 +192,12 @@ impl WeightsFile {
         Ok(WeightsFile { data })
     }
 
+    /// Number of parameters.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the file held zero parameters.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

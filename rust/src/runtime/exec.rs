@@ -13,20 +13,27 @@ use crate::log_info;
 /// Which lowered graph to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum GraphKind {
+    /// Target model single-token step (the AR baseline's forward).
     TargetStep,
+    /// Target model ragged batched verify along K draft slots.
     TargetVerify,
+    /// Draft model single-token step (one speculative micro-step).
     DraftStep,
 }
 
 /// Output of a `step` graph: next-token logits, row-major `[B, V]`.
 #[derive(Clone, Debug)]
 pub struct StepOutput {
+    /// Flattened `[batch * vocab]` logits.
     pub logits: Vec<f32>,
+    /// Batch (bucket) dimension.
     pub batch: usize,
+    /// Vocabulary dimension.
     pub vocab: usize,
 }
 
 impl StepOutput {
+    /// Logits row for sequence `b`.
     pub fn row(&self, b: usize) -> &[f32] {
         &self.logits[b * self.vocab..(b + 1) * self.vocab]
     }
@@ -41,8 +48,11 @@ pub struct VerifyOutput {
     pub kld: Vec<f32>,
     /// Fused draft entropy per drafted slot, `[B, K]`.
     pub entropy: Vec<f32>,
+    /// Batch (bucket) dimension.
     pub batch: usize,
+    /// Speculation-length dimension (the graph's static K).
     pub k: usize,
+    /// Vocabulary dimension.
     pub vocab: usize,
 }
 
@@ -53,10 +63,12 @@ impl VerifyOutput {
         &self.tlogits[base..base + self.vocab]
     }
 
+    /// Fused KLD signal for sequence `b`, drafted slot `j`.
     pub fn kld_at(&self, b: usize, j: usize) -> f32 {
         self.kld[b * self.k + j]
     }
 
+    /// Fused draft entropy for sequence `b`, drafted slot `j`.
     pub fn entropy_at(&self, b: usize, j: usize) -> f32 {
         self.entropy[b * self.k + j]
     }
@@ -65,13 +77,15 @@ impl VerifyOutput {
 /// PJRT CPU context for the artifact set: compiles lazily per
 /// (graph, bucket), keeps weights resident on device.
 pub struct PjrtContext {
+    /// The artifact manifest this context was loaded from.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     exes: HashMap<(GraphKind, usize), xla::PjRtLoadedExecutable>,
     target_w: xla::PjRtBuffer,
     draft_w: xla::PjRtBuffer,
-    /// cumulative host↔device + execute time, for the perf log
+    /// Cumulative host↔device + execute seconds, for the perf log.
     pub exec_seconds: f64,
+    /// Number of graph executions performed.
     pub exec_calls: u64,
 }
 
@@ -261,22 +275,27 @@ impl PjrtContext {
         })
     }
 
+    /// Padded context length of the lowered graphs.
     pub fn max_len(&self) -> usize {
         self.manifest.max_len
     }
 
+    /// Vocabulary size.
     pub fn vocab(&self) -> usize {
         self.manifest.vocab
     }
 
+    /// Verify graph's static speculation-length ceiling K.
     pub fn spec_k(&self) -> usize {
         self.manifest.spec_k
     }
 
+    /// Reserved padding token id.
     pub fn pad_id(&self) -> u32 {
         self.manifest.pad_id
     }
 
+    /// Smallest lowered batch bucket that fits `batch`.
     pub fn bucket_for(&self, batch: usize) -> usize {
         self.manifest.bucket_for(batch)
     }

@@ -349,6 +349,7 @@ pub(crate) fn dispatch(
                 .set("replicas", router.replica_count())
                 .set("route", router.policy().name())
                 .set("steal", router.stealing_enabled())
+                .set("recording", router.recording())
                 .set("frontend", stats.to_json());
             Dispatch::Immediate(encode_json(200, &body))
         }

@@ -17,7 +17,8 @@
 //!   counter, and the front-end's connection counters (`frontend.kind`,
 //!   `open_connections`, `accepted`, `rejected`).
 //! * `GET /health` — liveness + replica count + routing configuration +
-//!   the same front-end counters.
+//!   whether a serving trace is being recorded (`--record`; replayable
+//!   with `pallas eval --replay`) + the same front-end counters.
 //!
 //! Front-ends ([`ServeOptions::frontend`], CLI `--frontend`):
 //! * **`threaded`** — one thread per TCP connection, blocking I/O.
@@ -421,6 +422,7 @@ mod tests {
         assert!(resp.starts_with("HTTP/1.1 200"));
         assert!(resp.contains("\"ok\":true"));
         assert!(resp.contains("\"replicas\":1"));
+        assert!(resp.contains("\"recording\":false"), "{resp}");
         assert!(resp.contains("\"kind\":\"threaded\""), "{resp}");
         h.shutdown();
     }

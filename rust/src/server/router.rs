@@ -55,6 +55,14 @@ use crate::util::json::Json;
 use crate::util::sys::Waker;
 use crate::log_warn;
 
+/// Hook invoked with every routed request right after its router-global
+/// id is assigned and before it is dispatched to a replica — the serving
+/// stack's trace-record point (`--record`; see
+/// [`crate::eval::trace::TraceRecorder`]).  Fires on the submitting
+/// thread, so implementations should stay cheap (the trace recorder does
+/// one buffered line write).
+pub type RecordHook = Box<dyn Fn(&Request) + Send + Sync>;
+
 /// One event on a streaming request's channel.
 #[derive(Clone, Debug)]
 pub enum StreamEvent {
@@ -601,6 +609,7 @@ pub struct EngineRouter {
     steals: Arc<AtomicU64>,
     balancer_stop: Arc<AtomicBool>,
     balancer: Mutex<Option<JoinHandle<()>>>,
+    record: Option<RecordHook>,
 }
 
 impl EngineRouter {
@@ -678,7 +687,22 @@ impl EngineRouter {
             steals,
             balancer_stop,
             balancer: Mutex::new(balancer),
+            record: None,
         }
+    }
+
+    /// Install the request-record hook (the `--record` trace path).  Must
+    /// be called before the router starts serving; every subsequent
+    /// submission — blocking or streaming, from any front-end — fires it
+    /// once with the id-assigned request.
+    pub fn set_record_hook(&mut self, hook: RecordHook) {
+        self.record = Some(hook);
+    }
+
+    /// Whether a record hook is installed (surfaced on `/health` so an
+    /// operator can tell a trace is being captured).
+    pub fn recording(&self) -> bool {
+        self.record.is_some()
     }
 
     /// Number of engine replicas behind this router.
@@ -798,6 +822,9 @@ impl EngineRouter {
         waker: Option<Arc<Waker>>,
     ) -> Receiver<FinishedRequest> {
         req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(hook) = &self.record {
+            hook(&req);
+        }
         let replica = &self.replicas[idx];
         let (rtx, rrx) = channel();
         replica.load.fetch_add(1, Ordering::SeqCst);
@@ -843,6 +870,9 @@ impl EngineRouter {
         waker: Option<Arc<Waker>>,
     ) -> Receiver<StreamEvent> {
         req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(hook) = &self.record {
+            hook(&req);
+        }
         let idx = self.pick(projected_tokens(&req));
         let replica = &self.replicas[idx];
         let (rtx, rrx) = channel();
@@ -1319,6 +1349,25 @@ mod tests {
         assert_eq!(agg.completed, 8);
         // round-robin with blocking-free submission: both replicas worked
         assert!(per.iter().all(|m| m.completed == 4));
+        router.shutdown();
+    }
+
+    #[test]
+    fn record_hook_sees_every_submission_with_assigned_ids() {
+        let seen: Arc<Mutex<Vec<(u64, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut router = EngineRouter::new(sim_engines(2), RoutePolicy::RoundRobin);
+        let sink = seen.clone();
+        router.set_record_hook(Box::new(move |r| {
+            sink.lock().unwrap().push((r.id, r.prompt.len()));
+        }));
+        let rx1 = router.submit(req(4));
+        let rx2 = router.submit_streaming(req(6));
+        rx1.recv().unwrap();
+        for _ in rx2 {}
+        let seen = seen.lock().unwrap().clone();
+        assert_eq!(seen.len(), 2, "blocking AND streaming submissions fire");
+        assert_eq!(seen[0], (1, 24), "hook sees the router-assigned id");
+        assert_eq!(seen[1], (2, 24));
         router.shutdown();
     }
 

@@ -24,7 +24,9 @@ use crate::util::rng::Rng;
 /// Hidden generation regime.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Regime {
+    /// Predictable span: high draft acceptance, low & calm KLD.
     Stable,
+    /// Hard span: low acceptance, bursty KLD.
     Volatile,
 }
 
@@ -33,6 +35,7 @@ pub enum Regime {
 /// lengths, used by [`crate::workload`]).
 #[derive(Clone, Debug)]
 pub struct DatasetProfile {
+    /// Stable dataset name (`cnndm`, `xsum`, ... or `mix` for blends).
     pub name: &'static str,
     /// mean acceptance prob in the stable regime (T = 0)
     pub alpha_stable: f64,
@@ -195,6 +198,7 @@ impl DatasetProfile {
         }
     }
 
+    /// Look up one of the paper's eight datasets by name.
     pub fn by_name(name: &str) -> Option<DatasetProfile> {
         match name {
             "cnndm" => Some(Self::cnndm()),
@@ -209,6 +213,7 @@ impl DatasetProfile {
         }
     }
 
+    /// All eight evaluation dataset profiles.
     pub fn all() -> Vec<DatasetProfile> {
         vec![
             Self::cnndm(),
@@ -229,13 +234,46 @@ impl DatasetProfile {
         self.alpha_volatile = (self.alpha_volatile * alpha_scale).clamp(0.02, 0.99);
         self
     }
+
+    /// Weighted blend of several profiles — the regime a *mixed* tenant
+    /// population is simulated against (every numeric parameter is the
+    /// weighted mean of the components').  An approximation: one blended
+    /// Markov process stands in for per-dataset processes, adequate for
+    /// grid cells whose point is heterogeneous *workload shape* (the
+    /// per-request prompt/output lengths still come from the per-dataset
+    /// generators inside [`crate::workload::MixedWorkloadGen`]).  Panics on
+    /// an empty or non-positive-weight input.
+    pub fn blend(parts: &[(DatasetProfile, f64)]) -> DatasetProfile {
+        assert!(!parts.is_empty(), "blend needs at least one profile");
+        let total: f64 = parts.iter().map(|(_, w)| *w).sum();
+        assert!(total > 0.0, "blend needs positive total weight");
+        let f = |get: fn(&DatasetProfile) -> f64| -> f64 {
+            parts.iter().map(|(p, w)| get(p) * w).sum::<f64>() / total
+        };
+        DatasetProfile {
+            name: "mix",
+            alpha_stable: f(|p| p.alpha_stable),
+            alpha_volatile: f(|p| p.alpha_volatile),
+            alpha_jitter: f(|p| p.alpha_jitter),
+            p_enter_volatile: f(|p| p.p_enter_volatile),
+            p_exit_volatile: f(|p| p.p_exit_volatile),
+            kld_noise: f(|p| p.kld_noise),
+            ent_noise: f(|p| p.ent_noise),
+            temp_penalty: f(|p| p.temp_penalty),
+            mean_output: f(|p| p.mean_output as f64).round() as usize,
+            mean_prompt: f(|p| p.mean_prompt as f64).round() as usize,
+        }
+    }
 }
 
 /// One token's emissions from the process.
 #[derive(Clone, Copy, Debug)]
 pub struct TokenDraw {
+    /// True probability the target accepts this draft token.
     pub accept_p: f64,
+    /// Noisy post-hoc KLD observation (`≈ −ln(accept_p)`).
     pub kld: f32,
+    /// Forward-looking draft-entropy observation.
     pub entropy: f32,
 }
 
@@ -243,11 +281,14 @@ pub struct TokenDraw {
 #[derive(Clone, Debug)]
 pub struct RegimeProcess {
     profile: DatasetProfile,
+    /// Current hidden regime (exposed for tests and signal analysis).
     pub regime: Regime,
     rng: Rng,
 }
 
 impl RegimeProcess {
+    /// A process over `profile`, seeded for reproducibility; the initial
+    /// regime is drawn from the chain's stationary distribution.
     pub fn new(profile: DatasetProfile, seed: u64) -> RegimeProcess {
         let mut rng = Rng::new(seed);
         // stationary initial regime
@@ -309,10 +350,12 @@ impl RegimeProcess {
         }
     }
 
+    /// The dataset profile driving this process.
     pub fn profile(&self) -> &DatasetProfile {
         &self.profile
     }
 
+    /// The process's RNG stream (for callers layering extra noise).
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }
@@ -375,6 +418,21 @@ mod tests {
         let a0: f64 = (0..800).map(|_| p.draw_token(0.0).accept_p).sum::<f64>() / 800.0;
         let a1: f64 = (0..800).map(|_| p.draw_token(1.0).accept_p).sum::<f64>() / 800.0;
         assert!(a1 < a0 - 0.05, "{a1} !< {a0}");
+    }
+
+    #[test]
+    fn blend_is_weighted_mean_of_components() {
+        let a = DatasetProfile::humaneval();
+        let b = DatasetProfile::sharegpt();
+        let m = DatasetProfile::blend(&[(a.clone(), 3.0), (b.clone(), 1.0)]);
+        assert_eq!(m.name, "mix");
+        let want = (3.0 * a.alpha_stable + b.alpha_stable) / 4.0;
+        assert!((m.alpha_stable - want).abs() < 1e-12);
+        assert!(m.alpha_stable > b.alpha_stable && m.alpha_stable < a.alpha_stable);
+        // a one-component blend reproduces the component
+        let id = DatasetProfile::blend(&[(a.clone(), 2.0)]);
+        assert_eq!(id.alpha_stable, a.alpha_stable);
+        assert_eq!(id.mean_output, a.mean_output);
     }
 
     #[test]

@@ -2,6 +2,34 @@
 //! policies.  [`DsdeAdapter`] is the paper's contribution; [`StaticSl`],
 //! [`AdaEdl`] and autoregressive mode (SL = 0 handled by the engine) are the
 //! evaluation baselines.
+//!
+//! # Example: driving the DSDE adapter by hand
+//!
+//! The engine does this internally; standalone, the loop is: construct the
+//! adapter, feed it per-step KLD observations through [`SeqSignals`], and
+//! read back the proposed SL.
+//!
+//! ```
+//! use dsde::spec::adapter::{DsdeAdapter, DsdeConfig, SlPolicy};
+//! use dsde::spec::history::SeqSignals;
+//!
+//! let adapter = DsdeAdapter::new(DsdeConfig::default());
+//! let mut sig = SeqSignals::default();
+//!
+//! // fresh sequence: the adapter asks for its calibration draft length
+//! assert_eq!(adapter.propose(&sig), 10);
+//!
+//! // feed verification steps: per-token KLDs + entropies, drafted, accepted
+//! for _ in 0..8 {
+//!     sig.record_step(&[0.05, 0.04, 0.06], &[0.3, 0.2, 0.25], 3, 3);
+//! }
+//! sig.calibrated_sl_max = Some(10);
+//!
+//! // calm, low-KLD history ⇒ an aggressive SL near SL_max; the proposal
+//! // always stays inside [sl_min, sl_limit]
+//! let sl = adapter.propose(&sig);
+//! assert!((2..=10).contains(&sl), "sl = {sl}");
+//! ```
 
 pub mod adaedl;
 pub mod dsde;
@@ -23,6 +51,7 @@ use crate::spec::history::SeqSignals;
 /// policies like AdaEDL).  All policies are **training-free**: the only
 /// inputs are the sequence's online signal history.
 pub trait SlPolicy: Send {
+    /// Stable policy name (metrics/bench/CLI label).
     fn name(&self) -> &'static str;
 
     /// Requested speculation length for the next round (before SL-cap and
@@ -53,6 +82,16 @@ pub trait SlPolicy: Send {
 }
 
 /// Construct a policy from config (used by CLI/bench plumbing).
+///
+/// ```
+/// use dsde::config::SlPolicyKind;
+/// use dsde::spec::adapter::{make_policy, SlPolicy};
+/// use dsde::spec::history::SeqSignals;
+///
+/// let policy = make_policy(&SlPolicyKind::Static(6));
+/// assert_eq!(policy.name(), "static");
+/// assert_eq!(policy.propose(&SeqSignals::default()), 6);
+/// ```
 pub fn make_policy(kind: &crate::config::SlPolicyKind) -> Box<dyn SlPolicy> {
     use crate::config::SlPolicyKind;
     match kind {

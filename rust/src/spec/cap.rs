@@ -22,6 +22,7 @@ pub enum CapMode {
 }
 
 impl CapMode {
+    /// Parse CLI shorthand: `none`/`no-cap`, `mean`, `median`, or `p90`.
     pub fn parse(s: &str) -> Option<CapMode> {
         match s.to_ascii_lowercase().as_str() {
             "none" | "nocap" | "no-cap" => Some(CapMode::None),
@@ -32,6 +33,7 @@ impl CapMode {
         }
     }
 
+    /// Stable lowercase wire/CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             CapMode::None => "none",

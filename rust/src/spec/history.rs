@@ -11,8 +11,11 @@ use crate::util::stats::{decay_weights, weighted_variance};
 /// Configuration for the history windows.
 #[derive(Clone, Copy, Debug)]
 pub struct HistoryConfig {
+    /// Short window length N_short (paper: 10 steps).
     pub short_window: usize,
+    /// Long window length N_long (paper: 30 steps).
     pub long_window: usize,
+    /// Exponential decay δ of the window weights (paper: 0.85).
     pub decay: f64,
 }
 
@@ -39,16 +42,18 @@ pub struct SeqSignals {
     pub last_step_mean_entropy: f64,
     /// number of verification steps observed
     pub steps: usize,
-    /// total drafted / accepted tokens (block-efficiency bookkeeping)
+    /// total drafted tokens (block-efficiency bookkeeping)
     pub drafted_total: u64,
+    /// total accepted tokens
     pub accepted_total: u64,
     /// EWMA of per-step acceptance rate (AdaEDL's historical signal)
     pub accept_ewma: f64,
     // ---- calibration phase statistics (paper Eq. 1) -------------------------
     /// max tokens accepted in any single calibration step (SL_{A,max})
     pub calib_max_accepted: usize,
-    /// running sum/count of per-token KLD during calibration (μ_KLD,pre)
+    /// running sum of per-token KLD during calibration (μ_KLD,pre)
     pub calib_kld_sum: f64,
+    /// number of calibration tokens behind [`SeqSignals::calib_kld_sum`]
     pub calib_kld_count: u64,
     /// max single KLD seen during calibration (KLD_{pre,max})
     pub calib_kld_max: f64,
@@ -57,6 +62,7 @@ pub struct SeqSignals {
 }
 
 impl SeqSignals {
+    /// Fresh signal state with the given window configuration.
     pub fn new(cfg: HistoryConfig) -> SeqSignals {
         SeqSignals {
             cfg,
@@ -162,6 +168,7 @@ impl SeqSignals {
         }
     }
 
+    /// Number of per-step KLD means currently retained.
     pub fn history_len(&self) -> usize {
         self.kld_steps.len()
     }

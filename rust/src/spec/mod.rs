@@ -3,14 +3,7 @@
 //! and the adaptive SL-cap.
 
 pub mod adapter;
-// The non-adapter submodules predate the crate-wide `missing_docs` lint;
-// their public surfaces are documented opportunistically (ROADMAP: finish
-// the sweep).
-#[allow(missing_docs)]
 pub mod cap;
-#[allow(missing_docs)]
 pub mod history;
-#[allow(missing_docs)]
 pub mod kld;
-#[allow(missing_docs)]
 pub mod rejection;

@@ -77,7 +77,12 @@ impl WorkloadGen {
         self
     }
 
-    /// Constrain lengths (used by the PJRT path whose context is 160).
+    /// Constrain lengths (used by the PJRT path whose context is 160, and
+    /// by eval-grid cells).  Profile-drawn lengths are **clamped** into the
+    /// limits — never rejected — so even a limit below the generator's
+    /// natural floor (prompt 8 / output 4) yields requests that honor it
+    /// (down to 1 token) instead of silently exceeding it and stalling a
+    /// low-`max_output` grid cell.
     pub fn with_limits(mut self, max_prompt: usize, max_output: usize) -> WorkloadGen {
         self.max_prompt = max_prompt;
         self.max_output = max_output;
@@ -94,11 +99,15 @@ impl WorkloadGen {
         let id = self.next_id;
         self.next_id += 1;
         let p = &self.dataset.profile;
-        // lengths: lognormal-ish around the profile means
+        // lengths: lognormal-ish around the profile means, clamped into the
+        // caller's limits (floors shrink below the defaults of 8/4 when the
+        // limit itself is smaller — the limit always wins)
+        let max_prompt = self.max_prompt.max(1);
+        let max_output = self.max_output.max(1);
         let plen = ((p.mean_prompt as f64) * (0.6 + 0.8 * self.rng.f64())) as usize;
-        let plen = plen.clamp(8, self.max_prompt.max(8));
+        let plen = plen.clamp(8.min(max_prompt), max_prompt);
         let olen = ((p.mean_output as f64) * (0.6 + 0.8 * self.rng.f64())) as usize;
-        let olen = olen.clamp(4, self.max_output.max(4));
+        let olen = olen.clamp(4.min(max_output), max_output);
         let prompt = self.prompt_text(plen);
         Request::new(
             id,
@@ -177,6 +186,144 @@ impl WorkloadGen {
     }
 }
 
+/// Anything that can synthesize a stream of requests — implemented by the
+/// single-dataset [`WorkloadGen`] and the multi-tenant [`MixedWorkloadGen`]
+/// so grid cells and trace synthesis can hold either behind one object.
+pub trait RequestSource {
+    /// Synthesize the next request.
+    fn next_request(&mut self) -> Request;
+
+    /// A batch of `n` requests.
+    fn batch(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| RequestSource::next_request(self)).collect()
+    }
+}
+
+impl RequestSource for WorkloadGen {
+    fn next_request(&mut self) -> Request {
+        WorkloadGen::next_request(self)
+    }
+}
+
+/// Weighted mixture of dataset workloads — the multi-tenant traffic shape
+/// the eval grid sweeps (heterogeneous large-batch serving mixes several
+/// task types in one continuous batch).  Each component keeps its own
+/// deterministic [`WorkloadGen`] stream; the mixture draws the component
+/// per request by weight, so a mix is as reproducible as its seed.
+pub struct MixedWorkloadGen {
+    components: Vec<WorkloadGen>,
+    weights: Vec<f64>,
+    rng: Rng,
+    base_seed: u64,
+    next_id: u64,
+}
+
+impl MixedWorkloadGen {
+    /// An empty mixture (add components with
+    /// [`MixedWorkloadGen::with_component`]).
+    pub fn new(seed: u64) -> MixedWorkloadGen {
+        MixedWorkloadGen {
+            components: Vec::new(),
+            weights: Vec::new(),
+            rng: Rng::new(seed ^ 0x4D49_5845), // "MIXE"
+            base_seed: seed,
+            next_id: 0,
+        }
+    }
+
+    /// Add a dataset with a positive selection weight.
+    pub fn with_component(mut self, dataset: Dataset, weight: f64) -> MixedWorkloadGen {
+        assert!(weight > 0.0, "mix weight must be positive");
+        let idx = self.components.len() as u64 + 1;
+        let seed = self.base_seed ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.components.push(WorkloadGen::new(dataset, seed));
+        self.weights.push(weight);
+        self
+    }
+
+    /// Parse a mix spec like `"sharegpt=2+humaneval=1"` (weights default to
+    /// 1 when omitted, components separated by `+` or `,`).  Returns `None`
+    /// on an unknown dataset, a non-positive weight, or an empty spec.
+    pub fn parse(spec: &str, seed: u64) -> Option<MixedWorkloadGen> {
+        let mut mix = MixedWorkloadGen::new(seed);
+        for part in spec.split(['+', ',']).filter(|p| !p.trim().is_empty()) {
+            let (name, weight) = match part.split_once('=') {
+                Some((n, w)) => (n.trim(), w.trim().parse::<f64>().ok()?),
+                None => (part.trim(), 1.0),
+            };
+            // NaN must fail parsing too, not reach the constructor
+            // assert (or the categorical draw)
+            if weight <= 0.0 || weight.is_nan() {
+                return None;
+            }
+            mix = mix.with_component(Dataset::by_name(name)?, weight);
+        }
+        if mix.components.is_empty() {
+            None
+        } else {
+            Some(mix)
+        }
+    }
+
+    /// Builder-style sampling temperature applied to every component.
+    pub fn with_temperature(mut self, t: f64) -> MixedWorkloadGen {
+        self.components = self
+            .components
+            .into_iter()
+            .map(|c| c.with_temperature(t))
+            .collect();
+        self
+    }
+
+    /// Clamp lengths on every component (see [`WorkloadGen::with_limits`]).
+    pub fn with_limits(mut self, max_prompt: usize, max_output: usize) -> MixedWorkloadGen {
+        self.components = self
+            .components
+            .into_iter()
+            .map(|c| c.with_limits(max_prompt, max_output))
+            .collect();
+        self
+    }
+
+    /// Component dataset names, in insertion order.
+    pub fn component_names(&self) -> Vec<&'static str> {
+        self.components.iter().map(|c| c.dataset().name()).collect()
+    }
+
+    /// Component `(profile, weight)` pairs, in insertion order — the input
+    /// [`crate::sim::regime::DatasetProfile::blend`] takes to build the
+    /// simulator regime a mixed-tenant cell runs against.
+    pub fn component_profiles(&self) -> Vec<(DatasetProfile, f64)> {
+        self.components
+            .iter()
+            .zip(&self.weights)
+            .map(|(c, &w)| (c.dataset().profile.clone(), w))
+            .collect()
+    }
+
+    /// Synthesize one request from a weight-drawn component (ids are
+    /// mixture-global and sequential).
+    pub fn next_request(&mut self) -> Request {
+        assert!(!self.components.is_empty(), "mix has no components");
+        let i = self.rng.categorical(&self.weights);
+        let mut req = self.components[i].next_request();
+        req.id = self.next_id;
+        self.next_id += 1;
+        req
+    }
+
+    /// A batch of n requests.
+    pub fn batch(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+impl RequestSource for MixedWorkloadGen {
+    fn next_request(&mut self) -> Request {
+        MixedWorkloadGen::next_request(self)
+    }
+}
+
 /// Poisson arrival process (for open-loop server experiments).
 pub struct PoissonArrivals {
     rng: Rng,
@@ -204,6 +351,124 @@ impl PoissonArrivals {
             self.next_at += self.rng.exponential(self.rate);
         }
         n
+    }
+
+    /// Absolute time of the next arrival; advances internal state.  Used by
+    /// the eval grid's virtual-time open-loop driver, which needs the
+    /// arrival *times* rather than windowed counts.
+    pub fn next_arrival(&mut self) -> f64 {
+        let t = self.next_at;
+        self.next_at += self.rng.exponential(self.rate);
+        t
+    }
+}
+
+/// Bursty (on/off Markov-modulated Poisson) arrival process — the burst
+/// overlay the eval grid layers over [`PoissonArrivals`]: exponential-length
+/// *gap* phases at `base_rate` alternate with exponential-length *burst*
+/// phases at `burst_rate`, reproducing the correlated traffic spikes of
+/// real multi-tenant serving that a constant-rate process smooths away.
+pub struct BurstyArrivals {
+    rng: Rng,
+    base_rate: f64,
+    burst_rate: f64,
+    mean_burst_s: f64,
+    mean_gap_s: f64,
+    in_burst: bool,
+    phase_end: f64,
+    next_at: f64,
+}
+
+impl BurstyArrivals {
+    /// A process starting in a gap phase.  `base_rate`/`burst_rate` are
+    /// arrivals per second in each phase; `mean_gap_s`/`mean_burst_s` are
+    /// the expected phase lengths.
+    pub fn new(
+        base_rate: f64,
+        burst_rate: f64,
+        mean_gap_s: f64,
+        mean_burst_s: f64,
+        seed: u64,
+    ) -> BurstyArrivals {
+        assert!(base_rate > 0.0 && burst_rate > 0.0);
+        assert!(mean_gap_s > 0.0 && mean_burst_s > 0.0);
+        let mut rng = Rng::new(seed ^ 0xB5_7A11);
+        let phase_end = rng.exponential(1.0 / mean_gap_s);
+        let next_at = rng.exponential(base_rate);
+        BurstyArrivals {
+            rng,
+            base_rate,
+            burst_rate,
+            mean_burst_s,
+            mean_gap_s,
+            in_burst: false,
+            phase_end,
+            next_at,
+        }
+    }
+
+    /// Whether the process is currently inside a burst phase.
+    pub fn in_burst(&self) -> bool {
+        self.in_burst
+    }
+
+    fn rate(&self) -> f64 {
+        if self.in_burst {
+            self.burst_rate
+        } else {
+            self.base_rate
+        }
+    }
+
+    /// Number of arrivals in (now - dt, now]; advances internal state
+    /// (phase flips resample the arrival clock at the boundary — exact for
+    /// the memoryless exponential).
+    pub fn arrivals_until(&mut self, now: f64) -> usize {
+        let mut n = 0;
+        loop {
+            if self.phase_end <= now && self.phase_end <= self.next_at {
+                // the phase flips before the next arrival fires
+                let t0 = self.phase_end;
+                self.in_burst = !self.in_burst;
+                let mean = if self.in_burst {
+                    self.mean_burst_s
+                } else {
+                    self.mean_gap_s
+                };
+                self.phase_end = t0 + self.rng.exponential(1.0 / mean);
+                self.next_at = t0 + self.rng.exponential(self.rate());
+                continue;
+            }
+            if self.next_at <= now {
+                n += 1;
+                self.next_at += self.rng.exponential(self.rate());
+                continue;
+            }
+            return n;
+        }
+    }
+
+    /// Absolute time of the next arrival; advances internal state (the
+    /// [`BurstyArrivals::arrivals_until`] phase-flip logic, restated for
+    /// callers that consume arrival times one by one).
+    pub fn next_arrival(&mut self) -> f64 {
+        loop {
+            if self.phase_end <= self.next_at {
+                let t0 = self.phase_end;
+                self.in_burst = !self.in_burst;
+                let mean = if self.in_burst {
+                    self.mean_burst_s
+                } else {
+                    self.mean_gap_s
+                };
+                self.phase_end = t0 + self.rng.exponential(1.0 / mean);
+                self.next_at = t0 + self.rng.exponential(self.rate());
+                continue;
+            }
+            let t = self.next_at;
+            self.next_at += self.rng.exponential(self.rate());
+            return t;
+        }
     }
 }
 
@@ -280,5 +545,146 @@ mod tests {
         let b = p.arrivals_until(10.0); // same time again -> nothing new
         assert!(a > 0);
         assert_eq!(b, 0);
+    }
+
+    #[test]
+    fn tight_limits_are_clamped_not_exceeded() {
+        // the low-max_output grid-cell fix: limits below the natural floors
+        // (prompt 8 / output 4) must still be honored, down to 1 token
+        let mut g = WorkloadGen::new(Dataset::by_name("cnndm").unwrap(), 7)
+            .with_limits(4, 2);
+        for r in g.batch(50) {
+            assert!((1..=4).contains(&r.prompt.len()), "{}", r.prompt.len());
+            assert!((1..=2).contains(&r.params.max_tokens), "{}", r.params.max_tokens);
+        }
+        // degenerate limit of 0 degrades to 1, never to a panic or a 0-token
+        // request the engine could stall on
+        let mut g = WorkloadGen::new(Dataset::by_name("nq").unwrap(), 8)
+            .with_limits(0, 0);
+        let r = g.next_request();
+        assert_eq!(r.prompt.len(), 1);
+        assert_eq!(r.params.max_tokens, 1);
+    }
+
+    #[test]
+    fn mixed_generator_draws_all_components_deterministically() {
+        let mk = || {
+            let mut m = MixedWorkloadGen::parse("sharegpt=2+humaneval=1", 42).unwrap();
+            m.batch(60)
+                .iter()
+                .map(|r| (r.id, r.prompt.clone(), r.params.max_tokens))
+                .collect::<Vec<_>>()
+        };
+        let a = mk();
+        assert_eq!(a, mk(), "mixes must be seed-deterministic");
+        // ids are mixture-global and sequential
+        assert_eq!(
+            a.iter().map(|(id, _, _)| *id).collect::<Vec<_>>(),
+            (0..60).collect::<Vec<u64>>()
+        );
+        // both task flavors appear: humaneval prompts are code-shaped
+        let texts: Vec<String> =
+            a.iter().map(|(_, p, _)| vocab::decode(p)).collect();
+        assert!(texts.iter().any(|t| t.contains("def ")), "code component");
+        assert!(texts.iter().any(|t| t.contains("User:")), "dialogue component");
+    }
+
+    #[test]
+    fn mixed_generator_respects_weights_and_limits() {
+        let mut m = MixedWorkloadGen::new(5)
+            .with_component(Dataset::by_name("sharegpt").unwrap(), 9.0)
+            .with_component(Dataset::by_name("humaneval").unwrap(), 1.0)
+            .with_limits(32, 16);
+        let reqs = m.batch(300);
+        let code = reqs
+            .iter()
+            .filter(|r| vocab::decode(&r.prompt).contains("def "))
+            .count();
+        // ~10% expected; allow a generous band
+        assert!(code < 90, "code fraction too high: {code}/300");
+        assert!(code > 2, "code component never drawn: {code}/300");
+        for r in &reqs {
+            assert!(r.prompt.len() <= 32);
+            assert!(r.params.max_tokens <= 16);
+        }
+        assert_eq!(m.component_names(), vec!["sharegpt", "humaneval"]);
+    }
+
+    #[test]
+    fn mix_parse_rejects_garbage() {
+        assert!(MixedWorkloadGen::parse("bogus=1", 0).is_none());
+        assert!(MixedWorkloadGen::parse("cnndm=0", 0).is_none());
+        assert!(MixedWorkloadGen::parse("cnndm=-2", 0).is_none());
+        assert!(MixedWorkloadGen::parse("cnndm=nan", 0).is_none());
+        assert!(MixedWorkloadGen::parse("", 0).is_none());
+        assert!(MixedWorkloadGen::parse("cnndm,xsum=3", 0).is_some());
+    }
+
+    #[test]
+    fn bursty_rate_between_base_and_burst() {
+        let mut b = BurstyArrivals::new(2.0, 40.0, 8.0, 2.0, 11);
+        let n = b.arrivals_until(2000.0);
+        // stationary mean rate = (2*8 + 40*2) / (8+2) = 9.6/s
+        let rate = n as f64 / 2000.0;
+        assert!(rate > 3.0 && rate < 25.0, "long-run rate {rate}");
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        // Fano factor (window-count variance / mean) ~ 1 for Poisson, >> 1
+        // for a strongly modulated on/off process
+        let fano = |counts: &[usize]| -> f64 {
+            let n = counts.len() as f64;
+            let mean = counts.iter().sum::<usize>() as f64 / n;
+            let var = counts
+                .iter()
+                .map(|&c| (c as f64 - mean).powi(2))
+                .sum::<f64>()
+                / n;
+            var / mean.max(1e-9)
+        };
+        let mut bursty = BurstyArrivals::new(2.0, 40.0, 8.0, 2.0, 13);
+        let bc: Vec<usize> = (1..=2000).map(|t| bursty.arrivals_until(t as f64)).collect();
+        let mut flat = PoissonArrivals::new(9.6, 13);
+        let fc: Vec<usize> = (1..=2000).map(|t| flat.arrivals_until(t as f64)).collect();
+        let fb = fano(&bc);
+        let fp = fano(&fc);
+        assert!(fb > 2.0 * fp, "bursty fano {fb:.2} vs poisson {fp:.2}");
+        assert!(fp < 2.0, "poisson fano {fp:.2}");
+    }
+
+    #[test]
+    fn next_arrival_times_match_windowed_counts() {
+        let mut a = PoissonArrivals::new(4.0, 21);
+        let mut b = PoissonArrivals::new(4.0, 21);
+        let times: Vec<f64> = (0..50).map(|_| a.next_arrival()).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "nondecreasing");
+        assert_eq!(b.arrivals_until(times[49]), 50);
+    }
+
+    #[test]
+    fn bursty_next_arrival_monotone() {
+        let mut b = BurstyArrivals::new(2.0, 40.0, 8.0, 2.0, 23);
+        let times: Vec<f64> = (0..200).map(|_| b.next_arrival()).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "nondecreasing");
+    }
+
+    #[test]
+    fn component_profiles_expose_weights() {
+        let m = MixedWorkloadGen::parse("cnndm=3+humaneval", 1).unwrap();
+        let parts = m.component_profiles();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].0.name, "cnndm");
+        assert_eq!(parts[0].1, 3.0);
+        assert_eq!(parts[1].0.name, "humaneval");
+        assert_eq!(parts[1].1, 1.0);
+    }
+
+    #[test]
+    fn bursty_monotone_consumption() {
+        let mut b = BurstyArrivals::new(5.0, 20.0, 2.0, 1.0, 17);
+        let a = b.arrivals_until(50.0);
+        assert!(a > 0);
+        assert_eq!(b.arrivals_until(50.0), 0);
     }
 }

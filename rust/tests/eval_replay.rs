@@ -1,0 +1,258 @@
+//! Replay determinism: a serving trace recorded through the router's
+//! record hook must replay byte-identically across routing configurations
+//! (`--route` / `--replicas` / steal) and produce the same completion
+//! bodies through both HTTP front-ends (`--frontend`).  Aggregate counts
+//! (completions, token totals) must be stable too; latency aggregates are
+//! allowed to differ — comparing them is what replay is *for*.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use dsde::config::{CapMode, EngineConfig, FrontendKind, RoutePolicy, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::eval::{load_trace, replay, ReplayConfig, TraceEntry, TraceRecorder};
+use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::server::client;
+use dsde::server::http::{serve_router_with, ServeOptions};
+use dsde::server::router::EngineRouter;
+use dsde::sim::regime::DatasetProfile;
+use dsde::workload::{Dataset, WorkloadGen};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dsde-eval-replay-{name}-{}", std::process::id()))
+}
+
+fn raw_get(addr: &str, path: &str) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").as_bytes())
+        .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// Replica set with an IDENTICAL model seed on every replica — the replay
+/// determinism contract (outputs are a pure function of (seed, id)).
+fn same_seed_engines(n: usize, seed: u64) -> Vec<Engine> {
+    (0..n)
+        .map(|_| {
+            let cfg = EngineConfig {
+                max_batch: 4,
+                max_len: 4096,
+                policy: SlPolicyKind::Dsde(Default::default()),
+                seed,
+                ..Default::default()
+            };
+            let model =
+                SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), seed);
+            Engine::new(cfg, Box::new(model))
+        })
+        .collect()
+}
+
+#[test]
+fn recorded_trace_replays_identically_across_router_configs() {
+    // 1. record through the REAL record hook while a router serves the load
+    let path = tmp("configs");
+    {
+        let mut router =
+            EngineRouter::with_options(same_seed_engines(2, 7), RoutePolicy::RoundRobin, false);
+        let rec = Arc::new(TraceRecorder::create(&path, "cnndm").unwrap());
+        router.set_record_hook(rec.hook());
+        let mut gen = WorkloadGen::new(Dataset::by_name("cnndm").unwrap(), 7)
+            .with_limits(48, 24);
+        let rxs: Vec<_> = gen.batch(12).into_iter().map(|r| router.submit(r)).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        router.shutdown();
+    }
+    let trace = load_trace(&path).unwrap();
+    assert_eq!(trace.len(), 12);
+    for e in &trace {
+        assert!(e.prompt_len > 0 && e.max_tokens > 0);
+        assert_eq!(e.tag, "cnndm");
+    }
+
+    // 2. replay under three different routing configurations
+    let base = ReplayConfig {
+        seed: 7,
+        ..Default::default()
+    };
+    let a = replay(&trace, &base).unwrap();
+    let b = replay(
+        &trace,
+        &ReplayConfig {
+            replicas: 3,
+            route: RoutePolicy::KvAware,
+            steal: true,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    let c = replay(
+        &trace,
+        &ReplayConfig {
+            replicas: 2,
+            route: RoutePolicy::LeastLoaded,
+            batch: 2,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+
+    // byte-identical per-request outputs, same digest
+    assert_eq!(a.outputs, b.outputs, "1xRR vs 3xKV+steal");
+    assert_eq!(a.outputs, c.outputs, "1xRR vs 2xLL");
+    assert_eq!(a.digest(), b.digest());
+    assert_eq!(a.digest(), c.digest());
+
+    // stable aggregates: everything completes, token totals agree
+    for m in [&a.metrics, &b.metrics, &c.metrics] {
+        assert_eq!(m.completed, 12);
+        assert_eq!(m.tokens_out, a.metrics.tokens_out);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn replay_twice_under_the_same_config_is_bit_identical() {
+    let path = tmp("twice");
+    {
+        let mut router =
+            EngineRouter::with_options(same_seed_engines(1, 11), RoutePolicy::RoundRobin, false);
+        let rec = Arc::new(TraceRecorder::create(&path, "gsm8k").unwrap());
+        router.set_record_hook(rec.hook());
+        let mut gen = WorkloadGen::new(Dataset::by_name("gsm8k").unwrap(), 11)
+            .with_limits(32, 16);
+        let rxs: Vec<_> = gen.batch(8).into_iter().map(|r| router.submit(r)).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        router.shutdown();
+    }
+    let trace = load_trace(&path).unwrap();
+    let cfg = ReplayConfig {
+        seed: 11,
+        profile: DatasetProfile::gsm8k(),
+        ..Default::default()
+    };
+    let a = replay(&trace, &cfg).unwrap();
+    let b = replay(&trace, &cfg).unwrap();
+    assert_eq!(a.outputs, b.outputs);
+    assert_eq!(a.digest(), b.digest());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Drive the same trace through a served HTTP stack under BOTH front-ends:
+/// the completion bodies' text must match request-for-request (the
+/// front-end choice can never change generation results).
+#[test]
+fn replayed_trace_is_frontend_invariant_over_http() {
+    let trace: Vec<TraceEntry> = (0..8)
+        .map(|i| TraceEntry {
+            t: i as f64 * 0.005,
+            prompt_len: 12 + (i % 4) * 6,
+            max_tokens: 5 + (i % 3) * 3,
+            temperature: 0.0,
+            tag: "cnndm".to_string(),
+        })
+        .collect();
+    let run = |frontend: FrontendKind| -> Vec<(usize, String)> {
+        let router =
+            EngineRouter::with_options(same_seed_engines(2, 5), RoutePolicy::RoundRobin, false);
+        let opts = ServeOptions {
+            frontend,
+            ..Default::default()
+        };
+        let h = serve_router_with(router, "127.0.0.1:0", opts).unwrap();
+        let addr = h.addr.to_string();
+        // sequential submission preserves trace order => deterministic ids
+        let outs: Vec<(usize, String)> = trace
+            .iter()
+            .map(|e| {
+                let prompt = ".".repeat(e.prompt_len);
+                let r = client::complete(&addr, &prompt, e.max_tokens, e.temperature)
+                    .expect("completion");
+                assert_eq!(r.status, 200);
+                let tokens = r.body.get("tokens").and_then(|t| t.as_usize()).unwrap();
+                let text = r
+                    .body
+                    .get("text")
+                    .and_then(|t| t.as_str())
+                    .unwrap()
+                    .to_string();
+                (tokens, text)
+            })
+            .collect();
+        h.shutdown();
+        outs
+    };
+    let threaded = run(FrontendKind::Threaded);
+    let event_loop = run(FrontendKind::EventLoop);
+    assert_eq!(threaded, event_loop, "front-ends must agree on every body");
+    for ((tokens, _), e) in threaded.iter().zip(&trace) {
+        assert_eq!(*tokens, e.max_tokens, "every request ran to its budget");
+    }
+}
+
+#[test]
+fn recording_server_reports_on_health_and_captures_http_traffic() {
+    let path = tmp("http-rec");
+    let mut router =
+        EngineRouter::with_options(same_seed_engines(1, 3), RoutePolicy::RoundRobin, false);
+    let rec = Arc::new(TraceRecorder::create(&path, "sharegpt").unwrap());
+    router.set_record_hook(rec.hook());
+    let h = serve_router_with(router, "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let addr = h.addr.to_string();
+    let health = raw_get(&addr, "/health");
+    assert!(health.contains("\"recording\":true"), "{health}");
+    for i in 0..3 {
+        let r = client::complete(&addr, "hello world", 6 + i, 0.0).unwrap();
+        assert_eq!(r.status, 200);
+    }
+    h.shutdown();
+    let trace = load_trace(&path).unwrap();
+    assert_eq!(trace.len(), 3, "every HTTP completion was recorded");
+    assert_eq!(trace[0].prompt_len, "hello world".len());
+    assert_eq!(trace[2].max_tokens, 8);
+    assert!(trace.iter().all(|e| e.tag == "sharegpt"));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn replay_respects_policy_config_without_changing_outputs() {
+    // the SL policy shapes latency/acceptance but NOT the emitted tokens
+    // (the simulator draws token content from (seed, id) streams) — replay
+    // under different policies is therefore a clean latency comparison
+    let trace: Vec<TraceEntry> = (0..10)
+        .map(|i| TraceEntry {
+            t: 0.0,
+            prompt_len: 20,
+            max_tokens: 12 + (i % 2) * 6,
+            temperature: 0.0,
+            tag: "xsum".to_string(),
+        })
+        .collect();
+    let mk = |policy: SlPolicyKind, cap: CapMode| {
+        replay(
+            &trace,
+            &ReplayConfig {
+                policy,
+                cap,
+                profile: DatasetProfile::xsum(),
+                seed: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let dsde_run = mk(SlPolicyKind::Dsde(Default::default()), CapMode::Mean);
+    let static_run = mk(SlPolicyKind::Static(4), CapMode::None);
+    assert_eq!(dsde_run.outputs, static_run.outputs);
+    assert_eq!(dsde_run.metrics.completed, 10);
+    // both actually drafted (speculative path exercised)
+    assert!(dsde_run.metrics.drafted > 0);
+    assert!(static_run.metrics.drafted > 0);
+}
