@@ -223,6 +223,41 @@ impl FrontendKind {
     }
 }
 
+/// Readiness back-end for the event-loop front-end (the `--poller` CLI
+/// surface).  Ignored by the threaded front-end.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PollerKind {
+    /// Use `epoll` where the kernel provides it, else fall back to
+    /// `poll(2)`.
+    #[default]
+    Auto,
+    /// Edge-triggered `epoll` (Linux).  Startup error if unavailable.
+    Epoll,
+    /// Portable `poll(2)` with a persistent registration vector.
+    Poll,
+}
+
+impl PollerKind {
+    /// Parse CLI shorthand: `auto`, `epoll`, or `poll`.
+    pub fn parse(s: &str) -> Option<PollerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(PollerKind::Auto),
+            "epoll" => Some(PollerKind::Epoll),
+            "poll" => Some(PollerKind::Poll),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase wire/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PollerKind::Auto => "auto",
+            PollerKind::Epoll => "epoll",
+            PollerKind::Poll => "poll",
+        }
+    }
+}
+
 /// Multi-replica serving configuration (the `--replicas` / `--route` /
 /// `--frontend` CLI surface): how many engine replicas the router owns,
 /// how it picks one per request, and which HTTP front-end faces the
@@ -241,6 +276,11 @@ pub struct RouterConfig {
     pub steal: bool,
     /// Which HTTP front-end faces the clients.
     pub frontend: FrontendKind,
+    /// Readiness back-end for the event-loop front-end (`--poller`).
+    pub poller: PollerKind,
+    /// Event-loop shard (thread) count (`--loop-shards`): independent
+    /// loop threads, each owning a disjoint set of connections.
+    pub loop_shards: usize,
     /// Serving-trace recording (`--record <path>`): when set, every
     /// routed request is appended to this NDJSON trace for later
     /// `pallas eval --replay` comparison.  `None` = no recording.
@@ -254,6 +294,8 @@ impl Default for RouterConfig {
             policy: RoutePolicy::RoundRobin,
             steal: true,
             frontend: FrontendKind::Threaded,
+            poller: PollerKind::Auto,
+            loop_shards: 1,
             record: None,
         }
     }
@@ -268,6 +310,15 @@ impl RouterConfig {
         if self.replicas > 256 {
             return Err(format!("replicas {} unreasonably large (max 256)", self.replicas));
         }
+        if self.loop_shards == 0 {
+            return Err("loop_shards must be > 0".to_string());
+        }
+        if self.loop_shards > 64 {
+            return Err(format!(
+                "loop_shards {} unreasonably large (max 64)",
+                self.loop_shards
+            ));
+        }
         Ok(())
     }
 
@@ -278,6 +329,8 @@ impl RouterConfig {
             .set("route", self.policy.name())
             .set("steal", self.steal)
             .set("frontend", self.frontend.name())
+            .set("poller", self.poller.name())
+            .set("loop_shards", self.loop_shards)
             .set(
                 "record",
                 match &self.record {
@@ -374,7 +427,19 @@ mod tests {
         assert!(s.contains("\"route\":\"round-robin\""));
         assert!(s.contains("\"steal\":true"));
         assert!(s.contains("\"frontend\":\"threaded\""));
+        assert!(s.contains("\"poller\":\"auto\""));
+        assert!(s.contains("\"loop_shards\":1"));
         assert!(s.contains("\"record\":null"));
+        let zero_shards = RouterConfig {
+            loop_shards: 0,
+            ..Default::default()
+        };
+        assert!(zero_shards.validate().unwrap_err().contains("loop_shards"));
+        let huge_shards = RouterConfig {
+            loop_shards: 65,
+            ..Default::default()
+        };
+        assert!(huge_shards.validate().unwrap_err().contains("loop_shards"));
         let recording = RouterConfig {
             record: Some("trace.ndjson".to_string()),
             ..Default::default()
@@ -394,6 +459,16 @@ mod tests {
         assert_eq!(FrontendKind::parse("nope"), None);
         assert_eq!(FrontendKind::EventLoop.name(), "event-loop");
         assert_eq!(FrontendKind::default(), FrontendKind::Threaded);
+    }
+
+    #[test]
+    fn poller_kind_parse() {
+        assert_eq!(PollerKind::parse("auto"), Some(PollerKind::Auto));
+        assert_eq!(PollerKind::parse("EPOLL"), Some(PollerKind::Epoll));
+        assert_eq!(PollerKind::parse("poll"), Some(PollerKind::Poll));
+        assert_eq!(PollerKind::parse("kqueue"), None);
+        assert_eq!(PollerKind::Epoll.name(), "epoll");
+        assert_eq!(PollerKind::default(), PollerKind::Auto);
     }
 
     #[test]

@@ -13,8 +13,9 @@
 //!   [`spec::cap`] SL-cap for the straggler problem.  On top sits the
 //!   [`server`] layer: a multi-replica router and an HTTP/1.1 front-end
 //!   with blocking and token-streaming completions, selectable between a
-//!   thread-per-connection and a poll-based event-loop implementation
-//!   (`--frontend`), byte-identical either way.
+//!   thread-per-connection and a sharded epoll/poll event-loop
+//!   implementation (`--frontend`, `--poller`, `--loop-shards`),
+//!   byte-identical either way.
 //! * **L2/L1 (build-time python)** — a tiny transformer pair with Pallas
 //!   kernels, AOT-lowered to HLO text artifacts loaded by [`runtime`].
 //!

@@ -17,7 +17,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use dsde::config::{
-    CapMode, EngineConfig, FrontendKind, RoutePolicy, RouterConfig, SlPolicyKind,
+    CapMode, EngineConfig, FrontendKind, PollerKind, RoutePolicy, RouterConfig, SlPolicyKind,
 };
 use dsde::engine::engine::Engine;
 use dsde::eval::{
@@ -43,6 +43,8 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "route", help: "round-robin | least-loaded | kv-aware (serve)", default: Some("round-robin") },
     FlagSpec { name: "steal", help: "drain-tail work stealing on|off (serve)", default: Some("on") },
     FlagSpec { name: "frontend", help: "threaded | event-loop (serve)", default: Some("threaded") },
+    FlagSpec { name: "poller", help: "auto | epoll | poll (event-loop readiness back-end)", default: Some("auto") },
+    FlagSpec { name: "loop-shards", help: "event-loop shard threads (serve)", default: Some("1") },
     FlagSpec { name: "cap", help: "none | mean | median | p90", default: Some("mean") },
     FlagSpec { name: "batch", help: "max batch size", default: Some("8") },
     FlagSpec { name: "dataset", help: "cnndm|xsum|gsm8k|hotpotqa|nq|humaneval|sharegpt|wmt14", default: Some("cnndm") },
@@ -93,11 +95,15 @@ fn router_config(args: &Args) -> Result<RouterConfig> {
     };
     let frontend = FrontendKind::parse(&args.str_or("frontend", "threaded"))
         .ok_or_else(|| anyhow::anyhow!("unknown --frontend value (threaded | event-loop)"))?;
+    let poller = PollerKind::parse(&args.str_or("poller", "auto"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --poller value (auto | epoll | poll)"))?;
     let cfg = RouterConfig {
         replicas: args.usize_clamped_or("replicas", 1, 1, 256),
         policy,
         steal,
         frontend,
+        poller,
+        loop_shards: args.usize_clamped_or("loop-shards", 1, 1, 64),
         record: args.get("record").map(String::from),
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
@@ -173,6 +179,8 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
             attach_recorder(&mut router, &rcfg, args)?;
             let opts = ServeOptions {
                 frontend: rcfg.frontend,
+                poller: rcfg.poller,
+                loop_shards: rcfg.loop_shards,
                 ..Default::default()
             };
             let handle =
@@ -205,6 +213,8 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
             attach_recorder(&mut router, &rcfg, args)?;
             let opts = ServeOptions {
                 frontend: rcfg.frontend,
+                poller: rcfg.poller,
+                loop_shards: rcfg.loop_shards,
                 ..Default::default()
             };
             let handle =

@@ -11,9 +11,13 @@
 //!
 //! The [`Conn`] state machine is event-loop-only: a nonblocking socket
 //! stepped by readiness events through
-//! `Reading → (WaitBlocking | Streaming) → Flushing → Closed`, with all
-//! writes buffered so a slow reader backpressures into the connection's
-//! own output buffer instead of blocking the loop.
+//! `Reading → (WaitBlocking | StreamingRing) → Flushing → Closed`, with
+//! all writes buffered so a slow reader backpressures into the
+//! connection's own output buffer instead of blocking the loop.
+//! Streaming output reaches the connection as preformatted frames pushed
+//! by replica threads onto the owning shard's SPSC ring
+//! ([`crate::server::router::StreamFrame`]); the shard loop appends them
+//! via [`Conn::deliver_frame`].
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -25,7 +29,7 @@ use std::time::{Duration, Instant};
 use crate::config::FrontendKind;
 use crate::engine::request::{FinishedRequest, Request, SamplingParams};
 use crate::model::vocab;
-use crate::server::router::{EngineRouter, StreamEvent};
+use crate::server::router::{EngineRouter, RingTarget, StreamEvent};
 use crate::util::json::Json;
 use crate::util::sys::{Waker, POLLIN, POLLOUT};
 
@@ -77,10 +81,15 @@ impl Default for ConnLimits {
 
 /// Front-end connection counters reported on `/health` and
 /// `/v1/metrics` (and queryable in-process via
-/// `ServerHandle::frontend_stats`).
+/// `ServerHandle::frontend_stats`).  Event-loop servers additionally
+/// carry the resolved poller name, per-shard open-connection gauges, and
+/// the stream-ring depth high-water mark.
 #[derive(Debug)]
 pub struct FrontendStats {
     kind: FrontendKind,
+    poller: &'static str,
+    shard_open: Vec<AtomicUsize>,
+    ring_depth_hwm: AtomicUsize,
     open: AtomicUsize,
     accepted: AtomicU64,
     rejected: AtomicU64,
@@ -88,8 +97,21 @@ pub struct FrontendStats {
 
 impl FrontendStats {
     pub(crate) fn new(kind: FrontendKind) -> FrontendStats {
+        FrontendStats::with_loop(kind, "none", 0)
+    }
+
+    /// Stats for an event-loop server: the resolved poller back-end name
+    /// and the shard count (one open-connection gauge per shard).
+    pub(crate) fn with_loop(
+        kind: FrontendKind,
+        poller: &'static str,
+        shards: usize,
+    ) -> FrontendStats {
         FrontendStats {
             kind,
+            poller,
+            shard_open: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            ring_depth_hwm: AtomicUsize::new(0),
             open: AtomicUsize::new(0),
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -99,6 +121,30 @@ impl FrontendStats {
     /// Which front-end implementation is serving.
     pub fn kind(&self) -> FrontendKind {
         self.kind
+    }
+
+    /// The resolved readiness back-end: `"epoll"`, `"poll"`, or `"none"`
+    /// for the threaded front-end.
+    pub fn poller(&self) -> &'static str {
+        self.poller
+    }
+
+    /// Event-loop shard count (0 for the threaded front-end).
+    pub fn loop_shards(&self) -> usize {
+        self.shard_open.len()
+    }
+
+    /// Connections currently owned by shard `s` (0 when out of range).
+    pub fn shard_open(&self, s: usize) -> usize {
+        self.shard_open
+            .get(s)
+            .map_or(0, |a| a.load(Ordering::SeqCst))
+    }
+
+    /// Deepest stream-ring backlog observed by any shard since startup —
+    /// how far token production ran ahead of socket delivery.
+    pub fn ring_depth_hwm(&self) -> usize {
+        self.ring_depth_hwm.load(Ordering::SeqCst)
     }
 
     /// Connections currently open.
@@ -121,6 +167,15 @@ impl FrontendStats {
         self.open.fetch_add(1, Ordering::SeqCst);
     }
 
+    /// Accept accounted to a specific shard (the event-loop path; shard 0
+    /// accepts, but the gauge follows the shard the conn is handed to).
+    pub(crate) fn on_accept_shard(&self, s: usize) {
+        self.on_accept();
+        if let Some(a) = self.shard_open.get(s) {
+            a.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
     pub(crate) fn on_reject(&self) {
         self.rejected.fetch_add(1, Ordering::SeqCst);
     }
@@ -129,13 +184,39 @@ impl FrontendStats {
         self.open.fetch_sub(1, Ordering::SeqCst);
     }
 
+    /// Close accounted to the owning shard.
+    pub(crate) fn on_close_shard(&self, s: usize) {
+        self.on_close();
+        if let Some(a) = self.shard_open.get(s) {
+            a.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Record an observed stream-ring depth (keeps the max).
+    pub(crate) fn note_ring_depth(&self, depth: usize) {
+        self.ring_depth_hwm.fetch_max(depth, Ordering::SeqCst);
+    }
+
     /// The `"frontend"` object embedded in `/health` and `/v1/metrics`.
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("kind", self.kind.name())
+            .set("poller", self.poller)
+            .set("loop_shards", self.loop_shards())
             .set("open_connections", self.open())
             .set("accepted", self.accepted())
-            .set("rejected", self.rejected())
+            .set("rejected", self.rejected());
+        if !self.shard_open.is_empty() {
+            let per: Vec<Json> = self
+                .shard_open
+                .iter()
+                .map(|a| Json::from(a.load(Ordering::SeqCst)))
+                .collect();
+            j = j
+                .set("shard_open_connections", per)
+                .set("ring_depth_hwm", self.ring_depth_hwm());
+        }
+        j
     }
 }
 
@@ -273,6 +354,22 @@ pub(crate) fn done_line(fin: &FinishedRequest) -> String {
         .to_string()
 }
 
+/// One accepted-token delta, preformatted as a ready-to-write HTTP
+/// chunk.  Replica threads build ring frames with this so the bytes a
+/// shard delivers are identical by construction to what the threaded
+/// front-end and the channel-based stream path emit.
+pub(crate) fn stream_delta_frame(tokens: &[u32], t: f64) -> Vec<u8> {
+    encode_chunk_line(&delta_line(tokens, t))
+}
+
+/// The terminal frame of a ring-delivered stream: the done chunk plus
+/// the zero-length chunk that ends the chunked body.
+pub(crate) fn stream_done_frame(fin: &FinishedRequest) -> Vec<u8> {
+    let mut bytes = encode_chunk_line(&done_line(fin));
+    bytes.extend_from_slice(STREAM_TERMINATOR);
+    bytes
+}
+
 /// Terminal line for a stream whose replica exited without a summary
 /// (shutdown race): tell the client explicitly instead of truncating.
 pub(crate) fn aborted_line() -> String {
@@ -328,19 +425,40 @@ pub(crate) enum Dispatch {
     Immediate(Vec<u8>),
     /// A blocking completion in flight on the engine.
     Blocking(Receiver<FinishedRequest>),
-    /// A streaming completion in flight on the engine.
+    /// A streaming completion in flight on the engine (threaded
+    /// front-end: the handler thread blocks on this channel).
     Streaming(Receiver<StreamEvent>),
+    /// A streaming completion in flight with ring delivery (event loop:
+    /// frames arrive on the owning shard's SPSC ring, addressed by conn
+    /// token — there is no per-request channel to hold).
+    StreamingRing,
 }
 
-/// Route one request.  `waker` is the event loop's self-pipe (None on
-/// the threaded front-end): it rides along on engine submissions so
-/// replica threads can signal deliveries without a blocking `recv`
-/// anywhere on the loop.
+/// Who is asking: the threaded front-end (blocking reply channels) or an
+/// event-loop shard (waker-pumped channels for blocking completions,
+/// SPSC ring delivery for streams).
+#[derive(Clone, Copy)]
+pub(crate) enum DispatchCtx<'a> {
+    /// Threaded front-end: one handler thread per connection.
+    Threaded,
+    /// Event-loop shard: `waker` is the shard's waker (rides along on
+    /// engine submissions so replica threads can signal deliveries
+    /// without a blocking `recv` anywhere on the loop), `target`
+    /// addresses stream frames back to this connection.
+    Loop {
+        /// The shard's waker.
+        waker: &'a Arc<Waker>,
+        /// Ring address of the dispatching connection.
+        target: RingTarget,
+    },
+}
+
+/// Route one request.
 pub(crate) fn dispatch(
     req: &HttpRequest,
     router: &EngineRouter,
     stats: &FrontendStats,
-    waker: Option<&Arc<Waker>>,
+    ctx: DispatchCtx<'_>,
 ) -> Dispatch {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => {
@@ -388,15 +506,26 @@ pub(crate) fn dispatch(
                     stop_token: None,
                 },
             );
-            match (streaming, waker) {
-                (true, Some(w)) => {
-                    Dispatch::Streaming(router.submit_streaming_with_waker(request, w.clone()))
+            match (streaming, ctx) {
+                (true, DispatchCtx::Loop { target, .. }) => {
+                    if router.submit_streaming_ring(request, target) {
+                        Dispatch::StreamingRing
+                    } else {
+                        // all replicas gone (shutdown race): answer with a
+                        // complete, explicitly aborted stream
+                        let mut bytes = STREAM_HEADER.to_vec();
+                        bytes.extend_from_slice(&encode_chunk_line(&aborted_line()));
+                        bytes.extend_from_slice(STREAM_TERMINATOR);
+                        Dispatch::Immediate(bytes)
+                    }
                 }
-                (true, None) => Dispatch::Streaming(router.submit_streaming(request)),
-                (false, Some(w)) => {
-                    Dispatch::Blocking(router.submit_with_waker(request, w.clone()))
+                (true, DispatchCtx::Threaded) => {
+                    Dispatch::Streaming(router.submit_streaming(request))
                 }
-                (false, None) => Dispatch::Blocking(router.submit(request)),
+                (false, DispatchCtx::Loop { waker, .. }) => {
+                    Dispatch::Blocking(router.submit_with_waker(request, waker.clone()))
+                }
+                (false, DispatchCtx::Threaded) => Dispatch::Blocking(router.submit(request)),
             }
         }
         (_, "/health") | (_, "/v1/metrics") => {
@@ -411,24 +540,16 @@ pub(crate) fn dispatch(
 
 // ---- the event-loop connection state machine ---------------------------------
 
-/// Stop pulling stream events once this much encoded output is already
-/// waiting on a connection: a reader slower than the engine
-/// backpressures into its own buffer (events keep queueing on the
-/// unbounded channel; the engine never blocks) instead of growing the
-/// buffer without bound or stalling the loop.
-const OUT_HIGH_WATER: usize = 256 * 1024;
-
 /// Per-connection protocol state.
 pub(crate) enum ConnState {
     /// Accumulating request bytes.
     Reading,
     /// Blocking completion submitted; waiting on the engine.
     WaitBlocking(Receiver<FinishedRequest>),
-    /// Streaming completion in flight; `terminated` once the final chunk
-    /// has been queued.
-    Streaming {
-        /// Event channel from the engine replica.
-        rx: Receiver<StreamEvent>,
+    /// Streaming completion in flight with ring delivery; frames land in
+    /// the out buffer via [`Conn::deliver_frame`].  `terminated` once the
+    /// final chunk + zero chunk have been queued.
+    StreamingRing {
         /// The terminal line + zero chunk are already in the out buffer.
         terminated: bool,
     },
@@ -438,9 +559,15 @@ pub(crate) enum ConnState {
     Closed,
 }
 
-/// One nonblocking connection owned by the event loop.
+/// One nonblocking connection owned by an event-loop shard.
 pub(crate) struct Conn {
     stream: TcpStream,
+    /// Stable loop-wide identity: the poller token and the `conn` half of
+    /// this connection's [`RingTarget`].
+    pub(crate) token: u64,
+    /// Interest bits currently registered with the shard's poller; the
+    /// loop re-registers only when [`Conn::interest`] diverges.
+    pub(crate) registered_interest: i16,
     pub(crate) state: ConnState,
     inbuf: Vec<u8>,
     outbuf: Vec<u8>,
@@ -451,10 +578,12 @@ pub(crate) struct Conn {
 }
 
 impl Conn {
-    pub(crate) fn new(stream: TcpStream) -> Conn {
+    pub(crate) fn new(stream: TcpStream, token: u64) -> Conn {
         let now = Instant::now();
         Conn {
             stream,
+            token,
+            registered_interest: 0,
             state: ConnState::Reading,
             inbuf: Vec::new(),
             outbuf: Vec::new(),
@@ -504,12 +633,15 @@ impl Conn {
 
     /// Readiness: the socket has bytes (or EOF).  Reads until
     /// `WouldBlock`, feeding the parser; a complete request dispatches.
+    /// `shard` is the owning shard's index — with the connection token it
+    /// forms the [`RingTarget`] stream frames are addressed to.
     pub(crate) fn on_readable(
         &mut self,
         router: &EngineRouter,
         stats: &FrontendStats,
         waker: &Arc<Waker>,
         limits: &ConnLimits,
+        shard: usize,
     ) {
         if !matches!(self.state, ConnState::Reading) {
             return;
@@ -537,17 +669,25 @@ impl Conn {
                         }
                         ParseStatus::Complete(req) => {
                             self.inbuf.clear();
-                            match dispatch(&req, router, stats, Some(waker)) {
+                            let ctx = DispatchCtx::Loop {
+                                waker,
+                                target: RingTarget {
+                                    shard,
+                                    conn: self.token,
+                                },
+                            };
+                            match dispatch(&req, router, stats, ctx) {
                                 Dispatch::Immediate(bytes) => self.respond(bytes),
                                 Dispatch::Blocking(rx) => {
                                     self.state = ConnState::WaitBlocking(rx);
                                 }
-                                Dispatch::Streaming(rx) => {
+                                Dispatch::StreamingRing => {
                                     self.queue(STREAM_HEADER);
-                                    self.state = ConnState::Streaming {
-                                        rx,
-                                        terminated: false,
-                                    };
+                                    self.state =
+                                        ConnState::StreamingRing { terminated: false };
+                                }
+                                Dispatch::Streaming(_) => {
+                                    unreachable!("channel streaming is threaded-only")
                                 }
                             }
                             self.pump();
@@ -565,11 +705,27 @@ impl Conn {
         }
     }
 
+    /// Append one ring-delivered stream frame to the out buffer.  Frames
+    /// arriving for a connection that already terminated (or died) are
+    /// dropped — the replica keeps producing briefly after a client
+    /// disappears and those bytes have nowhere to go.  No flush here: the
+    /// shard loop pumps after draining its rings.
+    pub(crate) fn deliver_frame(&mut self, bytes: &[u8], done: bool) {
+        if let ConnState::StreamingRing { terminated } = &mut self.state {
+            if !*terminated {
+                self.outbuf.extend_from_slice(bytes);
+                if done {
+                    *terminated = true;
+                }
+            }
+        }
+    }
+
     /// Move engine-side progress into the output buffer (nonblocking
     /// `try_recv` only) and flush what the socket will take.
     pub(crate) fn pump(&mut self) {
-        match &mut self.state {
-            ConnState::WaitBlocking(rx) => match rx.try_recv() {
+        if let ConnState::WaitBlocking(rx) = &mut self.state {
+            match rx.try_recv() {
                 Ok(fin) => {
                     let bytes = encode_json(200, &blocking_body(&fin));
                     self.respond(bytes);
@@ -579,31 +735,7 @@ impl Conn {
                     // replica exited without a result (shutdown race)
                     self.respond(encode_error(500, "aborted"));
                 }
-            },
-            ConnState::Streaming { rx, terminated } => {
-                while !*terminated && self.outbuf.len() - self.out_pos < OUT_HIGH_WATER {
-                    match rx.try_recv() {
-                        Ok(StreamEvent::Delta { tokens, t }) => {
-                            let chunk = encode_chunk_line(&delta_line(&tokens, t));
-                            self.outbuf.extend_from_slice(&chunk);
-                        }
-                        Ok(StreamEvent::Done(fin)) => {
-                            let chunk = encode_chunk_line(&done_line(&fin));
-                            self.outbuf.extend_from_slice(&chunk);
-                            self.outbuf.extend_from_slice(STREAM_TERMINATOR);
-                            *terminated = true;
-                        }
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => {
-                            let chunk = encode_chunk_line(&aborted_line());
-                            self.outbuf.extend_from_slice(&chunk);
-                            self.outbuf.extend_from_slice(STREAM_TERMINATOR);
-                            *terminated = true;
-                        }
-                    }
-                }
             }
-            _ => {}
         }
         self.try_flush();
     }
@@ -611,16 +743,6 @@ impl Conn {
     /// Readiness: the socket will take more bytes.
     pub(crate) fn on_writable(&mut self) {
         self.try_flush();
-        // a drained stream buffer frees room to pull more events
-        if matches!(
-            self.state,
-            ConnState::Streaming {
-                terminated: false,
-                ..
-            }
-        ) {
-            self.pump();
-        }
     }
 
     fn try_flush(&mut self) {
@@ -653,13 +775,7 @@ impl Conn {
             self.outbuf.clear();
             self.out_pos = 0;
             let response_complete = matches!(self.state, ConnState::Flushing)
-                || matches!(
-                    self.state,
-                    ConnState::Streaming {
-                        terminated: true,
-                        ..
-                    }
-                );
+                || matches!(self.state, ConnState::StreamingRing { terminated: true });
             if response_complete {
                 // discard any late request bytes already buffered before
                 // dropping the socket: closing with unread input makes
@@ -810,5 +926,56 @@ mod tests {
         let j = s.to_json().to_string();
         assert!(j.contains("\"kind\":\"event-loop\""), "{j}");
         assert!(j.contains("\"open_connections\":1"), "{j}");
+        assert!(j.contains("\"poller\":\"none\""), "{j}");
+        assert!(j.contains("\"loop_shards\":0"), "{j}");
+        // no shard gauges unless the server actually runs loop shards
+        assert!(!j.contains("shard_open_connections"), "{j}");
+    }
+
+    #[test]
+    fn loop_stats_track_shards_and_ring_depth() {
+        let s = FrontendStats::with_loop(FrontendKind::EventLoop, "epoll", 2);
+        s.on_accept_shard(1);
+        s.on_accept_shard(1);
+        s.on_accept_shard(0);
+        s.on_close_shard(1);
+        s.note_ring_depth(7);
+        s.note_ring_depth(3);
+        assert_eq!(s.open(), 2);
+        assert_eq!(s.accepted(), 3);
+        assert_eq!(s.loop_shards(), 2);
+        assert_eq!(s.shard_open(0), 1);
+        assert_eq!(s.shard_open(1), 1);
+        assert_eq!(s.shard_open(9), 0);
+        assert_eq!(s.ring_depth_hwm(), 7);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"poller\":\"epoll\""), "{j}");
+        assert!(j.contains("\"loop_shards\":2"), "{j}");
+        assert!(j.contains("\"shard_open_connections\":[1,1]"), "{j}");
+        assert!(j.contains("\"ring_depth_hwm\":7"), "{j}");
+    }
+
+    #[test]
+    fn ring_frames_match_channel_framing() {
+        // byte-identity oracle: ring frames are built by the exact same
+        // encoders the channel/threaded stream path uses
+        let delta = stream_delta_frame(&[1, 2, 3], 0.5);
+        assert_eq!(delta, encode_chunk_line(&delta_line(&[1, 2, 3], 0.5)));
+        let fin = FinishedRequest {
+            id: 7,
+            output: vec![104, 105],
+            reason: crate::engine::request::FinishReason::MaxTokens,
+            arrival: 0.0,
+            finished_at: 1.0,
+            first_token_at: 0.5,
+            rounds: 2,
+            drafted: 4,
+            accepted: 2,
+            preemptions: 0,
+        };
+        let done = stream_done_frame(&fin);
+        let mut expect = encode_chunk_line(&done_line(&fin));
+        expect.extend_from_slice(STREAM_TERMINATOR);
+        assert_eq!(done, expect);
     }
 }

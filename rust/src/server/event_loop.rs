@@ -1,121 +1,241 @@
-//! Poll-based event-loop HTTP front-end: all connections multiplexed on
-//! one thread, so concurrency is bounded by sockets and KV blocks — not
-//! by threads.
+//! Sharded event-loop HTTP front-end: connections multiplexed over N
+//! independent loop threads, so concurrency is bounded by sockets and KV
+//! blocks — not by threads.
 //!
-//! One loop thread owns every connection.  Each iteration it polls
-//! (`util::sys::poll`) over:
+//! Each shard owns its connections outright (keyed by a loop-wide `u64`
+//! token in a private map — no cross-shard locking anywhere) and drives
+//! them through the [`Conn`] state machine off a [`Poller`] back-end
+//! (edge-triggered `epoll` or the portable `poll(2)` fallback; see
+//! `--poller`).  Every iteration a shard waits on:
 //!
-//! * the **waker** self-pipe — engine replica threads poke it after
-//!   every `StreamEvent`/`FinishedRequest` delivery
-//!   (`submit_*_with_waker`), which is the nonblocking notification path
-//!   that replaces the threaded front-end's blocking `recv`;
-//! * the **listener** — accepted sockets are made nonblocking and enter
-//!   the [`Conn`] state machine;
-//! * every **connection**, with interest computed from its state
-//!   (readable while parsing, writable while output is buffered).
+//! * its **waker** — engine replica threads poke it after publishing
+//!   stream frames or blocking-completion deliveries, the nonblocking
+//!   notification path that replaces the threaded front-end's blocking
+//!   `recv`; pokes coalesce in [`Waker::wake`];
+//! * the **listener** (shard 0 only) — accepted sockets are made
+//!   nonblocking, assigned a token, and either registered locally or
+//!   handed off over an mpsc channel to the shard with the fewest open
+//!   connections (plus a waker poke so the target notices immediately);
+//! * every **connection it owns**, registered edge-triggered with
+//!   interest cached per connection — the poller is touched only when
+//!   [`Conn::interest`] actually changes.
 //!
-//! Slow readers cannot stall the loop: writes are buffered per
-//! connection and stream events stop being pulled past a high-water
-//! mark, so backpressure lands on the one slow connection while its
-//! events queue harmlessly on the unbounded channel.
+//! Streaming tokens do not travel through per-request channels here:
+//! each replica holds one bounded lock-free SPSC ring per shard and
+//! pushes preformatted NDJSON frames tagged with the connection token
+//! ([`StreamFrame`]); the shard drains its rings each iteration and
+//! appends the bytes to the addressed connection's output buffer.  A slow
+//! reader backpressures into its own buffer; frames for connections that
+//! died are discarded on arrival.
 //!
-//! Shutdown ordering (see `ServerHandle::shutdown`): the stop flag
-//! closes idle connections and stops accepting, the router drains —
-//! waking the loop for every terminal delivery — and the loop exits once
-//! its last connection flushes and closes.
+//! Shutdown ordering (see `ServerHandle::shutdown`): the stop flag stops
+//! accepting and closes request-less connections, the router drains —
+//! terminal frames ride the rings and wake the shards — and each shard
+//! exits once its last connection flushes (shards > 0 also wait for the
+//! accept shard to drop the handoff channel, so no handed-off socket is
+//! stranded).
 
-use std::net::TcpListener;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::log_warn;
-use crate::server::conn::{Conn, ConnLimits, ConnState, FrontendStats};
-use crate::server::router::EngineRouter;
-use crate::util::sys::{poll, PollFd, Waker, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+use crate::server::conn::{
+    aborted_line, drain_before_close, encode_chunk_line, encode_error, Conn, ConnLimits,
+    ConnState, FrontendStats, STREAM_TERMINATOR,
+};
+use crate::server::router::{EngineRouter, StreamFrame};
+use crate::util::spsc;
+use crate::util::sys::{Event, Poller, Waker, POLLIN};
 
 /// Poll timeout: bounds how stale timeout checks and the stop flag can
-/// get while the loop is otherwise idle.
+/// get while a shard is otherwise idle.
 const POLL_TIMEOUT_MS: i32 = 100;
 
-/// Drive the event loop until `stop` is set and every connection has
-/// drained.  Runs on its own thread (spawned by `serve_router_with`).
-pub(crate) fn run(
-    listener: TcpListener,
-    router: Arc<EngineRouter>,
-    stats: Arc<FrontendStats>,
-    waker: Arc<Waker>,
-    stop: Arc<AtomicBool>,
-    limits: ConnLimits,
+/// Poller token reserved for the shard's waker.
+const WAKER_TOKEN: u64 = u64::MAX;
+
+/// Poller token reserved for the listener (shard 0 only).
+const LISTENER_TOKEN: u64 = u64::MAX - 1;
+
+/// Iterations the listener stays out of the poll set after an accept
+/// failure (EMFILE/ENFILE fd exhaustion): the backlogged connection would
+/// otherwise keep the level-triggered listener readable and spin the
+/// accept shard hot until an fd frees up.
+const ACCEPT_BACKOFF_TICKS: u32 = 5;
+
+/// Everything one event-loop shard needs to run, bundled for the spawn in
+/// `serve_router_with`.
+pub(crate) struct ShardConfig {
+    /// This shard's index (also the `shard` half of its [`RingTarget`]s).
+    ///
+    /// [`RingTarget`]: crate::server::router::RingTarget
+    pub(crate) id: usize,
+    /// Readiness back-end (each shard owns its own instance).
+    pub(crate) poller: Box<dyn Poller>,
+    /// This shard's waker: replicas poke it after publishing deliveries,
+    /// the acceptor pokes it after a handoff.
+    pub(crate) waker: Arc<Waker>,
+    /// The accept socket (shard 0 only).
+    pub(crate) listener: Option<TcpListener>,
+    /// Inbound connection handoffs from the accept shard (shards > 0).
+    pub(crate) handoff_rx: Option<Receiver<(TcpStream, u64)>>,
+    /// Outbound handoff channels + target-shard wakers, indexed by
+    /// `shard - 1` (shard 0 only; empty elsewhere).
+    pub(crate) handoff_txs: Vec<(Sender<(TcpStream, u64)>, Arc<Waker>)>,
+    /// One stream-frame ring consumer per engine replica.
+    pub(crate) rings: Vec<spsc::Consumer<StreamFrame>>,
+    /// The engine router requests dispatch to.
+    pub(crate) router: Arc<EngineRouter>,
+    /// Shared front-end counters (global + per-shard gauges).
+    pub(crate) stats: Arc<FrontendStats>,
+    /// Server-wide stop flag.
+    pub(crate) stop: Arc<AtomicBool>,
+    /// Protocol limits and timeouts.
+    pub(crate) limits: ConnLimits,
+    /// Loop-wide connection token allocator (shared by all shards so
+    /// tokens are unique server-wide; starts at 1 — the top two values
+    /// are reserved poller tokens).
+    pub(crate) next_token: Arc<AtomicU64>,
+}
+
+/// Register a freshly accepted (or handed-off) connection with this
+/// shard's poller and own it.  On registration failure the socket is
+/// dropped and the per-shard gauge rolled back.
+fn add_conn(
+    poller: &mut dyn Poller,
+    conns: &mut HashMap<u64, Conn>,
+    stats: &FrontendStats,
+    shard: usize,
+    stream: TcpStream,
+    token: u64,
 ) {
+    let mut c = Conn::new(stream, token);
+    let want = c.interest();
+    if let Err(e) = poller.add(c.fd(), token, want, true) {
+        log_warn!("shard {shard}: cannot register connection: {e}");
+        stats.on_close_shard(shard);
+        return; // socket drops (closes) here
+    }
+    c.registered_interest = want;
+    conns.insert(token, c);
+}
+
+/// Drive one event-loop shard until `stop` is set and every connection it
+/// owns has drained.  Runs on its own thread (spawned by
+/// `serve_router_with`, one per `--loop-shards`).
+pub(crate) fn run_shard(cfg: ShardConfig) {
     use std::os::unix::io::AsRawFd;
-    if let Err(e) = listener.set_nonblocking(true) {
-        log_warn!("event loop: cannot make listener nonblocking: {e}");
+    let ShardConfig {
+        id,
+        mut poller,
+        waker,
+        listener,
+        handoff_rx,
+        handoff_txs,
+        mut rings,
+        router,
+        stats,
+        stop,
+        limits,
+        next_token,
+    } = cfg;
+    let shard_count = 1 + handoff_txs.len();
+    if let Some(l) = &listener {
+        if let Err(e) = l.set_nonblocking(true) {
+            log_warn!("shard {id}: cannot make listener nonblocking: {e}");
+            return;
+        }
+        // level-triggered: pending accepts keep it readable across waits,
+        // which composes with the backoff deregistration below
+        if let Err(e) = poller.add(l.as_raw_fd(), LISTENER_TOKEN, POLLIN, false) {
+            log_warn!("shard {id}: cannot register listener: {e}");
+            return;
+        }
+    }
+    if let Err(e) = poller.add(waker.read_fd(), WAKER_TOKEN, POLLIN, true) {
+        log_warn!("shard {id}: cannot register waker: {e}");
         return;
     }
-    let mut conns: Vec<Conn> = Vec::new();
-    let mut pfds: Vec<PollFd> = Vec::new();
-    // iterations to keep the listener OUT of the poll set after an
-    // accept failure (EMFILE/ENFILE fd exhaustion): the backlogged
-    // connection would otherwise keep the level-triggered listener
-    // readable and spin the loop hot until an fd frees up
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut events: Vec<Event> = Vec::new();
+    let mut listener_registered = listener.is_some();
     let mut accept_backoff = 0u32;
+    let mut handoff_closed = false;
     loop {
         let stopping = stop.load(Ordering::SeqCst);
-        if stopping && conns.is_empty() {
+        if stopping && listener_registered {
+            // shutdown refuses new connections; also stops a readable
+            // backlog from waking the loop hot while conns drain
+            if let Some(l) = &listener {
+                let _ = poller.remove(l.as_raw_fd());
+            }
+            listener_registered = false;
+        }
+        if stopping && conns.is_empty() && (handoff_rx.is_none() || handoff_closed) {
             return;
         }
-        pfds.clear();
-        pfds.push(PollFd::new(waker.read_fd(), POLLIN));
-        accept_backoff = accept_backoff.saturating_sub(1);
-        let listener_slot = if stopping || accept_backoff > 0 {
-            None
-        } else {
-            pfds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
-            Some(1)
-        };
-        let base = pfds.len();
-        for c in &conns {
-            pfds.push(PollFd::new(c.fd(), c.interest()));
+        if accept_backoff > 0 {
+            accept_backoff -= 1;
+            if accept_backoff == 0 && !stopping {
+                if let Some(l) = &listener {
+                    if poller
+                        .add(l.as_raw_fd(), LISTENER_TOKEN, POLLIN, false)
+                        .is_ok()
+                    {
+                        listener_registered = true;
+                    } else {
+                        accept_backoff = ACCEPT_BACKOFF_TICKS;
+                    }
+                }
+            }
         }
-        if let Err(e) = poll(&mut pfds, POLL_TIMEOUT_MS) {
-            log_warn!("event loop: poll failed: {e}");
+
+        if let Err(e) = poller.wait(POLL_TIMEOUT_MS, &mut events) {
+            log_warn!("shard {id}: poller wait failed: {e}");
             return;
         }
 
-        if pfds[0].has(POLLIN) {
-            waker.drain();
+        let mut accept_ready = false;
+        for ev in &events {
+            match ev.token {
+                WAKER_TOKEN => waker.drain(),
+                LISTENER_TOKEN => accept_ready = true,
+                token => {
+                    let Some(c) = conns.get_mut(&token) else {
+                        continue; // already reaped; stale edge
+                    };
+                    if ev.readable {
+                        c.on_readable(&router, &stats, &waker, &limits, id);
+                    }
+                    if ev.writable {
+                        c.on_writable();
+                    }
+                    if ev.error {
+                        c.state = ConnState::Closed;
+                    }
+                    // hangup without readable data: the peer is fully
+                    // gone.  A connection still Reading sees EOF via the
+                    // read path; one waiting on the engine would
+                    // otherwise linger until its stream finishes.
+                    if ev.hup && !ev.readable && !matches!(c.state, ConnState::Reading) {
+                        c.state = ConnState::Closed;
+                    }
+                }
+            }
         }
 
-        // connection readiness first (indices line up with `pfds`; new
-        // accepts below only append)
-        let n = conns.len();
-        for (i, c) in conns.iter_mut().enumerate().take(n) {
-            let p = &pfds[base + i];
-            if p.has(POLLIN) {
-                c.on_readable(&router, &stats, &waker, &limits);
-            }
-            if p.has(POLLOUT) {
-                c.on_writable();
-            }
-            if p.has(POLLERR | POLLNVAL) {
-                c.state = ConnState::Closed;
-            }
-            // POLLHUP without readable data: the peer is fully gone.  A
-            // connection still Reading sees it via the EOF read above;
-            // one waiting on the engine would otherwise spin here.
-            if p.has(POLLHUP) && !p.has(POLLIN) && !matches!(c.state, ConnState::Reading) {
-                c.state = ConnState::Closed;
-            }
-        }
-
-        // accept new connections
-        if let Some(slot) = listener_slot {
-            if pfds[slot].has(POLLIN) {
+        // accept new connections (shard 0), placing each on the shard
+        // with the fewest open connections
+        if accept_ready && listener_registered && !stopping {
+            if let Some(l) = &listener {
                 loop {
-                    match listener.accept() {
+                    match l.accept() {
                         Ok((mut s, _)) => {
-                            if conns.len() >= limits.max_open_conns {
+                            if stats.open() >= limits.max_open_conns {
                                 stats.on_reject();
                                 // nonblocking so the drain below cannot
                                 // stall the loop; the tiny 503 fits the
@@ -123,25 +243,61 @@ pub(crate) fn run(
                                 let _ = s.set_nonblocking(true);
                                 let _ = std::io::Write::write_all(
                                     &mut s,
-                                    &crate::server::conn::encode_error(503, "server at capacity"),
+                                    &encode_error(503, "server at capacity"),
                                 );
-                                crate::server::conn::drain_before_close(&mut s);
+                                drain_before_close(&mut s);
                                 continue; // socket drops (closes) here
                             }
                             if s.set_nonblocking(true).is_err() {
                                 continue;
                             }
                             let _ = s.set_nodelay(true);
-                            stats.on_accept();
-                            conns.push(Conn::new(s));
+                            let token = next_token.fetch_add(1, Ordering::SeqCst);
+                            let mut target = 0usize;
+                            let mut best = stats.shard_open(0);
+                            for i in 1..shard_count {
+                                let o = stats.shard_open(i);
+                                if o < best {
+                                    best = o;
+                                    target = i;
+                                }
+                            }
+                            let mut pending = Some((s, token));
+                            if target != id {
+                                let (tx, w) = &handoff_txs[target - 1];
+                                match tx.send(pending.take().expect("socket present")) {
+                                    Ok(()) => {
+                                        stats.on_accept_shard(target);
+                                        w.wake();
+                                    }
+                                    Err(std::sync::mpsc::SendError(back)) => {
+                                        // target shard died: own it here
+                                        pending = Some(back);
+                                    }
+                                }
+                            }
+                            if let Some((s, token)) = pending {
+                                stats.on_accept_shard(id);
+                                add_conn(
+                                    poller.as_mut(),
+                                    &mut conns,
+                                    &stats,
+                                    id,
+                                    s,
+                                    token,
+                                );
+                            }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                         Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                         Err(e) => {
-                            // likely fd exhaustion; stop polling the
-                            // listener for ~5 ticks instead of spinning
-                            log_warn!("event loop: accept error (backing off): {e}");
-                            accept_backoff = 5;
+                            // likely fd exhaustion; drop the listener from
+                            // the poll set for a few ticks instead of
+                            // spinning on its readability
+                            log_warn!("shard {id}: accept error (backing off): {e}");
+                            let _ = poller.remove(l.as_raw_fd());
+                            listener_registered = false;
+                            accept_backoff = ACCEPT_BACKOFF_TICKS;
                             break;
                         }
                     }
@@ -149,11 +305,55 @@ pub(crate) fn run(
             }
         }
 
-        // pump engine-side progress into every waiting connection.  The
-        // waker told us *something* was delivered; try_recv on the rest
-        // is a cheap no-op, so we skip per-request bookkeeping entirely.
+        // adopt connections handed off by the accept shard (the acceptor
+        // already made them nonblocking and counted them against us)
+        if let Some(rx) = &handoff_rx {
+            loop {
+                match rx.try_recv() {
+                    Ok((s, token)) => {
+                        add_conn(poller.as_mut(), &mut conns, &stats, id, s, token)
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        handoff_closed = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // drain the stream rings: append each frame to its connection's
+        // out buffer (frames addressed to reaped connections are
+        // discarded — the replica produces briefly past a client's death)
+        let mut rings_open = rings.is_empty();
+        for ring in rings.iter_mut() {
+            stats.note_ring_depth(ring.len());
+            while let Some(frame) = ring.try_pop() {
+                if let Some(c) = conns.get_mut(&frame.conn) {
+                    c.deliver_frame(&frame.bytes, frame.done);
+                }
+            }
+            if !ring.is_closed() {
+                rings_open = true;
+            }
+        }
+        if !rings_open {
+            // every replica exited without a terminal frame for these
+            // streams (abort/panic): end them explicitly rather than
+            // truncating mid-body
+            for c in conns.values_mut() {
+                if matches!(c.state, ConnState::StreamingRing { terminated: false }) {
+                    let mut bytes = encode_chunk_line(&aborted_line());
+                    bytes.extend_from_slice(STREAM_TERMINATOR);
+                    c.deliver_frame(&bytes, true);
+                }
+            }
+        }
+
+        // pump engine-side progress and freshly delivered frames into
+        // every connection, then enforce timeouts
         let now = Instant::now();
-        for c in conns.iter_mut() {
+        for c in conns.values_mut() {
             c.pump();
             if stopping && matches!(c.state, ConnState::Reading) {
                 // no request yet: shutdown refuses new work
@@ -162,14 +362,26 @@ pub(crate) fn run(
             c.check_timeouts(now, &limits);
         }
 
-        // reap closed connections
-        conns.retain(|c| {
+        // reap closed connections and reconcile poller interest for the
+        // rest (touch the poller only when interest actually changed —
+        // under edge-triggered epoll the MOD also re-arms readiness)
+        conns.retain(|_, c| {
             if c.is_closed() {
-                stats.on_close();
-                false
-            } else {
-                true
+                let _ = poller.remove(c.fd());
+                stats.on_close_shard(id);
+                return false;
             }
+            let want = c.interest();
+            if want != c.registered_interest {
+                if poller.modify(c.fd(), c.token, want, true).is_err() {
+                    // readiness tracking lost; the conn is undrivable
+                    let _ = poller.remove(c.fd());
+                    stats.on_close_shard(id);
+                    return false;
+                }
+                c.registered_interest = want;
+            }
+            true
         });
     }
 }

@@ -24,10 +24,14 @@
 //! * **`threaded`** — one thread per TCP connection, blocking I/O.
 //!   Simple, but a streaming response pins its thread for the stream's
 //!   lifetime, so concurrency is thread-bound.
-//! * **`event-loop`** — every connection multiplexed on one poll-based
-//!   loop thread (`server/event_loop.rs`); engine replicas wake the loop
-//!   through a self-pipe, so thousands of concurrent streams cost
-//!   sockets, not threads.
+//! * **`event-loop`** — connections multiplexed over `--loop-shards`
+//!   independent loop threads (`server/event_loop.rs`), each with its
+//!   own readiness back-end (`--poller`: edge-triggered `epoll` or the
+//!   portable `poll(2)` fallback).  Shard 0 accepts and hands sockets to
+//!   the least-loaded shard; streaming tokens arrive as preformatted
+//!   frames on per-(replica, shard) lock-free SPSC rings; engine
+//!   replicas wake shards through coalescing eventfd/self-pipe wakers.
+//!   Thousands of concurrent streams cost sockets, not threads.
 //!
 //! Both front-ends share the parser, limits, dispatch table, and
 //! response encoders in `server/conn.rs`, answer protocol violations
@@ -38,22 +42,23 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{FrontendKind, RoutePolicy};
+use crate::config::{FrontendKind, PollerKind, RoutePolicy};
 use crate::engine::engine::Engine;
-use crate::server::conn::{self, Dispatch, ParseStatus};
+use crate::server::conn::{self, Dispatch, DispatchCtx, ParseStatus};
 pub use crate::server::conn::{ConnLimits, FrontendStats, HttpRequest};
-use crate::server::event_loop;
-use crate::server::router::{EngineRouter, StreamEvent};
+use crate::server::event_loop::{self, ShardConfig};
+use crate::server::router::{EngineRouter, ShardTx, StreamEvent, StreamFrame, STREAM_RING_CAP};
 use crate::util::json::Json;
-use crate::util::sys::Waker;
+use crate::util::spsc;
+use crate::util::sys::{EpollPoller, PollPoller, Poller, Waker};
 use crate::{log_info, log_warn};
 
 /// Front-end configuration for [`serve_router_with`].
@@ -61,8 +66,29 @@ use crate::{log_info, log_warn};
 pub struct ServeOptions {
     /// Which front-end drives connections (default: threaded).
     pub frontend: FrontendKind,
+    /// Readiness back-end for the event-loop front-end (default: auto —
+    /// `epoll` where the kernel provides it, else `poll`).  Ignored by
+    /// the threaded front-end.
+    pub poller: PollerKind,
+    /// Event-loop shard (thread) count; `0` is normalized to 1.  Ignored
+    /// by the threaded front-end.
+    pub loop_shards: usize,
     /// Protocol limits and timeouts, enforced by both front-ends.
     pub limits: ConnLimits,
+}
+
+/// Resolve one poller instance for `kind` (each shard owns its own).
+/// `Epoll` is strict — an unsupported kernel is a startup error; `Auto`
+/// quietly falls back to `poll(2)`.
+fn make_poller(kind: PollerKind) -> Result<Box<dyn Poller>> {
+    Ok(match kind {
+        PollerKind::Epoll => Box::new(EpollPoller::new()?),
+        PollerKind::Poll => Box::new(PollPoller::new()),
+        PollerKind::Auto => match EpollPoller::new() {
+            Ok(p) => Box::new(p),
+            Err(_) => Box::new(PollPoller::new()),
+        },
+    })
 }
 
 /// Read one HTTP/1.1 request from the stream (blocking; default
@@ -203,7 +229,7 @@ fn handle_conn(
     // thread (and its connection slot) forever.
     let _ = stream.set_read_timeout(None);
     let _ = stream.set_write_timeout(Some(limits.idle_timeout));
-    match conn::dispatch(&req, router, stats, None) {
+    match conn::dispatch(&req, router, stats, DispatchCtx::Threaded) {
         Dispatch::Immediate(bytes) => {
             let _ = stream.write_all(&bytes);
         }
@@ -215,6 +241,7 @@ fn handle_conn(
             let _ = stream.write_all(&bytes);
         }
         Dispatch::Streaming(rx) => serve_streaming_blocking(&mut stream, rx),
+        Dispatch::StreamingRing => unreachable!("ring streaming is event-loop-only"),
     }
 }
 
@@ -224,9 +251,9 @@ pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     router: Arc<EngineRouter>,
     stop: Arc<AtomicBool>,
-    serving_thread: Option<JoinHandle<()>>,
+    serving_threads: Vec<JoinHandle<()>>,
     stats: Arc<FrontendStats>,
-    waker: Option<Arc<Waker>>,
+    wakers: Vec<Arc<Waker>>,
 }
 
 impl ServerHandle {
@@ -245,26 +272,27 @@ impl ServerHandle {
     /// in-flight request completes and is delivered before this returns.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        match self.waker.take() {
-            Some(waker) => {
-                // event loop: the stop flag ends accepting; the drain
-                // below wakes the loop for every terminal delivery, and
-                // the loop exits once its last connection flushes
-                waker.wake();
-                self.router.shutdown();
-                waker.wake();
-                if let Some(t) = self.serving_thread.take() {
-                    let _ = t.join();
-                }
+        if self.wakers.is_empty() {
+            // threaded: poke the acceptor so it notices the stop flag;
+            // connection threads finish via the drain
+            let _ = TcpStream::connect(self.addr);
+            for t in self.serving_threads.drain(..) {
+                let _ = t.join();
             }
-            None => {
-                // threaded: poke the acceptor so it notices the stop
-                // flag; connection threads finish via the drain
-                let _ = TcpStream::connect(self.addr);
-                if let Some(t) = self.serving_thread.take() {
-                    let _ = t.join();
-                }
-                self.router.shutdown();
+            self.router.shutdown();
+        } else {
+            // event loop: the stop flag ends accepting; the drain below
+            // keeps every shard awake for its terminal ring frames, and
+            // each shard exits once its last connection flushes
+            for w in &self.wakers {
+                w.wake();
+            }
+            self.router.shutdown();
+            for w in &self.wakers {
+                w.wake();
+            }
+            for t in self.serving_threads.drain(..) {
+                let _ = t.join();
             }
         }
     }
@@ -295,10 +323,10 @@ pub fn serve_router_with(
     let local = listener.local_addr()?;
     let router = Arc::new(router);
     let stop = Arc::new(AtomicBool::new(false));
-    let stats = Arc::new(FrontendStats::new(opts.frontend));
     let limits = opts.limits;
-    let (serving_thread, waker) = match opts.frontend {
+    let (serving_threads, wakers, stats) = match opts.frontend {
         FrontendKind::Threaded => {
+            let stats = Arc::new(FrontendStats::new(opts.frontend));
             let stop_a = stop.clone();
             let router_a = router.clone();
             let stats_a = stats.clone();
@@ -339,36 +367,103 @@ pub fn serve_router_with(
                     }
                 })
                 .expect("spawn acceptor thread");
-            (t, None)
+            (vec![t], Vec::new(), stats)
         }
         FrontendKind::EventLoop => {
-            let waker = Arc::new(Waker::new()?);
-            let stop_a = stop.clone();
-            let router_a = router.clone();
-            let stats_a = stats.clone();
-            let waker_a = waker.clone();
-            let t = std::thread::Builder::new()
-                .name("dsde-http-loop".to_string())
-                .spawn(move || {
-                    event_loop::run(listener, router_a, stats_a, waker_a, stop_a, limits)
-                })
-                .expect("spawn event loop thread");
-            (t, Some(waker))
+            let shards = opts.loop_shards.max(1);
+            // resolve every shard's poller up front so a strict
+            // `--poller epoll` on an unsupported kernel fails at startup
+            let mut pollers: Vec<Box<dyn Poller>> = Vec::with_capacity(shards);
+            for _ in 0..shards {
+                pollers.push(make_poller(opts.poller)?);
+            }
+            let poller_name = pollers[0].name();
+            let stats = Arc::new(FrontendStats::with_loop(
+                opts.frontend,
+                poller_name,
+                shards,
+            ));
+            let mut wakers: Vec<Arc<Waker>> = Vec::with_capacity(shards);
+            for _ in 0..shards {
+                wakers.push(Arc::new(Waker::new()?));
+            }
+            // one SPSC stream ring per (replica, shard) pair: replicas
+            // keep the producers, shards the consumers.  Attached before
+            // the listener starts, so the FIFO engine channels guarantee
+            // the rings are installed ahead of any ring submission.
+            let mut per_replica: Vec<Vec<ShardTx>> = Vec::new();
+            let mut per_shard_rings: Vec<Vec<spsc::Consumer<StreamFrame>>> =
+                (0..shards).map(|_| Vec::new()).collect();
+            for _ in 0..router.replica_count() {
+                let mut row = Vec::with_capacity(shards);
+                for (s, rings) in per_shard_rings.iter_mut().enumerate() {
+                    let (tx, rx) = spsc::ring(STREAM_RING_CAP);
+                    row.push(ShardTx::new(tx, wakers[s].clone()));
+                    rings.push(rx);
+                }
+                per_replica.push(row);
+            }
+            router.attach_stream_shards(per_replica);
+            // handoff channels: shard 0 accepts and hands sockets to the
+            // shard with the fewest open connections
+            type Handoff = (TcpStream, u64);
+            let mut handoff_txs: Vec<(Sender<Handoff>, Arc<Waker>)> = Vec::new();
+            let mut handoff_rxs: Vec<Receiver<Handoff>> = Vec::new();
+            for s in 1..shards {
+                let (tx, rx) = channel();
+                handoff_txs.push((tx, wakers[s].clone()));
+                handoff_rxs.push(rx);
+            }
+            let next_token = Arc::new(AtomicU64::new(1));
+            let mut threads = Vec::with_capacity(shards);
+            let mut listener = Some(listener);
+            let mut handoff_rxs = handoff_rxs.into_iter();
+            for (s, (poller, rings)) in
+                pollers.into_iter().zip(per_shard_rings).enumerate()
+            {
+                let cfg = ShardConfig {
+                    id: s,
+                    poller,
+                    waker: wakers[s].clone(),
+                    listener: if s == 0 { listener.take() } else { None },
+                    handoff_rx: if s == 0 { None } else { handoff_rxs.next() },
+                    handoff_txs: if s == 0 {
+                        std::mem::take(&mut handoff_txs)
+                    } else {
+                        Vec::new()
+                    },
+                    rings,
+                    router: router.clone(),
+                    stats: stats.clone(),
+                    stop: stop.clone(),
+                    limits,
+                    next_token: next_token.clone(),
+                };
+                let t = std::thread::Builder::new()
+                    .name(format!("dsde-http-loop-{s}"))
+                    .spawn(move || event_loop::run_shard(cfg))
+                    .expect("spawn event loop shard");
+                threads.push(t);
+            }
+            (threads, wakers, stats)
         }
     };
     log_info!(
-        "serving on http://{local} ({} replica(s), {}, {} front-end)",
+        "serving on http://{local} ({} replica(s), {}, {} front-end, \
+         poller {}, {} loop shard(s))",
         router.replica_count(),
         router.policy().name(),
-        opts.frontend.name()
+        opts.frontend.name(),
+        stats.poller(),
+        stats.loop_shards()
     );
     Ok(ServerHandle {
         addr: local,
         router,
         stop,
-        serving_thread: Some(serving_thread),
+        serving_threads,
         stats,
-        waker,
+        wakers,
     })
 }
 

@@ -8,12 +8,17 @@
 //! * **threaded** (`--frontend threaded`, the default): one thread per
 //!   TCP connection, blocking I/O.  A streaming response pins its thread
 //!   for the stream's lifetime, so concurrency is thread-bound.
-//! * **event-loop** (`--frontend event-loop`): every connection
-//!   multiplexed on one poll-based loop thread (`server/event_loop.rs`,
-//!   built on the `poll(2)` shim in [`crate::util::sys`]).  Engine
-//!   replica threads wake the loop through a self-pipe after every
-//!   delivery, so token deltas flow engine → loop → socket without a
-//!   blocking `recv` anywhere, and thousands of concurrent streams cost
+//! * **event-loop** (`--frontend event-loop`): connections multiplexed
+//!   over `--loop-shards` independent loop threads
+//!   (`server/event_loop.rs`), each with its own readiness back-end
+//!   (`--poller`: edge-triggered `epoll` or the portable `poll(2)`
+//!   fallback, via the shims in [`crate::util::sys`]).  Shard 0 accepts
+//!   and hands each socket to the least-loaded shard; engine replicas
+//!   push preformatted streaming frames onto lock-free SPSC rings
+//!   ([`crate::util::spsc`], one per replica × shard) and wake the
+//!   owning shard through a coalescing eventfd waker — so token deltas
+//!   flow engine → shard → socket without a lock or a blocking `recv`
+//!   anywhere, and tens of thousands of concurrent streams cost
 //!   sockets — not threads.
 //!
 //! Behind either front-end, the [`router::EngineRouter`] owns one engine

@@ -37,7 +37,7 @@
 //!   fixing the drain-tail imbalance.  Only never-run sequences migrate,
 //!   so placement can never change a request's output tokens.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -52,8 +52,11 @@ use crate::engine::metrics::{MetricsSnapshot, DEFAULT_QUANTILES};
 use crate::engine::request::{FinishedRequest, Request};
 use crate::engine::step::StepReport;
 use crate::util::json::Json;
+use crate::util::spsc;
 use crate::util::sys::Waker;
 use crate::log_warn;
+
+use super::conn::{stream_delta_frame, stream_done_frame};
 
 /// Hook invoked with every routed request right after its router-global
 /// id is assigned and before it is dispatched to a replica — the serving
@@ -81,9 +84,12 @@ pub enum StreamEvent {
 /// A reply sender plus the optional event-loop waker poked after every
 /// successful send.  This is the nonblocking notification path of the
 /// poll-based front-end: the replica thread delivers on the plain mpsc
-/// channel exactly as before, then pokes the self-pipe so the event loop
+/// channel exactly as before, then pokes the waker so the event loop
 /// wakes and `try_recv`s — no blocking `recv` anywhere on the loop.  The
-/// threaded front-end passes no waker and the wrapper is free.
+/// threaded front-end passes no waker and the wrapper is free.  Waker
+/// pokes coalesce inside [`Waker::wake`] (an atomic wake-pending flag),
+/// so a burst of deliveries between two loop iterations costs one
+/// eventfd/pipe write, not one per delivery.
 pub(crate) struct Notify<T> {
     tx: Sender<T>,
     waker: Option<Arc<Waker>>,
@@ -105,6 +111,147 @@ impl<T> Notify<T> {
     }
 }
 
+/// Per-(replica, shard) SPSC ring capacity in frames.  Deep enough that a
+/// full ring means the shard loop has not run for hundreds of deliveries;
+/// overflow then spills to the replica-local queue (see [`ShardTx`])
+/// rather than blocking the engine or dropping frames.
+pub(crate) const STREAM_RING_CAP: usize = 1024;
+
+/// One preformatted NDJSON stream frame bound for an event-loop shard:
+/// the bytes are already chunk-encoded on the replica thread, so the
+/// shard loop appends them straight to the connection's output buffer.
+pub(crate) struct StreamFrame {
+    /// Event-loop connection token the frame belongs to (frames whose
+    /// connection has closed are discarded by the shard loop).
+    pub(crate) conn: u64,
+    /// Wire bytes, ready to append to the connection's out buffer.
+    pub(crate) bytes: Vec<u8>,
+    /// Terminal frame: carries the done summary plus the chunked-encoding
+    /// terminator; the stream is complete once these bytes flush.
+    pub(crate) done: bool,
+}
+
+/// Where a ring-delivered stream's frames go: which loop shard consumes
+/// them and which connection (by token) they belong to.  Replica-neutral,
+/// so work stealing migrates ring streams like any other reply channel —
+/// every replica holds a producer to every shard.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct RingTarget {
+    /// Index of the event-loop shard that owns the connection.
+    pub(crate) shard: usize,
+    /// The connection's loop-assigned token.
+    pub(crate) conn: u64,
+}
+
+/// A replica's producer endpoint for one event-loop shard: the SPSC ring,
+/// the shard's waker (pokes coalesce in [`Waker::wake`]), and a
+/// replica-local overflow queue.
+///
+/// A full ring normally backpressures the producer — but a replica thread
+/// must never *block* on a shard loop, because the loop itself can block
+/// on the replica (a `/v1/metrics` dispatch does a synchronous metrics
+/// round-trip); parking here could deadlock the pair.  So a frame that
+/// cannot enter the ring is parked in `overflow` (unbounded, exactly the
+/// delivery guarantee the old per-request mpsc channels gave) and retried
+/// on every subsequent send and once per replica-loop iteration.  Frames
+/// are never dropped while the consumer lives; a dropped consumer (shard
+/// loop exited) discards them, matching the old hung-up-subscriber
+/// semantics.
+pub(crate) struct ShardTx {
+    tx: spsc::Producer<StreamFrame>,
+    waker: Arc<Waker>,
+    overflow: VecDeque<StreamFrame>,
+}
+
+impl ShardTx {
+    /// Wrap a ring producer and the owning shard's waker.
+    pub(crate) fn new(tx: spsc::Producer<StreamFrame>, waker: Arc<Waker>) -> ShardTx {
+        ShardTx {
+            tx,
+            waker,
+            overflow: VecDeque::new(),
+        }
+    }
+
+    /// Retry delivery of parked frames (oldest first, preserving order).
+    /// Returns true when nothing remains to deliver — the overflow is
+    /// empty, or the consumer is gone and the backlog was discarded.
+    fn pump(&mut self) -> bool {
+        if self.tx.is_closed() {
+            self.overflow.clear();
+            return true;
+        }
+        let mut pushed = false;
+        while let Some(frame) = self.overflow.pop_front() {
+            match self.tx.try_push(frame) {
+                Ok(()) => pushed = true,
+                Err(spsc::PushError::Full(f)) => {
+                    self.overflow.push_front(f);
+                    break;
+                }
+                Err(spsc::PushError::Closed(_)) => {
+                    self.overflow.clear();
+                    return true;
+                }
+            }
+        }
+        if pushed {
+            self.waker.wake();
+        }
+        self.overflow.is_empty()
+    }
+
+    /// Queue one frame for the shard, preserving per-connection order:
+    /// ring first, replica-local overflow when the ring is full.
+    fn send(&mut self, frame: StreamFrame) {
+        if self.tx.is_closed() {
+            self.overflow.clear();
+            return;
+        }
+        self.pump();
+        if !self.overflow.is_empty() {
+            self.overflow.push_back(frame);
+            return;
+        }
+        match self.tx.try_push(frame) {
+            Ok(()) => self.waker.wake(),
+            Err(spsc::PushError::Full(f)) => {
+                self.overflow.push_back(f);
+                // the ring has frames regardless; make sure the shard is
+                // awake to drain them
+                self.waker.wake();
+            }
+            Err(spsc::PushError::Closed(_)) => {}
+        }
+    }
+
+    /// Whether parked frames are waiting for ring space.
+    fn has_backlog(&self) -> bool {
+        !self.overflow.is_empty()
+    }
+}
+
+/// Retry every shard's parked frames; true when all are delivered (or
+/// discarded because their consumer is gone).
+fn pump_shards(shards: &mut [ShardTx]) -> bool {
+    let mut all = true;
+    for s in shards.iter_mut() {
+        if !s.pump() {
+            all = false;
+        }
+    }
+    all
+}
+
+/// Block (politely) until every parked frame is delivered or its consumer
+/// is gone — the replica-exit path, so terminal frames written during
+/// drain/abort cannot be lost with the thread.
+fn flush_shards_before_exit(shards: &mut [ShardTx]) {
+    while !pump_shards(shards) {
+        std::thread::sleep(Duration::from_micros(100));
+    }
+}
+
 /// The reply channel of a request in flight on a replica — shipped along
 /// with the request when the balancer migrates it to another replica, so
 /// stealing is invisible to the waiting client.
@@ -113,6 +260,9 @@ pub(crate) enum ReplyTo {
     Blocking(Notify<FinishedRequest>),
     /// Streaming subscriber consuming [`StreamEvent`]s.
     Streaming(Notify<StreamEvent>),
+    /// Event-loop stream delivered as preformatted frames on the target
+    /// shard's ring.  Replica-independent, so it migrates freely.
+    Ring(RingTarget),
 }
 
 /// Messages into a replica's engine thread.
@@ -122,6 +272,14 @@ pub(crate) enum EngineMsg {
     /// Submit a request whose per-step token deltas (and terminal summary)
     /// are forwarded on the reply channel as they happen.
     SubmitStreaming(Request, Notify<StreamEvent>),
+    /// Submit a request whose deltas are chunk-encoded on this thread and
+    /// pushed to the target shard's SPSC ring (the event-loop streaming
+    /// path; see [`StreamFrame`]).
+    SubmitStreamingRing(Request, RingTarget),
+    /// Install this replica's per-shard ring producers.  Sent once per
+    /// replica before the front-end starts accepting, so channel FIFO
+    /// guarantees it precedes every `SubmitStreamingRing`.
+    AttachShards(Vec<ShardTx>),
     /// Work stealing, victim side: migrate up to `max` untouched waiting
     /// requests (with their reply channels) back to the balancer.  Replies
     /// with an empty batch when nothing is stealable.
@@ -250,11 +408,15 @@ struct Replica {
 
 /// Deliver finished requests to their waiting reply channels — blocking
 /// submitters get the [`FinishedRequest`], streaming subscribers get the
-/// terminal [`StreamEvent::Done`] (which also closes their channel).
+/// terminal [`StreamEvent::Done`] (which also closes their channel), and
+/// ring streams get a terminal [`StreamFrame`] carrying the done summary
+/// plus the chunked-encoding terminator.
 fn deliver(
     engine: &mut Engine,
     pending: &mut HashMap<u64, Notify<FinishedRequest>>,
     streams: &mut HashMap<u64, Notify<StreamEvent>>,
+    ring_streams: &mut HashMap<u64, RingTarget>,
+    shards: &mut [ShardTx],
     load: &AtomicUsize,
 ) {
     for fin in engine.take_finished() {
@@ -263,15 +425,29 @@ fn deliver(
             let _ = reply.send(fin);
         } else if let Some(reply) = streams.remove(&fin.id) {
             let _ = reply.send(StreamEvent::Done(fin));
+        } else if let Some(target) = ring_streams.remove(&fin.id) {
+            if let Some(shard) = shards.get_mut(target.shard) {
+                shard.send(StreamFrame {
+                    conn: target.conn,
+                    bytes: stream_done_frame(&fin),
+                    done: true,
+                });
+            }
         }
     }
     // orphaned waiters (should not happen): drop their channels so callers
     // error out instead of hanging — and release their load slots so
     // least-loaded routing does not shun this replica forever
-    if engine.pending() == 0 && (!pending.is_empty() || !streams.is_empty()) {
-        load.fetch_sub(pending.len() + streams.len(), Ordering::SeqCst);
+    if engine.pending() == 0
+        && (!pending.is_empty() || !streams.is_empty() || !ring_streams.is_empty())
+    {
+        load.fetch_sub(
+            pending.len() + streams.len() + ring_streams.len(),
+            Ordering::SeqCst,
+        );
         pending.clear();
         streams.clear();
+        ring_streams.clear();
     }
 }
 
@@ -279,12 +455,26 @@ fn deliver(
 /// subscribers.  Takes the report by value so the token vectors move into
 /// the channel instead of being cloned on the per-step hot path.  A
 /// hung-up subscriber is dropped from the map — its request still runs to
-/// completion and is accounted normally; only the forwarding stops.
+/// completion and is accounted normally; only the forwarding stops.  Ring
+/// streams are chunk-encoded here, on the replica thread, so the shard
+/// loop only ever appends ready-made bytes.
 fn forward_deltas(
     report: StepReport,
     streams: &mut HashMap<u64, Notify<StreamEvent>>,
+    ring_streams: &HashMap<u64, RingTarget>,
+    shards: &mut [ShardTx],
 ) {
     for d in report.deltas {
+        if let Some(&target) = ring_streams.get(&d.id) {
+            if let Some(shard) = shards.get_mut(target.shard) {
+                shard.send(StreamFrame {
+                    conn: target.conn,
+                    bytes: stream_delta_frame(&d.tokens, d.t),
+                    done: false,
+                });
+            }
+            continue;
+        }
         let dead = match streams.get(&d.id) {
             Some(tx) => tx
                 .send(StreamEvent::Delta {
@@ -313,6 +503,8 @@ fn replica_loop(
 ) {
     let mut pending: HashMap<u64, Notify<FinishedRequest>> = HashMap::new();
     let mut streams: HashMap<u64, Notify<StreamEvent>> = HashMap::new();
+    let mut ring_streams: HashMap<u64, RingTarget> = HashMap::new();
+    let mut shards: Vec<ShardTx> = Vec::new();
     let mut draining = false;
     let mut consecutive_errors = 0u32;
     loop {
@@ -322,6 +514,8 @@ fn replica_loop(
             let idle = engine.pending() == 0
                 && pending.is_empty()
                 && streams.is_empty()
+                && ring_streams.is_empty()
+                && !shards.iter().any(|s| s.has_backlog())
                 && !draining;
             let msg = if idle {
                 match rx.recv() {
@@ -349,6 +543,14 @@ fn replica_loop(
                     streams.insert(req.id, reply);
                     engine.submit(req);
                 }
+                EngineMsg::SubmitStreamingRing(req, target) => {
+                    cell.on_dequeue(&req);
+                    ring_streams.insert(req.id, target);
+                    engine.submit(req);
+                }
+                EngineMsg::AttachShards(s) => {
+                    shards = s;
+                }
                 EngineMsg::SubmitStolen(batch) => {
                     for (req, reply) in batch {
                         cell.on_dequeue(&req);
@@ -358,6 +560,9 @@ fn replica_loop(
                             }
                             ReplyTo::Streaming(tx) => {
                                 streams.insert(req.id, tx);
+                            }
+                            ReplyTo::Ring(target) => {
+                                ring_streams.insert(req.id, target);
                             }
                         }
                         engine.submit(req);
@@ -370,6 +575,8 @@ fn replica_loop(
                             ReplyTo::Blocking(tx)
                         } else if let Some(tx) = streams.remove(&req.id) {
                             ReplyTo::Streaming(tx)
+                        } else if let Some(target) = ring_streams.remove(&req.id) {
+                            ReplyTo::Ring(target)
                         } else {
                             // no registered waiter (should not happen):
                             // keep the request local rather than lose it
@@ -390,6 +597,9 @@ fn replica_loop(
                                 ReplyTo::Streaming(tx) => {
                                     streams.insert(req.id, tx);
                                 }
+                                ReplyTo::Ring(target) => {
+                                    ring_streams.insert(req.id, target);
+                                }
                             }
                             engine.submit(req);
                         }
@@ -401,8 +611,16 @@ fn replica_loop(
                 EngineMsg::Drain => draining = true,
                 EngineMsg::Abort => {
                     engine.abort_all();
-                    deliver(&mut engine, &mut pending, &mut streams, &load);
+                    deliver(
+                        &mut engine,
+                        &mut pending,
+                        &mut streams,
+                        &mut ring_streams,
+                        &mut shards,
+                        &load,
+                    );
                     cell.publish(&engine.load_snapshot());
+                    flush_shards_before_exit(&mut shards);
                     return;
                 }
             }
@@ -426,7 +644,12 @@ fn replica_loop(
                         StepOutcome::Ran(report) => {
                             cell.publish(&report.load);
                             published = true;
-                            forward_deltas(report, &mut streams);
+                            forward_deltas(
+                                report,
+                                &mut streams,
+                                &ring_streams,
+                                &mut shards,
+                            );
                             true
                         }
                     }
@@ -441,7 +664,14 @@ fn replica_loop(
                     consecutive_errors < 3
                 }
             };
-            deliver(&mut engine, &mut pending, &mut streams, &load);
+            deliver(
+                &mut engine,
+                &mut pending,
+                &mut streams,
+                &mut ring_streams,
+                &mut shards,
+                &load,
+            );
             if !progressed && engine.pending() > 0 {
                 // Stuck, not just slow.  Two causes, two remedies — either
                 // way the replica stays up instead of busy-spinning and
@@ -466,14 +696,31 @@ fn replica_loop(
                         );
                     }
                 }
-                deliver(&mut engine, &mut pending, &mut streams, &load);
+                deliver(
+                    &mut engine,
+                    &mut pending,
+                    &mut streams,
+                    &mut ring_streams,
+                    &mut shards,
+                    &load,
+                );
                 published = false; // aborts changed queue/KV state
             }
             if !published {
                 cell.publish(&engine.load_snapshot());
             }
         } else if draining {
+            // terminal frames may still be parked in shard overflow
+            // queues; they must land (or their consumer must be gone)
+            // before this thread — their only producer — exits
+            flush_shards_before_exit(&mut shards);
             return;
+        } else if shards.iter().any(|s| s.has_backlog()) {
+            // engine idle but stream frames are parked waiting for ring
+            // space: retry their delivery without busy-spinning
+            if !pump_shards(&mut shards) {
+                std::thread::sleep(Duration::from_micros(100));
+            }
         }
     }
 }
@@ -888,6 +1135,51 @@ impl EngineRouter {
             }
         }
         rrx
+    }
+
+    /// Install each replica's per-shard ring producers (one [`ShardTx`]
+    /// per event-loop shard, outer index = replica).  Must be called
+    /// before the front-end starts accepting: the attach message travels
+    /// the same FIFO channel as submissions, so every subsequent
+    /// [`EngineRouter::submit_streaming_ring`] finds the rings in place.
+    pub(crate) fn attach_stream_shards(&self, per_replica: Vec<Vec<ShardTx>>) {
+        assert_eq!(
+            per_replica.len(),
+            self.replicas.len(),
+            "one shard set per replica"
+        );
+        for (r, shards) in self.replicas.iter().zip(per_replica) {
+            let _ = r.tx.send(EngineMsg::AttachShards(shards));
+        }
+    }
+
+    /// Dispatch a streaming request whose deltas are delivered as
+    /// preformatted NDJSON frames on `target`'s shard ring instead of an
+    /// mpsc channel — the event-loop front-end's zero-channel streaming
+    /// path.  Routing (policy, unique ids, load accounting, record hook)
+    /// matches [`EngineRouter::submit_streaming`].  Returns false when
+    /// the picked replica has already shut down (no frame will ever
+    /// arrive; the caller writes the aborted summary itself).
+    pub(crate) fn submit_streaming_ring(&self, mut req: Request, target: RingTarget) -> bool {
+        req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(hook) = &self.record {
+            hook(&req);
+        }
+        let idx = self.pick(projected_tokens(&req));
+        let replica = &self.replicas[idx];
+        replica.load.fetch_add(1, Ordering::SeqCst);
+        replica.cell.on_enqueue(&req);
+        if let Err(std::sync::mpsc::SendError(msg)) = replica
+            .tx
+            .send(EngineMsg::SubmitStreamingRing(req, target))
+        {
+            replica.load.fetch_sub(1, Ordering::SeqCst);
+            if let EngineMsg::SubmitStreamingRing(req, _) = msg {
+                replica.cell.on_dequeue(&req);
+            }
+            return false;
+        }
+        true
     }
 
     /// Submit and block until the request completes.
@@ -1311,6 +1603,58 @@ mod tests {
         assert_eq!(tokens, fin.output, "deltas must concatenate to the output");
         assert_eq!(router.in_flight(), 0);
         router.shutdown();
+    }
+
+    #[test]
+    fn ring_streaming_delivers_ordered_frames_with_terminal() {
+        let router = EngineRouter::new(sim_engines(1), RoutePolicy::RoundRobin);
+        let (tx, mut rx) = spsc::ring(STREAM_RING_CAP);
+        let waker = Arc::new(Waker::new().expect("waker"));
+        router.attach_stream_shards(vec![vec![ShardTx::new(tx, waker)]]);
+        let target = RingTarget { shard: 0, conn: 42 };
+        assert!(router.submit_streaming_ring(req(16), target));
+        // play the shard loop: drain the ring until the terminal frame
+        let mut frames: Vec<StreamFrame> = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while !frames.last().is_some_and(|f| f.done) {
+            match rx.try_pop() {
+                Some(f) => frames.push(f),
+                None => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "ring stream must terminate"
+                    );
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        assert!(frames.len() >= 2, "deltas then the terminal frame");
+        assert!(frames.iter().all(|f| f.conn == 42));
+        assert!(frames[..frames.len() - 1].iter().all(|f| !f.done));
+        let last = frames.last().unwrap();
+        assert!(
+            last.bytes.ends_with(b"0\r\n\r\n"),
+            "terminal frame carries the chunked-body terminator"
+        );
+        assert_eq!(router.in_flight(), 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn ring_consumer_hangup_does_not_wedge_replica() {
+        let router = EngineRouter::new(sim_engines(1), RoutePolicy::RoundRobin);
+        // tiny ring: the stream overflows it immediately, and then the
+        // consumer vanishes (shard loop death) mid-stream
+        let (tx, rx) = spsc::ring(2);
+        let waker = Arc::new(Waker::new().expect("waker"));
+        router.attach_stream_shards(vec![vec![ShardTx::new(tx, waker)]]);
+        assert!(router.submit_streaming_ring(req(64), RingTarget { shard: 0, conn: 1 }));
+        drop(rx);
+        // the replica discards undeliverable frames and keeps serving
+        let fin = router.complete(req(8)).unwrap();
+        assert_eq!(fin.output.len(), 8);
+        router.shutdown();
+        assert_eq!(router.in_flight(), 0);
     }
 
     #[test]

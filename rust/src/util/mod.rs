@@ -9,5 +9,6 @@ pub mod logging;
 pub mod proptest;
 pub mod ring;
 pub mod rng;
+pub mod spsc;
 pub mod stats;
 pub mod sys;

@@ -1,0 +1,360 @@
+//! Bounded lock-free single-producer/single-consumer ring.
+//!
+//! The event-loop front-end's token delivery path uses one of these per
+//! (engine replica, loop shard) pair: the replica thread is the sole
+//! producer, the shard's event loop the sole consumer, so a classic
+//! two-index ring with release/acquire publication is enough — no locks,
+//! no CAS loops, no per-item allocation (slots are storage inline in the
+//! ring).  The existing [`crate::util::ring`] buffers are single-threaded
+//! retention windows and deliberately stay that way; this module is the
+//! concurrent queue.
+//!
+//! Semantics the serving layer depends on:
+//!
+//! * **Bounded, full ⇒ backpressure, never drop.**  [`Producer::try_push`]
+//!   hands the value back on a full ring; callers either retry (pushing
+//!   back on the producing engine) or queue it themselves.  Nothing is
+//!   silently discarded.
+//! * **Close detection both ways.**  Dropping either endpoint marks the
+//!   ring closed: a producer learns its consumer is gone (stop producing),
+//!   a consumer drains what remains and then sees
+//!   [`Consumer::is_closed`].
+//! * **Depth watermarking.**  [`Consumer::len`] is exact enough for
+//!   high-water tracking (`/v1/metrics` reports the max observed ring
+//!   depth).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Pad hot atomics to a cache line so the producer and consumer indices
+/// do not false-share.
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+struct Shared<T> {
+    mask: usize,
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    /// Next slot the consumer pops (monotonic, wraps via `mask`).
+    head: CachePadded<AtomicUsize>,
+    /// Next slot the producer fills (monotonic, wraps via `mask`).
+    tail: CachePadded<AtomicUsize>,
+    producer_alive: AtomicBool,
+    consumer_alive: AtomicBool,
+}
+
+// SAFETY: the ring transfers `T` by value between exactly two threads;
+// slot access is synchronised by the head/tail release/acquire pair, so
+// `T: Send` is the only requirement.
+unsafe impl<T: Send> Send for Shared<T> {}
+// SAFETY: see above — &Shared is only ever used through the single
+// Producer and single Consumer endpoint, each confined to one thread.
+unsafe impl<T: Send> Sync for Shared<T> {}
+
+impl<T> Drop for Shared<T> {
+    fn drop(&mut self) {
+        // Sole owner at this point: drop every still-initialised slot in
+        // [head, tail).
+        let head = self.head.0.load(Ordering::Relaxed);
+        let tail = self.tail.0.load(Ordering::Relaxed);
+        for i in head..tail {
+            let slot = self.slots[i & self.mask].get();
+            // SAFETY: slots in [head, tail) were written by a push and
+            // never popped; we have exclusive access in Drop.
+            unsafe { (*slot).assume_init_drop() };
+        }
+    }
+}
+
+/// Error returned by [`Producer::try_push`], handing the value back.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// The ring is full; retry after the consumer drains (backpressure).
+    Full(T),
+    /// The consumer is gone; the value can never be delivered.
+    Closed(T),
+}
+
+/// The producing endpoint (exactly one; `!Clone`).
+pub struct Producer<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// The consuming endpoint (exactly one; `!Clone`).
+pub struct Consumer<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a bounded SPSC ring holding at least `capacity` items
+/// (rounded up to a power of two, minimum 2).
+pub fn ring<T: Send>(capacity: usize) -> (Producer<T>, Consumer<T>) {
+    let cap = capacity.max(2).next_power_of_two();
+    let slots = (0..cap)
+        .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+        .collect::<Vec<_>>()
+        .into_boxed_slice();
+    let shared = Arc::new(Shared {
+        mask: cap - 1,
+        slots,
+        head: CachePadded(AtomicUsize::new(0)),
+        tail: CachePadded(AtomicUsize::new(0)),
+        producer_alive: AtomicBool::new(true),
+        consumer_alive: AtomicBool::new(true),
+    });
+    (
+        Producer {
+            shared: shared.clone(),
+        },
+        Consumer { shared },
+    )
+}
+
+impl<T: Send> Producer<T> {
+    /// Push without blocking.  On a full ring or a dropped consumer the
+    /// value comes back in the error so the caller can apply
+    /// backpressure or dispose of it — it is never dropped silently.
+    pub fn try_push(&mut self, value: T) -> Result<(), PushError<T>> {
+        let s = &*self.shared;
+        if !s.consumer_alive.load(Ordering::Acquire) {
+            return Err(PushError::Closed(value));
+        }
+        let tail = s.tail.0.load(Ordering::Relaxed);
+        let head = s.head.0.load(Ordering::Acquire);
+        if tail - head > s.mask {
+            return Err(PushError::Full(value));
+        }
+        let slot = s.slots[tail & s.mask].get();
+        // SAFETY: slot `tail` is outside [head, tail) — the consumer will
+        // not touch it until the tail store below publishes it.
+        unsafe { (*slot).write(value) };
+        s.tail.0.store(tail + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Items currently queued (producer-side view).
+    pub fn len(&self) -> usize {
+        let s = &*self.shared;
+        s.tail.0.load(Ordering::Relaxed) - s.head.0.load(Ordering::Acquire)
+    }
+
+    /// Whether nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether the consumer endpoint has been dropped (pushes can never
+    /// be delivered).
+    pub fn is_closed(&self) -> bool {
+        !self.shared.consumer_alive.load(Ordering::Acquire)
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        self.shared.producer_alive.store(false, Ordering::Release);
+    }
+}
+
+impl<T: Send> Consumer<T> {
+    /// Pop the oldest item, or `None` when the ring is currently empty.
+    pub fn try_pop(&mut self) -> Option<T> {
+        let s = &*self.shared;
+        let head = s.head.0.load(Ordering::Relaxed);
+        let tail = s.tail.0.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        let slot = s.slots[head & s.mask].get();
+        // SAFETY: slot `head` is inside [head, tail): published by the
+        // producer's release store and not yet consumed.
+        let value = unsafe { (*slot).assume_init_read() };
+        s.head.0.store(head + 1, Ordering::Release);
+        Some(value)
+    }
+
+    /// Items currently queued (consumer-side view; exact for watermarks).
+    pub fn len(&self) -> usize {
+        let s = &*self.shared;
+        s.tail.0.load(Ordering::Acquire) - s.head.0.load(Ordering::Relaxed)
+    }
+
+    /// Whether nothing is queued right now.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether the producer endpoint has been dropped *and* everything it
+    /// pushed has been drained — i.e. no item will ever arrive again.
+    pub fn is_closed(&self) -> bool {
+        // order matters: check producer liveness before emptiness so a
+        // producer that pushes-then-drops is never reported closed while
+        // its last items are still queued
+        !self.shared.producer_alive.load(Ordering::Acquire) && self.is_empty()
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        self.shared.consumer_alive.store(false, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_capacity() {
+        let (mut tx, mut rx) = ring::<u32>(4);
+        for i in 0..4 {
+            tx.try_push(i).unwrap();
+        }
+        assert_eq!(rx.len(), 4);
+        for i in 0..4 {
+            assert_eq!(rx.try_pop(), Some(i));
+        }
+        assert_eq!(rx.try_pop(), None);
+    }
+
+    #[test]
+    fn wraparound_preserves_order() {
+        let (mut tx, mut rx) = ring::<u64>(4);
+        // push/pop far past capacity so indices wrap many times
+        let mut next_expected = 0u64;
+        let mut next_pushed = 0u64;
+        for round in 0..1000 {
+            let burst = 1 + (round % 4);
+            for _ in 0..burst {
+                tx.try_push(next_pushed).unwrap();
+                next_pushed += 1;
+            }
+            for _ in 0..burst {
+                assert_eq!(rx.try_pop(), Some(next_expected));
+                next_expected += 1;
+            }
+        }
+        assert!(rx.is_empty());
+    }
+
+    #[test]
+    fn full_ring_backpressures_instead_of_dropping() {
+        let (mut tx, mut rx) = ring::<u32>(2);
+        tx.try_push(1).unwrap();
+        tx.try_push(2).unwrap();
+        // capacity 2: the third push must hand the value back intact
+        assert_eq!(tx.try_push(3), Err(PushError::Full(3)));
+        assert_eq!(tx.len(), 2);
+        // one pop frees exactly one slot
+        assert_eq!(rx.try_pop(), Some(1));
+        tx.try_push(3).unwrap();
+        assert_eq!(tx.try_push(4), Err(PushError::Full(4)));
+        assert_eq!(rx.try_pop(), Some(2));
+        assert_eq!(rx.try_pop(), Some(3));
+        assert_eq!(rx.try_pop(), None);
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        let (mut tx, _rx) = ring::<u8>(5);
+        for i in 0..8 {
+            tx.try_push(i).unwrap(); // 5 rounds up to 8
+        }
+        assert!(matches!(tx.try_push(9), Err(PushError::Full(9))));
+    }
+
+    #[test]
+    fn consumer_drop_closes_producer_side() {
+        let (mut tx, rx) = ring::<u32>(4);
+        tx.try_push(1).unwrap();
+        drop(rx);
+        assert!(tx.is_closed());
+        assert_eq!(tx.try_push(2), Err(PushError::Closed(2)));
+    }
+
+    #[test]
+    fn producer_drop_lets_consumer_drain_then_reports_closed() {
+        let (mut tx, mut rx) = ring::<u32>(4);
+        tx.try_push(1).unwrap();
+        tx.try_push(2).unwrap();
+        drop(tx);
+        // items pushed before the drop must still drain
+        assert!(!rx.is_closed());
+        assert_eq!(rx.try_pop(), Some(1));
+        assert_eq!(rx.try_pop(), Some(2));
+        assert!(rx.is_closed());
+        assert_eq!(rx.try_pop(), None);
+    }
+
+    #[test]
+    fn dropped_ring_drops_undelivered_items() {
+        // leak-check via Arc strong counts observed through Weak
+        let tracker = Arc::new(());
+        let (mut tx, rx) = ring::<Arc<()>>(8);
+        for _ in 0..5 {
+            tx.try_push(tracker.clone()).unwrap();
+        }
+        assert_eq!(Arc::strong_count(&tracker), 6);
+        drop(tx);
+        drop(rx);
+        assert_eq!(Arc::strong_count(&tracker), 1, "queued items leaked");
+    }
+
+    #[test]
+    fn cross_thread_ordering_under_contention() {
+        // property: whatever interleaving the scheduler produces, the
+        // consumer sees exactly 0..N in order, with pushes backpressured
+        // through a deliberately tiny ring
+        const N: u64 = 200_000;
+        let (mut tx, mut rx) = ring::<u64>(8);
+        let producer = std::thread::spawn(move || {
+            let mut v = 0u64;
+            while v < N {
+                match tx.try_push(v) {
+                    Ok(()) => v += 1,
+                    Err(PushError::Full(_)) => std::thread::yield_now(),
+                    Err(PushError::Closed(_)) => panic!("consumer vanished"),
+                }
+            }
+        });
+        let mut expected = 0u64;
+        while expected < N {
+            match rx.try_pop() {
+                Some(v) => {
+                    assert_eq!(v, expected, "reordered or duplicated item");
+                    expected += 1;
+                }
+                None => std::thread::yield_now(),
+            }
+        }
+        assert_eq!(rx.try_pop(), None);
+        producer.join().unwrap();
+        assert!(rx.is_closed());
+    }
+
+    #[test]
+    fn cross_thread_depth_never_exceeds_capacity() {
+        const N: u64 = 50_000;
+        let (mut tx, mut rx) = ring::<u64>(16);
+        let producer = std::thread::spawn(move || {
+            let mut v = 0u64;
+            while v < N {
+                if tx.try_push(v).is_ok() {
+                    v += 1;
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        });
+        let mut popped = 0u64;
+        let mut max_depth = 0usize;
+        while popped < N {
+            max_depth = max_depth.max(rx.len());
+            if rx.try_pop().is_some() {
+                popped += 1;
+            }
+        }
+        producer.join().unwrap();
+        assert!(max_depth <= 16, "depth {max_depth} exceeded capacity");
+    }
+}

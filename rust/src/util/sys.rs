@@ -1,20 +1,33 @@
-//! Thin `extern "C"` shim over the POSIX readiness API (no `libc` crate in
-//! the offline vendor set).
+//! Thin `extern "C"` shim over the POSIX/Linux readiness APIs (no `libc`
+//! crate in the offline vendor set).
 //!
-//! The event-loop HTTP front-end (`server/event_loop.rs`) needs exactly
-//! three primitives the standard library does not expose: `poll(2)` for
-//! readiness multiplexing, `pipe(2)` for a self-pipe waker, and
-//! `fcntl(2)` to make the pipe ends nonblocking.  This module declares
+//! The event-loop HTTP front-end (`server/event_loop.rs`) needs a handful
+//! of primitives the standard library does not expose: `poll(2)` and
+//! `epoll(7)` for readiness multiplexing, `pipe(2)` / `eventfd(2)` for a
+//! loop waker, `fcntl(2)` to make fds nonblocking, and `setrlimit(2)` to
+//! raise the open-file ceiling for large soak runs.  This module declares
 //! them directly against the system libc that `std` already links, wraps
 //! them in safe Rust, and keeps every `unsafe` block in the crate behind
 //! this one file.
 //!
-//! Everything here is POSIX (the repo's build and CI targets are Linux);
-//! sockets themselves stay `std::net` types — only their raw fds are
-//! borrowed for the poll set.
+//! Two readiness back-ends sit behind the [`Poller`] trait:
+//!
+//! * [`EpollPoller`] — edge-triggered `epoll`, O(ready) per wakeup.  The
+//!   kernel holds the registration set, so the per-event cost is
+//!   independent of how many connections are open.
+//! * [`PollPoller`] — portable `poll(2)` fallback.  The registration
+//!   vector is persistent and updated incrementally on add/modify/remove
+//!   (no per-wakeup rebuild), but `poll` itself still scans O(open) fds
+//!   in the kernel and the revents sweep is O(open) in userspace.
+//!
+//! Everything here is POSIX/Linux (the repo's build and CI targets are
+//! Linux); sockets themselves stay `std::net` types — only their raw fds
+//! are borrowed for the poll set.
 
+use std::collections::HashMap;
 use std::io;
 use std::os::raw::{c_int, c_ulong};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// One entry in a [`poll`] set, laid out exactly like libc's `struct
 /// pollfd`.
@@ -57,8 +70,43 @@ pub const POLLHUP: i16 = 0x010;
 /// The fd is not open (always reported, never requested).
 pub const POLLNVAL: i16 = 0x020;
 
+/// One entry returned by `epoll_wait(2)`, laid out exactly like libc's
+/// `struct epoll_event` (packed on x86-64, natural alignment elsewhere —
+/// mirroring the kernel's `__EPOLL_PACKED` attribute).
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    /// Readiness bits (`EPOLLIN` etc. — a `u32` superset of the poll bits).
+    pub events: u32,
+    /// Caller-chosen cookie returned verbatim with each event.
+    pub data: u64,
+}
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLET: u32 = 1 << 31;
+
+const EFD_NONBLOCK: c_int = 0o4000;
+const EFD_CLOEXEC: c_int = 0o2000000;
+
+/// `struct rlimit` for get/setrlimit (rlim_t is unsigned long on Linux).
+#[repr(C)]
+struct RLimit {
+    cur: c_ulong,
+    max: c_ulong,
+}
+
+const RLIMIT_NOFILE: c_int = 7;
+
 mod c {
-    use std::os::raw::{c_int, c_ulong};
+    use std::os::raw::{c_int, c_uint, c_ulong};
 
     extern "C" {
         pub fn poll(fds: *mut super::PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
@@ -67,6 +115,22 @@ mod c {
         pub fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
         pub fn close(fd: c_int) -> c_int;
         pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(
+            epfd: c_int,
+            op: c_int,
+            fd: c_int,
+            event: *mut super::EpollEvent,
+        ) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut super::EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+        pub fn getrlimit(resource: c_int, rlim: *mut super::RLimit) -> c_int;
+        pub fn setrlimit(resource: c_int, rlim: *const super::RLimit) -> c_int;
     }
 }
 
@@ -106,26 +170,321 @@ fn set_nonblocking(fd: c_int) -> io::Result<()> {
     Ok(())
 }
 
-/// Self-pipe waker: lets any thread interrupt a [`poll`] sleep.
+/// Best-effort raise of the process open-file soft limit toward `want`.
 ///
-/// The read end is registered in the poll set alongside the sockets; any
-/// thread holding a clone of the `Arc<Waker>` calls [`Waker::wake`] to
-/// make the loop's `poll` return immediately.  Both pipe ends are
-/// nonblocking, so `wake` never blocks: once the pipe's buffer holds a
-/// byte the wake-up is already guaranteed and further writes may be
-/// dropped (`EAGAIN`) without losing anything.  This is how engine
-/// replica threads notify the event loop that a `StreamEvent` or
-/// `FinishedRequest` is ready without any blocking `recv` — see
-/// `EngineRouter::submit_streaming_with_waker`.
+/// Returns the soft limit in effect afterwards (which may be below `want`
+/// when the hard limit caps it).  Large-fan-out soaks and benches call
+/// this before opening tens of thousands of sockets; everything else can
+/// ignore it.
+pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+    let mut lim = RLimit { cur: 0, max: 0 };
+    // SAFETY: `lim` is a valid out-struct matching the kernel layout.
+    if unsafe { c::getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if u64::from(lim.cur) >= want {
+        return Ok(lim.cur as u64);
+    }
+    let new_cur = (want as c_ulong).min(lim.max);
+    let new = RLimit {
+        cur: new_cur,
+        max: lim.max,
+    };
+    // SAFETY: passing a valid, fully initialised rlimit struct.
+    if unsafe { c::setrlimit(RLIMIT_NOFILE, &new) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(new_cur as u64)
+}
+
+/// One readiness event reported by a [`Poller`], back-end neutral.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The registration cookie passed to [`Poller::add`].
+    pub token: u64,
+    /// The fd is readable.
+    pub readable: bool,
+    /// The fd is writable.
+    pub writable: bool,
+    /// Error condition (poll's `POLLERR`/`POLLNVAL`, epoll's `EPOLLERR`).
+    pub error: bool,
+    /// Peer hangup (both directions gone — a half-close with data still
+    /// flowing shows up as readable, not hup, under both back-ends).
+    pub hup: bool,
+}
+
+/// Readiness multiplexer: register fds with interest bits and a token,
+/// then [`wait`](Poller::wait) for events.
+///
+/// Interest is expressed with the portable [`POLLIN`]/[`POLLOUT`] bits
+/// for both back-ends.  `edge` requests edge-triggered delivery where the
+/// back-end supports it ([`EpollPoller`]); the caller must then drain the
+/// fd to `WouldBlock` on every event or readiness is lost until the next
+/// edge.  [`PollPoller`] ignores `edge` and is always level-triggered —
+/// correct for drain-to-`WouldBlock` callers too, just chattier.
+pub trait Poller: Send {
+    /// Register `fd` under `token` with the given interest bits.
+    fn add(&mut self, fd: i32, token: u64, interest: i16, edge: bool) -> io::Result<()>;
+    /// Change the interest bits of an already registered fd.  Under
+    /// edge-triggered epoll this re-arms the fd: readiness that currently
+    /// holds is reported again, so interest changes never lose edges.
+    fn modify(&mut self, fd: i32, token: u64, interest: i16, edge: bool) -> io::Result<()>;
+    /// Drop the registration for `fd` (call before closing the fd so the
+    /// poll fallback's persistent set stays in sync).
+    fn remove(&mut self, fd: i32) -> io::Result<()>;
+    /// Block up to `timeout_ms` (`-1` = forever) and append ready events
+    /// to `out` (cleared first).  Retries `EINTR` internally.
+    fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Event>) -> io::Result<()>;
+    /// Back-end name for metrics/logs: `"epoll"` or `"poll"`.
+    fn name(&self) -> &'static str;
+}
+
+/// Edge-triggered `epoll(7)` back-end: the kernel owns the interest set,
+/// each wakeup costs O(ready) rather than O(open).
+pub struct EpollPoller {
+    epfd: c_int,
+    buf: Vec<EpollEvent>,
+}
+
+impl EpollPoller {
+    /// Create an epoll instance.  Fails on kernels/platforms without
+    /// epoll — callers resolving `--poller auto` treat that as "fall back
+    /// to [`PollPoller`]".
+    pub fn new() -> io::Result<EpollPoller> {
+        // SAFETY: plain syscall, no pointers.
+        let epfd = unsafe { c::epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(EpollPoller {
+            epfd,
+            buf: Vec::with_capacity(1024),
+        })
+    }
+
+    fn ctl(&mut self, op: c_int, fd: i32, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent {
+            events,
+            data: token,
+        };
+        // SAFETY: `ev` is a live struct matching the kernel layout; the
+        // kernel copies it out during the call.
+        if unsafe { c::epoll_ctl(self.epfd, op, fd, &mut ev) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+}
+
+fn epoll_bits(interest: i16, edge: bool) -> u32 {
+    let mut ev = 0u32;
+    if interest & POLLIN != 0 {
+        ev |= EPOLLIN;
+    }
+    if interest & POLLOUT != 0 {
+        ev |= EPOLLOUT;
+    }
+    if edge {
+        ev |= EPOLLET;
+    }
+    ev
+}
+
+impl Poller for EpollPoller {
+    fn add(&mut self, fd: i32, token: u64, interest: i16, edge: bool) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, epoll_bits(interest, edge), token)
+    }
+
+    fn modify(&mut self, fd: i32, token: u64, interest: i16, edge: bool) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, epoll_bits(interest, edge), token)
+    }
+
+    fn remove(&mut self, fd: i32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Event>) -> io::Result<()> {
+        out.clear();
+        let n = loop {
+            let cap = self.buf.capacity().max(64);
+            // SAFETY: the kernel writes at most `cap` events into the
+            // buffer's allocation; we set the length to what it reports.
+            let rc = unsafe {
+                c::epoll_wait(self.epfd, self.buf.as_mut_ptr(), cap as c_int, timeout_ms)
+            };
+            if rc >= 0 {
+                // SAFETY: epoll_wait initialised exactly `rc` entries.
+                unsafe { self.buf.set_len(rc as usize) };
+                break rc as usize;
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        };
+        for i in 0..n {
+            let ev = self.buf[i];
+            let bits = ev.events;
+            out.push(Event {
+                token: ev.data,
+                readable: bits & EPOLLIN != 0,
+                writable: bits & EPOLLOUT != 0,
+                error: bits & EPOLLERR != 0,
+                hup: bits & EPOLLHUP != 0,
+            });
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "epoll"
+    }
+}
+
+impl Drop for EpollPoller {
+    fn drop(&mut self) {
+        // SAFETY: closing the epoll fd this struct exclusively owns.
+        unsafe {
+            c::close(self.epfd);
+        }
+    }
+}
+
+/// Portable `poll(2)` back-end with a persistent registration vector.
+///
+/// Registrations are updated incrementally on add/modify/remove — the
+/// historical per-wakeup `clear()` + full repush is gone — but `poll`
+/// itself remains O(open) per call, which is exactly why [`EpollPoller`]
+/// exists.
+pub struct PollPoller {
+    pfds: Vec<PollFd>,
+    tokens: Vec<u64>,
+    index: HashMap<i32, usize>,
+}
+
+impl PollPoller {
+    /// Create an empty registration set.
+    pub fn new() -> PollPoller {
+        PollPoller {
+            pfds: Vec::new(),
+            tokens: Vec::new(),
+            index: HashMap::new(),
+        }
+    }
+
+    /// Number of registered fds (for tests / diagnostics).
+    pub fn len(&self) -> usize {
+        self.pfds.len()
+    }
+
+    /// Whether no fds are registered.
+    pub fn is_empty(&self) -> bool {
+        self.pfds.is_empty()
+    }
+}
+
+impl Poller for PollPoller {
+    fn add(&mut self, fd: i32, token: u64, interest: i16, _edge: bool) -> io::Result<()> {
+        if self.index.contains_key(&fd) {
+            return Err(io::Error::new(
+                io::ErrorKind::AlreadyExists,
+                "fd already registered",
+            ));
+        }
+        self.index.insert(fd, self.pfds.len());
+        self.pfds.push(PollFd::new(fd, interest));
+        self.tokens.push(token);
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: i32, token: u64, interest: i16, _edge: bool) -> io::Result<()> {
+        let &i = self
+            .index
+            .get(&fd)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "fd not registered"))?;
+        self.pfds[i].events = interest;
+        self.tokens[i] = token;
+        Ok(())
+    }
+
+    fn remove(&mut self, fd: i32) -> io::Result<()> {
+        let i = self
+            .index
+            .remove(&fd)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "fd not registered"))?;
+        self.pfds.swap_remove(i);
+        self.tokens.swap_remove(i);
+        if i < self.pfds.len() {
+            self.index.insert(self.pfds[i].fd, i);
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Event>) -> io::Result<()> {
+        out.clear();
+        let ready = poll(&mut self.pfds, timeout_ms)?;
+        if ready == 0 {
+            return Ok(());
+        }
+        for (i, p) in self.pfds.iter().enumerate() {
+            if p.revents == 0 {
+                continue;
+            }
+            out.push(Event {
+                token: self.tokens[i],
+                readable: p.has(POLLIN),
+                writable: p.has(POLLOUT),
+                error: p.has(POLLERR | POLLNVAL),
+                hup: p.has(POLLHUP),
+            });
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "poll"
+    }
+}
+
+/// Loop waker with coalesced pokes: lets any thread interrupt a
+/// [`poll`]/[`Poller::wait`] sleep.
+///
+/// Backed by `eventfd(2)` when available (one fd, one counter) with a
+/// nonblocking self-pipe as the portable fallback.  The read end is
+/// registered in the poll set alongside the sockets; any thread holding a
+/// clone of the `Arc<Waker>` calls [`Waker::wake`] to make the loop's
+/// wait return immediately.
+///
+/// **Coalescing protocol.**  A `wake-pending` flag makes a burst of wakes
+/// cost one syscall: `wake()` writes to the fd only on the flag's 0→1
+/// transition; while the flag is set, further wakes are a single atomic
+/// swap.  The consumer must call [`Waker::drain`] *before* processing the
+/// work the wakes announced — `drain` empties the fd and only then clears
+/// the flag, so a wake swallowed by the flag always precedes a drain whose
+/// caller then observes the published work (both sides use `AcqRel`
+/// read-modify-writes on the flag, which totally orders them).  Producers
+/// must publish their work (ring push / channel send) *before* calling
+/// `wake()`.
 #[derive(Debug)]
 pub struct Waker {
     read_fd: c_int,
     write_fd: c_int,
+    pending: AtomicBool,
 }
 
 impl Waker {
-    /// Create a nonblocking self-pipe pair.
+    /// Create a waker: `eventfd` when the kernel provides it, otherwise a
+    /// nonblocking self-pipe pair.
     pub fn new() -> io::Result<Waker> {
+        // SAFETY: plain syscall, no pointers.
+        let efd = unsafe { c::eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+        if efd >= 0 {
+            return Ok(Waker {
+                read_fd: efd,
+                write_fd: efd,
+                pending: AtomicBool::new(false),
+            });
+        }
         let mut fds: [c_int; 2] = [0; 2];
         // SAFETY: `fds` is a valid out-array of two c_ints.
         let rc = unsafe { c::pipe(fds.as_mut_ptr()) };
@@ -135,6 +494,7 @@ impl Waker {
         let waker = Waker {
             read_fd: fds[0],
             write_fd: fds[1],
+            pending: AtomicBool::new(false),
         };
         set_nonblocking(waker.read_fd)?;
         set_nonblocking(waker.write_fd)?;
@@ -146,17 +506,22 @@ impl Waker {
         self.read_fd
     }
 
-    /// Interrupt the poller.  Never blocks; a full pipe means a wake-up
-    /// is already pending, so the dropped byte is harmless.
+    /// Interrupt the poller.  Never blocks, and a burst of wakes between
+    /// two drains performs exactly one fd write (the rest coalesce on the
+    /// pending flag).
     pub fn wake(&self) {
-        let byte = [1u8];
-        // SAFETY: writing one byte from a live stack buffer to an fd we
-        // own; the nonblocking pipe returns EAGAIN instead of blocking.
-        let _ = unsafe { c::write(self.write_fd, byte.as_ptr(), 1) };
+        if self.pending.swap(true, Ordering::AcqRel) {
+            return; // a wake is already in flight; the fd has its byte
+        }
+        let buf = 1u64.to_ne_bytes();
+        // SAFETY: writing 8 bytes from a live stack buffer to an fd we
+        // own (an eventfd requires exactly a u64; a pipe takes any bytes).
+        let _ = unsafe { c::write(self.write_fd, buf.as_ptr(), buf.len()) };
     }
 
-    /// Consume all pending wake-up bytes (call after `poll` reports the
-    /// read end readable, before handling the work the wakes announced).
+    /// Consume pending wake-up bytes and reset the coalescing flag (call
+    /// after the poller reports the read end readable, *before* handling
+    /// the work the wakes announced).
     pub fn drain(&self) {
         let mut buf = [0u8; 64];
         loop {
@@ -166,6 +531,10 @@ impl Waker {
                 break; // empty (EAGAIN), EOF, or error: nothing left
             }
         }
+        // Clear only after the fd is empty: a racing wake in the window
+        // between the last read and this swap skips its write (flag still
+        // set), and our caller pumps the published work right after.
+        self.pending.swap(false, Ordering::AcqRel);
     }
 }
 
@@ -174,7 +543,9 @@ impl Drop for Waker {
         // SAFETY: closing fds this struct exclusively owns.
         unsafe {
             c::close(self.read_fd);
-            c::close(self.write_fd);
+            if self.write_fd != self.read_fd {
+                c::close(self.write_fd);
+            }
         }
     }
 }
@@ -207,6 +578,20 @@ mod tests {
     }
 
     #[test]
+    fn wake_works_again_after_drain_resets_coalescing() {
+        let w = Waker::new().unwrap();
+        for _ in 0..3 {
+            w.wake();
+            w.wake(); // second wake coalesces onto the pending flag
+            let mut fds = [PollFd::new(w.read_fd(), POLLIN)];
+            assert_eq!(poll(&mut fds, 1000).unwrap(), 1, "wake after drain lost");
+            w.drain();
+            let mut fds = [PollFd::new(w.read_fd(), POLLIN)];
+            assert_eq!(poll(&mut fds, 0).unwrap(), 0);
+        }
+    }
+
+    #[test]
     fn wake_from_another_thread_interrupts_poll() {
         let w = std::sync::Arc::new(Waker::new().unwrap());
         let w2 = w.clone();
@@ -225,11 +610,104 @@ mod tests {
     #[test]
     fn wake_never_blocks_even_when_pipe_is_full() {
         let w = Waker::new().unwrap();
-        // a linux pipe buffers 64KiB; far more wakes than that must all
-        // return immediately
+        // far more wakes than any pipe buffers; all but the first coalesce
+        // and every one must return immediately
         for _ in 0..100_000 {
             w.wake();
         }
         w.drain();
+    }
+
+    fn poller_reports_waker_readiness(mut p: Box<dyn Poller>) {
+        let w = Waker::new().unwrap();
+        p.add(w.read_fd(), 7, POLLIN, true).unwrap();
+        let mut evs = Vec::new();
+        p.wait(0, &mut evs).unwrap();
+        assert!(evs.is_empty(), "{}: idle waker reported ready", p.name());
+        w.wake();
+        p.wait(1000, &mut evs).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 7);
+        assert!(evs[0].readable);
+        w.drain();
+        p.wait(0, &mut evs).unwrap();
+        assert!(evs.is_empty(), "{}: drained waker still ready", p.name());
+        // a fresh wake is a fresh edge — must be reported again
+        w.wake();
+        p.wait(1000, &mut evs).unwrap();
+        assert_eq!(evs.len(), 1, "{}: second edge lost", p.name());
+        p.remove(w.read_fd()).unwrap();
+        w.wake();
+        p.wait(0, &mut evs).unwrap();
+        assert!(evs.is_empty(), "{}: removed fd still reported", p.name());
+    }
+
+    #[test]
+    fn epoll_poller_reports_waker_readiness() {
+        poller_reports_waker_readiness(Box::new(EpollPoller::new().unwrap()));
+    }
+
+    #[test]
+    fn poll_poller_reports_waker_readiness() {
+        poller_reports_waker_readiness(Box::new(PollPoller::new()));
+    }
+
+    #[test]
+    fn epoll_edge_triggered_reports_once_until_rearmed() {
+        let mut p = EpollPoller::new().unwrap();
+        let w = Waker::new().unwrap();
+        p.add(w.read_fd(), 1, POLLIN, true).unwrap();
+        w.wake();
+        let mut evs = Vec::new();
+        p.wait(1000, &mut evs).unwrap();
+        assert_eq!(evs.len(), 1);
+        // edge consumed without draining the fd: no second report...
+        p.wait(0, &mut evs).unwrap();
+        assert!(evs.is_empty(), "edge-triggered epoll re-reported a seen edge");
+        // ...until EPOLL_CTL_MOD re-arms the registration, which reports
+        // readiness that currently holds (the event-loop relies on this
+        // when it changes a connection's interest set).
+        p.modify(w.read_fd(), 1, POLLIN, true).unwrap();
+        p.wait(1000, &mut evs).unwrap();
+        assert_eq!(evs.len(), 1, "EPOLL_CTL_MOD did not re-arm readiness");
+    }
+
+    #[test]
+    fn poll_poller_registrations_update_incrementally() {
+        let mut p = PollPoller::new();
+        let a = Waker::new().unwrap();
+        let b = Waker::new().unwrap();
+        let c = Waker::new().unwrap();
+        p.add(a.read_fd(), 10, POLLIN, false).unwrap();
+        p.add(b.read_fd(), 11, POLLIN, false).unwrap();
+        p.add(c.read_fd(), 12, POLLIN, false).unwrap();
+        assert_eq!(p.len(), 3);
+        assert!(p.add(a.read_fd(), 99, POLLIN, false).is_err());
+        // remove the first entry: swap-remove moves the last into its slot
+        // and the index map must follow
+        p.remove(a.read_fd()).unwrap();
+        assert_eq!(p.len(), 2);
+        b.wake();
+        c.wake();
+        let mut evs = Vec::new();
+        p.wait(1000, &mut evs).unwrap();
+        let mut tokens: Vec<u64> = evs.iter().map(|e| e.token).collect();
+        tokens.sort_unstable();
+        assert_eq!(tokens, vec![11, 12]);
+        // interest change to "nothing" suppresses readiness
+        p.modify(b.read_fd(), 11, 0, false).unwrap();
+        p.wait(0, &mut evs).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 12);
+        assert!(p.remove(a.read_fd()).is_err(), "double remove must fail");
+    }
+
+    #[test]
+    fn raise_nofile_limit_is_monotonic() {
+        // asking for a tiny target must never lower the current limit
+        let before = raise_nofile_limit(1).unwrap();
+        assert!(before >= 1);
+        let after = raise_nofile_limit(before).unwrap();
+        assert!(after >= before);
     }
 }

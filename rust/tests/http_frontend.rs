@@ -4,8 +4,11 @@
 //! are interchangeable — same endpoints, same limits, and (for the
 //! deterministic simulator with a fixed seed) **byte-identical**
 //! responses — while the event loop serves many concurrent streaming
-//! connections from a single loop thread, never stalls on a slow
-//! reader, and still honors drain/abort semantics.
+//! connections from a handful of loop threads, never stalls on a slow
+//! reader, and still honors drain/abort semantics.  The event-loop side
+//! is exercised across its configuration matrix: `poll(2)` vs
+//! edge-triggered `epoll` readiness back-ends, single-shard vs sharded
+//! loops (SPSC ring token delivery runs in all of them).
 //!
 //! Byte-identity is asserted over *sequential* requests: under
 //! concurrency the router's id assignment (and therefore the simulator's
@@ -17,7 +20,7 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
-use dsde::config::{EngineConfig, FrontendKind, RoutePolicy, SlPolicyKind};
+use dsde::config::{EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind};
 use dsde::engine::engine::Engine;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::server::client;
@@ -25,7 +28,45 @@ use dsde::server::http::{serve_router_with, ConnLimits, ServeOptions, ServerHand
 use dsde::server::router::EngineRouter;
 use dsde::sim::regime::DatasetProfile;
 
-const BOTH: [FrontendKind; 2] = [FrontendKind::Threaded, FrontendKind::EventLoop];
+/// One front-end configuration under test.
+#[derive(Clone, Copy)]
+struct FeConfig {
+    kind: FrontendKind,
+    poller: PollerKind,
+    shards: usize,
+    label: &'static str,
+}
+
+/// The full matrix: threaded oracle + event loop across pollers/shards.
+const CONFIGS: [FeConfig; 4] = [
+    FeConfig {
+        kind: FrontendKind::Threaded,
+        poller: PollerKind::Auto,
+        shards: 1,
+        label: "threaded",
+    },
+    FeConfig {
+        kind: FrontendKind::EventLoop,
+        poller: PollerKind::Poll,
+        shards: 1,
+        label: "event-loop/poll",
+    },
+    FeConfig {
+        kind: FrontendKind::EventLoop,
+        poller: PollerKind::Epoll,
+        shards: 1,
+        label: "event-loop/epoll",
+    },
+    FeConfig {
+        kind: FrontendKind::EventLoop,
+        poller: PollerKind::Epoll,
+        shards: 4,
+        label: "event-loop/epoll/4-shards",
+    },
+];
+
+/// Just the event-loop rows of [`CONFIGS`].
+const LOOP_CONFIGS: [FeConfig; 3] = [CONFIGS[1], CONFIGS[2], CONFIGS[3]];
 
 fn sim_engine(seed: u64, max_batch: usize, max_len: usize) -> Engine {
     let cfg = EngineConfig {
@@ -39,24 +80,25 @@ fn sim_engine(seed: u64, max_batch: usize, max_len: usize) -> Engine {
     Engine::new(cfg, Box::new(model))
 }
 
-fn server_with(kind: FrontendKind, max_batch: usize, limits: ConnLimits) -> ServerHandle {
+fn opts_for(fe: FeConfig, limits: ConnLimits) -> ServeOptions {
+    ServeOptions {
+        frontend: fe.kind,
+        poller: fe.poller,
+        loop_shards: fe.shards,
+        limits,
+    }
+}
+
+fn server_with(fe: FeConfig, max_batch: usize, limits: ConnLimits) -> ServerHandle {
     let router = EngineRouter::new(
         vec![sim_engine(1, max_batch, 4096)],
         RoutePolicy::RoundRobin,
     );
-    serve_router_with(
-        router,
-        "127.0.0.1:0",
-        ServeOptions {
-            frontend: kind,
-            limits,
-        },
-    )
-    .unwrap()
+    serve_router_with(router, "127.0.0.1:0", opts_for(fe, limits)).unwrap()
 }
 
-fn server(kind: FrontendKind) -> ServerHandle {
-    server_with(kind, 4, ConnLimits::default())
+fn server(fe: FeConfig) -> ServerHandle {
+    server_with(fe, 4, ConnLimits::default())
 }
 
 fn raw(addr: SocketAddr, req: &str) -> String {
@@ -79,13 +121,16 @@ fn post_completion(prompt: &str, max_tokens: usize, stream: bool) -> String {
     )
 }
 
-/// Same seed + same sequential request order ⇒ the two front-ends must
-/// answer with the exact same bytes, for blocking and streaming
-/// completions and for every protocol-error response.
+/// Same seed + same sequential request order ⇒ every front-end
+/// configuration must answer with the exact same bytes as the threaded
+/// oracle, for blocking and streaming completions and for every
+/// protocol-error response.  This is the equivalence proof for the SPSC
+/// ring delivery path: the rings carry preformatted frames, and those
+/// frames must reproduce the channel-based framing byte for byte.
 #[test]
 fn frontends_produce_byte_identical_responses() {
-    let transcript = |kind: FrontendKind| -> Vec<String> {
-        let h = server(kind);
+    let transcript = |fe: FeConfig| -> Vec<String> {
+        let h = server(fe);
         let addr = h.addr;
         let out = vec![
             raw(addr, &post_completion("def compute(x):", 12, false)),
@@ -113,31 +158,34 @@ fn frontends_produce_byte_identical_responses() {
         h.shutdown();
         out
     };
-    let threaded = transcript(FrontendKind::Threaded);
-    let event_loop = transcript(FrontendKind::EventLoop);
-    assert_eq!(threaded.len(), event_loop.len());
-    for (i, (t, e)) in threaded.iter().zip(&event_loop).enumerate() {
-        assert_eq!(t, e, "response {i} differs across front-ends");
+    let oracle = transcript(CONFIGS[0]);
+    for fe in LOOP_CONFIGS {
+        let got = transcript(fe);
+        assert_eq!(oracle.len(), got.len());
+        for (i, (t, e)) in oracle.iter().zip(&got).enumerate() {
+            assert_eq!(t, e, "response {i} differs: threaded vs {}", fe.label);
+        }
     }
     // sanity on what was compared
-    assert!(threaded[0].starts_with("HTTP/1.1 200"), "{}", threaded[0]);
-    assert!(threaded[1].contains("Transfer-Encoding: chunked"), "{}", threaded[1]);
-    assert!(threaded[1].contains("\"done\":true"), "{}", threaded[1]);
-    assert!(threaded[1].ends_with("0\r\n\r\n"), "{}", threaded[1]);
-    assert!(threaded[4].starts_with("HTTP/1.1 400"), "{}", threaded[4]);
-    assert!(threaded[5].starts_with("HTTP/1.1 400"), "{}", threaded[5]);
-    assert!(threaded[6].starts_with("HTTP/1.1 404"), "{}", threaded[6]);
-    assert!(threaded[7].starts_with("HTTP/1.1 405"), "{}", threaded[7]);
-    assert!(threaded[8].starts_with("HTTP/1.1 405"), "{}", threaded[8]);
-    assert!(threaded[9].starts_with("HTTP/1.1 413"), "{}", threaded[9]);
+    assert!(oracle[0].starts_with("HTTP/1.1 200"), "{}", oracle[0]);
+    assert!(oracle[1].contains("Transfer-Encoding: chunked"), "{}", oracle[1]);
+    assert!(oracle[1].contains("\"done\":true"), "{}", oracle[1]);
+    assert!(oracle[1].ends_with("0\r\n\r\n"), "{}", oracle[1]);
+    assert!(oracle[4].starts_with("HTTP/1.1 400"), "{}", oracle[4]);
+    assert!(oracle[5].starts_with("HTTP/1.1 400"), "{}", oracle[5]);
+    assert!(oracle[6].starts_with("HTTP/1.1 404"), "{}", oracle[6]);
+    assert!(oracle[7].starts_with("HTTP/1.1 405"), "{}", oracle[7]);
+    assert!(oracle[8].starts_with("HTTP/1.1 405"), "{}", oracle[8]);
+    assert!(oracle[9].starts_with("HTTP/1.1 413"), "{}", oracle[9]);
 }
 
-/// N concurrent blocking + streaming clients all complete on both
-/// front-ends, with correct token counts and well-formed streams.
+/// N concurrent blocking + streaming clients all complete on every
+/// front-end configuration, with correct token counts and well-formed
+/// streams.
 #[test]
-fn concurrent_mixed_clients_complete_on_both_frontends() {
-    for kind in BOTH {
-        let h = server_with(kind, 16, ConnLimits::default());
+fn concurrent_mixed_clients_complete_on_all_frontends() {
+    for fe in CONFIGS {
+        let h = server_with(fe, 16, ConnLimits::default());
         let addr = h.addr.to_string();
         let mut threads = Vec::new();
         for i in 0..16 {
@@ -166,7 +214,8 @@ fn concurrent_mixed_clients_complete_on_both_frontends() {
         }
         assert!(
             h.frontend_stats().accepted() >= 32,
-            "{kind:?}: accepted {}",
+            "{}: accepted {}",
+            fe.label,
             h.frontend_stats().accepted()
         );
         h.shutdown();
@@ -175,57 +224,77 @@ fn concurrent_mixed_clients_complete_on_both_frontends() {
 
 /// A streaming client that never reads its response must not stall the
 /// event loop: its output backpressures into that connection's buffer
-/// while every other connection keeps being served.
+/// while every other connection keeps being served.  Exercised across
+/// pollers and shard counts — under `epoll` this also covers the
+/// edge-trigger re-arm on the write side.
 #[test]
 fn slow_streaming_reader_does_not_stall_other_connections() {
-    let h = server_with(FrontendKind::EventLoop, 8, ConnLimits::default());
-    let addr = h.addr;
-    let mut slow = TcpStream::connect(addr).unwrap();
-    slow.write_all(post_completion("slow reader", 2048, true).as_bytes())
-        .unwrap();
-    // let the loop dispatch the slow stream before loading the server
-    std::thread::sleep(Duration::from_millis(150));
-    for i in 0..6 {
-        let r = client::complete(&addr.to_string(), &format!("fast {i}"), 8, 0.0).unwrap();
-        assert_eq!(r.status, 200, "blocking client stalled behind slow reader");
+    for fe in LOOP_CONFIGS {
+        let h = server_with(fe, 8, ConnLimits::default());
+        let addr = h.addr;
+        let mut slow = TcpStream::connect(addr).unwrap();
+        slow.write_all(post_completion("slow reader", 2048, true).as_bytes())
+            .unwrap();
+        // let the loop dispatch the slow stream before loading the server
+        std::thread::sleep(Duration::from_millis(150));
+        for i in 0..6 {
+            let r = client::complete(&addr.to_string(), &format!("fast {i}"), 8, 0.0).unwrap();
+            assert_eq!(
+                r.status, 200,
+                "{}: blocking client stalled behind slow reader",
+                fe.label
+            );
+        }
+        let s = client::complete_streaming(&addr.to_string(), "fast stream", 8, 0.0).unwrap();
+        assert_eq!(
+            s.tokens(),
+            8,
+            "{}: streaming client stalled behind slow reader",
+            fe.label
+        );
+        drop(slow); // close the stalled connection so shutdown drains cleanly
+        h.shutdown();
     }
-    let s = client::complete_streaming(&addr.to_string(), "fast stream", 8, 0.0).unwrap();
-    assert_eq!(s.tokens(), 8, "streaming client stalled behind slow reader");
-    drop(slow); // close the stalled connection so shutdown drains cleanly
-    h.shutdown();
 }
 
 /// Graceful drain under the event loop: open streams run to their
-/// terminal event with the complete output before shutdown returns.
+/// terminal event with the complete output before shutdown returns —
+/// including when the terminal frames must cross SPSC rings into
+/// multiple shards during the drain.
 #[test]
 fn event_loop_drain_completes_open_streams() {
-    let h = server_with(FrontendKind::EventLoop, 8, ConnLimits::default());
-    let addr = h.addr.to_string();
-    let clients: Vec<_> = (0..4)
-        .map(|i| {
-            let addr = addr.clone();
-            std::thread::spawn(move || {
-                client::complete_streaming(&addr, &format!("drain {i}"), 512, 0.0).unwrap()
+    for fe in LOOP_CONFIGS {
+        let h = server_with(fe, 8, ConnLimits::default());
+        let addr = h.addr.to_string();
+        let clients: Vec<_> = (0..4)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    client::complete_streaming(&addr, &format!("drain {i}"), 512, 0.0).unwrap()
+                })
             })
-        })
-        .collect();
-    // wait until all four streams are actually in flight (or already done)
-    let t0 = Instant::now();
-    while h.router().in_flight() < 4 && h.router().aggregated_metrics().completed < 4 {
-        assert!(
-            t0.elapsed() < Duration::from_secs(10),
-            "streams never reached the engine"
-        );
-        std::thread::sleep(Duration::from_millis(5));
-    }
-    h.shutdown(); // drain: every open stream must still complete fully
-    for c in clients {
-        let r = c.join().unwrap();
-        assert_eq!(r.tokens(), 512);
-        assert_eq!(
-            r.finale.get("finish_reason").and_then(|f| f.as_str()),
-            Some("max_tokens")
-        );
+            .collect();
+        // wait until all four streams are actually in flight (or done)
+        let t0 = Instant::now();
+        while h.router().in_flight() < 4 && h.router().aggregated_metrics().completed < 4 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "{}: streams never reached the engine",
+                fe.label
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        h.shutdown(); // drain: every open stream must still complete fully
+        for c in clients {
+            let r = c.join().unwrap();
+            assert_eq!(r.tokens(), 512, "{}", fe.label);
+            assert_eq!(
+                r.finale.get("finish_reason").and_then(|f| f.as_str()),
+                Some("max_tokens"),
+                "{}",
+                fe.label
+            );
+        }
     }
 }
 
@@ -233,60 +302,62 @@ fn event_loop_drain_completes_open_streams() {
 /// `aborted` summary instead of hanging or truncating.
 #[test]
 fn event_loop_abort_terminates_open_streams() {
-    // huge context + output budget: the request cannot finish on its own
-    // before the abort lands
-    let router = EngineRouter::new(
-        vec![sim_engine(1, 4, 1 << 20)],
-        RoutePolicy::RoundRobin,
-    );
-    let h = serve_router_with(
-        router,
-        "127.0.0.1:0",
-        ServeOptions {
-            frontend: FrontendKind::EventLoop,
-            ..Default::default()
-        },
-    )
-    .unwrap();
-    let addr = h.addr.to_string();
-    let c = std::thread::spawn(move || {
-        client::complete_streaming(&addr, "long running", 200_000, 0.0).unwrap()
-    });
-    let t0 = Instant::now();
-    while h.router().in_flight() < 1 {
-        assert!(t0.elapsed() < Duration::from_secs(10), "stream never started");
-        std::thread::sleep(Duration::from_millis(5));
+    for fe in [CONFIGS[2], CONFIGS[3]] {
+        // huge context + output budget: the request cannot finish on its
+        // own before the abort lands
+        let router = EngineRouter::new(
+            vec![sim_engine(1, 4, 1 << 20)],
+            RoutePolicy::RoundRobin,
+        );
+        let h = serve_router_with(router, "127.0.0.1:0", opts_for(fe, ConnLimits::default()))
+            .unwrap();
+        let addr = h.addr.to_string();
+        let c = std::thread::spawn(move || {
+            client::complete_streaming(&addr, "long running", 200_000, 0.0).unwrap()
+        });
+        let t0 = Instant::now();
+        while h.router().in_flight() < 1 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "{}: stream never started",
+                fe.label
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        h.router().abort();
+        let r = c.join().unwrap();
+        assert_eq!(
+            r.finale.get("finish_reason").and_then(|f| f.as_str()),
+            Some("aborted"),
+            "{}",
+            fe.label
+        );
+        h.shutdown();
     }
-    h.router().abort();
-    let r = c.join().unwrap();
-    assert_eq!(
-        r.finale.get("finish_reason").and_then(|f| f.as_str()),
-        Some("aborted")
-    );
-    h.shutdown();
 }
 
 /// Slowloris guard: a connection that never completes its headers is
-/// answered `408` and closed, on both front-ends.
+/// answered `408` and closed, in every front-end configuration.
 #[test]
 fn header_read_timeout_closes_slowloris_connections() {
-    for kind in BOTH {
+    for fe in CONFIGS {
         let limits = ConnLimits {
             header_timeout: Duration::from_millis(250),
             idle_timeout: Duration::from_millis(2000),
             ..Default::default()
         };
-        let h = server_with(kind, 4, limits);
+        let h = server_with(fe, 4, limits);
         let mut s = TcpStream::connect(h.addr).unwrap();
         s.write_all(b"GET /health HT").unwrap(); // headers never finish
         let t0 = Instant::now();
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
-        assert!(out.starts_with("HTTP/1.1 408"), "{kind:?}: {out:?}");
-        assert!(out.contains("header read timeout"), "{kind:?}: {out}");
+        assert!(out.starts_with("HTTP/1.1 408"), "{}: {out:?}", fe.label);
+        assert!(out.contains("header read timeout"), "{}: {out}", fe.label);
         assert!(
             t0.elapsed() < Duration::from_secs(5),
-            "{kind:?}: timeout took {:?}",
+            "{}: timeout took {:?}",
+            fe.label,
             t0.elapsed()
         );
         h.shutdown();
@@ -294,111 +365,173 @@ fn header_read_timeout_closes_slowloris_connections() {
 }
 
 /// Idle guard: headers arrive but the declared body never does — the
-/// connection is answered `408` after the idle budget, on both
-/// front-ends.
+/// connection is answered `408` after the idle budget, in every
+/// front-end configuration.
 #[test]
 fn idle_timeout_closes_stalled_body_connections() {
-    for kind in BOTH {
+    for fe in CONFIGS {
         let limits = ConnLimits {
             header_timeout: Duration::from_millis(2000),
             idle_timeout: Duration::from_millis(250),
             ..Default::default()
         };
-        let h = server_with(kind, 4, limits);
+        let h = server_with(fe, 4, limits);
         let mut s = TcpStream::connect(h.addr).unwrap();
         s.write_all(b"POST /v1/completions HTTP/1.1\r\nContent-Length: 5\r\n\r\n")
             .unwrap(); // body never arrives
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
-        assert!(out.starts_with("HTTP/1.1 408"), "{kind:?}: {out:?}");
-        assert!(out.contains("idle timeout"), "{kind:?}: {out}");
+        assert!(out.starts_with("HTTP/1.1 408"), "{}: {out:?}", fe.label);
+        assert!(out.contains("idle timeout"), "{}: {out}", fe.label);
         h.shutdown();
     }
 }
 
-/// Oversized header blocks are rejected with `413` on both front-ends.
+/// Oversized header blocks are rejected with `413` in every front-end
+/// configuration.
 #[test]
 fn oversized_headers_rejected_with_413() {
-    for kind in BOTH {
-        let h = server(kind);
+    for fe in CONFIGS {
+        let h = server(fe);
         let junk = format!(
             "GET /health HTTP/1.1\r\nX-Pad: {}\r\n\r\n",
             "a".repeat(20_000)
         );
         let resp = raw(h.addr, &junk);
-        assert!(resp.starts_with("HTTP/1.1 413"), "{kind:?}: {resp}");
-        assert!(resp.contains("\"error\""), "{kind:?}: {resp}");
+        assert!(resp.starts_with("HTTP/1.1 413"), "{}: {resp}", fe.label);
+        assert!(resp.contains("\"error\""), "{}: {resp}", fe.label);
         h.shutdown();
     }
 }
 
 /// The open-connection cap turns extra connections away with `503` and
-/// counts them, on both front-ends.
+/// counts them, in every front-end configuration.
 #[test]
 fn connection_cap_rejects_with_503() {
-    for kind in BOTH {
+    for fe in CONFIGS {
         let limits = ConnLimits {
             max_open_conns: 1,
             ..Default::default()
         };
-        let h = server_with(kind, 4, limits);
+        let h = server_with(fe, 4, limits);
         let s1 = TcpStream::connect(h.addr).unwrap();
         // let the server register the held connection before the next one
         std::thread::sleep(Duration::from_millis(150));
         let resp = raw(h.addr, "GET /health HTTP/1.1\r\nConnection: close\r\n\r\n");
-        assert!(resp.starts_with("HTTP/1.1 503"), "{kind:?}: {resp:?}");
-        assert!(h.frontend_stats().rejected() >= 1, "{kind:?}");
+        assert!(resp.starts_with("HTTP/1.1 503"), "{}: {resp:?}", fe.label);
+        assert!(h.frontend_stats().rejected() >= 1, "{}", fe.label);
         drop(s1);
         h.shutdown();
     }
 }
 
-/// `/health` and `/v1/metrics` expose the active front-end kind and the
-/// connection counters.
+/// `/health` and `/v1/metrics` expose the active front-end kind, the
+/// connection counters, and — for the event loop — the resolved poller,
+/// shard count, and per-shard gauges.
 #[test]
 fn health_and_metrics_report_frontend_counters() {
-    for kind in BOTH {
-        let h = server(kind);
+    for fe in CONFIGS {
+        let h = server(fe);
         let health = raw(h.addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(
-            health.contains(&format!("\"kind\":\"{}\"", kind.name())),
-            "{kind:?}: {health}"
+            health.contains(&format!("\"kind\":\"{}\"", fe.kind.name())),
+            "{}: {health}",
+            fe.label
         );
-        assert!(health.contains("\"open_connections\":"), "{kind:?}: {health}");
+        assert!(health.contains("\"open_connections\":"), "{}: {health}", fe.label);
+        if fe.kind == FrontendKind::EventLoop {
+            assert!(
+                health.contains(&format!("\"poller\":\"{}\"", fe.poller.name())),
+                "{}: {health}",
+                fe.label
+            );
+            assert!(
+                health.contains(&format!("\"loop_shards\":{}", fe.shards)),
+                "{}: {health}",
+                fe.label
+            );
+            assert!(
+                health.contains("\"shard_open_connections\":["),
+                "{}: {health}",
+                fe.label
+            );
+            assert!(health.contains("\"ring_depth_hwm\":"), "{}: {health}", fe.label);
+        }
         let metrics = raw(h.addr, "GET /v1/metrics HTTP/1.1\r\nHost: x\r\n\r\n");
-        assert!(metrics.contains("\"frontend\":{"), "{kind:?}: {metrics}");
-        assert!(metrics.contains("\"rejected\":0"), "{kind:?}: {metrics}");
+        assert!(metrics.contains("\"frontend\":{"), "{}: {metrics}", fe.label);
+        assert!(metrics.contains("\"rejected\":0"), "{}: {metrics}", fe.label);
         // both requests above were accepted and have closed by now
         let t0 = Instant::now();
         while h.frontend_stats().open() > 0 && t0.elapsed() < Duration::from_secs(5) {
             std::thread::sleep(Duration::from_millis(10));
         }
-        assert!(h.frontend_stats().accepted() >= 2, "{kind:?}");
-        assert_eq!(h.frontend_stats().open(), 0, "{kind:?}");
+        assert!(h.frontend_stats().accepted() >= 2, "{}", fe.label);
+        assert_eq!(h.frontend_stats().open(), 0, "{}", fe.label);
         h.shutdown();
     }
 }
 
-/// The event loop holds many concurrent streaming connections on its one
-/// thread (tier-1-sized; the 1k soak below scales it up).
+/// Sharded accept: with 4 loop shards, concurrent connections spread
+/// across shards (the least-open handoff), and the per-shard gauges
+/// return to zero once everything drains.
 #[test]
-fn event_loop_serves_many_concurrent_streams() {
-    let h = server_with(FrontendKind::EventLoop, 32, ConnLimits::default());
+fn sharded_loop_spreads_connections_across_shards() {
+    let h = server_with(CONFIGS[3], 32, ConnLimits::default());
     let addr = h.addr.to_string();
-    let threads: Vec<_> = (0..128)
+    let threads: Vec<_> = (0..32)
         .map(|i| {
             let addr = addr.clone();
             std::thread::spawn(move || {
-                let r = client::complete_streaming(&addr, &format!("c{i}"), 16, 0.0).unwrap();
+                let r = client::complete_streaming(&addr, &format!("s{i}"), 16, 0.0).unwrap();
                 assert_eq!(r.tokens(), 16);
             })
         })
         .collect();
+    // while the streams are in flight, at least two shards own conns
+    let t0 = Instant::now();
+    let mut spread = false;
+    while t0.elapsed() < Duration::from_secs(10) && !spread {
+        let busy = (0..4).filter(|&s| h.frontend_stats().shard_open(s) > 0).count();
+        spread = busy >= 2;
+        std::thread::sleep(Duration::from_millis(2));
+    }
     for t in threads {
         t.join().unwrap();
     }
-    assert!(h.frontend_stats().accepted() >= 128);
+    assert!(spread, "connections never spread past one shard");
+    let t0 = Instant::now();
+    while h.frontend_stats().open() > 0 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for s in 0..4 {
+        assert_eq!(h.frontend_stats().shard_open(s), 0, "shard {s} leaked conns");
+    }
     h.shutdown();
+}
+
+/// The event loop holds many concurrent streaming connections on a few
+/// loop threads (tier-1-sized; the soaks below scale it up).
+#[test]
+fn event_loop_serves_many_concurrent_streams() {
+    for fe in [CONFIGS[2], CONFIGS[3]] {
+        let h = server_with(fe, 32, ConnLimits::default());
+        let addr = h.addr.to_string();
+        let threads: Vec<_> = (0..128)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let r =
+                        client::complete_streaming(&addr, &format!("c{i}"), 16, 0.0).unwrap();
+                    assert_eq!(r.tokens(), 16);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(h.frontend_stats().accepted() >= 128, "{}", fe.label);
+        h.shutdown();
+    }
 }
 
 /// Soak (CI `soak` job, `cargo test --release -- --ignored`): ≥1k
@@ -408,7 +541,7 @@ fn event_loop_serves_many_concurrent_streams() {
 #[test]
 #[ignore]
 fn event_loop_serves_1k_concurrent_streams() {
-    let h = server_with(FrontendKind::EventLoop, 64, ConnLimits::default());
+    let h = server_with(CONFIGS[2], 64, ConnLimits::default());
     let addr = h.addr.to_string();
     let threads: Vec<_> = (0..1024)
         .map(|i| {
@@ -426,6 +559,52 @@ fn event_loop_serves_1k_concurrent_streams() {
     // every connection drains back out of the loop
     let t0 = Instant::now();
     while h.frontend_stats().open() > 0 && t0.elapsed() < Duration::from_secs(30) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(h.frontend_stats().open(), 0);
+    h.shutdown();
+}
+
+/// Soak (CI `soak` job): 16k concurrent streaming clients against the
+/// sharded epoll loop.  Needs a raised fd limit (two fds per stream —
+/// client + server side — plus headroom); the client count is clamped to
+/// what the limit actually grants so the test degrades instead of
+/// erroring on constrained runners.
+#[test]
+#[ignore]
+fn sharded_epoll_serves_16k_concurrent_streams() {
+    let granted = dsde::util::sys::raise_nofile_limit(70_000).unwrap_or(1024);
+    // reserve half the fds for the server side plus slack for the
+    // runtime; 4 fds of budget per concurrent client pair
+    let clients = (((granted.saturating_sub(512)) / 4) as usize).min(16_384);
+    assert!(clients >= 1024, "fd limit too low for a meaningful soak: {granted}");
+    let limits = ConnLimits {
+        max_open_conns: 32_768,
+        ..Default::default()
+    };
+    let h = server_with(CONFIGS[3], 64, limits);
+    let addr = h.addr.to_string();
+    let threads: Vec<_> = (0..clients)
+        .map(|i| {
+            let addr = addr.clone();
+            // small stacks: 16k default-stack client threads would
+            // reserve ~128 GiB of address space
+            std::thread::Builder::new()
+                .stack_size(96 * 1024)
+                .spawn(move || {
+                    let r = client::complete_streaming(&addr, &format!("c{i}"), 4, 0.0)
+                        .unwrap();
+                    assert_eq!(r.tokens(), 4);
+                })
+                .unwrap()
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert!(h.frontend_stats().accepted() >= clients as u64);
+    let t0 = Instant::now();
+    while h.frontend_stats().open() > 0 && t0.elapsed() < Duration::from_secs(60) {
         std::thread::sleep(Duration::from_millis(20));
     }
     assert_eq!(h.frontend_stats().open(), 0);
