@@ -2,6 +2,7 @@
 
 use crate::spec::adapter::{AdaEdlConfig, DsdeConfig};
 pub use crate::spec::cap::CapMode;
+use crate::util::fault::FaultPlan;
 use crate::util::json::Json;
 
 /// Which SL policy drives the engine.
@@ -282,9 +283,23 @@ pub struct RouterConfig {
     /// loop threads, each owning a disjoint set of connections.
     pub loop_shards: usize,
     /// Serving-trace recording (`--record <path>`): when set, every
-    /// routed request is appended to this NDJSON trace for later
-    /// `pallas eval --replay` comparison.  `None` = no recording.
+    /// routed request is appended to this NDJSON write-ahead journal
+    /// (with completion markers) — replayable via `pallas eval --replay`
+    /// and resumable via `serve --resume`.  `None` = no recording.
     pub record: Option<String>,
+    /// Replica stall detection window in milliseconds (`--stall-ms`): a
+    /// replica with in-flight work that publishes no step heartbeat for
+    /// this long is declared wedged and its work is resubmitted to
+    /// survivors.  `0` disables stall detection (panic detection stays
+    /// on).
+    pub stall_ms: u64,
+    /// Cold-restart recovery (`--resume <journal>`): when set, unfinished
+    /// requests from this journal are resubmitted before serving starts.
+    pub resume: Option<String>,
+    /// Deterministic fault injection (`--fault <spec>`, chaos testing
+    /// only): scheduled replica kills/stalls, journal-sync drops, and
+    /// connection slowdowns.  `None` = no faults.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for RouterConfig {
@@ -297,6 +312,9 @@ impl Default for RouterConfig {
             poller: PollerKind::Auto,
             loop_shards: 1,
             record: None,
+            stall_ms: 10_000,
+            resume: None,
+            fault: None,
         }
     }
 }
@@ -335,6 +353,21 @@ impl RouterConfig {
                 "record",
                 match &self.record {
                     Some(path) => Json::Str(path.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set("stall_ms", self.stall_ms)
+            .set(
+                "resume",
+                match &self.resume {
+                    Some(path) => Json::Str(path.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "fault",
+                match &self.fault {
+                    Some(plan) => Json::Str(plan.to_spec()),
                     None => Json::Null,
                 },
             )
@@ -430,6 +463,9 @@ mod tests {
         assert!(s.contains("\"poller\":\"auto\""));
         assert!(s.contains("\"loop_shards\":1"));
         assert!(s.contains("\"record\":null"));
+        assert!(s.contains("\"stall_ms\":10000"));
+        assert!(s.contains("\"resume\":null"));
+        assert!(s.contains("\"fault\":null"));
         let zero_shards = RouterConfig {
             loop_shards: 0,
             ..Default::default()
@@ -446,6 +482,14 @@ mod tests {
         };
         let s = recording.to_json().to_string();
         assert!(s.contains("\"record\":\"trace.ndjson\""), "{s}");
+        let chaotic = RouterConfig {
+            resume: Some("wal.ndjson".to_string()),
+            fault: Some(FaultPlan::parse("kill:0@100", 2).unwrap()),
+            ..Default::default()
+        };
+        let s = chaotic.to_json().to_string();
+        assert!(s.contains("\"resume\":\"wal.ndjson\""), "{s}");
+        assert!(s.contains("\"fault\":\"kill:0@100\""), "{s}");
     }
 
     #[test]

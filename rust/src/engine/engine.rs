@@ -52,6 +52,12 @@ pub struct ReplicaLoad {
     /// current length (prompt + any pre-preemption output) plus its
     /// remaining output budget — the KV footprint it will grow to.
     pub queued_prompt_tokens: usize,
+    /// Whether the serving layer has declared this replica failed (engine
+    /// thread panicked or stopped heartbeating).  Always `false` when the
+    /// snapshot comes straight from the engine; the router's supervisor
+    /// sets it when it fails the replica over (see
+    /// [`crate::server::router::EngineRouter`]).
+    pub failed: bool,
 }
 
 /// What one driven engine step did (see [`Engine::step_detailed`]).
@@ -282,6 +288,7 @@ impl Engine {
             kv_free_blocks: self.kv.free_blocks(),
             queued_requests: self.waiting.len(),
             queued_prompt_tokens: self.queued_prompt_tokens(),
+            failed: false,
         }
     }
 

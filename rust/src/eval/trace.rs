@@ -127,6 +127,11 @@ impl TraceRecorder {
 
 /// Load an NDJSON trace (blank lines ignored).  Fails with the offending
 /// line number on malformed input.
+///
+/// Write-ahead journals ([`crate::server::journal`]) are a superset of
+/// the trace format: their `submit` records carry every trace field, and
+/// other typed records (`complete` markers) are skipped — so a journal
+/// replays directly through `pallas eval --replay`.
 pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<TraceEntry>> {
     let file = File::open(path.as_ref())
         .with_context(|| format!("opening trace {:?}", path.as_ref()))?;
@@ -137,6 +142,13 @@ pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<TraceEntry>> {
             continue;
         }
         let j = Json::parse(&line).map_err(|e| anyhow!("trace line {}: {e}", i + 1))?;
+        // typed journal records: `submit` lines are trace entries, every
+        // other type is journal bookkeeping
+        if let Some(kind) = j.get("type").and_then(|x| x.as_str()) {
+            if kind != "submit" {
+                continue;
+            }
+        }
         let entry =
             TraceEntry::from_json(&j).map_err(|e| anyhow!("trace line {}: {e}", i + 1))?;
         out.push(entry);
@@ -325,6 +337,25 @@ mod tests {
         assert!(trace.iter().all(|e| e.tag == "xsum"));
         // arrival stamps are nondecreasing
         assert!(trace.windows(2).all(|w| w[0].t <= w[1].t));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_skips_journal_bookkeeping_records() {
+        let path = tmp("journal");
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"type\":\"submit\",\"id\":1,\"t\":0,\"prompt_len\":12,\"max_tokens\":6,\"temperature\":0,\"tag\":\"wal\",\"prompt\":[65,65]}\n",
+                "{\"type\":\"complete\",\"id\":1,\"reason\":\"max_tokens\",\"t\":0.5}\n",
+                "{\"type\":\"submit\",\"id\":2,\"t\":1,\"prompt_len\":8,\"max_tokens\":4,\"temperature\":0,\"tag\":\"wal\"}\n",
+            ),
+        )
+        .unwrap();
+        let trace = load_trace(&path).unwrap();
+        assert_eq!(trace.len(), 2, "complete markers are not trace entries");
+        assert_eq!(trace[0].prompt_len, 12);
+        assert_eq!(trace[1].max_tokens, 4);
         std::fs::remove_file(&path).ok();
     }
 

@@ -8,9 +8,12 @@
 //!   report validation (see `EVALUATION.md`).
 //! * `calibrate`  — measure real PJRT step costs (feeds the sim cost model).
 //! * `info`       — print artifact manifest + config summary.
+//! * `journal`    — write-ahead-journal tools (`journal verify <path>`).
 //!
 //! `serve`/`serve-sim` accept `--record <path>` to capture an NDJSON
-//! serving trace that `eval --replay <path>` re-runs deterministically.
+//! write-ahead journal that `eval --replay <path>` re-runs
+//! deterministically and `serve --resume <path>` restores unfinished
+//! requests from after a crash.
 
 use std::sync::Arc;
 
@@ -22,16 +25,17 @@ use dsde::config::{
 use dsde::engine::engine::Engine;
 use dsde::eval::{
     load_trace, replay, run_grid, ArrivalSpec, GridReport, GridSpec, PolicyPoint, ReplayConfig,
-    TraceRecorder,
 };
 use dsde::model::pjrt_lm::PjrtModel;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::model::traits::{SeqInput, SpecModel};
 use dsde::runtime::artifacts::{DraftKind, Manifest};
 use dsde::server::http::{serve_router_with, ServeOptions};
-use dsde::server::router::EngineRouter;
+use dsde::server::journal::Journal;
+use dsde::server::router::{EngineRouter, RouterOptions};
 use dsde::sim::regime::DatasetProfile;
 use dsde::util::cli::{usage, Args, FlagSpec};
+use dsde::util::fault::FaultPlan;
 use dsde::util::json::Json;
 use dsde::workload::{Dataset, WorkloadGen};
 
@@ -55,7 +59,10 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "seed", help: "rng seed", default: Some("0") },
     FlagSpec { name: "ar", help: "autoregressive baseline (flag)", default: None },
     FlagSpec { name: "json", help: "emit metrics as JSON (flag)", default: None },
-    FlagSpec { name: "record", help: "record serving trace NDJSON (serve)", default: None },
+    FlagSpec { name: "record", help: "record serving journal NDJSON (serve)", default: None },
+    FlagSpec { name: "stall-ms", help: "replica wedge-detection window ms, 0=off (serve)", default: Some("10000") },
+    FlagSpec { name: "resume", help: "restore unfinished requests from a journal (serve)", default: None },
+    FlagSpec { name: "fault", help: "fault-injection spec, e.g. kill:0@500 (chaos testing)", default: None },
     FlagSpec { name: "grid", help: "grid preset (eval): default", default: Some("default") },
     FlagSpec { name: "smoke", help: "shrink the eval grid to smoke size (flag)", default: None },
     FlagSpec { name: "datasets", help: "eval workloads: names/mixes, comma-separated", default: None },
@@ -97,30 +104,58 @@ fn router_config(args: &Args) -> Result<RouterConfig> {
         .ok_or_else(|| anyhow::anyhow!("unknown --frontend value (threaded | event-loop)"))?;
     let poller = PollerKind::parse(&args.str_or("poller", "auto"))
         .ok_or_else(|| anyhow::anyhow!("unknown --poller value (auto | epoll | poll)"))?;
+    let replicas = args.usize_clamped_or("replicas", 1, 1, 256);
+    let fault = match args.get("fault") {
+        Some(spec) => Some(
+            FaultPlan::parse(spec, replicas)
+                .map_err(|e| anyhow::anyhow!("bad --fault spec: {e}"))?,
+        ),
+        None => None,
+    };
     let cfg = RouterConfig {
-        replicas: args.usize_clamped_or("replicas", 1, 1, 256),
+        replicas,
         policy,
         steal,
         frontend,
         poller,
         loop_shards: args.usize_clamped_or("loop-shards", 1, 1, 64),
         record: args.get("record").map(String::from),
+        stall_ms: args.u64_or("stall-ms", 10_000),
+        resume: args.get("resume").map(String::from),
+        fault,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
 }
 
-/// Attach the `--record` trace hook to a freshly built router (no-op when
-/// recording was not requested).  The recorder tags every entry with the
-/// serving `--dataset` value.
-fn attach_recorder(router: &mut EngineRouter, rcfg: &RouterConfig, args: &Args) -> Result<()> {
+/// Build a router with the reliability knobs from the CLI, wire the
+/// `--record` write-ahead journal (tagged with the serving `--dataset`),
+/// and restore any unfinished requests from a `--resume` journal — the
+/// shared serve/serve-sim assembly.
+fn build_router(engines: Vec<Engine>, rcfg: &RouterConfig, args: &Args) -> Result<EngineRouter> {
+    let opts = RouterOptions {
+        stall_ms: rcfg.stall_ms,
+        fault: rcfg.fault.clone(),
+    };
+    let mut router = EngineRouter::with_router_options(engines, rcfg.policy, rcfg.steal, opts);
     if let Some(path) = &rcfg.record {
         let tag = args.str_or("dataset", "cnndm");
-        let rec = Arc::new(TraceRecorder::create(path, &tag)?);
-        router.set_record_hook(rec.hook());
-        println!("recording serving trace to {path} (tag {tag})");
+        let journal = Arc::new(Journal::create(path, &tag)?);
+        router.set_journal(journal);
+        println!("journaling serving trace to {path} (tag {tag})");
     }
-    Ok(())
+    if let Some(path) = &rcfg.resume {
+        let state = dsde::server::journal::load(path)?;
+        let unfinished = state.unfinished();
+        let n = unfinished.len();
+        for req in unfinished {
+            // fire-and-forget: the original clients are gone; completions
+            // land in the metrics and the new journal (when recording)
+            drop(router.submit(req));
+        }
+        println!("resumed {n} unfinished request(s) from {path}");
+    }
+    Ok(router)
 }
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -175,8 +210,7 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                     Ok(Engine::new(cfg, Box::new(model)))
                 })
                 .collect::<Result<_>>()?;
-            let mut router = EngineRouter::with_options(engines, rcfg.policy, rcfg.steal);
-            attach_recorder(&mut router, &rcfg, args)?;
+            let router = build_router(engines, &rcfg, args)?;
             let opts = ServeOptions {
                 frontend: rcfg.frontend,
                 poller: rcfg.poller,
@@ -209,8 +243,7 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                     Ok(Engine::new(cfg, Box::new(model)))
                 })
                 .collect::<Result<_>>()?;
-            let mut router = EngineRouter::with_options(engines, rcfg.policy, rcfg.steal);
-            attach_recorder(&mut router, &rcfg, args)?;
+            let router = build_router(engines, &rcfg, args)?;
             let opts = ServeOptions {
                 frontend: rcfg.frontend,
                 poller: rcfg.poller,
@@ -274,6 +307,17 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         "eval" => eval_cmd(args),
+        "journal" => {
+            let pos = args.positional();
+            match (pos.get(1).map(|s| s.as_str()), pos.get(2)) {
+                (Some("verify"), Some(path)) => {
+                    let report = dsde::server::journal::verify(path)?;
+                    println!("{report}");
+                    Ok(())
+                }
+                _ => Err(anyhow::anyhow!("usage: dsde journal verify <path>")),
+            }
+        }
         "calibrate" => calibrate(args),
         "info" => {
             let m = Manifest::load(args.str_or("artifacts", "artifacts"))?;
@@ -295,7 +339,8 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                 usage(
                     "dsde",
                     "DSDE dynamic speculative decoding engine\n\
-                     \nCommands: serve | serve-sim | run [--pjrt] | eval | calibrate | info",
+                     \nCommands: serve | serve-sim | run [--pjrt] | eval | \
+                     journal verify <path> | calibrate | info",
                     FLAGS
                 )
             );

@@ -379,6 +379,16 @@ pub(crate) fn aborted_line() -> String {
         .to_string()
 }
 
+/// The terminal frame of a ring-delivered stream whose request was
+/// aborted (replica failure past the point of safe replay, or shutdown):
+/// the explicit aborted chunk plus the zero-length chunk, so the client
+/// sees a complete chunked body instead of a truncation.
+pub(crate) fn stream_abort_frame() -> Vec<u8> {
+    let mut bytes = encode_chunk_line(&aborted_line());
+    bytes.extend_from_slice(STREAM_TERMINATOR);
+    bytes
+}
+
 /// The blocking completion response body.
 pub(crate) fn blocking_body(fin: &FinishedRequest) -> Json {
     Json::obj()
@@ -460,6 +470,12 @@ pub(crate) fn dispatch(
     stats: &FrontendStats,
     ctx: DispatchCtx<'_>,
 ) -> Dispatch {
+    // fault injection: an armed slow-conn fault delays request handling
+    // on whichever thread runs dispatch (handler thread or loop shard),
+    // widening race windows the chaos tests want to exercise
+    if let Some(delay) = router.conn_delay() {
+        std::thread::sleep(delay);
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => {
             let body = Json::obj()
@@ -569,6 +585,11 @@ pub(crate) struct Conn {
     /// loop re-registers only when [`Conn::interest`] diverges.
     pub(crate) registered_interest: i16,
     pub(crate) state: ConnState,
+    /// Replica whose ring delivered this connection's first stream frame
+    /// (set by the shard loop).  When that replica's rings close, the
+    /// shard synthesizes an aborted terminal for still-open streams it
+    /// fed — a dead replica must not leave its clients hanging.
+    pub(crate) ring_src: Option<usize>,
     inbuf: Vec<u8>,
     outbuf: Vec<u8>,
     out_pos: usize,
@@ -585,6 +606,7 @@ impl Conn {
             token,
             registered_interest: 0,
             state: ConnState::Reading,
+            ring_src: None,
             inbuf: Vec::new(),
             outbuf: Vec::new(),
             out_pos: 0,

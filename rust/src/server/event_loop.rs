@@ -44,8 +44,8 @@ use std::time::Instant;
 
 use crate::log_warn;
 use crate::server::conn::{
-    aborted_line, drain_before_close, encode_chunk_line, encode_error, Conn, ConnLimits,
-    ConnState, FrontendStats, STREAM_TERMINATOR,
+    drain_before_close, encode_error, stream_abort_frame, Conn, ConnLimits, ConnState,
+    FrontendStats,
 };
 use crate::server::router::{EngineRouter, StreamFrame};
 use crate::util::spsc;
@@ -162,6 +162,10 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
     }
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut events: Vec<Event> = Vec::new();
+    // per-ring closed latch: a ring closing means its replica thread is
+    // gone (panic, fault kill, or drain) — the close *transition* is when
+    // this shard must end any stream that replica was feeding
+    let mut ring_closed = vec![false; rings.len()];
     let mut listener_registered = listener.is_some();
     let mut accept_backoff = 0u32;
     let mut handoff_closed = false;
@@ -326,26 +330,45 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
         // out buffer (frames addressed to reaped connections are
         // discarded — the replica produces briefly past a client's death)
         let mut rings_open = rings.is_empty();
-        for ring in rings.iter_mut() {
+        for (ri, ring) in rings.iter_mut().enumerate() {
             stats.note_ring_depth(ring.len());
             while let Some(frame) = ring.try_pop() {
                 if let Some(c) = conns.get_mut(&frame.conn) {
+                    c.ring_src = Some(ri);
                     c.deliver_frame(&frame.bytes, frame.done);
                 }
             }
-            if !ring.is_closed() {
+            if ring.is_closed() {
+                if !ring_closed[ri] {
+                    ring_closed[ri] = true;
+                    // replica `ri` is gone (panic, injected kill, or
+                    // drain): any stream it was mid-delivery on will never
+                    // see its terminal frame from this ring — end those
+                    // explicitly rather than truncating mid-body.  Streams
+                    // fed by other replicas are untouched, and the router
+                    // may also route an abort via a survivor; the
+                    // `terminated` latch in deliver_frame dedupes.
+                    for c in conns.values_mut() {
+                        if c.ring_src == Some(ri)
+                            && matches!(
+                                c.state,
+                                ConnState::StreamingRing { terminated: false }
+                            )
+                        {
+                            c.deliver_frame(&stream_abort_frame(), true);
+                        }
+                    }
+                }
+            } else {
                 rings_open = true;
             }
         }
         if !rings_open {
-            // every replica exited without a terminal frame for these
-            // streams (abort/panic): end them explicitly rather than
-            // truncating mid-body
+            // every replica exited: also end streams that never received a
+            // first frame (no ring_src yet) — nobody is left to feed them
             for c in conns.values_mut() {
                 if matches!(c.state, ConnState::StreamingRing { terminated: false }) {
-                    let mut bytes = encode_chunk_line(&aborted_line());
-                    bytes.extend_from_slice(STREAM_TERMINATOR);
-                    c.deliver_frame(&bytes, true);
+                    c.deliver_frame(&stream_abort_frame(), true);
                 }
             }
         }

@@ -42,4 +42,5 @@ pub mod client;
 mod conn;
 mod event_loop;
 pub mod http;
+pub mod journal;
 pub mod router;

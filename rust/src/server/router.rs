@@ -30,40 +30,67 @@
 //!   request (prompt + output budget), instead of the fewest in-flight
 //!   requests.  Request counts are blind to sequence length; blocks are
 //!   the resource that actually saturates.
-//! * **Work stealing** ([`EngineRouter::with_options`]): a balancer thread
-//!   watches the load cells; when a replica goes idle while a sibling
-//!   still has ≥2 queued (not in-flight) requests, it migrates untouched
-//!   queued requests — with their reply channels — to the idle replica,
-//!   fixing the drain-tail imbalance.  Only never-run sequences migrate,
-//!   so placement can never change a request's output tokens.
+//! * **Work stealing** ([`EngineRouter::with_options`]): the supervisor
+//!   thread watches the load cells; when a replica goes idle while a
+//!   sibling still has ≥2 queued (not in-flight) requests, it migrates
+//!   untouched queued requests to the idle replica, fixing the drain-tail
+//!   imbalance.  Only never-run sequences migrate, so placement can never
+//!   change a request's output tokens.
+//!
+//! # Failure model & recovery
+//!
+//! Every routed request lives in a router-global **ledger**
+//! (`id → {durable request copy, reply channel, owning replica}`) from
+//! dispatch until its terminal event is delivered.  Replica threads run
+//! under `catch_unwind`; a supervisor thread (always running, even with
+//! stealing disabled) detects
+//!
+//! * **death** — the thread panicked or exited (its `alive` flag drops),
+//! * **wedging** — the replica holds work but has neither heartbeat nor
+//!   fresh dispatch inside the configured stall window
+//!   ([`RouterOptions::stall_ms`]; `0` disables stall detection),
+//!
+//! marks the replica failed in its load cell (surfaced as
+//! [`ReplicaLoad::failed`] and on `/v1/metrics`), and drains its ledger
+//! entries: blocking requests and never-progressed streams are resubmitted
+//! to survivors with their accrued queue wait carried over
+//! (`Request::waited`), while streams that already delivered bytes get a
+//! clean `FinishReason::Aborted` terminal — **every client observes
+//! exactly one terminal event, never a hang**.  Routing and stealing skip
+//! failed replicas; with no survivors, clients get aborted terminals
+//! rather than silence.  Fault injection for tests threads through
+//! [`RouterOptions::fault`] (see [`crate::util::fault::FaultPlan`]).
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::config::RoutePolicy;
 use crate::engine::engine::{Engine, ReplicaLoad, StepOutcome};
 use crate::engine::metrics::{MetricsSnapshot, DEFAULT_QUANTILES};
-use crate::engine::request::{FinishedRequest, Request};
+use crate::engine::request::{FinishReason, FinishedRequest, Request};
 use crate::engine::step::StepReport;
+use crate::log_warn;
+use crate::util::fault::{ArmedFaults, FaultPlan};
 use crate::util::json::Json;
 use crate::util::spsc;
 use crate::util::sys::Waker;
-use crate::log_warn;
 
-use super::conn::{stream_delta_frame, stream_done_frame};
+use super::conn::{stream_abort_frame, stream_delta_frame, stream_done_frame};
+use super::journal::Journal;
 
 /// Hook invoked with every routed request right after its router-global
 /// id is assigned and before it is dispatched to a replica — the serving
 /// stack's trace-record point (`--record`; see
-/// [`crate::eval::trace::TraceRecorder`]).  Fires on the submitting
-/// thread, so implementations should stay cheap (the trace recorder does
-/// one buffered line write).
+/// [`crate::eval::trace::TraceRecorder`] and the write-ahead
+/// [`Journal`]).  Fires on the submitting thread, so implementations
+/// should stay cheap (both recorders do one buffered line write).
 pub type RecordHook = Box<dyn Fn(&Request) + Send + Sync>;
 
 /// One event on a streaming request's channel.
@@ -133,8 +160,8 @@ pub(crate) struct StreamFrame {
 
 /// Where a ring-delivered stream's frames go: which loop shard consumes
 /// them and which connection (by token) they belong to.  Replica-neutral,
-/// so work stealing migrates ring streams like any other reply channel —
-/// every replica holds a producer to every shard.
+/// so work stealing and failover migrate ring streams like any other
+/// reply channel — every replica holds a producer to every shard.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct RingTarget {
     /// Index of the event-loop shard that owns the connection.
@@ -252,9 +279,9 @@ fn flush_shards_before_exit(shards: &mut [ShardTx]) {
     }
 }
 
-/// The reply channel of a request in flight on a replica — shipped along
-/// with the request when the balancer migrates it to another replica, so
-/// stealing is invisible to the waiting client.
+/// The reply channel of a request in flight — held in the router-global
+/// ledger so stealing and failover migrate it invisibly to the waiting
+/// client.
 pub(crate) enum ReplyTo {
     /// Blocking submitter waiting for the one [`FinishedRequest`].
     Blocking(Notify<FinishedRequest>),
@@ -265,28 +292,93 @@ pub(crate) enum ReplyTo {
     Ring(RingTarget),
 }
 
-/// Messages into a replica's engine thread.
+/// One routed request's ledger entry: everything needed to deliver its
+/// terminal event — or to replay it on another replica if its current
+/// owner dies.  Lives from dispatch until the terminal event is sent.
+struct LedgerEntry {
+    /// Durable copy of the request (replicas get clones); failover
+    /// resubmits from this.
+    req: Request,
+    /// Where the terminal event (and stream deltas) go.
+    reply: ReplyTo,
+    /// Index of the replica currently responsible for running the
+    /// request.  Only the owner delivers; a stale owner's deliveries are
+    /// ignored, which is what makes migration race-free.
+    replica: usize,
+    /// Whether any stream bytes reached the client.  A progressed stream
+    /// cannot be replayed (the prefix is already on the wire), so failover
+    /// aborts it instead of resubmitting.
+    progressed: bool,
+    /// When the request was (last) handed to its owning replica; accrued
+    /// wall-clock wait is folded into `req.waited` on migration.
+    enqueued: Instant,
+}
+
+/// State shared between dispatchers, replica threads, and the supervisor.
+struct RouterShared {
+    /// The request ledger: every in-flight request, by router-global id.
+    ledger: Mutex<HashMap<u64, LedgerEntry>>,
+    /// Write-ahead journal, when `--record` is active (completion markers
+    /// are written from whichever thread delivers the terminal event).
+    journal: Mutex<Option<Arc<Journal>>>,
+    /// Replicas declared failed by the supervisor so far.
+    failures: AtomicU64,
+    /// Requests re-dispatched to a survivor after their replica failed.
+    resubmitted: AtomicU64,
+    /// Router birth; heartbeat/dispatch stamps are milliseconds since
+    /// this.
+    epoch: Instant,
+    /// Armed fault-injection schedule (tests only; `None` in production).
+    faults: Option<ArmedFaults>,
+    /// Stall window in milliseconds for wedge detection; `0` disables it
+    /// (panic/death detection stays on).
+    stall_ms: u64,
+}
+
+impl RouterShared {
+    fn new(stall_ms: u64, faults: Option<ArmedFaults>) -> RouterShared {
+        RouterShared {
+            ledger: Mutex::new(HashMap::new()),
+            journal: Mutex::new(None),
+            failures: AtomicU64::new(0),
+            resubmitted: AtomicU64::new(0),
+            epoch: Instant::now(),
+            faults,
+            stall_ms,
+        }
+    }
+
+    /// Milliseconds elapsed since the router was built.
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Clone the journal handle (cheap; taken once per delivery batch).
+    fn journal(&self) -> Option<Arc<Journal>> {
+        self.journal.lock().expect("journal lock").clone()
+    }
+}
+
+/// Messages into a replica's engine thread.  Reply routing is looked up
+/// in the ledger, so submissions carry only the request.
 pub(crate) enum EngineMsg {
-    /// Submit a request; the finished result is sent on the reply channel.
-    Submit(Request, Notify<FinishedRequest>),
-    /// Submit a request whose per-step token deltas (and terminal summary)
-    /// are forwarded on the reply channel as they happen.
-    SubmitStreaming(Request, Notify<StreamEvent>),
-    /// Submit a request whose deltas are chunk-encoded on this thread and
-    /// pushed to the target shard's SPSC ring (the event-loop streaming
-    /// path; see [`StreamFrame`]).
-    SubmitStreamingRing(Request, RingTarget),
+    /// Submit a request (fresh, or a failover resubmission).
+    Submit(Request),
+    /// Work stealing, thief side: adopt migrated requests (their ledger
+    /// entries were re-owned by the supervisor before this was sent).
+    SubmitStolen(Vec<Request>),
     /// Install this replica's per-shard ring producers.  Sent once per
     /// replica before the front-end starts accepting, so channel FIFO
-    /// guarantees it precedes every `SubmitStreamingRing`.
+    /// guarantees it precedes every ring submission.
     AttachShards(Vec<ShardTx>),
+    /// Write an aborted terminal frame for each ring target — failover's
+    /// path for terminating progressed ring streams whose owning replica
+    /// died (any live replica can produce to any shard).
+    AbortRings(Vec<RingTarget>),
     /// Work stealing, victim side: migrate up to `max` untouched waiting
-    /// requests (with their reply channels) back to the balancer.  Replies
-    /// with an empty batch when nothing is stealable.
-    Steal(usize, Sender<Vec<(Request, ReplyTo)>>),
-    /// Work stealing, thief side: adopt migrated requests, re-registering
-    /// their reply channels.
-    SubmitStolen(Vec<(Request, ReplyTo)>),
+    /// requests back to the supervisor.  Replies with an empty batch when
+    /// nothing is stealable.
+    Steal(usize, Sender<Vec<Request>>),
     /// Snapshot this replica's metrics, pre-reduced to scalars plus the
     /// requested percentiles (never the full retained request window).
     Metrics(Vec<f64>, Sender<MetricsSnapshot>),
@@ -303,11 +395,20 @@ fn projected_tokens(req: &Request) -> usize {
     req.prompt.len() + req.params.max_tokens
 }
 
+/// Decrement an in-flight gauge, saturating at zero.  The supervisor
+/// zeroes a failed replica's gauge wholesale, which can race a delivery
+/// that already removed its ledger entry; underflowing to `usize::MAX`
+/// would poison every load-based decision, so lose the decrement instead.
+fn dec_load(load: &AtomicUsize) {
+    let _ = load.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1));
+}
+
 /// Lock-free per-replica load gauges shared between the replica thread
-/// (publisher), the router's submit path (KV-aware pick), and the balancer
-/// (steal trigger).  Staleness is bounded by one engine step; the
-/// `channel_*` pair covers the gap between a submit and the replica's next
-/// intake, so a burst of submissions is visible to placement immediately.
+/// (publisher), the router's submit path (KV-aware pick), and the
+/// supervisor (steal trigger + failure detection).  Staleness is bounded
+/// by one engine step; the `channel_*` pair covers the gap between a
+/// submit and the replica's next intake, so a burst of submissions is
+/// visible to placement immediately.
 pub(crate) struct LoadCell {
     /// Tokens per KV block (immutable; set at construction).
     block_size: usize,
@@ -322,10 +423,14 @@ pub(crate) struct LoadCell {
     /// Projected token demand of the engine's waiting queue.
     queued_prompt_tokens: AtomicUsize,
     /// Requests sent to the replica's channel but not yet taken in
-    /// (router/balancer adds, replica subtracts on intake).
+    /// (router/supervisor adds, replica subtracts on intake).
     channel_requests: AtomicUsize,
     /// Projected token demand of the channel backlog.
     channel_tokens: AtomicUsize,
+    /// Set (once, by the supervisor) when the replica is declared dead or
+    /// wedged.  Routing, stealing, and metrics scrapes skip failed
+    /// replicas; the replica thread itself exits on observing the flag.
+    failed: AtomicBool,
 }
 
 impl LoadCell {
@@ -340,10 +445,12 @@ impl LoadCell {
             queued_prompt_tokens: AtomicUsize::new(snap.queued_prompt_tokens),
             channel_requests: AtomicUsize::new(0),
             channel_tokens: AtomicUsize::new(0),
+            failed: AtomicBool::new(false),
         }
     }
 
-    /// Replica thread: publish fresh engine-truth gauges.
+    /// Replica thread: publish fresh engine-truth gauges.  Never touches
+    /// the `failed` flag — that belongs to the supervisor.
     fn publish(&self, snap: &ReplicaLoad) {
         self.in_flight.store(snap.in_flight, Ordering::SeqCst);
         self.kv_used_blocks.store(snap.kv_used_blocks, Ordering::SeqCst);
@@ -353,7 +460,7 @@ impl LoadCell {
             .store(snap.queued_prompt_tokens, Ordering::SeqCst);
     }
 
-    /// Router/balancer: a request was sent to the replica's channel.
+    /// Router/supervisor: a request was sent to the replica's channel.
     fn on_enqueue(&self, req: &Request) {
         self.channel_requests.fetch_add(1, Ordering::SeqCst);
         self.channel_tokens
@@ -367,10 +474,20 @@ impl LoadCell {
             .fetch_sub(projected_tokens(req), Ordering::SeqCst);
     }
 
-    /// Queue depth the balancer sees: engine waiting + channel backlog.
+    /// Queue depth the supervisor sees: engine waiting + channel backlog.
     fn queued_total(&self) -> usize {
         self.queued_requests.load(Ordering::SeqCst)
             + self.channel_requests.load(Ordering::SeqCst)
+    }
+
+    /// Supervisor: declare this replica failed (one-way).
+    fn mark_failed(&self) {
+        self.failed.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether the supervisor has declared this replica failed.
+    fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::SeqCst)
     }
 
     /// Projected free blocks after this replica absorbs its queued work,
@@ -394,133 +511,246 @@ impl LoadCell {
             queued_requests: self.queued_total(),
             queued_prompt_tokens: self.queued_prompt_tokens.load(Ordering::SeqCst)
                 + self.channel_tokens.load(Ordering::SeqCst),
+            failed: self.is_failed(),
         }
     }
 }
 
-/// One engine replica: channel + thread + in-flight counter + load gauges.
+/// One engine replica: channel + thread + in-flight counter + load gauges
+/// + liveness instrumentation for the supervisor.
 struct Replica {
     tx: Sender<EngineMsg>,
     load: Arc<AtomicUsize>,
     cell: Arc<LoadCell>,
+    /// Cleared by the thread wrapper when the replica loop returns or
+    /// panics — the supervisor's death signal.
+    alive: Arc<AtomicBool>,
+    /// Last top-of-loop stamp (ms since router epoch) from the replica
+    /// thread — the supervisor's wedge signal.
+    heartbeat: Arc<AtomicU64>,
+    /// Last time (ms since router epoch) work was handed to this replica;
+    /// guards wedge detection against flagging a replica that was idle
+    /// (heartbeat legitimately stale) when work just arrived.
+    last_dispatch: Arc<AtomicU64>,
     thread: Mutex<Option<JoinHandle<()>>>,
 }
 
-/// Deliver finished requests to their waiting reply channels — blocking
+/// The aborted-terminal summary synthesized for a request that cannot be
+/// completed (its replica died with no survivors, or its stream already
+/// progressed and cannot be replayed).
+fn aborted_fin(req: &Request) -> FinishedRequest {
+    FinishedRequest {
+        id: req.id,
+        output: Vec::new(),
+        reason: FinishReason::Aborted,
+        arrival: req.arrival,
+        finished_at: req.arrival,
+        first_token_at: req.arrival,
+        rounds: 0,
+        drafted: 0,
+        accepted: 0,
+        preemptions: 0,
+    }
+}
+
+/// Deliver one aborted terminal: journal the completion marker and send
+/// the summary on the reply channel.  Ring streams cannot be aborted from
+/// an arbitrary thread (frames must come from a replica-owned producer),
+/// so their targets are collected for the caller to route via
+/// [`EngineMsg::AbortRings`] — or to leave to ring-close synthesis in the
+/// shard when no replica survives.
+fn deliver_abort(
+    entry: LedgerEntry,
+    journal: &Option<Arc<Journal>>,
+    ring_aborts: &mut Vec<RingTarget>,
+) {
+    if let Some(j) = journal {
+        j.record_complete(entry.req.id, "aborted");
+    }
+    let fin = aborted_fin(&entry.req);
+    match entry.reply {
+        ReplyTo::Blocking(tx) => {
+            let _ = tx.send(fin);
+        }
+        ReplyTo::Streaming(tx) => {
+            let _ = tx.send(StreamEvent::Done(fin));
+        }
+        ReplyTo::Ring(target) => ring_aborts.push(target),
+    }
+}
+
+/// Deliver finished requests to their ledger reply channels — blocking
 /// submitters get the [`FinishedRequest`], streaming subscribers get the
 /// terminal [`StreamEvent::Done`] (which also closes their channel), and
 /// ring streams get a terminal [`StreamFrame`] carrying the done summary
-/// plus the chunked-encoding terminator.
+/// plus the chunked-encoding terminator.  Only entries this replica still
+/// *owns* are delivered: after a failover migrated a request elsewhere,
+/// the stale owner's completion is discarded (the new owner will deliver
+/// its own), so clients can never see two terminals.
 fn deliver(
     engine: &mut Engine,
-    pending: &mut HashMap<u64, Notify<FinishedRequest>>,
-    streams: &mut HashMap<u64, Notify<StreamEvent>>,
-    ring_streams: &mut HashMap<u64, RingTarget>,
+    my_idx: usize,
+    shared: &RouterShared,
     shards: &mut [ShardTx],
     load: &AtomicUsize,
 ) {
-    for fin in engine.take_finished() {
-        load.fetch_sub(1, Ordering::SeqCst);
-        if let Some(reply) = pending.remove(&fin.id) {
-            let _ = reply.send(fin);
-        } else if let Some(reply) = streams.remove(&fin.id) {
-            let _ = reply.send(StreamEvent::Done(fin));
-        } else if let Some(target) = ring_streams.remove(&fin.id) {
-            if let Some(shard) = shards.get_mut(target.shard) {
-                shard.send(StreamFrame {
-                    conn: target.conn,
-                    bytes: stream_done_frame(&fin),
-                    done: true,
-                });
+    let fins = engine.take_finished();
+    if fins.is_empty() {
+        return;
+    }
+    let journal = shared.journal();
+    for fin in fins {
+        let entry = {
+            let mut ledger = shared.ledger.lock().expect("ledger lock");
+            match ledger.get(&fin.id) {
+                Some(e) if e.replica == my_idx => ledger.remove(&fin.id),
+                _ => None, // migrated off this replica; not ours to deliver
+            }
+        };
+        let Some(entry) = entry else { continue };
+        dec_load(load);
+        if let Some(j) = &journal {
+            j.record_complete(fin.id, fin.reason.name());
+        }
+        match entry.reply {
+            ReplyTo::Blocking(tx) => {
+                let _ = tx.send(fin);
+            }
+            ReplyTo::Streaming(tx) => {
+                let _ = tx.send(StreamEvent::Done(fin));
+            }
+            ReplyTo::Ring(target) => {
+                if let Some(shard) = shards.get_mut(target.shard) {
+                    shard.send(StreamFrame {
+                        conn: target.conn,
+                        bytes: stream_done_frame(&fin),
+                        done: true,
+                    });
+                }
             }
         }
-    }
-    // orphaned waiters (should not happen): drop their channels so callers
-    // error out instead of hanging — and release their load slots so
-    // least-loaded routing does not shun this replica forever
-    if engine.pending() == 0
-        && (!pending.is_empty() || !streams.is_empty() || !ring_streams.is_empty())
-    {
-        load.fetch_sub(
-            pending.len() + streams.len() + ring_streams.len(),
-            Ordering::SeqCst,
-        );
-        pending.clear();
-        streams.clear();
-        ring_streams.clear();
     }
 }
 
 /// Forward one step's accepted-token deltas to their streaming
-/// subscribers.  Takes the report by value so the token vectors move into
-/// the channel instead of being cloned on the per-step hot path.  A
-/// hung-up subscriber is dropped from the map — its request still runs to
-/// completion and is accounted normally; only the forwarding stops.  Ring
-/// streams are chunk-encoded here, on the replica thread, so the shard
-/// loop only ever appends ready-made bytes.
+/// subscribers, looked up in the ledger.  Takes the report by value so
+/// the token vectors move into the channel instead of being cloned on the
+/// per-step hot path.  Marks entries `progressed` on the first delivered
+/// bytes — the point after which failover must abort rather than replay.
+/// A hung-up subscriber stops receiving but its request still runs to
+/// completion and is accounted normally.  Ring frames are chunk-encoded
+/// here, on the replica thread, so the shard loop only ever appends
+/// ready-made bytes.
 fn forward_deltas(
     report: StepReport,
-    streams: &mut HashMap<u64, Notify<StreamEvent>>,
-    ring_streams: &HashMap<u64, RingTarget>,
+    my_idx: usize,
+    shared: &RouterShared,
     shards: &mut [ShardTx],
 ) {
+    if report.deltas.is_empty() {
+        return;
+    }
+    let mut ledger = shared.ledger.lock().expect("ledger lock");
     for d in report.deltas {
-        if let Some(&target) = ring_streams.get(&d.id) {
-            if let Some(shard) = shards.get_mut(target.shard) {
-                shard.send(StreamFrame {
-                    conn: target.conn,
-                    bytes: stream_delta_frame(&d.tokens, d.t),
-                    done: false,
-                });
-            }
+        let Some(entry) = ledger.get_mut(&d.id) else {
             continue;
+        };
+        if entry.replica != my_idx {
+            continue; // migrated away; the new owner forwards
         }
-        let dead = match streams.get(&d.id) {
-            Some(tx) => tx
+        let progressed = match &entry.reply {
+            ReplyTo::Streaming(tx) => tx
                 .send(StreamEvent::Delta {
                     tokens: d.tokens,
                     t: d.t,
                 })
-                .is_err(),
-            None => false,
+                .is_ok(),
+            ReplyTo::Ring(target) => {
+                let target = *target;
+                match shards.get_mut(target.shard) {
+                    Some(shard) => {
+                        shard.send(StreamFrame {
+                            conn: target.conn,
+                            bytes: stream_delta_frame(&d.tokens, d.t),
+                            done: false,
+                        });
+                        true
+                    }
+                    None => false,
+                }
+            }
+            ReplyTo::Blocking(_) => false, // nothing reaches the client early
         };
-        if dead {
-            streams.remove(&d.id);
+        if progressed {
+            entry.progressed = true;
         }
     }
 }
 
 /// A replica's engine thread: interleave request intake with engine steps
 /// so new arrivals join the continuous batch.  Publishes fresh load gauges
-/// into `cell` after every intake round and every step, so the router's
-/// KV-aware pick and the balancer's steal trigger see at-most-one-step-old
-/// truth.
+/// into `cell` after every intake round and every step, stamps `heartbeat`
+/// every iteration (the supervisor's wedge signal), honors injected
+/// kill/stall faults, and exits promptly once the supervisor declares it
+/// failed (its work has been migrated; delivering anything further would
+/// be a stale double).
 fn replica_loop(
     mut engine: Engine,
+    my_idx: usize,
     rx: Receiver<EngineMsg>,
     load: Arc<AtomicUsize>,
     cell: Arc<LoadCell>,
+    heartbeat: Arc<AtomicU64>,
+    shared: Arc<RouterShared>,
 ) {
-    let mut pending: HashMap<u64, Notify<FinishedRequest>> = HashMap::new();
-    let mut streams: HashMap<u64, Notify<StreamEvent>> = HashMap::new();
-    let mut ring_streams: HashMap<u64, RingTarget> = HashMap::new();
     let mut shards: Vec<ShardTx> = Vec::new();
     let mut draining = false;
     let mut consecutive_errors = 0u32;
     loop {
+        heartbeat.store(shared.now_ms(), Ordering::SeqCst);
+        if cell.is_failed() {
+            // the supervisor failed us over; our ledger entries belong to
+            // other replicas now
+            return;
+        }
+        if let Some(faults) = &shared.faults {
+            if let Some(stall) = faults.stall_due(my_idx) {
+                log_warn!("fault injection: stalling replica {my_idx} for {stall:?}");
+                // no heartbeat is published for the stall's duration (that
+                // is the wedge being simulated), but sleep in slices so a
+                // replica the supervisor has already failed over exits
+                // instead of pinning shutdown for the rest of the stall
+                let until = Instant::now() + stall;
+                while Instant::now() < until && !cell.is_failed() {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                continue;
+            }
+            if faults.kill_due(my_idx) {
+                panic!("fault injection: kill replica {my_idx}");
+            }
+        }
         // drain the message queue (blocking when idle, else non-blocking)
         let mut took_msg = false;
         loop {
             let idle = engine.pending() == 0
-                && pending.is_empty()
-                && streams.is_empty()
-                && ring_streams.is_empty()
+                && load.load(Ordering::SeqCst) == 0
                 && !shards.iter().any(|s| s.has_backlog())
                 && !draining;
             let msg = if idle {
-                match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => return, // router dropped: nothing in flight
+                if shared.faults.is_some() {
+                    // armed faults must fire even on an idle replica: poll
+                    // instead of parking forever in recv()
+                    match rx.recv_timeout(Duration::from_millis(5)) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => return,
+                    }
+                } else {
+                    match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => return, // router dropped: nothing in flight
+                    }
                 }
             } else {
                 match rx.try_recv() {
@@ -533,74 +763,47 @@ fn replica_loop(
                 }
             };
             match msg {
-                EngineMsg::Submit(req, reply) => {
+                EngineMsg::Submit(req) => {
                     cell.on_dequeue(&req);
-                    pending.insert(req.id, reply);
                     engine.submit(req);
                 }
-                EngineMsg::SubmitStreaming(req, reply) => {
-                    cell.on_dequeue(&req);
-                    streams.insert(req.id, reply);
-                    engine.submit(req);
-                }
-                EngineMsg::SubmitStreamingRing(req, target) => {
-                    cell.on_dequeue(&req);
-                    ring_streams.insert(req.id, target);
-                    engine.submit(req);
+                EngineMsg::SubmitStolen(batch) => {
+                    for req in batch {
+                        cell.on_dequeue(&req);
+                        engine.submit(req);
+                    }
                 }
                 EngineMsg::AttachShards(s) => {
                     shards = s;
                 }
-                EngineMsg::SubmitStolen(batch) => {
-                    for (req, reply) in batch {
-                        cell.on_dequeue(&req);
-                        match reply {
-                            ReplyTo::Blocking(tx) => {
-                                pending.insert(req.id, tx);
-                            }
-                            ReplyTo::Streaming(tx) => {
-                                streams.insert(req.id, tx);
-                            }
-                            ReplyTo::Ring(target) => {
-                                ring_streams.insert(req.id, target);
-                            }
+                EngineMsg::AbortRings(targets) => {
+                    for t in targets {
+                        if let Some(shard) = shards.get_mut(t.shard) {
+                            shard.send(StreamFrame {
+                                conn: t.conn,
+                                bytes: stream_abort_frame(),
+                                done: true,
+                            });
                         }
-                        engine.submit(req);
                     }
                 }
                 EngineMsg::Steal(max, reply) => {
-                    let mut batch: Vec<(Request, ReplyTo)> = Vec::new();
-                    for req in engine.steal_waiting(max) {
-                        let rt = if let Some(tx) = pending.remove(&req.id) {
-                            ReplyTo::Blocking(tx)
-                        } else if let Some(tx) = streams.remove(&req.id) {
-                            ReplyTo::Streaming(tx)
-                        } else if let Some(target) = ring_streams.remove(&req.id) {
-                            ReplyTo::Ring(target)
-                        } else {
-                            // no registered waiter (should not happen):
-                            // keep the request local rather than lose it
-                            engine.submit(req);
-                            continue;
-                        };
-                        batch.push((req, rt));
-                    }
-                    if let Err(std::sync::mpsc::SendError(batch)) = reply.send(batch)
-                    {
-                        // balancer vanished mid-steal: nothing may be lost —
-                        // restore the waiters and keep the work local
-                        for (req, rt) in batch {
-                            match rt {
-                                ReplyTo::Blocking(tx) => {
-                                    pending.insert(req.id, tx);
-                                }
-                                ReplyTo::Streaming(tx) => {
-                                    streams.insert(req.id, tx);
-                                }
-                                ReplyTo::Ring(target) => {
-                                    ring_streams.insert(req.id, target);
-                                }
+                    // ledger ownership stays with this replica until the
+                    // supervisor re-owns the entries; only the accrued
+                    // wait migrates into the durable copies here
+                    let batch = engine.steal_waiting(max);
+                    if !batch.is_empty() {
+                        let mut ledger = shared.ledger.lock().expect("ledger lock");
+                        for req in &batch {
+                            if let Some(e) = ledger.get_mut(&req.id) {
+                                e.req.waited = req.waited;
                             }
+                        }
+                    }
+                    if let Err(std::sync::mpsc::SendError(batch)) = reply.send(batch) {
+                        // supervisor vanished mid-steal: nothing may be
+                        // lost — keep the work local (ownership never left)
+                        for req in batch {
                             engine.submit(req);
                         }
                     }
@@ -611,14 +814,7 @@ fn replica_loop(
                 EngineMsg::Drain => draining = true,
                 EngineMsg::Abort => {
                     engine.abort_all();
-                    deliver(
-                        &mut engine,
-                        &mut pending,
-                        &mut streams,
-                        &mut ring_streams,
-                        &mut shards,
-                        &load,
-                    );
+                    deliver(&mut engine, my_idx, &shared, &mut shards, &load);
                     cell.publish(&engine.load_snapshot());
                     flush_shards_before_exit(&mut shards);
                     return;
@@ -644,12 +840,7 @@ fn replica_loop(
                         StepOutcome::Ran(report) => {
                             cell.publish(&report.load);
                             published = true;
-                            forward_deltas(
-                                report,
-                                &mut streams,
-                                &ring_streams,
-                                &mut shards,
-                            );
+                            forward_deltas(report, my_idx, &shared, &mut shards);
                             true
                         }
                     }
@@ -664,14 +855,7 @@ fn replica_loop(
                     consecutive_errors < 3
                 }
             };
-            deliver(
-                &mut engine,
-                &mut pending,
-                &mut streams,
-                &mut ring_streams,
-                &mut shards,
-                &load,
-            );
+            deliver(&mut engine, my_idx, &shared, &mut shards, &load);
             if !progressed && engine.pending() > 0 {
                 // Stuck, not just slow.  Two causes, two remedies — either
                 // way the replica stays up instead of busy-spinning and
@@ -696,14 +880,7 @@ fn replica_loop(
                         );
                     }
                 }
-                deliver(
-                    &mut engine,
-                    &mut pending,
-                    &mut streams,
-                    &mut ring_streams,
-                    &mut shards,
-                    &load,
-                );
+                deliver(&mut engine, my_idx, &shared, &mut shards, &load);
                 published = false; // aborts changed queue/KV state
             }
             if !published {
@@ -721,65 +898,302 @@ fn replica_loop(
             if !pump_shards(&mut shards) {
                 std::thread::sleep(Duration::from_micros(100));
             }
+        } else if load.load(Ordering::SeqCst) > 0 {
+            // a dispatcher bumped our gauge but its Submit has not landed
+            // yet (it sends after the increment); yield briefly instead of
+            // hot-spinning through the gap
+            std::thread::sleep(Duration::from_micros(50));
         }
     }
 }
 
-/// How often the balancer re-examines the load cells while the fleet has
-/// work in flight.  Cheap (a handful of atomic loads per replica), so it
-/// can afford to be much finer than a round.
+/// How often the supervisor re-examines the load cells while the fleet
+/// has work in flight.  Cheap (a handful of atomic loads per replica), so
+/// it can afford to be much finer than a round.
 const STEAL_POLL: Duration = Duration::from_micros(200);
 
-/// Balancer poll interval while the fleet is completely idle — no point
+/// Supervisor poll interval while the fleet is completely idle — no point
 /// burning 5k wake-ups/second on a server at zero traffic.  Worst-case
-/// added steal latency after an idle period is one of these.
+/// added steal/detection latency after an idle period is one of these.
 const STEAL_POLL_IDLE: Duration = Duration::from_millis(2);
 
 /// Minimum queued (not in-flight) requests on a replica before the
-/// balancer migrates work off it: a queue of one is the FCFS head and is
-/// about to run locally anyway.
+/// supervisor migrates work off it: a queue of one is the FCFS head and
+/// is about to run locally anyway.
 const STEAL_MIN_QUEUE: usize = 2;
 
-/// The balancer thread's per-replica handle (its own channel clone +
-/// shared counters; the router's `Replica` structs stay single-owner).
-struct BalancerView {
+/// How long the supervisor waits for a steal victim's reply before
+/// abandoning the round.  A victim that cannot answer within this is
+/// stalled; blocking the supervisor on it would also stall failure
+/// detection — the very thing that will rescue the victim's work.
+const STEAL_REPLY_TIMEOUT: Duration = Duration::from_millis(200);
+
+/// How long a metrics scrape waits per replica before giving up on it
+/// (a wedged replica the supervisor has not condemned yet must not hang
+/// `/v1/metrics` forever).
+const METRICS_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The supervisor thread's per-replica handle (its own channel clone +
+/// shared gauges; the router's `Replica` structs stay single-owner).
+struct SupervisorView {
     tx: Sender<EngineMsg>,
     load: Arc<AtomicUsize>,
     cell: Arc<LoadCell>,
+    alive: Arc<AtomicBool>,
+    heartbeat: Arc<AtomicU64>,
+    last_dispatch: Arc<AtomicU64>,
 }
 
-/// Work-stealing balancer: poll the load cells; when a replica sits idle
-/// while a sibling has a queue, migrate untouched queued requests (and
-/// their reply channels) from the deepest queue to the idle replicas.
-/// Runs until the router stops it (always before drain/abort, so replica
-/// threads are guaranteed alive and responsive here).
-fn balancer_loop(
-    views: Vec<BalancerView>,
+/// Route a batch of aborted-ring terminals through any live replica (all
+/// replicas hold producers to every shard).  With no survivors the frames
+/// cannot be produced here — the dead producers' closed rings make the
+/// shard synthesize the aborted terminal itself.
+fn send_ring_aborts(views: &[SupervisorView], targets: Vec<RingTarget>) {
+    let mut targets = targets;
+    if targets.is_empty() {
+        return;
+    }
+    for v in views {
+        if v.cell.is_failed() || !v.alive.load(Ordering::SeqCst) {
+            continue;
+        }
+        match v.tx.send(EngineMsg::AbortRings(targets)) {
+            Ok(()) => return,
+            Err(std::sync::mpsc::SendError(msg)) => {
+                let EngineMsg::AbortRings(t) = msg else {
+                    unreachable!("send returns the message it was given")
+                };
+                targets = t;
+            }
+        }
+    }
+}
+
+/// Place a stolen batch on the first candidate replica that accepts it,
+/// re-owning the ledger entries and moving load/cell accounting per
+/// attempt.  When no candidate accepts (every replica is dead), the
+/// batch's clients receive clean aborted terminals and the entries leave
+/// the ledger — stolen work is never silently dropped.  Returns the index
+/// that accepted, or `None`.
+fn place_stolen(
+    batch: Vec<Request>,
+    candidates: &[usize],
+    views: &[SupervisorView],
+    shared: &RouterShared,
+) -> Option<usize> {
+    let mut batch = batch;
+    let n = batch.len();
+    for &j in candidates {
+        let v = &views[j];
+        if v.cell.is_failed() || !v.alive.load(Ordering::SeqCst) {
+            continue;
+        }
+        {
+            // claim ownership BEFORE the send: from here the receiver (and
+            // only the receiver) delivers these requests
+            let mut ledger = shared.ledger.lock().expect("ledger lock");
+            for req in &batch {
+                if let Some(e) = ledger.get_mut(&req.id) {
+                    e.replica = j;
+                    e.enqueued = Instant::now();
+                }
+            }
+        }
+        v.load.fetch_add(n, Ordering::SeqCst);
+        for req in &batch {
+            v.cell.on_enqueue(req);
+        }
+        v.last_dispatch.store(shared.now_ms(), Ordering::SeqCst);
+        match v.tx.send(EngineMsg::SubmitStolen(batch)) {
+            Ok(()) => return Some(j),
+            Err(std::sync::mpsc::SendError(msg)) => {
+                // candidate died under us: undo its accounting and try the
+                // next one with the recovered batch
+                for _ in 0..n {
+                    dec_load(&v.load);
+                }
+                let EngineMsg::SubmitStolen(b) = msg else {
+                    unreachable!("send returns the message it was given")
+                };
+                for req in &b {
+                    v.cell.on_dequeue(req);
+                }
+                batch = b;
+            }
+        }
+    }
+    // nobody can run the batch: terminate its clients cleanly
+    let journal = shared.journal();
+    let mut ring_aborts = Vec::new();
+    let entries: Vec<LedgerEntry> = {
+        let mut ledger = shared.ledger.lock().expect("ledger lock");
+        batch.iter().filter_map(|req| ledger.remove(&req.id)).collect()
+    };
+    for entry in entries {
+        deliver_abort(entry, &journal, &mut ring_aborts);
+    }
+    send_ring_aborts(views, ring_aborts);
+    None
+}
+
+/// Declare replica `i` failed and rescue its ledger entries: blocking
+/// requests and never-progressed streams are resubmitted round-robin to
+/// survivors (accrued wait carried in `Request::waited`); progressed
+/// streams get a clean aborted terminal (their byte prefix is already on
+/// the wire and cannot be replayed).  With no survivors everything gets
+/// the aborted terminal.  Clients never hang either way.
+fn fail_replica(i: usize, views: &[SupervisorView], shared: &RouterShared) {
+    views[i].cell.mark_failed();
+    shared.failures.fetch_add(1, Ordering::SeqCst);
+    let drained: Vec<LedgerEntry> = {
+        let mut ledger = shared.ledger.lock().expect("ledger lock");
+        let ids: Vec<u64> = ledger
+            .iter()
+            .filter(|(_, e)| e.replica == i)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.iter()
+            .map(|id| ledger.remove(id).expect("drained id present"))
+            .collect()
+    };
+    views[i].load.store(0, Ordering::SeqCst);
+    log_warn!(
+        "replica {i} failed; rescuing {} in-flight request(s)",
+        drained.len()
+    );
+    if drained.is_empty() {
+        return;
+    }
+    let survivors: Vec<usize> = (0..views.len())
+        .filter(|&j| {
+            j != i && views[j].alive.load(Ordering::SeqCst) && !views[j].cell.is_failed()
+        })
+        .collect();
+    let journal = shared.journal();
+    let mut ring_aborts: Vec<RingTarget> = Vec::new();
+    let mut next = 0usize;
+    let mut rescued = 0u64;
+    for mut entry in drained {
+        let replayable = matches!(&entry.reply, ReplyTo::Blocking(_)) || !entry.progressed;
+        if !replayable || survivors.is_empty() {
+            deliver_abort(entry, &journal, &mut ring_aborts);
+            continue;
+        }
+        // carry the accrued wait so latency accounting survives the
+        // migration (a wall-clock approximation of the engine clock — the
+        // two advance together under real serving)
+        entry.req.waited += entry.enqueued.elapsed().as_secs_f64();
+        let id = entry.req.id;
+        let mut pending = Some(entry);
+        for off in 0..survivors.len() {
+            let j = survivors[(next + off) % survivors.len()];
+            let v = &views[j];
+            if v.cell.is_failed() || !v.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut e = pending.take().expect("entry in hand");
+            e.replica = j;
+            e.enqueued = Instant::now();
+            let req = e.req.clone();
+            // reinsert BEFORE the send so the new owner finds its entry
+            shared.ledger.lock().expect("ledger lock").insert(id, e);
+            v.load.fetch_add(1, Ordering::SeqCst);
+            v.cell.on_enqueue(&req);
+            v.last_dispatch.store(shared.now_ms(), Ordering::SeqCst);
+            if v.tx.send(EngineMsg::Submit(req)).is_ok() {
+                rescued += 1;
+                next = (next + off + 1) % survivors.len();
+                break;
+            }
+            // this survivor died too: reclaim the entry and keep trying
+            dec_load(&v.load);
+            let e = shared
+                .ledger
+                .lock()
+                .expect("ledger lock")
+                .remove(&id)
+                .expect("reclaim unsent entry");
+            v.cell.on_dequeue(&e.req);
+            pending = Some(e);
+        }
+        if let Some(e) = pending {
+            deliver_abort(e, &journal, &mut ring_aborts);
+        }
+    }
+    shared.resubmitted.fetch_add(rescued, Ordering::SeqCst);
+    send_ring_aborts(views, ring_aborts);
+}
+
+/// The supervisor thread: failure detection plus (optionally) the
+/// work-stealing balancer, sharing one polling loop over the load cells.
+///
+/// * **Detection** — a replica whose thread exited (`alive` dropped), or
+///   one holding work with neither heartbeat nor fresh dispatch inside
+///   the stall window, is failed over via [`fail_replica`].
+/// * **Stealing** — when a replica sits idle while a sibling has a queue,
+///   untouched queued requests migrate from the deepest queue to the idle
+///   replicas (never through a failed replica, in either direction).
+///
+/// Runs until the router stops it (always before drain/abort, so healthy
+/// replica threads are guaranteed alive and responsive here).
+fn supervisor_loop(
+    views: Vec<SupervisorView>,
+    shared: Arc<RouterShared>,
+    steal: bool,
     stop: Arc<AtomicBool>,
     steals: Arc<AtomicU64>,
 ) {
     while !stop.load(Ordering::SeqCst) {
         // fine-grained polling only while someone has work; idle fleets
         // back off so the thread costs ~nothing at zero traffic
-        let busy = views
-            .iter()
-            .any(|v| v.load.load(Ordering::SeqCst) > 0);
+        let busy = views.iter().any(|v| v.load.load(Ordering::SeqCst) > 0);
         std::thread::sleep(if busy { STEAL_POLL } else { STEAL_POLL_IDLE });
-        // idle replicas: nothing router-tracked at all (queued or running)
-        let idle: Vec<usize> = views
+        // --- failure detection ---
+        let now = shared.now_ms();
+        for (i, v) in views.iter().enumerate() {
+            if v.cell.is_failed() {
+                continue;
+            }
+            let dead = !v.alive.load(Ordering::SeqCst);
+            let wedged = shared.stall_ms > 0
+                && v.load.load(Ordering::SeqCst) > 0
+                && now.saturating_sub(v.heartbeat.load(Ordering::SeqCst)) > shared.stall_ms
+                && now.saturating_sub(v.last_dispatch.load(Ordering::SeqCst))
+                    > shared.stall_ms;
+            if dead || wedged {
+                log_warn!(
+                    "replica {i} {}",
+                    if dead {
+                        "thread died"
+                    } else {
+                        "stopped heartbeating inside the stall window"
+                    }
+                );
+                fail_replica(i, &views, &shared);
+            }
+        }
+        if !steal {
+            continue;
+        }
+        // --- work stealing (healthy replicas only) ---
+        let eligible: Vec<usize> = (0..views.len())
+            .filter(|&i| {
+                views[i].alive.load(Ordering::SeqCst) && !views[i].cell.is_failed()
+            })
+            .collect();
+        let idle: Vec<usize> = eligible
             .iter()
-            .enumerate()
-            .filter(|(_, v)| v.load.load(Ordering::SeqCst) == 0)
-            .map(|(i, _)| i)
+            .copied()
+            .filter(|&i| views[i].load.load(Ordering::SeqCst) == 0)
             .collect();
         if idle.is_empty() {
             continue;
         }
         // victim: the deepest queue (engine waiting + channel backlog)
-        let Some((victim, depth)) = views
+        let Some((victim, depth)) = eligible
             .iter()
-            .enumerate()
-            .map(|(i, v)| (i, v.cell.queued_total()))
+            .copied()
+            .map(|i| (i, views[i].cell.queued_total()))
             .max_by_key(|&(_, q)| q)
         else {
             continue;
@@ -795,53 +1209,60 @@ fn balancer_loop(
             }
             let (btx, brx) = channel();
             if views[victim].tx.send(EngineMsg::Steal(take, btx)).is_err() {
-                break;
+                break; // victim gone; detection handles it next cycle
             }
-            let Ok(batch) = brx.recv() else { break };
+            // a bounded wait: a stalled victim must not also stall the
+            // failure detection that will rescue its work
+            let Ok(batch) = brx.recv_timeout(STEAL_REPLY_TIMEOUT) else {
+                break;
+            };
             if batch.is_empty() {
                 break; // nothing stealable (started seqs / head only)
             }
             let n = batch.len();
-            // in-flight accounting and channel projection migrate with
-            // the requests, so placement keeps seeing the truth
-            views[victim].load.fetch_sub(n, Ordering::SeqCst);
-            views[thief].load.fetch_add(n, Ordering::SeqCst);
-            for (req, _) in &batch {
-                views[thief].cell.on_enqueue(req);
+            // in-flight accounting migrates with the requests, so
+            // placement keeps seeing the truth
+            for _ in 0..n {
+                dec_load(&views[victim].load);
             }
-            if let Err(std::sync::mpsc::SendError(msg)) =
-                views[thief].tx.send(EngineMsg::SubmitStolen(batch))
-            {
-                // thief thread gone (it panicked — teardown always stops
-                // the balancer first): fully undo the thief-side
-                // accounting, then hand the still-servable batch back to
-                // the live victim so nothing is dropped
-                let EngineMsg::SubmitStolen(batch) = msg else {
-                    unreachable!("send returns the message it was given")
-                };
-                views[thief].load.fetch_sub(n, Ordering::SeqCst);
-                for (req, _) in &batch {
-                    views[thief].cell.on_dequeue(req);
+            // candidates: the thief, then the (live) victim, then anyone
+            // else — the batch lands somewhere or its clients get clean
+            // aborted terminals; it is never dropped
+            let mut candidates = vec![thief, victim];
+            candidates.extend(
+                eligible.iter().copied().filter(|&c| c != thief && c != victim),
+            );
+            match place_stolen(batch, &candidates, &views, &shared) {
+                Some(placed) if placed == thief => {
+                    steals.fetch_add(n as u64, Ordering::SeqCst);
                 }
-                views[victim].load.fetch_add(n, Ordering::SeqCst);
-                for (req, _) in &batch {
-                    views[victim].cell.on_enqueue(req);
-                }
-                if let Err(std::sync::mpsc::SendError(msg)) =
-                    views[victim].tx.send(EngineMsg::SubmitStolen(batch))
-                {
-                    // victim died too: undo and let the dropped reply
-                    // channels surface as errors at the callers
-                    views[victim].load.fetch_sub(n, Ordering::SeqCst);
-                    if let EngineMsg::SubmitStolen(batch) = msg {
-                        for (req, _) in &batch {
-                            views[victim].cell.on_dequeue(req);
-                        }
-                    }
-                }
-                break;
+                // landed on a fallback (the intended thief died): no steal
+                // counted; detection will condemn the thief next cycle
+                Some(_) | None => break,
             }
-            steals.fetch_add(n as u64, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Reliability knobs for [`EngineRouter::with_router_options`]: the wedge
+/// stall window and an optional fault-injection plan (tests only).
+#[derive(Clone, Debug)]
+pub struct RouterOptions {
+    /// Wedge-detection window in milliseconds: a replica holding work
+    /// with neither heartbeat nor fresh dispatch for longer than this is
+    /// failed over.  `0` disables stall detection (thread-death detection
+    /// stays on).
+    pub stall_ms: u64,
+    /// Deterministic fault-injection schedule threaded into the replica
+    /// loops and journal (see [`FaultPlan`]).  `None` in production.
+    pub fault: Option<FaultPlan>,
+}
+
+impl Default for RouterOptions {
+    fn default() -> Self {
+        RouterOptions {
+            stall_ms: 10_000,
+            fault: None,
         }
     }
 }
@@ -854,9 +1275,10 @@ pub struct EngineRouter {
     rr_next: AtomicUsize,
     next_id: AtomicU64,
     steals: Arc<AtomicU64>,
-    balancer_stop: Arc<AtomicBool>,
-    balancer: Mutex<Option<JoinHandle<()>>>,
+    supervisor_stop: Arc<AtomicBool>,
+    supervisor: Mutex<Option<JoinHandle<()>>>,
     record: Option<RecordHook>,
+    shared: Arc<RouterShared>,
 }
 
 impl EngineRouter {
@@ -867,21 +1289,38 @@ impl EngineRouter {
         EngineRouter::with_options(engines, policy, false)
     }
 
-    /// Spawn one serving thread per engine; with `steal` a balancer thread
-    /// also runs, migrating untouched queued requests from a backlogged
-    /// replica to an idle one (the drain-tail fix).  Stealing never changes
-    /// a request's output tokens — only never-run sequences migrate.
+    /// Spawn one serving thread per engine; with `steal` the supervisor
+    /// also migrates untouched queued requests from a backlogged replica
+    /// to an idle one (the drain-tail fix).  Stealing never changes a
+    /// request's output tokens — only never-run sequences migrate.
     /// Panics on an empty replica set.
     pub fn with_options(
         engines: Vec<Engine>,
         policy: RoutePolicy,
         steal: bool,
     ) -> EngineRouter {
+        EngineRouter::with_router_options(engines, policy, steal, RouterOptions::default())
+    }
+
+    /// Full-control constructor: [`EngineRouter::with_options`] plus the
+    /// reliability knobs in [`RouterOptions`].  The supervisor thread
+    /// always runs (failure detection is unconditional); `steal` only
+    /// gates the work-stealing half of its loop.
+    pub fn with_router_options(
+        engines: Vec<Engine>,
+        policy: RoutePolicy,
+        steal: bool,
+        opts: RouterOptions,
+    ) -> EngineRouter {
         assert!(!engines.is_empty(), "EngineRouter needs >= 1 engine");
         // a single replica has nobody to steal from: record the EFFECTIVE
         // state so /health and stealing_enabled() never claim a balancer
         // that does not exist
         let steal = steal && engines.len() >= 2;
+        let shared = Arc::new(RouterShared::new(
+            opts.stall_ms,
+            opts.fault.as_ref().map(|p| p.arm()),
+        ));
         let replicas: Vec<Replica> = engines
             .into_iter()
             .enumerate()
@@ -889,42 +1328,61 @@ impl EngineRouter {
                 let (tx, rx) = channel();
                 let load = Arc::new(AtomicUsize::new(0));
                 let cell = Arc::new(LoadCell::new(&engine));
+                let alive = Arc::new(AtomicBool::new(true));
+                let heartbeat = Arc::new(AtomicU64::new(0));
+                let last_dispatch = Arc::new(AtomicU64::new(0));
                 let load_t = load.clone();
                 let cell_t = cell.clone();
+                let alive_t = alive.clone();
+                let hb_t = heartbeat.clone();
+                let shared_t = shared.clone();
                 let thread = std::thread::Builder::new()
                     .name(format!("dsde-replica-{i}"))
-                    .spawn(move || replica_loop(engine, rx, load_t, cell_t))
+                    .spawn(move || {
+                        let result = catch_unwind(AssertUnwindSafe(move || {
+                            replica_loop(engine, i, rx, load_t, cell_t, hb_t, shared_t);
+                        }));
+                        // dropping alive is the supervisor's death signal;
+                        // it rescues our ledger entries from there
+                        alive_t.store(false, Ordering::SeqCst);
+                        if result.is_err() {
+                            log_warn!(
+                                "replica {i} panicked; supervisor will fail it over"
+                            );
+                        }
+                    })
                     .expect("spawn replica thread");
                 Replica {
                     tx,
                     load,
                     cell,
+                    alive,
+                    heartbeat,
+                    last_dispatch,
                     thread: Mutex::new(Some(thread)),
                 }
             })
             .collect();
         let steals = Arc::new(AtomicU64::new(0));
-        let balancer_stop = Arc::new(AtomicBool::new(false));
-        let balancer = if steal {
-            let views: Vec<BalancerView> = replicas
-                .iter()
-                .map(|r| BalancerView {
-                    tx: r.tx.clone(),
-                    load: r.load.clone(),
-                    cell: r.cell.clone(),
-                })
-                .collect();
-            let stop = balancer_stop.clone();
-            let stolen = steals.clone();
-            Some(
-                std::thread::Builder::new()
-                    .name("dsde-balancer".to_string())
-                    .spawn(move || balancer_loop(views, stop, stolen))
-                    .expect("spawn balancer thread"),
-            )
-        } else {
-            None
-        };
+        let supervisor_stop = Arc::new(AtomicBool::new(false));
+        let views: Vec<SupervisorView> = replicas
+            .iter()
+            .map(|r| SupervisorView {
+                tx: r.tx.clone(),
+                load: r.load.clone(),
+                cell: r.cell.clone(),
+                alive: r.alive.clone(),
+                heartbeat: r.heartbeat.clone(),
+                last_dispatch: r.last_dispatch.clone(),
+            })
+            .collect();
+        let stop = supervisor_stop.clone();
+        let stolen = steals.clone();
+        let shared_s = shared.clone();
+        let supervisor = std::thread::Builder::new()
+            .name("dsde-balancer".to_string())
+            .spawn(move || supervisor_loop(views, shared_s, steal, stop, stolen))
+            .expect("spawn supervisor thread");
         EngineRouter {
             replicas,
             policy,
@@ -932,9 +1390,10 @@ impl EngineRouter {
             rr_next: AtomicUsize::new(0),
             next_id: AtomicU64::new(0),
             steals,
-            balancer_stop,
-            balancer: Mutex::new(balancer),
+            supervisor_stop,
+            supervisor: Mutex::new(Some(supervisor)),
             record: None,
+            shared,
         }
     }
 
@@ -944,6 +1403,20 @@ impl EngineRouter {
     /// once with the id-assigned request.
     pub fn set_record_hook(&mut self, hook: RecordHook) {
         self.record = Some(hook);
+    }
+
+    /// Attach a write-ahead [`Journal`]: submissions are recorded through
+    /// its hook (superseding any plain record hook) and completion
+    /// markers are written as terminal events are delivered — from
+    /// whichever thread delivers them, including failover paths.  Armed
+    /// faults (if any) are threaded into the journal so `DropJournalSync`
+    /// can bite.  Call before serving starts.
+    pub fn set_journal(&mut self, journal: Arc<Journal>) {
+        if let Some(f) = &self.shared.faults {
+            journal.set_faults(f.clone());
+        }
+        self.record = Some(journal.hook());
+        *self.shared.journal.lock().expect("journal lock") = Some(journal);
     }
 
     /// Whether a record hook is installed (surfaced on `/health` so an
@@ -962,15 +1435,31 @@ impl EngineRouter {
         self.policy
     }
 
-    /// Whether the work-stealing balancer is actually running (false on a
-    /// single-replica router even when stealing was requested).
+    /// Whether the work-stealing half of the supervisor is active (false
+    /// on a single-replica router even when stealing was requested).
     pub fn stealing_enabled(&self) -> bool {
         self.steal
     }
 
-    /// Requests migrated between replicas by the balancer so far.
+    /// Requests migrated between replicas by the supervisor so far.
     pub fn steals(&self) -> u64 {
         self.steals.load(Ordering::SeqCst)
+    }
+
+    /// Replicas declared failed (dead or wedged) so far.
+    pub fn replica_failures(&self) -> u64 {
+        self.shared.failures.load(Ordering::SeqCst)
+    }
+
+    /// Requests re-dispatched to a survivor after their replica failed.
+    pub fn resubmissions(&self) -> u64 {
+        self.shared.resubmitted.load(Ordering::SeqCst)
+    }
+
+    /// The injected per-connection accept delay, when a `SlowConn` fault
+    /// is armed (front-ends sleep this long before serving a request).
+    pub(crate) fn conn_delay(&self) -> Option<Duration> {
+        self.shared.faults.as_ref().and_then(|f| f.conn_delay())
     }
 
     /// Current in-flight request count per replica.
@@ -981,9 +1470,9 @@ impl EngineRouter {
             .collect()
     }
 
-    /// Per-replica load gauges (KV occupancy + queue pressure) as last
-    /// published by the replica threads, with the channel backlog folded
-    /// in — the data the KV-aware policy routes on.
+    /// Per-replica load gauges (KV occupancy + queue pressure + failure
+    /// flag) as last published by the replica threads, with the channel
+    /// backlog folded in — the data the KV-aware policy routes on.
     pub fn replica_loads(&self) -> Vec<ReplicaLoad> {
         self.replicas.iter().map(|r| r.cell.snapshot()).collect()
     }
@@ -994,27 +1483,42 @@ impl EngineRouter {
     }
 
     /// Pick a replica index for a request with the given projected token
-    /// demand (prompt + output budget; only KvAware uses it).
+    /// demand (prompt + output budget; only KvAware uses it).  Failed and
+    /// dead replicas are skipped; if none are healthy the full set is
+    /// used so dispatch still runs (and surfaces the error cleanly).
     fn pick(&self, candidate_tokens: usize) -> usize {
+        let healthy: Vec<usize> = (0..self.replicas.len())
+            .filter(|&i| {
+                let r = &self.replicas[i];
+                r.alive.load(Ordering::SeqCst) && !r.cell.is_failed()
+            })
+            .collect();
+        let candidates = if healthy.is_empty() {
+            (0..self.replicas.len()).collect()
+        } else {
+            healthy
+        };
         match self.policy {
             RoutePolicy::RoundRobin => {
-                self.rr_next.fetch_add(1, Ordering::SeqCst) % self.replicas.len()
+                candidates[self.rr_next.fetch_add(1, Ordering::SeqCst) % candidates.len()]
             }
             RoutePolicy::LeastLoaded => {
-                let loads = self.loads();
-                let mut best = 0usize;
-                for (i, &l) in loads.iter().enumerate() {
-                    if l < loads[best] {
+                let mut best = candidates[0];
+                for &i in &candidates {
+                    if self.replicas[i].load.load(Ordering::SeqCst)
+                        < self.replicas[best].load.load(Ordering::SeqCst)
+                    {
                         best = i;
                     }
                 }
                 best
             }
             RoutePolicy::KvAware => {
-                let mut best = 0usize;
+                let mut best = candidates[0];
                 let mut best_headroom = isize::MIN;
                 let mut best_load = usize::MAX;
-                for (i, r) in self.replicas.iter().enumerate() {
+                for &i in &candidates {
+                    let r = &self.replicas[i];
                     let headroom = r.cell.kv_headroom(candidate_tokens);
                     let load = r.load.load(Ordering::SeqCst);
                     // most projected KV headroom wins; in-flight count
@@ -1031,6 +1535,73 @@ impl EngineRouter {
                 best
             }
         }
+    }
+
+    /// Register the request in the ledger and hand it to a replica,
+    /// starting at `first` and falling back across the remaining healthy
+    /// replicas if the send fails.  Returns false when no replica could
+    /// accept it (the dropped reply surfaces as an error at the caller) —
+    /// unless a concurrent failover already re-owned the request, in
+    /// which case it is in good hands and true is returned.
+    fn dispatch(&self, first: usize, req: Request, reply: ReplyTo) -> bool {
+        let id = req.id;
+        let n = self.replicas.len();
+        let mut req = req;
+        let mut reply = Some(reply);
+        for off in 0..n {
+            let idx = (first + off) % n;
+            let replica = &self.replicas[idx];
+            if off > 0
+                && (!replica.alive.load(Ordering::SeqCst) || replica.cell.is_failed())
+            {
+                continue;
+            }
+            {
+                let mut ledger = self.shared.ledger.lock().expect("ledger lock");
+                ledger.insert(
+                    id,
+                    LedgerEntry {
+                        req: req.clone(),
+                        reply: reply.take().expect("reply in hand"),
+                        replica: idx,
+                        progressed: false,
+                        enqueued: Instant::now(),
+                    },
+                );
+            }
+            replica.load.fetch_add(1, Ordering::SeqCst);
+            replica.cell.on_enqueue(&req);
+            replica
+                .last_dispatch
+                .store(self.shared.now_ms(), Ordering::SeqCst);
+            match replica.tx.send(EngineMsg::Submit(req)) {
+                Ok(()) => return true,
+                Err(std::sync::mpsc::SendError(msg)) => {
+                    // replica already gone; undo the accounting and try
+                    // the next healthy one
+                    dec_load(&replica.load);
+                    let taken = {
+                        let mut ledger = self.shared.ledger.lock().expect("ledger lock");
+                        match ledger.get(&id) {
+                            Some(e) if e.replica == idx => ledger.remove(&id),
+                            _ => None,
+                        }
+                    };
+                    let Some(entry) = taken else {
+                        // a concurrent failover drained the dead replica's
+                        // entries and already re-dispatched this request
+                        return true;
+                    };
+                    replica.cell.on_dequeue(&entry.req);
+                    reply = Some(entry.reply);
+                    let EngineMsg::Submit(r) = msg else {
+                        unreachable!("send returns the message it was given")
+                    };
+                    req = r;
+                }
+            }
+        }
+        false
     }
 
     /// Dispatch a request to a replica; returns the channel the finished
@@ -1072,21 +1643,8 @@ impl EngineRouter {
         if let Some(hook) = &self.record {
             hook(&req);
         }
-        let replica = &self.replicas[idx];
         let (rtx, rrx) = channel();
-        replica.load.fetch_add(1, Ordering::SeqCst);
-        replica.cell.on_enqueue(&req);
-        if let Err(std::sync::mpsc::SendError(msg)) = replica
-            .tx
-            .send(EngineMsg::Submit(req, Notify::new(rtx, waker)))
-        {
-            // replica already shut down; undo the accounting — the caller
-            // observes a closed reply channel
-            replica.load.fetch_sub(1, Ordering::SeqCst);
-            if let EngineMsg::Submit(req, _) = msg {
-                replica.cell.on_dequeue(&req);
-            }
-        }
+        self.dispatch(idx, req, ReplyTo::Blocking(Notify::new(rtx, waker)));
         rrx
     }
 
@@ -1121,19 +1679,8 @@ impl EngineRouter {
             hook(&req);
         }
         let idx = self.pick(projected_tokens(&req));
-        let replica = &self.replicas[idx];
         let (rtx, rrx) = channel();
-        replica.load.fetch_add(1, Ordering::SeqCst);
-        replica.cell.on_enqueue(&req);
-        if let Err(std::sync::mpsc::SendError(msg)) = replica
-            .tx
-            .send(EngineMsg::SubmitStreaming(req, Notify::new(rtx, waker)))
-        {
-            replica.load.fetch_sub(1, Ordering::SeqCst);
-            if let EngineMsg::SubmitStreaming(req, _) = msg {
-                replica.cell.on_dequeue(&req);
-            }
-        }
+        self.dispatch(idx, req, ReplyTo::Streaming(Notify::new(rtx, waker)));
         rrx
     }
 
@@ -1157,29 +1704,16 @@ impl EngineRouter {
     /// preformatted NDJSON frames on `target`'s shard ring instead of an
     /// mpsc channel — the event-loop front-end's zero-channel streaming
     /// path.  Routing (policy, unique ids, load accounting, record hook)
-    /// matches [`EngineRouter::submit_streaming`].  Returns false when
-    /// the picked replica has already shut down (no frame will ever
-    /// arrive; the caller writes the aborted summary itself).
+    /// matches [`EngineRouter::submit_streaming`].  Returns false when no
+    /// replica could accept it (no frame will ever arrive; the caller
+    /// writes the aborted summary itself).
     pub(crate) fn submit_streaming_ring(&self, mut req: Request, target: RingTarget) -> bool {
         req.id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
         if let Some(hook) = &self.record {
             hook(&req);
         }
         let idx = self.pick(projected_tokens(&req));
-        let replica = &self.replicas[idx];
-        replica.load.fetch_add(1, Ordering::SeqCst);
-        replica.cell.on_enqueue(&req);
-        if let Err(std::sync::mpsc::SendError(msg)) = replica
-            .tx
-            .send(EngineMsg::SubmitStreamingRing(req, target))
-        {
-            replica.load.fetch_sub(1, Ordering::SeqCst);
-            if let EngineMsg::SubmitStreamingRing(req, _) = msg {
-                replica.cell.on_dequeue(&req);
-            }
-            return false;
-        }
-        true
+        self.dispatch(idx, req, ReplyTo::Ring(target))
     }
 
     /// Submit and block until the request completes.
@@ -1190,21 +1724,34 @@ impl EngineRouter {
     }
 
     /// Per-replica metrics snapshots with the default percentile set
-    /// (skips replicas that already exited).  Each reply is pre-reduced on
-    /// the replica thread — O(#quantiles), never the full request window —
-    /// so high-frequency scraping stays cheap.
+    /// (skips replicas that exited or were failed over).  Each reply is
+    /// pre-reduced on the replica thread — O(#quantiles), never the full
+    /// request window — so high-frequency scraping stays cheap.
     pub fn replica_metrics(&self) -> Vec<MetricsSnapshot> {
         self.replica_metrics_with(DEFAULT_QUANTILES)
     }
 
     /// Per-replica metrics snapshots carrying the requested percentiles.
     pub fn replica_metrics_with(&self, quantiles: &[f64]) -> Vec<MetricsSnapshot> {
+        self.replica_metrics_opt(quantiles)
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+
+    /// Index-aligned per-replica snapshots; `None` for replicas that are
+    /// failed, dead, or do not answer inside [`METRICS_TIMEOUT`] (a
+    /// wedged replica must not hang the metrics endpoint).
+    fn replica_metrics_opt(&self, quantiles: &[f64]) -> Vec<Option<MetricsSnapshot>> {
         self.replicas
             .iter()
-            .filter_map(|r| {
+            .map(|r| -> Option<MetricsSnapshot> {
+                if r.cell.is_failed() {
+                    return None;
+                }
                 let (tx, rx) = channel();
                 r.tx.send(EngineMsg::Metrics(quantiles.to_vec(), tx)).ok()?;
-                rx.recv().ok()
+                rx.recv_timeout(METRICS_TIMEOUT).ok()
             })
             .collect()
     }
@@ -1230,16 +1777,18 @@ impl EngineRouter {
     }
 
     /// The `/v1/metrics` payload: aggregate counters plus a per-replica
-    /// summary and the routing configuration.
+    /// summary, the routing configuration, and the recovery counters
+    /// (`replica_failures`, `resubmitted`, `journal_lag`).
     ///
     /// The merged `throughput`/`goodput` divide by *summed* busy seconds
     /// (per-busy-second rates, flat in replica count); `fleet_throughput`
     /// divides total tokens by the fleet makespan (the slowest replica's
     /// busy time) and is the number that scales with replicas.
     pub fn metrics_json(&self) -> Json {
-        let per = self.replica_metrics();
-        let agg = Self::merge_snapshots(&per);
-        let makespan = per.iter().map(|m| m.busy_time).fold(0.0f64, f64::max);
+        let per = self.replica_metrics_opt(DEFAULT_QUANTILES);
+        let merged: Vec<MetricsSnapshot> = per.iter().flatten().cloned().collect();
+        let agg = Self::merge_snapshots(&merged);
+        let makespan = merged.iter().map(|m| m.busy_time).fold(0.0f64, f64::max);
         let fleet_throughput = if makespan > 0.0 {
             agg.tokens_out as f64 / makespan
         } else {
@@ -1252,8 +1801,12 @@ impl EngineRouter {
             .enumerate()
             .map(|(i, m)| {
                 let lc = cells.get(i).copied().unwrap_or_default();
+                // a failed replica answers no metrics scrape; its counters
+                // render as zeros and `failed` tells the operator why
+                let m = m.clone().unwrap_or_default();
                 Json::obj()
                     .set("replica", i)
+                    .set("failed", lc.failed)
                     .set("in_flight", *loads.get(i).unwrap_or(&0))
                     .set("tokens_out", m.tokens_out)
                     .set("requests", m.completed)
@@ -1266,43 +1819,77 @@ impl EngineRouter {
                     .set("queued_prompt_tokens", lc.queued_prompt_tokens)
             })
             .collect();
+        let journal_lag = self
+            .shared
+            .journal()
+            .map(|j| j.lag())
+            .unwrap_or(0);
         agg.to_json()
             .set("route_policy", self.policy.name())
             .set("replica_count", self.replicas.len())
             .set("work_stealing", self.steal)
             .set("steals", self.steals())
+            .set("replica_failures", self.replica_failures())
+            .set("resubmitted", self.resubmissions())
+            .set("journal_lag", journal_lag)
             .set("fleet_makespan", makespan)
             .set("fleet_throughput", fleet_throughput)
             .set("replicas", replicas)
     }
 
-    /// Stop the balancer (if running) and wait for it — always before
-    /// drain/abort so no steal can race a replica teardown.  Idempotent.
-    fn stop_balancer(&self) {
-        self.balancer_stop.store(true, Ordering::SeqCst);
-        let handle = self.balancer.lock().expect("balancer lock").take();
+    /// Stop the supervisor and wait for it — always before drain/abort so
+    /// no steal or failover can race a replica teardown.  Idempotent.
+    fn stop_supervisor(&self) {
+        self.supervisor_stop.store(true, Ordering::SeqCst);
+        let handle = self.supervisor.lock().expect("supervisor lock").take();
         if let Some(t) = handle {
             let _ = t.join();
         }
     }
 
+    /// Deliver an aborted terminal to every request still in the ledger —
+    /// the last line of the no-hung-client guarantee: after teardown,
+    /// entries can remain only for replicas that died before the
+    /// supervisor rescued them.  Ring streams need no action here: their
+    /// dead producers' closed rings make the shard synthesize the
+    /// terminal.
+    fn finish_stranded(&self) {
+        let stranded: Vec<LedgerEntry> = {
+            let mut ledger = self.shared.ledger.lock().expect("ledger lock");
+            ledger.drain().map(|(_, e)| e).collect()
+        };
+        if stranded.is_empty() {
+            return;
+        }
+        let journal = self.shared.journal();
+        let mut ring_aborts = Vec::new();
+        for entry in stranded {
+            deliver_abort(entry, &journal, &mut ring_aborts);
+        }
+        // ring_aborts intentionally dropped: every producer thread has
+        // exited, so ring-close synthesis covers those streams
+    }
+
     /// Graceful drain: every replica finishes its in-flight work (clients
-    /// receive their completions), then the threads exit.  Idempotent.
+    /// receive their completions), then the threads exit.  Requests
+    /// stranded by a dead replica get aborted terminals.  Idempotent.
     pub fn shutdown(&self) {
-        self.stop_balancer();
+        self.stop_supervisor();
         for r in &self.replicas {
             let _ = r.tx.send(EngineMsg::Drain);
         }
         self.join();
+        self.finish_stranded();
     }
 
     /// Hard stop: in-flight work is aborted (`FinishReason::Aborted`).
     pub fn abort(&self) {
-        self.stop_balancer();
+        self.stop_supervisor();
         for r in &self.replicas {
             let _ = r.tx.send(EngineMsg::Abort);
         }
         self.join();
+        self.finish_stranded();
     }
 
     fn join(&self) {
@@ -1466,12 +2053,12 @@ mod tests {
 
     #[test]
     fn work_stealing_rebalances_a_hot_replica() {
-        // all work lands on replica 0; the balancer must move some of the
-        // queue to idle replica 1, and nothing may be lost or duplicated.
-        // Whether a steal fires in time is wall-clock dependent (the sim
-        // burst races the 200µs balancer poll), so retry with fresh
-        // routers; the no-loss/no-dup invariants are asserted every
-        // attempt regardless.
+        // all work lands on replica 0; the supervisor must move some of
+        // the queue to idle replica 1, and nothing may be lost or
+        // duplicated.  Whether a steal fires in time is wall-clock
+        // dependent (the sim burst races the 200µs supervisor poll), so
+        // retry with fresh routers; the no-loss/no-dup invariants are
+        // asserted every attempt regardless.
         let n = 24;
         for attempt in 0..5 {
             let router = EngineRouter::with_options(
@@ -1503,10 +2090,10 @@ mod tests {
                 );
                 return;
             }
-            // burst drained before the balancer got scheduled; try again
+            // burst drained before the supervisor got scheduled; try again
             eprintln!("attempt {attempt}: no steal fired, retrying");
         }
-        panic!("balancer never migrated work across 5 hot-replica bursts");
+        panic!("supervisor never migrated work across 5 hot-replica bursts");
     }
 
     #[test]
@@ -1725,6 +2312,296 @@ mod tests {
         assert!(s.contains("\"route_policy\":\"least-loaded\""), "{s}");
         assert!(s.contains("\"replicas\":["), "{s}");
         assert!(s.contains("block_efficiency"), "{s}");
+        router.shutdown();
+    }
+
+    // --- crash recovery ---
+
+    /// Synthetic supervisor fixture: real load cells over sim engines,
+    /// plain channels standing in for replica threads, so the steal/fail
+    /// paths can be driven deterministically (receivers dropped = dead
+    /// replica).
+    struct Fixture {
+        shared: Arc<RouterShared>,
+        views: Vec<SupervisorView>,
+        rxs: Vec<Option<Receiver<EngineMsg>>>,
+    }
+
+    fn fixture(n: usize) -> Fixture {
+        let engines = sim_engines(n);
+        let mut rxs = Vec::new();
+        let views: Vec<SupervisorView> = engines
+            .iter()
+            .map(|e| {
+                let (tx, rx) = channel();
+                rxs.push(Some(rx));
+                SupervisorView {
+                    tx,
+                    load: Arc::new(AtomicUsize::new(0)),
+                    cell: Arc::new(LoadCell::new(e)),
+                    alive: Arc::new(AtomicBool::new(true)),
+                    heartbeat: Arc::new(AtomicU64::new(0)),
+                    last_dispatch: Arc::new(AtomicU64::new(0)),
+                }
+            })
+            .collect();
+        // engines only seeded the load cells; the fixture drives the
+        // supervisor paths directly
+        drop(engines);
+        Fixture {
+            shared: Arc::new(RouterShared::new(10_000, None)),
+            views,
+            rxs,
+        }
+    }
+
+    /// Insert `count` ledger entries owned by `replica`, returning the
+    /// blocking reply receivers (ids are 1-based).
+    fn seed_ledger(
+        fx: &Fixture,
+        replica: usize,
+        count: u64,
+    ) -> (Vec<Request>, Vec<Receiver<FinishedRequest>>) {
+        let mut reqs = Vec::new();
+        let mut crxs = Vec::new();
+        for k in 0..count {
+            let mut r = req(8);
+            r.id = k + 1;
+            let (ctx, crx) = channel();
+            crxs.push(crx);
+            fx.shared.ledger.lock().unwrap().insert(
+                r.id,
+                LedgerEntry {
+                    req: r.clone(),
+                    reply: ReplyTo::Blocking(Notify::new(ctx, None)),
+                    replica,
+                    progressed: false,
+                    enqueued: Instant::now(),
+                },
+            );
+            reqs.push(r);
+        }
+        (reqs, crxs)
+    }
+
+    #[test]
+    fn stolen_batch_survives_thief_death() {
+        // regression for the balancer thief-gone edge: a steal batch whose
+        // thief died mid-handoff must land on another live replica, not be
+        // dropped on the floor
+        let mut fx = fixture(3);
+        let (batch, _crxs) = seed_ledger(&fx, 0, 2);
+        fx.rxs[0] = None; // victim died after answering the steal
+        fx.rxs[1] = None; // thief died before the handoff
+        let placed = place_stolen(batch, &[1, 0, 2], &fx.views, &fx.shared);
+        assert_eq!(placed, Some(2), "batch must land on the live replica");
+        let msg = fx.rxs[2]
+            .as_ref()
+            .unwrap()
+            .try_recv()
+            .expect("live replica receives the batch");
+        let EngineMsg::SubmitStolen(b) = msg else {
+            panic!("expected SubmitStolen");
+        };
+        let mut ids: Vec<u64> = b.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+        let ledger = fx.shared.ledger.lock().unwrap();
+        assert_eq!(ledger.len(), 2);
+        assert!(
+            ledger.values().all(|e| e.replica == 2),
+            "ownership must follow the batch"
+        );
+        assert_eq!(fx.views[2].load.load(Ordering::SeqCst), 2);
+        assert_eq!(fx.views[1].load.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn stolen_batch_aborts_cleanly_when_every_replica_is_gone() {
+        let mut fx = fixture(3);
+        let (batch, crxs) = seed_ledger(&fx, 0, 2);
+        for rx in fx.rxs.iter_mut() {
+            *rx = None; // the whole fleet is dead
+        }
+        let placed = place_stolen(batch, &[1, 0, 2], &fx.views, &fx.shared);
+        assert_eq!(placed, None);
+        assert!(
+            fx.shared.ledger.lock().unwrap().is_empty(),
+            "aborted entries must leave the ledger"
+        );
+        for crx in crxs {
+            let fin = crx.recv().expect("client gets a terminal event, not a hang");
+            assert_eq!(fin.reason, FinishReason::Aborted);
+        }
+    }
+
+    #[test]
+    fn fail_replica_resubmits_to_survivors_with_accrued_wait() {
+        let fx = fixture(2);
+        let (_reqs, _crxs) = seed_ledger(&fx, 0, 3);
+        fx.views[0].load.store(3, Ordering::SeqCst);
+        fail_replica(0, &fx.views, &fx.shared);
+        assert!(fx.views[0].cell.is_failed());
+        assert_eq!(fx.shared.failures.load(Ordering::SeqCst), 1);
+        assert_eq!(fx.shared.resubmitted.load(Ordering::SeqCst), 3);
+        assert_eq!(fx.views[0].load.load(Ordering::SeqCst), 0);
+        assert_eq!(fx.views[1].load.load(Ordering::SeqCst), 3);
+        let mut rescued = 0;
+        while let Ok(msg) = fx.rxs[1].as_ref().unwrap().try_recv() {
+            let EngineMsg::Submit(r) = msg else {
+                panic!("expected Submit resubmissions");
+            };
+            assert!(r.waited >= 0.0);
+            rescued += 1;
+        }
+        assert_eq!(rescued, 3);
+        let ledger = fx.shared.ledger.lock().unwrap();
+        assert_eq!(ledger.len(), 3, "rescued entries stay in the ledger");
+        assert!(ledger.values().all(|e| e.replica == 1));
+    }
+
+    #[test]
+    fn fail_replica_aborts_progressed_streams_and_everything_without_survivors() {
+        let fx = fixture(1);
+        // one progressed stream: its bytes are on the wire, so it must be
+        // aborted (never replayed), survivors or not
+        let (ctx, crx) = channel();
+        let mut r = req(8);
+        r.id = 7;
+        fx.shared.ledger.lock().unwrap().insert(
+            7,
+            LedgerEntry {
+                req: r.clone(),
+                reply: ReplyTo::Streaming(Notify::new(ctx, None)),
+                replica: 0,
+                progressed: true,
+                enqueued: Instant::now(),
+            },
+        );
+        fail_replica(0, &fx.views, &fx.shared);
+        let ev = crx.recv().expect("stream gets its terminal event");
+        let StreamEvent::Done(fin) = ev else {
+            panic!("expected the terminal Done");
+        };
+        assert_eq!(fin.reason, FinishReason::Aborted);
+        assert!(crx.recv().is_err(), "exactly one terminal event");
+        assert!(fx.shared.ledger.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn injected_kill_fails_over_to_survivor() {
+        // replica 0 is killed at t=0; everything routed at it must still
+        // complete on replica 1 (via dispatch fallback or supervisor
+        // rescue, depending on timing — the guarantee is the same)
+        let plan = FaultPlan::parse("kill:0@0", 2).expect("plan parses");
+        let router = EngineRouter::with_router_options(
+            sim_engines(2),
+            RoutePolicy::RoundRobin,
+            false,
+            RouterOptions {
+                stall_ms: 5_000,
+                fault: Some(plan),
+            },
+        );
+        let rxs: Vec<_> = (0..6).map(|_| router.submit_to(0, req(16))).collect();
+        for rx in rxs {
+            let fin = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("request must complete on the survivor");
+            assert_eq!(fin.reason, FinishReason::MaxTokens);
+            assert_eq!(fin.output.len(), 16);
+        }
+        // the kill always lands (idle replicas poll when faults are armed)
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while router.replica_failures() == 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "supervisor must detect the killed replica"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let s = router.metrics_json().to_string();
+        assert!(s.contains("\"replica_failures\":1"), "{s}");
+        assert!(s.contains("\"failed\":true"), "{s}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn injected_stall_triggers_wedge_detection_and_rescue() {
+        // replica 0 stalls for 2s starting at t=0 with a 100ms stall
+        // window: the supervisor must declare it wedged and rescue its
+        // queued work long before the stall ends
+        let plan = FaultPlan::parse("stall:0@0+2000", 2).expect("plan parses");
+        let router = EngineRouter::with_router_options(
+            sim_engines(2),
+            RoutePolicy::RoundRobin,
+            false,
+            RouterOptions {
+                stall_ms: 100,
+                fault: Some(plan),
+            },
+        );
+        let start = std::time::Instant::now();
+        let rxs: Vec<_> = (0..4).map(|_| router.submit_to(0, req(16))).collect();
+        for rx in rxs {
+            let fin = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("stalled replica's work must be rescued");
+            assert_eq!(fin.reason, FinishReason::MaxTokens);
+            assert_eq!(fin.output.len(), 16);
+        }
+        assert!(
+            start.elapsed() < Duration::from_secs(2),
+            "rescue must beat the stall, not wait it out"
+        );
+        assert_eq!(router.replica_failures(), 1);
+        assert!(router.resubmissions() >= 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn journal_records_submits_and_completion_markers() {
+        let path = std::env::temp_dir()
+            .join(format!("dsde-router-journal-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let journal = Arc::new(Journal::create(&path, "test").expect("journal"));
+        let mut router = EngineRouter::new(sim_engines(1), RoutePolicy::RoundRobin);
+        router.set_journal(journal.clone());
+        assert!(router.recording());
+        let fin = router.complete(req(8)).unwrap();
+        router.shutdown();
+        journal.sync();
+        let state = crate::server::journal::load(&path).expect("journal loads");
+        assert_eq!(state.submits.len(), 1);
+        assert_eq!(
+            state.completed.get(&fin.id).map(String::as_str),
+            Some("max_tokens")
+        );
+        assert!(state.unfinished().is_empty(), "completed work is not replayed");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pick_skips_failed_replicas() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::RoundRobin);
+        router.replicas[0].cell.mark_failed();
+        for _ in 0..4 {
+            assert_eq!(router.pick(24), 1, "routing must avoid failed replicas");
+        }
+        let s = router.metrics_json().to_string();
+        assert!(s.contains("\"failed\":true"), "{s}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn metrics_json_reports_recovery_counters() {
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::RoundRobin);
+        let s = router.metrics_json().to_string();
+        assert!(s.contains("\"replica_failures\":0"), "{s}");
+        assert!(s.contains("\"resubmitted\":0"), "{s}");
+        assert!(s.contains("\"journal_lag\":0"), "{s}");
+        assert!(s.contains("\"failed\":false"), "{s}");
         router.shutdown();
     }
 }

@@ -1,0 +1,378 @@
+//! Deterministic fault injection for the serving stack's chaos tests.
+//!
+//! A [`FaultPlan`] is a *schedule* of failure events — replica kills,
+//! replica stalls, journal-fsync drops, connection slowdowns — expressed
+//! in milliseconds relative to the moment the plan is armed (router
+//! construction).  Plans are plain data: they can be written by hand,
+//! parsed from a compact CLI spec (`--fault "kill:1@200;slow-conn:5"`),
+//! or generated deterministically from a seed ([`FaultPlan::seeded`]) so
+//! a chaos soak is exactly reproducible from one u64.
+//!
+//! [`FaultPlan::arm`] converts the schedule into an [`ArmedFaults`]
+//! handle: cheaply cloneable, internally atomic, queried from the hot
+//! paths it sabotages (replica loops, the journal's sync point, the HTTP
+//! dispatch path).  Kill and stall events are one-shot — each fires at
+//! most once; sync-drop is level-triggered from its start time onward;
+//! `slow-conn` applies to every request for the process lifetime.
+//!
+//! This module sits in `util` (not `server`) so the serving
+//! configuration layer can carry a plan without a dependency cycle.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Rng;
+
+/// One scheduled fault.  Times are milliseconds since the plan is armed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Panic the given replica's engine thread at `at_ms` (one-shot).
+    KillReplica {
+        /// Replica index to kill.
+        replica: usize,
+        /// Milliseconds after arming at which the kill fires.
+        at_ms: u64,
+    },
+    /// Wedge the given replica's engine thread (a hard sleep inside its
+    /// loop, heartbeat frozen) for `for_ms` starting at `at_ms`
+    /// (one-shot).
+    StallReplica {
+        /// Replica index to stall.
+        replica: usize,
+        /// Milliseconds after arming at which the stall begins.
+        at_ms: u64,
+        /// Stall duration in milliseconds.
+        for_ms: u64,
+    },
+    /// From `at_ms` onward, the journal skips its fsync (writes still
+    /// happen; durability is sacrificed — `journal_lag` keeps growing).
+    DropJournalSync {
+        /// Milliseconds after arming at which syncs start being dropped.
+        at_ms: u64,
+    },
+    /// Delay every HTTP dispatch by `delay_ms` (level-triggered, always
+    /// active) — a crude slow-client / slow-handler simulator.
+    SlowConn {
+        /// Per-request added latency in milliseconds.
+        delay_ms: u64,
+    },
+}
+
+/// A deterministic schedule of [`FaultEvent`]s.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The scheduled events, in no particular order.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse the compact CLI spec: `;`-separated events, each one of
+    ///
+    /// * `kill:R@MS` — kill replica `R` at `MS` ms
+    /// * `stall:R@MS+DUR` — stall replica `R` at `MS` ms for `DUR` ms
+    /// * `drop-sync@MS` — drop journal fsyncs from `MS` ms onward
+    /// * `slow-conn:MS` — delay every HTTP dispatch by `MS` ms
+    /// * `seed:S` — expand to [`FaultPlan::seeded`]`(S, replicas, 10_000)`
+    ///
+    /// `replicas` bounds replica indices (and feeds `seed:` expansion).
+    pub fn parse(spec: &str, replicas: usize) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(seed) = part.strip_prefix("seed:") {
+                let seed: u64 = seed
+                    .parse()
+                    .map_err(|_| format!("bad fault seed in {part:?}"))?;
+                events.extend(FaultPlan::seeded(seed, replicas, 10_000).events);
+            } else if let Some(rest) = part.strip_prefix("kill:") {
+                let (replica, at_ms) = parse_at(rest, part)?;
+                check_replica(replica, replicas, part)?;
+                events.push(FaultEvent::KillReplica { replica, at_ms });
+            } else if let Some(rest) = part.strip_prefix("stall:") {
+                let (head, for_ms) = rest
+                    .split_once('+')
+                    .ok_or_else(|| format!("stall needs `+DUR` in {part:?}"))?;
+                let (replica, at_ms) = parse_at(head, part)?;
+                let for_ms: u64 = for_ms
+                    .parse()
+                    .map_err(|_| format!("bad stall duration in {part:?}"))?;
+                check_replica(replica, replicas, part)?;
+                events.push(FaultEvent::StallReplica {
+                    replica,
+                    at_ms,
+                    for_ms,
+                });
+            } else if let Some(at) = part.strip_prefix("drop-sync@") {
+                let at_ms: u64 = at
+                    .parse()
+                    .map_err(|_| format!("bad drop-sync time in {part:?}"))?;
+                events.push(FaultEvent::DropJournalSync { at_ms });
+            } else if let Some(ms) = part.strip_prefix("slow-conn:") {
+                let delay_ms: u64 = ms
+                    .parse()
+                    .map_err(|_| format!("bad slow-conn delay in {part:?}"))?;
+                events.push(FaultEvent::SlowConn { delay_ms });
+            } else {
+                return Err(format!("unknown fault event {part:?}"));
+            }
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Render the plan back into the CLI spec format accepted by
+    /// [`FaultPlan::parse`] (round-trips exactly for explicit plans).
+    pub fn to_spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e {
+                FaultEvent::KillReplica { replica, at_ms } => {
+                    format!("kill:{replica}@{at_ms}")
+                }
+                FaultEvent::StallReplica {
+                    replica,
+                    at_ms,
+                    for_ms,
+                } => format!("stall:{replica}@{at_ms}+{for_ms}"),
+                FaultEvent::DropJournalSync { at_ms } => format!("drop-sync@{at_ms}"),
+                FaultEvent::SlowConn { delay_ms } => format!("slow-conn:{delay_ms}"),
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Generate a reproducible chaos schedule for a fleet of `replicas`
+    /// over roughly `horizon_ms` of serving: one to three kill/stall
+    /// events on random replicas at random times in the first half of the
+    /// horizon.  At least one replica is always spared so survivors exist
+    /// to adopt the dead replica's work.  The same `(seed, replicas,
+    /// horizon_ms)` always yields the same plan.
+    pub fn seeded(seed: u64, replicas: usize, horizon_ms: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let mut events = Vec::new();
+        if replicas >= 2 {
+            let n = 1 + rng.range(0, replicas.min(3));
+            // never fault every replica: keep one survivor
+            let spared = rng.range(0, replicas);
+            let window = (horizon_ms / 2).max(20);
+            for _ in 0..n {
+                let mut replica = rng.range(0, replicas);
+                if replica == spared {
+                    replica = (replica + 1) % replicas;
+                }
+                let at_ms = 10 + rng.next_u64() % window;
+                if rng.chance(0.5) {
+                    events.push(FaultEvent::KillReplica { replica, at_ms });
+                } else {
+                    events.push(FaultEvent::StallReplica {
+                        replica,
+                        at_ms,
+                        for_ms: horizon_ms.max(100),
+                    });
+                }
+            }
+        }
+        FaultPlan { events }
+    }
+
+    /// Arm the plan: start its clock and build the shared handle the
+    /// serving stack queries.
+    pub fn arm(&self) -> ArmedFaults {
+        ArmedFaults {
+            inner: Arc::new(ArmedInner {
+                plan: self.clone(),
+                fired: (0..self.events.len()).map(|_| AtomicBool::new(false)).collect(),
+                epoch: Instant::now(),
+            }),
+        }
+    }
+}
+
+fn parse_at(s: &str, part: &str) -> Result<(usize, u64), String> {
+    let (r, at) = s
+        .split_once('@')
+        .ok_or_else(|| format!("expected `R@MS` in {part:?}"))?;
+    let replica = r
+        .parse()
+        .map_err(|_| format!("bad replica index in {part:?}"))?;
+    let at_ms = at.parse().map_err(|_| format!("bad time in {part:?}"))?;
+    Ok((replica, at_ms))
+}
+
+fn check_replica(replica: usize, replicas: usize, part: &str) -> Result<(), String> {
+    if replicas > 0 && replica >= replicas {
+        return Err(format!(
+            "replica {replica} out of range (fleet has {replicas}) in {part:?}"
+        ));
+    }
+    Ok(())
+}
+
+struct ArmedInner {
+    plan: FaultPlan,
+    /// One-shot latch per event (kill/stall fire at most once).
+    fired: Vec<AtomicBool>,
+    epoch: Instant,
+}
+
+/// An armed [`FaultPlan`]: the live handle the serving stack polls.
+/// Cloning is cheap (an `Arc` bump); all clones share the one-shot
+/// latches and the arm-time epoch.
+#[derive(Clone)]
+pub struct ArmedFaults {
+    inner: Arc<ArmedInner>,
+}
+
+impl ArmedFaults {
+    fn now_ms(&self) -> u64 {
+        self.inner.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Whether a `KillReplica` for `replica` is due now.  One-shot: the
+    /// first query at-or-after the scheduled time returns true, every
+    /// later query false.
+    pub fn kill_due(&self, replica: usize) -> bool {
+        let now = self.now_ms();
+        for (i, e) in self.inner.plan.events.iter().enumerate() {
+            if let FaultEvent::KillReplica { replica: r, at_ms } = e {
+                if *r == replica && now >= *at_ms && !self.inner.fired[i].swap(true, Ordering::SeqCst)
+                {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Whether a `StallReplica` for `replica` is due now; returns the
+    /// stall duration.  One-shot like [`ArmedFaults::kill_due`].
+    pub fn stall_due(&self, replica: usize) -> Option<Duration> {
+        let now = self.now_ms();
+        for (i, e) in self.inner.plan.events.iter().enumerate() {
+            if let FaultEvent::StallReplica {
+                replica: r,
+                at_ms,
+                for_ms,
+            } = e
+            {
+                if *r == replica
+                    && now >= *at_ms
+                    && !self.inner.fired[i].swap(true, Ordering::SeqCst)
+                {
+                    return Some(Duration::from_millis(*for_ms));
+                }
+            }
+        }
+        None
+    }
+
+    /// Whether journal fsyncs should currently be dropped
+    /// (level-triggered: true from the earliest `DropJournalSync.at_ms`
+    /// onward).
+    pub fn journal_sync_dropped(&self) -> bool {
+        let now = self.now_ms();
+        self.inner.plan.events.iter().any(|e| {
+            matches!(e, FaultEvent::DropJournalSync { at_ms } if now >= *at_ms)
+        })
+    }
+
+    /// The per-request dispatch delay, if a `SlowConn` event is present.
+    pub fn conn_delay(&self) -> Option<Duration> {
+        self.inner.plan.events.iter().find_map(|e| match e {
+            FaultEvent::SlowConn { delay_ms } => Some(Duration::from_millis(*delay_ms)),
+            _ => None,
+        })
+    }
+}
+
+impl std::fmt::Debug for ArmedFaults {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ArmedFaults({:?})", self.inner.plan.to_spec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_explicit_events() {
+        let spec = "kill:1@200;stall:0@50+300;drop-sync@10;slow-conn:5";
+        let plan = FaultPlan::parse(spec, 4).unwrap();
+        assert_eq!(plan.events.len(), 4);
+        assert_eq!(plan.to_spec(), spec);
+        assert_eq!(FaultPlan::parse(&plan.to_spec(), 4).unwrap(), plan);
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_out_of_range() {
+        assert!(FaultPlan::parse("explode:1@2", 2).is_err());
+        assert!(FaultPlan::parse("kill:1", 2).is_err());
+        assert!(FaultPlan::parse("kill:7@10", 2).is_err());
+        assert!(FaultPlan::parse("stall:0@10", 2).is_err(), "missing +DUR");
+        assert!(FaultPlan::parse("slow-conn:x", 2).is_err());
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_spares_a_replica() {
+        for seed in 0..50u64 {
+            let a = FaultPlan::seeded(seed, 3, 1000);
+            let b = FaultPlan::seeded(seed, 3, 1000);
+            assert_eq!(a, b, "same seed, same plan");
+            let faulted: std::collections::HashSet<usize> = a
+                .events
+                .iter()
+                .filter_map(|e| match e {
+                    FaultEvent::KillReplica { replica, .. } => Some(*replica),
+                    FaultEvent::StallReplica { replica, .. } => Some(*replica),
+                    _ => None,
+                })
+                .collect();
+            assert!(faulted.len() < 3, "seed {seed} faulted every replica");
+        }
+    }
+
+    #[test]
+    fn seeded_single_replica_is_empty() {
+        assert!(FaultPlan::seeded(7, 1, 1000).events.is_empty());
+    }
+
+    #[test]
+    fn kill_and_stall_fire_once_at_their_time() {
+        let plan = FaultPlan::parse("kill:0@0;stall:1@0+50", 2).unwrap();
+        let armed = plan.arm();
+        assert!(!armed.kill_due(1), "wrong replica never fires");
+        assert!(armed.kill_due(0));
+        assert!(!armed.kill_due(0), "one-shot");
+        assert_eq!(armed.stall_due(1), Some(Duration::from_millis(50)));
+        assert_eq!(armed.stall_due(1), None, "one-shot");
+        assert_eq!(armed.stall_due(0), None);
+    }
+
+    #[test]
+    fn future_events_do_not_fire_early() {
+        let plan = FaultPlan::parse("kill:0@60000", 1).unwrap();
+        let armed = plan.arm();
+        assert!(!armed.kill_due(0), "a minute out must not fire at arm time");
+    }
+
+    #[test]
+    fn sync_drop_is_level_triggered() {
+        let armed = FaultPlan::parse("drop-sync@0", 1).unwrap().arm();
+        assert!(armed.journal_sync_dropped());
+        assert!(armed.journal_sync_dropped(), "not one-shot");
+        let clean = FaultPlan::none().arm();
+        assert!(!clean.journal_sync_dropped());
+    }
+
+    #[test]
+    fn conn_delay_reports_slow_conn() {
+        let armed = FaultPlan::parse("slow-conn:7", 1).unwrap().arm();
+        assert_eq!(armed.conn_delay(), Some(Duration::from_millis(7)));
+        assert_eq!(FaultPlan::none().arm().conn_delay(), None);
+    }
+}

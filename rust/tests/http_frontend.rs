@@ -25,8 +25,9 @@ use dsde::engine::engine::Engine;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::server::client;
 use dsde::server::http::{serve_router_with, ConnLimits, ServeOptions, ServerHandle};
-use dsde::server::router::EngineRouter;
+use dsde::server::router::{EngineRouter, RouterOptions};
 use dsde::sim::regime::DatasetProfile;
+use dsde::util::fault::FaultPlan;
 
 /// One front-end configuration under test.
 #[derive(Clone, Copy)]
@@ -332,6 +333,57 @@ fn event_loop_abort_terminates_open_streams() {
             "{}",
             fe.label
         );
+        h.shutdown();
+    }
+}
+
+/// Replica failure mid-stream: the serving replica is killed (injected
+/// panic) while a stream that cannot finish on its own is in flight.  In
+/// every front-end configuration the client must receive an `aborted`
+/// terminal frame — never a hang, never a truncated body — whether the
+/// terminal travels the threaded reply channel or is synthesized on the
+/// loop shard when the dead replica's SPSC ring closes.
+#[test]
+fn replica_failure_mid_stream_yields_aborted_terminal() {
+    for fe in CONFIGS {
+        // round-robin sends the first (only) stream to replica 0, which
+        // the fault plan kills 400ms in — after the stream has progressed
+        // past the point of safe replay, so failover must abort it
+        let engines = vec![sim_engine(1, 4, 1 << 20), sim_engine(2, 4, 1 << 20)];
+        let plan = FaultPlan::parse("kill:0@400", engines.len()).unwrap();
+        let router = EngineRouter::with_router_options(
+            engines,
+            RoutePolicy::RoundRobin,
+            false,
+            RouterOptions {
+                stall_ms: 5_000,
+                fault: Some(plan),
+            },
+        );
+        let h = serve_router_with(router, "127.0.0.1:0", opts_for(fe, ConnLimits::default()))
+            .unwrap();
+        let addr = h.addr.to_string();
+        let c = std::thread::spawn(move || {
+            client::complete_streaming(&addr, "doomed stream", 200_000, 0.0).unwrap()
+        });
+        let t0 = Instant::now();
+        while h.router().replica_failures() == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(15),
+                "{}: injected kill never detected",
+                fe.label
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // Ok(..) from the client proves a well-formed terminated stream
+        let r = c.join().unwrap();
+        assert_eq!(
+            r.finale.get("finish_reason").and_then(|f| f.as_str()),
+            Some("aborted"),
+            "{}: mid-stream failure must surface as an aborted terminal",
+            fe.label
+        );
+        assert_eq!(h.router().replica_failures(), 1, "{}", fe.label);
         h.shutdown();
     }
 }

@@ -1,0 +1,219 @@
+//! Property tests for the write-ahead serving journal.
+//!
+//! The recovery contract under test: for **any** sequence of journaled
+//! submits and completion markers, and **any** crash point — a prefix cut
+//! at a record boundary, or a torn partial final line — reloading the
+//! journal reconstructs a consistent state: every submit that made it to
+//! disk is recovered (no request lost), no request is counted complete
+//! twice, and `unfinished()` is exactly the submitted-but-not-completed
+//! set (so a resume neither drops nor duplicates work).  Corruption
+//! *inside* the file (not a torn tail) must be reported as an error, not
+//! silently skipped.
+
+use std::collections::HashSet;
+
+use dsde::engine::request::{Request, SamplingParams};
+use dsde::server::journal::{self, Journal};
+use dsde::util::proptest::{check, forall};
+use dsde::util::rng::Rng;
+
+/// One journaled event in a generated history.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Submit(u64),
+    Complete(u64),
+}
+
+/// A generated crash scenario: a valid event history plus a cut point
+/// (how many whole records survive the crash) and whether the record
+/// after the cut additionally survives as a torn half-written line.
+#[derive(Debug, Clone)]
+struct Scenario {
+    ops: Vec<Op>,
+    cut: usize,
+    torn_tail: bool,
+}
+
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    let n = 1 + rng.range(0, 10);
+    let mut ops = Vec::new();
+    let mut open: Vec<u64> = Vec::new();
+    for id in 1..=(n as u64) {
+        ops.push(Op::Submit(id));
+        open.push(id);
+        while !open.is_empty() && rng.chance(0.4) {
+            let i = rng.range(0, open.len());
+            ops.push(Op::Complete(open.remove(i)));
+        }
+    }
+    while !open.is_empty() && rng.chance(0.6) {
+        let i = rng.range(0, open.len());
+        ops.push(Op::Complete(open.remove(i)));
+    }
+    let cut = rng.range(0, ops.len() + 1);
+    Scenario {
+        ops,
+        cut,
+        torn_tail: rng.chance(0.5),
+    }
+}
+
+fn request(id: u64, rng: &mut Rng) -> Request {
+    let mut r = Request::new(
+        id,
+        vec![65; 1 + rng.range(0, 32)],
+        SamplingParams {
+            temperature: 0.0,
+            max_tokens: 1 + rng.range(0, 64),
+            stop_token: None,
+        },
+    );
+    r.id = id;
+    r
+}
+
+/// Write the full history to `path`, then crash it: keep `cut` whole
+/// records, plus (optionally) a torn half of the next record.
+fn write_crashed(path: &str, sc: &Scenario, rng: &mut Rng) {
+    {
+        let jnl = Journal::create(path, "prop").unwrap();
+        for op in &sc.ops {
+            match op {
+                Op::Submit(id) => jnl.record_submit(&request(*id, rng)),
+                Op::Complete(id) => jnl.record_complete(*id, "max_tokens"),
+            }
+        }
+        jnl.sync();
+    }
+    let content = std::fs::read_to_string(path).unwrap();
+    let lines: Vec<&str> = content.lines().collect();
+    assert_eq!(lines.len(), sc.ops.len(), "one record per event");
+    let mut crashed: String = lines[..sc.cut]
+        .iter()
+        .map(|l| format!("{l}\n"))
+        .collect();
+    if sc.torn_tail {
+        if let Some(next) = lines.get(sc.cut) {
+            // a torn write: half the record, no trailing newline
+            crashed.push_str(&next[..next.len() / 2]);
+        }
+    }
+    std::fs::write(path, crashed).unwrap();
+}
+
+fn temp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("dsde-journal-prop-{tag}-{}.ndjson", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// Any prefix crash (with or without a torn tail) reloads into exactly
+/// the state the surviving whole records describe.
+#[test]
+fn any_crash_point_resumes_consistently() {
+    let path = temp_path("crash");
+    forall(0xD5DE, 64, gen_scenario, |sc| {
+        let mut rng = Rng::new(7);
+        write_crashed(&path, sc, &mut rng);
+        let state = journal::load(&path).map_err(|e| format!("load failed: {e:#}"))?;
+
+        // oracle: replay the surviving whole records in plain code
+        let mut want_submits: Vec<u64> = Vec::new();
+        let mut want_done: HashSet<u64> = HashSet::new();
+        for op in &sc.ops[..sc.cut] {
+            match op {
+                Op::Submit(id) => want_submits.push(*id),
+                Op::Complete(id) => {
+                    want_done.insert(*id);
+                }
+            }
+        }
+
+        let got_submits: Vec<u64> = state.submits.iter().map(|s| s.id).collect();
+        check(
+            got_submits == want_submits,
+            format!("submits lost or reordered: {got_submits:?} != {want_submits:?}"),
+        )?;
+        let got_done: HashSet<u64> = state.completed.keys().copied().collect();
+        check(
+            got_done == want_done,
+            format!("completions diverge: {got_done:?} != {want_done:?}"),
+        )?;
+        check(state.double_completed == 0, "phantom double-completion")?;
+        check(state.orphan_completes == 0, "phantom orphan completion")?;
+        check(
+            state.truncated == (sc.torn_tail && sc.cut < sc.ops.len()),
+            format!("torn-tail detection wrong (truncated={})", state.truncated),
+        )?;
+
+        // resume view: unfinished is exactly submitted-minus-completed —
+        // nothing lost, nothing double-run
+        let unfinished: Vec<u64> = state.unfinished().iter().map(|r| r.id).collect();
+        let want_unfinished: Vec<u64> = want_submits
+            .iter()
+            .copied()
+            .filter(|id| !want_done.contains(id))
+            .collect();
+        check(
+            unfinished == want_unfinished,
+            format!("resume set wrong: {unfinished:?} != {want_unfinished:?}"),
+        )?;
+        for r in state.unfinished() {
+            check(r.params.max_tokens >= 1, "recovered request lost its budget")?;
+            check(!r.prompt.is_empty(), "recovered request lost its prompt")?;
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Corruption strictly inside the file — not a torn final line — is an
+/// error: silently skipping a mid-file record could resurrect completed
+/// work or drop live work.
+#[test]
+fn mid_file_corruption_is_an_error_not_a_skip() {
+    let path = temp_path("corrupt");
+    {
+        let jnl = Journal::create(&path, "prop").unwrap();
+        let mut rng = Rng::new(3);
+        for id in 1..=3u64 {
+            jnl.record_submit(&request(id, &mut rng));
+        }
+        jnl.sync();
+    }
+    let content = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = content.lines().collect();
+    let broken = format!("{}\n{{half a rec\n{}\n", lines[0], lines[2]);
+    std::fs::write(&path, broken).unwrap();
+    assert!(
+        journal::load(&path).is_err(),
+        "mid-file garbage must fail the load"
+    );
+    assert!(journal::verify(&path).is_err(), "verify must also reject it");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `verify` smoke: a clean journal passes and the report names the
+/// request counts; a journal with unfinished work still verifies (that is
+/// the resume case, not corruption).
+#[test]
+fn verify_reports_clean_and_unfinished_journals() {
+    let path = temp_path("verify");
+    {
+        let jnl = Journal::create(&path, "prop").unwrap();
+        let mut rng = Rng::new(5);
+        for id in 1..=4u64 {
+            jnl.record_submit(&request(id, &mut rng));
+        }
+        jnl.record_complete(1, "max_tokens");
+        jnl.record_complete(2, "aborted");
+        jnl.sync();
+    }
+    let report = journal::verify(&path).expect("unfinished work is not corruption");
+    assert!(report.contains('4'), "submit count missing from report: {report}");
+    let state = journal::load(&path).unwrap();
+    assert_eq!(state.unfinished().len(), 2);
+    let _ = std::fs::remove_file(&path);
+}
