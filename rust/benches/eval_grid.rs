@@ -2,10 +2,15 @@
 //! the paper-style Markdown table.  Mainly a bitrot guard for the eval
 //! subsystem from the bench side — the CI `eval-smoke` job exercises the
 //! same path through the `pallas eval` CLI.
+//!
+//! A second pass reruns a two-point arrival-rate ramp with the goodput
+//! controller closed around the engine (`--spec-control goodput`), the
+//! configuration the paper's low-acceptance robustness claim maps to.
 
 use std::time::Instant;
 
-use dsde::eval::{run_grid, GridSpec};
+use dsde::config::SpecControl;
+use dsde::eval::{run_grid, ArrivalSpec, GridSpec};
 use dsde::util::cli::Args;
 
 fn main() {
@@ -27,5 +32,35 @@ fn main() {
         "\n{} cell(s) in {:.2}s",
         report.cells.len(),
         t0.elapsed().as_secs_f64()
+    );
+
+    // controlled ramp: one workload/policy point swept across a light and
+    // a heavy Poisson arrival rate with the controller on — the cells
+    // must complete and report a cap trajectory endpoint
+    let mut ramp = GridSpec::default_grid().smoke();
+    ramp.workloads.truncate(1);
+    ramp.policies.truncate(1);
+    ramp.requests = 4;
+    ramp.arrivals = vec![
+        ArrivalSpec::Poisson { rate: 8.0 },
+        ArrivalSpec::Poisson { rate: 64.0 },
+    ];
+    ramp.control = SpecControl::Goodput;
+    let t1 = Instant::now();
+    let controlled = run_grid(&ramp, |i, total, label| {
+        eprintln!("[ctl {:>3}/{total}] {label}", i + 1);
+    })
+    .expect("controlled ramp run");
+    for c in &controlled.cells {
+        assert!(
+            !c.cap_trajectory.is_empty(),
+            "controlled cell must record a cap trajectory"
+        );
+    }
+    print!("{}", controlled.to_markdown());
+    println!(
+        "\n{} controlled ramp cell(s) in {:.2}s",
+        controlled.cells.len(),
+        t1.elapsed().as_secs_f64()
     );
 }

@@ -259,6 +259,41 @@ impl PollerKind {
     }
 }
 
+/// Fleet-level speculation control mode (the `--spec-control` CLI
+/// surface).  See [`crate::spec::control`] for the controller itself.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SpecControl {
+    /// No fleet controller: per-sequence SL adaptation and the batch cap
+    /// run exactly as configured, bit-identical to builds without the
+    /// control subsystem.
+    #[default]
+    Off,
+    /// Goodput feedback loop: a control thread samples per-replica
+    /// accepted-tokens/busy-second, batch occupancy, and queue depth, and
+    /// tunes the global SL cap, per-replica speculation aggressiveness,
+    /// and batch admission with hysteresis + a goodput deadband.
+    Goodput,
+}
+
+impl SpecControl {
+    /// Parse CLI shorthand: `off`/`none`, or `goodput`/`on`.
+    pub fn parse(s: &str) -> Option<SpecControl> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(SpecControl::Off),
+            "goodput" | "on" => Some(SpecControl::Goodput),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase wire/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecControl::Off => "off",
+            SpecControl::Goodput => "goodput",
+        }
+    }
+}
+
 /// Multi-replica serving configuration (the `--replicas` / `--route` /
 /// `--frontend` CLI surface): how many engine replicas the router owns,
 /// how it picks one per request, and which HTTP front-end faces the
@@ -300,6 +335,8 @@ pub struct RouterConfig {
     /// only): scheduled replica kills/stalls, journal-sync drops, and
     /// connection slowdowns.  `None` = no faults.
     pub fault: Option<FaultPlan>,
+    /// Fleet-level speculation control (`--spec-control off|goodput`).
+    pub control: SpecControl,
 }
 
 impl Default for RouterConfig {
@@ -315,6 +352,7 @@ impl Default for RouterConfig {
             stall_ms: 10_000,
             resume: None,
             fault: None,
+            control: SpecControl::Off,
         }
     }
 }
@@ -371,6 +409,7 @@ impl RouterConfig {
                     None => Json::Null,
                 },
             )
+            .set("control", self.control.name())
     }
 }
 
@@ -466,6 +505,7 @@ mod tests {
         assert!(s.contains("\"stall_ms\":10000"));
         assert!(s.contains("\"resume\":null"));
         assert!(s.contains("\"fault\":null"));
+        assert!(s.contains("\"control\":\"off\""));
         let zero_shards = RouterConfig {
             loop_shards: 0,
             ..Default::default()
@@ -513,6 +553,17 @@ mod tests {
         assert_eq!(PollerKind::parse("kqueue"), None);
         assert_eq!(PollerKind::Epoll.name(), "epoll");
         assert_eq!(PollerKind::default(), PollerKind::Auto);
+    }
+
+    #[test]
+    fn spec_control_parse() {
+        assert_eq!(SpecControl::parse("off"), Some(SpecControl::Off));
+        assert_eq!(SpecControl::parse("none"), Some(SpecControl::Off));
+        assert_eq!(SpecControl::parse("GOODPUT"), Some(SpecControl::Goodput));
+        assert_eq!(SpecControl::parse("on"), Some(SpecControl::Goodput));
+        assert_eq!(SpecControl::parse("nope"), None);
+        assert_eq!(SpecControl::Goodput.name(), "goodput");
+        assert_eq!(SpecControl::default(), SpecControl::Off);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! round's modeled cost.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -32,6 +33,7 @@ use super::step::{PlanOutcome, StepReport};
 use crate::config::EngineConfig;
 use crate::model::traits::SpecModel;
 use crate::spec::adapter::{make_policy, SlPolicy};
+use crate::spec::control::ControlCell;
 
 /// A cheap cross-thread load snapshot of one engine replica, published by
 /// the serving layer after every step and consumed by the router's
@@ -87,6 +89,7 @@ pub struct Engine {
     pub(crate) clock: f64,
     pub(crate) real_t0: Instant,
     pub(crate) uses_virtual_time: bool,
+    pub(crate) control: Option<Arc<ControlCell>>,
 }
 
 impl Engine {
@@ -120,7 +123,16 @@ impl Engine {
             clock: 0.0,
             real_t0: Instant::now(),
             uses_virtual_time: false,
+            control: None,
         }
+    }
+
+    /// Attach the fleet controller's per-replica actuator mailbox (see
+    /// [`crate::spec::control::ControlCell`]).  The plan stage reads it
+    /// once per step; with no cell attached (or a neutral cell) planning
+    /// is bit-identical to an uncontrolled engine.
+    pub fn set_control(&mut self, cell: Arc<ControlCell>) {
+        self.control = Some(cell);
     }
 
     /// Current engine time (virtual or wall).

@@ -51,8 +51,25 @@ impl Scheduler {
         running: &mut Vec<SeqState>,
         kv: &mut KvCache,
     ) -> usize {
+        self.admit_bounded(waiting, running, kv, usize::MAX)
+    }
+
+    /// [`Scheduler::admit`] with an additional batch bound: admission stops
+    /// at `min(max_batch, limit)`.  The fleet controller's admission
+    /// throttle ([`crate::spec::control`]) passes a fraction of
+    /// `max_batch` here under saturation; everything else admits with
+    /// `usize::MAX` (no extra bound).  Sequences already running above the
+    /// limit are never evicted — the bound only gates new admissions.
+    pub fn admit_bounded(
+        &self,
+        waiting: &mut VecDeque<SeqState>,
+        running: &mut Vec<SeqState>,
+        kv: &mut KvCache,
+        limit: usize,
+    ) -> usize {
+        let bound = self.max_batch.min(limit);
         let mut admitted = 0;
-        while running.len() < self.max_batch {
+        while running.len() < bound {
             let Some(seq) = waiting.front() else { break };
             let need = Self::lookahead_tokens(seq.tokens.len(), 1);
             if kv.ensure(seq.id, need).is_err() {
@@ -139,6 +156,25 @@ mod tests {
         assert_eq!(n, 2);
         assert_eq!(running.len(), 2);
         assert_eq!(waiting.len(), 2);
+    }
+
+    #[test]
+    fn admit_bounded_gates_below_max_batch() {
+        let s = Scheduler::new(4);
+        let mut waiting: VecDeque<_> = (0..4).map(|i| seq(i, 8)).collect();
+        let mut running = Vec::new();
+        let mut kv = KvCache::new(64, 16);
+        let n = s.admit_bounded(&mut waiting, &mut running, &mut kv, 2);
+        assert_eq!(n, 2, "the controller limit wins over max_batch");
+        // an over-full batch (preemption re-queue churn) admits nothing
+        // but is never evicted by the bound
+        let n = s.admit_bounded(&mut waiting, &mut running, &mut kv, 1);
+        assert_eq!(n, 0);
+        assert_eq!(running.len(), 2);
+        // MAX restores plain admit semantics
+        let n = s.admit_bounded(&mut waiting, &mut running, &mut kv, usize::MAX);
+        assert_eq!(n, 2);
+        assert_eq!(running.len(), 4);
     }
 
     #[test]

@@ -119,9 +119,20 @@ impl Engine {
     /// touches the clock or round metrics (those belong to
     /// [`Engine::apply`]).
     pub fn plan(&mut self) -> PlanOutcome {
-        let admitted =
-            self.scheduler
-                .admit(&mut self.waiting, &mut self.running, &mut self.kv);
+        // fleet-controller actuators, sampled once per step so admission
+        // and SL capping see the same decision (None = no controller
+        // attached: the entire control path below is a no-op)
+        let ctrl = self.control.as_ref().map(|c| c.view());
+        let admit_limit = match &ctrl {
+            Some(v) => (((self.cfg.max_batch as f64) * v.admit_frac) as usize).max(1),
+            None => usize::MAX,
+        };
+        let admitted = self.scheduler.admit_bounded(
+            &mut self.waiting,
+            &mut self.running,
+            &mut self.kv,
+            admit_limit,
+        );
         if self.running.is_empty() {
             // nothing admitted and nothing running: either drained, or the
             // head-of-line prompt can never fit (caller's capacity problem)
@@ -148,6 +159,11 @@ impl Engine {
         let max_sl_pre_cap = sls.iter().copied().max().unwrap_or(0);
         if speculative {
             cap::apply_cap(self.cfg.cap_mode, &mut sls);
+            if let Some(view) = &ctrl {
+                // controller throttle applies after the batch-consensus
+                // cap, so its shavings land in cap_savings below
+                cap::apply_control(view, &mut sls);
+            }
         }
         let max_sl_post_cap = sls.iter().copied().max().unwrap_or(0);
 
@@ -459,6 +475,46 @@ mod tests {
             "tight KV must preempt the tail: {plan:?}"
         );
         assert_eq!(plan.batch, plan.sls.len());
+    }
+
+    #[test]
+    fn plan_honors_control_actuators() {
+        use crate::spec::control::ControlCell;
+        use std::sync::Arc;
+        let mut e = default_engine();
+        let cell = Arc::new(ControlCell::new());
+        cell.store(1, 0.5, 1.0); // SL cap 1, admit half the batch
+        e.set_control(cell);
+        submit_n(&mut e, 6, 32);
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        assert_eq!(plan.batch, 2, "admission gated to max_batch/2");
+        assert!(plan.sls.iter().all(|&sl| sl == 1), "sls {:?}", plan.sls);
+        assert_eq!(
+            plan.cap_savings,
+            plan.max_sl_pre_cap - 1,
+            "control shavings are accounted as cap savings"
+        );
+    }
+
+    #[test]
+    fn neutral_control_cell_plans_identically() {
+        use crate::spec::control::ControlCell;
+        use std::sync::Arc;
+        let mut plain = default_engine();
+        let mut ctl = default_engine();
+        ctl.set_control(Arc::new(ControlCell::new()));
+        submit_n(&mut plain, 6, 32);
+        submit_n(&mut ctl, 6, 32);
+        let (PlanOutcome::Run(a), PlanOutcome::Run(b)) = (plain.plan(), ctl.plan())
+        else {
+            panic!("expected runnable plans")
+        };
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.sls, b.sls);
+        assert_eq!(a.admitted, b.admitted);
+        assert_eq!(a.cap_savings, b.cap_savings);
     }
 
     // ---- execute --------------------------------------------------------

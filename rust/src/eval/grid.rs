@@ -1,7 +1,7 @@
 //! Grid expansion: the axes of the evaluation space and their cartesian
 //! product into runnable [`CellSpec`]s.
 
-use crate::config::{CapMode, RoutePolicy, SlPolicyKind};
+use crate::config::{CapMode, RoutePolicy, SlPolicyKind, SpecControl};
 use crate::model::sim_lm::SimPairKind;
 use crate::repro::ExperimentSpec;
 use crate::sim::regime::DatasetProfile;
@@ -107,6 +107,38 @@ impl ArrivalSpec {
         }
     }
 
+    /// Parse a comma-separated arrival list — the eval arrival-rate axis,
+    /// e.g. `poisson:8,poisson:64` (an arrival-rate ramp).  A new entry
+    /// starts at each fragment that begins with an arrival keyword, so
+    /// bursty's own comma-separated parameters need no escaping:
+    /// `closed,bursty:2,40,8,2` is two entries.
+    pub fn parse_list(s: &str) -> Option<Vec<ArrivalSpec>> {
+        let mut specs: Vec<String> = Vec::new();
+        for frag in s.split(',') {
+            let frag = frag.trim();
+            if frag.is_empty() {
+                continue;
+            }
+            let lower = frag.to_ascii_lowercase();
+            if lower == "closed"
+                || lower.starts_with("poisson:")
+                || lower.starts_with("bursty:")
+            {
+                specs.push(frag.to_string());
+            } else {
+                // continuation fragment: trailing bursty parameters
+                let last = specs.last_mut()?;
+                last.push(',');
+                last.push_str(frag);
+            }
+        }
+        let out: Vec<ArrivalSpec> = specs
+            .iter()
+            .map(|s| ArrivalSpec::parse(s))
+            .collect::<Option<_>>()?;
+        (!out.is_empty()).then_some(out)
+    }
+
     /// Stable label for reports and progress lines.
     pub fn label(&self) -> String {
         match self {
@@ -156,8 +188,12 @@ pub struct GridSpec {
     pub route: RoutePolicy,
     /// Drain-tail work stealing (multi-replica cells).
     pub steal: bool,
-    /// Arrival overlay applied to every cell.
-    pub arrivals: ArrivalSpec,
+    /// Arrival-rate axis: one cell per overlay (a multi-entry list is an
+    /// arrival-rate ramp, e.g. `poisson:8,poisson:64`).
+    pub arrivals: Vec<ArrivalSpec>,
+    /// Closed-loop speculation control applied to every cell
+    /// (`--spec-control`; see [`crate::spec::control`]).
+    pub control: SpecControl,
     /// Sampling temperature.
     pub temperature: f64,
     /// Seed for model, engine, and workload streams.
@@ -192,7 +228,8 @@ impl GridSpec {
             replicas: 1,
             route: RoutePolicy::RoundRobin,
             steal: false,
-            arrivals: ArrivalSpec::Closed,
+            arrivals: vec![ArrivalSpec::Closed],
+            control: SpecControl::Off,
             temperature: 0.0,
             seed: 0,
             max_prompt: 96,
@@ -226,21 +263,24 @@ impl GridSpec {
             for p in &self.policies {
                 for &d in &self.divergences {
                     for &b in &self.batches {
-                        out.push(CellSpec {
-                            workload: w.clone(),
-                            policy: p.clone(),
-                            divergence: d,
-                            batch: b,
-                            requests: self.requests,
-                            replicas: self.replicas,
-                            route: self.route,
-                            steal: self.steal,
-                            arrivals: self.arrivals,
-                            temperature: self.temperature,
-                            seed: self.seed,
-                            max_prompt: self.max_prompt,
-                            max_output: self.max_output,
-                        });
+                        for &a in &self.arrivals {
+                            out.push(CellSpec {
+                                workload: w.clone(),
+                                policy: p.clone(),
+                                divergence: d,
+                                batch: b,
+                                requests: self.requests,
+                                replicas: self.replicas,
+                                route: self.route,
+                                steal: self.steal,
+                                arrivals: a,
+                                control: self.control,
+                                temperature: self.temperature,
+                                seed: self.seed,
+                                max_prompt: self.max_prompt,
+                                max_output: self.max_output,
+                            });
+                        }
                     }
                 }
             }
@@ -262,7 +302,11 @@ impl GridSpec {
             .set("replicas", self.replicas)
             .set("route", self.route.name())
             .set("steal", self.steal)
-            .set("arrivals", self.arrivals.label())
+            .set(
+                "arrivals",
+                self.arrivals.iter().map(|a| a.label()).collect::<Vec<_>>(),
+            )
+            .set("control", self.control.name())
             .set("temperature", self.temperature)
             .set("seed", self.seed)
             .set("max_prompt", self.max_prompt)
@@ -291,6 +335,8 @@ pub struct CellSpec {
     pub steal: bool,
     /// Arrival overlay.
     pub arrivals: ArrivalSpec,
+    /// Closed-loop speculation control for this cell.
+    pub control: SpecControl,
     /// Sampling temperature.
     pub temperature: f64,
     /// Seed for model/engine/workload streams.
@@ -302,15 +348,26 @@ pub struct CellSpec {
 }
 
 impl CellSpec {
-    /// Progress-line label, e.g. `cnndm dsde+mean a1.00 b8`.
+    /// Progress-line label, e.g. `cnndm dsde+mean a1.00 b8`; non-default
+    /// arrival overlays and speculation control append their own tags
+    /// (`... poisson:8 ctl:goodput`), so ramp cells stay distinguishable.
     pub fn label(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} {} a{:.2} b{}",
             self.workload,
             self.policy.label(),
             self.divergence,
             self.batch
-        )
+        );
+        if self.arrivals != ArrivalSpec::Closed {
+            s.push(' ');
+            s.push_str(&self.arrivals.label());
+        }
+        if self.control != SpecControl::Off {
+            s.push_str(" ctl:");
+            s.push_str(self.control.name());
+        }
+        s
     }
 
     /// The simulator profile this cell runs against (`None` on an unknown
@@ -371,6 +428,49 @@ mod tests {
         assert!(ArrivalSpec::parse("poisson:-1").is_none());
         assert!(ArrivalSpec::parse("bursty:1,2,3").is_none());
         assert!(ArrivalSpec::parse("nope:1").is_none());
+    }
+
+    #[test]
+    fn arrival_list_parses_ramps_and_bursty_params() {
+        let ramp = ArrivalSpec::parse_list("poisson:8,poisson:64").unwrap();
+        assert_eq!(
+            ramp,
+            vec![
+                ArrivalSpec::Poisson { rate: 8.0 },
+                ArrivalSpec::Poisson { rate: 64.0 }
+            ]
+        );
+        // bursty's own commas are continuation fragments, not new entries
+        let mixed = ArrivalSpec::parse_list("closed,bursty:2,40,8,2").unwrap();
+        assert_eq!(mixed.len(), 2);
+        assert_eq!(mixed[0], ArrivalSpec::Closed);
+        assert!(matches!(mixed[1], ArrivalSpec::Bursty { .. }));
+        assert!(ArrivalSpec::parse_list("").is_none());
+        assert!(ArrivalSpec::parse_list("4,5").is_none(), "dangling params");
+        assert!(ArrivalSpec::parse_list("poisson:8,nope:1").is_none());
+    }
+
+    #[test]
+    fn arrival_axis_multiplies_cells_and_tags_labels() {
+        let mut g = GridSpec::default_grid().smoke();
+        let base = g.cells().len();
+        g.arrivals = vec![
+            ArrivalSpec::Poisson { rate: 8.0 },
+            ArrivalSpec::Poisson { rate: 64.0 },
+        ];
+        g.control = SpecControl::Goodput;
+        let cells = g.cells();
+        assert_eq!(cells.len(), base * 2, "arrivals are a cell axis");
+        assert!(cells[0].label().contains("poisson:8"), "{}", cells[0].label());
+        assert!(
+            cells[0].label().contains("ctl:goodput"),
+            "{}",
+            cells[0].label()
+        );
+        // default cells keep the historical short label
+        let plain = GridSpec::default_grid().smoke().cells();
+        assert!(!plain[0].label().contains("closed"), "{}", plain[0].label());
+        assert!(!plain[0].label().contains("ctl:"), "{}", plain[0].label());
     }
 
     #[test]

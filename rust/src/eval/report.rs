@@ -13,7 +13,8 @@ use crate::util::json::Json;
 pub const REPORT_SCHEMA: &str = "dsde-eval-report-v1";
 
 /// String-typed keys every cell row must carry.
-const CELL_STR_KEYS: &[&str] = &["workload", "policy", "cap", "route", "arrivals"];
+const CELL_STR_KEYS: &[&str] =
+    &["workload", "policy", "cap", "route", "arrivals", "control"];
 
 /// Number-typed keys every cell row must carry.
 const CELL_NUM_KEYS: &[&str] = &[
@@ -37,6 +38,8 @@ const CELL_NUM_KEYS: &[&str] = &[
     "cap_savings",
     "straggler_bubble",
     "preemptions",
+    "sl_cap_final",
+    "control_adjustments",
     "wall_s",
 ];
 

@@ -14,18 +14,21 @@
 //!   Poisson/bursty process up front, and each request's `arrival` is
 //!   backdated so latency/TTFT include the virtual queueing delay.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::grid::{ArrivalSpec, CellSpec, GridSpec};
 use super::report::GridReport;
+use crate::config::SpecControl;
 use crate::engine::engine::Engine;
 use crate::engine::metrics::{MetricsSnapshot, DEFAULT_QUANTILES};
 use crate::engine::request::Request;
 use crate::repro::{build_engine_with_profile, ExperimentSpec};
-use crate::server::router::EngineRouter;
+use crate::server::router::{EngineRouter, RouterOptions};
 use crate::sim::regime::DatasetProfile;
+use crate::spec::control::{ControlCell, ControlConfig, Controller, ReplicaSample};
 use crate::util::json::Json;
 use crate::workload::{
     BurstyArrivals, Dataset, MixedWorkloadGen, PoissonArrivals, RequestSource, WorkloadGen,
@@ -38,6 +41,13 @@ pub struct CellResult {
     pub cell: CellSpec,
     /// Pre-reduced engine metrics, aggregated across the cell's replicas.
     pub metrics: MetricsSnapshot,
+    /// SL-cap trajectory of the goodput controller, one entry per control
+    /// tick.  Populated only by the deterministic single-engine drivers
+    /// (virtual-clock ticks; identical across runs of the same cell);
+    /// empty with control off or on the wall-clock routed path.
+    pub cap_trajectory: Vec<usize>,
+    /// Total controller actuations (0 with control off).
+    pub control_adjustments: u64,
     /// Wall-clock seconds the cell took to execute.
     pub wall_s: f64,
 }
@@ -81,6 +91,12 @@ impl CellResult {
             .set("cap_savings", m.cap_savings)
             .set("straggler_bubble", m.straggler_bubble)
             .set("preemptions", m.preemptions)
+            .set("control", self.cell.control.name())
+            .set(
+                "sl_cap_final",
+                self.cap_trajectory.last().copied().unwrap_or(0),
+            )
+            .set("control_adjustments", self.control_adjustments)
             .set("wall_s", self.wall_s)
     }
 }
@@ -103,17 +119,120 @@ fn source_for(cell: &CellSpec) -> Result<Box<dyn RequestSource>> {
     ))
 }
 
+/// Engine steps between virtual control ticks (the deterministic stand-in
+/// for the serving controller's wall-clock `interval_ms`).
+const CONTROL_TICK_STEPS: u64 = 4;
+
+/// Virtual-clock closed-loop driver: ticks a [`Controller`] every
+/// [`CONTROL_TICK_STEPS`] engine steps from engine-truth gauges, so the
+/// control trajectory is a pure function of the step sequence — no wall
+/// clock anywhere.  Two runs of the same cell produce identical cap
+/// trajectories, outputs, and metrics (the determinism contract the
+/// integration tests pin down).
+struct VirtualControl {
+    ctrl: Controller,
+    cell: Arc<ControlCell>,
+    max_batch: usize,
+    steps: u64,
+    last_accepted: u64,
+    last_busy: f64,
+    trajectory: Vec<usize>,
+}
+
+impl VirtualControl {
+    /// Attach a controller to the engine when the cell asks for one.
+    fn attach(cell: &CellSpec, engine: &mut Engine) -> Option<VirtualControl> {
+        if cell.control != SpecControl::Goodput {
+            return None;
+        }
+        let cfg = ControlConfig {
+            cap_max: engine.cfg.spec_k.max(1),
+            ..Default::default()
+        };
+        let actuator = Arc::new(ControlCell::new());
+        engine.set_control(actuator.clone());
+        Some(VirtualControl {
+            ctrl: Controller::new(cfg),
+            cell: actuator,
+            max_batch: engine.cfg.max_batch,
+            steps: 0,
+            last_accepted: 0,
+            last_busy: 0.0,
+            trajectory: Vec::new(),
+        })
+    }
+
+    /// Count one engine step; on every tick boundary, sample the engine
+    /// and actuate.
+    fn after_step(&mut self, engine: &Engine) {
+        self.steps += 1;
+        if self.steps % CONTROL_TICK_STEPS != 0 {
+            return;
+        }
+        let snap = engine.load_snapshot();
+        let accepted = engine.metrics.accepted;
+        let busy = engine.metrics.busy_time;
+        let d_acc = accepted.saturating_sub(self.last_accepted);
+        let d_busy = busy - self.last_busy;
+        self.last_accepted = accepted;
+        self.last_busy = busy;
+        let goodput = if d_busy > 0.0 {
+            d_acc as f64 / d_busy
+        } else {
+            0.0
+        };
+        let occupancy = if self.max_batch == 0 {
+            0.0
+        } else {
+            snap.in_flight as f64 / self.max_batch as f64
+        };
+        let sample = ReplicaSample {
+            goodput,
+            occupancy,
+            queue: snap.queued_requests,
+            stale: false,
+        };
+        let d = self.ctrl.tick(&[sample]);
+        self.cell.store(d.sl_cap, d.admit_frac, d.aggressiveness[0]);
+        self.trajectory.push(d.sl_cap);
+    }
+
+    /// Reduce to the [`CellResult`] controller fields.
+    fn into_outcome(self) -> (Vec<usize>, u64) {
+        let adjustments = self.ctrl.adjustments();
+        (self.trajectory, adjustments)
+    }
+}
+
+/// `(aggregated metrics, cap trajectory, controller adjustments)` of one
+/// executed cell driver.
+type DriverOutcome = (MetricsSnapshot, Vec<usize>, u64);
+
 fn run_closed_single(
+    cell: &CellSpec,
     spec: &ExperimentSpec,
     profile: DatasetProfile,
     reqs: Vec<Request>,
-) -> Result<MetricsSnapshot> {
+) -> Result<DriverOutcome> {
     let mut engine = build_engine_with_profile(spec, profile);
+    let mut vc = VirtualControl::attach(cell, &mut engine);
     for r in reqs {
         engine.submit(r);
     }
-    engine.run_to_completion();
-    Ok(engine.metrics.snapshot(DEFAULT_QUANTILES))
+    match &mut vc {
+        None => engine.run_to_completion(),
+        Some(vc) => {
+            // explicit step loop: the controller ticks on step boundaries
+            while engine.pending() > 0 {
+                engine.step().map_err(|e| anyhow!("engine step: {e:#}"))?;
+                vc.after_step(&engine);
+            }
+        }
+    }
+    let snap = engine.metrics.snapshot(DEFAULT_QUANTILES);
+    let (trajectory, adjustments) =
+        vc.map(VirtualControl::into_outcome).unwrap_or_default();
+    Ok((snap, trajectory, adjustments))
 }
 
 fn run_closed_routed(
@@ -121,30 +240,46 @@ fn run_closed_routed(
     spec: &ExperimentSpec,
     profile: DatasetProfile,
     reqs: Vec<Request>,
-) -> Result<MetricsSnapshot> {
+) -> Result<DriverOutcome> {
     // every replica gets the SAME model seed: outputs stay a pure function
     // of (seed, id), so placement can never change generation results
     let engines: Vec<Engine> = (0..cell.replicas)
         .map(|_| build_engine_with_profile(spec, profile.clone()))
         .collect();
-    let router = EngineRouter::with_options(engines, cell.route, cell.steal);
+    let router = EngineRouter::with_router_options(
+        engines,
+        cell.route,
+        cell.steal,
+        RouterOptions {
+            control: cell.control,
+            ..Default::default()
+        },
+    );
     let rxs: Vec<_> = reqs.into_iter().map(|r| router.submit(r)).collect();
     for rx in rxs {
         rx.recv()
             .map_err(|_| anyhow!("replica dropped a grid request"))?;
     }
     let snap = router.aggregated_metrics();
+    // the routed controller runs on the wall clock: its adjustment count
+    // is real but its trajectory is not reproducible, so only the final
+    // gauges are reported
+    let adjustments = router
+        .control_gauges()
+        .map(|(_, adj, _)| adj)
+        .unwrap_or(0);
     router.shutdown();
-    Ok(snap)
+    Ok((snap, Vec::new(), adjustments))
 }
 
 fn run_open_loop(
+    cell: &CellSpec,
     spec: &ExperimentSpec,
     profile: DatasetProfile,
     reqs: Vec<Request>,
     arrivals: ArrivalSpec,
     seed: u64,
-) -> Result<MetricsSnapshot> {
+) -> Result<DriverOutcome> {
     let mut times = Vec::with_capacity(reqs.len());
     match arrivals {
         ArrivalSpec::Closed => unreachable!("open-loop driver needs an arrival process"),
@@ -167,6 +302,7 @@ fn run_open_loop(
         }
     }
     let mut engine = build_engine_with_profile(spec, profile);
+    let mut vc = VirtualControl::attach(cell, &mut engine);
     let mut next = 0usize;
     while next < reqs.len() || engine.pending() > 0 {
         if engine.pending() == 0 && next < reqs.len() && times[next] > engine.now() {
@@ -187,8 +323,14 @@ fn run_open_loop(
             next += 1;
         }
         engine.step().map_err(|e| anyhow!("engine step: {e:#}"))?;
+        if let Some(vc) = &mut vc {
+            vc.after_step(&engine);
+        }
     }
-    Ok(engine.metrics.snapshot(DEFAULT_QUANTILES))
+    let snap = engine.metrics.snapshot(DEFAULT_QUANTILES);
+    let (trajectory, adjustments) =
+        vc.map(VirtualControl::into_outcome).unwrap_or_default();
+    Ok((snap, trajectory, adjustments))
 }
 
 /// Execute one grid cell.  Arrival-overlay cells run the single-engine
@@ -209,14 +351,17 @@ pub fn run_cell(cell: &CellSpec) -> Result<CellResult> {
     let spec = cell.experiment();
     let mut source = source_for(cell)?;
     let reqs = source.batch(cell.requests);
-    let metrics = match (cell.arrivals, cell.replicas) {
-        (ArrivalSpec::Closed, 0 | 1) => run_closed_single(&spec, profile, reqs)?,
+    let (metrics, cap_trajectory, control_adjustments) = match (cell.arrivals, cell.replicas)
+    {
+        (ArrivalSpec::Closed, 0 | 1) => run_closed_single(cell, &spec, profile, reqs)?,
         (ArrivalSpec::Closed, _) => run_closed_routed(cell, &spec, profile, reqs)?,
-        (arr, _) => run_open_loop(&spec, profile, reqs, arr, cell.seed)?,
+        (arr, _) => run_open_loop(cell, &spec, profile, reqs, arr, cell.seed)?,
     };
     Ok(CellResult {
         cell: cell.clone(),
         metrics,
+        cap_trajectory,
+        control_adjustments,
         wall_s: t0.elapsed().as_secs_f64(),
     })
 }
@@ -257,6 +402,7 @@ mod tests {
             route: RoutePolicy::RoundRobin,
             steal: false,
             arrivals: ArrivalSpec::Closed,
+            control: SpecControl::Off,
             temperature: 0.0,
             seed: 3,
             max_prompt: 32,
@@ -366,6 +512,56 @@ mod tests {
     #[test]
     fn unknown_workload_is_an_error() {
         assert!(run_cell(&tiny_cell("bogus")).is_err());
+    }
+
+    #[test]
+    fn controlled_cell_completes_and_reports_trajectory() {
+        let mut cell = tiny_cell("cnndm");
+        cell.control = SpecControl::Goodput;
+        cell.requests = 10;
+        let r = run_cell(&cell).unwrap();
+        assert_eq!(r.metrics.completed, 10);
+        assert!(!r.cap_trajectory.is_empty(), "controller must tick");
+        let cap_max = r.cap_trajectory.iter().max().copied().unwrap();
+        assert!(
+            r.cap_trajectory.iter().all(|&c| (1..=cap_max).contains(&c)),
+            "{:?}",
+            r.cap_trajectory
+        );
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"control\":\"goodput\""), "{j}");
+        assert!(j.contains("\"sl_cap_final\""), "{j}");
+    }
+
+    #[test]
+    fn controlled_cell_is_deterministic_including_trajectory() {
+        let mk = |arrivals| {
+            let mut cell = tiny_cell("gsm8k");
+            cell.control = SpecControl::Goodput;
+            cell.arrivals = arrivals;
+            cell.requests = 12;
+            run_cell(&cell).unwrap()
+        };
+        for arrivals in [ArrivalSpec::Closed, ArrivalSpec::Poisson { rate: 40.0 }] {
+            let a = mk(arrivals);
+            let b = mk(arrivals);
+            assert_eq!(a.cap_trajectory, b.cap_trajectory, "{arrivals:?}");
+            assert_eq!(a.control_adjustments, b.control_adjustments);
+            assert_eq!(a.metrics.tokens_out, b.metrics.tokens_out);
+            assert!(
+                (a.metrics.mean_latency() - b.metrics.mean_latency()).abs() < 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn control_off_cell_reports_neutral_row() {
+        let r = run_cell(&tiny_cell("cnndm")).unwrap();
+        assert!(r.cap_trajectory.is_empty());
+        assert_eq!(r.control_adjustments, 0);
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"control\":\"off\""), "{j}");
+        assert!(j.contains("\"sl_cap_final\":0"), "{j}");
     }
 
     #[test]

@@ -24,12 +24,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::{CapMode, EngineConfig, RoutePolicy, SlPolicyKind};
+use crate::config::{CapMode, EngineConfig, RoutePolicy, SlPolicyKind, SpecControl};
 use crate::engine::engine::Engine;
 use crate::engine::metrics::MetricsSnapshot;
 use crate::engine::request::{Request, SamplingParams};
 use crate::model::sim_lm::{SimModel, SimPairKind};
-use crate::server::router::{EngineRouter, RecordHook};
+use crate::server::router::{EngineRouter, RecordHook, RouterOptions};
 use crate::sim::regime::DatasetProfile;
 use crate::util::json::Json;
 
@@ -176,6 +176,10 @@ pub struct ReplayConfig {
     pub seed: u64,
     /// Simulator profile the replay runs against.
     pub profile: DatasetProfile,
+    /// Closed-loop speculation control (`--spec-control`).  The knob
+    /// tunes caps and admission, never token content, so replay output
+    /// bytes are invariant under it — `tests/eval_replay.rs` pins this.
+    pub control: SpecControl,
 }
 
 impl Default for ReplayConfig {
@@ -189,6 +193,7 @@ impl Default for ReplayConfig {
             batch: 8,
             seed: 0,
             profile: DatasetProfile::cnndm(),
+            control: SpecControl::Off,
         }
     }
 }
@@ -252,7 +257,15 @@ pub fn replay(trace: &[TraceEntry], cfg: &ReplayConfig) -> Result<ReplayOutcome>
             Engine::new(ecfg, Box::new(model))
         })
         .collect();
-    let router = EngineRouter::with_options(engines, cfg.route, cfg.steal);
+    let router = EngineRouter::with_router_options(
+        engines,
+        cfg.route,
+        cfg.steal,
+        RouterOptions {
+            control: cfg.control,
+            ..Default::default()
+        },
+    );
     let rxs: Vec<_> = trace
         .iter()
         .map(|e| {

@@ -44,7 +44,7 @@ pub mod workload;
 pub mod prelude {
     pub use crate::config::{
         AdapterConfig, CapMode, EngineConfig, FrontendKind, RoutePolicy, RouterConfig,
-        SlPolicyKind,
+        SlPolicyKind, SpecControl,
     };
     pub use crate::engine::engine::{Engine, StepOutcome};
     pub use crate::engine::metrics::{EngineMetrics, MetricsSnapshot, RequestMetrics};

@@ -21,6 +21,7 @@ use anyhow::Result;
 
 use dsde::config::{
     CapMode, EngineConfig, FrontendKind, PollerKind, RoutePolicy, RouterConfig, SlPolicyKind,
+    SpecControl,
 };
 use dsde::engine::engine::Engine;
 use dsde::eval::{
@@ -63,13 +64,14 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "stall-ms", help: "replica wedge-detection window ms, 0=off (serve)", default: Some("10000") },
     FlagSpec { name: "resume", help: "restore unfinished requests from a journal (serve)", default: None },
     FlagSpec { name: "fault", help: "fault-injection spec, e.g. kill:0@500 (chaos testing)", default: None },
+    FlagSpec { name: "spec-control", help: "off | goodput closed-loop speculation control (serve, eval)", default: Some("off") },
     FlagSpec { name: "grid", help: "grid preset (eval): default", default: Some("default") },
     FlagSpec { name: "smoke", help: "shrink the eval grid to smoke size (flag)", default: None },
     FlagSpec { name: "datasets", help: "eval workloads: names/mixes, comma-separated", default: None },
     FlagSpec { name: "policies", help: "eval policies: <policy>[+<cap>], comma-separated", default: None },
     FlagSpec { name: "divergences", help: "eval alpha scales, comma-separated", default: None },
     FlagSpec { name: "batches", help: "eval batch sizes, comma-separated", default: None },
-    FlagSpec { name: "arrivals", help: "closed | poisson:<rate> | bursty:<b>,<B>,<g>,<l> (eval)", default: Some("closed") },
+    FlagSpec { name: "arrivals", help: "closed | poisson:<rate> | bursty:<b>,<B>,<g>,<l>, comma-list = ramp axis (eval)", default: Some("closed") },
     FlagSpec { name: "out", help: "eval JSON report path", default: Some("eval_report.json") },
     FlagSpec { name: "md", help: "eval Markdown table path", default: Some("eval_report.md") },
     FlagSpec { name: "replay", help: "replay a recorded trace (eval)", default: None },
@@ -123,6 +125,8 @@ fn router_config(args: &Args) -> Result<RouterConfig> {
         stall_ms: args.u64_or("stall-ms", 10_000),
         resume: args.get("resume").map(String::from),
         fault,
+        control: SpecControl::parse(&args.str_or("spec-control", "off"))
+            .ok_or_else(|| anyhow::anyhow!("unknown --spec-control value (off | goodput)"))?,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
@@ -136,6 +140,7 @@ fn build_router(engines: Vec<Engine>, rcfg: &RouterConfig, args: &Args) -> Resul
     let opts = RouterOptions {
         stall_ms: rcfg.stall_ms,
         fault: rcfg.fault.clone(),
+        control: rcfg.control,
     };
     let mut router = EngineRouter::with_router_options(engines, rcfg.policy, rcfg.steal, opts);
     if let Some(path) = &rcfg.record {
@@ -383,6 +388,8 @@ fn eval_cmd(args: &Args) -> Result<()> {
             batch: args.usize_or("batch", 8),
             seed: args.u64_or("seed", 0),
             profile,
+            control: SpecControl::parse(&args.str_or("spec-control", "off"))
+                .ok_or_else(|| anyhow::anyhow!("unknown spec-control mode"))?,
         };
         let outcome = replay(&trace, &cfg)?;
         let m = &outcome.metrics;
@@ -442,8 +449,10 @@ fn eval_cmd(args: &Args) -> Result<()> {
     if !batches.is_empty() {
         grid.batches = batches;
     }
-    grid.arrivals = ArrivalSpec::parse(&args.str_or("arrivals", "closed"))
+    grid.arrivals = ArrivalSpec::parse_list(&args.str_or("arrivals", "closed"))
         .ok_or_else(|| anyhow::anyhow!("bad --arrivals spec"))?;
+    grid.control = SpecControl::parse(&args.str_or("spec-control", "off"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --spec-control value (off | goodput)"))?;
     grid.requests = args.usize_or("requests", grid.requests);
     grid.replicas = args.usize_clamped_or("replicas", grid.replicas, 1, 256);
     grid.route = RoutePolicy::parse(&args.str_or("route", "round-robin"))

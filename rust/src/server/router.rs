@@ -71,12 +71,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::config::RoutePolicy;
+use crate::config::{RoutePolicy, SpecControl};
 use crate::engine::engine::{Engine, ReplicaLoad, StepOutcome};
 use crate::engine::metrics::{MetricsSnapshot, DEFAULT_QUANTILES};
 use crate::engine::request::{FinishReason, FinishedRequest, Request};
 use crate::engine::step::StepReport;
 use crate::log_warn;
+use crate::spec::control::{
+    ControlCell, ControlConfig, ControlExport, Controller, ReplicaSample,
+};
 use crate::util::fault::{ArmedFaults, FaultPlan};
 use crate::util::json::Json;
 use crate::util::spsc;
@@ -431,6 +434,18 @@ pub(crate) struct LoadCell {
     /// wedged.  Routing, stealing, and metrics scrapes skip failed
     /// replicas; the replica thread itself exits on observing the flag.
     failed: AtomicBool,
+    /// Engine `max_batch` (immutable; controller occupancy denominator).
+    max_batch: usize,
+    /// Cumulative accepted draft tokens (controller goodput numerator).
+    ctl_accepted: AtomicU64,
+    /// Cumulative round cost in microseconds (goodput denominator).
+    ctl_busy_us: AtomicU64,
+    /// Last metrics snapshot the replica published while healthy — the
+    /// "black box" served instead of a live scrape once the replica is
+    /// failed or gone, so work it delivered before dying stays in fleet
+    /// aggregates exactly once (resubmitted requests accrue only on
+    /// their new owner).
+    retained: Mutex<MetricsSnapshot>,
 }
 
 impl LoadCell {
@@ -446,6 +461,10 @@ impl LoadCell {
             channel_requests: AtomicUsize::new(0),
             channel_tokens: AtomicUsize::new(0),
             failed: AtomicBool::new(false),
+            max_batch: engine.cfg.max_batch,
+            ctl_accepted: AtomicU64::new(0),
+            ctl_busy_us: AtomicU64::new(0),
+            retained: Mutex::new(MetricsSnapshot::default()),
         }
     }
 
@@ -478,6 +497,42 @@ impl LoadCell {
     fn queued_total(&self) -> usize {
         self.queued_requests.load(Ordering::SeqCst)
             + self.channel_requests.load(Ordering::SeqCst)
+    }
+
+    /// Replica thread: accumulate controller inputs after a ran round.
+    fn note_step(&self, accepted: usize, cost: f64) {
+        self.ctl_accepted.fetch_add(accepted as u64, Ordering::Relaxed);
+        self.ctl_busy_us
+            .fetch_add((cost * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Controller: cumulative (accepted tokens, busy µs) counters.
+    fn control_counters(&self) -> (u64, u64) {
+        (
+            self.ctl_accepted.load(Ordering::Relaxed),
+            self.ctl_busy_us.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Controller: running-batch occupancy (the `in_flight` gauge drains
+    /// to zero when the replica idles, unlike a last-round batch size).
+    fn occupancy(&self) -> f64 {
+        if self.max_batch == 0 {
+            return 0.0;
+        }
+        self.in_flight.load(Ordering::SeqCst) as f64 / self.max_batch as f64
+    }
+
+    /// Replica thread: refresh the metrics black box.  Callers gate on
+    /// `!is_failed()` so a condemned replica cannot re-accrue work that
+    /// failover already resubmitted elsewhere.
+    fn record_metrics(&self, snap: MetricsSnapshot) {
+        *self.retained.lock().unwrap() = snap;
+    }
+
+    /// The last snapshot published while the replica was healthy.
+    fn retained_metrics(&self) -> MetricsSnapshot {
+        self.retained.lock().unwrap().clone()
     }
 
     /// Supervisor: declare this replica failed (one-way).
@@ -839,6 +894,19 @@ fn replica_loop(
                         StepOutcome::Retry => true,
                         StepOutcome::Ran(report) => {
                             cell.publish(&report.load);
+                            cell.note_step(report.accepted, report.cost);
+                            // refresh the metrics black box — every step
+                            // under fault injection (failover accounting
+                            // must be step-exact), else amortized (the
+                            // snapshot sorts the retention window)
+                            if (shared.faults.is_some()
+                                || engine.metrics.steps % 64 == 0)
+                                && !cell.is_failed()
+                            {
+                                cell.record_metrics(
+                                    engine.metrics.snapshot(DEFAULT_QUANTILES),
+                                );
+                            }
                             published = true;
                             forward_deltas(report, my_idx, &shared, &mut shards);
                             true
@@ -1256,6 +1324,14 @@ pub struct RouterOptions {
     /// Deterministic fault-injection schedule threaded into the replica
     /// loops and journal (see [`FaultPlan`]).  `None` in production.
     pub fault: Option<FaultPlan>,
+    /// Closed-loop speculation control (`--spec-control`): with
+    /// [`SpecControl::Goodput`] a control thread samples per-replica
+    /// goodput and tunes the fleet-wide SL cap, per-replica speculation
+    /// aggressiveness, and batch admission (see
+    /// [`crate::spec::control`]).  Off by default — the engines then run
+    /// with no controller attached and plan bit-identically to a router
+    /// built without this field.
+    pub control: SpecControl,
 }
 
 impl Default for RouterOptions {
@@ -1263,7 +1339,81 @@ impl Default for RouterOptions {
         RouterOptions {
             stall_ms: 10_000,
             fault: None,
+            control: SpecControl::Off,
         }
+    }
+}
+
+/// Runtime state of the goodput control loop: the `/v1/metrics` export
+/// gauges plus the "dsde-spec-ctl" thread's stop/join plumbing.
+struct ControlState {
+    export: Arc<ControlExport>,
+    stop: Arc<AtomicBool>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// Per-replica handles the control loop samples from (load cell +
+/// liveness) and actuates through (the engine's [`ControlCell`]).
+struct ControlTap {
+    cell: Arc<LoadCell>,
+    alive: Arc<AtomicBool>,
+    actuator: Arc<ControlCell>,
+}
+
+/// Body of the "dsde-spec-ctl" thread: every `cfg.interval_ms` it derives
+/// one [`ReplicaSample`] per replica from the lock-free gauges (goodput =
+/// Δaccepted / Δbusy over the interval), ticks the pure [`Controller`],
+/// and writes the decision into every engine's actuator cell plus the
+/// metrics export.  Wall time only paces sampling — the decision itself
+/// is a pure function of the sample stream (see [`crate::spec::control`]),
+/// which is what the deterministic eval runner exploits by ticking the
+/// same controller from a virtual clock instead.
+fn control_loop(
+    taps: Vec<ControlTap>,
+    cfg: ControlConfig,
+    stop: Arc<AtomicBool>,
+    export: Arc<ControlExport>,
+) {
+    let mut ctrl = Controller::new(cfg);
+    let mut prev: Vec<(u64, u64)> =
+        taps.iter().map(|t| t.cell.control_counters()).collect();
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(cfg.interval_ms));
+        let samples: Vec<ReplicaSample> = taps
+            .iter()
+            .zip(prev.iter_mut())
+            .map(|(tap, last)| {
+                let (acc, busy) = tap.cell.control_counters();
+                let d_acc = acc.saturating_sub(last.0);
+                let d_busy = busy.saturating_sub(last.1);
+                *last = (acc, busy);
+                // a dead or condemned replica keeps its last-published
+                // gauges forever; the controller must hold rather than
+                // chase them (chaos invariant)
+                let stale =
+                    !tap.alive.load(Ordering::SeqCst) || tap.cell.is_failed();
+                let goodput = if d_busy == 0 {
+                    0.0
+                } else {
+                    d_acc as f64 / (d_busy as f64 / 1e6)
+                };
+                ReplicaSample {
+                    goodput,
+                    occupancy: tap.cell.occupancy(),
+                    queue: tap.cell.queued_total(),
+                    stale,
+                }
+            })
+            .collect();
+        let decision = ctrl.tick(&samples);
+        for (i, tap) in taps.iter().enumerate() {
+            tap.actuator.store(
+                decision.sl_cap,
+                decision.admit_frac,
+                decision.aggressiveness[i],
+            );
+        }
+        export.publish(decision.sl_cap, ctrl.adjustments(), ctrl.ref_goodput());
     }
 }
 
@@ -1279,6 +1429,7 @@ pub struct EngineRouter {
     supervisor: Mutex<Option<JoinHandle<()>>>,
     record: Option<RecordHook>,
     shared: Arc<RouterShared>,
+    control: Option<ControlState>,
 }
 
 impl EngineRouter {
@@ -1321,10 +1472,27 @@ impl EngineRouter {
             opts.stall_ms,
             opts.fault.as_ref().map(|p| p.arm()),
         ));
+        // goodput control: each engine observes its own actuator cell;
+        // the control thread (spawned below) writes all of them from the
+        // sampled fleet state
+        let ctl_cells: Vec<Arc<ControlCell>> = if opts.control == SpecControl::Goodput {
+            engines.iter().map(|_| Arc::new(ControlCell::new())).collect()
+        } else {
+            Vec::new()
+        };
+        let cap_max = engines
+            .iter()
+            .map(|e| e.cfg.spec_k)
+            .max()
+            .unwrap_or(1)
+            .max(1);
         let replicas: Vec<Replica> = engines
             .into_iter()
             .enumerate()
-            .map(|(i, engine)| {
+            .map(|(i, mut engine)| {
+                if let Some(c) = ctl_cells.get(i) {
+                    engine.set_control(c.clone());
+                }
                 let (tx, rx) = channel();
                 let load = Arc::new(AtomicUsize::new(0));
                 let cell = Arc::new(LoadCell::new(&engine));
@@ -1383,6 +1551,34 @@ impl EngineRouter {
             .name("dsde-balancer".to_string())
             .spawn(move || supervisor_loop(views, shared_s, steal, stop, stolen))
             .expect("spawn supervisor thread");
+        let control = (opts.control == SpecControl::Goodput).then(|| {
+            let export = Arc::new(ControlExport::default());
+            let stop = Arc::new(AtomicBool::new(false));
+            let taps: Vec<ControlTap> = replicas
+                .iter()
+                .zip(ctl_cells.iter())
+                .map(|(r, actuator)| ControlTap {
+                    cell: r.cell.clone(),
+                    alive: r.alive.clone(),
+                    actuator: actuator.clone(),
+                })
+                .collect();
+            let cfg = ControlConfig {
+                cap_max,
+                ..Default::default()
+            };
+            let stop_t = stop.clone();
+            let export_t = export.clone();
+            let thread = std::thread::Builder::new()
+                .name("dsde-spec-ctl".to_string())
+                .spawn(move || control_loop(taps, cfg, stop_t, export_t))
+                .expect("spawn control thread");
+            ControlState {
+                export,
+                stop,
+                thread: Mutex::new(Some(thread)),
+            }
+        });
         EngineRouter {
             replicas,
             policy,
@@ -1394,6 +1590,7 @@ impl EngineRouter {
             supervisor: Mutex::new(Some(supervisor)),
             record: None,
             shared,
+            control,
         }
     }
 
@@ -1417,6 +1614,24 @@ impl EngineRouter {
         }
         self.record = Some(journal.hook());
         *self.shared.journal.lock().expect("journal lock") = Some(journal);
+    }
+
+    /// The active speculation-control mode (surfaced on `/health` and in
+    /// `/v1/metrics` as `spec_control`).
+    pub fn spec_control(&self) -> SpecControl {
+        if self.control.is_some() {
+            SpecControl::Goodput
+        } else {
+            SpecControl::Off
+        }
+    }
+
+    /// Controller gauges `(current SL cap, total actuations, goodput
+    /// EMA)`; `None` with control off.
+    pub fn control_gauges(&self) -> Option<(usize, u64, f64)> {
+        self.control
+            .as_ref()
+            .map(|c| (c.export.sl_cap(), c.export.adjustments(), c.export.goodput()))
     }
 
     /// Whether a record hook is installed (surfaced on `/health` so an
@@ -1739,19 +1954,26 @@ impl EngineRouter {
             .collect()
     }
 
-    /// Index-aligned per-replica snapshots; `None` for replicas that are
-    /// failed, dead, or do not answer inside [`METRICS_TIMEOUT`] (a
-    /// wedged replica must not hang the metrics endpoint).
+    /// Index-aligned per-replica snapshots.  A replica that is failed,
+    /// dead, or does not answer inside [`METRICS_TIMEOUT`] (a wedged
+    /// replica must not hang the metrics endpoint) is answered from its
+    /// retained black box instead of a live scrape, so work it delivered
+    /// before dying stays in fleet aggregates exactly once — the
+    /// resubmitted remainder accrues only on its new owner.  `None` only
+    /// for a replica with an empty black box and no live answer.
     fn replica_metrics_opt(&self, quantiles: &[f64]) -> Vec<Option<MetricsSnapshot>> {
         self.replicas
             .iter()
             .map(|r| -> Option<MetricsSnapshot> {
-                if r.cell.is_failed() {
-                    return None;
-                }
-                let (tx, rx) = channel();
-                r.tx.send(EngineMsg::Metrics(quantiles.to_vec(), tx)).ok()?;
-                rx.recv_timeout(METRICS_TIMEOUT).ok()
+                let live = (|| {
+                    if r.cell.is_failed() {
+                        return None;
+                    }
+                    let (tx, rx) = channel();
+                    r.tx.send(EngineMsg::Metrics(quantiles.to_vec(), tx)).ok()?;
+                    rx.recv_timeout(METRICS_TIMEOUT).ok()
+                })();
+                live.or_else(|| Some(r.cell.retained_metrics()))
             })
             .collect()
     }
@@ -1801,8 +2023,9 @@ impl EngineRouter {
             .enumerate()
             .map(|(i, m)| {
                 let lc = cells.get(i).copied().unwrap_or_default();
-                // a failed replica answers no metrics scrape; its counters
-                // render as zeros and `failed` tells the operator why
+                // a failed replica answers from its retained black box
+                // (its delivered pre-failure work, counted exactly once);
+                // `failed` tells the operator why the row is frozen
                 let m = m.clone().unwrap_or_default();
                 Json::obj()
                     .set("replica", i)
@@ -1824,6 +2047,19 @@ impl EngineRouter {
             .journal()
             .map(|j| j.lag())
             .unwrap_or(0);
+        // controller gauges: with control off the cap is pinned at 0
+        // ("uncapped by the controller") and goodput_est falls back to
+        // the merged all-time goodput
+        let (spec_control, sl_cap_current, control_adjustments, goodput_est) =
+            match &self.control {
+                Some(c) => (
+                    SpecControl::Goodput.name(),
+                    c.export.sl_cap(),
+                    c.export.adjustments(),
+                    c.export.goodput(),
+                ),
+                None => (SpecControl::Off.name(), 0, 0, agg.goodput()),
+            };
         agg.to_json()
             .set("route_policy", self.policy.name())
             .set("replica_count", self.replicas.len())
@@ -1834,16 +2070,28 @@ impl EngineRouter {
             .set("journal_lag", journal_lag)
             .set("fleet_makespan", makespan)
             .set("fleet_throughput", fleet_throughput)
+            .set("spec_control", spec_control)
+            .set("sl_cap_current", sl_cap_current)
+            .set("control_adjustments", control_adjustments)
+            .set("goodput_est", goodput_est)
             .set("replicas", replicas)
     }
 
-    /// Stop the supervisor and wait for it — always before drain/abort so
-    /// no steal or failover can race a replica teardown.  Idempotent.
+    /// Stop the supervisor (and the control thread, if any) and wait for
+    /// them — always before drain/abort so no steal, failover, or
+    /// actuation can race a replica teardown.  Idempotent.
     fn stop_supervisor(&self) {
         self.supervisor_stop.store(true, Ordering::SeqCst);
         let handle = self.supervisor.lock().expect("supervisor lock").take();
         if let Some(t) = handle {
             let _ = t.join();
+        }
+        if let Some(c) = &self.control {
+            c.stop.store(true, Ordering::SeqCst);
+            let handle = c.thread.lock().expect("control lock").take();
+            if let Some(t) = handle {
+                let _ = t.join();
+            }
         }
     }
 
@@ -2501,6 +2749,7 @@ mod tests {
             RouterOptions {
                 stall_ms: 5_000,
                 fault: Some(plan),
+                control: SpecControl::Off,
             },
         );
         let rxs: Vec<_> = (0..6).map(|_| router.submit_to(0, req(16))).collect();
@@ -2539,6 +2788,7 @@ mod tests {
             RouterOptions {
                 stall_ms: 100,
                 fault: Some(plan),
+                control: SpecControl::Off,
             },
         );
         let start = std::time::Instant::now();
@@ -2602,6 +2852,76 @@ mod tests {
         assert!(s.contains("\"resubmitted\":0"), "{s}");
         assert!(s.contains("\"journal_lag\":0"), "{s}");
         assert!(s.contains("\"failed\":false"), "{s}");
+        router.shutdown();
+    }
+
+    // --- closed-loop speculation control ---
+
+    #[test]
+    fn control_off_exports_neutral_gauges() {
+        let router = EngineRouter::new(sim_engines(1), RoutePolicy::RoundRobin);
+        assert_eq!(router.spec_control(), SpecControl::Off);
+        let s = router.metrics_json().to_string();
+        assert!(s.contains("\"spec_control\":\"off\""), "{s}");
+        assert!(s.contains("\"sl_cap_current\":0"), "{s}");
+        assert!(s.contains("\"control_adjustments\":0"), "{s}");
+        assert!(s.contains("\"goodput_est\""), "{s}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn goodput_control_serves_and_exports_gauges() {
+        let router = EngineRouter::with_router_options(
+            sim_engines(2),
+            RoutePolicy::RoundRobin,
+            false,
+            RouterOptions {
+                control: SpecControl::Goodput,
+                ..Default::default()
+            },
+        );
+        assert_eq!(router.spec_control(), SpecControl::Goodput);
+        let rxs: Vec<_> = (0..8).map(|_| router.submit(req(32))).collect();
+        for rx in rxs {
+            let fin = rx.recv().expect("controlled router must still serve");
+            assert_eq!(fin.reason, FinishReason::MaxTokens);
+            assert_eq!(fin.output.len(), 32);
+        }
+        // give the 20ms control loop at least one tick to publish
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while router.metrics_json().to_string().contains("\"sl_cap_current\":0")
+        {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "control loop must publish its gauges"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let s = router.metrics_json().to_string();
+        assert!(s.contains("\"spec_control\":\"goodput\""), "{s}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn failed_replica_metrics_come_from_black_box() {
+        // the retained snapshot must answer for a failed replica so its
+        // delivered pre-failure work stays in the fleet aggregate
+        let router = EngineRouter::new(sim_engines(2), RoutePolicy::RoundRobin);
+        let fin = router.complete(req(8)).unwrap();
+        assert_eq!(fin.output.len(), 8);
+        // seed the black box by hand (the amortized in-loop refresh may
+        // not have fired yet for this short run)
+        let mut boxed = MetricsSnapshot::default();
+        boxed.completed = 1;
+        boxed.completed_tokens = 8;
+        router.replicas[0].cell.record_metrics(boxed);
+        router.replicas[0].cell.mark_failed();
+        let per = router.replica_metrics_opt(DEFAULT_QUANTILES);
+        let frozen = per[0].as_ref().expect("black box answers for the dead");
+        assert_eq!(frozen.completed, 1);
+        assert_eq!(frozen.completed_tokens, 8);
+        let agg = router.aggregated_metrics();
+        assert!(agg.completed >= 1, "pre-failure work stays aggregated");
         router.shutdown();
     }
 }

@@ -6,6 +6,7 @@
 //! (Eq. 11).  Alternative consensus functions are provided for the ablation
 //! bench (`fig9_scalability --cap-mode ...`).
 
+use crate::spec::control::ControlView;
 use crate::util::stats::percentile;
 
 /// Consensus function for the per-batch cap.
@@ -74,6 +75,22 @@ pub fn apply_cap(mode: CapMode, predictions: &mut [usize]) -> usize {
     cap
 }
 
+/// Fold the fleet controller's actuators into the granted SLs (after the
+/// batch-consensus cap): scale every SL by the replica's aggressiveness
+/// multiplier, then clamp to the controller's global cap, preserving the
+/// same floor of 1 as [`apply_cap`].  A neutral
+/// [`ControlView`] (`sl_cap = usize::MAX`, `aggressiveness = 1.0`) is an
+/// exact identity, which is what keeps `--spec-control off` bit-identical
+/// to a build with no controller at all.
+pub fn apply_control(view: &ControlView, predictions: &mut [usize]) -> usize {
+    let cap = view.sl_cap.max(1);
+    for p in predictions.iter_mut() {
+        let scaled = ((*p as f64) * view.aggressiveness).floor() as usize;
+        *p = scaled.clamp(1, cap);
+    }
+    cap
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +148,71 @@ mod tests {
             assert_eq!(CapMode::parse(m.name()), Some(m));
         }
         assert_eq!(CapMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn neutral_control_view_is_identity() {
+        let mut preds = vec![1usize, 3, 7, 12];
+        let before = preds.clone();
+        apply_control(&ControlView::default(), &mut preds);
+        assert_eq!(preds, before);
+    }
+
+    #[test]
+    fn control_cap_and_aggressiveness_compose() {
+        let mut preds = vec![2usize, 6, 12];
+        let view = ControlView {
+            sl_cap: 4,
+            admit_frac: 1.0,
+            aggressiveness: 0.5,
+        };
+        let cap = apply_control(&view, &mut preds);
+        assert_eq!(cap, 4);
+        // floor(sl * 0.5) clamped to [1, 4]
+        assert_eq!(preds, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn control_never_zeroes_speculation() {
+        let mut preds = vec![1usize, 2];
+        let view = ControlView {
+            sl_cap: 1,
+            admit_frac: 0.5,
+            aggressiveness: 0.25,
+        };
+        apply_control(&view, &mut preds);
+        assert_eq!(preds, vec![1, 1], "floor of 1 survives the throttle");
+    }
+
+    #[test]
+    fn control_invariants_property() {
+        forall(
+            59,
+            300,
+            |r| {
+                let n = r.range(1, 33);
+                let preds: Vec<usize> = (0..n).map(|_| r.range(1, 13)).collect();
+                let view = ControlView {
+                    sl_cap: r.range(1, 14),
+                    admit_frac: 1.0,
+                    aggressiveness: r.range(1, 101) as f64 / 100.0,
+                };
+                (preds, view)
+            },
+            |(preds, view)| {
+                let mut out = preds.clone();
+                apply_control(view, &mut out);
+                for (c, o) in out.iter().zip(preds) {
+                    if c > o {
+                        return Err(format!("control raised {o} -> {c}"));
+                    }
+                    if *c == 0 || *c > view.sl_cap.max(1) {
+                        return Err(format!("{c} outside [1, {}]", view.sl_cap));
+                    }
+                }
+                check(true, "")
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,671 @@
+//! Goodput-driven closed-loop speculation control (fleet level).
+//!
+//! DSDE adapts SL per *sequence* from post-hoc KLD stability; nothing in
+//! the core engine adapts the *fleet* to load.  This module closes that
+//! loop the way TurboSpec/SpecServe frame it (PAPERS.md): a periodic
+//! controller samples per-replica **goodput** — accepted tokens per busy
+//! second, net of draft + verification cost — together with batch
+//! occupancy and queue depth, and tunes three actuators:
+//!
+//! * the **global SL cap**: throttle toward SL=1 under saturation, where
+//!   deep speculation burns verification compute exactly when the
+//!   straggler effect (paper §3.3) hurts most;
+//! * per-replica **speculation aggressiveness**: a multiplier in `(0, 1]`
+//!   that [`crate::spec::cap::apply_control`] folds into every granted SL;
+//! * **batch admission**: the fraction of `max_batch` the scheduler may
+//!   fill, stepped down only after the cap has already hit its floor.
+//!
+//! The decision path is a **pure function of the sampled metric stream**:
+//! no wall-clock reads, no RNG.  That makes the controller testable
+//! against a plain-code oracle (`tests/control_property.rs`) and
+//! bit-reproducible inside the virtual-clock eval runner.  Two mechanisms
+//! keep it from oscillating: *hysteresis* (a direction must persist for
+//! `hysteresis` consecutive ticks before one actuation step fires) and a
+//! relative goodput *deadband* (dips smaller than `deadband` against the
+//! reference goodput are ignored).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Batch-admission fractions the controller steps through, mildest first.
+/// Admission throttling is the *last* lever down (after the SL cap floors
+/// at 1) and the *first* lever released on recovery.
+pub const ADMIT_LEVELS: &[f64] = &[1.0, 0.75, 0.5];
+
+/// Static tuning for the goodput controller (no runtime mutation — the
+/// controller state machine owns all mutable state).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControlConfig {
+    /// Upper bound for the global SL cap (the release target); normally
+    /// the engines' `spec_k`.
+    pub cap_max: usize,
+    /// Relative goodput deadband: dips smaller than this fraction of the
+    /// reference goodput are treated as noise, not saturation.
+    pub deadband: f64,
+    /// Consecutive same-direction ticks required before one actuation
+    /// step fires (anti-oscillation).
+    pub hysteresis: u32,
+    /// Mean batch occupancy at or below which the fleet counts as
+    /// underloaded (speculate hard, release throttles).
+    pub low_occupancy: f64,
+    /// Mean batch occupancy at or above which the fleet counts as
+    /// saturated (throttle speculation).
+    pub high_occupancy: f64,
+    /// Aggressiveness floor applied at full saturation.
+    pub min_aggressiveness: f64,
+    /// Control-loop period in milliseconds (consumed by the *sampling*
+    /// layer — the decision path never reads a clock).
+    pub interval_ms: u64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            cap_max: 12,
+            deadband: 0.05,
+            hysteresis: 2,
+            low_occupancy: 0.5,
+            high_occupancy: 0.85,
+            min_aggressiveness: 0.25,
+            interval_ms: 20,
+        }
+    }
+}
+
+impl ControlConfig {
+    /// Check invariants the controller's guarantees depend on.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cap_max < 1 {
+            return Err("cap_max must be >= 1".into());
+        }
+        if !(0.0..1.0).contains(&self.deadband) {
+            return Err("deadband must be in [0, 1)".into());
+        }
+        if self.hysteresis < 1 {
+            return Err("hysteresis must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.low_occupancy)
+            || !(0.0..=1.0).contains(&self.high_occupancy)
+            || self.low_occupancy >= self.high_occupancy
+        {
+            return Err("need 0 <= low_occupancy < high_occupancy <= 1".into());
+        }
+        if self.min_aggressiveness <= 0.0 || self.min_aggressiveness > 1.0 {
+            return Err("min_aggressiveness must be in (0, 1]".into());
+        }
+        if self.interval_ms == 0 {
+            return Err("interval_ms must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// One replica's contribution to a control tick, sampled by the serving
+/// layer (or synthesized by the eval runner / property tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReplicaSample {
+    /// Accepted tokens per busy second over the sampling window (net
+    /// speculation yield — rejected drafts cost verify time but add no
+    /// tokens, so they depress this number by construction).
+    pub goodput: f64,
+    /// Running batch size over `max_batch`, in `[0, 1]`.
+    pub occupancy: f64,
+    /// Requests waiting in the replica's admission queue.
+    pub queue: usize,
+    /// Whether the gauges are stale (replica failed, wedged, or not yet
+    /// heartbeating).  Stale samples are excluded from fleet aggregates
+    /// and actuate nothing on their replica.
+    pub stale: bool,
+}
+
+/// The controller's output for one tick: the actuator settings every
+/// consumer (scheduler admission, cap plumbing, metrics export) reads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControlDecision {
+    /// Global SL cap, always within `[1, cap_max]`.
+    pub sl_cap: usize,
+    /// Admission fraction of `max_batch`, one of [`ADMIT_LEVELS`].
+    pub admit_frac: f64,
+    /// Per-replica speculation aggressiveness, parallel to the tick's
+    /// sample slice; stale replicas get the neutral `1.0`.
+    pub aggressiveness: Vec<f64>,
+}
+
+/// The deterministic feedback state machine.  Feed it one
+/// [`ReplicaSample`] slice per tick (seeded tick order); it returns the
+/// actuator settings.  All state transitions are pure functions of the
+/// sample stream — see the module docs for the reproducibility contract.
+#[derive(Clone, Debug)]
+pub struct Controller {
+    cfg: ControlConfig,
+    cap: usize,
+    admit_level: usize,
+    pressure: i32,
+    ref_goodput: f64,
+    adjustments: u64,
+    ticks: u64,
+}
+
+impl Controller {
+    /// Construct with the cap released to `cap_max` and admission open.
+    pub fn new(cfg: ControlConfig) -> Controller {
+        cfg.validate().expect("invalid control config");
+        Controller {
+            cap: cfg.cap_max,
+            cfg,
+            admit_level: 0,
+            pressure: 0,
+            ref_goodput: 0.0,
+            adjustments: 0,
+            ticks: 0,
+        }
+    }
+
+    /// Current global SL cap.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Current admission fraction.
+    pub fn admit_frac(&self) -> f64 {
+        ADMIT_LEVELS[self.admit_level]
+    }
+
+    /// Actuation steps taken since construction (the `/v1/metrics`
+    /// `control_adjustments` counter).
+    pub fn adjustments(&self) -> u64 {
+        self.adjustments
+    }
+
+    /// Ticks processed since construction.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Reference goodput the deadband compares against (an EMA of the
+    /// mean live goodput, so sustained dips register for several ticks).
+    pub fn ref_goodput(&self) -> f64 {
+        self.ref_goodput
+    }
+
+    /// Which way the fleet is pushing this tick: `-1` throttle, `+1`
+    /// release, `0` hold.  Saturation (occupancy) dominates; the goodput
+    /// deadband only breaks the mid-band tie.
+    fn direction(&self, live: &[ReplicaSample]) -> i32 {
+        if live.is_empty() {
+            // every gauge is stale: hold, never flail on no information
+            return 0;
+        }
+        let n = live.len() as f64;
+        let occ = live.iter().map(|s| s.occupancy).sum::<f64>() / n;
+        if occ >= self.cfg.high_occupancy {
+            return -1;
+        }
+        let queued: usize = live.iter().map(|s| s.queue).sum();
+        if occ <= self.cfg.low_occupancy && queued <= live.len() {
+            return 1;
+        }
+        let goodput = live.iter().map(|s| s.goodput).sum::<f64>() / n;
+        if self.ref_goodput > 0.0
+            && goodput < self.ref_goodput * (1.0 - self.cfg.deadband)
+        {
+            -1
+        } else {
+            0
+        }
+    }
+
+    /// Tighten one step: cap first (toward 1), then admission.  Returns
+    /// whether anything changed.
+    fn step_down(&mut self) -> bool {
+        if self.cap > 1 {
+            self.cap -= 1;
+            true
+        } else if self.admit_level + 1 < ADMIT_LEVELS.len() {
+            self.admit_level += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release one step: admission first, then cap (toward `cap_max`).
+    /// Returns whether anything changed.
+    fn step_up(&mut self) -> bool {
+        if self.admit_level > 0 {
+            self.admit_level -= 1;
+            true
+        } else if self.cap < self.cfg.cap_max {
+            self.cap += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Speculation-aggressiveness multiplier for one replica: neutral at
+    /// or below `low_occupancy`, the configured floor at or above
+    /// `high_occupancy`, linear in between.  Stale replicas get neutral
+    /// (their engine thread is gone or wedged; actuating it is
+    /// meaningless and would make decisions depend on failure timing).
+    pub fn aggressiveness_for(&self, s: &ReplicaSample) -> f64 {
+        if s.stale || s.occupancy <= self.cfg.low_occupancy {
+            return 1.0;
+        }
+        if s.occupancy >= self.cfg.high_occupancy {
+            return self.cfg.min_aggressiveness;
+        }
+        let t = (s.occupancy - self.cfg.low_occupancy)
+            / (self.cfg.high_occupancy - self.cfg.low_occupancy);
+        1.0 + t * (self.cfg.min_aggressiveness - 1.0)
+    }
+
+    /// One control tick: accumulate directional pressure, actuate at most
+    /// one step once pressure crosses the hysteresis threshold, refresh
+    /// the reference goodput, and emit the actuator settings.
+    ///
+    /// Guarantees (enforced by `tests/control_property.rs`):
+    /// * `sl_cap` stays within `[1, cap_max]`;
+    /// * a frozen sample stream reaches a fixed point (decisions stop
+    ///   changing) within `hysteresis * (cap_max + ADMIT_LEVELS.len())`
+    ///   ticks;
+    /// * a ramp that stays saturated produces a nonincreasing cap
+    ///   trajectory; one that stays idle produces a nondecreasing one.
+    pub fn tick(&mut self, samples: &[ReplicaSample]) -> ControlDecision {
+        self.ticks += 1;
+        let live: Vec<ReplicaSample> =
+            samples.iter().copied().filter(|s| !s.stale).collect();
+        let dir = self.direction(&live);
+        let same_sign =
+            (dir < 0 && self.pressure < 0) || (dir > 0 && self.pressure > 0);
+        if same_sign {
+            self.pressure += dir;
+        } else {
+            self.pressure = dir;
+        }
+        if self.pressure.unsigned_abs() >= self.cfg.hysteresis {
+            let changed = if self.pressure < 0 {
+                self.step_down()
+            } else {
+                self.step_up()
+            };
+            if changed {
+                self.adjustments += 1;
+            }
+            self.pressure = 0;
+        }
+        if !live.is_empty() {
+            let mean =
+                live.iter().map(|s| s.goodput).sum::<f64>() / live.len() as f64;
+            // EMA, not instant tracking: an instant reference would chase a
+            // sustained dip down in one tick and the deadband could never
+            // accumulate hysteresis pressure
+            self.ref_goodput = if self.ref_goodput > 0.0 {
+                0.5 * (self.ref_goodput + mean)
+            } else {
+                mean
+            };
+        }
+        ControlDecision {
+            sl_cap: self.cap,
+            admit_frac: self.admit_frac(),
+            aggressiveness: samples.iter().map(|s| self.aggressiveness_for(s)).collect(),
+        }
+    }
+}
+
+/// Lock-free mailbox the control loop writes and an engine's `plan` stage
+/// reads once per step.  Fixed-point milli encoding keeps the cell to
+/// three relaxed atomics; the neutral state (uncapped, admission open,
+/// aggressiveness 1.0) is bit-exact with no controller at all.
+#[derive(Debug)]
+pub struct ControlCell {
+    sl_cap: AtomicUsize,
+    admit_milli: AtomicUsize,
+    aggr_milli: AtomicUsize,
+}
+
+impl ControlCell {
+    /// A cell in the neutral (no-op) state.
+    pub fn new() -> ControlCell {
+        ControlCell {
+            sl_cap: AtomicUsize::new(usize::MAX),
+            admit_milli: AtomicUsize::new(1000),
+            aggr_milli: AtomicUsize::new(1000),
+        }
+    }
+
+    /// Publish one replica's actuator settings.
+    pub fn store(&self, sl_cap: usize, admit_frac: f64, aggressiveness: f64) {
+        self.sl_cap.store(sl_cap, Ordering::Relaxed);
+        self.admit_milli
+            .store((admit_frac * 1000.0).round() as usize, Ordering::Relaxed);
+        self.aggr_milli
+            .store((aggressiveness * 1000.0).round() as usize, Ordering::Relaxed);
+    }
+
+    /// Read a consistent-enough view for one plan pass.  (The three loads
+    /// are independently relaxed; a torn read across a control tick only
+    /// mixes two adjacent one-step decisions, which the hysteresis design
+    /// already tolerates.)
+    pub fn view(&self) -> ControlView {
+        ControlView {
+            sl_cap: self.sl_cap.load(Ordering::Relaxed),
+            admit_frac: self.admit_milli.load(Ordering::Relaxed) as f64 / 1000.0,
+            aggressiveness: self.aggr_milli.load(Ordering::Relaxed) as f64 / 1000.0,
+        }
+    }
+}
+
+/// One plan pass's snapshot of the control actuators (see
+/// [`ControlCell::view`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControlView {
+    /// Global SL cap (`usize::MAX` = uncapped).
+    pub sl_cap: usize,
+    /// Admission fraction of `max_batch` in `(0, 1]`.
+    pub admit_frac: f64,
+    /// Speculation-aggressiveness multiplier in `(0, 1]`.
+    pub aggressiveness: f64,
+}
+
+impl Default for ControlView {
+    fn default() -> Self {
+        ControlView {
+            sl_cap: usize::MAX,
+            admit_frac: 1.0,
+            aggressiveness: 1.0,
+        }
+    }
+}
+
+/// Observability mailbox the control loop publishes for `/v1/metrics`
+/// (`sl_cap_current`, `control_adjustments`, `goodput_est`).
+#[derive(Debug, Default)]
+pub struct ControlExport {
+    sl_cap: AtomicUsize,
+    adjustments: AtomicU64,
+    goodput_milli: AtomicU64,
+}
+
+impl ControlExport {
+    /// Publish the post-tick controller state.
+    pub fn publish(&self, sl_cap: usize, adjustments: u64, goodput: f64) {
+        self.sl_cap.store(sl_cap, Ordering::Relaxed);
+        self.adjustments.store(adjustments, Ordering::Relaxed);
+        self.goodput_milli
+            .store((goodput.max(0.0) * 1000.0).round() as u64, Ordering::Relaxed);
+    }
+
+    /// Last published global SL cap.
+    pub fn sl_cap(&self) -> usize {
+        self.sl_cap.load(Ordering::Relaxed)
+    }
+
+    /// Total actuation steps taken.
+    pub fn adjustments(&self) -> u64 {
+        self.adjustments.load(Ordering::Relaxed)
+    }
+
+    /// Last published fleet goodput estimate (accepted tokens / busy s).
+    pub fn goodput(&self) -> f64 {
+        self.goodput_milli.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, forall};
+
+    fn sat(n: usize) -> Vec<ReplicaSample> {
+        vec![
+            ReplicaSample {
+                goodput: 40.0,
+                occupancy: 1.0,
+                queue: 8,
+                stale: false,
+            };
+            n
+        ]
+    }
+
+    fn idle(n: usize) -> Vec<ReplicaSample> {
+        vec![
+            ReplicaSample {
+                goodput: 40.0,
+                occupancy: 0.1,
+                queue: 0,
+                stale: false,
+            };
+            n
+        ]
+    }
+
+    #[test]
+    fn saturation_walks_cap_down_then_admission() {
+        let cfg = ControlConfig {
+            cap_max: 4,
+            ..Default::default()
+        };
+        let mut c = Controller::new(cfg);
+        let mut caps = Vec::new();
+        for _ in 0..40 {
+            caps.push(c.tick(&sat(2)).sl_cap);
+        }
+        assert!(caps.windows(2).all(|w| w[1] <= w[0]), "nonincreasing: {caps:?}");
+        assert_eq!(c.cap(), 1, "cap floors at 1 under sustained saturation");
+        assert_eq!(
+            c.admit_frac(),
+            *ADMIT_LEVELS.last().unwrap(),
+            "admission throttles only after the cap floors"
+        );
+    }
+
+    #[test]
+    fn idle_fleet_releases_back_to_cap_max() {
+        let cfg = ControlConfig {
+            cap_max: 6,
+            ..Default::default()
+        };
+        let mut c = Controller::new(cfg);
+        for _ in 0..40 {
+            c.tick(&sat(2));
+        }
+        assert_eq!(c.cap(), 1);
+        let mut caps = Vec::new();
+        for _ in 0..40 {
+            caps.push(c.tick(&idle(2)).sl_cap);
+        }
+        assert!(caps.windows(2).all(|w| w[1] >= w[0]), "nondecreasing: {caps:?}");
+        assert_eq!(c.cap(), 6, "released to cap_max");
+        assert_eq!(c.admit_frac(), 1.0, "admission released first");
+    }
+
+    #[test]
+    fn hysteresis_blocks_single_tick_blips() {
+        let mut c = Controller::new(ControlConfig {
+            hysteresis: 3,
+            ..Default::default()
+        });
+        // alternate saturated / mid-band: pressure never persists 3 ticks
+        let mid = vec![ReplicaSample {
+            goodput: 40.0,
+            occupancy: 0.7,
+            queue: 2,
+            stale: false,
+        }];
+        for _ in 0..20 {
+            c.tick(&sat(1));
+            c.tick(&mid);
+        }
+        assert_eq!(c.adjustments(), 0, "no actuation without persistence");
+        assert_eq!(c.cap(), c.cfg.cap_max);
+    }
+
+    #[test]
+    fn goodput_dip_within_deadband_is_ignored() {
+        let mut c = Controller::new(ControlConfig::default());
+        let mk = |g: f64| {
+            vec![ReplicaSample {
+                goodput: g,
+                occupancy: 0.7,
+                queue: 2,
+                stale: false,
+            }]
+        };
+        c.tick(&mk(100.0)); // establishes ref_goodput = 100
+        for _ in 0..10 {
+            c.tick(&mk(97.0)); // -3% < 5% deadband
+        }
+        assert_eq!(c.adjustments(), 0);
+        for _ in 0..10 {
+            c.tick(&mk(80.0)); // first dip is -20%; ref then tracks 80
+        }
+        assert!(c.adjustments() >= 1, "a real dip must actuate");
+    }
+
+    #[test]
+    fn all_stale_stream_holds_everything() {
+        let mut c = Controller::new(ControlConfig::default());
+        let stale = vec![
+            ReplicaSample {
+                stale: true,
+                ..Default::default()
+            };
+            3
+        ];
+        let before = (c.cap(), c.admit_frac());
+        let d = c.tick(&stale);
+        for _ in 0..20 {
+            c.tick(&stale);
+        }
+        assert_eq!((c.cap(), c.admit_frac()), before);
+        assert_eq!(c.adjustments(), 0);
+        assert_eq!(d.aggressiveness, vec![1.0; 3], "stale replicas stay neutral");
+    }
+
+    #[test]
+    fn aggressiveness_interpolates_between_bands() {
+        let c = Controller::new(ControlConfig::default());
+        let at = |occ: f64| {
+            c.aggressiveness_for(&ReplicaSample {
+                goodput: 1.0,
+                occupancy: occ,
+                queue: 0,
+                stale: false,
+            })
+        };
+        assert_eq!(at(0.2), 1.0);
+        assert_eq!(at(0.95), c.cfg.min_aggressiveness);
+        let mid = at(0.675); // halfway between 0.5 and 0.85
+        assert!((mid - (1.0 + c.cfg.min_aggressiveness) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frozen_stream_reaches_fixed_point() {
+        let cfg = ControlConfig::default();
+        let bound =
+            cfg.hysteresis as usize * (cfg.cap_max + ADMIT_LEVELS.len()) + 1;
+        let mut c = Controller::new(cfg);
+        let frozen = sat(4);
+        for _ in 0..bound {
+            c.tick(&frozen);
+        }
+        let settled = c.tick(&frozen);
+        for _ in 0..10 {
+            assert_eq!(c.tick(&frozen), settled, "post-fixed-point drift");
+        }
+    }
+
+    #[test]
+    fn cell_roundtrips_and_defaults_neutral() {
+        let cell = ControlCell::new();
+        assert_eq!(cell.view(), ControlView::default());
+        cell.store(3, 0.75, 0.625);
+        let v = cell.view();
+        assert_eq!(v.sl_cap, 3);
+        assert_eq!(v.admit_frac, 0.75);
+        assert_eq!(v.aggressiveness, 0.625);
+    }
+
+    #[test]
+    fn export_roundtrips() {
+        let e = ControlExport::default();
+        e.publish(5, 17, 123.456);
+        assert_eq!(e.sl_cap(), 5);
+        assert_eq!(e.adjustments(), 17);
+        assert!((e.goodput() - 123.456).abs() < 1e-3);
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        let ok = ControlConfig::default();
+        assert!(ok.validate().is_ok());
+        for bad in [
+            ControlConfig { cap_max: 0, ..ok },
+            ControlConfig { deadband: 1.0, ..ok },
+            ControlConfig { hysteresis: 0, ..ok },
+            ControlConfig {
+                low_occupancy: 0.9,
+                high_occupancy: 0.5,
+                ..ok
+            },
+            ControlConfig {
+                min_aggressiveness: 0.0,
+                ..ok
+            },
+            ControlConfig { interval_ms: 0, ..ok },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn cap_bounds_property() {
+        forall(
+            83,
+            200,
+            |r| {
+                let cap_max = r.range(1, 13);
+                let ticks = r.range(1, 120);
+                let stream: Vec<Vec<ReplicaSample>> = (0..ticks)
+                    .map(|_| {
+                        (0..r.range(1, 5))
+                            .map(|_| ReplicaSample {
+                                goodput: r.range(0, 200) as f64,
+                                occupancy: r.range(0, 101) as f64 / 100.0,
+                                queue: r.range(0, 20),
+                                stale: r.chance(0.2),
+                            })
+                            .collect()
+                    })
+                    .collect();
+                (cap_max, stream)
+            },
+            |(cap_max, stream)| {
+                let mut c = Controller::new(ControlConfig {
+                    cap_max: *cap_max,
+                    ..Default::default()
+                });
+                for samples in stream {
+                    let d = c.tick(samples);
+                    if d.sl_cap < 1 || d.sl_cap > *cap_max {
+                        return Err(format!(
+                            "cap {} outside [1, {cap_max}]",
+                            d.sl_cap
+                        ));
+                    }
+                    if !ADMIT_LEVELS.contains(&d.admit_frac) {
+                        return Err(format!("bad admit_frac {}", d.admit_frac));
+                    }
+                    for a in &d.aggressiveness {
+                        if *a <= 0.0 || *a > 1.0 {
+                            return Err(format!("aggressiveness {a} out of (0,1]"));
+                        }
+                    }
+                }
+                check(true, "")
+            },
+        );
+    }
+}

@@ -1,9 +1,10 @@
 //! Speculative-decoding core: exact rejection sampling, signal computation,
 //! per-sequence signal history, the SL adapters (the paper's contribution),
-//! and the adaptive SL-cap.
+//! the adaptive SL-cap, and the fleet-level goodput feedback controller.
 
 pub mod adapter;
 pub mod cap;
+pub mod control;
 pub mod history;
 pub mod kld;
 pub mod rejection;

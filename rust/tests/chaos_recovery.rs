@@ -19,7 +19,9 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use dsde::config::{EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind};
+use dsde::config::{
+    EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind, SpecControl,
+};
 use dsde::engine::engine::Engine;
 use dsde::engine::request::{Request, SamplingParams};
 use dsde::model::sim_lm::{SimModel, SimPairKind};
@@ -28,6 +30,7 @@ use dsde::server::http::{serve_router_with, ConnLimits, ServeOptions};
 use dsde::server::journal::{self, Journal};
 use dsde::server::router::{EngineRouter, RouterOptions};
 use dsde::sim::regime::DatasetProfile;
+use dsde::spec::cap::CapMode;
 use dsde::util::fault::FaultPlan;
 
 const TERMINAL_WAIT: Duration = Duration::from_secs(60);
@@ -70,6 +73,7 @@ fn chaos_router(n: usize, spec: &str, stall_ms: u64) -> EngineRouter {
         RouterOptions {
             stall_ms,
             fault: Some(plan),
+            control: SpecControl::Off,
         },
     )
 }
@@ -95,6 +99,7 @@ fn serve_chaos(
         RouterOptions {
             stall_ms,
             fault: Some(plan),
+            control: SpecControl::Off,
         },
     );
     let opts = ServeOptions {
@@ -289,6 +294,144 @@ fn journal_resume_replays_unfinished_requests() {
     }
     router.shutdown();
     let _ = std::fs::remove_file(&path);
+}
+
+/// An engine with a *fixed* speculation policy and no consensus cap, so
+/// per-request drafted/accepted counts are a pure function of `(seed,
+/// id)` — the basis for the exact-oracle aggregate comparison below.
+fn oracle_engine(seed: u64) -> Engine {
+    let cfg = EngineConfig {
+        max_batch: 4,
+        max_len: 4096,
+        policy: SlPolicyKind::Static(4),
+        cap_mode: CapMode::None,
+        seed,
+        ..Default::default()
+    };
+    let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), seed);
+    Engine::new(cfg, Box::new(model))
+}
+
+/// Regression: fleet aggregates must count failed-over work exactly
+/// once.  Replica 0 is killed before it can take a single step (the
+/// fault fires at the top of its loop, ahead of any intake), so every
+/// request targeted at it is resubmitted and served start-to-finish by
+/// replica 1 — a same-seed clone.  The chaos fleet's aggregate token
+/// counters must therefore equal a fault-free single-replica oracle run
+/// exactly; any double counting of resubmitted requests (in live gauges
+/// or in the dead replica's retained black box) breaks the equality.
+#[test]
+fn failover_does_not_double_count_token_aggregates() {
+    let plan = FaultPlan::parse("kill:0@0", 2).unwrap();
+    let router = EngineRouter::with_router_options(
+        vec![oracle_engine(7), oracle_engine(7)],
+        RoutePolicy::RoundRobin,
+        false,
+        RouterOptions {
+            stall_ms: 5_000,
+            fault: Some(plan),
+            control: SpecControl::Off,
+        },
+    );
+    let rxs: Vec<_> = (0..8).map(|_| router.submit_to(0, req(16))).collect();
+    for rx in rxs {
+        let fin = rx.recv_timeout(TERMINAL_WAIT).expect("client must not hang");
+        assert_eq!(fin.reason.name(), "max_tokens");
+        assert_eq!(fin.output.len(), 16);
+    }
+    let chaos = router.aggregated_metrics();
+    assert_eq!(router.replica_failures(), 1);
+    router.shutdown();
+
+    // oracle: one replica, same seed, same 8 requests (router-assigned
+    // ids 1..=8 match because resubmission preserves the original ids)
+    let oracle_router =
+        EngineRouter::new(vec![oracle_engine(7)], RoutePolicy::RoundRobin);
+    let rxs: Vec<_> = (0..8).map(|_| oracle_router.submit(req(16))).collect();
+    for rx in rxs {
+        rx.recv_timeout(TERMINAL_WAIT).expect("oracle must not hang");
+    }
+    let oracle = oracle_router.aggregated_metrics();
+    oracle_router.shutdown();
+
+    assert_eq!(chaos.completed, oracle.completed);
+    assert_eq!(chaos.completed_tokens, oracle.completed_tokens);
+    assert_eq!(chaos.tokens_out, oracle.tokens_out);
+    assert_eq!(chaos.accepted, oracle.accepted, "accepted double-counted");
+    assert_eq!(chaos.drafted, oracle.drafted, "drafted double-counted");
+    assert_eq!(chaos.cap_savings, oracle.cap_savings);
+}
+
+/// Regression: a mid-run kill must not skew the per-request Welford
+/// aggregates.  Work the victim delivered before dying is answered from
+/// its retained black box; the resubmitted remainder accrues only on
+/// the survivor — so `completed`, `completed_tokens`, and the latency /
+/// TTFT sample counts all land on exactly one entry per request.
+#[test]
+fn midrun_kill_keeps_request_accounting_exactly_once() {
+    let router = chaos_router(2, "kill:0@30", 5_000);
+    let rxs: Vec<_> = (0..8).map(|_| router.submit(req(16))).collect();
+    for rx in rxs {
+        let fin = rx.recv_timeout(TERMINAL_WAIT).expect("client must not hang");
+        assert_eq!(fin.reason.name(), "max_tokens");
+        assert_eq!(fin.output.len(), 16);
+    }
+    let agg = router.aggregated_metrics();
+    assert_eq!(agg.completed, 8, "each request completes exactly once");
+    assert_eq!(agg.completed_tokens, 8 * 16);
+    assert_eq!(agg.latency.count(), 8, "one latency sample per request");
+    assert_eq!(agg.ttft.count(), 8, "one TTFT sample per request");
+    assert_eq!(router.replica_failures(), 1);
+    router.shutdown();
+}
+
+/// The closed-loop controller under chaos: a replica is killed (or
+/// wedged) while `--spec-control goodput` is actively sampling it.  The
+/// control thread must keep ticking on the survivors' gauges — the
+/// corpse degrades to a stale sample, never a panic or a divergent cap
+/// — and every client still observes exactly one terminal event with
+/// byte-exact output (cap actuation never changes token content).
+#[test]
+fn goodput_control_survives_replica_kill_and_stall() {
+    for spec in ["kill:0@40", "stall:0@40+30000"] {
+        let stall_ms = if spec.starts_with("stall") { 150 } else { 5_000 };
+        let plan = FaultPlan::parse(spec, 3).unwrap();
+        let router = EngineRouter::with_router_options(
+            engines(3),
+            RoutePolicy::RoundRobin,
+            false,
+            RouterOptions {
+                stall_ms,
+                fault: Some(plan),
+                control: SpecControl::Goodput,
+            },
+        );
+        assert_eq!(router.spec_control(), SpecControl::Goodput);
+        let rxs: Vec<_> = (0..12).map(|_| router.submit(req(24))).collect();
+        for rx in rxs {
+            let fin = rx.recv_timeout(TERMINAL_WAIT).expect("client must not hang");
+            assert_eq!(fin.reason.name(), "max_tokens", "{spec}");
+            assert_eq!(fin.output.len(), 24, "{spec}");
+        }
+        // failover was detected, and the controller has published at
+        // least one decision since (the export leaves its 0 reset value)
+        let t0 = Instant::now();
+        loop {
+            let (cap, _, _) = router.control_gauges().expect("control armed");
+            if cap >= 1 && router.replica_failures() == 1 {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "{spec}: controller or failover never caught up"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let (cap, _, goodput) = router.control_gauges().unwrap();
+        assert!((1..=12).contains(&cap), "{spec}: cap {cap} out of range");
+        assert!(goodput.is_finite(), "{spec}: goodput EMA diverged");
+        router.shutdown();
+    }
 }
 
 /// Seeded chaos soak (CI `soak` job, `cargo test --release -- --ignored`):

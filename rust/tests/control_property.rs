@@ -1,0 +1,391 @@
+//! Property tests for the goodput controller (`spec/control.rs`).
+//!
+//! The controller's decision path is a pure function of the sampled
+//! metric stream — no clocks, no RNG — so every property here is exact:
+//! the implementation is checked decision-for-decision against a
+//! plain-code oracle, and the trajectory invariants the serving layer
+//! depends on (cap bounds, hysteresis-bounded monotone ramps, frozen
+//! streams reaching a fixed point) hold with no tolerances and no flake.
+
+use dsde::spec::control::{
+    ControlConfig, ControlDecision, Controller, ReplicaSample, ADMIT_LEVELS,
+};
+use dsde::util::proptest::{check, forall};
+use dsde::util::rng::Rng;
+
+/// A random, always-valid controller config (spans the whole tuning
+/// space the CLI can reach, not just the defaults).
+fn gen_config(r: &mut Rng) -> ControlConfig {
+    let low = r.range(0, 50) as f64 / 100.0;
+    let high = (low + 0.1 + r.range(0, 40) as f64 / 100.0).min(1.0);
+    ControlConfig {
+        cap_max: r.range(1, 13),
+        deadband: r.range(0, 30) as f64 / 100.0,
+        hysteresis: r.range(1, 5) as u32,
+        low_occupancy: low,
+        high_occupancy: high,
+        min_aggressiveness: r.range(5, 101) as f64 / 100.0,
+        interval_ms: r.range(1, 100) as u64,
+    }
+}
+
+/// One arbitrary replica sample: any occupancy, goodput, queue depth,
+/// and a 15% chance the gauges are stale.
+fn gen_sample(r: &mut Rng) -> ReplicaSample {
+    ReplicaSample {
+        goodput: r.range(0, 2000) as f64 / 10.0,
+        occupancy: r.range(0, 101) as f64 / 100.0,
+        queue: r.range(0, 16),
+        stale: r.chance(0.15),
+    }
+}
+
+/// A random tick stream: `ticks` sample slices over `replicas` replicas.
+fn gen_stream(r: &mut Rng, replicas: usize, ticks: usize) -> Vec<Vec<ReplicaSample>> {
+    (0..ticks)
+        .map(|_| (0..replicas).map(|_| gen_sample(r)).collect())
+        .collect()
+}
+
+/// Plain-code oracle: an independent transcription of the controller
+/// spec (the module docs of `spec/control.rs`), written naively — flat
+/// ifs, no shared helpers — so a behavior change in the implementation
+/// cannot silently rewrite the oracle along with it.
+#[derive(Debug)]
+struct Oracle {
+    cfg: ControlConfig,
+    cap: usize,
+    admit_idx: usize,
+    pressure: i32,
+    ref_goodput: f64,
+    adjustments: u64,
+}
+
+impl Oracle {
+    fn new(cfg: ControlConfig) -> Oracle {
+        Oracle {
+            cap: cfg.cap_max,
+            cfg,
+            admit_idx: 0,
+            pressure: 0,
+            ref_goodput: 0.0,
+            adjustments: 0,
+        }
+    }
+
+    fn aggressiveness(&self, s: &ReplicaSample) -> f64 {
+        if s.stale || s.occupancy <= self.cfg.low_occupancy {
+            return 1.0;
+        }
+        if s.occupancy >= self.cfg.high_occupancy {
+            return self.cfg.min_aggressiveness;
+        }
+        let t = (s.occupancy - self.cfg.low_occupancy)
+            / (self.cfg.high_occupancy - self.cfg.low_occupancy);
+        1.0 + t * (self.cfg.min_aggressiveness - 1.0)
+    }
+
+    fn throttle(&mut self) -> bool {
+        if self.cap > 1 {
+            self.cap -= 1;
+            return true;
+        }
+        if self.admit_idx + 1 < ADMIT_LEVELS.len() {
+            self.admit_idx += 1;
+            return true;
+        }
+        false
+    }
+
+    fn release(&mut self) -> bool {
+        if self.admit_idx > 0 {
+            self.admit_idx -= 1;
+            return true;
+        }
+        if self.cap < self.cfg.cap_max {
+            self.cap += 1;
+            return true;
+        }
+        false
+    }
+
+    fn tick(&mut self, samples: &[ReplicaSample]) -> ControlDecision {
+        let live: Vec<ReplicaSample> =
+            samples.iter().copied().filter(|s| !s.stale).collect();
+        let mut dir = 0i32;
+        if !live.is_empty() {
+            let n = live.len() as f64;
+            let occ = live.iter().map(|s| s.occupancy).sum::<f64>() / n;
+            let queued: usize = live.iter().map(|s| s.queue).sum();
+            let goodput = live.iter().map(|s| s.goodput).sum::<f64>() / n;
+            if occ >= self.cfg.high_occupancy {
+                dir = -1;
+            } else if occ <= self.cfg.low_occupancy && queued <= live.len() {
+                dir = 1;
+            } else if self.ref_goodput > 0.0
+                && goodput < self.ref_goodput * (1.0 - self.cfg.deadband)
+            {
+                dir = -1;
+            }
+        }
+        if dir != 0 && dir.signum() == self.pressure.signum() {
+            self.pressure += dir;
+        } else {
+            self.pressure = dir;
+        }
+        if self.pressure.unsigned_abs() >= self.cfg.hysteresis {
+            let changed = if self.pressure < 0 {
+                self.throttle()
+            } else {
+                self.release()
+            };
+            if changed {
+                self.adjustments += 1;
+            }
+            self.pressure = 0;
+        }
+        if !live.is_empty() {
+            let mean =
+                live.iter().map(|s| s.goodput).sum::<f64>() / live.len() as f64;
+            self.ref_goodput = if self.ref_goodput > 0.0 {
+                0.5 * (self.ref_goodput + mean)
+            } else {
+                mean
+            };
+        }
+        ControlDecision {
+            sl_cap: self.cap,
+            admit_frac: ADMIT_LEVELS[self.admit_idx],
+            aggressiveness: samples.iter().map(|s| self.aggressiveness(s)).collect(),
+        }
+    }
+}
+
+/// Every decision (cap, admission, per-replica aggressiveness) and the
+/// adjustment counter match the plain-code oracle over arbitrary
+/// streams and arbitrary valid configs.  Exact equality: both sides
+/// compute the same arithmetic from the same pure inputs.
+#[test]
+fn controller_matches_plain_code_oracle() {
+    forall(
+        11,
+        200,
+        |r| {
+            let cfg = gen_config(r);
+            let replicas = r.range(1, 5);
+            let ticks = r.range(1, 80);
+            (cfg, gen_stream(r, replicas, ticks))
+        },
+        |(cfg, stream)| {
+            let mut c = Controller::new(*cfg);
+            let mut o = Oracle::new(*cfg);
+            for (i, samples) in stream.iter().enumerate() {
+                let got = c.tick(samples);
+                let want = o.tick(samples);
+                if got != want {
+                    return Err(format!(
+                        "tick {i}: controller {got:?} != oracle {want:?}"
+                    ));
+                }
+            }
+            check(
+                c.adjustments() == o.adjustments,
+                format!("adjustments {} != oracle {}", c.adjustments(), o.adjustments),
+            )
+        },
+    );
+}
+
+/// A ramp that stays saturated (every live sample at or above
+/// `high_occupancy`) can only throttle: the cap trajectory is
+/// nonincreasing, moves at most one step per tick, and actuates at most
+/// once per `hysteresis` ticks.
+#[test]
+fn saturated_ramp_cap_is_nonincreasing_and_hysteresis_bounded() {
+    forall(
+        23,
+        200,
+        |r| {
+            let cfg = gen_config(r);
+            let replicas = r.range(1, 5);
+            let ticks = r.range(5, 100);
+            let stream: Vec<Vec<ReplicaSample>> = (0..ticks)
+                .map(|_| {
+                    (0..replicas)
+                        .map(|_| ReplicaSample {
+                            goodput: r.range(0, 2000) as f64 / 10.0,
+                            occupancy: cfg.high_occupancy
+                                + (1.0 - cfg.high_occupancy)
+                                    * (r.range(0, 101) as f64 / 100.0),
+                            queue: r.range(0, 16),
+                            stale: r.chance(0.2),
+                        })
+                        .collect()
+                })
+                .collect();
+            (cfg, stream)
+        },
+        |(cfg, stream)| {
+            let mut c = Controller::new(*cfg);
+            let caps: Vec<usize> =
+                stream.iter().map(|s| c.tick(s).sl_cap).collect();
+            for w in caps.windows(2) {
+                if w[1] > w[0] {
+                    return Err(format!("cap rose under saturation: {caps:?}"));
+                }
+                if w[0] - w[1] > 1 {
+                    return Err(format!("cap jumped more than one step: {caps:?}"));
+                }
+            }
+            check(
+                c.adjustments() <= stream.len() as u64 / cfg.hysteresis as u64,
+                format!(
+                    "{} adjustments in {} ticks breaks the hysteresis bound",
+                    c.adjustments(),
+                    stream.len()
+                ),
+            )
+        },
+    );
+}
+
+/// After being driven to the floor by saturation, an idle ramp (low
+/// occupancy, near-empty queues) only releases: the cap trajectory is
+/// nondecreasing, and the cap never rises before admission is fully
+/// reopened (admission is the first lever released).
+#[test]
+fn idle_ramp_releases_monotonically_admission_first() {
+    forall(
+        37,
+        200,
+        |r| {
+            let cfg = gen_config(r);
+            let replicas = r.range(1, 5);
+            let ticks = r.range(5, 100);
+            let stream: Vec<Vec<ReplicaSample>> = (0..ticks)
+                .map(|_| {
+                    (0..replicas)
+                        .map(|_| ReplicaSample {
+                            goodput: r.range(0, 2000) as f64 / 10.0,
+                            occupancy: cfg.low_occupancy
+                                * (r.range(0, 101) as f64 / 100.0),
+                            queue: r.range(0, 2),
+                            stale: r.chance(0.15),
+                        })
+                        .collect()
+                })
+                .collect();
+            (cfg, stream)
+        },
+        |(cfg, stream)| {
+            let mut c = Controller::new(*cfg);
+            // drive to the floor first so the release path is exercised
+            let floor = vec![
+                ReplicaSample {
+                    goodput: 10.0,
+                    occupancy: 1.0,
+                    queue: 8,
+                    stale: false,
+                };
+                2
+            ];
+            let warmup =
+                cfg.hysteresis as usize * (cfg.cap_max + ADMIT_LEVELS.len()) + 1;
+            for _ in 0..warmup {
+                c.tick(&floor);
+            }
+            let mut prev = (c.cap(), c.admit_frac());
+            for samples in stream {
+                let d = c.tick(samples);
+                if d.sl_cap < prev.0 {
+                    return Err(format!("cap fell on an idle ramp: {d:?}"));
+                }
+                if d.sl_cap > prev.0 && prev.1 < 1.0 {
+                    return Err(format!(
+                        "cap rose before admission reopened: {d:?} (prev {prev:?})"
+                    ));
+                }
+                prev = (d.sl_cap, d.admit_frac);
+            }
+            check(true, "")
+        },
+    );
+}
+
+/// Hard bounds under arbitrary streams and arbitrary valid configs:
+/// `1 <= sl_cap <= cap_max`, `admit_frac` is always one of
+/// [`ADMIT_LEVELS`], aggressiveness lands in `(0, 1]`, and stale
+/// replicas are always actuated neutrally (exactly `1.0`).
+#[test]
+fn bounds_hold_for_any_config_and_stream() {
+    forall(
+        51,
+        200,
+        |r| {
+            let cfg = gen_config(r);
+            let replicas = r.range(1, 6);
+            let ticks = r.range(1, 120);
+            (cfg, gen_stream(r, replicas, ticks))
+        },
+        |(cfg, stream)| {
+            let mut c = Controller::new(*cfg);
+            for samples in stream {
+                let d = c.tick(samples);
+                if d.sl_cap < 1 || d.sl_cap > cfg.cap_max {
+                    return Err(format!(
+                        "cap {} outside [1, {}]",
+                        d.sl_cap, cfg.cap_max
+                    ));
+                }
+                if !ADMIT_LEVELS.contains(&d.admit_frac) {
+                    return Err(format!("admit_frac {} not a level", d.admit_frac));
+                }
+                for (s, a) in samples.iter().zip(&d.aggressiveness) {
+                    if *a <= 0.0 || *a > 1.0 {
+                        return Err(format!("aggressiveness {a} outside (0, 1]"));
+                    }
+                    if s.stale && *a != 1.0 {
+                        return Err(format!("stale replica actuated: {a}"));
+                    }
+                }
+            }
+            check(true, "")
+        },
+    );
+}
+
+/// A frozen sample stream reaches a fixed point — decisions stop
+/// changing — within `hysteresis * (cap_max + |ADMIT_LEVELS|) + 1`
+/// ticks, for every valid config and every frozen sample slice.  This
+/// is the bound the engine-facing docs promise.
+#[test]
+fn frozen_stream_reaches_fixed_point_within_bound() {
+    forall(
+        67,
+        200,
+        |r| {
+            let cfg = gen_config(r);
+            let frozen: Vec<ReplicaSample> =
+                (0..r.range(1, 5)).map(|_| gen_sample(r)).collect();
+            (cfg, frozen)
+        },
+        |(cfg, frozen)| {
+            let bound =
+                cfg.hysteresis as usize * (cfg.cap_max + ADMIT_LEVELS.len()) + 1;
+            let mut c = Controller::new(*cfg);
+            for _ in 0..bound {
+                c.tick(frozen);
+            }
+            let settled = c.tick(frozen);
+            for i in 0..20 {
+                let d = c.tick(frozen);
+                if d != settled {
+                    return Err(format!(
+                        "tick {i} past the bound drifted: {d:?} != {settled:?}"
+                    ));
+                }
+            }
+            check(true, "")
+        },
+    );
+}

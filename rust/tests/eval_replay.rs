@@ -8,7 +8,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use dsde::config::{CapMode, EngineConfig, FrontendKind, RoutePolicy, SlPolicyKind};
+use dsde::config::{
+    CapMode, EngineConfig, FrontendKind, RoutePolicy, SlPolicyKind, SpecControl,
+};
 use dsde::engine::engine::Engine;
 use dsde::eval::{load_trace, replay, ReplayConfig, TraceEntry, TraceRecorder};
 use dsde::model::sim_lm::{SimModel, SimPairKind};
@@ -219,6 +221,46 @@ fn recording_server_reports_on_health_and_captures_http_traffic() {
     assert_eq!(trace[2].max_tokens, 8);
     assert!(trace.iter().all(|e| e.tag == "sharegpt"));
     std::fs::remove_file(&path).ok();
+}
+
+/// `--spec-control` must never change replay bytes: `off` is the PR 7
+/// contract (the default config), and `goodput` only moves caps and
+/// admission — latency knobs, not token content.  Both digests must
+/// match the baseline exactly.
+#[test]
+fn replay_is_byte_identical_with_and_without_spec_control() {
+    let trace: Vec<TraceEntry> = (0..12)
+        .map(|i| TraceEntry {
+            t: i as f64 * 0.002,
+            prompt_len: 16 + (i % 4) * 8,
+            max_tokens: 8 + (i % 3) * 6,
+            temperature: 0.0,
+            tag: "cnndm".to_string(),
+        })
+        .collect();
+    let base = ReplayConfig {
+        seed: 17,
+        replicas: 2,
+        ..Default::default()
+    };
+    assert_eq!(base.control, SpecControl::Off, "off is the default contract");
+    let off = replay(&trace, &base).unwrap();
+    let off_again = replay(&trace, &base).unwrap();
+    assert_eq!(off.digest(), off_again.digest(), "off replay must be stable");
+    let controlled = replay(
+        &trace,
+        &ReplayConfig {
+            control: SpecControl::Goodput,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        off.outputs, controlled.outputs,
+        "spec control changed replay token content"
+    );
+    assert_eq!(off.digest(), controlled.digest());
+    assert_eq!(controlled.metrics.completed, 12);
 }
 
 #[test]

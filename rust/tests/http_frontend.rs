@@ -20,7 +20,7 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
-use dsde::config::{EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind};
+use dsde::config::{EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind, SpecControl};
 use dsde::engine::engine::Engine;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::server::client;
@@ -358,6 +358,7 @@ fn replica_failure_mid_stream_yields_aborted_terminal() {
             RouterOptions {
                 stall_ms: 5_000,
                 fault: Some(plan),
+                control: SpecControl::Off,
             },
         );
         let h = serve_router_with(router, "127.0.0.1:0", opts_for(fe, ConnLimits::default()))

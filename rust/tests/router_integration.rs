@@ -5,11 +5,11 @@
 //! graceful drain, and incremental token streaming (delta ordering,
 //! streaming/blocking equivalence, stream termination on drain and abort).
 
-use dsde::config::{EngineConfig, RoutePolicy, SlPolicyKind};
+use dsde::config::{EngineConfig, RoutePolicy, SlPolicyKind, SpecControl};
 use dsde::engine::engine::Engine;
 use dsde::engine::request::{FinishReason, FinishedRequest, Request, SamplingParams};
 use dsde::model::sim_lm::{SimModel, SimPairKind};
-use dsde::server::router::{EngineRouter, StreamEvent};
+use dsde::server::router::{EngineRouter, RouterOptions, StreamEvent};
 use dsde::sim::regime::DatasetProfile;
 use dsde::spec::adapter::DsdeConfig;
 
@@ -239,6 +239,113 @@ fn cross_policy_equivalence_same_outputs_under_every_policy() {
             "{policy:?}/steal={steal} changed request outputs"
         );
     }
+}
+
+/// `--spec-control` at the router: turning the goodput controller on
+/// must not change a single output token relative to the PR 7 contract
+/// (`control: Off`, and the plain constructors before the option
+/// existed).  Cap and admission actuation move latency, never content —
+/// the same invariance the replay and eval layers pin, enforced here at
+/// the router seam where the ControlCell is actually attached.
+#[test]
+fn spec_control_never_changes_router_outputs() {
+    let run = |control: SpecControl| -> Vec<(u64, Vec<u32>)> {
+        let router = EngineRouter::with_router_options(
+            same_seed_engines(2, 160),
+            RoutePolicy::RoundRobin,
+            false,
+            RouterOptions {
+                control,
+                ..Default::default()
+            },
+        );
+        assert_eq!(router.spec_control(), control);
+        // enough load to push occupancy around and let the controller
+        // actually actuate while requests are in flight
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                let (p, o) = if i % 4 == 0 { (96, 64) } else { (16, 24) };
+                router.submit(req(p, o))
+            })
+            .collect();
+        let mut out: Vec<(u64, Vec<u32>)> = rxs
+            .into_iter()
+            .map(|rx| {
+                let fin = rx.recv().expect("request must complete");
+                assert_eq!(fin.reason, FinishReason::MaxTokens);
+                (fin.id, fin.output)
+            })
+            .collect();
+        router.shutdown();
+        out.sort_by_key(|(id, _)| *id);
+        out
+    };
+    let off = run(SpecControl::Off);
+    // the plain constructor is the pre-control code path; Off must be
+    // bit-identical to it (the ControlCell is simply never attached)
+    let legacy = {
+        let router = EngineRouter::new(same_seed_engines(2, 160), RoutePolicy::RoundRobin);
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                let (p, o) = if i % 4 == 0 { (96, 64) } else { (16, 24) };
+                router.submit(req(p, o))
+            })
+            .collect();
+        let mut out: Vec<(u64, Vec<u32>)> = rxs
+            .into_iter()
+            .map(|rx| {
+                let fin = rx.recv().unwrap();
+                (fin.id, fin.output)
+            })
+            .collect();
+        router.shutdown();
+        out.sort_by_key(|(id, _)| *id);
+        out
+    };
+    assert_eq!(off, legacy, "control=off diverged from the plain constructor");
+    let controlled = run(SpecControl::Goodput);
+    assert_eq!(off, controlled, "goodput control changed token content");
+}
+
+/// With the controller on, the `/v1/metrics` control gauges go live and
+/// stay inside the actuation range; with it off they export the neutral
+/// markers.  (Trajectory *reproducibility* is pinned in the virtual-clock
+/// eval runner — `eval::runner` tests — where sampling is step-paced
+/// rather than wall-clock-paced.)
+#[test]
+fn control_gauges_reflect_the_configured_mode() {
+    let router = EngineRouter::with_router_options(
+        same_seed_engines(2, 170),
+        RoutePolicy::RoundRobin,
+        false,
+        RouterOptions {
+            control: SpecControl::Goodput,
+            ..Default::default()
+        },
+    );
+    let rxs: Vec<_> = (0..12).map(|_| router.submit(req(24, 48))).collect();
+    for rx in rxs {
+        assert_eq!(rx.recv().unwrap().output.len(), 48);
+    }
+    let t0 = std::time::Instant::now();
+    let cap = loop {
+        let (cap, _, _) = router.control_gauges().expect("controller armed");
+        if cap >= 1 {
+            break cap;
+        }
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "controller never published a decision"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    };
+    assert!(cap <= 12, "cap {cap} above cap_max");
+    router.shutdown();
+
+    let off = EngineRouter::new(same_seed_engines(1, 170), RoutePolicy::RoundRobin);
+    assert_eq!(off.spec_control(), SpecControl::Off);
+    assert!(off.control_gauges().is_none(), "no control thread when off");
+    off.shutdown();
 }
 
 #[test]
