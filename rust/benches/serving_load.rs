@@ -33,15 +33,31 @@
 //! count; epoll's wakeup cost tracks the *ready* set and stays flat,
 //! and sharding splits what remains across loop threads.
 //!
+//! The zero-copy datapath sweep scales the sharded epoll loop from 16k
+//! to 100k concurrent streams across the accept modes (`SO_REUSEPORT`
+//! per-shard listeners vs the shard-0 handoff channel) and the flush
+//! mechanics (vectored `writev(2)` of refcounted frames vs the
+//! copy-into-scratch baseline), reporting wall time, p99 TTFT, and
+//! aggregate delta throughput.  The O(active) bookkeeping claim is the
+//! shape to watch: p99 TTFT at 100k streams stays within ~2x of 16k.
+//! The allocation section then pins the other half of the claim with a
+//! counting global allocator: the steady-state shard path (enqueue by
+//! reference → `writev` → buffer recycle) performs **zero** heap
+//! allocations per streamed frame; frame encode costs one refcount
+//! shell while the payload buffer comes from the recycling pool.
+//!
 //! ```bash
 //! cargo bench --bench serving_load -- [--replicas 1,2,4] [--requests 96] \
-//!     [--stream-clients 64,256,1024] [--poller-clients 1024,4096] [--smoke]
+//!     [--stream-clients 64,256,1024] [--poller-clients 1024,4096] \
+//!     [--datapath-clients 16384,100000] [--smoke]
 //! ```
 //!
 //! `--smoke` shrinks every section to seconds of runtime — the CI
 //! bench-bitrot guard runs it on every push.
 
-use dsde::config::{CapMode, EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind};
+use dsde::config::{
+    AcceptMode, CapMode, EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind,
+};
 use dsde::engine::engine::Engine;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::server::client;
@@ -53,6 +69,61 @@ use dsde::util::bench::Table;
 use dsde::util::cli::Args;
 use dsde::util::stats::percentile;
 use dsde::workload::{Dataset, PoissonArrivals, WorkloadGen};
+use std::alloc::{GlobalAlloc, Layout, System};
+
+/// Global allocator wrapper that counts heap allocations on threads
+/// that opt in, for the zero-allocation steady-state assertion.  The
+/// flag and counter live in const-initialised thread-locals so the
+/// allocator itself never allocates (or recurses) on first touch, and
+/// allocations on other threads (server shards, client threads) never
+/// pollute the measurement.
+struct CountingAlloc;
+
+thread_local! {
+    static COUNTING: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+    static THREAD_ALLOCS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+#[inline]
+fn note_alloc() {
+    let _ = COUNTING.try_with(|c| {
+        if c.get() {
+            let _ = THREAD_ALLOCS.try_with(|n| n.set(n.get() + 1));
+        }
+    });
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        note_alloc();
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new: usize) -> *mut u8 {
+        note_alloc();
+        System.realloc(ptr, layout, new)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        note_alloc();
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f` with allocation counting enabled on this thread and return
+/// its result plus the number of heap allocations it performed.
+fn counted<T>(f: impl FnOnce() -> T) -> (T, u64) {
+    let before = THREAD_ALLOCS.with(|n| n.get());
+    COUNTING.with(|c| c.set(true));
+    let out = f();
+    COUNTING.with(|c| c.set(false));
+    let after = THREAD_ALLOCS.with(|n| n.get());
+    (out, after - before)
+}
 
 /// Latency/TTFT percentiles + goodput from one open-loop run.
 struct OpenLoopResult {
@@ -368,10 +439,11 @@ fn main() {
     let args = Args::parse(std::env::args().skip(1));
     // --smoke: seconds-scale parameters for the CI bench-bitrot guard
     let smoke = args.flag("smoke");
-    // the concurrency sections cost ~4 fds per in-flight stream (client +
-    // server socket and headroom); ask for a high ceiling up front and
-    // let the kernel clamp
-    let fd_limit = dsde::util::sys::raise_nofile_limit(70_000).unwrap_or(1024);
+    // the concurrency sections cost 2 fds per in-flight stream (client +
+    // server socket) plus headroom; the 100k datapath sweep therefore
+    // needs >200k fds, so ask for a high ceiling up front and let the
+    // kernel clamp to the hard limit
+    let fd_limit = dsde::util::sys::raise_nofile_limit(220_000).unwrap_or(1024);
     let replica_counts = args.usize_list_or("replicas", if smoke { &[1, 2] } else { &[1, 2, 4] });
     let n_total = args.usize_or("requests", if smoke { 12 } else { 96 });
     let ol_requests = if smoke { 8 } else { 64 };
@@ -622,6 +694,7 @@ fn main() {
                     max_open_conns: 32_768,
                     ..Default::default()
                 },
+                ..Default::default()
             };
             let r = frontend_scaling(opts, c, poller_tokens);
             poller_completed &= r.completed == c;
@@ -649,4 +722,175 @@ fn main() {
         if poller_completed { "holds" } else { "DOES NOT hold" },
         if flat { "holds" } else { "DOES NOT hold" }
     );
+
+    println!(
+        "\n== zero-copy datapath sweep: accept sharding x flush mechanics, \
+         4-shard epoll (2 replicas) ==\n"
+    );
+    let datapath_counts: Vec<usize> = args
+        .usize_list_or(
+            "datapath-clients",
+            if smoke { &[32] } else { &[16_384, 49_152, 100_000] },
+        )
+        .into_iter()
+        // 2 fds per concurrent stream (client + server socket) + headroom
+        // for listeners, wakers, and rings
+        .map(|c| c.min(((fd_limit.saturating_sub(2_048)) / 2) as usize))
+        .collect();
+    let datapath_tokens = if smoke { 8 } else { 16 };
+    let dp_specs: [(&str, AcceptMode, bool); 4] = [
+        ("reuseport+writev", AcceptMode::Reuseport, false),
+        ("handoff+writev", AcceptMode::Handoff, false),
+        ("reuseport+copy", AcceptMode::Reuseport, true),
+        ("handoff+copy", AcceptMode::Handoff, true),
+    ];
+    let mut dp_table = Table::new(&[
+        "clients",
+        "reuseport+writev wall / p99 (s)",
+        "handoff+writev wall / p99 (s)",
+        "reuseport+copy wall / p99 (s)",
+        "handoff+copy wall / p99 (s)",
+        "deltas/s (rw / hw / rc / hc)",
+    ]);
+    // reuseport+writev p99 TTFT at the sweep endpoints, for the O(active)
+    // flatness check below
+    let mut dp_first_p99 = 0.0f64;
+    let mut dp_last_p99 = 0.0f64;
+    let mut dp_completed = true;
+    for &c in &datapath_counts {
+        let mut cells = vec![format!("{c}")];
+        let mut rates = Vec::new();
+        for &(_, accept, copy_flush) in &dp_specs {
+            let opts = ServeOptions {
+                frontend: FrontendKind::EventLoop,
+                poller: PollerKind::Epoll,
+                loop_shards: 4,
+                accept,
+                copy_flush,
+                limits: ConnLimits {
+                    max_open_conns: 131_072,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let r = frontend_scaling(opts, c, datapath_tokens);
+            dp_completed &= r.completed == c;
+            if accept == AcceptMode::Reuseport && !copy_flush {
+                if dp_first_p99 == 0.0 {
+                    dp_first_p99 = r.ttft_p99;
+                }
+                dp_last_p99 = r.ttft_p99;
+            }
+            cells.push(format!("{:.2} / {:.3}", r.wall, r.ttft_p99));
+            rates.push(format!("{:.0}", r.deltas_per_s));
+        }
+        cells.push(rates.join(" / "));
+        dp_table.row(&cells);
+    }
+    dp_table.print();
+    let dp_flat = dp_last_p99 <= dp_first_p99 * 2.0 || dp_first_p99 == 0.0;
+    println!(
+        "\nshape check: every stream completed under every datapath config \
+         ({}); reuseport accept spreads the SYN queue across shard \
+         listeners in the kernel instead of funnelling every accept \
+         through shard 0, and writev flushes refcounted frames without \
+         the copy-into-scratch memcpy; reuseport+writev p99 TTFT stays \
+         within 2x across the sweep (first {dp_first_p99:.3}s vs last \
+         {dp_last_p99:.3}s: {}).  fd limit granted: {fd_limit}.",
+        if dp_completed { "holds" } else { "DOES NOT hold" },
+        if dp_flat { "holds" } else { "DOES NOT hold" }
+    );
+
+    println!("\n== steady-state allocation audit: enqueue -> writev -> recycle ==\n");
+    {
+        use dsde::util::bufpool::{BufPool, FrameQueue};
+        use std::io::Read;
+        use std::os::unix::io::AsRawFd;
+
+        let frames = if smoke { 2_000 } else { 50_000 };
+        // a connected pair with a draining reader so writev always makes
+        // progress; payload fits the pool's initial 256-byte backing so a
+        // recycled buffer never regrows
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind audit listener");
+        let audit_addr = listener.local_addr().expect("audit addr");
+        let reader = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().expect("accept audit conn");
+            let mut buf = [0u8; 65536];
+            let mut total = 0usize;
+            while let Ok(n) = s.read(&mut buf) {
+                if n == 0 {
+                    break;
+                }
+                total += n;
+            }
+            total
+        });
+        let out = std::net::TcpStream::connect(audit_addr).expect("connect audit conn");
+        out.set_nonblocking(true).expect("audit nonblocking");
+        let fd = out.as_raw_fd();
+        let payload = [b'x'; 200];
+        let pool = BufPool::new(64);
+        let mut q = FrameQueue::new();
+        // warm-up: size the pool free list and the queue's segment ring so
+        // the steady state never grows either
+        for _ in 0..64 {
+            let mut b = pool.take();
+            b.extend_from_slice(&payload);
+            q.push(pool.seal(b));
+        }
+        while !q.is_empty() {
+            if q.flush_fd(fd).expect("audit warm-up flush").blocked {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        // steady state, counted: encode side (pool take + seal) vs shard
+        // side (enqueue by reference -> writev -> recycle on pop)
+        let mut encode_allocs = 0u64;
+        let mut shard_allocs = 0u64;
+        for _ in 0..frames {
+            let (f, ea) = counted(|| {
+                let mut b = pool.take();
+                b.extend_from_slice(&payload);
+                pool.seal(b)
+            });
+            encode_allocs += ea;
+            let ((), sa) = counted(|| q.push(f));
+            shard_allocs += sa;
+            while !q.is_empty() {
+                let (res, sa) = counted(|| q.flush_fd(fd));
+                shard_allocs += sa;
+                if res.expect("audit flush").blocked && !q.is_empty() {
+                    // wait for the reader outside the counted scope
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+        }
+        drop(out);
+        let drained = reader.join().expect("audit reader");
+        assert_eq!(
+            drained,
+            (64 + frames) * payload.len(),
+            "audit reader must see every byte"
+        );
+        assert_eq!(
+            shard_allocs, 0,
+            "steady-state shard path (enqueue -> writev -> recycle) must \
+             not allocate"
+        );
+        println!(
+            "{frames} frames streamed: shard-path allocations/frame = 0 \
+             (asserted); encode-side allocations/frame = {:.2} (the \
+             refcount shell; payload buffers recycled: {} pool hits, {} \
+             misses)",
+            encode_allocs as f64 / frames as f64,
+            pool.hits(),
+            pool.misses()
+        );
+        println!(
+            "\nshape check: the flush path gathers refcounted segments \
+             into stack iovecs and recycles backings on the final drop — \
+             no per-frame malloc, memcpy, or compaction on the event-loop \
+             shard."
+        );
+    }
 }

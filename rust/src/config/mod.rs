@@ -259,6 +259,44 @@ impl PollerKind {
     }
 }
 
+/// How event-loop shards receive new connections (the `--accept` CLI
+/// surface).  Ignored by the threaded front-end.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AcceptMode {
+    /// Use `SO_REUSEPORT` per-shard listeners where the kernel provides
+    /// them, else fall back to the handoff channel.
+    #[default]
+    Auto,
+    /// Every loop shard binds its own `SO_REUSEPORT` listener, so the
+    /// kernel itself distributes accepts — no shard-0 accept bottleneck,
+    /// no cross-shard handoff wakes.  Startup error if unavailable.
+    Reuseport,
+    /// Portable fallback: shard 0 owns the single listener and hands
+    /// accepted sockets to the least-open shard over a channel.
+    Handoff,
+}
+
+impl AcceptMode {
+    /// Parse CLI shorthand: `auto`, `reuseport`, or `handoff`.
+    pub fn parse(s: &str) -> Option<AcceptMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(AcceptMode::Auto),
+            "reuseport" | "reuse-port" | "so_reuseport" => Some(AcceptMode::Reuseport),
+            "handoff" | "hand-off" => Some(AcceptMode::Handoff),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase wire/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AcceptMode::Auto => "auto",
+            AcceptMode::Reuseport => "reuseport",
+            AcceptMode::Handoff => "handoff",
+        }
+    }
+}
+
 /// Fleet-level speculation control mode (the `--spec-control` CLI
 /// surface).  See [`crate::spec::control`] for the controller itself.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -317,6 +355,14 @@ pub struct RouterConfig {
     /// Event-loop shard (thread) count (`--loop-shards`): independent
     /// loop threads, each owning a disjoint set of connections.
     pub loop_shards: usize,
+    /// How shards receive new connections (`--accept`): per-shard
+    /// `SO_REUSEPORT` listeners or the portable shard-0 handoff.
+    pub accept: AcceptMode,
+    /// Listen backlog (`--backlog`) passed to `listen(2)` on every
+    /// accept socket.  The std default (128) clamps accept bursts well
+    /// below large-soak arrival rates; the kernel additionally caps this
+    /// at `net.core.somaxconn`.
+    pub backlog: usize,
     /// Serving-trace recording (`--record <path>`): when set, every
     /// routed request is appended to this NDJSON write-ahead journal
     /// (with completion markers) — replayable via `pallas eval --replay`
@@ -348,6 +394,8 @@ impl Default for RouterConfig {
             frontend: FrontendKind::Threaded,
             poller: PollerKind::Auto,
             loop_shards: 1,
+            accept: AcceptMode::Auto,
+            backlog: 1024,
             record: None,
             stall_ms: 10_000,
             resume: None,
@@ -375,6 +423,12 @@ impl RouterConfig {
                 self.loop_shards
             ));
         }
+        if self.backlog == 0 {
+            return Err("backlog must be > 0".to_string());
+        }
+        if self.backlog > 1 << 20 {
+            return Err(format!("backlog {} unreasonably large (max 2^20)", self.backlog));
+        }
         Ok(())
     }
 
@@ -387,6 +441,8 @@ impl RouterConfig {
             .set("frontend", self.frontend.name())
             .set("poller", self.poller.name())
             .set("loop_shards", self.loop_shards)
+            .set("accept", self.accept.name())
+            .set("backlog", self.backlog)
             .set(
                 "record",
                 match &self.record {
@@ -501,6 +557,8 @@ mod tests {
         assert!(s.contains("\"frontend\":\"threaded\""));
         assert!(s.contains("\"poller\":\"auto\""));
         assert!(s.contains("\"loop_shards\":1"));
+        assert!(s.contains("\"accept\":\"auto\""));
+        assert!(s.contains("\"backlog\":1024"));
         assert!(s.contains("\"record\":null"));
         assert!(s.contains("\"stall_ms\":10000"));
         assert!(s.contains("\"resume\":null"));
@@ -516,6 +574,16 @@ mod tests {
             ..Default::default()
         };
         assert!(huge_shards.validate().unwrap_err().contains("loop_shards"));
+        let zero_backlog = RouterConfig {
+            backlog: 0,
+            ..Default::default()
+        };
+        assert!(zero_backlog.validate().unwrap_err().contains("backlog"));
+        let huge_backlog = RouterConfig {
+            backlog: (1 << 20) + 1,
+            ..Default::default()
+        };
+        assert!(huge_backlog.validate().unwrap_err().contains("backlog"));
         let recording = RouterConfig {
             record: Some("trace.ndjson".to_string()),
             ..Default::default()
@@ -553,6 +621,17 @@ mod tests {
         assert_eq!(PollerKind::parse("kqueue"), None);
         assert_eq!(PollerKind::Epoll.name(), "epoll");
         assert_eq!(PollerKind::default(), PollerKind::Auto);
+    }
+
+    #[test]
+    fn accept_mode_parse() {
+        assert_eq!(AcceptMode::parse("auto"), Some(AcceptMode::Auto));
+        assert_eq!(AcceptMode::parse("REUSEPORT"), Some(AcceptMode::Reuseport));
+        assert_eq!(AcceptMode::parse("reuse-port"), Some(AcceptMode::Reuseport));
+        assert_eq!(AcceptMode::parse("handoff"), Some(AcceptMode::Handoff));
+        assert_eq!(AcceptMode::parse("nope"), None);
+        assert_eq!(AcceptMode::Reuseport.name(), "reuseport");
+        assert_eq!(AcceptMode::default(), AcceptMode::Auto);
     }
 
     #[test]

@@ -20,8 +20,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use dsde::config::{
-    CapMode, EngineConfig, FrontendKind, PollerKind, RoutePolicy, RouterConfig, SlPolicyKind,
-    SpecControl,
+    AcceptMode, CapMode, EngineConfig, FrontendKind, PollerKind, RoutePolicy, RouterConfig,
+    SlPolicyKind, SpecControl,
 };
 use dsde::engine::engine::Engine;
 use dsde::eval::{
@@ -50,6 +50,8 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "frontend", help: "threaded | event-loop (serve)", default: Some("threaded") },
     FlagSpec { name: "poller", help: "auto | epoll | poll (event-loop readiness back-end)", default: Some("auto") },
     FlagSpec { name: "loop-shards", help: "event-loop shard threads (serve)", default: Some("1") },
+    FlagSpec { name: "accept", help: "auto | reuseport | handoff (event-loop accept sharding)", default: Some("auto") },
+    FlagSpec { name: "backlog", help: "listen(2) backlog per listener (serve)", default: Some("1024") },
     FlagSpec { name: "cap", help: "none | mean | median | p90", default: Some("mean") },
     FlagSpec { name: "batch", help: "max batch size", default: Some("8") },
     FlagSpec { name: "dataset", help: "cnndm|xsum|gsm8k|hotpotqa|nq|humaneval|sharegpt|wmt14", default: Some("cnndm") },
@@ -121,6 +123,10 @@ fn router_config(args: &Args) -> Result<RouterConfig> {
         frontend,
         poller,
         loop_shards: args.usize_clamped_or("loop-shards", 1, 1, 64),
+        accept: AcceptMode::parse(&args.str_or("accept", "auto")).ok_or_else(|| {
+            anyhow::anyhow!("unknown --accept value (auto | reuseport | handoff)")
+        })?,
+        backlog: args.usize_clamped_or("backlog", 1024, 1, 1 << 20),
         record: args.get("record").map(String::from),
         stall_ms: args.u64_or("stall-ms", 10_000),
         resume: args.get("resume").map(String::from),
@@ -220,6 +226,8 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                 frontend: rcfg.frontend,
                 poller: rcfg.poller,
                 loop_shards: rcfg.loop_shards,
+                accept: rcfg.accept,
+                backlog: rcfg.backlog,
                 ..Default::default()
             };
             let handle =
@@ -253,6 +261,8 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<()> {
                 frontend: rcfg.frontend,
                 poller: rcfg.poller,
                 loop_shards: rcfg.loop_shards,
+                accept: rcfg.accept,
+                backlog: rcfg.backlog,
                 ..Default::default()
             };
             let handle =

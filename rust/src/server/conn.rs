@@ -12,24 +12,28 @@
 //! The [`Conn`] state machine is event-loop-only: a nonblocking socket
 //! stepped by readiness events through
 //! `Reading → (WaitBlocking | StreamingRing) → Flushing → Closed`, with
-//! all writes buffered so a slow reader backpressures into the
-//! connection's own output buffer instead of blocking the loop.
-//! Streaming output reaches the connection as preformatted frames pushed
-//! by replica threads onto the owning shard's SPSC ring
-//! ([`crate::server::router::StreamFrame`]); the shard loop appends them
-//! via [`Conn::deliver_frame`].
+//! all writes queued so a slow reader backpressures into the
+//! connection's own output queue instead of blocking the loop.
+//! Streaming output reaches the connection as preformatted refcounted
+//! frames ([`crate::util::bufpool::Frame`]) pushed by replica threads
+//! onto the owning shard's SPSC ring
+//! ([`crate::server::router::StreamFrame`]); the shard loop enqueues
+//! them by reference via [`Conn::deliver_frame`] — no copy — and the
+//! per-connection [`crate::util::bufpool::FrameQueue`] flushes them with
+//! vectored `writev(2)`.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::config::FrontendKind;
 use crate::engine::request::{FinishedRequest, Request, SamplingParams};
 use crate::model::vocab;
 use crate::server::router::{EngineRouter, RingTarget, StreamEvent};
+use crate::util::bufpool::{BufPool, Frame, FrameBuf, FrameQueue};
 use crate::util::json::Json;
 use crate::util::sys::{Waker, POLLIN, POLLOUT};
 
@@ -82,39 +86,62 @@ impl Default for ConnLimits {
 /// Front-end connection counters reported on `/health` and
 /// `/v1/metrics` (and queryable in-process via
 /// `ServerHandle::frontend_stats`).  Event-loop servers additionally
-/// carry the resolved poller name, per-shard open-connection gauges, and
-/// the stream-ring depth high-water mark.
+/// carry the resolved poller name, the resolved accept mode and
+/// effective listen backlog, per-shard open-connection and accept
+/// gauges, the stream-ring depth high-water mark, and the zero-copy
+/// datapath counters (`writev` syscalls, frames enqueued by reference,
+/// buffer-pool hits/misses, timer-wheel cascades).
 #[derive(Debug)]
 pub struct FrontendStats {
     kind: FrontendKind,
     poller: &'static str,
+    accept: &'static str,
+    backlog: usize,
     shard_open: Vec<AtomicUsize>,
+    shard_accepted: Vec<AtomicU64>,
     ring_depth_hwm: AtomicUsize,
     open: AtomicUsize,
     accepted: AtomicU64,
     rejected: AtomicU64,
+    writev_calls: AtomicU64,
+    frames_zero_copy: AtomicU64,
+    bufpool_hits: Arc<AtomicU64>,
+    bufpool_misses: Arc<AtomicU64>,
+    timer_cascades: AtomicU64,
 }
 
 impl FrontendStats {
-    pub(crate) fn new(kind: FrontendKind) -> FrontendStats {
-        FrontendStats::with_loop(kind, "none", 0)
+    pub(crate) fn new(kind: FrontendKind, backlog: usize) -> FrontendStats {
+        FrontendStats::with_loop(kind, "none", "none", backlog, 0)
     }
 
-    /// Stats for an event-loop server: the resolved poller back-end name
-    /// and the shard count (one open-connection gauge per shard).
+    /// Stats for an event-loop server: the resolved poller back-end name,
+    /// the resolved accept mode + effective listen backlog, and the shard
+    /// count (one open-connection gauge and one accept counter per
+    /// shard).
     pub(crate) fn with_loop(
         kind: FrontendKind,
         poller: &'static str,
+        accept: &'static str,
+        backlog: usize,
         shards: usize,
     ) -> FrontendStats {
         FrontendStats {
             kind,
             poller,
+            accept,
+            backlog,
             shard_open: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            shard_accepted: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             ring_depth_hwm: AtomicUsize::new(0),
             open: AtomicUsize::new(0),
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            writev_calls: AtomicU64::new(0),
+            frames_zero_copy: AtomicU64::new(0),
+            bufpool_hits: Arc::new(AtomicU64::new(0)),
+            bufpool_misses: Arc::new(AtomicU64::new(0)),
+            timer_cascades: AtomicU64::new(0),
         }
     }
 
@@ -127,6 +154,18 @@ impl FrontendStats {
     /// for the threaded front-end.
     pub fn poller(&self) -> &'static str {
         self.poller
+    }
+
+    /// The resolved accept mode: `"reuseport"`, `"handoff"`, or `"none"`
+    /// for the threaded front-end.
+    pub fn accept_mode(&self) -> &'static str {
+        self.accept
+    }
+
+    /// Effective listen backlog passed to `listen(2)` (the kernel
+    /// additionally caps it at `net.core.somaxconn`).
+    pub fn backlog(&self) -> usize {
+        self.backlog
     }
 
     /// Event-loop shard count (0 for the threaded front-end).
@@ -162,16 +201,76 @@ impl FrontendStats {
         self.rejected.load(Ordering::SeqCst)
     }
 
+    /// `writev(2)` flush syscalls issued across all shards.
+    pub fn writev_calls(&self) -> u64 {
+        self.writev_calls.load(Ordering::Relaxed)
+    }
+
+    /// Stream frames enqueued by reference (refcount bump, no memcpy).
+    pub fn frames_enqueued_zero_copy(&self) -> u64 {
+        self.frames_zero_copy.load(Ordering::Relaxed)
+    }
+
+    /// Frame-buffer pool hits (encoded into a recycled allocation).
+    pub fn bufpool_hits(&self) -> u64 {
+        self.bufpool_hits.load(Ordering::Relaxed)
+    }
+
+    /// Frame-buffer pool misses (a fresh allocation was needed).
+    pub fn bufpool_misses(&self) -> u64 {
+        self.bufpool_misses.load(Ordering::Relaxed)
+    }
+
+    /// Timer-wheel re-buckets across all shards (entries seen before
+    /// their due tick — a high rate means the wheel horizon is small
+    /// relative to the configured timeouts).
+    pub fn timer_wheel_cascades(&self) -> u64 {
+        self.timer_cascades.load(Ordering::Relaxed)
+    }
+
+    /// Connections accepted by shard `s` since startup (0 out of range).
+    pub fn shard_accepted(&self, s: usize) -> u64 {
+        self.shard_accepted
+            .get(s)
+            .map_or(0, |a| a.load(Ordering::SeqCst))
+    }
+
+    /// The shared hit/miss counters handed to every replica's
+    /// [`BufPool`] so pool traffic lands here without polling.
+    pub(crate) fn bufpool_counters(&self) -> (Arc<AtomicU64>, Arc<AtomicU64>) {
+        (self.bufpool_hits.clone(), self.bufpool_misses.clone())
+    }
+
+    pub(crate) fn on_writev(&self, calls: u64) {
+        if calls > 0 {
+            self.writev_calls.fetch_add(calls, Ordering::Relaxed);
+        }
+    }
+
+    pub(crate) fn on_frame_zero_copy(&self) {
+        self.frames_zero_copy.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn on_cascades(&self, delta: u64) {
+        if delta > 0 {
+            self.timer_cascades.fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+
     pub(crate) fn on_accept(&self) {
         self.accepted.fetch_add(1, Ordering::SeqCst);
         self.open.fetch_add(1, Ordering::SeqCst);
     }
 
-    /// Accept accounted to a specific shard (the event-loop path; shard 0
-    /// accepts, but the gauge follows the shard the conn is handed to).
+    /// Accept accounted to a specific shard (the event-loop path; the
+    /// gauge and accept counter follow the shard that owns the conn —
+    /// under `reuseport` that is also the shard the kernel accepted on).
     pub(crate) fn on_accept_shard(&self, s: usize) {
         self.on_accept();
         if let Some(a) = self.shard_open.get(s) {
+            a.fetch_add(1, Ordering::SeqCst);
+        }
+        if let Some(a) = self.shard_accepted.get(s) {
             a.fetch_add(1, Ordering::SeqCst);
         }
     }
@@ -202,6 +301,8 @@ impl FrontendStats {
         let mut j = Json::obj()
             .set("kind", self.kind.name())
             .set("poller", self.poller)
+            .set("accept", self.accept)
+            .set("backlog", self.backlog)
             .set("loop_shards", self.loop_shards())
             .set("open_connections", self.open())
             .set("accepted", self.accepted())
@@ -212,9 +313,20 @@ impl FrontendStats {
                 .iter()
                 .map(|a| Json::from(a.load(Ordering::SeqCst)))
                 .collect();
+            let per_accept: Vec<Json> = self
+                .shard_accepted
+                .iter()
+                .map(|a| Json::from(a.load(Ordering::SeqCst)))
+                .collect();
             j = j
                 .set("shard_open_connections", per)
-                .set("ring_depth_hwm", self.ring_depth_hwm());
+                .set("accepted_per_shard", per_accept)
+                .set("ring_depth_hwm", self.ring_depth_hwm())
+                .set("writev_calls", self.writev_calls())
+                .set("frames_enqueued_zero_copy", self.frames_enqueued_zero_copy())
+                .set("bufpool_hits", self.bufpool_hits())
+                .set("bufpool_misses", self.bufpool_misses())
+                .set("timer_wheel_cascades", self.timer_wheel_cascades());
         }
         j
     }
@@ -326,7 +438,18 @@ pub(crate) const STREAM_TERMINATOR: &[u8] = b"0\r\n\r\n";
 /// Encode one NDJSON line as an HTTP chunk (the newline rides inside the
 /// chunk data, matching the blocking front-end's historical framing).
 pub(crate) fn encode_chunk_line(line: &str) -> Vec<u8> {
-    format!("{:x}\r\n{line}\n\r\n", line.len() + 1).into_bytes()
+    let mut buf = Vec::with_capacity(line.len() + 16);
+    encode_chunk_line_into(&mut buf, line);
+    buf
+}
+
+/// [`encode_chunk_line`] writing into a caller-owned buffer — the pooled
+/// ring-frame builders use this so steady-state encoding reuses a
+/// recycled allocation instead of making a fresh one per frame.
+pub(crate) fn encode_chunk_line_into(buf: &mut Vec<u8>, line: &str) {
+    use std::io::Write as _;
+    write!(buf, "{:x}\r\n{line}\n\r\n", line.len() + 1)
+        .expect("writing to a Vec cannot fail");
 }
 
 /// One accepted-token delta as an NDJSON line.
@@ -387,6 +510,46 @@ pub(crate) fn stream_abort_frame() -> Vec<u8> {
     let mut bytes = encode_chunk_line(&aborted_line());
     bytes.extend_from_slice(STREAM_TERMINATOR);
     bytes
+}
+
+// ---- pooled ring-frame builders ----------------------------------------------
+//
+// Replica threads encode every ring frame through these: the bytes are
+// identical to the Vec-returning builders above (same encoders, pinned by
+// a test), but the backing store comes from the replica's BufPool and is
+// shared by refcount all the way to the socket — the frame is encoded
+// once and never copied again.
+
+/// [`stream_delta_frame`] encoded into a pooled, refcounted [`Frame`].
+pub(crate) fn stream_delta_frame_in(pool: &BufPool, tokens: &[u32], t: f64) -> Frame {
+    let mut buf = pool.take();
+    encode_chunk_line_into(&mut buf, &delta_line(tokens, t));
+    pool.seal(buf)
+}
+
+/// [`stream_done_frame`] encoded into a pooled, refcounted [`Frame`].
+pub(crate) fn stream_done_frame_in(pool: &BufPool, fin: &FinishedRequest) -> Frame {
+    let mut buf = pool.take();
+    encode_chunk_line_into(&mut buf, &done_line(fin));
+    buf.extend_from_slice(STREAM_TERMINATOR);
+    pool.seal(buf)
+}
+
+/// [`stream_abort_frame`] encoded into a pooled, refcounted [`Frame`].
+pub(crate) fn stream_abort_frame_in(pool: &BufPool) -> Frame {
+    let mut buf = pool.take();
+    encode_chunk_line_into(&mut buf, &aborted_line());
+    buf.extend_from_slice(STREAM_TERMINATOR);
+    pool.seal(buf)
+}
+
+/// The shared [`STREAM_HEADER`] frame: one process-wide allocation,
+/// refcounted onto every stream's output queue.
+pub(crate) fn stream_header_frame() -> Frame {
+    static HEADER: OnceLock<Frame> = OnceLock::new();
+    HEADER
+        .get_or_init(|| FrameBuf::unpooled(STREAM_HEADER.to_vec()))
+        .clone()
 }
 
 /// The blocking completion response body.
@@ -590,16 +753,22 @@ pub(crate) struct Conn {
     /// shard synthesizes an aborted terminal for still-open streams it
     /// fed — a dead replica must not leave its clients hanging.
     pub(crate) ring_src: Option<usize>,
+    /// On the shard's dirty-list (pending pump/flush/reconcile work this
+    /// tick).  Owned by the event loop; lives here so membership is O(1).
+    pub(crate) dirty: bool,
     inbuf: Vec<u8>,
-    outbuf: Vec<u8>,
-    out_pos: usize,
+    outq: FrameQueue,
+    /// Bench A/B knob: flush by copying into a contiguous scratch buffer
+    /// + `write(2)` (the historical datapath) instead of `writev(2)`.
+    copy_flush: bool,
+    copy_scratch: Vec<u8>,
     created: Instant,
     last_progress: Instant,
     headers_done: bool,
 }
 
 impl Conn {
-    pub(crate) fn new(stream: TcpStream, token: u64) -> Conn {
+    pub(crate) fn new(stream: TcpStream, token: u64, copy_flush: bool) -> Conn {
         let now = Instant::now();
         Conn {
             stream,
@@ -607,9 +776,11 @@ impl Conn {
             registered_interest: 0,
             state: ConnState::Reading,
             ring_src: None,
+            dirty: false,
             inbuf: Vec::new(),
-            outbuf: Vec::new(),
-            out_pos: 0,
+            outq: FrameQueue::new(),
+            copy_flush,
+            copy_scratch: Vec::new(),
             created: now,
             last_progress: now,
             headers_done: false,
@@ -626,7 +797,7 @@ impl Conn {
     }
 
     fn has_pending_out(&self) -> bool {
-        self.out_pos < self.outbuf.len()
+        !self.outq.is_empty()
     }
 
     /// Poll interest: readable while parsing the request, writable while
@@ -643,13 +814,14 @@ impl Conn {
         ev
     }
 
-    fn queue(&mut self, bytes: &[u8]) {
-        self.outbuf.extend_from_slice(bytes);
+    /// Enqueue a frame by reference (refcount bump, never a copy).
+    fn queue(&mut self, frame: Frame) {
+        self.outq.push(frame);
     }
 
     /// Queue a complete response and transition to `Flushing`.
     fn respond(&mut self, bytes: Vec<u8>) {
-        self.queue(&bytes);
+        self.queue(FrameBuf::unpooled(bytes));
         self.state = ConnState::Flushing;
     }
 
@@ -686,7 +858,7 @@ impl Conn {
                         ParseStatus::Partial => {}
                         ParseStatus::Invalid(status, msg) => {
                             self.respond(encode_error(status, msg));
-                            self.try_flush();
+                            self.try_flush(stats);
                             return;
                         }
                         ParseStatus::Complete(req) => {
@@ -704,7 +876,7 @@ impl Conn {
                                     self.state = ConnState::WaitBlocking(rx);
                                 }
                                 Dispatch::StreamingRing => {
-                                    self.queue(STREAM_HEADER);
+                                    self.queue(stream_header_frame());
                                     self.state =
                                         ConnState::StreamingRing { terminated: false };
                                 }
@@ -712,7 +884,7 @@ impl Conn {
                                     unreachable!("channel streaming is threaded-only")
                                 }
                             }
-                            self.pump();
+                            self.pump(stats);
                             return;
                         }
                     }
@@ -727,15 +899,17 @@ impl Conn {
         }
     }
 
-    /// Append one ring-delivered stream frame to the out buffer.  Frames
-    /// arriving for a connection that already terminated (or died) are
-    /// dropped — the replica keeps producing briefly after a client
-    /// disappears and those bytes have nowhere to go.  No flush here: the
-    /// shard loop pumps after draining its rings.
-    pub(crate) fn deliver_frame(&mut self, bytes: &[u8], done: bool) {
+    /// Enqueue one ring-delivered stream frame by reference (an `Arc`
+    /// clone — the bytes were encoded once on the replica thread and are
+    /// never copied again).  Frames arriving for a connection that
+    /// already terminated (or died) are dropped — the replica keeps
+    /// producing briefly after a client disappears and those bytes have
+    /// nowhere to go.  No flush here: the shard loop pumps after
+    /// draining its rings.
+    pub(crate) fn deliver_frame(&mut self, frame: &Frame, done: bool) {
         if let ConnState::StreamingRing { terminated } = &mut self.state {
             if !*terminated {
-                self.outbuf.extend_from_slice(bytes);
+                self.outq.push(frame.clone());
                 if done {
                     *terminated = true;
                 }
@@ -743,9 +917,9 @@ impl Conn {
         }
     }
 
-    /// Move engine-side progress into the output buffer (nonblocking
+    /// Move engine-side progress into the output queue (nonblocking
     /// `try_recv` only) and flush what the socket will take.
-    pub(crate) fn pump(&mut self) {
+    pub(crate) fn pump(&mut self, stats: &FrontendStats) {
         if let ConnState::WaitBlocking(rx) = &mut self.state {
             match rx.try_recv() {
                 Ok(fin) => {
@@ -759,23 +933,28 @@ impl Conn {
                 }
             }
         }
-        self.try_flush();
+        self.try_flush(stats);
     }
 
     /// Readiness: the socket will take more bytes.
-    pub(crate) fn on_writable(&mut self) {
-        self.try_flush();
+    pub(crate) fn on_writable(&mut self, stats: &FrontendStats) {
+        self.try_flush(stats);
     }
 
-    fn try_flush(&mut self) {
+    /// The historical copying flush (bench A/B only): gather queued
+    /// segments into a contiguous scratch buffer, `write(2)` it, advance
+    /// the queue by what the kernel took.
+    fn flush_copying(&mut self) {
         while self.has_pending_out() {
-            match self.stream.write(&self.outbuf[self.out_pos..]) {
+            self.copy_scratch.clear();
+            self.outq.fill_copy(&mut self.copy_scratch, 64 * 1024);
+            match self.stream.write(&self.copy_scratch) {
                 Ok(0) => {
                     self.state = ConnState::Closed;
                     return;
                 }
                 Ok(n) => {
-                    self.out_pos += n;
+                    self.outq.advance(n);
                     self.last_progress = Instant::now();
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
@@ -786,16 +965,29 @@ impl Conn {
                 }
             }
         }
-        // compact the flushed prefix once it grows: the high-water mark
-        // bounds only the *pending* bytes, so without this a long stream
-        // to a steadily-slow reader would retain every byte ever queued
-        if self.has_pending_out() && self.out_pos >= 64 * 1024 {
-            self.outbuf.drain(..self.out_pos);
-            self.out_pos = 0;
+    }
+
+    fn try_flush(&mut self, stats: &FrontendStats) {
+        if self.copy_flush {
+            self.flush_copying();
+        } else {
+            match self.outq.flush_fd(self.fd()) {
+                Ok(res) => {
+                    stats.on_writev(res.syscalls);
+                    if res.written > 0 {
+                        self.last_progress = Instant::now();
+                    }
+                }
+                Err(_) => {
+                    self.outq.clear();
+                    self.state = ConnState::Closed;
+                }
+            }
+        }
+        if self.is_closed() {
+            return;
         }
         if !self.has_pending_out() {
-            self.outbuf.clear();
-            self.out_pos = 0;
             let response_complete = matches!(self.state, ConnState::Flushing)
                 || matches!(self.state, ConnState::StreamingRing { terminated: true });
             if response_complete {
@@ -824,18 +1016,23 @@ impl Conn {
     /// the request) and the write-stall guard (a client that stops
     /// reading its response is cut off after the idle budget — otherwise
     /// it holds a connection slot, and shutdown, hostage).  An engine
-    /// wait is *not* a stall: a connection with an empty out buffer is
+    /// wait is *not* a stall: a connection with an empty out queue is
     /// waiting on work the engine (or drain) is guaranteed to deliver.
-    pub(crate) fn check_timeouts(&mut self, now: Instant, limits: &ConnLimits) {
+    pub(crate) fn check_timeouts(
+        &mut self,
+        now: Instant,
+        limits: &ConnLimits,
+        stats: &FrontendStats,
+    ) {
         if matches!(self.state, ConnState::Reading) {
             if !self.headers_done && now.duration_since(self.created) > limits.header_timeout {
                 self.respond(encode_error(408, "header read timeout"));
-                self.try_flush();
+                self.try_flush(stats);
                 return;
             }
             if now.duration_since(self.last_progress) > limits.idle_timeout {
                 self.respond(encode_error(408, "idle timeout"));
-                self.try_flush();
+                self.try_flush(stats);
                 return;
             }
         }
@@ -843,6 +1040,31 @@ impl Conn {
         {
             self.state = ConnState::Closed;
         }
+    }
+
+    /// The earliest instant at which [`Conn::check_timeouts`] could act,
+    /// given current state — what the shard's timer wheel arms.  `None`
+    /// when no deadline applies right now (engine wait with an empty out
+    /// queue); the loop then re-arms a heartbeat at `now + idle` so a
+    /// state change never strands the connection without a timer.
+    pub(crate) fn next_deadline(&self, limits: &ConnLimits) -> Option<Instant> {
+        let mut due: Option<Instant> = None;
+        let mut consider = |d: Instant| {
+            due = Some(match due {
+                Some(cur) => cur.min(d),
+                None => d,
+            });
+        };
+        if matches!(self.state, ConnState::Reading) {
+            if !self.headers_done {
+                consider(self.created + limits.header_timeout);
+            }
+            consider(self.last_progress + limits.idle_timeout);
+        }
+        if self.has_pending_out() {
+            consider(self.last_progress + limits.idle_timeout);
+        }
+        due
     }
 }
 
@@ -937,7 +1159,7 @@ mod tests {
 
     #[test]
     fn stats_counters_track_lifecycle() {
-        let s = FrontendStats::new(FrontendKind::EventLoop);
+        let s = FrontendStats::new(FrontendKind::EventLoop, 128);
         s.on_accept();
         s.on_accept();
         s.on_reject();
@@ -945,18 +1167,23 @@ mod tests {
         assert_eq!(s.accepted(), 2);
         assert_eq!(s.rejected(), 1);
         assert_eq!(s.open(), 1);
+        assert_eq!(s.backlog(), 128);
         let j = s.to_json().to_string();
         assert!(j.contains("\"kind\":\"event-loop\""), "{j}");
         assert!(j.contains("\"open_connections\":1"), "{j}");
         assert!(j.contains("\"poller\":\"none\""), "{j}");
+        assert!(j.contains("\"accept\":\"none\""), "{j}");
+        assert!(j.contains("\"backlog\":128"), "{j}");
         assert!(j.contains("\"loop_shards\":0"), "{j}");
-        // no shard gauges unless the server actually runs loop shards
+        // no shard gauges or datapath counters unless the server
+        // actually runs loop shards
         assert!(!j.contains("shard_open_connections"), "{j}");
+        assert!(!j.contains("writev_calls"), "{j}");
     }
 
     #[test]
     fn loop_stats_track_shards_and_ring_depth() {
-        let s = FrontendStats::with_loop(FrontendKind::EventLoop, "epoll", 2);
+        let s = FrontendStats::with_loop(FrontendKind::EventLoop, "epoll", "handoff", 1024, 2);
         s.on_accept_shard(1);
         s.on_accept_shard(1);
         s.on_accept_shard(0);
@@ -969,12 +1196,44 @@ mod tests {
         assert_eq!(s.shard_open(0), 1);
         assert_eq!(s.shard_open(1), 1);
         assert_eq!(s.shard_open(9), 0);
+        assert_eq!(s.shard_accepted(0), 1);
+        assert_eq!(s.shard_accepted(1), 2);
+        assert_eq!(s.shard_accepted(9), 0);
         assert_eq!(s.ring_depth_hwm(), 7);
         let j = s.to_json().to_string();
         assert!(j.contains("\"poller\":\"epoll\""), "{j}");
+        assert!(j.contains("\"accept\":\"handoff\""), "{j}");
+        assert!(j.contains("\"backlog\":1024"), "{j}");
         assert!(j.contains("\"loop_shards\":2"), "{j}");
         assert!(j.contains("\"shard_open_connections\":[1,1]"), "{j}");
+        assert!(j.contains("\"accepted_per_shard\":[1,2]"), "{j}");
         assert!(j.contains("\"ring_depth_hwm\":7"), "{j}");
+        assert!(j.contains("\"writev_calls\":0"), "{j}");
+        assert!(j.contains("\"frames_enqueued_zero_copy\":0"), "{j}");
+        assert!(j.contains("\"bufpool_hits\":0"), "{j}");
+        assert!(j.contains("\"bufpool_misses\":0"), "{j}");
+        assert!(j.contains("\"timer_wheel_cascades\":0"), "{j}");
+    }
+
+    #[test]
+    fn datapath_counters_accumulate() {
+        let s = FrontendStats::with_loop(FrontendKind::EventLoop, "poll", "reuseport", 64, 1);
+        s.on_writev(3);
+        s.on_writev(0); // no-op, not a spurious add
+        s.on_frame_zero_copy();
+        s.on_frame_zero_copy();
+        s.on_cascades(5);
+        assert_eq!(s.writev_calls(), 3);
+        assert_eq!(s.frames_enqueued_zero_copy(), 2);
+        assert_eq!(s.timer_wheel_cascades(), 5);
+        assert_eq!(s.accept_mode(), "reuseport");
+        let (hits, misses) = s.bufpool_counters();
+        let pool = BufPool::with_counters(8, hits, misses);
+        let f = pool.seal(pool.take());
+        drop(f);
+        let _ = pool.take();
+        assert_eq!(s.bufpool_misses(), 1);
+        assert_eq!(s.bufpool_hits(), 1);
     }
 
     #[test]
@@ -999,5 +1258,62 @@ mod tests {
         let mut expect = encode_chunk_line(&done_line(&fin));
         expect.extend_from_slice(STREAM_TERMINATOR);
         assert_eq!(done, expect);
+    }
+
+    #[test]
+    fn pooled_frames_are_byte_identical_to_plain_builders() {
+        let pool = BufPool::new(8);
+        let fin = FinishedRequest {
+            id: 9,
+            output: vec![1, 2, 3],
+            reason: crate::engine::request::FinishReason::MaxTokens,
+            arrival: 0.0,
+            finished_at: 2.0,
+            first_token_at: 0.25,
+            rounds: 3,
+            drafted: 6,
+            accepted: 3,
+            preemptions: 0,
+        };
+        assert_eq!(
+            &stream_delta_frame_in(&pool, &[4, 5], 1.5)[..],
+            &stream_delta_frame(&[4, 5], 1.5)[..]
+        );
+        assert_eq!(
+            &stream_done_frame_in(&pool, &fin)[..],
+            &stream_done_frame(&fin)[..]
+        );
+        assert_eq!(&stream_abort_frame_in(&pool)[..], &stream_abort_frame()[..]);
+        assert_eq!(&stream_header_frame()[..], STREAM_HEADER);
+        // and a recycled buffer encodes the same bytes as a fresh one
+        let first = stream_delta_frame_in(&pool, &[7, 8, 9], 0.125);
+        let plain = stream_delta_frame(&[7, 8, 9], 0.125);
+        assert_eq!(&first[..], &plain[..]);
+        drop(first);
+        let recycled = stream_delta_frame_in(&pool, &[7, 8, 9], 0.125);
+        assert_eq!(&recycled[..], &plain[..]);
+        assert!(pool.hits() >= 1, "second encode must reuse the buffer");
+    }
+
+    #[test]
+    fn next_deadline_tracks_state() {
+        // a Conn needs a real socket; use a loopback pair
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let _cli = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (srv, _) = l.accept().unwrap();
+        let lim = limits();
+        let mut c = Conn::new(srv, 1, false);
+        // Reading, headers not done: min(header deadline, idle deadline)
+        let d = c.next_deadline(&lim).expect("reading conn has a deadline");
+        assert_eq!(d, c.created + lim.header_timeout); // header < idle
+        c.headers_done = true;
+        let d = c.next_deadline(&lim).unwrap();
+        assert_eq!(d, c.last_progress + lim.idle_timeout);
+        // engine wait with empty out queue: no deadline (heartbeat case)
+        c.state = ConnState::StreamingRing { terminated: false };
+        assert!(c.next_deadline(&lim).is_none());
+        // pending output arms the write-stall deadline
+        c.deliver_frame(&FrameBuf::unpooled(b"x".to_vec()), false);
+        assert_eq!(c.next_deadline(&lim).unwrap(), c.last_progress + lim.idle_timeout);
     }
 }

@@ -12,30 +12,45 @@
 //!   stream frames or blocking-completion deliveries, the nonblocking
 //!   notification path that replaces the threaded front-end's blocking
 //!   `recv`; pokes coalesce in [`Waker::wake`];
-//! * the **listener** (shard 0 only) — accepted sockets are made
-//!   nonblocking, assigned a token, and either registered locally or
-//!   handed off over an mpsc channel to the shard with the fewest open
-//!   connections (plus a waker poke so the target notices immediately);
+//! * its **listener** — under `--accept reuseport` every shard owns a
+//!   `SO_REUSEPORT` listener on the same address and the kernel itself
+//!   distributes accepts (no handoff channel, no cross-shard wakes on
+//!   the accept path); under `--accept handoff` only shard 0 has one and
+//!   hands accepted sockets to the shard with the fewest open
+//!   connections over an mpsc channel (plus a waker poke);
 //! * every **connection it owns**, registered edge-triggered with
 //!   interest cached per connection — the poller is touched only when
 //!   [`Conn::interest`] actually changes.
 //!
 //! Streaming tokens do not travel through per-request channels here:
 //! each replica holds one bounded lock-free SPSC ring per shard and
-//! pushes preformatted NDJSON frames tagged with the connection token
-//! ([`StreamFrame`]); the shard drains its rings each iteration and
-//! appends the bytes to the addressed connection's output buffer.  A slow
-//! reader backpressures into its own buffer; frames for connections that
+//! pushes preformatted, refcounted NDJSON frames tagged with the
+//! connection token ([`StreamFrame`]); the shard drains its rings each
+//! iteration and enqueues each frame on the addressed connection's
+//! output queue *by reference* — the bytes are encoded once on the
+//! replica thread and flushed with `writev(2)`, never copied.  A slow
+//! reader backpressures into its own queue; frames for connections that
 //! died are discarded on arrival.
 //!
+//! **Per-tick work is O(active), not O(open).**  Three structures
+//! replace the historical full-`conns` sweeps: a *dirty list* of
+//! connections with pending pump/flush/reconcile work (fed by readiness
+//! events, ring deliveries, handoffs, and timer fires), a *waiting set*
+//! of connections parked on blocking engine completions (pumped when the
+//! waker fires), and a hashed [`TimerWheel`] holding one armed deadline
+//! per connection (header/idle/write-stall — re-armed lazily on fire
+//! against the connection's actual deadline, which only ever moves
+//! later).  A shard with 100k mostly-idle streams does work proportional
+//! to readiness, not to 100k.
+//!
 //! Shutdown ordering (see `ServerHandle::shutdown`): the stop flag stops
-//! accepting and closes request-less connections, the router drains —
-//! terminal frames ride the rings and wake the shards — and each shard
-//! exits once its last connection flushes (shards > 0 also wait for the
-//! accept shard to drop the handoff channel, so no handed-off socket is
-//! stranded).
+//! accepting and closes request-less connections (one full sweep on the
+//! stop *transition*), the router drains — terminal frames ride the
+//! rings and wake the shards — and each shard exits once its last
+//! connection flushes (handoff shards > 0 also wait for the accept shard
+//! to drop the handoff channel, so no handed-off socket is stranded).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
@@ -48,17 +63,20 @@ use crate::server::conn::{
     FrontendStats,
 };
 use crate::server::router::{EngineRouter, StreamFrame};
+use crate::util::bufpool::{Frame, FrameBuf};
 use crate::util::spsc;
 use crate::util::sys::{Event, Poller, Waker, POLLIN};
+use crate::util::timerwheel::TimerWheel;
 
-/// Poll timeout: bounds how stale timeout checks and the stop flag can
-/// get while a shard is otherwise idle.
+/// Poll timeout: bounds how stale the stop flag and timer wheel can get
+/// while a shard is otherwise idle.
 const POLL_TIMEOUT_MS: i32 = 100;
 
 /// Poller token reserved for the shard's waker.
 const WAKER_TOKEN: u64 = u64::MAX;
 
-/// Poller token reserved for the listener (shard 0 only).
+/// Poller token reserved for the shard's listener (shard 0 under
+/// handoff; every shard under reuseport).
 const LISTENER_TOKEN: u64 = u64::MAX - 1;
 
 /// Iterations the listener stays out of the poll set after an accept
@@ -66,6 +84,15 @@ const LISTENER_TOKEN: u64 = u64::MAX - 1;
 /// otherwise keep the level-triggered listener readable and spin the
 /// accept shard hot until an fd frees up.
 const ACCEPT_BACKOFF_TICKS: u32 = 5;
+
+/// Timer-wheel tick width.  Deadline actions may land up to one tick +
+/// one poll timeout after their due instant — the same order of
+/// slack the historical per-tick sweep had.
+const TIMER_TICK_MS: u64 = 64;
+
+/// Timer-wheel slot count: a ~65s horizon at 64ms ticks, comfortably
+/// past the default timeouts; longer custom timeouts cascade (counted).
+const TIMER_SLOTS: usize = 1024;
 
 /// Everything one event-loop shard needs to run, bundled for the spawn in
 /// `serve_router_with`.
@@ -79,12 +106,14 @@ pub(crate) struct ShardConfig {
     /// This shard's waker: replicas poke it after publishing deliveries,
     /// the acceptor pokes it after a handoff.
     pub(crate) waker: Arc<Waker>,
-    /// The accept socket (shard 0 only).
+    /// The accept socket: shard 0 under handoff, every shard under
+    /// reuseport (each bound to the same address with `SO_REUSEPORT`).
     pub(crate) listener: Option<TcpListener>,
-    /// Inbound connection handoffs from the accept shard (shards > 0).
+    /// Inbound connection handoffs from the accept shard (handoff mode,
+    /// shards > 0).
     pub(crate) handoff_rx: Option<Receiver<(TcpStream, u64)>>,
     /// Outbound handoff channels + target-shard wakers, indexed by
-    /// `shard - 1` (shard 0 only; empty elsewhere).
+    /// `shard - 1` (handoff mode, shard 0 only; empty under reuseport).
     pub(crate) handoff_txs: Vec<(Sender<(TcpStream, u64)>, Arc<Waker>)>,
     /// One stream-frame ring consumer per engine replica.
     pub(crate) rings: Vec<spsc::Consumer<StreamFrame>>,
@@ -100,11 +129,29 @@ pub(crate) struct ShardConfig {
     /// tokens are unique server-wide; starts at 1 — the top two values
     /// are reserved poller tokens).
     pub(crate) next_token: Arc<AtomicU64>,
+    /// Bench A/B knob: flush connections by copy + `write(2)` instead of
+    /// the vectored zero-copy path.
+    pub(crate) copy_flush: bool,
+}
+
+/// Milliseconds since the shard's start — the timer wheel's clock.
+fn wheel_ms(start: Instant, t: Instant) -> u64 {
+    t.saturating_duration_since(start).as_millis() as u64
+}
+
+/// Put `c` on the dirty list (idempotent via the per-conn flag).
+fn mark_dirty(c: &mut Conn, dirty: &mut Vec<u64>) {
+    if !c.dirty {
+        c.dirty = true;
+        dirty.push(c.token);
+    }
 }
 
 /// Register a freshly accepted (or handed-off) connection with this
-/// shard's poller and own it.  On registration failure the socket is
-/// dropped and the per-shard gauge rolled back.
+/// shard's poller, own it, arm its first deadline, and queue it for a
+/// first pump.  On registration failure the socket is dropped and the
+/// per-shard gauge rolled back.
+#[allow(clippy::too_many_arguments)]
 fn add_conn(
     poller: &mut dyn Poller,
     conns: &mut HashMap<u64, Conn>,
@@ -112,8 +159,13 @@ fn add_conn(
     shard: usize,
     stream: TcpStream,
     token: u64,
+    copy_flush: bool,
+    limits: &ConnLimits,
+    wheel: &mut TimerWheel,
+    start: Instant,
+    dirty: &mut Vec<u64>,
 ) {
-    let mut c = Conn::new(stream, token);
+    let mut c = Conn::new(stream, token, copy_flush);
     let want = c.interest();
     if let Err(e) = poller.add(c.fd(), token, want, true) {
         log_warn!("shard {shard}: cannot register connection: {e}");
@@ -121,6 +173,10 @@ fn add_conn(
         return; // socket drops (closes) here
     }
     c.registered_interest = want;
+    if let Some(due) = c.next_deadline(limits) {
+        wheel.schedule(wheel_ms(start, due), token);
+    }
+    mark_dirty(&mut c, dirty);
     conns.insert(token, c);
 }
 
@@ -142,6 +198,7 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
         stop,
         limits,
         next_token,
+        copy_flush,
     } = cfg;
     let shard_count = 1 + handoff_txs.len();
     if let Some(l) = &listener {
@@ -160,15 +217,29 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
         log_warn!("shard {id}: cannot register waker: {e}");
         return;
     }
+    let start = Instant::now();
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut events: Vec<Event> = Vec::new();
+    // O(active) bookkeeping: the dirty list holds conns with pending
+    // pump/flush/reconcile work this tick, the waiting set holds conns
+    // parked on blocking engine completions (pumped on waker fire), and
+    // the wheel holds one armed deadline per conn
+    let mut dirty: Vec<u64> = Vec::new();
+    let mut waiting: HashSet<u64> = HashSet::new();
+    let mut wheel = TimerWheel::new(TIMER_TICK_MS, TIMER_SLOTS);
+    let mut due_tokens: Vec<u64> = Vec::new();
+    let mut reported_cascades = 0u64;
     // per-ring closed latch: a ring closing means its replica thread is
     // gone (panic, fault kill, or drain) — the close *transition* is when
     // this shard must end any stream that replica was feeding
     let mut ring_closed = vec![false; rings.len()];
+    let mut all_rings_closed = false;
+    // one shared abort frame: every synthesized abort is a refcount bump
+    let abort_frame: Frame = FrameBuf::unpooled(stream_abort_frame());
     let mut listener_registered = listener.is_some();
     let mut accept_backoff = 0u32;
     let mut handoff_closed = false;
+    let mut was_stopping = false;
     loop {
         let stopping = stop.load(Ordering::SeqCst);
         if stopping && listener_registered {
@@ -178,6 +249,15 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
                 let _ = poller.remove(l.as_raw_fd());
             }
             listener_registered = false;
+        }
+        if stopping && !was_stopping {
+            was_stopping = true;
+            // stop transition: one full sweep so every conn re-evaluates
+            // under the new regime (request-less conns close, the rest
+            // flush out) — after this tick the dirty list takes over again
+            for c in conns.values_mut() {
+                mark_dirty(c, &mut dirty);
+            }
         }
         if stopping && conns.is_empty() && (handoff_rx.is_none() || handoff_closed) {
             return;
@@ -204,9 +284,13 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
         }
 
         let mut accept_ready = false;
+        let mut waker_fired = false;
         for ev in &events {
             match ev.token {
-                WAKER_TOKEN => waker.drain(),
+                WAKER_TOKEN => {
+                    waker.drain();
+                    waker_fired = true;
+                }
                 LISTENER_TOKEN => accept_ready = true,
                 token => {
                     let Some(c) = conns.get_mut(&token) else {
@@ -216,7 +300,7 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
                         c.on_readable(&router, &stats, &waker, &limits, id);
                     }
                     if ev.writable {
-                        c.on_writable();
+                        c.on_writable(&stats);
                     }
                     if ev.error {
                         c.state = ConnState::Closed;
@@ -228,12 +312,15 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
                     if ev.hup && !ev.readable && !matches!(c.state, ConnState::Reading) {
                         c.state = ConnState::Closed;
                     }
+                    mark_dirty(c, &mut dirty);
                 }
             }
         }
 
-        // accept new connections (shard 0), placing each on the shard
-        // with the fewest open connections
+        // accept new connections.  Under reuseport the kernel already
+        // picked this shard, so the socket is owned locally; under
+        // handoff (this shard is the acceptor) each socket goes to the
+        // shard with the fewest open connections.
         if accept_ready && listener_registered && !stopping {
             if let Some(l) = &listener {
                 loop {
@@ -257,13 +344,16 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
                             }
                             let _ = s.set_nodelay(true);
                             let token = next_token.fetch_add(1, Ordering::SeqCst);
-                            let mut target = 0usize;
-                            let mut best = stats.shard_open(0);
-                            for i in 1..shard_count {
-                                let o = stats.shard_open(i);
-                                if o < best {
-                                    best = o;
-                                    target = i;
+                            let mut target = id;
+                            if !handoff_txs.is_empty() {
+                                target = 0;
+                                let mut best = stats.shard_open(0);
+                                for i in 1..shard_count {
+                                    let o = stats.shard_open(i);
+                                    if o < best {
+                                        best = o;
+                                        target = i;
+                                    }
                                 }
                             }
                             let mut pending = Some((s, token));
@@ -289,6 +379,11 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
                                     id,
                                     s,
                                     token,
+                                    copy_flush,
+                                    &limits,
+                                    &mut wheel,
+                                    start,
+                                    &mut dirty,
                                 );
                             }
                         }
@@ -314,9 +409,19 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
         if let Some(rx) = &handoff_rx {
             loop {
                 match rx.try_recv() {
-                    Ok((s, token)) => {
-                        add_conn(poller.as_mut(), &mut conns, &stats, id, s, token)
-                    }
+                    Ok((s, token)) => add_conn(
+                        poller.as_mut(),
+                        &mut conns,
+                        &stats,
+                        id,
+                        s,
+                        token,
+                        copy_flush,
+                        &limits,
+                        &mut wheel,
+                        start,
+                        &mut dirty,
+                    ),
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         handoff_closed = true;
@@ -326,9 +431,10 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
             }
         }
 
-        // drain the stream rings: append each frame to its connection's
-        // out buffer (frames addressed to reaped connections are
-        // discarded — the replica produces briefly past a client's death)
+        // drain the stream rings: enqueue each frame on its connection's
+        // output queue by reference (frames addressed to reaped
+        // connections are discarded — the replica produces briefly past a
+        // client's death)
         let mut rings_open = rings.is_empty();
         for (ri, ring) in rings.iter_mut().enumerate() {
             stats.note_ring_depth(ring.len());
@@ -336,6 +442,8 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
                 if let Some(c) = conns.get_mut(&frame.conn) {
                     c.ring_src = Some(ri);
                     c.deliver_frame(&frame.bytes, frame.done);
+                    stats.on_frame_zero_copy();
+                    mark_dirty(c, &mut dirty);
                 }
             }
             if ring.is_closed() {
@@ -347,7 +455,9 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
                     // explicitly rather than truncating mid-body.  Streams
                     // fed by other replicas are untouched, and the router
                     // may also route an abort via a survivor; the
-                    // `terminated` latch in deliver_frame dedupes.
+                    // `terminated` latch in deliver_frame dedupes.  (A
+                    // close transition is rare; this sweep is the one
+                    // deliberate O(open) pass left outside shutdown.)
                     for c in conns.values_mut() {
                         if c.ring_src == Some(ri)
                             && matches!(
@@ -355,7 +465,8 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
                                 ConnState::StreamingRing { terminated: false }
                             )
                         {
-                            c.deliver_frame(&stream_abort_frame(), true);
+                            c.deliver_frame(&abort_frame, true);
+                            mark_dirty(c, &mut dirty);
                         }
                     }
                 }
@@ -363,48 +474,102 @@ pub(crate) fn run_shard(cfg: ShardConfig) {
                 rings_open = true;
             }
         }
-        if !rings_open {
+        if !rings_open && !all_rings_closed {
+            all_rings_closed = true;
             // every replica exited: also end streams that never received a
-            // first frame (no ring_src yet) — nobody is left to feed them
+            // first frame (no ring_src yet) — nobody is left to feed them.
+            // The sticky flag keeps catching latecomers in the dirty pass
+            // below (their heartbeat timer dirties them within the idle
+            // budget at worst).
             for c in conns.values_mut() {
                 if matches!(c.state, ConnState::StreamingRing { terminated: false }) {
-                    c.deliver_frame(&stream_abort_frame(), true);
+                    c.deliver_frame(&abort_frame, true);
+                    mark_dirty(c, &mut dirty);
                 }
             }
         }
 
-        // pump engine-side progress and freshly delivered frames into
-        // every connection, then enforce timeouts
+        // a waker fire may announce blocking completions: pump the conns
+        // parked on engine replies (the waiting set, not all of them)
+        if waker_fired {
+            for token in &waiting {
+                if let Some(c) = conns.get_mut(token) {
+                    mark_dirty(c, &mut dirty);
+                }
+            }
+        }
+
+        // advance the timer wheel and act on due deadlines: check the
+        // conn's *actual* timeouts (the armed instant is a lower bound —
+        // progress only ever moves deadlines later), then re-arm
         let now = Instant::now();
-        for c in conns.values_mut() {
-            c.pump();
-            if stopping && matches!(c.state, ConnState::Reading) {
-                // no request yet: shutdown refuses new work
-                c.state = ConnState::Closed;
+        wheel.advance(wheel_ms(start, now), &mut due_tokens);
+        let cascades = wheel.cascades();
+        stats.on_cascades(cascades - reported_cascades);
+        reported_cascades = cascades;
+        for token in &due_tokens {
+            let Some(c) = conns.get_mut(token) else {
+                continue; // reaped; stale entry
+            };
+            c.check_timeouts(now, &limits, &stats);
+            if !c.is_closed() {
+                // re-arm: at the real next deadline, or a heartbeat one
+                // idle budget out for conns with none (engine waits) so a
+                // later state change is never left without a timer
+                let due = c
+                    .next_deadline(&limits)
+                    .unwrap_or(now + limits.idle_timeout);
+                wheel.schedule(wheel_ms(start, due), *token);
             }
-            c.check_timeouts(now, &limits);
+            mark_dirty(c, &mut dirty);
         }
 
-        // reap closed connections and reconcile poller interest for the
-        // rest (touch the poller only when interest actually changed —
-        // under edge-triggered epoll the MOD also re-arms readiness)
-        conns.retain(|_, c| {
-            if c.is_closed() {
-                let _ = poller.remove(c.fd());
-                stats.on_close_shard(id);
-                return false;
-            }
-            let want = c.interest();
-            if want != c.registered_interest {
-                if poller.modify(c.fd(), c.token, want, true).is_err() {
-                    // readiness tracking lost; the conn is undrivable
-                    let _ = poller.remove(c.fd());
-                    stats.on_close_shard(id);
-                    return false;
+        // the dirty pass: pump engine-side progress and fresh frames,
+        // apply the stop regime, reap closed conns, reconcile poller
+        // interest — touching only connections something happened to
+        for token in std::mem::take(&mut dirty) {
+            let mut close = false;
+            if let Some(c) = conns.get_mut(&token) {
+                c.dirty = false;
+                if all_rings_closed
+                    && matches!(c.state, ConnState::StreamingRing { terminated: false })
+                {
+                    c.deliver_frame(&abort_frame, true);
                 }
-                c.registered_interest = want;
+                c.pump(&stats);
+                if stopping && matches!(c.state, ConnState::Reading) {
+                    // no request yet: shutdown refuses new work
+                    c.state = ConnState::Closed;
+                }
+                if matches!(c.state, ConnState::WaitBlocking(_)) {
+                    waiting.insert(token);
+                } else {
+                    waiting.remove(&token);
+                }
+                if c.is_closed() {
+                    let _ = poller.remove(c.fd());
+                    close = true;
+                } else {
+                    let want = c.interest();
+                    if want != c.registered_interest {
+                        if poller.modify(c.fd(), c.token, want, true).is_err() {
+                            // readiness tracking lost; the conn is
+                            // undrivable
+                            let _ = poller.remove(c.fd());
+                            close = true;
+                        } else {
+                            c.registered_interest = want;
+                        }
+                    }
+                }
+            } else {
+                waiting.remove(&token);
             }
-            true
-        });
+            if close {
+                conns.remove(&token);
+                waiting.remove(&token);
+                stats.on_close_shard(id);
+            }
+        }
     }
 }

@@ -27,11 +27,17 @@
 //! * **`event-loop`** — connections multiplexed over `--loop-shards`
 //!   independent loop threads (`server/event_loop.rs`), each with its
 //!   own readiness back-end (`--poller`: edge-triggered `epoll` or the
-//!   portable `poll(2)` fallback).  Shard 0 accepts and hands sockets to
-//!   the least-loaded shard; streaming tokens arrive as preformatted
-//!   frames on per-(replica, shard) lock-free SPSC rings; engine
-//!   replicas wake shards through coalescing eventfd/self-pipe wakers.
-//!   Thousands of concurrent streams cost sockets, not threads.
+//!   portable `poll(2)` fallback).  New connections arrive per
+//!   `--accept`: under `reuseport` every shard binds its own
+//!   `SO_REUSEPORT` listener and the kernel spreads accepts; under
+//!   `handoff` shard 0 accepts and hands sockets to the least-loaded
+//!   shard (`auto` picks reuseport where the kernel provides it).  The
+//!   listen backlog is `--backlog` on either path.  Streaming tokens
+//!   arrive as preformatted refcounted frames on per-(replica, shard)
+//!   lock-free SPSC rings and are flushed with `writev(2)` without
+//!   copying; engine replicas wake shards through coalescing
+//!   eventfd/self-pipe wakers.  Thousands of concurrent streams cost
+//!   sockets, not threads.
 //!
 //! Both front-ends share the parser, limits, dispatch table, and
 //! response encoders in `server/conn.rs`, answer protocol violations
@@ -50,19 +56,25 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{FrontendKind, PollerKind, RoutePolicy};
+use crate::config::{AcceptMode, FrontendKind, PollerKind, RoutePolicy};
 use crate::engine::engine::Engine;
 use crate::server::conn::{self, Dispatch, DispatchCtx, ParseStatus};
 pub use crate::server::conn::{ConnLimits, FrontendStats, HttpRequest};
 use crate::server::event_loop::{self, ShardConfig};
 use crate::server::router::{EngineRouter, ShardTx, StreamEvent, StreamFrame, STREAM_RING_CAP};
+use crate::util::bufpool::BufPool;
 use crate::util::json::Json;
 use crate::util::spsc;
-use crate::util::sys::{EpollPoller, PollPoller, Poller, Waker};
+use crate::util::sys::{self, EpollPoller, PollPoller, Poller, Waker};
 use crate::{log_info, log_warn};
 
+/// Idle frame-buffer backings retained per replica pool: enough to keep
+/// a full stream ring's worth of frames recycling without a single
+/// steady-state allocation, without hoarding when streams go quiet.
+const FRAME_POOL_CAP: usize = 2 * STREAM_RING_CAP;
+
 /// Front-end configuration for [`serve_router_with`].
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
     /// Which front-end drives connections (default: threaded).
     pub frontend: FrontendKind,
@@ -73,8 +85,36 @@ pub struct ServeOptions {
     /// Event-loop shard (thread) count; `0` is normalized to 1.  Ignored
     /// by the threaded front-end.
     pub loop_shards: usize,
+    /// How event-loop shards receive connections (default: auto —
+    /// per-shard `SO_REUSEPORT` listeners where the kernel provides
+    /// them, else the shard-0 handoff channel).  Ignored by the threaded
+    /// front-end.
+    pub accept: AcceptMode,
+    /// Listen backlog passed to `listen(2)` on every listener (the
+    /// kernel additionally caps it at `net.core.somaxconn`); `0` is
+    /// normalized to the default 1024.
+    pub backlog: usize,
+    /// Bench A/B knob (not on the CLI): flush event-loop connections by
+    /// copying queued frames into a scratch buffer and `write(2)`-ing it
+    /// instead of the vectored zero-copy path.  Semantics are
+    /// byte-identical; only the flush mechanics differ.
+    pub copy_flush: bool,
     /// Protocol limits and timeouts, enforced by both front-ends.
     pub limits: ConnLimits,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            frontend: FrontendKind::default(),
+            poller: PollerKind::default(),
+            loop_shards: 0,
+            accept: AcceptMode::default(),
+            backlog: 1024,
+            copy_flush: false,
+            limits: ConnLimits::default(),
+        }
+    }
 }
 
 /// Resolve one poller instance for `kind` (each shard owns its own).
@@ -319,14 +359,21 @@ pub fn serve_router_with(
     addr: &str,
     opts: ServeOptions,
 ) -> Result<ServerHandle> {
-    let listener = TcpListener::bind(addr)?;
-    let local = listener.local_addr()?;
+    let sock_addr = {
+        use std::net::ToSocketAddrs;
+        addr.to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow!("cannot resolve listen address {addr}"))?
+    };
+    let backlog = opts.backlog.max(1).min(i32::MAX as usize);
     let router = Arc::new(router);
     let stop = Arc::new(AtomicBool::new(false));
     let limits = opts.limits;
-    let (serving_threads, wakers, stats) = match opts.frontend {
+    let (serving_threads, wakers, stats, local) = match opts.frontend {
         FrontendKind::Threaded => {
-            let stats = Arc::new(FrontendStats::new(opts.frontend));
+            let listener = sys::bind_listener(sock_addr, backlog as i32, false)?;
+            let local = listener.local_addr()?;
+            let stats = Arc::new(FrontendStats::new(opts.frontend, backlog));
             let stop_a = stop.clone();
             let router_a = router.clone();
             let stats_a = stats.clone();
@@ -367,7 +414,7 @@ pub fn serve_router_with(
                     }
                 })
                 .expect("spawn acceptor thread");
-            (vec![t], Vec::new(), stats)
+            (vec![t], Vec::new(), stats, local)
         }
         FrontendKind::EventLoop => {
             let shards = opts.loop_shards.max(1);
@@ -378,9 +425,63 @@ pub fn serve_router_with(
                 pollers.push(make_poller(opts.poller)?);
             }
             let poller_name = pollers[0].name();
+            // resolve the accept mode, binding listeners accordingly:
+            // reuseport gives every shard its own listener on one port
+            // (the kernel spreads accepts); handoff gives shard 0 the
+            // single listener.  `auto` probes reuseport on the first
+            // bind and quietly falls back.
+            let mut listeners: Vec<Option<TcpListener>> = Vec::with_capacity(shards);
+            let accept_name: &'static str;
+            match opts.accept {
+                AcceptMode::Handoff => {
+                    listeners.push(Some(sys::bind_listener(
+                        sock_addr,
+                        backlog as i32,
+                        false,
+                    )?));
+                    listeners.resize_with(shards, || None);
+                    accept_name = "handoff";
+                }
+                mode => match sys::bind_listener(sock_addr, backlog as i32, true) {
+                    Ok(first) => {
+                        // bind the remaining shards to the *resolved*
+                        // address — `:0` picked an ephemeral port the
+                        // siblings must share
+                        let bound = first.local_addr()?;
+                        listeners.push(Some(first));
+                        for _ in 1..shards {
+                            listeners.push(Some(sys::bind_listener(
+                                bound,
+                                backlog as i32,
+                                true,
+                            )?));
+                        }
+                        accept_name = "reuseport";
+                    }
+                    Err(e) if mode == AcceptMode::Auto => {
+                        listeners.push(Some(sys::bind_listener(
+                            sock_addr,
+                            backlog as i32,
+                            false,
+                        )?));
+                        listeners.resize_with(shards, || None);
+                        accept_name = "handoff";
+                        log_info!("SO_REUSEPORT unavailable ({e}); accept mode: handoff");
+                    }
+                    Err(e) => {
+                        return Err(anyhow!("--accept reuseport: cannot bind: {e}"));
+                    }
+                },
+            }
+            let local = listeners[0]
+                .as_ref()
+                .expect("shard 0 always has a listener")
+                .local_addr()?;
             let stats = Arc::new(FrontendStats::with_loop(
                 opts.frontend,
                 poller_name,
+                accept_name,
+                backlog,
                 shards,
             ));
             let mut wakers: Vec<Arc<Waker>> = Vec::with_capacity(shards);
@@ -391,9 +492,10 @@ pub fn serve_router_with(
             // keep the producers, shards the consumers.  Attached before
             // the listener starts, so the FIFO engine channels guarantee
             // the rings are installed ahead of any ring submission.
-            let mut per_replica: Vec<Vec<ShardTx>> = Vec::new();
+            let mut per_replica: Vec<(Vec<ShardTx>, BufPool)> = Vec::new();
             let mut per_shard_rings: Vec<Vec<spsc::Consumer<StreamFrame>>> =
                 (0..shards).map(|_| Vec::new()).collect();
+            let (pool_hits, pool_misses) = stats.bufpool_counters();
             for _ in 0..router.replica_count() {
                 let mut row = Vec::with_capacity(shards);
                 for (s, rings) in per_shard_rings.iter_mut().enumerate() {
@@ -401,22 +503,34 @@ pub fn serve_router_with(
                     row.push(ShardTx::new(tx, wakers[s].clone()));
                     rings.push(rx);
                 }
-                per_replica.push(row);
+                // one frame pool per replica (producer-local, so pool
+                // recycling never contends across replica threads);
+                // hit/miss counters aggregate into the shared stats
+                per_replica.push((
+                    row,
+                    BufPool::with_counters(
+                        FRAME_POOL_CAP,
+                        pool_hits.clone(),
+                        pool_misses.clone(),
+                    ),
+                ));
             }
             router.attach_stream_shards(per_replica);
             // handoff channels: shard 0 accepts and hands sockets to the
-            // shard with the fewest open connections
+            // shard with the fewest open connections (handoff mode only —
+            // under reuseport the kernel already sharded the accept)
             type Handoff = (TcpStream, u64);
             let mut handoff_txs: Vec<(Sender<Handoff>, Arc<Waker>)> = Vec::new();
             let mut handoff_rxs: Vec<Receiver<Handoff>> = Vec::new();
-            for s in 1..shards {
-                let (tx, rx) = channel();
-                handoff_txs.push((tx, wakers[s].clone()));
-                handoff_rxs.push(rx);
+            if accept_name == "handoff" {
+                for s in 1..shards {
+                    let (tx, rx) = channel();
+                    handoff_txs.push((tx, wakers[s].clone()));
+                    handoff_rxs.push(rx);
+                }
             }
             let next_token = Arc::new(AtomicU64::new(1));
             let mut threads = Vec::with_capacity(shards);
-            let mut listener = Some(listener);
             let mut handoff_rxs = handoff_rxs.into_iter();
             for (s, (poller, rings)) in
                 pollers.into_iter().zip(per_shard_rings).enumerate()
@@ -425,7 +539,7 @@ pub fn serve_router_with(
                     id: s,
                     poller,
                     waker: wakers[s].clone(),
-                    listener: if s == 0 { listener.take() } else { None },
+                    listener: listeners[s].take(),
                     handoff_rx: if s == 0 { None } else { handoff_rxs.next() },
                     handoff_txs: if s == 0 {
                         std::mem::take(&mut handoff_txs)
@@ -438,6 +552,7 @@ pub fn serve_router_with(
                     stop: stop.clone(),
                     limits,
                     next_token: next_token.clone(),
+                    copy_flush: opts.copy_flush,
                 };
                 let t = std::thread::Builder::new()
                     .name(format!("dsde-http-loop-{s}"))
@@ -445,16 +560,18 @@ pub fn serve_router_with(
                     .expect("spawn event loop shard");
                 threads.push(t);
             }
-            (threads, wakers, stats)
+            (threads, wakers, stats, local)
         }
     };
     log_info!(
         "serving on http://{local} ({} replica(s), {}, {} front-end, \
-         poller {}, {} loop shard(s))",
+         poller {}, accept {}, backlog {}, {} loop shard(s))",
         router.replica_count(),
         router.policy().name(),
         opts.frontend.name(),
         stats.poller(),
+        stats.accept_mode(),
+        stats.backlog(),
         stats.loop_shards()
     );
     Ok(ServerHandle {

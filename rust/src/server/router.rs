@@ -85,7 +85,8 @@ use crate::util::json::Json;
 use crate::util::spsc;
 use crate::util::sys::Waker;
 
-use super::conn::{stream_abort_frame, stream_delta_frame, stream_done_frame};
+use super::conn::{stream_abort_frame_in, stream_delta_frame_in, stream_done_frame_in};
+use crate::util::bufpool::{BufPool, Frame};
 use super::journal::Journal;
 
 /// Hook invoked with every routed request right after its router-global
@@ -148,14 +149,17 @@ impl<T> Notify<T> {
 pub(crate) const STREAM_RING_CAP: usize = 1024;
 
 /// One preformatted NDJSON stream frame bound for an event-loop shard:
-/// the bytes are already chunk-encoded on the replica thread, so the
-/// shard loop appends them straight to the connection's output buffer.
+/// the bytes are chunk-encoded once, on the replica thread, into a
+/// refcounted pooled buffer — the shard loop enqueues the [`Frame`] on
+/// the connection's output queue by reference and `writev` flushes it
+/// without ever copying the payload.
 pub(crate) struct StreamFrame {
     /// Event-loop connection token the frame belongs to (frames whose
     /// connection has closed are discarded by the shard loop).
     pub(crate) conn: u64,
-    /// Wire bytes, ready to append to the connection's out buffer.
-    pub(crate) bytes: Vec<u8>,
+    /// Wire bytes, ready to flush; the backing buffer returns to the
+    /// replica's frame pool when the last reference drops.
+    pub(crate) bytes: Frame,
     /// Terminal frame: carries the done summary plus the chunked-encoding
     /// terminator; the stream is complete once these bytes flush.
     pub(crate) done: bool,
@@ -370,10 +374,11 @@ pub(crate) enum EngineMsg {
     /// Work stealing, thief side: adopt migrated requests (their ledger
     /// entries were re-owned by the supervisor before this was sent).
     SubmitStolen(Vec<Request>),
-    /// Install this replica's per-shard ring producers.  Sent once per
-    /// replica before the front-end starts accepting, so channel FIFO
-    /// guarantees it precedes every ring submission.
-    AttachShards(Vec<ShardTx>),
+    /// Install this replica's per-shard ring producers plus its frame
+    /// pool (ring frames are encoded into recycled pooled buffers).  Sent
+    /// once per replica before the front-end starts accepting, so channel
+    /// FIFO guarantees it precedes every ring submission.
+    AttachShards(Vec<ShardTx>, BufPool),
     /// Write an aborted terminal frame for each ring target — failover's
     /// path for terminating progressed ring streams whose owning replica
     /// died (any live replica can produce to any shard).
@@ -647,6 +652,7 @@ fn deliver(
     my_idx: usize,
     shared: &RouterShared,
     shards: &mut [ShardTx],
+    pool: &BufPool,
     load: &AtomicUsize,
 ) {
     let fins = engine.take_finished();
@@ -678,7 +684,7 @@ fn deliver(
                 if let Some(shard) = shards.get_mut(target.shard) {
                     shard.send(StreamFrame {
                         conn: target.conn,
-                        bytes: stream_done_frame(&fin),
+                        bytes: stream_done_frame_in(pool, &fin),
                         done: true,
                     });
                 }
@@ -701,6 +707,7 @@ fn forward_deltas(
     my_idx: usize,
     shared: &RouterShared,
     shards: &mut [ShardTx],
+    pool: &BufPool,
 ) {
     if report.deltas.is_empty() {
         return;
@@ -726,7 +733,7 @@ fn forward_deltas(
                     Some(shard) => {
                         shard.send(StreamFrame {
                             conn: target.conn,
-                            bytes: stream_delta_frame(&d.tokens, d.t),
+                            bytes: stream_delta_frame_in(pool, &d.tokens, d.t),
                             done: false,
                         });
                         true
@@ -759,6 +766,9 @@ fn replica_loop(
     shared: Arc<RouterShared>,
 ) {
     let mut shards: Vec<ShardTx> = Vec::new();
+    // replaced by AttachShards; frames are only built once shards exist,
+    // so the uncached placeholder never sees traffic
+    let mut frame_pool = BufPool::new(0);
     let mut draining = false;
     let mut consecutive_errors = 0u32;
     loop {
@@ -828,15 +838,16 @@ fn replica_loop(
                         engine.submit(req);
                     }
                 }
-                EngineMsg::AttachShards(s) => {
+                EngineMsg::AttachShards(s, p) => {
                     shards = s;
+                    frame_pool = p;
                 }
                 EngineMsg::AbortRings(targets) => {
                     for t in targets {
                         if let Some(shard) = shards.get_mut(t.shard) {
                             shard.send(StreamFrame {
                                 conn: t.conn,
-                                bytes: stream_abort_frame(),
+                                bytes: stream_abort_frame_in(&frame_pool),
                                 done: true,
                             });
                         }
@@ -869,7 +880,7 @@ fn replica_loop(
                 EngineMsg::Drain => draining = true,
                 EngineMsg::Abort => {
                     engine.abort_all();
-                    deliver(&mut engine, my_idx, &shared, &mut shards, &load);
+                    deliver(&mut engine, my_idx, &shared, &mut shards, &frame_pool, &load);
                     cell.publish(&engine.load_snapshot());
                     flush_shards_before_exit(&mut shards);
                     return;
@@ -908,7 +919,9 @@ fn replica_loop(
                                 );
                             }
                             published = true;
-                            forward_deltas(report, my_idx, &shared, &mut shards);
+                            forward_deltas(
+                                report, my_idx, &shared, &mut shards, &frame_pool,
+                            );
                             true
                         }
                     }
@@ -923,7 +936,7 @@ fn replica_loop(
                     consecutive_errors < 3
                 }
             };
-            deliver(&mut engine, my_idx, &shared, &mut shards, &load);
+            deliver(&mut engine, my_idx, &shared, &mut shards, &frame_pool, &load);
             if !progressed && engine.pending() > 0 {
                 // Stuck, not just slow.  Two causes, two remedies — either
                 // way the replica stays up instead of busy-spinning and
@@ -948,7 +961,7 @@ fn replica_loop(
                         );
                     }
                 }
-                deliver(&mut engine, my_idx, &shared, &mut shards, &load);
+                deliver(&mut engine, my_idx, &shared, &mut shards, &frame_pool, &load);
                 published = false; // aborts changed queue/KV state
             }
             if !published {
@@ -1900,18 +1913,20 @@ impl EngineRouter {
     }
 
     /// Install each replica's per-shard ring producers (one [`ShardTx`]
-    /// per event-loop shard, outer index = replica).  Must be called
-    /// before the front-end starts accepting: the attach message travels
-    /// the same FIFO channel as submissions, so every subsequent
+    /// per event-loop shard, outer index = replica) and its frame pool
+    /// (stream frames are encoded into recycled pooled buffers on the
+    /// replica thread).  Must be called before the front-end starts
+    /// accepting: the attach message travels the same FIFO channel as
+    /// submissions, so every subsequent
     /// [`EngineRouter::submit_streaming_ring`] finds the rings in place.
-    pub(crate) fn attach_stream_shards(&self, per_replica: Vec<Vec<ShardTx>>) {
+    pub(crate) fn attach_stream_shards(&self, per_replica: Vec<(Vec<ShardTx>, BufPool)>) {
         assert_eq!(
             per_replica.len(),
             self.replicas.len(),
             "one shard set per replica"
         );
-        for (r, shards) in self.replicas.iter().zip(per_replica) {
-            let _ = r.tx.send(EngineMsg::AttachShards(shards));
+        for (r, (shards, pool)) in self.replicas.iter().zip(per_replica) {
+            let _ = r.tx.send(EngineMsg::AttachShards(shards, pool));
         }
     }
 
@@ -2445,7 +2460,10 @@ mod tests {
         let router = EngineRouter::new(sim_engines(1), RoutePolicy::RoundRobin);
         let (tx, mut rx) = spsc::ring(STREAM_RING_CAP);
         let waker = Arc::new(Waker::new().expect("waker"));
-        router.attach_stream_shards(vec![vec![ShardTx::new(tx, waker)]]);
+        router.attach_stream_shards(vec![(
+            vec![ShardTx::new(tx, waker)],
+            BufPool::new(STREAM_RING_CAP),
+        )]);
         let target = RingTarget { shard: 0, conn: 42 };
         assert!(router.submit_streaming_ring(req(16), target));
         // play the shard loop: drain the ring until the terminal frame
@@ -2482,7 +2500,10 @@ mod tests {
         // consumer vanishes (shard loop death) mid-stream
         let (tx, rx) = spsc::ring(2);
         let waker = Arc::new(Waker::new().expect("waker"));
-        router.attach_stream_shards(vec![vec![ShardTx::new(tx, waker)]]);
+        router.attach_stream_shards(vec![(
+            vec![ShardTx::new(tx, waker)],
+            BufPool::new(STREAM_RING_CAP),
+        )]);
         assert!(router.submit_streaming_ring(req(64), RingTarget { shard: 0, conn: 1 }));
         drop(rx);
         // the replica discards undeliverable frames and keeps serving

@@ -1,0 +1,497 @@
+//! Refcounted frame buffers, a recycling pool, and the vectored
+//! per-connection output queue — the zero-copy streaming datapath.
+//!
+//! The event-loop front-end used to copy every preformatted NDJSON frame
+//! from its SPSC ring into a contiguous per-connection `outbuf`
+//! (`extend_from_slice`), then periodically compact that buffer.  At
+//! 100k streams those memcpys and the per-frame allocations inside the
+//! encoders dominate the hot path.  This module removes both:
+//!
+//! * [`Frame`] (`Arc<FrameBuf>`) — one encoded frame, shared by
+//!   reference.  The replica thread encodes it once; every queue it
+//!   lands in afterwards holds a refcount, never a copy.
+//! * [`BufPool`] — a bounded free-list of `Vec<u8>` backing stores.
+//!   Dropping the last `Frame` handle returns its allocation to the pool
+//!   (cross-thread: the pool handle inside the frame is a `Weak`, so a
+//!   frame outliving its pool simply frees).  Hit/miss counters are
+//!   shared `AtomicU64`s so `FrontendStats` can export them.
+//! * [`FrameQueue`] — the per-connection output queue: a deque of
+//!   `(Frame, cursor)` segments flushed with `writev(2)`, batching up to
+//!   [`IOV_MAX`] iovecs per syscall.  Nothing is ever copied or
+//!   compacted; a fully written segment is popped (dropping its
+//!   refcount, which recycles the buffer).
+//!
+//! Steady-state streaming therefore performs **zero allocations per
+//! frame** once the pool is warm — pinned by the counting-allocator
+//! section of `benches/serving_load.rs`.
+
+use std::collections::VecDeque;
+use std::io;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::util::sys::{writev, IoVec, IOV_MAX};
+
+/// Shared state behind a [`BufPool`] and the `Weak` handles inside
+/// pooled frames.
+#[derive(Debug)]
+struct PoolInner {
+    free: Mutex<Vec<Vec<u8>>>,
+    max_free: usize,
+    hits: Arc<AtomicU64>,
+    misses: Arc<AtomicU64>,
+}
+
+/// Bounded recycling pool of `Vec<u8>` frame backings.
+///
+/// Clones share the same free list, so one pool handle per replica plus
+/// one inside every in-flight [`Frame`] is the normal shape.
+#[derive(Clone, Debug)]
+pub struct BufPool {
+    inner: Arc<PoolInner>,
+}
+
+impl BufPool {
+    /// Pool holding at most `max_free` idle buffers, with private
+    /// hit/miss counters (see [`BufPool::with_counters`] to share them
+    /// with a metrics exporter).
+    pub fn new(max_free: usize) -> BufPool {
+        BufPool::with_counters(
+            max_free,
+            Arc::new(AtomicU64::new(0)),
+            Arc::new(AtomicU64::new(0)),
+        )
+    }
+
+    /// Pool whose hit/miss counters are the caller's atomics (shared with
+    /// `FrontendStats` so `/v1/metrics` sees them without polling the
+    /// pool).
+    pub fn with_counters(
+        max_free: usize,
+        hits: Arc<AtomicU64>,
+        misses: Arc<AtomicU64>,
+    ) -> BufPool {
+        BufPool {
+            inner: Arc::new(PoolInner {
+                free: Mutex::new(Vec::new()),
+                max_free,
+                hits,
+                misses,
+            }),
+        }
+    }
+
+    /// Take an empty buffer: recycled when the free list has one (hit),
+    /// freshly allocated otherwise (miss).
+    pub fn take(&self) -> Vec<u8> {
+        let recycled = self.inner.free.lock().expect("bufpool poisoned").pop();
+        match recycled {
+            Some(mut buf) => {
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                buf.clear();
+                buf
+            }
+            None => {
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(256)
+            }
+        }
+    }
+
+    /// Seal an encoded buffer into a shared [`Frame`] that returns its
+    /// allocation to this pool when the last handle drops.
+    pub fn seal(&self, buf: Vec<u8>) -> Frame {
+        Arc::new(FrameBuf {
+            buf,
+            pool: Some(Arc::downgrade(&self.inner)),
+        })
+    }
+
+    /// Pool hits so far.
+    pub fn hits(&self) -> u64 {
+        self.inner.hits.load(Ordering::Relaxed)
+    }
+
+    /// Pool misses so far.
+    pub fn misses(&self) -> u64 {
+        self.inner.misses.load(Ordering::Relaxed)
+    }
+
+    /// Idle buffers currently parked in the free list.
+    pub fn idle(&self) -> usize {
+        self.inner.free.lock().expect("bufpool poisoned").len()
+    }
+}
+
+/// One encoded frame: immutable bytes plus an optional way home.
+///
+/// Always handled as [`Frame`] (`Arc<FrameBuf>`); derefs to `[u8]`.
+#[derive(Debug)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    pool: Option<Weak<PoolInner>>,
+}
+
+/// A shared, immutable, refcounted encoded frame.
+pub type Frame = Arc<FrameBuf>;
+
+impl FrameBuf {
+    /// Wrap plain bytes with no pool affiliation (immediate responses,
+    /// abort frames, one-off payloads — dropped normally).
+    pub fn unpooled(buf: Vec<u8>) -> Frame {
+        Arc::new(FrameBuf { buf, pool: None })
+    }
+}
+
+impl Deref for FrameBuf {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl Drop for FrameBuf {
+    fn drop(&mut self) {
+        let Some(pool) = self.pool.take().and_then(|w| w.upgrade()) else {
+            return;
+        };
+        let mut free = pool.free.lock().expect("bufpool poisoned");
+        if free.len() < pool.max_free {
+            free.push(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+/// One queued segment: a shared frame and how much of it is written.
+#[derive(Debug)]
+struct Segment {
+    frame: Frame,
+    pos: usize,
+}
+
+/// Byte counts and syscall bookkeeping from one [`FrameQueue`] flush.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FlushResult {
+    /// Bytes the kernel accepted.
+    pub written: usize,
+    /// `writev(2)` calls issued.
+    pub syscalls: u64,
+    /// The socket buffer filled before the queue emptied (`EAGAIN`).
+    pub blocked: bool,
+}
+
+/// Per-connection output queue of refcounted frames with an offset
+/// cursor per segment, flushed via vectored writes.
+///
+/// Backpressure accounting is by *queued bytes*
+/// ([`FrameQueue::queued`]), which is exactly what the old contiguous
+/// `outbuf.len() - out_pos` measured — slow-reader semantics carry over
+/// unchanged.
+#[derive(Debug, Default)]
+pub struct FrameQueue {
+    segs: VecDeque<Segment>,
+    queued: usize,
+}
+
+impl FrameQueue {
+    /// An empty queue.
+    pub fn new() -> FrameQueue {
+        FrameQueue::default()
+    }
+
+    /// Enqueue a frame by reference (refcount bump, no copy).  Empty
+    /// frames are dropped on the floor.
+    pub fn push(&mut self, frame: Frame) {
+        if frame.is_empty() {
+            return;
+        }
+        self.queued += frame.len();
+        self.segs.push_back(Segment { frame, pos: 0 });
+    }
+
+    /// Unwritten bytes across all segments.
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    /// Whether nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    /// Queued segment count (each flush batches up to [`IOV_MAX`] of
+    /// these per syscall).
+    pub fn segments(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Drop everything unwritten (connection teardown).
+    pub fn clear(&mut self) {
+        self.segs.clear();
+        self.queued = 0;
+    }
+
+    /// Consume `n` written bytes from the front: advances the first
+    /// segment's cursor and pops segments as they complete.  Public so
+    /// short-write handling is unit-testable without a socket.
+    ///
+    /// # Panics
+    /// Panics if `n` exceeds [`FrameQueue::queued`] — the kernel never
+    /// reports writing more than it was given.
+    pub fn advance(&mut self, mut n: usize) {
+        assert!(n <= self.queued, "advance past end of queue");
+        self.queued -= n;
+        while n > 0 {
+            let seg = self.segs.front_mut().expect("queued bytes imply a segment");
+            let left = seg.frame.len() - seg.pos;
+            if n < left {
+                seg.pos += n;
+                return;
+            }
+            n -= left;
+            self.segs.pop_front();
+        }
+    }
+
+    /// Append up to `max` pending bytes into `scratch` without consuming
+    /// them — the copying flush used for the writev-vs-copy bench A/B
+    /// (call [`FrameQueue::advance`] with what actually got written).
+    pub fn fill_copy(&self, scratch: &mut Vec<u8>, max: usize) {
+        let mut left = max;
+        for seg in &self.segs {
+            if left == 0 {
+                break;
+            }
+            let bytes = &seg.frame[seg.pos..];
+            let take = bytes.len().min(left);
+            scratch.extend_from_slice(&bytes[..take]);
+            left -= take;
+        }
+    }
+
+    /// Flush as much as the socket accepts: gathers up to [`IOV_MAX`]
+    /// segments per `writev(2)`, loops until the queue empties or the
+    /// kernel reports `WouldBlock` (reported in
+    /// [`FlushResult::blocked`], not as an error).
+    pub fn flush_fd(&mut self, fd: i32) -> io::Result<FlushResult> {
+        let mut res = FlushResult::default();
+        while !self.is_empty() {
+            let mut iov = [IoVec {
+                base: std::ptr::null(),
+                len: 0,
+            }; IOV_MAX];
+            let mut n = 0;
+            for seg in &self.segs {
+                if n == IOV_MAX {
+                    break;
+                }
+                iov[n] = IoVec::from_slice(&seg.frame[seg.pos..]);
+                n += 1;
+            }
+            match writev(fd, &iov[..n]) {
+                Ok(0) => {
+                    res.blocked = true;
+                    return Ok(res);
+                }
+                Ok(written) => {
+                    res.syscalls += 1;
+                    res.written += written;
+                    self.advance(written);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    res.blocked = true;
+                    return Ok(res);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    fn frame(bytes: &[u8]) -> Frame {
+        FrameBuf::unpooled(bytes.to_vec())
+    }
+
+    #[test]
+    fn pool_recycles_dropped_frames() {
+        let pool = BufPool::new(8);
+        let mut buf = pool.take();
+        assert_eq!(pool.misses(), 1);
+        buf.extend_from_slice(b"hello");
+        let cap = buf.capacity();
+        let f = pool.seal(buf);
+        assert_eq!(&f[..], b"hello");
+        drop(f);
+        assert_eq!(pool.idle(), 1);
+        let again = pool.take();
+        assert_eq!(pool.hits(), 1);
+        assert!(again.is_empty(), "recycled buffer must come back cleared");
+        assert_eq!(again.capacity(), cap, "recycled, not reallocated");
+    }
+
+    #[test]
+    fn pool_free_list_is_bounded() {
+        let pool = BufPool::new(2);
+        let frames: Vec<Frame> = (0..5).map(|_| pool.seal(pool.take())).collect();
+        drop(frames);
+        assert_eq!(pool.idle(), 2, "free list capped at max_free");
+    }
+
+    #[test]
+    fn frame_outliving_pool_frees_without_panic() {
+        let pool = BufPool::new(8);
+        let f = pool.seal(pool.take());
+        drop(pool);
+        drop(f); // Weak upgrade fails; the Vec just frees
+    }
+
+    #[test]
+    fn queue_tracks_bytes_and_segments() {
+        let mut q = FrameQueue::new();
+        assert!(q.is_empty());
+        q.push(frame(b"abc"));
+        q.push(frame(b"")); // empty frames are ignored
+        q.push(frame(b"defg"));
+        assert_eq!(q.queued(), 7);
+        assert_eq!(q.segments(), 2);
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.segments(), 0);
+    }
+
+    #[test]
+    fn advance_handles_short_writes_across_segment_boundaries() {
+        let mut q = FrameQueue::new();
+        q.push(frame(b"aaaa"));
+        q.push(frame(b"bb"));
+        q.push(frame(b"cccccc"));
+        // short write inside the first segment
+        q.advance(2);
+        assert_eq!(q.queued(), 10);
+        assert_eq!(q.segments(), 3);
+        // exactly finishes the first, swallows the second, lands mid-third
+        q.advance(2 + 2 + 1);
+        assert_eq!(q.queued(), 5);
+        assert_eq!(q.segments(), 1);
+        // write landing exactly on a segment boundary pops it
+        q.advance(5);
+        assert!(q.is_empty());
+        assert_eq!(q.segments(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "advance past end")]
+    fn advance_past_queued_bytes_panics() {
+        let mut q = FrameQueue::new();
+        q.push(frame(b"xy"));
+        q.advance(3);
+    }
+
+    #[test]
+    fn fill_copy_respects_cursor_and_cap() {
+        let mut q = FrameQueue::new();
+        q.push(frame(b"abcd"));
+        q.push(frame(b"efgh"));
+        q.advance(2);
+        let mut scratch = Vec::new();
+        q.fill_copy(&mut scratch, 5);
+        assert_eq!(&scratch, b"cdefg");
+        scratch.clear();
+        q.fill_copy(&mut scratch, 100);
+        assert_eq!(&scratch, b"cdefgh");
+        assert_eq!(q.queued(), 6, "fill_copy must not consume");
+    }
+
+    #[test]
+    fn flush_fd_writes_all_segments_in_order() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let tx = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (mut rx, _) = l.accept().unwrap();
+        let mut q = FrameQueue::new();
+        q.push(frame(b"one,"));
+        q.push(frame(b"two,"));
+        q.push(frame(b"three"));
+        let res = q.flush_fd(tx.as_raw_fd()).unwrap();
+        assert_eq!(res.written, 13);
+        assert!(res.syscalls >= 1);
+        assert!(!res.blocked);
+        assert!(q.is_empty());
+        let mut got = vec![0u8; 13];
+        rx.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"one,two,three");
+    }
+
+    #[test]
+    fn flush_fd_reports_blocked_and_resumes_where_it_left_off() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let tx = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        tx.set_nonblocking(true).unwrap();
+        let (mut rx, _) = l.accept().unwrap();
+        let payload = vec![0x5au8; 256 * 1024];
+        let mut q = FrameQueue::new();
+        for chunk in payload.chunks(4096) {
+            q.push(frame(chunk));
+        }
+        let mut sent = 0;
+        let first = q.flush_fd(tx.as_raw_fd()).unwrap();
+        sent += first.written;
+        assert!(first.blocked, "256KiB must overrun an unread socket buffer");
+        assert!(!q.is_empty());
+        // drain the reader side, then keep flushing until done
+        let mut got = Vec::new();
+        while sent < payload.len() || got.len() < payload.len() {
+            let mut buf = [0u8; 65536];
+            match rx.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => got.extend_from_slice(&buf[..n]),
+                Err(e) => panic!("reader failed: {e}"),
+            }
+            let r = q.flush_fd(tx.as_raw_fd()).unwrap();
+            sent += r.written;
+        }
+        assert_eq!(sent, payload.len());
+        assert_eq!(got, payload);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn flush_batches_more_than_iov_max_segments() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let tx = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (mut rx, _) = l.accept().unwrap();
+        let mut q = FrameQueue::new();
+        let n = IOV_MAX + 37;
+        for _ in 0..n {
+            q.push(frame(b"x"));
+        }
+        let reader = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            let mut buf = [0u8; 4096];
+            while got.len() < n {
+                let k = rx.read(&mut buf).unwrap();
+                if k == 0 {
+                    break;
+                }
+                got.extend_from_slice(&buf[..k]);
+            }
+            got
+        });
+        let res = q.flush_fd(tx.as_raw_fd()).unwrap();
+        assert_eq!(res.written, n);
+        assert!(res.syscalls >= 2, "must loop past IOV_MAX in batches");
+        drop(tx);
+        let got = reader.join().unwrap();
+        assert_eq!(got.len(), n);
+        assert!(got.iter().all(|&b| b == b'x'));
+    }
+}

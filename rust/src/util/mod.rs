@@ -3,6 +3,7 @@
 //! pieces the rest of the stack needs ourselves).
 
 pub mod bench;
+pub mod bufpool;
 pub mod cli;
 pub mod fault;
 pub mod json;
@@ -13,3 +14,4 @@ pub mod rng;
 pub mod spsc;
 pub mod stats;
 pub mod sys;
+pub mod timerwheel;

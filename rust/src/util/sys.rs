@@ -4,11 +4,13 @@
 //! The event-loop HTTP front-end (`server/event_loop.rs`) needs a handful
 //! of primitives the standard library does not expose: `poll(2)` and
 //! `epoll(7)` for readiness multiplexing, `pipe(2)` / `eventfd(2)` for a
-//! loop waker, `fcntl(2)` to make fds nonblocking, and `setrlimit(2)` to
-//! raise the open-file ceiling for large soak runs.  This module declares
-//! them directly against the system libc that `std` already links, wraps
-//! them in safe Rust, and keeps every `unsafe` block in the crate behind
-//! this one file.
+//! loop waker, `fcntl(2)` to make fds nonblocking, `writev(2)` for
+//! vectored zero-copy flushes, `socket(2)`/`setsockopt(2)`/`bind(2)`/
+//! `listen(2)` for `SO_REUSEPORT` accept sharding with a configurable
+//! backlog, and `setrlimit(2)` to raise the open-file ceiling for large
+//! soak runs.  This module declares them directly against the system libc
+//! that `std` already links, wraps them in safe Rust, and keeps every
+//! `unsafe` block in the crate behind this one file.
 //!
 //! Two readiness back-ends sit behind the [`Poller`] trait:
 //!
@@ -26,7 +28,9 @@
 
 use std::collections::HashMap;
 use std::io;
+use std::net::{SocketAddr, TcpListener};
 use std::os::raw::{c_int, c_ulong};
+use std::os::unix::io::FromRawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
 
 /// One entry in a [`poll`] set, laid out exactly like libc's `struct
@@ -113,6 +117,7 @@ mod c {
         pub fn pipe(fds: *mut c_int) -> c_int;
         pub fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
         pub fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+        pub fn writev(fd: c_int, iov: *const super::IoVec, iovcnt: c_int) -> isize;
         pub fn close(fd: c_int) -> c_int;
         pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
         pub fn epoll_create1(flags: c_int) -> c_int;
@@ -131,6 +136,16 @@ mod c {
         pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
         pub fn getrlimit(resource: c_int, rlim: *mut super::RLimit) -> c_int;
         pub fn setrlimit(resource: c_int, rlim: *const super::RLimit) -> c_int;
+        pub fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        pub fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            optname: c_int,
+            optval: *const u8,
+            optlen: u32,
+        ) -> c_int;
+        pub fn bind(fd: c_int, addr: *const u8, addrlen: u32) -> c_int;
+        pub fn listen(fd: c_int, backlog: c_int) -> c_int;
     }
 }
 
@@ -195,6 +210,199 @@ pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
         return Err(io::Error::last_os_error());
     }
     Ok(new_cur as u64)
+}
+
+/// One scatter/gather entry for [`writev`], laid out exactly like libc's
+/// `struct iovec`.
+///
+/// Holds a raw pointer: an `IoVec` is only valid while the slice it was
+/// built from is borrowed, so build the array immediately before the
+/// syscall and let it die right after (the [`FrameQueue`] flush does
+/// exactly that).
+///
+/// [`FrameQueue`]: crate::util::bufpool::FrameQueue
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct IoVec {
+    /// First byte of the chunk.
+    pub base: *const u8,
+    /// Chunk length in bytes.
+    pub len: usize,
+}
+
+impl IoVec {
+    /// Borrow `bytes` as one scatter/gather entry.
+    pub fn from_slice(bytes: &[u8]) -> IoVec {
+        IoVec {
+            base: bytes.as_ptr(),
+            len: bytes.len(),
+        }
+    }
+}
+
+/// Linux's `IOV_MAX`: the most iovec entries one `writev(2)` accepts.
+pub const IOV_MAX: usize = 1024;
+
+/// Gather-write `iov` to `fd` in one syscall.  Retries `EINTR`
+/// internally; returns the number of bytes written (possibly short) or
+/// the raw OS error (`WouldBlock` on a full nonblocking socket buffer).
+/// At most [`IOV_MAX`] entries are passed through; callers batching more
+/// must loop.
+pub fn writev(fd: i32, iov: &[IoVec]) -> io::Result<usize> {
+    let n = iov.len().min(IOV_MAX);
+    loop {
+        // SAFETY: `iov` borrows live slices for the duration of this call;
+        // the kernel only reads from them.
+        let rc = unsafe { c::writev(fd, iov.as_ptr(), n as c_int) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+const AF_INET: c_int = 2;
+const AF_INET6: c_int = 10;
+const SOCK_STREAM: c_int = 1;
+const SOCK_CLOEXEC: c_int = 0o2000000;
+const SOL_SOCKET: c_int = 1;
+const SO_REUSEADDR: c_int = 2;
+const SO_REUSEPORT: c_int = 15;
+
+/// `struct sockaddr_in` (fields in network byte order where the ABI says
+/// so).
+#[repr(C)]
+struct SockAddrIn {
+    family: u16,
+    port_be: u16,
+    addr_be: u32,
+    zero: [u8; 8],
+}
+
+/// `struct sockaddr_in6`.
+#[repr(C)]
+struct SockAddrIn6 {
+    family: u16,
+    port_be: u16,
+    flowinfo: u32,
+    addr: [u8; 16],
+    scope_id: u32,
+}
+
+/// Closes the wrapped fd unless disarmed — keeps the error paths of
+/// [`bind_listener`] leak-free.
+struct FdGuard(c_int);
+
+impl FdGuard {
+    fn release(self) -> c_int {
+        let fd = self.0;
+        std::mem::forget(self);
+        fd
+    }
+}
+
+impl Drop for FdGuard {
+    fn drop(&mut self) {
+        // SAFETY: closing an fd this guard exclusively owns.
+        unsafe {
+            c::close(self.0);
+        }
+    }
+}
+
+fn sockopt_on(fd: c_int, opt: c_int) -> io::Result<()> {
+    let one: c_int = 1;
+    // SAFETY: passing a live 4-byte int option value, as SOL_SOCKET
+    // boolean options require.
+    let rc = unsafe {
+        c::setsockopt(
+            fd,
+            SOL_SOCKET,
+            opt,
+            &one as *const c_int as *const u8,
+            std::mem::size_of::<c_int>() as u32,
+        )
+    };
+    if rc != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+/// Create a listening TCP socket on `addr` with an explicit `backlog`,
+/// optionally tagged `SO_REUSEPORT`.
+///
+/// `std::net::TcpListener::bind` hides both knobs this repo needs: the
+/// listen backlog (std hardcodes 128, which clamps accept bursts well
+/// below soak arrival rates) and `SO_REUSEPORT` (which lets every loop
+/// shard bind the same address so the kernel itself distributes
+/// accepts).  `SO_REUSEADDR` is always set, matching std's behaviour.
+/// Fails — with the socket closed — when the kernel rejects
+/// `SO_REUSEPORT`; `--accept auto` treats that as "fall back to handoff".
+pub fn bind_listener(addr: SocketAddr, backlog: i32, reuseport: bool) -> io::Result<TcpListener> {
+    let domain = match addr {
+        SocketAddr::V4(_) => AF_INET,
+        SocketAddr::V6(_) => AF_INET6,
+    };
+    // SAFETY: plain syscall, no pointers.
+    let fd = unsafe { c::socket(domain, SOCK_STREAM | SOCK_CLOEXEC, 0) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let guard = FdGuard(fd);
+    sockopt_on(fd, SO_REUSEADDR)?;
+    if reuseport {
+        sockopt_on(fd, SO_REUSEPORT)?;
+    }
+    let rc = match addr {
+        SocketAddr::V4(v4) => {
+            let sa = SockAddrIn {
+                family: AF_INET as u16,
+                port_be: v4.port().to_be(),
+                addr_be: u32::from(*v4.ip()).to_be(),
+                zero: [0; 8],
+            };
+            // SAFETY: `sa` is a live repr(C) sockaddr_in; the kernel
+            // copies it out during the call.
+            unsafe {
+                c::bind(
+                    fd,
+                    &sa as *const SockAddrIn as *const u8,
+                    std::mem::size_of::<SockAddrIn>() as u32,
+                )
+            }
+        }
+        SocketAddr::V6(v6) => {
+            let sa = SockAddrIn6 {
+                family: AF_INET6 as u16,
+                port_be: v6.port().to_be(),
+                flowinfo: v6.flowinfo(),
+                addr: v6.ip().octets(),
+                scope_id: v6.scope_id(),
+            };
+            // SAFETY: `sa` is a live repr(C) sockaddr_in6.
+            unsafe {
+                c::bind(
+                    fd,
+                    &sa as *const SockAddrIn6 as *const u8,
+                    std::mem::size_of::<SockAddrIn6>() as u32,
+                )
+            }
+        }
+    };
+    if rc != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    // SAFETY: plain syscall on the fd we own.
+    if unsafe { c::listen(fd, backlog) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    // SAFETY: the fd is a freshly bound+listening TCP socket whose sole
+    // owner is handed to the TcpListener.
+    Ok(unsafe { TcpListener::from_raw_fd(guard.release()) })
 }
 
 /// One readiness event reported by a [`Poller`], back-end neutral.
@@ -700,6 +908,77 @@ mod tests {
         assert_eq!(evs.len(), 1);
         assert_eq!(evs[0].token, 12);
         assert!(p.remove(a.read_fd()).is_err(), "double remove must fail");
+    }
+
+    #[test]
+    fn writev_gathers_multiple_slices_in_one_call() {
+        use std::io::Read;
+        use std::net::{TcpListener, TcpStream};
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let tx = TcpStream::connect(addr).unwrap();
+        let (mut rx, _) = l.accept().unwrap();
+        let parts: [&[u8]; 3] = [b"alpha-", b"beta-", b"gamma"];
+        let iov: Vec<IoVec> = parts.iter().map(|p| IoVec::from_slice(p)).collect();
+        use std::os::unix::io::AsRawFd;
+        let n = writev(tx.as_raw_fd(), &iov).unwrap();
+        assert_eq!(n, 16);
+        let mut got = vec![0u8; 16];
+        rx.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"alpha-beta-gamma");
+    }
+
+    #[test]
+    fn writev_on_full_nonblocking_socket_returns_would_block() {
+        use std::net::{TcpListener, TcpStream};
+        use std::os::unix::io::AsRawFd;
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let tx = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (_rx, _) = l.accept().unwrap();
+        tx.set_nonblocking(true).unwrap();
+        // nobody reads `_rx`: keep writing until the socket buffer fills
+        let chunk = vec![0u8; 64 * 1024];
+        let iov = [IoVec::from_slice(&chunk)];
+        let err = loop {
+            match writev(tx.as_raw_fd(), &iov) {
+                Ok(_) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.kind(), io::ErrorKind::WouldBlock);
+    }
+
+    #[test]
+    fn bind_listener_accepts_connections() {
+        use std::io::{Read, Write};
+        use std::net::TcpStream;
+        let addr: SocketAddr = "127.0.0.1:0".parse().unwrap();
+        let l = bind_listener(addr, 128, false).unwrap();
+        let bound = l.local_addr().unwrap();
+        assert_ne!(bound.port(), 0);
+        let mut tx = TcpStream::connect(bound).unwrap();
+        let (mut rx, _) = l.accept().unwrap();
+        tx.write_all(b"ping").unwrap();
+        let mut got = [0u8; 4];
+        rx.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"ping");
+    }
+
+    #[test]
+    fn reuseport_allows_two_listeners_on_one_port() {
+        let addr: SocketAddr = "127.0.0.1:0".parse().unwrap();
+        let first = match bind_listener(addr, 128, true) {
+            Ok(l) => l,
+            // kernels without SO_REUSEPORT: the fallback path is exactly
+            // what `--accept auto` exercises, nothing more to assert here
+            Err(_) => return,
+        };
+        let port = first.local_addr().unwrap().port();
+        let again: SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
+        let second = bind_listener(again, 128, true).unwrap();
+        assert_eq!(second.local_addr().unwrap().port(), port);
+        // without SO_REUSEPORT the same bind must be refused
+        assert!(bind_listener(again, 128, false).is_err());
     }
 
     #[test]

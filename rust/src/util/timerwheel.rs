@@ -1,0 +1,270 @@
+//! Coarse hashed timer wheel for connection deadlines.
+//!
+//! The event-loop front-end used to sweep every open connection once per
+//! tick to test three deadlines (header read, idle, write stall).  At 100k
+//! mostly-idle streams that sweep dominates the tick.  This wheel makes
+//! deadline checks O(due) instead of O(open): each connection keeps one
+//! armed entry, [`TimerWheel::advance`] visits only the slots whose tick
+//! has arrived, and the loop re-arms a fired entry against the
+//! connection's *actual* deadline (which may have moved later since the
+//! entry was scheduled — deadlines only ever extend with progress).
+//!
+//! Guarantees, pinned by property tests below:
+//!
+//! * **Never early** — a key is emitted only once `now >= due`.
+//! * **At most one tick late** — driven at tick granularity, a key due at
+//!   `D` is emitted by the first `advance(now)` with `now >= D`, and that
+//!   call happens before `D + 2·tick`.
+//!
+//! Far-future entries land in their natural slot and get re-bucketed
+//! ("cascade") each wheel revolution until their tick arrives; near-due
+//! entries whose slot fires just before their exact deadline re-bucket
+//! into the next tick.  Cascade counts are exported for `/v1/metrics`
+//! (`timer_wheel_cascades`) so operators can see when the wheel horizon
+//! is too small for the configured timeouts.
+
+/// One armed deadline.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    /// Absolute due time, in the caller's millisecond clock.
+    due_ms: u64,
+    /// Caller cookie (the event loop uses connection tokens).
+    key: u64,
+}
+
+/// Hashed timer wheel: `slots` buckets of `tick_ms` width each.
+#[derive(Debug)]
+pub struct TimerWheel {
+    tick_ms: u64,
+    slots: Vec<Vec<Entry>>,
+    /// Tick index advance has fully processed (slot `now_tick % slots`
+    /// holds entries for the *next* revolution).
+    now_tick: u64,
+    cascades: u64,
+    len: usize,
+    scratch: Vec<Entry>,
+}
+
+impl TimerWheel {
+    /// Create a wheel with `slots` buckets of `tick_ms` milliseconds.
+    /// The horizon (one revolution) is `tick_ms * slots`; entries beyond
+    /// it cascade, which is correct but costs a re-bucket per revolution.
+    ///
+    /// # Panics
+    /// Panics if `tick_ms` or `slots` is zero.
+    pub fn new(tick_ms: u64, slots: usize) -> TimerWheel {
+        assert!(tick_ms > 0, "tick must be nonzero");
+        assert!(slots > 0, "wheel needs at least one slot");
+        TimerWheel {
+            tick_ms,
+            slots: (0..slots).map(|_| Vec::new()).collect(),
+            now_tick: 0,
+            cascades: 0,
+            len: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Arm `key` to fire once `now >= due_ms`.  Multiple entries may share
+    /// a key (the caller filters stale fires); already-past deadlines fire
+    /// on the next [`advance`](TimerWheel::advance).
+    pub fn schedule(&mut self, due_ms: u64, key: u64) {
+        let natural = due_ms / self.tick_ms;
+        // a slot at or behind `now_tick` is not visited again until the
+        // wheel wraps — clamp past-due entries onto the next tick
+        let tick = natural.max(self.now_tick + 1);
+        let slot = (tick % self.slots.len() as u64) as usize;
+        self.slots[slot].push(Entry { due_ms, key });
+        self.len += 1;
+    }
+
+    /// Advance the wheel to `now_ms`, appending every due key to `out`
+    /// (cleared first).  Visits at most `min(elapsed_ticks, slots)`
+    /// buckets; entries seen before their due time are re-bucketed and
+    /// counted as cascades.
+    pub fn advance(&mut self, now_ms: u64, out: &mut Vec<u64>) {
+        out.clear();
+        let target = now_ms / self.tick_ms;
+        if target <= self.now_tick {
+            return;
+        }
+        let nslots = self.slots.len() as u64;
+        let steps = (target - self.now_tick).min(nslots);
+        for i in 1..=steps {
+            let tick = self.now_tick + i;
+            let slot = (tick % nslots) as usize;
+            self.scratch.append(&mut self.slots[slot]);
+            while let Some(e) = self.scratch.pop() {
+                if e.due_ms <= now_ms {
+                    self.len -= 1;
+                    out.push(e.key);
+                    continue;
+                }
+                // not due yet: its natural tick is still ahead (or it is
+                // due within a not-yet-elapsed fraction of this tick) —
+                // re-bucket so it is examined exactly when due
+                self.cascades += 1;
+                let natural = e.due_ms / self.tick_ms;
+                let retick = natural.max(tick + 1);
+                let reslot = (retick % nslots) as usize;
+                self.slots[reslot].push(e);
+            }
+        }
+        self.now_tick = target;
+    }
+
+    /// Number of armed entries (including stale duplicates).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no entries are armed.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total re-buckets so far (monotonic; read-and-report for metrics).
+    pub fn cascades(&self) -> u64 {
+        self.cascades
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, forall};
+
+    #[test]
+    fn fires_once_due_and_not_before() {
+        let mut w = TimerWheel::new(10, 8);
+        w.schedule(35, 1);
+        let mut out = Vec::new();
+        w.advance(30, &mut out);
+        assert!(out.is_empty(), "fired {}ms early", 35 - 30);
+        w.advance(40, &mut out);
+        assert_eq!(out, vec![1]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn past_due_entry_fires_on_next_advance() {
+        let mut w = TimerWheel::new(10, 8);
+        let mut out = Vec::new();
+        w.advance(500, &mut out);
+        w.schedule(100, 7); // already long past
+        w.advance(510, &mut out);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn far_future_entries_cascade_and_still_fire_on_time() {
+        // horizon is 8 ticks * 10ms = 80ms; schedule 10 revolutions out
+        let mut w = TimerWheel::new(10, 8);
+        w.schedule(805, 3);
+        let mut out = Vec::new();
+        let mut t = 0;
+        let mut fired_at = None;
+        while t < 900 {
+            t += 10;
+            w.advance(t, &mut out);
+            if !out.is_empty() {
+                assert_eq!(out, vec![3]);
+                fired_at = Some(t);
+                break;
+            }
+        }
+        let fired_at = fired_at.expect("entry never fired");
+        assert!(fired_at >= 805, "fired early at {fired_at}");
+        assert!(fired_at < 805 + 20, "fired late at {fired_at}");
+        assert!(w.cascades() > 0, "a 10-revolution entry must cascade");
+    }
+
+    #[test]
+    fn large_time_jump_fires_everything_due() {
+        let mut w = TimerWheel::new(10, 8);
+        for k in 0..100u64 {
+            w.schedule(k * 7, k);
+        }
+        let mut out = Vec::new();
+        w.advance(10_000, &mut out);
+        let mut got = out.clone();
+        got.sort_unstable();
+        assert_eq!(got, (0..100).collect::<Vec<u64>>());
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn property_never_early_and_within_one_tick_of_due() {
+        forall(
+            0x7EE1,
+            60,
+            |r| {
+                let tick = (r.range(1, 50) + 1) as u64;
+                let slots = r.range(2, 32);
+                let n = r.range(1, 40);
+                let dues: Vec<u64> = (0..n).map(|_| r.range(0, 2000) as u64).collect();
+                (tick, slots, dues)
+            },
+            |(tick, slots, dues)| {
+                let mut w = TimerWheel::new(*tick, *slots);
+                for (k, d) in dues.iter().enumerate() {
+                    w.schedule(*d, k as u64);
+                }
+                let horizon = dues.iter().max().copied().unwrap_or(0) + 4 * tick;
+                let mut fired: Vec<Option<u64>> = vec![None; dues.len()];
+                let mut out = Vec::new();
+                let mut now = 0;
+                while now < horizon {
+                    now += tick;
+                    w.advance(now, &mut out);
+                    for k in &out {
+                        check(fired[*k as usize].is_none(), "key fired twice")?;
+                        fired[*k as usize] = Some(now);
+                    }
+                }
+                for (k, d) in dues.iter().enumerate() {
+                    let at = fired[k].ok_or(format!("key {k} (due {d}) never fired"))?;
+                    check(at >= *d, format!("key {k} fired at {at} before due {d}"))?;
+                    check(
+                        at < d + 2 * tick,
+                        format!("key {k} due {d} fired at {at}, > one tick ({tick}ms) late"),
+                    )?;
+                }
+                check(w.is_empty(), "entries left armed after horizon")?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_irregular_advance_steps_never_fire_early() {
+        forall(
+            0xCA5CADE,
+            40,
+            |r| {
+                let dues: Vec<u64> = (0..r.range(1, 20)).map(|_| r.range(0, 3000) as u64).collect();
+                let steps: Vec<u64> = (0..60).map(|_| r.range(1, 200) as u64).collect();
+                (dues, steps)
+            },
+            |(dues, steps)| {
+                let mut w = TimerWheel::new(16, 8);
+                for (k, d) in dues.iter().enumerate() {
+                    w.schedule(*d, k as u64);
+                }
+                let mut out = Vec::new();
+                let mut now = 0;
+                for s in steps {
+                    now += s;
+                    w.advance(now, &mut out);
+                    for k in &out {
+                        check(
+                            dues[*k as usize] <= now,
+                            format!("key {k} due {} fired early at {now}", dues[*k as usize]),
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -107,6 +107,7 @@ fn serve_chaos(
         poller: PollerKind::Auto,
         loop_shards: fe.1,
         limits: ConnLimits::default(),
+        ..Default::default()
     };
     serve_router_with(router, "127.0.0.1:0", opts).expect("serve")
 }

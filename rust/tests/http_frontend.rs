@@ -8,7 +8,8 @@
 //! reader, and still honors drain/abort semantics.  The event-loop side
 //! is exercised across its configuration matrix: `poll(2)` vs
 //! edge-triggered `epoll` readiness back-ends, single-shard vs sharded
-//! loops (SPSC ring token delivery runs in all of them).
+//! loops, and `handoff` vs `SO_REUSEPORT` accept sharding (SPSC ring
+//! token delivery runs in all of them).
 //!
 //! Byte-identity is asserted over *sequential* requests: under
 //! concurrency the router's id assignment (and therefore the simulator's
@@ -20,7 +21,9 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
-use dsde::config::{EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind, SpecControl};
+use dsde::config::{
+    AcceptMode, EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind, SpecControl,
+};
 use dsde::engine::engine::Engine;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::server::client;
@@ -35,39 +38,62 @@ struct FeConfig {
     kind: FrontendKind,
     poller: PollerKind,
     shards: usize,
+    accept: AcceptMode,
     label: &'static str,
 }
 
-/// The full matrix: threaded oracle + event loop across pollers/shards.
-const CONFIGS: [FeConfig; 4] = [
+/// The full matrix: threaded oracle + event loop across pollers, shard
+/// counts, and accept modes.  The handoff rows pin `--accept handoff`
+/// explicitly (so they keep covering that path on kernels where `auto`
+/// would pick reuseport); the reuseport rows cover both pollers.
+const CONFIGS: [FeConfig; 6] = [
     FeConfig {
         kind: FrontendKind::Threaded,
         poller: PollerKind::Auto,
         shards: 1,
+        accept: AcceptMode::Auto,
         label: "threaded",
     },
     FeConfig {
         kind: FrontendKind::EventLoop,
         poller: PollerKind::Poll,
         shards: 1,
+        accept: AcceptMode::Handoff,
         label: "event-loop/poll",
     },
     FeConfig {
         kind: FrontendKind::EventLoop,
         poller: PollerKind::Epoll,
         shards: 1,
+        accept: AcceptMode::Handoff,
         label: "event-loop/epoll",
     },
     FeConfig {
         kind: FrontendKind::EventLoop,
         poller: PollerKind::Epoll,
         shards: 4,
+        accept: AcceptMode::Handoff,
         label: "event-loop/epoll/4-shards",
+    },
+    FeConfig {
+        kind: FrontendKind::EventLoop,
+        poller: PollerKind::Poll,
+        shards: 4,
+        accept: AcceptMode::Reuseport,
+        label: "event-loop/poll/4-shards/reuseport",
+    },
+    FeConfig {
+        kind: FrontendKind::EventLoop,
+        poller: PollerKind::Epoll,
+        shards: 4,
+        accept: AcceptMode::Reuseport,
+        label: "event-loop/epoll/4-shards/reuseport",
     },
 ];
 
 /// Just the event-loop rows of [`CONFIGS`].
-const LOOP_CONFIGS: [FeConfig; 3] = [CONFIGS[1], CONFIGS[2], CONFIGS[3]];
+const LOOP_CONFIGS: [FeConfig; 5] =
+    [CONFIGS[1], CONFIGS[2], CONFIGS[3], CONFIGS[4], CONFIGS[5]];
 
 fn sim_engine(seed: u64, max_batch: usize, max_len: usize) -> Engine {
     let cfg = EngineConfig {
@@ -86,7 +112,9 @@ fn opts_for(fe: FeConfig, limits: ConnLimits) -> ServeOptions {
         frontend: fe.kind,
         poller: fe.poller,
         loop_shards: fe.shards,
+        accept: fe.accept,
         limits,
+        ..Default::default()
     }
 }
 
@@ -303,7 +331,7 @@ fn event_loop_drain_completes_open_streams() {
 /// `aborted` summary instead of hanging or truncating.
 #[test]
 fn event_loop_abort_terminates_open_streams() {
-    for fe in [CONFIGS[2], CONFIGS[3]] {
+    for fe in [CONFIGS[2], CONFIGS[3], CONFIGS[5]] {
         // huge context + output budget: the request cannot finish on its
         // own before the abort lands
         let router = EngineRouter::new(
@@ -509,6 +537,31 @@ fn health_and_metrics_report_frontend_counters() {
                 fe.label
             );
             assert!(health.contains("\"ring_depth_hwm\":"), "{}: {health}", fe.label);
+            assert!(
+                health.contains(&format!("\"accept\":\"{}\"", fe.accept.name()))
+                    || fe.accept == AcceptMode::Auto,
+                "{}: {health}",
+                fe.label
+            );
+            assert!(health.contains("\"backlog\":1024"), "{}: {health}", fe.label);
+            assert!(
+                health.contains("\"accepted_per_shard\":["),
+                "{}: {health}",
+                fe.label
+            );
+            assert!(health.contains("\"writev_calls\":"), "{}: {health}", fe.label);
+            assert!(
+                health.contains("\"frames_enqueued_zero_copy\":"),
+                "{}: {health}",
+                fe.label
+            );
+            assert!(health.contains("\"bufpool_hits\":"), "{}: {health}", fe.label);
+            assert!(health.contains("\"bufpool_misses\":"), "{}: {health}", fe.label);
+            assert!(
+                health.contains("\"timer_wheel_cascades\":"),
+                "{}: {health}",
+                fe.label
+            );
         }
         let metrics = raw(h.addr, "GET /v1/metrics HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(metrics.contains("\"frontend\":{"), "{}: {metrics}", fe.label);
@@ -562,11 +615,66 @@ fn sharded_loop_spreads_connections_across_shards() {
     h.shutdown();
 }
 
+/// Reuseport accept sharding: every accepted connection is charged to
+/// exactly one shard's accept counter, streaming traffic drives the
+/// zero-copy datapath counters (frames enqueued by reference, `writev`
+/// flushes, buffer-pool recycling), and the gauges drain back to zero.
+#[test]
+fn reuseport_accept_charges_shards_and_drives_zero_copy_counters() {
+    for fe in [CONFIGS[4], CONFIGS[5]] {
+        let h = server_with(fe, 32, ConnLimits::default());
+        let addr = h.addr.to_string();
+        let threads: Vec<_> = (0..24)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let r =
+                        client::complete_streaming(&addr, &format!("r{i}"), 16, 0.0).unwrap();
+                    assert_eq!(r.tokens(), 16);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let stats = h.frontend_stats();
+        let per_shard: u64 = (0..fe.shards).map(|s| stats.shard_accepted(s)).sum();
+        assert_eq!(
+            per_shard,
+            stats.accepted(),
+            "{}: per-shard accepts must sum to the total",
+            fe.label
+        );
+        assert!(
+            stats.frames_enqueued_zero_copy() >= 24,
+            "{}: streaming must enqueue ring frames by reference (got {})",
+            fe.label,
+            stats.frames_enqueued_zero_copy()
+        );
+        assert!(
+            stats.writev_calls() > 0,
+            "{}: flushes must go through writev",
+            fe.label
+        );
+        assert!(
+            stats.bufpool_hits() + stats.bufpool_misses() >= 24,
+            "{}: frame encoding must draw from the buffer pool",
+            fe.label
+        );
+        assert!(
+            stats.bufpool_hits() > 0,
+            "{}: sustained streaming must recycle frame buffers",
+            fe.label
+        );
+        h.shutdown();
+    }
+}
+
 /// The event loop holds many concurrent streaming connections on a few
 /// loop threads (tier-1-sized; the soaks below scale it up).
 #[test]
 fn event_loop_serves_many_concurrent_streams() {
-    for fe in [CONFIGS[2], CONFIGS[3]] {
+    for fe in [CONFIGS[2], CONFIGS[3], CONFIGS[5]] {
         let h = server_with(fe, 32, ConnLimits::default());
         let addr = h.addr.to_string();
         let threads: Vec<_> = (0..128)
