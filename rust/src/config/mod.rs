@@ -332,6 +332,64 @@ impl SpecControl {
     }
 }
 
+/// Per-tenant admission rate limit (the `--rate-limit` CLI surface):
+/// every tenant gets an independent token bucket refilled at `rate`
+/// requests/second with capacity `burst`.  Requests that find the bucket
+/// empty are shed with `429 Too Many Requests` + `Retry-After` instead of
+/// queueing (see [`crate::server::limiter`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RateLimit {
+    /// Sustained admission rate per tenant, in requests per second.
+    pub rate: f64,
+    /// Bucket capacity: the largest burst a tenant can submit at once.
+    pub burst: f64,
+}
+
+impl RateLimit {
+    /// Parse CLI shorthand `RATE[:BURST]` (e.g. `10`, `2.5:8`); `off` /
+    /// `none` mean no limiting (returns `Ok(None)`).
+    pub fn parse(s: &str) -> Result<Option<RateLimit>, String> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("off") || s.eq_ignore_ascii_case("none") || s.is_empty() {
+            return Ok(None);
+        }
+        let (rate_s, burst_s) = match s.split_once(':') {
+            Some((r, b)) => (r, Some(b)),
+            None => (s, None),
+        };
+        let rate: f64 = rate_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad rate-limit rate {rate_s:?}"))?;
+        let burst: f64 = match burst_s {
+            Some(b) => b
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad rate-limit burst {b:?}"))?,
+            None => rate.ceil().max(1.0),
+        };
+        let rl = RateLimit { rate, burst };
+        rl.validate()?;
+        Ok(Some(rl))
+    }
+
+    /// Validate invariants; returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            return Err(format!("rate-limit rate must be finite and > 0 (got {})", self.rate));
+        }
+        if !self.burst.is_finite() || self.burst < 1.0 {
+            return Err(format!("rate-limit burst must be >= 1 (got {})", self.burst));
+        }
+        Ok(())
+    }
+
+    /// Stable `RATE:BURST` label (CLI round-trip / report axes).
+    pub fn label(&self) -> String {
+        format!("{}:{}", self.rate, self.burst)
+    }
+}
+
 /// Multi-replica serving configuration (the `--replicas` / `--route` /
 /// `--frontend` CLI surface): how many engine replicas the router owns,
 /// how it picks one per request, and which HTTP front-end faces the
@@ -383,6 +441,9 @@ pub struct RouterConfig {
     pub fault: Option<FaultPlan>,
     /// Fleet-level speculation control (`--spec-control off|goodput`).
     pub control: SpecControl,
+    /// Per-tenant token-bucket admission control (`--rate-limit
+    /// RATE[:BURST]`).  `None` = admit everything.
+    pub rate_limit: Option<RateLimit>,
 }
 
 impl Default for RouterConfig {
@@ -401,6 +462,7 @@ impl Default for RouterConfig {
             resume: None,
             fault: None,
             control: SpecControl::Off,
+            rate_limit: None,
         }
     }
 }
@@ -428,6 +490,9 @@ impl RouterConfig {
         }
         if self.backlog > 1 << 20 {
             return Err(format!("backlog {} unreasonably large (max 2^20)", self.backlog));
+        }
+        if let Some(rl) = &self.rate_limit {
+            rl.validate()?;
         }
         Ok(())
     }
@@ -466,6 +531,13 @@ impl RouterConfig {
                 },
             )
             .set("control", self.control.name())
+            .set(
+                "rate_limit",
+                match &self.rate_limit {
+                    Some(rl) => Json::Str(rl.label()),
+                    None => Json::Null,
+                },
+            )
     }
 }
 
@@ -564,6 +636,7 @@ mod tests {
         assert!(s.contains("\"resume\":null"));
         assert!(s.contains("\"fault\":null"));
         assert!(s.contains("\"control\":\"off\""));
+        assert!(s.contains("\"rate_limit\":null"));
         let zero_shards = RouterConfig {
             loop_shards: 0,
             ..Default::default()
@@ -598,6 +671,38 @@ mod tests {
         let s = chaotic.to_json().to_string();
         assert!(s.contains("\"resume\":\"wal.ndjson\""), "{s}");
         assert!(s.contains("\"fault\":\"kill:0@100\""), "{s}");
+    }
+
+    #[test]
+    fn rate_limit_parse_and_validate() {
+        assert_eq!(RateLimit::parse("off").unwrap(), None);
+        assert_eq!(RateLimit::parse("none").unwrap(), None);
+        assert_eq!(RateLimit::parse("").unwrap(), None);
+        let rl = RateLimit::parse("10").unwrap().unwrap();
+        assert_eq!(rl.rate, 10.0);
+        assert_eq!(rl.burst, 10.0); // burst defaults to ceil(rate)
+        let rl = RateLimit::parse("2.5:8").unwrap().unwrap();
+        assert_eq!(rl.rate, 2.5);
+        assert_eq!(rl.burst, 8.0);
+        assert_eq!(rl.label(), "2.5:8");
+        let rl = RateLimit::parse("0.25").unwrap().unwrap();
+        assert_eq!(rl.burst, 1.0); // sub-1 rates still allow one request
+        assert!(RateLimit::parse("0").is_err());
+        assert!(RateLimit::parse("-1").is_err());
+        assert!(RateLimit::parse("5:0.5").is_err());
+        assert!(RateLimit::parse("abc").is_err());
+        let limited = RouterConfig {
+            rate_limit: Some(RateLimit { rate: 4.0, burst: 2.0 }),
+            ..Default::default()
+        };
+        assert!(limited.validate().is_ok());
+        let s = limited.to_json().to_string();
+        assert!(s.contains("\"rate_limit\":\"4:2\""), "{s}");
+        let bad = RouterConfig {
+            rate_limit: Some(RateLimit { rate: 0.0, burst: 2.0 }),
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -208,6 +208,9 @@ impl Engine {
             drafted: seq.signals.drafted_total,
             accepted: seq.signals.accepted_total,
             preemptions: seq.preemptions,
+            tenant: seq.tenant,
+            class: seq.class,
+            deadline_ms: seq.deadline_ms,
         };
         self.metrics.record_request(RequestMetrics {
             id: fin.id,
@@ -219,6 +222,9 @@ impl Engine {
             drafted: fin.drafted,
             accepted: fin.accepted,
             preemptions: fin.preemptions,
+            tenant: fin.tenant.clone(),
+            class: fin.class,
+            deadline_met: fin.deadline_met(),
         });
         self.finished.push(fin);
     }
@@ -330,6 +336,9 @@ impl Engine {
                 params: seq.params,
                 arrival: seq.arrival,
                 waited: (self.clock - seq.arrival).max(0.0),
+                tenant: seq.tenant,
+                class: seq.class,
+                deadline_ms: seq.deadline_ms,
             });
         }
         out.reverse();

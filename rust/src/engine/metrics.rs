@@ -13,9 +13,130 @@
 //! requested percentiles, so a snapshot never clones the retained request
 //! window over a channel.
 
+use std::collections::HashMap;
+
+use crate::engine::request::PriorityClass;
 use crate::util::json::Json;
 use crate::util::ring::RingBuf;
 use crate::util::stats::{percentile, percentile_sorted, Welford};
+
+/// Per-priority-class rollup: completions, deadline/SLO attainment, and
+/// granted-SL totals (the tight- vs slack-deadline SL evidence the eval
+/// report surfaces).  Indexed by [`PriorityClass::rank`] in
+/// [`EngineMetrics::classes`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClassMetrics {
+    /// Finished requests of this class.
+    pub completed: u64,
+    /// Output tokens of finished requests of this class.
+    pub completed_tokens: u64,
+    /// Finished requests that carried a deadline.
+    pub with_deadline: u64,
+    /// Deadline-carrying requests that finished within their deadline.
+    pub deadline_met: u64,
+    /// Sum of granted per-round speculation lengths over sequences of this
+    /// class (post cap/control/deadline clamps).
+    pub sl_sum: u64,
+    /// Sequence-rounds contributing to `sl_sum`.
+    pub sl_rounds: u64,
+}
+
+impl ClassMetrics {
+    /// SLO attainment: fraction of deadline-carrying completions that met
+    /// their deadline; `1.0` when the class saw no deadlines (vacuously
+    /// attained, and the neutral value for report columns).
+    pub fn attainment(&self) -> f64 {
+        if self.with_deadline == 0 {
+            1.0
+        } else {
+            self.deadline_met as f64 / self.with_deadline as f64
+        }
+    }
+
+    /// Mean granted SL per sequence-round for this class (0 when the class
+    /// never ran).
+    pub fn mean_sl(&self) -> f64 {
+        if self.sl_rounds == 0 {
+            0.0
+        } else {
+            self.sl_sum as f64 / self.sl_rounds as f64
+        }
+    }
+
+    /// Fold another rollup into this one (counters add).
+    pub fn merge(&mut self, other: &ClassMetrics) {
+        self.completed += other.completed;
+        self.completed_tokens += other.completed_tokens;
+        self.with_deadline += other.with_deadline;
+        self.deadline_met += other.deadline_met;
+        self.sl_sum += other.sl_sum;
+        self.sl_rounds += other.sl_rounds;
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj()
+            .set("requests", self.completed)
+            .set("tokens_out", self.completed_tokens)
+            .set("with_deadline", self.with_deadline)
+            .set("deadline_met", self.deadline_met)
+            .set("attainment", self.attainment())
+            .set("mean_sl", self.mean_sl())
+    }
+}
+
+/// Per-tenant completion totals ("" = unattributed traffic).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TenantMetrics {
+    /// Finished requests attributed to the tenant.
+    pub completed: u64,
+    /// Output tokens of those requests.
+    pub completed_tokens: u64,
+}
+
+/// Serialize a per-class array as a `{class_name: rollup}` JSON object.
+fn classes_json(classes: &[ClassMetrics; 3]) -> Json {
+    let mut j = Json::obj();
+    for c in PriorityClass::ALL {
+        j = j.set(c.name(), classes[c.rank()].to_json());
+    }
+    j
+}
+
+/// Serialize per-tenant totals (sorted by tenant name for deterministic
+/// output); `busy_time` turns token totals into per-tenant goodput.
+fn tenants_json(tenants: &HashMap<String, TenantMetrics>, busy_time: f64) -> Json {
+    let mut names: Vec<&String> = tenants.keys().collect();
+    names.sort();
+    let mut j = Json::obj();
+    for name in names {
+        let t = tenants[name];
+        let goodput = if busy_time <= 0.0 {
+            0.0
+        } else {
+            t.completed_tokens as f64 / busy_time
+        };
+        j = j.set(
+            name,
+            Json::obj()
+                .set("requests", t.completed)
+                .set("tokens_out", t.completed_tokens)
+                .set("goodput", goodput),
+        );
+    }
+    j
+}
+
+/// Fold per-tenant totals from `other` into `into` (counters add).
+fn merge_tenants(
+    into: &mut HashMap<String, TenantMetrics>,
+    other: &HashMap<String, TenantMetrics>,
+) {
+    for (name, t) in other {
+        let e = into.entry(name.clone()).or_default();
+        e.completed += t.completed;
+        e.completed_tokens += t.completed_tokens;
+    }
+}
 
 /// Default number of per-request summaries retained for percentile queries.
 pub const DEFAULT_REQUEST_RETENTION: usize = 4096;
@@ -46,6 +167,12 @@ pub struct RequestMetrics {
     pub accepted: u64,
     /// Times the request was preempted under KV pressure.
     pub preemptions: usize,
+    /// Tenant the request is attributed to ("" = unattributed).
+    pub tenant: String,
+    /// Scheduling priority class of the request.
+    pub class: PriorityClass,
+    /// Whether the request met its deadline (`None` = no deadline).
+    pub deadline_met: Option<bool>,
 }
 
 /// Rolling engine-level metrics.
@@ -98,6 +225,12 @@ pub struct EngineMetrics {
     /// bounded window of recent finished-request summaries (percentiles,
     /// traces); evicts oldest beyond its retention capacity
     pub requests: RingBuf<RequestMetrics>,
+    /// per-priority-class rollups (indexed by [`PriorityClass::rank`])
+    pub classes: [ClassMetrics; 3],
+    /// per-tenant completion totals ("" = unattributed)
+    pub tenants: HashMap<String, TenantMetrics>,
+    /// rounds where the deadline-slack clamp tightened a granted SL
+    pub deadline_clamps: u64,
 }
 
 impl Default for EngineMetrics {
@@ -131,11 +264,15 @@ impl EngineMetrics {
             ttft: Welford::new(),
             itl: Welford::new(),
             requests: RingBuf::new(retention.max(1)),
+            classes: [ClassMetrics::default(); 3],
+            tenants: HashMap::new(),
+            deadline_clamps: 0,
         }
     }
 
-    /// Record a finished request: updates the all-time aggregates and the
-    /// bounded window together (always use this rather than pushing into
+    /// Record a finished request: updates the all-time aggregates, the
+    /// per-class/per-tenant rollups, and the bounded window together
+    /// (always use this rather than pushing into
     /// [`EngineMetrics::requests`] directly).
     pub fn record_request(&mut self, req: RequestMetrics) {
         self.completed += 1;
@@ -145,7 +282,39 @@ impl EngineMetrics {
         if req.output_tokens > 1 {
             self.itl.push(req.itl);
         }
+        let cls = &mut self.classes[req.class.rank()];
+        cls.completed += 1;
+        cls.completed_tokens += req.output_tokens as u64;
+        if let Some(met) = req.deadline_met {
+            cls.with_deadline += 1;
+            if met {
+                cls.deadline_met += 1;
+            }
+        }
+        let tenant = self.tenants.entry(req.tenant.clone()).or_default();
+        tenant.completed += 1;
+        tenant.completed_tokens += req.output_tokens as u64;
         self.requests.push(req);
+    }
+
+    /// Record the granted SL of one sequence-round for a class (called by
+    /// the apply stage; feeds the per-class `mean_sl` report columns).
+    pub fn record_class_sl(&mut self, class: PriorityClass, sl: usize) {
+        let cls = &mut self.classes[class.rank()];
+        cls.sl_sum += sl as u64;
+        cls.sl_rounds += 1;
+    }
+
+    /// Overall SLO attainment across classes: fraction of deadline-carrying
+    /// completions that met their deadline (1.0 when none carried one).
+    pub fn slo_attainment(&self) -> f64 {
+        let with: u64 = self.classes.iter().map(|c| c.with_deadline).sum();
+        let met: u64 = self.classes.iter().map(|c| c.deadline_met).sum();
+        if with == 0 {
+            1.0
+        } else {
+            met as f64 / with as f64
+        }
     }
 
     /// Block efficiency: mean tokens emitted per sequence per target
@@ -229,6 +398,11 @@ impl EngineMetrics {
         self.latency.merge(&other.latency);
         self.ttft.merge(&other.ttft);
         self.itl.merge(&other.itl);
+        for (c, o) in self.classes.iter_mut().zip(&other.classes) {
+            c.merge(o);
+        }
+        merge_tenants(&mut self.tenants, &other.tenants);
+        self.deadline_clamps += other.deadline_clamps;
         for r in other.requests.iter() {
             self.requests.push(r.clone());
         }
@@ -278,6 +452,9 @@ impl EngineMetrics {
                 .collect(),
             window_len: self.requests.len() as u64,
             window_evicted: self.requests.evicted(),
+            classes: self.classes,
+            tenants: self.tenants.clone(),
+            deadline_clamps: self.deadline_clamps,
         }
     }
 
@@ -306,6 +483,10 @@ impl EngineMetrics {
             .set("requests", self.completed)
             .set("window_requests", self.requests.len() as u64)
             .set("window_evicted", self.requests.evicted())
+            .set("slo_attainment", self.slo_attainment())
+            .set("deadline_clamps", self.deadline_clamps)
+            .set("slo", classes_json(&self.classes))
+            .set("tenants", tenants_json(&self.tenants, self.busy_time))
     }
 }
 
@@ -378,9 +559,27 @@ pub struct MetricsSnapshot {
     pub window_len: u64,
     /// Requests evicted from the retention window so far.
     pub window_evicted: u64,
+    /// Per-priority-class rollups (indexed by [`PriorityClass::rank`]).
+    pub classes: [ClassMetrics; 3],
+    /// Per-tenant completion totals ("" = unattributed).
+    pub tenants: HashMap<String, TenantMetrics>,
+    /// Rounds where the deadline-slack clamp tightened a granted SL.
+    pub deadline_clamps: u64,
 }
 
 impl MetricsSnapshot {
+    /// Overall SLO attainment across classes (1.0 when no request carried
+    /// a deadline; see [`ClassMetrics::attainment`]).
+    pub fn slo_attainment(&self) -> f64 {
+        let with: u64 = self.classes.iter().map(|c| c.with_deadline).sum();
+        let met: u64 = self.classes.iter().map(|c| c.deadline_met).sum();
+        if with == 0 {
+            1.0
+        } else {
+            met as f64 / with as f64
+        }
+    }
+
     /// Block efficiency: mean tokens emitted per sequence per target
     /// invocation (the paper's BE).
     pub fn block_efficiency(&self) -> f64 {
@@ -466,6 +665,11 @@ impl MetricsSnapshot {
         merge_quantiles(&mut self.ttft_quantiles, wa, &other.ttft_quantiles, wb);
         self.window_len += other.window_len;
         self.window_evicted += other.window_evicted;
+        for (c, o) in self.classes.iter_mut().zip(&other.classes) {
+            c.merge(o);
+        }
+        merge_tenants(&mut self.tenants, &other.tenants);
+        self.deadline_clamps += other.deadline_clamps;
     }
 
     /// Serialize with the same core keys as [`EngineMetrics::to_json`] plus
@@ -492,7 +696,11 @@ impl MetricsSnapshot {
             .set("busy_time", self.busy_time)
             .set("requests", self.completed)
             .set("window_requests", self.window_len)
-            .set("window_evicted", self.window_evicted);
+            .set("window_evicted", self.window_evicted)
+            .set("slo_attainment", self.slo_attainment())
+            .set("deadline_clamps", self.deadline_clamps)
+            .set("slo", classes_json(&self.classes))
+            .set("tenants", tenants_json(&self.tenants, self.busy_time));
         for &(q, v) in &self.latency_quantiles {
             j = j.set(&quantile_key("latency", q), v);
         }
@@ -537,7 +745,24 @@ mod tests {
             drafted: 30,
             accepted: 20,
             preemptions: 0,
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_met: None,
         }
+    }
+
+    fn classed_req(
+        lat: f64,
+        toks: usize,
+        tenant: &str,
+        class: PriorityClass,
+        deadline_met: Option<bool>,
+    ) -> RequestMetrics {
+        let mut r = req(lat, toks);
+        r.tenant = tenant.to_string();
+        r.class = class;
+        r.deadline_met = deadline_met;
+        r
     }
 
     #[test]
@@ -693,6 +918,66 @@ mod tests {
         // max(p50_a = 2.0, p50_b = 5.0) = 5.0, never under the worst replica
         let p50 = sa.latency_quantiles.iter().find(|(q, _)| *q == 0.5).unwrap().1;
         assert!((p50 - 5.0).abs() < 1e-9, "p50 {p50}");
+    }
+
+    #[test]
+    fn class_rollups_track_attainment_and_tenants() {
+        let mut m = EngineMetrics::default();
+        m.busy_time = 10.0;
+        m.record_request(classed_req(0.1, 10, "a", PriorityClass::Interactive, Some(true)));
+        m.record_request(classed_req(0.5, 10, "a", PriorityClass::Interactive, Some(false)));
+        m.record_request(classed_req(2.0, 40, "b", PriorityClass::BestEffort, None));
+        let icls = &m.classes[PriorityClass::Interactive.rank()];
+        assert_eq!(icls.completed, 2);
+        assert_eq!(icls.with_deadline, 2);
+        assert_eq!(icls.deadline_met, 1);
+        assert!((icls.attainment() - 0.5).abs() < 1e-12);
+        // best-effort carried no deadline: vacuously attained
+        let be = &m.classes[PriorityClass::BestEffort.rank()];
+        assert_eq!(be.attainment(), 1.0);
+        assert!((m.slo_attainment() - 0.5).abs() < 1e-12);
+        assert_eq!(m.tenants["a"].completed, 2);
+        assert_eq!(m.tenants["b"].completed_tokens, 40);
+        m.record_class_sl(PriorityClass::Interactive, 2);
+        m.record_class_sl(PriorityClass::Interactive, 4);
+        assert!((m.classes[0].mean_sl() - 3.0).abs() < 1e-12);
+        let js = m.to_json().to_string();
+        assert!(js.contains("\"slo_attainment\":"), "{js}");
+        assert!(js.contains("\"interactive\":"), "{js}");
+        assert!(js.contains("\"best-effort\":"), "{js}");
+        assert!(js.contains("\"tenants\":"), "{js}");
+        assert!(js.contains("\"deadline_clamps\":"), "{js}");
+        assert!(js.contains("\"goodput\":"), "{js}");
+    }
+
+    #[test]
+    fn class_and_tenant_rollups_merge_across_replicas() {
+        let mut a = EngineMetrics::default();
+        a.deadline_clamps = 2;
+        a.record_request(classed_req(0.1, 5, "t", PriorityClass::Interactive, Some(true)));
+        let mut b = EngineMetrics::default();
+        b.deadline_clamps = 3;
+        b.record_request(classed_req(0.2, 7, "t", PriorityClass::Interactive, Some(false)));
+        b.record_request(classed_req(0.9, 9, "u", PriorityClass::Standard, None));
+        // both the in-process merge and the snapshot (wire) merge agree
+        let mut sa = a.snapshot(DEFAULT_QUANTILES);
+        sa.merge(&b.snapshot(DEFAULT_QUANTILES));
+        a.merge(&b);
+        for m in [
+            (a.classes, a.tenants.clone(), a.deadline_clamps),
+            (sa.classes, sa.tenants.clone(), sa.deadline_clamps),
+        ] {
+            let (classes, tenants, clamps) = m;
+            assert_eq!(classes[0].completed, 2);
+            assert_eq!(classes[0].with_deadline, 2);
+            assert_eq!(classes[0].deadline_met, 1);
+            assert_eq!(classes[1].completed, 1);
+            assert_eq!(tenants["t"].completed, 2);
+            assert_eq!(tenants["t"].completed_tokens, 12);
+            assert_eq!(tenants["u"].completed, 1);
+            assert_eq!(clamps, 5);
+        }
+        assert!((sa.slo_attainment() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -25,6 +25,65 @@ impl Default for SamplingParams {
     }
 }
 
+/// Scheduling priority class of a request (multi-tenant serving).
+///
+/// Classes order strict-priority admission: interactive ahead of standard
+/// ahead of best-effort, with an aging escape hatch in the scheduler so
+/// best-effort work is never starved (see
+/// [`crate::engine::scheduler::Scheduler::admit_prioritized`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PriorityClass {
+    /// Latency-sensitive interactive traffic: admitted first and allowed
+    /// to preempt running best-effort work under pressure.
+    Interactive,
+    /// The default class — FCFS among itself, behind interactive.
+    #[default]
+    Standard,
+    /// Throughput batch work: admitted when higher classes leave room,
+    /// protected from starvation by queue-age escalation.
+    BestEffort,
+}
+
+impl PriorityClass {
+    /// All classes in admission-rank order (interactive first).
+    pub const ALL: [PriorityClass; 3] = [
+        PriorityClass::Interactive,
+        PriorityClass::Standard,
+        PriorityClass::BestEffort,
+    ];
+
+    /// Parse CLI/header shorthand: `interactive`, `standard`, or
+    /// `best-effort` (also `besteffort`/`batch`).
+    pub fn parse(s: &str) -> Option<PriorityClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Some(PriorityClass::Interactive),
+            "standard" | "default" => Some(PriorityClass::Standard),
+            "best-effort" | "besteffort" | "best_effort" | "batch" => {
+                Some(PriorityClass::BestEffort)
+            }
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase wire/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PriorityClass::Interactive => "interactive",
+            PriorityClass::Standard => "standard",
+            PriorityClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// Admission rank: lower admits first (0 = interactive).
+    pub fn rank(&self) -> usize {
+        match self {
+            PriorityClass::Interactive => 0,
+            PriorityClass::Standard => 1,
+            PriorityClass::BestEffort => 2,
+        }
+    }
+}
+
 /// An inference request submitted to the engine.
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -40,6 +99,15 @@ pub struct Request {
     /// migration (engine seconds).  The engine backdates `arrival` by this
     /// much at submit so latency/TTFT keep counting the victim-side wait.
     pub waited: f64,
+    /// Tenant identifier for per-tenant accounting and rate limiting
+    /// (empty = unattributed; the pre-tenancy wire format).
+    pub tenant: String,
+    /// Scheduling priority class (defaults to [`PriorityClass::Standard`]).
+    pub class: PriorityClass,
+    /// Optional end-to-end latency deadline in milliseconds, measured from
+    /// arrival.  Drives per-class SLO-attainment metrics and the
+    /// deadline-slack SL clamp ([`crate::spec::cap::apply_deadline_slack`]).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Request {
@@ -51,6 +119,9 @@ impl Request {
             params,
             arrival: 0.0,
             waited: 0.0,
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
         }
     }
 
@@ -69,6 +140,20 @@ impl Request {
     /// Builder-style temperature override.
     pub fn with_temperature(mut self, t: f64) -> Request {
         self.params.temperature = t;
+        self
+    }
+
+    /// Builder-style tenancy attribution: tenant name, priority class, and
+    /// optional deadline in one call (the serving/front-end path).
+    pub fn with_tenancy(
+        mut self,
+        tenant: &str,
+        class: PriorityClass,
+        deadline_ms: Option<u64>,
+    ) -> Request {
+        self.tenant = tenant.to_string();
+        self.class = class;
+        self.deadline_ms = deadline_ms;
         self
     }
 }
@@ -119,6 +204,12 @@ pub struct SeqState {
     pub rounds: usize,
     /// number of times preempted (KV pressure)
     pub preemptions: usize,
+    /// Tenant identifier inherited from the request ("" = unattributed).
+    pub tenant: String,
+    /// Scheduling priority class inherited from the request.
+    pub class: PriorityClass,
+    /// Optional end-to-end deadline in milliseconds from arrival.
+    pub deadline_ms: Option<u64>,
 }
 
 impl SeqState {
@@ -135,7 +226,22 @@ impl SeqState {
             first_token_at: None,
             rounds: 0,
             preemptions: 0,
+            tenant: req.tenant,
+            class: req.class,
+            deadline_ms: req.deadline_ms,
         }
+    }
+
+    /// Fraction of the deadline budget still unspent at engine time `now`:
+    /// `1.0` = the whole budget remains, `0.0` or negative = the deadline
+    /// has passed.  `None` when the request carries no deadline — the
+    /// deadline-slack SL clamp is a strict no-op for such sequences.
+    pub fn deadline_slack_frac(&self, now: f64) -> Option<f64> {
+        self.deadline_ms.map(|d| {
+            let total = (d as f64 / 1000.0).max(1e-9);
+            let elapsed = (now - self.arrival).max(0.0);
+            1.0 - elapsed / total
+        })
     }
 
     /// Output tokens generated so far.
@@ -198,9 +304,23 @@ pub struct FinishedRequest {
     pub accepted: u64,
     /// Times the request was preempted under KV pressure.
     pub preemptions: usize,
+    /// Tenant identifier inherited from the request ("" = unattributed).
+    pub tenant: String,
+    /// Scheduling priority class inherited from the request.
+    pub class: PriorityClass,
+    /// Optional end-to-end deadline in milliseconds from arrival.
+    pub deadline_ms: Option<u64>,
 }
 
 impl FinishedRequest {
+    /// Whether the request finished within its deadline; `None` when it
+    /// carried no deadline (such requests never count against SLO
+    /// attainment).
+    pub fn deadline_met(&self) -> Option<bool> {
+        self.deadline_ms
+            .map(|d| self.latency() * 1000.0 <= d as f64)
+    }
+
     /// End-to-end latency in engine seconds.
     pub fn latency(&self) -> f64 {
         self.finished_at - self.arrival
@@ -291,6 +411,9 @@ mod tests {
             drafted: 10,
             accepted: 7,
             preemptions: 0,
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
         };
         assert!((f.latency() - 3.5).abs() < 1e-12);
         assert!((f.ttft() - 0.5).abs() < 1e-12);
@@ -312,8 +435,69 @@ mod tests {
             drafted: 0,
             accepted: 0,
             preemptions: 0,
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
         };
         assert_eq!(f.itl(), 0.0);
+    }
+
+    #[test]
+    fn priority_class_parse_roundtrip() {
+        for c in PriorityClass::ALL {
+            assert_eq!(PriorityClass::parse(c.name()), Some(c));
+        }
+        assert_eq!(
+            PriorityClass::parse("BATCH"),
+            Some(PriorityClass::BestEffort)
+        );
+        assert_eq!(PriorityClass::parse("nope"), None);
+        assert_eq!(PriorityClass::default(), PriorityClass::Standard);
+        assert_eq!(PriorityClass::Interactive.rank(), 0);
+        assert_eq!(PriorityClass::BestEffort.rank(), 2);
+    }
+
+    #[test]
+    fn tenancy_rides_request_to_seqstate_and_finish() {
+        let req = Request::text(4, "hello", 8).with_tenancy(
+            "acme",
+            PriorityClass::Interactive,
+            Some(250),
+        );
+        let s = SeqState::from_request(req);
+        assert_eq!(s.tenant, "acme");
+        assert_eq!(s.class, PriorityClass::Interactive);
+        assert_eq!(s.deadline_ms, Some(250));
+        // half the 250 ms budget spent at t = 0.125 (arrival 0)
+        let frac = s.deadline_slack_frac(0.125).unwrap();
+        assert!((frac - 0.5).abs() < 1e-9, "{frac}");
+        assert!(s.deadline_slack_frac(1.0).unwrap() < 0.0, "past deadline");
+        let plain = SeqState::from_request(Request::text(5, "x", 4));
+        assert_eq!(plain.deadline_slack_frac(100.0), None);
+    }
+
+    #[test]
+    fn deadline_met_accounting() {
+        let mut f = FinishedRequest {
+            id: 1,
+            output: vec![104],
+            reason: FinishReason::MaxTokens,
+            arrival: 0.0,
+            finished_at: 0.2,
+            first_token_at: 0.1,
+            rounds: 1,
+            drafted: 0,
+            accepted: 0,
+            preemptions: 0,
+            tenant: "t".to_string(),
+            class: PriorityClass::Interactive,
+            deadline_ms: Some(250),
+        };
+        assert_eq!(f.deadline_met(), Some(true)); // 200 ms <= 250 ms
+        f.finished_at = 0.3;
+        assert_eq!(f.deadline_met(), Some(false));
+        f.deadline_ms = None;
+        assert_eq!(f.deadline_met(), None);
     }
 
     #[test]

@@ -11,7 +11,23 @@
 use std::collections::VecDeque;
 
 use super::kv_cache::KvCache;
-use super::request::SeqState;
+use super::request::{PriorityClass, SeqState};
+
+/// Queue age (engine seconds) after which a waiting sequence is escalated
+/// one priority rank — the aging escape hatch that keeps strict-priority
+/// admission from starving best-effort work: after at most
+/// `2 * AGING_ESCALATE_S` of waiting, a best-effort sequence competes at
+/// interactive rank and wins its FCFS tie-break (older queue position).
+pub const AGING_ESCALATE_S: f64 = 30.0;
+
+/// Effective admission rank of a waiting sequence at engine time `now`:
+/// the class rank minus one rank per [`AGING_ESCALATE_S`] of queue wait
+/// (saturating at interactive rank 0).
+pub fn effective_rank(seq: &SeqState, now: f64) -> usize {
+    let waited = (now - seq.arrival).max(0.0);
+    let boost = (waited / AGING_ESCALATE_S) as usize;
+    seq.class.rank().saturating_sub(boost)
+}
 
 /// Scheduling decision for one step.
 #[derive(Clone, Debug, Default)]
@@ -79,6 +95,71 @@ impl Scheduler {
             admitted += 1;
         }
         admitted
+    }
+
+    /// Priority-aware admission: strict-priority by [`effective_rank`]
+    /// (class rank with queue-age escalation), FCFS within a rank.  When
+    /// every waiting sequence shares one class — the entire pre-tenancy
+    /// workload — this delegates to [`Scheduler::admit_bounded`] and is
+    /// bit-identical to plain FCFS, because equal ranks tie-break on queue
+    /// position.  Like FCFS, the best candidate blocks head-of-line: a
+    /// lower-priority follower is never admitted past a blocked leader, so
+    /// KV pressure cannot invert the priority order.
+    pub fn admit_prioritized(
+        &self,
+        waiting: &mut VecDeque<SeqState>,
+        running: &mut Vec<SeqState>,
+        kv: &mut KvCache,
+        limit: usize,
+        now: f64,
+    ) -> usize {
+        let uniform = waiting
+            .iter()
+            .all(|s| s.class == waiting.front().map_or(s.class, |f| f.class));
+        if uniform {
+            return self.admit_bounded(waiting, running, kv, limit);
+        }
+        let bound = self.max_batch.min(limit);
+        let mut admitted = 0;
+        while running.len() < bound {
+            let Some(best) = (0..waiting.len())
+                .min_by_key(|&i| (effective_rank(&waiting[i], now), i))
+            else {
+                break;
+            };
+            let seq = &waiting[best];
+            let need = Self::lookahead_tokens(seq.tokens.len(), 1);
+            if kv.ensure(seq.id, need).is_err() {
+                break; // priority head-of-line: don't skip past the best
+            }
+            let seq = waiting.remove(best).unwrap();
+            running.push(seq);
+            admitted += 1;
+        }
+        admitted
+    }
+
+    /// Preempt the most recently admitted best-effort sequence to make
+    /// room for a blocked higher-class arrival (tenancy pressure valve —
+    /// distinct from the KV-pressure preemption in
+    /// [`Scheduler::reserve_lookahead`]).  The victim keeps its arrival
+    /// time and accrued state and re-queues at the front, so its `waited`
+    /// accounting keeps counting.  Returns the victim id, if any.
+    pub fn preempt_best_effort(
+        &self,
+        running: &mut Vec<SeqState>,
+        kv: &mut KvCache,
+        waiting: &mut VecDeque<SeqState>,
+    ) -> Option<u64> {
+        let idx = running
+            .iter()
+            .rposition(|s| s.class == PriorityClass::BestEffort)?;
+        let mut victim = running.remove(idx);
+        kv.release(victim.id);
+        victim.preemptions += 1;
+        let id = victim.id;
+        waiting.push_front(victim);
+        Some(id)
     }
 
     /// Pre-map look-ahead slots for the granted SLs; preempts victims (from
@@ -352,6 +433,109 @@ mod tests {
         assert!(out.preempted.is_empty());
         assert!(out.scheduled.is_empty());
         assert_eq!(kv.used_blocks(), 0);
+    }
+
+    fn classed(id: u64, prompt_len: usize, class: PriorityClass) -> SeqState {
+        let mut s = seq(id, prompt_len);
+        s.class = class;
+        s
+    }
+
+    #[test]
+    fn uniform_class_prioritized_admission_matches_fcfs() {
+        let s = Scheduler::new(3);
+        let build = || -> VecDeque<SeqState> { (0..5).map(|i| seq(i, 8)).collect() };
+        let mut fcfs_waiting = build();
+        let mut fcfs_running = Vec::new();
+        let mut fcfs_kv = KvCache::new(64, 16);
+        let a = s.admit_bounded(&mut fcfs_waiting, &mut fcfs_running, &mut fcfs_kv, 8);
+        let mut pri_waiting = build();
+        let mut pri_running = Vec::new();
+        let mut pri_kv = KvCache::new(64, 16);
+        let b = s.admit_prioritized(&mut pri_waiting, &mut pri_running, &mut pri_kv, 8, 0.0);
+        assert_eq!(a, b);
+        assert_eq!(
+            fcfs_running.iter().map(|q| q.id).collect::<Vec<_>>(),
+            pri_running.iter().map(|q| q.id).collect::<Vec<_>>(),
+        );
+        assert_eq!(
+            fcfs_waiting.iter().map(|q| q.id).collect::<Vec<_>>(),
+            pri_waiting.iter().map(|q| q.id).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn prioritized_admission_orders_by_class_then_queue_position() {
+        let s = Scheduler::new(2);
+        let mut waiting: VecDeque<SeqState> = [
+            classed(1, 8, PriorityClass::BestEffort),
+            classed(2, 8, PriorityClass::Standard),
+            classed(3, 8, PriorityClass::Interactive),
+            classed(4, 8, PriorityClass::Interactive),
+        ]
+        .into_iter()
+        .collect();
+        let mut running = Vec::new();
+        let mut kv = KvCache::new(64, 16);
+        let n = s.admit_prioritized(&mut waiting, &mut running, &mut kv, 8, 0.0);
+        assert_eq!(n, 2);
+        assert_eq!(
+            running.iter().map(|q| q.id).collect::<Vec<_>>(),
+            vec![3, 4],
+            "interactive admits first, FCFS within the class"
+        );
+        assert_eq!(
+            waiting.iter().map(|q| q.id).collect::<Vec<_>>(),
+            vec![1, 2],
+            "passed-over sequences keep their queue order"
+        );
+    }
+
+    #[test]
+    fn aging_escalates_starved_best_effort_to_the_front() {
+        let s = Scheduler::new(1);
+        let mut aged = classed(1, 8, PriorityClass::BestEffort);
+        aged.arrival = 0.0;
+        let mut fresh = classed(2, 8, PriorityClass::Interactive);
+        fresh.arrival = 2.0 * AGING_ESCALATE_S;
+        let mut waiting: VecDeque<SeqState> = [aged, fresh].into_iter().collect();
+        let mut running = Vec::new();
+        let mut kv = KvCache::new(64, 16);
+        // at now = 2 * AGING_ESCALATE_S the best-effort sequence has aged
+        // two ranks (-> interactive) and wins the tie on queue position
+        let now = 2.0 * AGING_ESCALATE_S;
+        let n = s.admit_prioritized(&mut waiting, &mut running, &mut kv, 8, now);
+        assert_eq!(n, 1);
+        assert_eq!(running[0].id, 1, "aged best-effort admitted first");
+    }
+
+    #[test]
+    fn preempt_best_effort_takes_youngest_and_requeues_front() {
+        let s = Scheduler::new(4);
+        let mut running = vec![
+            classed(1, 8, PriorityClass::BestEffort),
+            classed(2, 8, PriorityClass::Interactive),
+            classed(3, 8, PriorityClass::BestEffort),
+        ];
+        let mut kv = KvCache::new(64, 16);
+        for sq in &running {
+            kv.ensure(sq.id, sq.tokens.len() + 1).unwrap();
+        }
+        let mut waiting: VecDeque<SeqState> =
+            [classed(9, 8, PriorityClass::Interactive)].into_iter().collect();
+        let victim = s.preempt_best_effort(&mut running, &mut kv, &mut waiting);
+        assert_eq!(victim, Some(3), "most recently admitted best-effort goes");
+        assert_eq!(
+            running.iter().map(|q| q.id).collect::<Vec<_>>(),
+            vec![1, 2],
+            "interactive work is never a victim"
+        );
+        assert_eq!(waiting.front().unwrap().id, 3);
+        assert_eq!(waiting.front().unwrap().preemptions, 1);
+        kv.check_invariants().unwrap();
+        // no best-effort left running -> nothing to preempt
+        running.retain(|q| q.class != PriorityClass::BestEffort);
+        assert_eq!(s.preempt_best_effort(&mut running, &mut kv, &mut waiting), None);
     }
 
     #[test]

@@ -127,13 +127,52 @@ impl Engine {
             Some(v) => (((self.cfg.max_batch as f64) * v.admit_frac) as usize).max(1),
             None => usize::MAX,
         };
-        let admitted = self.scheduler.admit_bounded(
+        let now = self.clock;
+        let mut admitted = self.scheduler.admit_prioritized(
             &mut self.waiting,
             &mut self.running,
             &mut self.kv,
             admit_limit,
+            now,
         );
+        // tenancy pressure valve: a blocked interactive (or deadline-tight)
+        // arrival evicts the most recently admitted best-effort sequence —
+        // one per step, so a single hot tenant cannot flush the whole
+        // batch.  Uniform-class traffic never takes this branch.
+        let mut priority_preempted: Vec<u64> = Vec::new();
+        let blocked_urgent = self.waiting.iter().any(|s| {
+            s.class == crate::engine::request::PriorityClass::Interactive
+                || s.deadline_slack_frac(now)
+                    .is_some_and(|f| f < cap::TIGHT_SLACK_FRAC)
+        });
+        if blocked_urgent
+            && self
+                .running
+                .iter()
+                .any(|s| s.class == crate::engine::request::PriorityClass::BestEffort)
+        {
+            if let Some(id) = self.scheduler.preempt_best_effort(
+                &mut self.running,
+                &mut self.kv,
+                &mut self.waiting,
+            ) {
+                priority_preempted.push(id);
+                admitted += self.scheduler.admit_prioritized(
+                    &mut self.waiting,
+                    &mut self.running,
+                    &mut self.kv,
+                    admit_limit,
+                    now,
+                );
+            }
+        }
         if self.running.is_empty() {
+            self.metrics.preemptions += priority_preempted.len() as u64;
+            // a priority eviction can momentarily empty the batch; its
+            // victim is back in the waiting queue and admissible next step
+            if !priority_preempted.is_empty() && !self.waiting.is_empty() {
+                return PlanOutcome::Retry;
+            }
             // nothing admitted and nothing running: either drained, or the
             // head-of-line prompt can never fit (caller's capacity problem)
             return PlanOutcome::Idle;
@@ -166,6 +205,18 @@ impl Engine {
             }
         }
         let max_sl_post_cap = sls.iter().copied().max().unwrap_or(0);
+        if speculative {
+            // deadline-slack clamp after cap_savings accounting: deadline
+            // conservatism is tracked separately (deadline_clamps), and a
+            // batch with no deadlines is bit-identical either way
+            let slack: Vec<Option<f64>> = self
+                .running
+                .iter()
+                .map(|s| s.deadline_slack_frac(now))
+                .collect();
+            let clamped = cap::apply_deadline_slack(&mut sls, &slack);
+            self.metrics.deadline_clamps += clamped as u64;
+        }
 
         // ---- KV look-ahead pre-mapping (may preempt) --------------------
         let outcome = self.scheduler.reserve_lookahead(
@@ -176,7 +227,8 @@ impl Engine {
         );
         debug_assert!(self.kv.check_invariants().is_ok());
         self.metrics.admitted += admitted as u64;
-        self.metrics.preemptions += outcome.preempted.len() as u64;
+        self.metrics.preemptions +=
+            (priority_preempted.len() + outcome.preempted.len()) as u64;
         if self.running.is_empty() {
             // the whole batch was preempted away; no round will run (and
             // no cap savings materialize)
@@ -189,6 +241,8 @@ impl Engine {
         let cap_savings = max_sl_pre_cap - max_sl_post_cap;
         self.metrics.cap_savings += cap_savings as u64;
 
+        let mut preempted = priority_preempted;
+        preempted.extend(outcome.preempted);
         PlanOutcome::Run(StepPlan {
             batch: self.running.len(),
             sls,
@@ -197,7 +251,7 @@ impl Engine {
             max_sl_pre_cap,
             cap_savings,
             admitted,
-            preempted: outcome.preempted,
+            preempted,
         })
     }
 
@@ -296,6 +350,7 @@ impl Engine {
             tokens += take;
             drafted += round.drafted[i];
             accepted += round.accepted[i];
+            self.metrics.record_class_sl(seq.class, plan.sls[i]);
             self.metrics.tokens_out += take as u64;
             self.metrics.drafted += round.drafted[i] as u64;
             self.metrics.accepted += round.accepted[i] as u64;
@@ -515,6 +570,105 @@ mod tests {
         assert_eq!(a.sls, b.sls);
         assert_eq!(a.admitted, b.admitted);
         assert_eq!(a.cap_savings, b.cap_savings);
+    }
+
+    #[test]
+    fn plan_preempts_best_effort_for_blocked_interactive() {
+        use crate::engine::request::PriorityClass;
+        let mut e = engine(EngineConfig {
+            max_batch: 2,
+            max_len: 512,
+            policy: SlPolicyKind::Static(4),
+            seed: 9,
+            ..Default::default()
+        });
+        for i in 0..2 {
+            e.submit(
+                Request::new(i, vec![65; 32], Default::default()).with_tenancy(
+                    "batch",
+                    PriorityClass::BestEffort,
+                    None,
+                ),
+            );
+        }
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        assert_eq!(plan.batch, 2);
+        assert!(plan.preempted.is_empty());
+        // a blocked interactive arrival evicts the youngest best-effort
+        e.submit(
+            Request::new(7, vec![65; 32], Default::default()).with_tenancy(
+                "chat",
+                PriorityClass::Interactive,
+                None,
+            ),
+        );
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        assert_eq!(plan.preempted, vec![1], "tail best-effort evicted");
+        assert!(e.running.iter().any(|s| s.id == 7), "interactive admitted");
+        assert!(
+            e.waiting.iter().any(|s| s.id == 1 && s.preemptions == 1),
+            "victim re-queued with its preemption counted"
+        );
+        // one eviction per step: the surviving best-effort keeps running
+        assert!(e.running.iter().any(|s| s.id == 0));
+        // and everything still completes
+        let done = e.run_to_completion();
+        assert_eq!(done.len(), 3);
+    }
+
+    #[test]
+    fn plan_clamps_sl_for_tight_deadlines() {
+        let mut e = default_engine(); // Static(4)
+        // slack request: full deadline budget remains
+        let slackful = Request::new(0, vec![65; 32], SamplingParams {
+            max_tokens: 32,
+            ..Default::default()
+        })
+        .with_tenancy("a", Default::default(), Some(10_000));
+        e.submit(slackful);
+        // tight request: 92% of its 1 s deadline already spent queueing
+        let mut tight = Request::new(1, vec![65; 32], SamplingParams {
+            max_tokens: 32,
+            ..Default::default()
+        })
+        .with_tenancy("b", Default::default(), Some(1_000));
+        tight.waited = 0.92;
+        e.submit(tight);
+        let PlanOutcome::Run(plan) = e.plan() else {
+            panic!("expected runnable plan")
+        };
+        assert_eq!(plan.sls[1], 1, "critical slack clamps to SL 1: {:?}", plan.sls);
+        assert!(plan.sls[0] > 1, "slack request keeps its SL: {:?}", plan.sls);
+        assert_eq!(e.metrics.deadline_clamps, 1);
+    }
+
+    #[test]
+    fn tenant_attribution_alone_plans_identically() {
+        let mut plain = default_engine();
+        let mut tagged = default_engine();
+        submit_n(&mut plain, 4, 32);
+        for i in 0..4 {
+            tagged.submit(
+                Request::new(i as u64, vec![65; 32], SamplingParams {
+                    max_tokens: 32,
+                    ..Default::default()
+                })
+                .with_tenancy("acme", Default::default(), None),
+            );
+        }
+        let (PlanOutcome::Run(a), PlanOutcome::Run(b)) = (plain.plan(), tagged.plan())
+        else {
+            panic!("expected runnable plans")
+        };
+        assert_eq!(a.sls, b.sls);
+        assert_eq!(a.admitted, b.admitted);
+        assert_eq!(a.preempted, b.preempted);
+        assert_eq!(plain.metrics.deadline_clamps, 0);
+        assert_eq!(tagged.metrics.deadline_clamps, 0);
     }
 
     // ---- execute --------------------------------------------------------

@@ -194,6 +194,11 @@ pub struct GridSpec {
     /// Closed-loop speculation control applied to every cell
     /// (`--spec-control`; see [`crate::spec::control`]).
     pub control: SpecControl,
+    /// Tenancy axis: tenant-mix specs ([`crate::workload::TenantMix`]),
+    /// one cell per entry.  `"none"` (the default single entry) runs the
+    /// cell without tenancy attribution — byte-identical to the
+    /// pre-tenancy grid.
+    pub tenants: Vec<String>,
     /// Sampling temperature.
     pub temperature: f64,
     /// Seed for model, engine, and workload streams.
@@ -230,6 +235,7 @@ impl GridSpec {
             steal: false,
             arrivals: vec![ArrivalSpec::Closed],
             control: SpecControl::Off,
+            tenants: vec!["none".to_string()],
             temperature: 0.0,
             seed: 0,
             max_prompt: 96,
@@ -264,22 +270,25 @@ impl GridSpec {
                 for &d in &self.divergences {
                     for &b in &self.batches {
                         for &a in &self.arrivals {
-                            out.push(CellSpec {
-                                workload: w.clone(),
-                                policy: p.clone(),
-                                divergence: d,
-                                batch: b,
-                                requests: self.requests,
-                                replicas: self.replicas,
-                                route: self.route,
-                                steal: self.steal,
-                                arrivals: a,
-                                control: self.control,
-                                temperature: self.temperature,
-                                seed: self.seed,
-                                max_prompt: self.max_prompt,
-                                max_output: self.max_output,
-                            });
+                            for t in &self.tenants {
+                                out.push(CellSpec {
+                                    workload: w.clone(),
+                                    policy: p.clone(),
+                                    divergence: d,
+                                    batch: b,
+                                    requests: self.requests,
+                                    replicas: self.replicas,
+                                    route: self.route,
+                                    steal: self.steal,
+                                    arrivals: a,
+                                    control: self.control,
+                                    tenants: t.clone(),
+                                    temperature: self.temperature,
+                                    seed: self.seed,
+                                    max_prompt: self.max_prompt,
+                                    max_output: self.max_output,
+                                });
+                            }
                         }
                     }
                 }
@@ -307,6 +316,7 @@ impl GridSpec {
                 self.arrivals.iter().map(|a| a.label()).collect::<Vec<_>>(),
             )
             .set("control", self.control.name())
+            .set("tenants", self.tenants.clone())
             .set("temperature", self.temperature)
             .set("seed", self.seed)
             .set("max_prompt", self.max_prompt)
@@ -337,6 +347,8 @@ pub struct CellSpec {
     pub arrivals: ArrivalSpec,
     /// Closed-loop speculation control for this cell.
     pub control: SpecControl,
+    /// Tenant-mix spec stamped over the workload (`"none"` = no tenancy).
+    pub tenants: String,
     /// Sampling temperature.
     pub temperature: f64,
     /// Seed for model/engine/workload streams.
@@ -349,8 +361,9 @@ pub struct CellSpec {
 
 impl CellSpec {
     /// Progress-line label, e.g. `cnndm dsde+mean a1.00 b8`; non-default
-    /// arrival overlays and speculation control append their own tags
-    /// (`... poisson:8 ctl:goodput`), so ramp cells stay distinguishable.
+    /// arrival overlays, speculation control, and tenant mixes append
+    /// their own tags (`... poisson:8 ctl:goodput tn:interactive@400`),
+    /// so ramp cells stay distinguishable.
     pub fn label(&self) -> String {
         let mut s = format!(
             "{} {} a{:.2} b{}",
@@ -366,6 +379,10 @@ impl CellSpec {
         if self.control != SpecControl::Off {
             s.push_str(" ctl:");
             s.push_str(self.control.name());
+        }
+        if self.tenants != "none" {
+            s.push_str(" tn:");
+            s.push_str(&self.tenants);
         }
         s
     }
@@ -500,6 +517,29 @@ mod tests {
         assert!(names.len() >= 3, "at least three SL policies: {names:?}");
         assert!(g.cells().len() <= 16, "smoke stays tiny");
         assert!(g.max_output <= 32, "smoke cells exercise tight clamps");
+    }
+
+    #[test]
+    fn tenant_axis_multiplies_cells_and_tags_labels() {
+        let mut g = GridSpec::default_grid().smoke();
+        let base = g.cells().len();
+        // the default single "none" entry leaves count and labels untouched
+        assert_eq!(g.tenants, vec!["none".to_string()]);
+        assert!(!g.cells()[0].label().contains("tn:"));
+        g.tenants = vec![
+            "none".to_string(),
+            "interactive@400=1+best-effort=1".to_string(),
+        ];
+        let cells = g.cells();
+        assert_eq!(cells.len(), base * 2, "tenants are a cell axis");
+        let tagged: Vec<&CellSpec> =
+            cells.iter().filter(|c| c.tenants != "none").collect();
+        assert_eq!(tagged.len(), base);
+        assert!(
+            tagged[0].label().contains("tn:interactive@400"),
+            "{}",
+            tagged[0].label()
+        );
     }
 
     #[test]

@@ -13,8 +13,9 @@ use crate::util::json::Json;
 pub const REPORT_SCHEMA: &str = "dsde-eval-report-v1";
 
 /// String-typed keys every cell row must carry.
-const CELL_STR_KEYS: &[&str] =
-    &["workload", "policy", "cap", "route", "arrivals", "control"];
+const CELL_STR_KEYS: &[&str] = &[
+    "workload", "policy", "cap", "route", "arrivals", "control", "tenants",
+];
 
 /// Number-typed keys every cell row must carry.
 const CELL_NUM_KEYS: &[&str] = &[
@@ -40,6 +41,11 @@ const CELL_NUM_KEYS: &[&str] = &[
     "preemptions",
     "sl_cap_final",
     "control_adjustments",
+    "slo_attainment",
+    "deadline_clamps",
+    "sl_mean_interactive",
+    "sl_mean_standard",
+    "sl_mean_best_effort",
     "wall_s",
 ];
 
@@ -179,6 +185,26 @@ mod tests {
         assert!(err.contains("mean_latency"), "{err}");
         // empty document
         assert!(GridReport::validate(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn tenanted_report_validates_and_carries_slo_columns() {
+        let mut grid = GridSpec::default_grid().smoke();
+        grid.workloads = vec!["cnndm".to_string()];
+        grid.policies.truncate(1);
+        grid.requests = 4;
+        grid.tenants = vec!["interactive@60000=1+best-effort=1".to_string()];
+        let report = run_grid(&grid, |_, _, _| {}).unwrap();
+        let parsed = Json::parse(&report.to_json().to_string()).unwrap();
+        GridReport::validate(&parsed).expect("tenanted report must validate");
+        let cell = &parsed.get("cells").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            cell.get("tenants").unwrap().as_str().unwrap(),
+            "interactive@60000=1+best-effort=1"
+        );
+        let att = cell.get("slo_attainment").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&att), "attainment {att}");
+        assert!(cell.get("sl_mean_interactive").unwrap().as_f64().is_some());
     }
 
     #[test]

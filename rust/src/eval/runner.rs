@@ -30,8 +30,10 @@ use crate::server::router::{EngineRouter, RouterOptions};
 use crate::sim::regime::DatasetProfile;
 use crate::spec::control::{ControlCell, ControlConfig, Controller, ReplicaSample};
 use crate::util::json::Json;
+use crate::engine::request::PriorityClass;
 use crate::workload::{
-    BurstyArrivals, Dataset, MixedWorkloadGen, PoissonArrivals, RequestSource, WorkloadGen,
+    BurstyArrivals, Dataset, MixedWorkloadGen, PoissonArrivals, RequestSource, TenantMix,
+    WorkloadGen,
 };
 
 /// One executed cell: its spec plus the metrics it produced.
@@ -97,6 +99,21 @@ impl CellResult {
                 self.cap_trajectory.last().copied().unwrap_or(0),
             )
             .set("control_adjustments", self.control_adjustments)
+            .set("tenants", self.cell.tenants.clone())
+            .set("slo_attainment", m.slo_attainment())
+            .set("deadline_clamps", m.deadline_clamps)
+            .set(
+                "sl_mean_interactive",
+                m.classes[PriorityClass::Interactive.rank()].mean_sl(),
+            )
+            .set(
+                "sl_mean_standard",
+                m.classes[PriorityClass::Standard.rank()].mean_sl(),
+            )
+            .set(
+                "sl_mean_best_effort",
+                m.classes[PriorityClass::BestEffort.rank()].mean_sl(),
+            )
             .set("wall_s", self.wall_s)
     }
 }
@@ -350,7 +367,15 @@ pub fn run_cell(cell: &CellSpec) -> Result<CellResult> {
         .ok_or_else(|| anyhow!("unknown workload {:?}", cell.workload))?;
     let spec = cell.experiment();
     let mut source = source_for(cell)?;
-    let reqs = source.batch(cell.requests);
+    let mut reqs = source.batch(cell.requests);
+    // stamp tenancy over the generated stream: attribution only, so the
+    // workload bytes stay identical to the untenanted cell
+    if let Some(mut mix) = TenantMix::parse_opt(&cell.tenants, cell.seed).map_err(|e| anyhow!(e))?
+    {
+        for r in &mut reqs {
+            mix.stamp(r);
+        }
+    }
     let (metrics, cap_trajectory, control_adjustments) = match (cell.arrivals, cell.replicas)
     {
         (ArrivalSpec::Closed, 0 | 1) => run_closed_single(cell, &spec, profile, reqs)?,
@@ -403,6 +428,7 @@ mod tests {
             steal: false,
             arrivals: ArrivalSpec::Closed,
             control: SpecControl::Off,
+            tenants: "none".to_string(),
             temperature: 0.0,
             seed: 3,
             max_prompt: 32,
@@ -562,6 +588,57 @@ mod tests {
         let j = r.to_json().to_string();
         assert!(j.contains("\"control\":\"off\""), "{j}");
         assert!(j.contains("\"sl_cap_final\":0"), "{j}");
+    }
+
+    #[test]
+    fn untenanted_cell_reports_neutral_slo_columns() {
+        let r = run_cell(&tiny_cell("cnndm")).unwrap();
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"tenants\":\"none\""), "{j}");
+        assert!(j.contains("\"slo_attainment\":1"), "{j}");
+        assert!(j.contains("\"deadline_clamps\":0"), "{j}");
+        assert!(j.contains("\"sl_mean_interactive\":0"), "{j}");
+        assert!(j.contains("\"sl_mean_best_effort\":0"), "{j}");
+    }
+
+    #[test]
+    fn tenanted_cell_attributes_and_reports_slo_columns() {
+        let mut cell = tiny_cell("cnndm");
+        cell.tenants = "interactive@60000=1+best-effort=1".to_string();
+        cell.requests = 10;
+        let r = run_cell(&cell).unwrap();
+        assert_eq!(r.metrics.completed, 10);
+        // both synthetic tenants show up in the per-tenant rollup...
+        assert!(r.metrics.tenants.contains_key("t0-interactive"));
+        assert!(r.metrics.tenants.contains_key("t1-best-effort"));
+        // ...and the interactive class carries the deadline accounting
+        let inter = &r.metrics.classes[PriorityClass::Interactive.rank()];
+        assert_eq!(inter.with_deadline, inter.completed);
+        assert!(inter.completed > 0);
+        // a generous 60s virtual deadline is always met by a tiny cell
+        assert_eq!(r.metrics.slo_attainment(), 1.0);
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"slo_attainment\":1"), "{j}");
+        assert!(!j.contains("\"sl_mean_interactive\":0,"), "{j}");
+    }
+
+    #[test]
+    fn tenant_attribution_alone_leaves_cell_metrics_unchanged() {
+        // a single all-standard, no-deadline tenant is pure attribution:
+        // scheduling, outputs, and token totals must match the untenanted
+        // run bit-for-bit
+        let plain = run_cell(&tiny_cell("gsm8k")).unwrap();
+        let mut cell = tiny_cell("gsm8k");
+        cell.tenants = "standard=1".to_string();
+        let tagged = run_cell(&cell).unwrap();
+        assert_eq!(plain.metrics.tokens_out, tagged.metrics.tokens_out);
+        assert!(
+            (plain.metrics.mean_latency() - tagged.metrics.mean_latency()).abs() < 1e-12
+        );
+        assert_eq!(tagged.metrics.deadline_clamps, 0);
+        assert!(tagged.metrics.tenants.contains_key("t0-standard"));
+        // untenanted traffic rolls up under the "" (unattributed) key
+        assert!(plain.metrics.tenants.keys().all(|k| k.is_empty()));
     }
 
     #[test]

@@ -27,7 +27,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::{CapMode, EngineConfig, RoutePolicy, SlPolicyKind, SpecControl};
 use crate::engine::engine::Engine;
 use crate::engine::metrics::MetricsSnapshot;
-use crate::engine::request::{Request, SamplingParams};
+use crate::engine::request::{PriorityClass, Request, SamplingParams};
 use crate::model::sim_lm::{SimModel, SimPairKind};
 use crate::server::router::{EngineRouter, RecordHook, RouterOptions};
 use crate::sim::regime::DatasetProfile;
@@ -46,17 +46,35 @@ pub struct TraceEntry {
     pub temperature: f64,
     /// Dataset/tenant tag (the recorder's default tag).
     pub tag: String,
+    /// Tenant attribution (`""` = unattributed / pre-tenancy trace).
+    pub tenant: String,
+    /// Priority class (`Standard` when absent from the record).
+    pub class: PriorityClass,
+    /// Latency SLO in ms from arrival, when one was attached.
+    pub deadline_ms: Option<u64>,
 }
 
 impl TraceEntry {
-    /// One NDJSON line's JSON value (no trailing newline).
+    /// One NDJSON line's JSON value (no trailing newline).  Tenancy is a
+    /// strict-superset extension: the fields appear only when non-default,
+    /// so untagged traces are byte-identical to pre-tenancy recordings.
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("t", self.t)
             .set("prompt_len", self.prompt_len)
             .set("max_tokens", self.max_tokens)
             .set("temperature", self.temperature)
-            .set("tag", self.tag.clone())
+            .set("tag", self.tag.clone());
+        if !self.tenant.is_empty() {
+            j = j.set("tenant", self.tenant.clone());
+        }
+        if self.class != PriorityClass::Standard {
+            j = j.set("priority", self.class.name());
+        }
+        if let Some(d) = self.deadline_ms {
+            j = j.set("deadline_ms", d);
+        }
+        j
     }
 
     /// Parse one NDJSON line's JSON value.
@@ -76,6 +94,17 @@ impl TraceEntry {
                 .and_then(|x| x.as_str())
                 .ok_or_else(|| "missing string field \"tag\"".to_string())?
                 .to_string(),
+            tenant: j
+                .get("tenant")
+                .and_then(|x| x.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            class: j
+                .get("priority")
+                .and_then(|x| x.as_str())
+                .and_then(PriorityClass::parse)
+                .unwrap_or_default(),
+            deadline_ms: j.get("deadline_ms").and_then(|x| x.as_f64()).map(|d| d as u64),
         })
     }
 }
@@ -111,6 +140,9 @@ impl TraceRecorder {
             max_tokens: req.params.max_tokens,
             temperature: req.params.temperature,
             tag: self.tag.clone(),
+            tenant: req.tenant.clone(),
+            class: req.class,
+            deadline_ms: req.deadline_ms,
         };
         let mut out = self.out.lock().expect("trace lock");
         let _ = writeln!(out, "{}", entry.to_json());
@@ -277,7 +309,8 @@ pub fn replay(trace: &[TraceEntry], cfg: &ReplayConfig) -> Result<ReplayOutcome>
                     max_tokens: e.max_tokens.max(1),
                     stop_token: None,
                 },
-            );
+            )
+            .with_tenancy(&e.tenant, e.class, e.deadline_ms);
             router.submit(req)
         })
         .collect();
@@ -310,6 +343,9 @@ mod tests {
                 max_tokens: 6 + (i % 3) * 4,
                 temperature: 0.0,
                 tag: "cnndm".to_string(),
+                tenant: String::new(),
+                class: PriorityClass::Standard,
+                deadline_ms: None,
             })
             .collect()
     }
@@ -322,10 +358,41 @@ mod tests {
             max_tokens: 32,
             temperature: 0.7,
             tag: "sharegpt".to_string(),
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
         };
         let j = Json::parse(&e.to_json().to_string()).unwrap();
         assert_eq!(TraceEntry::from_json(&j).unwrap(), e);
         assert!(TraceEntry::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn tenancy_is_a_strict_superset_of_the_trace_format() {
+        let plain = TraceEntry {
+            t: 0.5,
+            prompt_len: 8,
+            max_tokens: 4,
+            temperature: 0.0,
+            tag: "cnndm".to_string(),
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
+        };
+        // defaults serialize with NO tenancy keys (pre-tenancy bytes)
+        let s = plain.to_json().to_string();
+        assert!(!s.contains("tenant"), "{s}");
+        assert!(!s.contains("priority"), "{s}");
+        assert!(!s.contains("deadline_ms"), "{s}");
+        // non-defaults round-trip through the JSON form
+        let tagged = TraceEntry {
+            tenant: "acme".to_string(),
+            class: PriorityClass::BestEffort,
+            deadline_ms: Some(900),
+            ..plain
+        };
+        let j = Json::parse(&tagged.to_json().to_string()).unwrap();
+        assert_eq!(TraceEntry::from_json(&j).unwrap(), tagged);
     }
 
     #[test]

@@ -20,8 +20,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use dsde::config::{
-    AcceptMode, CapMode, EngineConfig, FrontendKind, PollerKind, RoutePolicy, RouterConfig,
-    SlPolicyKind, SpecControl,
+    AcceptMode, CapMode, EngineConfig, FrontendKind, PollerKind, RateLimit, RoutePolicy,
+    RouterConfig, SlPolicyKind, SpecControl,
 };
 use dsde::engine::engine::Engine;
 use dsde::eval::{
@@ -38,7 +38,7 @@ use dsde::sim::regime::DatasetProfile;
 use dsde::util::cli::{usage, Args, FlagSpec};
 use dsde::util::fault::FaultPlan;
 use dsde::util::json::Json;
-use dsde::workload::{Dataset, WorkloadGen};
+use dsde::workload::{Dataset, TenantMix, WorkloadGen};
 
 const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "artifacts", help: "artifact directory", default: Some("artifacts") },
@@ -67,6 +67,8 @@ const FLAGS: &[FlagSpec] = &[
     FlagSpec { name: "resume", help: "restore unfinished requests from a journal (serve)", default: None },
     FlagSpec { name: "fault", help: "fault-injection spec, e.g. kill:0@500 (chaos testing)", default: None },
     FlagSpec { name: "spec-control", help: "off | goodput closed-loop speculation control (serve, eval)", default: Some("off") },
+    FlagSpec { name: "rate-limit", help: "per-tenant admission RATE[:BURST] req/s, off = unlimited (serve)", default: Some("off") },
+    FlagSpec { name: "tenants", help: "tenant mix <class>[@<deadline_ms>][=<w>]+..., ;-list = axis, none = off (eval)", default: Some("none") },
     FlagSpec { name: "grid", help: "grid preset (eval): default", default: Some("default") },
     FlagSpec { name: "smoke", help: "shrink the eval grid to smoke size (flag)", default: None },
     FlagSpec { name: "datasets", help: "eval workloads: names/mixes, comma-separated", default: None },
@@ -133,6 +135,8 @@ fn router_config(args: &Args) -> Result<RouterConfig> {
         fault,
         control: SpecControl::parse(&args.str_or("spec-control", "off"))
             .ok_or_else(|| anyhow::anyhow!("unknown --spec-control value (off | goodput)"))?,
+        rate_limit: RateLimit::parse(&args.str_or("rate-limit", "off"))
+            .map_err(|e| anyhow::anyhow!("bad --rate-limit spec: {e}"))?,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
@@ -147,6 +151,7 @@ fn build_router(engines: Vec<Engine>, rcfg: &RouterConfig, args: &Args) -> Resul
         stall_ms: rcfg.stall_ms,
         fault: rcfg.fault.clone(),
         control: rcfg.control,
+        rate_limit: rcfg.rate_limit,
     };
     let mut router = EngineRouter::with_router_options(engines, rcfg.policy, rcfg.steal, opts);
     if let Some(path) = &rcfg.record {
@@ -463,6 +468,22 @@ fn eval_cmd(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bad --arrivals spec"))?;
     grid.control = SpecControl::parse(&args.str_or("spec-control", "off"))
         .ok_or_else(|| anyhow::anyhow!("unknown --spec-control value (off | goodput)"))?;
+    // `;`-separated tenancy axis (mix specs use `+`/`,` internally); each
+    // entry is validated up front so a typo fails before any cell runs
+    grid.tenants = args
+        .str_or("tenants", "none")
+        .split(';')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            TenantMix::parse_opt(s, 0)
+                .map(|_| s.to_string())
+                .map_err(|e| anyhow::anyhow!("bad --tenants spec: {e}"))
+        })
+        .collect::<Result<Vec<String>>>()?;
+    if grid.tenants.is_empty() {
+        grid.tenants = vec!["none".to_string()];
+    }
     grid.requests = args.usize_or("requests", grid.requests);
     grid.replicas = args.usize_clamped_or("replicas", grid.replicas, 1, 256);
     grid.route = RoutePolicy::parse(&args.str_or("route", "round-robin"))

@@ -30,7 +30,7 @@ use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::config::FrontendKind;
-use crate::engine::request::{FinishedRequest, Request, SamplingParams};
+use crate::engine::request::{FinishedRequest, PriorityClass, Request, SamplingParams};
 use crate::model::vocab;
 use crate::server::router::{EngineRouter, RingTarget, StreamEvent};
 use crate::util::bufpool::{BufPool, Frame, FrameBuf, FrameQueue};
@@ -46,6 +46,15 @@ pub struct HttpRequest {
     pub path: String,
     /// Raw request body (sized by `Content-Length`).
     pub body: String,
+    /// Tenant name from the `X-Tenant` header (`""` = unattributed).
+    /// A `"tenant"` field in the JSON body overrides it.
+    pub tenant: String,
+    /// Priority class from the `X-Priority` header (default `standard`).
+    /// A `"priority"` field in the JSON body overrides it.
+    pub class: PriorityClass,
+    /// Latency SLO from the `X-Deadline-Ms` header, in milliseconds from
+    /// arrival.  A `"deadline_ms"` field in the JSON body overrides it.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Protocol limits and timeouts enforced per connection by both
@@ -103,6 +112,7 @@ pub struct FrontendStats {
     open: AtomicUsize,
     accepted: AtomicU64,
     rejected: AtomicU64,
+    shed: AtomicU64,
     writev_calls: AtomicU64,
     frames_zero_copy: AtomicU64,
     bufpool_hits: Arc<AtomicU64>,
@@ -137,6 +147,7 @@ impl FrontendStats {
             open: AtomicUsize::new(0),
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             writev_calls: AtomicU64::new(0),
             frames_zero_copy: AtomicU64::new(0),
             bufpool_hits: Arc::new(AtomicU64::new(0)),
@@ -199,6 +210,11 @@ impl FrontendStats {
     /// Connections turned away at the open-connection cap since startup.
     pub fn rejected(&self) -> u64 {
         self.rejected.load(Ordering::SeqCst)
+    }
+
+    /// Requests shed with `429` by per-tenant admission control.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::SeqCst)
     }
 
     /// `writev(2)` flush syscalls issued across all shards.
@@ -279,6 +295,10 @@ impl FrontendStats {
         self.rejected.fetch_add(1, Ordering::SeqCst);
     }
 
+    pub(crate) fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::SeqCst);
+    }
+
     pub(crate) fn on_close(&self) {
         self.open.fetch_sub(1, Ordering::SeqCst);
     }
@@ -306,7 +326,8 @@ impl FrontendStats {
             .set("loop_shards", self.loop_shards())
             .set("open_connections", self.open())
             .set("accepted", self.accepted())
-            .set("rejected", self.rejected());
+            .set("rejected", self.rejected())
+            .set("shed", self.shed());
         if !self.shard_open.is_empty() {
             let per: Vec<Json> = self
                 .shard_open
@@ -370,12 +391,28 @@ pub(crate) fn parse_request(buf: &[u8], limits: &ConnLimits) -> ParseStatus {
         return ParseStatus::Invalid(400, "malformed request line");
     };
     let mut content_length = 0usize;
+    let mut tenant = String::new();
+    let mut class = PriorityClass::Standard;
+    let mut deadline_ms = None;
     for h in lines {
         if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
+            let k = k.trim();
+            if k.eq_ignore_ascii_case("content-length") {
                 match v.trim().parse::<usize>() {
                     Ok(n) => content_length = n,
                     Err(_) => return ParseStatus::Invalid(400, "bad content-length"),
+                }
+            } else if k.eq_ignore_ascii_case("x-tenant") {
+                tenant = v.trim().to_string();
+            } else if k.eq_ignore_ascii_case("x-priority") {
+                match PriorityClass::parse(v.trim()) {
+                    Some(c) => class = c,
+                    None => return ParseStatus::Invalid(400, "bad x-priority"),
+                }
+            } else if k.eq_ignore_ascii_case("x-deadline-ms") {
+                match v.trim().parse::<u64>() {
+                    Ok(ms) => deadline_ms = Some(ms),
+                    Err(_) => return ParseStatus::Invalid(400, "bad x-deadline-ms"),
                 }
             }
         }
@@ -391,6 +428,9 @@ pub(crate) fn parse_request(buf: &[u8], limits: &ConnLimits) -> ParseStatus {
         method: method.to_string(),
         path: path.to_string(),
         body: body.into_owned(),
+        tenant,
+        class,
+        deadline_ms,
     })
 }
 
@@ -405,6 +445,7 @@ pub(crate) fn reason(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         408 => "Request Timeout",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         503 => "Service Unavailable",
         _ => "Internal Server Error",
     }
@@ -425,6 +466,24 @@ pub(crate) fn encode_json(status: u16, body: &Json) -> Vec<u8> {
 /// Encode an error response with the standard `{"error": msg}` body.
 pub(crate) fn encode_error(status: u16, msg: &str) -> Vec<u8> {
     encode_json(status, &Json::obj().set("error", msg))
+}
+
+/// Encode the load-shed response: `429 Too Many Requests` with a
+/// whole-second `Retry-After` hint (rounded up, at least 1 — the coarse
+/// integral header keeps shed transcripts byte-stable across runs).
+pub(crate) fn encode_shed(retry_after_s: f64) -> Vec<u8> {
+    let secs = retry_after_s.ceil().max(1.0) as u64;
+    let body = Json::obj()
+        .set("error", "rate limit exceeded")
+        .set("retry_after_s", secs)
+        .to_string();
+    format!(
+        "HTTP/1.1 429 {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nRetry-After: {secs}\r\nConnection: close\r\n\r\n{body}",
+        reason(429),
+        body.len()
+    )
+    .into_bytes()
 }
 
 /// The streaming response preamble (chunked NDJSON).
@@ -676,6 +735,35 @@ pub(crate) fn dispatch(
                 .get("stream")
                 .and_then(|x| x.as_bool())
                 .unwrap_or(false);
+            // tenancy: headers provide the defaults, body fields override
+            let tenant = parsed
+                .get("tenant")
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .unwrap_or_else(|| req.tenant.clone());
+            let class = match parsed.get("priority").and_then(|x| x.as_str()) {
+                Some(s) => match PriorityClass::parse(s) {
+                    Some(c) => c,
+                    None => {
+                        return Dispatch::Immediate(encode_error(400, "bad 'priority'"));
+                    }
+                },
+                None => req.class,
+            };
+            let deadline_ms = parsed
+                .get("deadline_ms")
+                .and_then(|x| x.as_usize())
+                .map(|ms| ms as u64)
+                .or(req.deadline_ms);
+            // admission control: shed over-rate tenants before they can
+            // queue work (both front-ends share this exact path, so 429
+            // responses are byte-identical by construction)
+            if let Some(limiter) = router.rate_limiter() {
+                if let Err(retry) = limiter.check(&tenant) {
+                    stats.on_shed();
+                    return Dispatch::Immediate(encode_shed(retry));
+                }
+            }
             let request = Request::new(
                 0, // the router assigns the globally unique id
                 vocab::encode(prompt),
@@ -684,7 +772,8 @@ pub(crate) fn dispatch(
                     max_tokens,
                     stop_token: None,
                 },
-            );
+            )
+            .with_tenancy(&tenant, class, deadline_ms);
             match (streaming, ctx) {
                 (true, DispatchCtx::Loop { target, .. }) => {
                     if router.submit_streaming_ring(request, target) {
@@ -1144,6 +1233,53 @@ mod tests {
     }
 
     #[test]
+    fn parser_extracts_tenancy_headers() {
+        let full = "POST /v1/completions HTTP/1.1\r\nX-Tenant: acme\r\n\
+                    X-Priority: interactive\r\nX-Deadline-Ms: 750\r\n\
+                    Content-Length: 4\r\n\r\nbody";
+        match parse(full) {
+            ParseStatus::Complete(r) => {
+                assert_eq!(r.tenant, "acme");
+                assert_eq!(r.class, PriorityClass::Interactive);
+                assert_eq!(r.deadline_ms, Some(750));
+            }
+            _ => panic!("expected Complete"),
+        }
+        // defaults without the headers
+        let plain = "POST /v1/completions HTTP/1.1\r\nContent-Length: 0\r\n\r\n";
+        match parse(plain) {
+            ParseStatus::Complete(r) => {
+                assert_eq!(r.tenant, "");
+                assert_eq!(r.class, PriorityClass::Standard);
+                assert_eq!(r.deadline_ms, None);
+            }
+            _ => panic!("expected Complete"),
+        }
+    }
+
+    #[test]
+    fn parser_rejects_bad_tenancy_headers() {
+        match parse("POST /x HTTP/1.1\r\nX-Priority: vip\r\n\r\n") {
+            ParseStatus::Invalid(400, msg) => assert!(msg.contains("x-priority")),
+            _ => panic!("expected 400"),
+        }
+        match parse("POST /x HTTP/1.1\r\nX-Deadline-Ms: soon\r\n\r\n") {
+            ParseStatus::Invalid(400, msg) => assert!(msg.contains("x-deadline-ms")),
+            _ => panic!("expected 400"),
+        }
+    }
+
+    #[test]
+    fn shed_encoding_carries_retry_after() {
+        let s = String::from_utf8(encode_shed(0.2)).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{s}");
+        assert!(s.contains("Retry-After: 1\r\n"), "{s}"); // rounded up, min 1
+        assert!(s.ends_with("{\"error\":\"rate limit exceeded\",\"retry_after_s\":1}"), "{s}");
+        let s = String::from_utf8(encode_shed(2.3)).unwrap();
+        assert!(s.contains("Retry-After: 3\r\n"), "{s}");
+    }
+
+    #[test]
     fn chunk_line_framing_matches_http_chunked() {
         let bytes = encode_chunk_line("{\"a\":1}");
         let s = String::from_utf8(bytes).unwrap();
@@ -1253,6 +1389,9 @@ mod tests {
             drafted: 4,
             accepted: 2,
             preemptions: 0,
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
         };
         let done = stream_done_frame(&fin);
         let mut expect = encode_chunk_line(&done_line(&fin));
@@ -1274,6 +1413,9 @@ mod tests {
             drafted: 6,
             accepted: 3,
             preemptions: 0,
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
         };
         assert_eq!(
             &stream_delta_frame_in(&pool, &[4, 5], 1.5)[..],

@@ -31,7 +31,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::engine::request::{Request, SamplingParams};
+use crate::engine::request::{PriorityClass, Request, SamplingParams};
 use crate::log_warn;
 use crate::util::fault::ArmedFaults;
 use crate::util::json::Json;
@@ -121,7 +121,7 @@ impl Journal {
     /// Append a `submit` record for a routed request (id already
     /// assigned).  Called by the router's record hook before dispatch.
     pub fn record_submit(&self, req: &Request) {
-        let line = Json::obj()
+        let mut line = Json::obj()
             .set("type", "submit")
             .set("id", req.id)
             .set("t", self.epoch.elapsed().as_secs_f64())
@@ -129,9 +129,20 @@ impl Journal {
             .set("max_tokens", req.params.max_tokens)
             .set("temperature", req.params.temperature)
             .set("tag", self.tag.as_str())
-            .set("prompt", req.prompt.clone())
-            .to_string();
-        self.append(&line);
+            .set("prompt", req.prompt.clone());
+        // tenancy is a strict-superset extension: fields appear only when
+        // non-default, so untagged workloads journal byte-identically to
+        // builds that predate multi-tenancy
+        if !req.tenant.is_empty() {
+            line = line.set("tenant", req.tenant.as_str());
+        }
+        if req.class != PriorityClass::Standard {
+            line = line.set("priority", req.class.name());
+        }
+        if let Some(d) = req.deadline_ms {
+            line = line.set("deadline_ms", d);
+        }
+        self.append(&line.to_string());
     }
 
     /// Append a `complete` marker for a finished (or cleanly aborted)
@@ -188,6 +199,13 @@ pub struct SubmitRecord {
     pub temperature: f64,
     /// Workload tag stamped at record time.
     pub tag: String,
+    /// Tenant attribution (`""` when the record predates tenancy or the
+    /// request was unattributed).
+    pub tenant: String,
+    /// Priority class (`Standard` when absent from the record).
+    pub class: PriorityClass,
+    /// Latency SLO in ms from arrival, when one was attached.
+    pub deadline_ms: Option<u64>,
 }
 
 /// The reconstructed state of a journal file (see [`load`]).
@@ -222,6 +240,7 @@ impl JournalState {
                         stop_token: None,
                     },
                 )
+                .with_tenancy(&s.tenant, s.class, s.deadline_ms)
             })
             .collect()
     }
@@ -257,6 +276,20 @@ fn parse_submit(j: &Json, line_no: usize) -> Result<SubmitRecord> {
             .and_then(Json::as_str)
             .unwrap_or_default()
             .to_string(),
+        tenant: j
+            .get("tenant")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        class: j
+            .get("priority")
+            .and_then(Json::as_str)
+            .and_then(PriorityClass::parse)
+            .unwrap_or_default(),
+        deadline_ms: j
+            .get("deadline_ms")
+            .and_then(Json::as_f64)
+            .map(|d| d as u64),
     })
 }
 
@@ -402,6 +435,35 @@ mod tests {
             assert_eq!(r.prompt.len(), 8);
             assert_eq!(r.params.max_tokens, 16);
         }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tenancy_rides_the_journal_roundtrip() {
+        let path = tmp("tenancy");
+        let journal = Journal::create(&path, "test").unwrap();
+        journal.record_submit(
+            &req(1, 4, 8).with_tenancy("acme", PriorityClass::Interactive, Some(500)),
+        );
+        journal.record_submit(&req(2, 4, 8)); // untagged: no tenancy keys
+        journal.sync();
+        let content = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = content.lines().collect();
+        assert!(lines[0].contains("\"tenant\":\"acme\""), "{}", lines[0]);
+        assert!(lines[0].contains("\"priority\":\"interactive\""), "{}", lines[0]);
+        assert!(lines[0].contains("\"deadline_ms\":500"), "{}", lines[0]);
+        // strict superset: untagged submits carry none of the new keys
+        assert!(!lines[1].contains("tenant"), "{}", lines[1]);
+        assert!(!lines[1].contains("priority"), "{}", lines[1]);
+        assert!(!lines[1].contains("deadline_ms"), "{}", lines[1]);
+        let state = load(&path).unwrap();
+        let unfinished = state.unfinished();
+        assert_eq!(unfinished[0].tenant, "acme");
+        assert_eq!(unfinished[0].class, PriorityClass::Interactive);
+        assert_eq!(unfinished[0].deadline_ms, Some(500));
+        assert_eq!(unfinished[1].tenant, "");
+        assert_eq!(unfinished[1].class, PriorityClass::Standard);
+        assert_eq!(unfinished[1].deadline_ms, None);
         let _ = std::fs::remove_file(&path);
     }
 

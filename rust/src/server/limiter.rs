@@ -1,0 +1,218 @@
+//! Per-tenant token-bucket admission control.
+//!
+//! Each tenant gets an independent [`TokenBucket`] refilled at
+//! `rate` requests/second with capacity `burst`.  A request that finds
+//! its tenant's bucket empty is **shed** — the front-end answers
+//! `429 Too Many Requests` with a `Retry-After` hint instead of letting
+//! an abusive tenant queue unbounded work in front of everyone else.
+//! Shedding happens in the shared connection dispatch
+//! (`server/conn.rs`), so both front-ends produce byte-identical 429
+//! responses by construction.
+//!
+//! The bucket math runs on an abstract `f64` seconds clock so the
+//! property suite (`tests/tenancy_property.rs`) can replay arbitrary
+//! schedules against a plain-code oracle without sleeping; the wall
+//! clock only enters in [`TenantLimiter`], which anchors `Instant::now`
+//! to a per-limiter epoch.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::RateLimit;
+use crate::util::json::Json;
+
+/// Classic token bucket over an abstract monotonic clock in seconds.
+///
+/// Holds at most `burst` tokens, refills continuously at `rate`
+/// tokens/second, and each admitted request takes exactly one token.
+#[derive(Clone, Copy, Debug)]
+pub struct TokenBucket {
+    /// Refill rate in tokens (requests) per second.
+    pub rate: f64,
+    /// Capacity: the largest burst admitted from a full bucket.
+    pub burst: f64,
+    /// Current token balance, in `[0, burst]`.
+    pub tokens: f64,
+    /// Clock value of the last refill, in seconds.
+    pub last: f64,
+}
+
+impl TokenBucket {
+    /// A bucket that starts full (a fresh tenant gets its whole burst).
+    pub fn new(limit: RateLimit) -> TokenBucket {
+        TokenBucket {
+            rate: limit.rate,
+            burst: limit.burst,
+            tokens: limit.burst,
+            last: 0.0,
+        }
+    }
+
+    /// Refill for the elapsed time, then try to take one token.
+    ///
+    /// `now` is an absolute clock reading in seconds; readings must be
+    /// monotone non-decreasing (earlier values are treated as `last`).
+    /// Returns `true` if the request is admitted.
+    pub fn try_acquire(&mut self, now: f64) -> bool {
+        let dt = (now - self.last).max(0.0);
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        self.last = self.last.max(now);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Seconds until one full token is available (0 if already there).
+    /// Valid immediately after a [`TokenBucket::try_acquire`] refill.
+    pub fn retry_after(&self) -> f64 {
+        ((1.0 - self.tokens) / self.rate).max(0.0)
+    }
+}
+
+/// Thread-safe per-tenant bucket map plus shed accounting.
+///
+/// Buckets are created lazily on a tenant's first request (starting
+/// full).  The empty tenant name (unattributed traffic) is limited like
+/// any other tenant, so anonymous load cannot bypass admission control.
+pub struct TenantLimiter {
+    limit: RateLimit,
+    epoch: Instant,
+    inner: Mutex<HashMap<String, TenantState>>,
+}
+
+/// Per-tenant limiter state: the bucket plus shed counter.
+#[derive(Clone, Copy, Debug)]
+struct TenantState {
+    bucket: TokenBucket,
+    shed: u64,
+}
+
+impl TenantLimiter {
+    /// New limiter; every tenant's first bucket starts full.
+    pub fn new(limit: RateLimit) -> TenantLimiter {
+        TenantLimiter {
+            limit,
+            epoch: Instant::now(),
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The configured rate limit.
+    pub fn limit(&self) -> RateLimit {
+        self.limit
+    }
+
+    /// Admit or shed one request from `tenant` at the wall clock.
+    ///
+    /// `Ok(())` admits; `Err(retry_after_secs)` sheds and records it.
+    pub fn check(&self, tenant: &str) -> Result<(), f64> {
+        self.check_at(tenant, self.epoch.elapsed().as_secs_f64())
+    }
+
+    /// Clock-explicit variant of [`TenantLimiter::check`] for tests.
+    pub fn check_at(&self, tenant: &str, now: f64) -> Result<(), f64> {
+        let mut map = self.inner.lock().unwrap();
+        let state = map
+            .entry(tenant.to_string())
+            .or_insert_with(|| TenantState {
+                bucket: TokenBucket::new(self.limit),
+                shed: 0,
+            });
+        if state.bucket.try_acquire(now) {
+            Ok(())
+        } else {
+            state.shed += 1;
+            Err(state.bucket.retry_after())
+        }
+    }
+
+    /// Total requests shed across all tenants.
+    pub fn total_shed(&self) -> u64 {
+        self.inner.lock().unwrap().values().map(|s| s.shed).sum()
+    }
+
+    /// Snapshot: config plus per-tenant shed counts (sorted by tenant).
+    pub fn to_json(&self) -> Json {
+        let map = self.inner.lock().unwrap();
+        let mut names: Vec<&String> = map.keys().collect();
+        names.sort();
+        let mut shed = Json::obj();
+        for name in names {
+            shed = shed.set(name.as_str(), map[name].shed);
+        }
+        Json::obj()
+            .set("rate", self.limit.rate)
+            .set("burst", self.limit.burst)
+            .set("total_shed", self.total_shed())
+            .set("per_tenant_shed", shed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limit(rate: f64, burst: f64) -> RateLimit {
+        RateLimit { rate, burst }
+    }
+
+    #[test]
+    fn bucket_admits_burst_then_sheds() {
+        let mut b = TokenBucket::new(limit(1.0, 3.0));
+        assert!(b.try_acquire(0.0));
+        assert!(b.try_acquire(0.0));
+        assert!(b.try_acquire(0.0));
+        assert!(!b.try_acquire(0.0), "burst exhausted");
+        assert_eq!(b.retry_after(), 1.0);
+        // one second refills exactly one token
+        assert!(b.try_acquire(1.0));
+        assert!(!b.try_acquire(1.0));
+    }
+
+    #[test]
+    fn bucket_refill_caps_at_burst() {
+        let mut b = TokenBucket::new(limit(2.0, 2.0));
+        assert!(b.try_acquire(0.0));
+        assert!(b.try_acquire(0.0));
+        // a long idle period refills to burst, not beyond
+        assert!(b.try_acquire(100.0));
+        assert!(b.try_acquire(100.0));
+        assert!(!b.try_acquire(100.0));
+    }
+
+    #[test]
+    fn bucket_clock_never_runs_backwards() {
+        let mut b = TokenBucket::new(limit(1.0, 1.0));
+        assert!(b.try_acquire(5.0));
+        // an earlier reading must not mint time (tokens stay spent)
+        assert!(!b.try_acquire(4.0));
+        assert!(b.try_acquire(6.0), "refill measured from t=5");
+    }
+
+    #[test]
+    fn limiter_isolates_tenants_and_counts_sheds() {
+        let l = TenantLimiter::new(limit(1.0, 1.0));
+        assert!(l.check_at("a", 0.0).is_ok());
+        assert!(l.check_at("b", 0.0).is_ok(), "b has its own bucket");
+        let retry = l.check_at("a", 0.0).unwrap_err();
+        assert!(retry > 0.0 && retry <= 1.0, "retry {retry}");
+        assert!(l.check_at("b", 0.0).is_err());
+        assert!(l.check_at("a", 0.25).is_err());
+        assert_eq!(l.total_shed(), 3);
+        let js = l.to_json().to_string();
+        assert!(js.contains("\"total_shed\":3"), "{js}");
+        assert!(js.contains("\"per_tenant_shed\""), "{js}");
+    }
+
+    #[test]
+    fn unattributed_traffic_is_limited_too() {
+        let l = TenantLimiter::new(limit(1.0, 2.0));
+        assert!(l.check_at("", 0.0).is_ok());
+        assert!(l.check_at("", 0.0).is_ok());
+        assert!(l.check_at("", 0.0).is_err());
+    }
+}

@@ -43,4 +43,5 @@ mod conn;
 mod event_loop;
 pub mod http;
 pub mod journal;
+pub mod limiter;
 pub mod router;

@@ -71,7 +71,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{RoutePolicy, SpecControl};
+use crate::config::{RateLimit, RoutePolicy, SpecControl};
 use crate::engine::engine::{Engine, ReplicaLoad, StepOutcome};
 use crate::engine::metrics::{MetricsSnapshot, DEFAULT_QUANTILES};
 use crate::engine::request::{FinishReason, FinishedRequest, Request};
@@ -610,6 +610,9 @@ fn aborted_fin(req: &Request) -> FinishedRequest {
         drafted: 0,
         accepted: 0,
         preemptions: 0,
+        tenant: req.tenant.clone(),
+        class: req.class,
+        deadline_ms: req.deadline_ms,
     }
 }
 
@@ -1345,6 +1348,10 @@ pub struct RouterOptions {
     /// with no controller attached and plan bit-identically to a router
     /// built without this field.
     pub control: SpecControl,
+    /// Per-tenant token-bucket admission control (`--rate-limit`): when
+    /// set, both front-ends shed over-rate tenants with `429` before
+    /// their requests reach the engines.  `None` admits everything.
+    pub rate_limit: Option<RateLimit>,
 }
 
 impl Default for RouterOptions {
@@ -1353,6 +1360,7 @@ impl Default for RouterOptions {
             stall_ms: 10_000,
             fault: None,
             control: SpecControl::Off,
+            rate_limit: None,
         }
     }
 }
@@ -1443,6 +1451,7 @@ pub struct EngineRouter {
     record: Option<RecordHook>,
     shared: Arc<RouterShared>,
     control: Option<ControlState>,
+    limiter: Option<crate::server::limiter::TenantLimiter>,
 }
 
 impl EngineRouter {
@@ -1604,7 +1613,17 @@ impl EngineRouter {
             record: None,
             shared,
             control,
+            limiter: opts
+                .rate_limit
+                .map(crate::server::limiter::TenantLimiter::new),
         }
+    }
+
+    /// The per-tenant admission limiter, when `--rate-limit` is set.
+    /// Both front-ends consult it in the shared dispatch before a
+    /// completion request reaches the engines.
+    pub fn rate_limiter(&self) -> Option<&crate::server::limiter::TenantLimiter> {
+        self.limiter.as_ref()
     }
 
     /// Install the request-record hook (the `--record` trace path).  Must
@@ -2089,6 +2108,13 @@ impl EngineRouter {
             .set("sl_cap_current", sl_cap_current)
             .set("control_adjustments", control_adjustments)
             .set("goodput_est", goodput_est)
+            .set(
+                "rate_limit",
+                match &self.limiter {
+                    Some(l) => l.to_json(),
+                    None => Json::Null,
+                },
+            )
             .set("replicas", replicas)
     }
 
@@ -2770,7 +2796,7 @@ mod tests {
             RouterOptions {
                 stall_ms: 5_000,
                 fault: Some(plan),
-                control: SpecControl::Off,
+                ..Default::default()
             },
         );
         let rxs: Vec<_> = (0..6).map(|_| router.submit_to(0, req(16))).collect();
@@ -2809,7 +2835,7 @@ mod tests {
             RouterOptions {
                 stall_ms: 100,
                 fault: Some(plan),
-                control: SpecControl::Off,
+                ..Default::default()
             },
         );
         let start = std::time::Instant::now();

@@ -75,6 +75,45 @@ pub fn apply_cap(mode: CapMode, predictions: &mut [usize]) -> usize {
     cap
 }
 
+/// Deadline slack fraction below which a deadline-carrying sequence is
+/// clamped to a conservative SL of 2: with under ~a third of the budget
+/// left, a deep failed speculation costs latency the deadline cannot
+/// absorb.
+pub const TIGHT_SLACK_FRAC: f64 = 0.35;
+
+/// Deadline slack fraction below which the clamp tightens to SL 1 (the
+/// request is about to breach — pay only the cheapest speculation).
+pub const CRITICAL_SLACK_FRAC: f64 = 0.15;
+
+/// Trade speculation depth against deadline slack (applied after the batch
+/// cap and controller throttle): sequences whose remaining deadline budget
+/// has degraded below [`TIGHT_SLACK_FRAC`] are clamped to SL 2, below
+/// [`CRITICAL_SLACK_FRAC`] to SL 1, while slack sequences keep whatever the
+/// cap granted.  `slack[i]` is [`deadline_slack_frac`] for sequence `i`
+/// (`None` = no deadline).  A batch with no deadlines is an exact identity,
+/// which keeps pre-tenancy traffic bit-identical.  Returns the number of
+/// sequences clamped.
+///
+/// [`deadline_slack_frac`]: crate::engine::request::SeqState::deadline_slack_frac
+pub fn apply_deadline_slack(sls: &mut [usize], slack: &[Option<f64>]) -> usize {
+    let mut clamped = 0;
+    for (sl, s) in sls.iter_mut().zip(slack) {
+        let Some(frac) = s else { continue };
+        let bound = if *frac < CRITICAL_SLACK_FRAC {
+            1
+        } else if *frac < TIGHT_SLACK_FRAC {
+            2
+        } else {
+            continue;
+        };
+        if *sl > bound {
+            *sl = bound;
+            clamped += 1;
+        }
+    }
+    clamped
+}
+
 /// Fold the fleet controller's actuators into the granted SLs (after the
 /// batch-consensus cap): scale every SL by the replica's aggressiveness
 /// multiplier, then clamp to the controller's global cap, preserving the
@@ -182,6 +221,67 @@ mod tests {
         };
         apply_control(&view, &mut preds);
         assert_eq!(preds, vec![1, 1], "floor of 1 survives the throttle");
+    }
+
+    #[test]
+    fn deadline_slack_identity_without_deadlines() {
+        let mut sls = vec![1usize, 4, 9, 12];
+        let before = sls.clone();
+        let clamped = apply_deadline_slack(&mut sls, &[None, None, None, None]);
+        assert_eq!(clamped, 0);
+        assert_eq!(sls, before, "no deadlines -> exact identity");
+    }
+
+    #[test]
+    fn deadline_slack_tiers_clamp_tight_sequences() {
+        let mut sls = vec![8usize, 8, 8, 8];
+        let slack = [Some(0.9), Some(0.3), Some(0.1), Some(-0.5)];
+        let clamped = apply_deadline_slack(&mut sls, &slack);
+        assert_eq!(clamped, 3);
+        assert_eq!(sls, vec![8, 2, 1, 1], "slack keeps, tight 2, critical 1");
+        // already-conservative SLs are not counted as clamps
+        let mut low = vec![1usize, 2];
+        let n = apply_deadline_slack(&mut low, &[Some(0.0), Some(0.2)]);
+        assert_eq!(n, 0);
+        assert_eq!(low, vec![1, 2]);
+    }
+
+    #[test]
+    fn deadline_slack_never_raises_property() {
+        forall(
+            73,
+            300,
+            |r| {
+                let n = r.range(1, 33);
+                let sls: Vec<usize> = (0..n).map(|_| r.range(1, 13)).collect();
+                let slack: Vec<Option<f64>> = (0..n)
+                    .map(|_| {
+                        if r.range(0, 2) == 0 {
+                            None
+                        } else {
+                            Some(r.range(0, 201) as f64 / 100.0 - 1.0)
+                        }
+                    })
+                    .collect();
+                (sls, slack)
+            },
+            |(sls, slack)| {
+                let mut out = sls.clone();
+                apply_deadline_slack(&mut out, slack);
+                for (i, (c, o)) in out.iter().zip(sls).enumerate() {
+                    if c > o {
+                        return Err(format!("clamp raised {o} -> {c}"));
+                    }
+                    if *c == 0 {
+                        return Err("clamped to zero".into());
+                    }
+                    if slack[i].is_none() && c != o {
+                        return Err(format!("no-deadline seq {i} changed"));
+                    }
+                }
+                check(true, "")
+            },
+        );
     }
 
     #[test]

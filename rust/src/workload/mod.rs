@@ -3,7 +3,7 @@
 //! output-length distributions from the dataset profile), plus arrival
 //! processes for open-loop serving experiments.
 
-use crate::engine::request::{Request, SamplingParams};
+use crate::engine::request::{PriorityClass, Request, SamplingParams};
 use crate::model::vocab;
 use crate::sim::regime::DatasetProfile;
 use crate::util::rng::Rng;
@@ -321,6 +321,102 @@ impl MixedWorkloadGen {
 impl RequestSource for MixedWorkloadGen {
     fn next_request(&mut self) -> Request {
         MixedWorkloadGen::next_request(self)
+    }
+}
+
+/// One synthetic tenant in a [`TenantMix`]: a stable name, a priority
+/// class, an optional per-request deadline, and a selection weight.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// Stable tenant name (auto-derived as `t{idx}-{class}` when parsed).
+    pub name: String,
+    /// Priority class stamped onto this tenant's requests.
+    pub class: PriorityClass,
+    /// Optional deadline stamped onto this tenant's requests.
+    pub deadline_ms: Option<u64>,
+    /// Positive selection weight for the per-request categorical draw.
+    pub weight: f64,
+}
+
+/// Weighted mixture of synthetic tenants stamped over a request stream —
+/// the `--tenants` grid axis.  A mix does not generate requests itself; it
+/// decorates requests drawn from any [`RequestSource`] with tenancy
+/// attribution (tenant name, priority class, deadline), so the same
+/// workload bytes flow under different tenancy policies.
+pub struct TenantMix {
+    tenants: Vec<TenantSpec>,
+    rng: Rng,
+}
+
+impl TenantMix {
+    /// Parse a tenant-mix spec: components joined with `+` or `,`, each of
+    /// the form `<class>[@<deadline_ms>][=<weight>]` where `<class>` is a
+    /// [`PriorityClass`] spelling (`interactive`, `standard`,
+    /// `best-effort`, ...).  Weights default to 1; tenant names are
+    /// auto-derived as `t{idx}-{class}`.  `"none"` and the empty string
+    /// mean *no tenancy* and parse to `None`-of-a-mix via
+    /// [`TenantMix::parse_opt`]; here they are rejected like any other
+    /// malformed spec.
+    pub fn parse(spec: &str, seed: u64) -> Option<TenantMix> {
+        let mut tenants = Vec::new();
+        for part in spec.split(['+', ',']).filter(|p| !p.trim().is_empty()) {
+            let (head, weight) = match part.split_once('=') {
+                Some((h, w)) => (h.trim(), w.trim().parse::<f64>().ok()?),
+                None => (part.trim(), 1.0),
+            };
+            if weight <= 0.0 || weight.is_nan() {
+                return None;
+            }
+            let (class_s, deadline_ms) = match head.split_once('@') {
+                Some((c, d)) => (c.trim(), Some(d.trim().parse::<u64>().ok()?)),
+                None => (head, None),
+            };
+            let class = PriorityClass::parse(class_s)?;
+            tenants.push(TenantSpec {
+                name: format!("t{}-{}", tenants.len(), class.name()),
+                class,
+                deadline_ms,
+                weight,
+            });
+        }
+        if tenants.is_empty() {
+            None
+        } else {
+            Some(TenantMix {
+                tenants,
+                rng: Rng::new(seed ^ 0x7E4A_4E54), // "TENT"-ish
+            })
+        }
+    }
+
+    /// Like [`TenantMix::parse`], but treats `"none"` and the empty string
+    /// as the explicit *no tenancy* spelling: `Ok(None)`.  Any other
+    /// unparsable spec is `Err`.
+    pub fn parse_opt(spec: &str, seed: u64) -> Result<Option<TenantMix>, String> {
+        let s = spec.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("none") {
+            return Ok(None);
+        }
+        TenantMix::parse(s, seed)
+            .map(Some)
+            .ok_or_else(|| format!("bad tenant mix spec: {spec:?}"))
+    }
+
+    /// The parsed tenant specs, in spec order.
+    pub fn tenants(&self) -> &[TenantSpec] {
+        &self.tenants
+    }
+
+    /// Stamp one request with a weight-drawn tenant's attribution.  The
+    /// request's prompt/sampling bytes are untouched — tenancy is a strict
+    /// superset decoration, so stamped and unstamped streams decode
+    /// identically.
+    pub fn stamp(&mut self, req: &mut Request) {
+        let weights: Vec<f64> = self.tenants.iter().map(|t| t.weight).collect();
+        let t = &self.tenants[self.rng.categorical(&weights)];
+        req.tenant = t.name.clone();
+        req.class = t.class;
+        req.deadline_ms = t.deadline_ms;
     }
 }
 
@@ -678,6 +774,90 @@ mod tests {
         assert_eq!(parts[0].1, 3.0);
         assert_eq!(parts[1].0.name, "humaneval");
         assert_eq!(parts[1].1, 1.0);
+    }
+
+    #[test]
+    fn tenant_mix_parses_classes_deadlines_and_weights() {
+        let m = TenantMix::parse("interactive@400=3+best-effort", 1).unwrap();
+        let t = m.tenants();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].name, "t0-interactive");
+        assert_eq!(t[0].class, PriorityClass::Interactive);
+        assert_eq!(t[0].deadline_ms, Some(400));
+        assert_eq!(t[0].weight, 3.0);
+        assert_eq!(t[1].name, "t1-best-effort");
+        assert_eq!(t[1].class, PriorityClass::BestEffort);
+        assert_eq!(t[1].deadline_ms, None);
+        assert_eq!(t[1].weight, 1.0);
+    }
+
+    #[test]
+    fn tenant_mix_parse_rejects_garbage() {
+        assert!(TenantMix::parse("bogus", 0).is_none());
+        assert!(TenantMix::parse("interactive=0", 0).is_none());
+        assert!(TenantMix::parse("interactive=-1", 0).is_none());
+        assert!(TenantMix::parse("interactive@abc", 0).is_none());
+        assert!(TenantMix::parse("", 0).is_none());
+        assert!(TenantMix::parse_opt("none", 0).unwrap().is_none());
+        assert!(TenantMix::parse_opt("", 0).unwrap().is_none());
+        assert!(TenantMix::parse_opt("garbage", 0).is_err());
+        assert!(TenantMix::parse_opt("standard+interactive@250", 0)
+            .unwrap()
+            .is_some());
+    }
+
+    #[test]
+    fn tenant_mix_stamps_attribution_without_touching_payload() {
+        let mut g = WorkloadGen::new(Dataset::by_name("cnndm").unwrap(), 42);
+        let plain = g.batch(40);
+        let mut g2 = WorkloadGen::new(Dataset::by_name("cnndm").unwrap(), 42);
+        let mut mix = TenantMix::parse("interactive@400=1+best-effort=1", 9).unwrap();
+        let stamped: Vec<Request> = g2
+            .batch(40)
+            .into_iter()
+            .map(|mut r| {
+                mix.stamp(&mut r);
+                r
+            })
+            .collect();
+        // payload bytes are identical — tenancy is a pure decoration
+        for (a, b) in plain.iter().zip(&stamped) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.params.max_tokens, b.params.max_tokens);
+        }
+        // both tenants appear, and each carries its spec's class/deadline
+        let interactive = stamped
+            .iter()
+            .filter(|r| r.tenant == "t0-interactive")
+            .count();
+        let besteffort = stamped
+            .iter()
+            .filter(|r| r.tenant == "t1-best-effort")
+            .count();
+        assert_eq!(interactive + besteffort, 40);
+        assert!(interactive > 0 && besteffort > 0);
+        for r in &stamped {
+            if r.tenant == "t0-interactive" {
+                assert_eq!(r.class, PriorityClass::Interactive);
+                assert_eq!(r.deadline_ms, Some(400));
+            } else {
+                assert_eq!(r.class, PriorityClass::BestEffort);
+                assert_eq!(r.deadline_ms, None);
+            }
+        }
+        // stamping is seed-deterministic
+        let mut mix2 = TenantMix::parse("interactive@400=1+best-effort=1", 9).unwrap();
+        let mut g3 = WorkloadGen::new(Dataset::by_name("cnndm").unwrap(), 42);
+        let again: Vec<String> = g3
+            .batch(40)
+            .into_iter()
+            .map(|mut r| {
+                mix2.stamp(&mut r);
+                r.tenant
+            })
+            .collect();
+        let first: Vec<String> = stamped.iter().map(|r| r.tenant.clone()).collect();
+        assert_eq!(first, again);
     }
 
     #[test]

@@ -20,10 +20,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dsde::config::{
-    EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind, SpecControl,
+    EngineConfig, FrontendKind, PollerKind, RateLimit, RoutePolicy, SlPolicyKind, SpecControl,
 };
 use dsde::engine::engine::Engine;
-use dsde::engine::request::{Request, SamplingParams};
+use dsde::engine::request::{PriorityClass, Request, SamplingParams};
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::server::client;
 use dsde::server::http::{serve_router_with, ConnLimits, ServeOptions};
@@ -74,6 +74,7 @@ fn chaos_router(n: usize, spec: &str, stall_ms: u64) -> EngineRouter {
             stall_ms,
             fault: Some(plan),
             control: SpecControl::Off,
+            ..Default::default()
         },
     )
 }
@@ -100,6 +101,7 @@ fn serve_chaos(
             stall_ms,
             fault: Some(plan),
             control: SpecControl::Off,
+            ..Default::default()
         },
     );
     let opts = ServeOptions {
@@ -332,6 +334,7 @@ fn failover_does_not_double_count_token_aggregates() {
             stall_ms: 5_000,
             fault: Some(plan),
             control: SpecControl::Off,
+            ..Default::default()
         },
     );
     let rxs: Vec<_> = (0..8).map(|_| router.submit_to(0, req(16))).collect();
@@ -361,6 +364,134 @@ fn failover_does_not_double_count_token_aggregates() {
     assert_eq!(chaos.accepted, oracle.accepted, "accepted double-counted");
     assert_eq!(chaos.drafted, oracle.drafted, "drafted double-counted");
     assert_eq!(chaos.cap_savings, oracle.cap_savings);
+}
+
+/// Failover under mixed-priority multi-tenant load: replica 0 is killed
+/// before it takes a step, so every request it was given is resubmitted
+/// and served by the survivor.  Per-class and per-tenant rollups must
+/// count each request exactly once across the failover — no request may
+/// lose its attribution, land in the wrong bucket, or be double counted
+/// by the dead replica's retained black box.
+#[test]
+fn failover_keeps_tenant_and_class_accounting_exactly_once() {
+    let plan = FaultPlan::parse("kill:0@0", 2).unwrap();
+    let router = EngineRouter::with_router_options(
+        vec![oracle_engine(7), oracle_engine(7)],
+        RoutePolicy::RoundRobin,
+        false,
+        RouterOptions {
+            stall_ms: 5_000,
+            fault: Some(plan),
+            control: SpecControl::Off,
+            ..Default::default()
+        },
+    );
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            let r = if i % 2 == 0 {
+                req(16).with_tenancy("acme", PriorityClass::Interactive, Some(60_000))
+            } else {
+                req(16).with_tenancy("batchco", PriorityClass::BestEffort, None)
+            };
+            router.submit_to(0, r)
+        })
+        .collect();
+    for rx in rxs {
+        let fin = rx.recv_timeout(TERMINAL_WAIT).expect("client must not hang");
+        assert_eq!(fin.reason.name(), "max_tokens");
+        assert_eq!(fin.output.len(), 16);
+    }
+    assert_eq!(router.replica_failures(), 1);
+    let agg = router.aggregated_metrics();
+    router.shutdown();
+    assert_eq!(agg.completed, 8, "each request completes exactly once");
+    let inter = &agg.classes[PriorityClass::Interactive.rank()];
+    let best = &agg.classes[PriorityClass::BestEffort.rank()];
+    assert_eq!(inter.completed, 4, "interactive class counted exactly once");
+    assert_eq!(best.completed, 4, "best-effort class counted exactly once");
+    assert_eq!(inter.completed_tokens, 4 * 16);
+    assert_eq!(best.completed_tokens, 4 * 16);
+    // deadline accounting rides the failover with its request
+    assert_eq!(inter.with_deadline, 4);
+    assert_eq!(best.with_deadline, 0);
+    // per-tenant rollups agree
+    assert_eq!(agg.tenants["acme"].completed, 4);
+    assert_eq!(agg.tenants["batchco"].completed, 4);
+    assert_eq!(agg.tenants["acme"].completed_tokens, 4 * 16);
+    assert_eq!(agg.tenants["batchco"].completed_tokens, 4 * 16);
+}
+
+/// Load shedding under chaos: with a one-burst token bucket armed and a
+/// replica being killed mid-run, every request observes exactly one
+/// terminal — either a real completion or a single clean `429` — and the
+/// shed counters agree with what the clients saw, on both front-end
+/// stacks.
+#[test]
+fn shed_requests_get_exactly_one_terminal_429_under_chaos() {
+    for fe in FRONTENDS {
+        let plan = FaultPlan::parse("kill:1@40", 3).unwrap();
+        let router = EngineRouter::with_router_options(
+            engines(3),
+            RoutePolicy::RoundRobin,
+            false,
+            RouterOptions {
+                stall_ms: 5_000,
+                fault: Some(plan),
+                control: SpecControl::Off,
+                // 4-token burst, negligible refill: exactly 4 admits
+                rate_limit: Some(RateLimit { rate: 0.001, burst: 4.0 }),
+            },
+        );
+        let opts = ServeOptions {
+            frontend: fe.0,
+            poller: PollerKind::Auto,
+            loop_shards: fe.1,
+            limits: ConnLimits::default(),
+            ..Default::default()
+        };
+        let h = serve_router_with(router, "127.0.0.1:0", opts).expect("serve");
+        let addr = h.addr.to_string();
+        let mut ok = 0u64;
+        let mut shed = 0u64;
+        for i in 0..8 {
+            let r = client::complete(&addr, &format!("mixed {i}"), 16, 0.0).unwrap();
+            match r.status {
+                200 => {
+                    ok += 1;
+                    assert_eq!(
+                        r.body.get("tokens").and_then(|t| t.as_usize()),
+                        Some(16),
+                        "{}: admitted request must still complete exactly",
+                        fe.2
+                    );
+                }
+                429 => {
+                    shed += 1;
+                    assert!(
+                        r.body.get("retry_after_s").and_then(|v| v.as_usize()).is_some(),
+                        "{}: shed response must carry retry_after_s: {:?}",
+                        fe.2,
+                        r.body
+                    );
+                }
+                other => panic!("{}: unexpected status {other}", fe.2),
+            }
+        }
+        assert_eq!(ok, 4, "{}: burst admits exactly 4", fe.2);
+        assert_eq!(shed, 4, "{}: the rest shed exactly once each", fe.2);
+        assert_eq!(h.frontend_stats().shed(), 4, "{}", fe.2);
+        // the injected kill was detected alongside the shedding
+        let t0 = Instant::now();
+        while h.router().replica_failures() == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "{}: kill never detected",
+                fe.2
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        h.shutdown();
+    }
 }
 
 /// Regression: a mid-run kill must not skew the per-request Welford
@@ -405,6 +536,7 @@ fn goodput_control_survives_replica_kill_and_stall() {
                 stall_ms,
                 fault: Some(plan),
                 control: SpecControl::Goodput,
+                ..Default::default()
             },
         );
         assert_eq!(router.spec_control(), SpecControl::Goodput);

@@ -12,6 +12,7 @@ use dsde::config::{
     CapMode, EngineConfig, FrontendKind, RoutePolicy, SlPolicyKind, SpecControl,
 };
 use dsde::engine::engine::Engine;
+use dsde::engine::request::PriorityClass;
 use dsde::eval::{load_trace, replay, ReplayConfig, TraceEntry, TraceRecorder};
 use dsde::model::sim_lm::{SimModel, SimPairKind};
 use dsde::server::client;
@@ -159,6 +160,9 @@ fn replayed_trace_is_frontend_invariant_over_http() {
             max_tokens: 5 + (i % 3) * 3,
             temperature: 0.0,
             tag: "cnndm".to_string(),
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
         })
         .collect();
     let run = |frontend: FrontendKind| -> Vec<(usize, String)> {
@@ -236,6 +240,9 @@ fn replay_is_byte_identical_with_and_without_spec_control() {
             max_tokens: 8 + (i % 3) * 6,
             temperature: 0.0,
             tag: "cnndm".to_string(),
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
         })
         .collect();
     let base = ReplayConfig {
@@ -263,6 +270,114 @@ fn replay_is_byte_identical_with_and_without_spec_control() {
     assert_eq!(controlled.metrics.completed, 12);
 }
 
+/// Tenancy attribution is a strict superset of the trace format and can
+/// never change replay bytes: the same admissions replayed with and
+/// without tenant/priority/deadline decoration produce identical outputs
+/// and digests — and the decorated trace stays placement-invariant
+/// across routing configurations, mixed priorities and all.
+#[test]
+fn replay_is_byte_identical_with_and_without_tenancy() {
+    let plain: Vec<TraceEntry> = (0..12)
+        .map(|i| TraceEntry {
+            t: i as f64 * 0.002,
+            prompt_len: 14 + (i % 4) * 7,
+            max_tokens: 6 + (i % 3) * 5,
+            temperature: 0.0,
+            tag: "cnndm".to_string(),
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
+        })
+        .collect();
+    // same admissions, decorated with a mixed-priority two-tenant split
+    let tagged: Vec<TraceEntry> = plain
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(i, mut e)| {
+            if i % 2 == 0 {
+                e.tenant = "acme".to_string();
+                e.class = PriorityClass::Interactive;
+                e.deadline_ms = Some(60_000);
+            } else {
+                e.tenant = "batchco".to_string();
+                e.class = PriorityClass::BestEffort;
+            }
+            e
+        })
+        .collect();
+    let base = ReplayConfig {
+        seed: 23,
+        ..Default::default()
+    };
+    let p = replay(&plain, &base).unwrap();
+    let t = replay(&tagged, &base).unwrap();
+    assert_eq!(p.outputs, t.outputs, "tenancy decoration changed replay bytes");
+    assert_eq!(p.digest(), t.digest());
+    // placement invariance holds for mixed-priority traces too
+    let routed = replay(
+        &tagged,
+        &ReplayConfig {
+            replicas: 3,
+            route: RoutePolicy::KvAware,
+            steal: true,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    assert_eq!(t.outputs, routed.outputs, "placement changed tenanted replay");
+    assert_eq!(t.digest(), routed.digest());
+    assert_eq!(routed.metrics.completed, 12);
+    // the decorated replay carries its per-class SLO accounting
+    let inter = &t.metrics.classes[PriorityClass::Interactive.rank()];
+    assert!(inter.completed > 0);
+    assert_eq!(inter.with_deadline, inter.completed);
+}
+
+/// Tenancy recorded through the router's record hook survives the NDJSON
+/// roundtrip, while untagged requests keep the exact pre-tenancy record
+/// shape (defaults on parse).
+#[test]
+fn recorded_tenancy_survives_the_trace_roundtrip() {
+    let path = tmp("tenancy");
+    {
+        let mut router =
+            EngineRouter::with_options(same_seed_engines(1, 9), RoutePolicy::RoundRobin, false);
+        let rec = Arc::new(TraceRecorder::create(&path, "cnndm").unwrap());
+        router.set_record_hook(rec.hook());
+        let mut gen = WorkloadGen::new(Dataset::by_name("cnndm").unwrap(), 9)
+            .with_limits(32, 12);
+        let reqs: Vec<_> = gen
+            .batch(4)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                if i == 0 {
+                    r.with_tenancy("acme", PriorityClass::Interactive, Some(750))
+                } else {
+                    r
+                }
+            })
+            .collect();
+        let rxs: Vec<_> = reqs.into_iter().map(|r| router.submit(r)).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        router.shutdown();
+    }
+    let trace = load_trace(&path).unwrap();
+    assert_eq!(trace.len(), 4);
+    let tagged: Vec<&TraceEntry> = trace.iter().filter(|e| e.tenant == "acme").collect();
+    assert_eq!(tagged.len(), 1, "exactly one tagged admission");
+    assert_eq!(tagged[0].class, PriorityClass::Interactive);
+    assert_eq!(tagged[0].deadline_ms, Some(750));
+    for e in trace.iter().filter(|e| e.tenant.is_empty()) {
+        assert_eq!(e.class, PriorityClass::Standard);
+        assert_eq!(e.deadline_ms, None);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn replay_respects_policy_config_without_changing_outputs() {
     // the SL policy shapes latency/acceptance but NOT the emitted tokens
@@ -275,6 +390,9 @@ fn replay_respects_policy_config_without_changing_outputs() {
             max_tokens: 12 + (i % 2) * 6,
             temperature: 0.0,
             tag: "xsum".to_string(),
+            tenant: String::new(),
+            class: PriorityClass::Standard,
+            deadline_ms: None,
         })
         .collect();
     let mk = |policy: SlPolicyKind, cap: CapMode| {

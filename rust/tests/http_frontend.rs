@@ -22,7 +22,8 @@ use std::net::{SocketAddr, TcpStream};
 use std::time::{Duration, Instant};
 
 use dsde::config::{
-    AcceptMode, EngineConfig, FrontendKind, PollerKind, RoutePolicy, SlPolicyKind, SpecControl,
+    AcceptMode, EngineConfig, FrontendKind, PollerKind, RateLimit, RoutePolicy, SlPolicyKind,
+    SpecControl,
 };
 use dsde::engine::engine::Engine;
 use dsde::model::sim_lm::{SimModel, SimPairKind};
@@ -208,6 +209,100 @@ fn frontends_produce_byte_identical_responses() {
     assert!(oracle[9].starts_with("HTTP/1.1 413"), "{}", oracle[9]);
 }
 
+/// Per-tenant admission control is shared conn-dispatch logic, so every
+/// front-end configuration sheds identically: the first request drains
+/// the one-token bucket, and every later request (blocking or streaming)
+/// gets the same terminal `429` with a deterministic `Retry-After` —
+/// byte for byte the same as the threaded oracle.
+#[test]
+fn rate_limit_sheds_429_byte_identically_across_frontends() {
+    let transcript = |fe: FeConfig| -> Vec<String> {
+        let router = EngineRouter::with_router_options(
+            vec![sim_engine(1, 4, 4096)],
+            RoutePolicy::RoundRobin,
+            false,
+            RouterOptions {
+                // 0.001 req/s, burst 1: refill between sequential requests
+                // is negligible, so Retry-After is stably ceil(~1000s)
+                rate_limit: Some(RateLimit { rate: 0.001, burst: 1.0 }),
+                ..Default::default()
+            },
+        );
+        let h = serve_router_with(router, "127.0.0.1:0", opts_for(fe, ConnLimits::default()))
+            .unwrap();
+        let addr = h.addr;
+        let out = vec![
+            raw(addr, &post_completion("inside the budget", 6, false)),
+            raw(addr, &post_completion("over the budget", 6, false)),
+            raw(addr, &post_completion("streaming over budget", 6, true)),
+        ];
+        let metrics = raw(addr, "GET /v1/metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(metrics.contains("\"total_shed\":2"), "{}: {metrics}", fe.label);
+        assert_eq!(h.frontend_stats().shed(), 2, "{}", fe.label);
+        h.shutdown();
+        out
+    };
+    let oracle = transcript(CONFIGS[0]);
+    assert!(oracle[0].starts_with("HTTP/1.1 200"), "{}", oracle[0]);
+    for shed in &oracle[1..] {
+        assert!(shed.starts_with("HTTP/1.1 429"), "{shed}");
+        assert!(shed.contains("Retry-After: 1000"), "{shed}");
+        assert!(shed.contains("\"retry_after_s\":1000"), "{shed}");
+        assert!(
+            !shed.contains("Transfer-Encoding"),
+            "a shed streaming request must get one terminal 429, not a stream: {shed}"
+        );
+    }
+    for fe in LOOP_CONFIGS {
+        assert_eq!(oracle, transcript(fe), "{}", fe.label);
+    }
+}
+
+/// Tenancy headers (`x-tenant`/`x-priority`/`x-deadline-ms`) parse — and
+/// reject — identically across the whole front-end matrix, and the
+/// tenant shows up in the per-tenant metrics rollup afterwards.
+#[test]
+fn tenancy_headers_accept_and_reject_identically_across_frontends() {
+    let tagged = |prompt: &str, extra: &str| -> String {
+        let body = format!(r#"{{"prompt": "{prompt}", "max_tokens": 6}}"#);
+        format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\n{extra}Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+    };
+    let transcript = |fe: FeConfig| -> Vec<String> {
+        let h = server(fe);
+        let addr = h.addr;
+        let out = vec![
+            raw(
+                addr,
+                &tagged(
+                    "tenant tagged",
+                    "X-Tenant: acme\r\nX-Priority: interactive\r\nX-Deadline-Ms: 750\r\n",
+                ),
+            ),
+            raw(addr, &tagged("bad class", "X-Priority: urgent\r\n")),
+            raw(addr, &tagged("bad deadline", "X-Deadline-Ms: soon\r\n")),
+        ];
+        // the tagged completion is attributed to its tenant...
+        let metrics = raw(addr, "GET /v1/metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(metrics.contains("\"acme\""), "{}: {metrics}", fe.label);
+        // ...and with no --rate-limit the limiter block reports null
+        assert!(metrics.contains("\"rate_limit\":null"), "{}: {metrics}", fe.label);
+        h.shutdown();
+        out
+    };
+    let oracle = transcript(CONFIGS[0]);
+    assert!(oracle[0].starts_with("HTTP/1.1 200"), "{}", oracle[0]);
+    assert!(oracle[1].starts_with("HTTP/1.1 400"), "{}", oracle[1]);
+    assert!(oracle[1].contains("bad x-priority"), "{}", oracle[1]);
+    assert!(oracle[2].starts_with("HTTP/1.1 400"), "{}", oracle[2]);
+    assert!(oracle[2].contains("bad x-deadline-ms"), "{}", oracle[2]);
+    for fe in LOOP_CONFIGS {
+        assert_eq!(oracle, transcript(fe), "{}", fe.label);
+    }
+}
+
 /// N concurrent blocking + streaming clients all complete on every
 /// front-end configuration, with correct token counts and well-formed
 /// streams.
@@ -387,6 +482,7 @@ fn replica_failure_mid_stream_yields_aborted_terminal() {
                 stall_ms: 5_000,
                 fault: Some(plan),
                 control: SpecControl::Off,
+                ..Default::default()
             },
         );
         let h = serve_router_with(router, "127.0.0.1:0", opts_for(fe, ConnLimits::default()))

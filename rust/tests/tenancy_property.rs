@@ -1,0 +1,479 @@
+//! Property tests for the multi-tenant serving layer.
+//!
+//! Three mechanisms carry the SLO story and each gets an independent
+//! oracle here:
+//!
+//! * **Admission control** — the float [`TokenBucket`] is replayed
+//!   against a pure-integer oracle on a dyadic lattice (rates and gaps
+//!   are multiples of 1/4, bursts whole tokens), where every
+//!   intermediate balance is a multiple of 1/16 and therefore exactly
+//!   representable in `f64`: admit/shed decisions and `Retry-After`
+//!   hints must agree **bit-for-bit**, not just approximately.  The
+//!   [`TenantLimiter`] wrapper must behave as one independent bucket
+//!   per tenant.
+//! * **Priority scheduling** — [`Scheduler::admit_prioritized`] is
+//!   compared against a plain selection-sort oracle over
+//!   `(effective rank, queue position)`, and the aging escape hatch is
+//!   checked to bound every class's worst-case wait.
+//! * **Preemption** — [`Scheduler::preempt_best_effort`] must evict
+//!   youngest-first, requeue victims at the front with their arrival
+//!   time (and hence accrued wait) intact, and conserve requests.
+//!
+//! The suite runs in tier-1 (`cargo test`) and in the CI chaos job.
+
+use std::collections::VecDeque;
+
+use dsde::config::{EngineConfig, RateLimit, RoutePolicy, SlPolicyKind};
+use dsde::engine::engine::Engine;
+use dsde::engine::kv_cache::KvCache;
+use dsde::engine::request::{PriorityClass, Request, SamplingParams, SeqState};
+use dsde::engine::scheduler::{effective_rank, Scheduler, AGING_ESCALATE_S};
+use dsde::model::sim_lm::{SimModel, SimPairKind};
+use dsde::server::limiter::{TenantLimiter, TokenBucket};
+use dsde::server::router::EngineRouter;
+use dsde::sim::regime::DatasetProfile;
+use dsde::util::proptest::{check, forall};
+use dsde::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Token bucket vs. integer oracle
+// ---------------------------------------------------------------------------
+
+/// A randomized admission schedule on the dyadic lattice.
+///
+/// `rate_q` is the refill rate in quarter-tokens per second
+/// (`rate = rate_q / 4`), `burst` is a whole-token capacity, and each
+/// event is `(tenant index, gap since the previous event in
+/// quarter-seconds)`.  On this lattice `dt * rate` is always a whole
+/// number of sixteenth-tokens, so the float bucket's arithmetic is
+/// exact and an integer oracle can demand bitwise equality.
+#[derive(Debug)]
+struct Schedule {
+    rate_q: u64,
+    burst: u64,
+    events: Vec<(usize, u64)>,
+}
+
+fn gen_schedule(r: &mut Rng, tenants: usize) -> Schedule {
+    let n = r.range(1, 65);
+    Schedule {
+        rate_q: r.range(1, 9) as u64,       // 0.25 ..= 2.0 tokens/s
+        burst: r.range(1, 5) as u64,        // 1 ..= 4 tokens
+        events: (0..n)
+            .map(|_| (r.range(0, tenants), r.range(0, 9) as u64))
+            .collect(),
+    }
+}
+
+/// Pure-integer token bucket in sixteenth-tokens: the oracle the float
+/// implementation must match exactly on the dyadic lattice.
+#[derive(Clone, Copy, Debug)]
+struct IntBucket {
+    /// Balance in sixteenth-tokens.
+    tokens_16: u64,
+    /// Clock of the last refill, in quarter-seconds.
+    last_q: u64,
+}
+
+impl IntBucket {
+    fn new(burst: u64) -> IntBucket {
+        IntBucket { tokens_16: burst * 16, last_q: 0 }
+    }
+
+    /// Integer replay of [`TokenBucket::try_acquire`]: refill
+    /// `rate_q * dt_q` sixteenths (`(rate_q/4) * (dt_q/4)` tokens),
+    /// cap at burst, take 16 sixteenths if available.
+    fn try_acquire(&mut self, now_q: u64, rate_q: u64, burst: u64) -> bool {
+        let dt_q = now_q.saturating_sub(self.last_q);
+        self.tokens_16 = (self.tokens_16 + rate_q * dt_q).min(burst * 16);
+        self.last_q = self.last_q.max(now_q);
+        if self.tokens_16 >= 16 {
+            self.tokens_16 -= 16;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The float the oracle expects the bucket's balance to hold.
+    fn tokens_f64(&self) -> f64 {
+        self.tokens_16 as f64 / 16.0
+    }
+}
+
+#[test]
+fn token_bucket_matches_integer_oracle_bit_for_bit() {
+    forall(
+        0xB0C4,
+        300,
+        |r| gen_schedule(r, 1),
+        |s| {
+            let rate = s.rate_q as f64 / 4.0;
+            let mut bucket = TokenBucket::new(RateLimit { rate, burst: s.burst as f64 });
+            let mut oracle = IntBucket::new(s.burst);
+            let mut now_q = 0u64;
+            let mut admitted = 0u64;
+            for (i, &(_, gap_q)) in s.events.iter().enumerate() {
+                now_q += gap_q;
+                let got = bucket.try_acquire(now_q as f64 / 4.0);
+                let want = oracle.try_acquire(now_q, s.rate_q, s.burst);
+                check(
+                    got == want,
+                    format!("event {i}: bucket admitted={got}, oracle={want}"),
+                )?;
+                check(
+                    bucket.tokens == oracle.tokens_f64(),
+                    format!(
+                        "event {i}: balance drifted: bucket {} vs oracle {}",
+                        bucket.tokens,
+                        oracle.tokens_f64()
+                    ),
+                )?;
+                if got {
+                    admitted += 1;
+                } else {
+                    // retry hint recomputed from the oracle balance with
+                    // the same expression must match bit-for-bit
+                    let want_retry = ((1.0 - oracle.tokens_f64()) / rate).max(0.0);
+                    check(
+                        bucket.retry_after() == want_retry,
+                        format!(
+                            "event {i}: retry_after {} != oracle {want_retry}",
+                            bucket.retry_after()
+                        ),
+                    )?;
+                }
+            }
+            // the bucket law: total admissions never exceed the initial
+            // burst plus everything the refill could have minted
+            let minted = s.rate_q as f64 / 4.0 * (now_q as f64 / 4.0);
+            check(
+                admitted as f64 <= s.burst as f64 + minted,
+                format!("admitted {admitted} > burst {} + minted {minted}", s.burst),
+            )
+        },
+    );
+}
+
+#[test]
+fn tenant_limiter_is_one_independent_oracle_bucket_per_tenant() {
+    const TENANTS: [&str; 3] = ["acme", "batchco", ""];
+    forall(
+        0x7E4A,
+        200,
+        |r| gen_schedule(r, TENANTS.len()),
+        |s| {
+            let rate = s.rate_q as f64 / 4.0;
+            let limiter = TenantLimiter::new(RateLimit { rate, burst: s.burst as f64 });
+            let mut oracles = [IntBucket::new(s.burst); 3];
+            let mut now_q = 0u64;
+            let mut shed = 0u64;
+            for (i, &(t, gap_q)) in s.events.iter().enumerate() {
+                now_q += gap_q;
+                let got = limiter.check_at(TENANTS[t], now_q as f64 / 4.0);
+                let want = oracles[t].try_acquire(now_q, s.rate_q, s.burst);
+                check(
+                    got.is_ok() == want,
+                    format!(
+                        "event {i} tenant {:?}: limiter {got:?}, oracle admit={want}",
+                        TENANTS[t]
+                    ),
+                )?;
+                if let Err(retry) = got {
+                    shed += 1;
+                    let want_retry = ((1.0 - oracles[t].tokens_f64()) / rate).max(0.0);
+                    check(
+                        retry == want_retry,
+                        format!("event {i}: retry {retry} != oracle {want_retry}"),
+                    )?;
+                }
+            }
+            check(
+                limiter.total_shed() == shed,
+                format!("total_shed {} != observed {shed}", limiter.total_shed()),
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Priority admission vs. selection oracle
+// ---------------------------------------------------------------------------
+
+/// A randomized waiting queue: `(id, class rank, arrival)` per sequence,
+/// an admission bound, and the engine clock the admission runs at.
+#[derive(Debug)]
+struct AdmissionCase {
+    seqs: Vec<(u64, usize, f64)>,
+    bound: usize,
+    now: f64,
+}
+
+fn gen_admission(r: &mut Rng) -> AdmissionCase {
+    let n = r.range(1, 13);
+    // arrivals are sorted into queue order: an FCFS queue only ever holds
+    // later arrivals behind earlier ones (appends at the back, preemption
+    // victims — the oldest — re-queue at the front)
+    let mut arrivals: Vec<f64> = (0..n).map(|_| r.range(0, 401) as f64 * 0.25).collect();
+    arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    AdmissionCase {
+        seqs: (1..=n as u64)
+            .map(|id| (id, r.range(0, 3), arrivals[id as usize - 1]))
+            .collect(),
+        bound: r.range(1, n + 3),
+        now: 100.0,
+    }
+}
+
+fn waiting_queue(seqs: &[(u64, usize, f64)]) -> VecDeque<SeqState> {
+    seqs.iter()
+        .map(|&(id, rank, arrival)| {
+            let mut s = SeqState::from_request(Request::new(
+                id,
+                vec![65; 8],
+                SamplingParams::default(),
+            ));
+            s.class = PriorityClass::ALL[rank];
+            s.arrival = arrival;
+            s
+        })
+        .collect()
+}
+
+/// Plain selection-sort oracle for prioritized admission: repeatedly pick
+/// the remaining sequence with the smallest `(aged rank, queue position)`
+/// key.  Aging is re-derived here from first principles, independent of
+/// [`effective_rank`].
+fn oracle_admission(seqs: &[(u64, usize, f64)], now: f64, bound: usize) -> Vec<u64> {
+    let mut remaining: Vec<(usize, u64, usize, f64)> = seqs
+        .iter()
+        .enumerate()
+        .map(|(pos, &(id, rank, arrival))| (pos, id, rank, arrival))
+        .collect();
+    let mut out = Vec::new();
+    while out.len() < bound && !remaining.is_empty() {
+        let best = remaining
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &(pos, _, rank, arrival))| {
+                let boost = ((now - arrival).max(0.0) / AGING_ESCALATE_S) as usize;
+                (rank.saturating_sub(boost), pos)
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        out.push(remaining.remove(best).1);
+    }
+    out
+}
+
+#[test]
+fn prioritized_admission_matches_selection_oracle_and_conserves() {
+    forall(0xADA1, 300, gen_admission, |case| {
+        let n = case.seqs.len();
+        let mut waiting = waiting_queue(&case.seqs);
+        let mut running = Vec::new();
+        // KV far larger than any queue here, so capacity never interferes
+        let mut kv = KvCache::new(4096, 16);
+        let sched = Scheduler::new(64);
+        let admitted =
+            sched.admit_prioritized(&mut waiting, &mut running, &mut kv, case.bound, case.now);
+        let want = oracle_admission(&case.seqs, case.now, case.bound);
+        let got: Vec<u64> = running.iter().map(|s| s.id).collect();
+        check(got == want, format!("admitted {got:?} != oracle {want:?}"))?;
+        check(
+            admitted == running.len(),
+            format!("count {admitted} != running {}", running.len()),
+        )?;
+        check(
+            running.len() + waiting.len() == n,
+            format!("lost requests: {} + {} != {n}", running.len(), waiting.len()),
+        )?;
+        // the passed-over remainder keeps its original relative order
+        let leftover: Vec<u64> = waiting.iter().map(|s| s.id).collect();
+        let want_leftover: Vec<u64> = case
+            .seqs
+            .iter()
+            .map(|&(id, _, _)| id)
+            .filter(|id| !got.contains(id))
+            .collect();
+        check(
+            leftover == want_leftover,
+            format!("queue reordered: {leftover:?} != {want_leftover:?}"),
+        )
+    });
+}
+
+#[test]
+fn aging_bounds_every_classes_worst_case_wait() {
+    forall(
+        0xA9E5,
+        200,
+        |r| (r.range(0, 3), r.range(0, 1001) as f64 * 0.25),
+        |&(rank, arrival)| {
+            let mut s = SeqState::from_request(Request::new(
+                1,
+                vec![65; 8],
+                SamplingParams::default(),
+            ));
+            s.class = PriorityClass::ALL[rank];
+            s.arrival = arrival;
+            // fresh: a sequence starts at its class rank
+            check(
+                effective_rank(&s, arrival) == rank,
+                format!("fresh rank {} != class rank {rank}", effective_rank(&s, arrival)),
+            )?;
+            // aged: after rank * AGING_ESCALATE_S of waiting, every class
+            // competes at interactive rank — no one waits forever
+            let aged_at = arrival + rank as f64 * AGING_ESCALATE_S;
+            check(
+                effective_rank(&s, aged_at) == 0,
+                format!("rank {rank} still {} after aging", effective_rank(&s, aged_at)),
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Best-effort preemption
+// ---------------------------------------------------------------------------
+
+#[test]
+fn preemption_evicts_youngest_best_effort_and_keeps_accrued_wait() {
+    forall(
+        0x9EE7,
+        300,
+        |r| {
+            let n = r.range(1, 9);
+            (0..n).map(|_| r.range(0, 3)).collect::<Vec<usize>>()
+        },
+        |ranks| {
+            let n = ranks.len();
+            let mut running: Vec<SeqState> = ranks
+                .iter()
+                .enumerate()
+                .map(|(i, &rank)| {
+                    let mut s = SeqState::from_request(Request::new(
+                        i as u64 + 1,
+                        vec![65; 8],
+                        SamplingParams::default(),
+                    ));
+                    s.class = PriorityClass::ALL[rank];
+                    s.arrival = i as f64 * 0.25;
+                    s
+                })
+                .collect();
+            let mut kv = KvCache::new(256, 16);
+            for s in &running {
+                kv.ensure(s.id, s.tokens.len() + 1).map_err(|e| format!("{e:?}"))?;
+            }
+            let arrivals: Vec<(u64, f64)> =
+                running.iter().map(|s| (s.id, s.arrival)).collect();
+            let best_effort: Vec<u64> = running
+                .iter()
+                .filter(|s| s.class == PriorityClass::BestEffort)
+                .map(|s| s.id)
+                .collect();
+            let sched = Scheduler::new(8);
+            let mut waiting = VecDeque::new();
+            let mut victims = Vec::new();
+            while let Some(id) = sched.preempt_best_effort(&mut running, &mut kv, &mut waiting) {
+                victims.push(id);
+                check(
+                    waiting.front().map(|s| s.id) == Some(id),
+                    "victim must requeue at the front",
+                )?;
+                check(
+                    kv.table(id).is_empty(),
+                    format!("victim {id}'s KV blocks must be released"),
+                )?;
+            }
+            // exactly the best-effort population is evicted, youngest first
+            let want: Vec<u64> = best_effort.iter().rev().copied().collect();
+            check(
+                victims == want,
+                format!("victims {victims:?} != youngest-first best-effort {want:?}"),
+            )?;
+            check(
+                running.iter().all(|s| s.class != PriorityClass::BestEffort),
+                "best-effort work left running after exhaustion",
+            )?;
+            check(
+                running.len() + waiting.len() == n,
+                format!("lost requests: {} + {} != {n}", running.len(), waiting.len()),
+            )?;
+            for s in waiting.iter() {
+                check(
+                    s.preemptions == 1,
+                    format!("victim {} preemption count {}", s.id, s.preemptions),
+                )?;
+                // arrival survives the round trip, so accrued wait (and
+                // with it the aging escalation) keeps counting
+                let orig = arrivals.iter().find(|(id, _)| *id == s.id).unwrap().1;
+                check(
+                    s.arrival == orig,
+                    format!("victim {} arrival reset {} -> {}", s.id, orig, s.arrival),
+                )?;
+            }
+            kv.check_invariants().map_err(|e| format!("{e:?}"))
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Mixed-class end-to-end completion
+// ---------------------------------------------------------------------------
+
+fn sim_engine(seed: u64) -> Engine {
+    let cfg = EngineConfig {
+        max_batch: 4,
+        max_len: 4096,
+        policy: SlPolicyKind::Dsde(Default::default()),
+        seed,
+        ..Default::default()
+    };
+    let model = SimModel::new(SimPairKind::LlamaLike, DatasetProfile::cnndm(), seed);
+    Engine::new(cfg, Box::new(model))
+}
+
+/// End-to-end no-starvation smoke: a single replica serving all three
+/// classes at once completes every request with its exact token count —
+/// best-effort work is delayed, never dropped — and the per-class /
+/// per-tenant rollups partition the total exactly.
+#[test]
+fn mixed_class_load_completes_everything_and_partitions_metrics() {
+    let router = EngineRouter::new(vec![sim_engine(3)], RoutePolicy::RoundRobin);
+    let tenants = ["alpha", "beta", "gamma"];
+    let rxs: Vec<_> = (0..9)
+        .map(|i| {
+            let class = PriorityClass::ALL[i % 3];
+            let deadline = (class == PriorityClass::Interactive).then_some(60_000);
+            let r = Request::new(
+                0,
+                vec![65; 24],
+                SamplingParams { temperature: 0.0, max_tokens: 16, stop_token: None },
+            )
+            .with_tenancy(tenants[i % 3], class, deadline);
+            router.submit(r)
+        })
+        .collect();
+    for rx in rxs {
+        let fin = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("request must complete");
+        assert_eq!(fin.reason.name(), "max_tokens");
+        assert_eq!(fin.output.len(), 16);
+    }
+    let agg = router.aggregated_metrics();
+    router.shutdown();
+    assert_eq!(agg.completed, 9);
+    let by_class: Vec<u64> = PriorityClass::ALL
+        .iter()
+        .map(|c| agg.classes[c.rank()].completed)
+        .collect();
+    assert_eq!(by_class, vec![3, 3, 3], "classes must partition the total");
+    assert_eq!(agg.classes[PriorityClass::Interactive.rank()].with_deadline, 3);
+    for t in tenants {
+        assert_eq!(agg.tenants[t].completed, 3, "tenant {t}");
+        assert_eq!(agg.tenants[t].completed_tokens, 3 * 16, "tenant {t}");
+    }
+}
